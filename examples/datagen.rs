@@ -1,0 +1,103 @@
+//! PDE-substrate figure dumps: the appendix/setup figures of the paper.
+//!
+//!   --fig2  one-at-a-time parameter study of the steady c₃ field (Fig 2)
+//!   --fig6  Blasius background velocity profiles u_x, u_y (Fig 6)
+//!   --fig7  nominal-parameter c₁, c₂, c₃ fields (Fig 7)
+//!   (no flag: all three)
+//!
+//! Output: CSV grids under runs/fig{2,6,7}/ — column headers x, y, value.
+//!
+//! Run: `cargo run --release --example datagen -- [--fig2|--fig6|--fig7]`
+
+use dmdtrain::pde::{AdrSolver, Grid, SampleParams, VelocityField, LX, LY};
+use dmdtrain::tensor::Tensor;
+use dmdtrain::util::{self, csv::CsvWriter};
+
+fn dump_field(path: &std::path::Path, field: &Tensor, grid: Grid) -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(path, &["x", "y", "value"])?;
+    for j in 0..grid.ny {
+        for i in 0..grid.nx {
+            w.row(&[grid.x(i), grid.y(j), field.get(j, i) as f64])?;
+        }
+    }
+    w.flush()
+}
+
+fn fig2(out_root: &std::path::Path) -> anyhow::Result<()> {
+    // One-at-a-time: vary each parameter to its "high" end from nominal,
+    // matching the six panels of Fig 2.
+    let grid = Grid::new(96, 48);
+    let nominal = SampleParams::nominal();
+    let panels: Vec<(&str, SampleParams)> = vec![
+        ("k12_high", SampleParams { k12: 20.0, ..nominal }),
+        ("k3_high", SampleParams { k3: 10.0, ..nominal }),
+        ("d_high", SampleParams { d: 0.5, ..nominal }),
+        ("u0_high", SampleParams { u0: 2.0, ..nominal }),
+        ("uh_high", SampleParams { uh: 0.2, ..nominal }),
+        ("uv_high", SampleParams { uv: 0.2, ..nominal }),
+    ];
+    let dir = out_root.join("runs/fig2");
+    for (name, params) in panels {
+        let sol = AdrSolver::new(grid, params)?.solve()?;
+        dump_field(&dir.join(format!("c3_{name}.csv")), &sol.c3, grid)?;
+        println!(
+            "fig2 panel {name}: total c3 = {:.4}, peak = {:.4}",
+            sol.c3.data().iter().map(|&v| v as f64).sum::<f64>(),
+            sol.c3.max_abs()
+        );
+    }
+    println!("fig2 → {}", dir.display());
+    Ok(())
+}
+
+fn fig6(out_root: &std::path::Path) -> anyhow::Result<()> {
+    let vel = VelocityField::new(1.0, 0.05, 0.05)?;
+    let dir = out_root.join("runs/fig6");
+    let (nx, ny) = (96usize, 64usize);
+    let mut wx = CsvWriter::create(dir.join("ux.csv"), &["x", "y", "value"])?;
+    let mut wy = CsvWriter::create(dir.join("uy.csv"), &["x", "y", "value"])?;
+    for j in 0..ny {
+        // log-ish spacing near the wall where the boundary layer lives
+        let y = LY * (j as f64 / (ny - 1) as f64).powi(3);
+        for i in 0..nx {
+            let x = LX * (i as f64 + 0.5) / nx as f64;
+            wx.row(&[x, y, vel.ux(x, y)])?;
+            wy.row(&[x, y, vel.uy(x, y)])?;
+        }
+    }
+    wx.flush()?;
+    wy.flush()?;
+    println!("fig6 → {} (u_x, u_y profiles)", dir.display());
+    Ok(())
+}
+
+fn fig7(out_root: &std::path::Path) -> anyhow::Result<()> {
+    let grid = Grid::new(96, 48);
+    let sol = AdrSolver::new(grid, SampleParams::nominal())?.solve()?;
+    let dir = out_root.join("runs/fig7");
+    dump_field(&dir.join("c1.csv"), &sol.c1, grid)?;
+    dump_field(&dir.join("c2.csv"), &sol.c2, grid)?;
+    dump_field(&dir.join("c3.csv"), &sol.c3, grid)?;
+    println!(
+        "fig7 → {} (c1, c2, c3; Picard iters = {})",
+        dir.display(),
+        sol.picard_iters
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let root = util::repo_root();
+    let all = args.is_empty();
+    if all || args.iter().any(|a| a == "--fig2") {
+        fig2(&root)?;
+    }
+    if all || args.iter().any(|a| a == "--fig6") {
+        fig6(&root)?;
+    }
+    if all || args.iter().any(|a| a == "--fig7") {
+        fig7(&root)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Fig 3 (example-scale) — a coarse (m, s) sensitivity sweep on the
+//! quickstart problem, printed as two text heat-grids (train/test mean
+//! relative DMD improvement). The paper-scale grid is
+//! `cargo bench --bench fig3_sensitivity`.
+//!
+//! Run: `cargo run --release --example sensitivity_sweep`
+
+use dmdtrain::config::{Config, SweepConfig, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::coordinator::run_sweep;
+use dmdtrain::util;
+
+fn main() -> anyhow::Result<()> {
+    let root = util::repo_root();
+    let cfg = Config::load(root.join("configs/quickstart.toml"))?;
+    let ds_path = root.join(cfg.require_str("data.path")?);
+    anyhow::ensure!(
+        ds_path.exists(),
+        "dataset missing — run `cargo run --release --example quickstart` first"
+    );
+    let ds = Dataset::load(&ds_path)?;
+
+    let mut base = TrainConfig::from_config(&cfg)?;
+    base.dataset = ds_path.to_string_lossy().into_owned();
+    let sweep = SweepConfig {
+        m_values: vec![2, 6, 10, 14, 20],
+        s_values: vec![5, 15, 35, 55, 100],
+        epochs: 200,
+        workers: 5,
+        base,
+    };
+
+    println!(
+        "sweeping {}×{} grid, {} epochs per cell…",
+        sweep.m_values.len(),
+        sweep.s_values.len(),
+        sweep.epochs
+    );
+    let result = run_sweep(&root.join("artifacts"), &sweep, &ds, false)?;
+
+    type Pick = fn(&dmdtrain::coordinator::SweepCell) -> f64;
+    let views: [(&str, Pick); 2] = [
+        ("train", |c| c.mean_rel_train),
+        ("test", |c| c.mean_rel_test),
+    ];
+    for (metric, pick) in views {
+        println!("\nmean relative improvement ({metric}):  [<1 = DMD helps]");
+        print!("{:>6}", "m\\s");
+        for &s in &sweep.s_values {
+            print!("{s:>9}");
+        }
+        println!();
+        for &m in &sweep.m_values {
+            print!("{m:>6}");
+            for &s in &sweep.s_values {
+                let cell = result
+                    .cells
+                    .iter()
+                    .find(|c| c.m == m && c.s == s)
+                    .expect("cell");
+                print!("{:>9.3}", pick(cell));
+            }
+            println!();
+        }
+    }
+
+    let dir = root.join("runs/fig3_example");
+    std::fs::create_dir_all(&dir)?;
+    result.write_csv(dir.join("grid.csv"))?;
+    if let Some(best) = result.best() {
+        println!(
+            "\nbest cell: m={}, s={} (rel {:.3}); paper picked m=14, s=55",
+            best.m, best.s, best.mean_rel_train
+        );
+    }
+    println!("grid → {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT exporter: lower the L2/L1 graphs once, emit HLO *text* + manifest.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in ``artifacts/`` next to a ``manifest.json`` describing the
+exact calling convention (input order, shapes, output arity) that the Rust
+runtime (rust/src/runtime/) checks at load time.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts            # build all
+    python -m compile.aot --only quickstart,test            # subset
+    python -m compile.aot --list                            # show builds
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fused_dense as K
+
+# ---------------------------------------------------------------------------
+# Build matrix.
+#
+# kernel="pallas": hidden/output layers run the Layer-1 Pallas kernels
+#   (interpret-lowered). Used for the quickstart and the Rust integration
+#   tests — proves the full L1→L2→L3 composition.
+# kernel="jnp": the oracle graph (numerics asserted identical in pytest),
+#   which XLA fuses into tight loops. Used for the long paper-scale runs
+#   where interpret-mode grid loops would dominate wall time.
+# ---------------------------------------------------------------------------
+
+MODEL_BUILDS = [
+    # name, arch, batch, kernel
+    ("paper", (6, 40, 200, 1000, 2670), 800, "jnp"),
+    ("sweep", (6, 40, 200, 267), 800, "jnp"),
+    ("quickstart", (6, 16, 32, 64), 64, "pallas"),
+    ("test", (6, 8, 6), 16, "pallas"),
+    ("test_jnp", (6, 8, 6), 16, "jnp"),
+]
+
+GRAM_BUILDS = [
+    # name, n (flattened layer size), m (snapshot count)
+    ("gram_l2", 8200, 20),
+    ("gram_l3", 201000, 14),
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _export(fn, specs, path):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def _spec_list(specs):
+    return [list(map(int, s.shape)) for s in specs]
+
+
+def _model_entry(name, arch, batch, kernel, out_dir):
+    """Export train_step + predict for one (arch, batch, kernel) variant."""
+    entries = []
+    n_params = 2 * (len(arch) - 1)
+
+    fn, specs = model.train_step_fn(arch, batch, kernel=kernel)
+    path = f"train_step_{name}.hlo.txt"
+    size = _export(fn, specs, os.path.join(out_dir, path))
+    print(f"  train_step_{name}: {size} chars")
+    entries.append(
+        {
+            "name": f"train_step_{name}",
+            "kind": "train_step",
+            "path": path,
+            "arch": list(arch),
+            "batch": batch,
+            "kernel": kernel,
+            "input_shapes": _spec_list(specs),
+            # outputs: scalar loss + one gradient per parameter
+            "num_outputs": 1 + n_params,
+        }
+    )
+
+    fn, specs = model.predict_fn(arch, batch, kernel=kernel)
+    path = f"predict_{name}.hlo.txt"
+    size = _export(fn, specs, os.path.join(out_dir, path))
+    print(f"  predict_{name}: {size} chars")
+    entries.append(
+        {
+            "name": f"predict_{name}",
+            "kind": "predict",
+            "path": path,
+            "arch": list(arch),
+            "batch": batch,
+            "kernel": kernel,
+            "input_shapes": _spec_list(specs),
+            "num_outputs": 1,
+        }
+    )
+    return entries
+
+
+def _gram_entry(name, n, m, out_dir):
+    """Export the standalone Pallas gram kernel at a concrete (n, m)."""
+    spec = jax.ShapeDtypeStruct((n, m), jnp.float32)
+
+    def fn(s):
+        return (K.gram(s),)
+
+    path = f"{name}_n{n}_m{m}.hlo.txt"
+    size = _export(fn, [spec], os.path.join(out_dir, path))
+    print(f"  {name} (n={n}, m={m}): {size} chars")
+    return {
+        "name": name,
+        "kind": "gram",
+        "path": path,
+        "n": n,
+        "m": m,
+        "kernel": "pallas",
+        "input_shapes": [[n, m]],
+        "num_outputs": 1,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated build names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for name, arch, batch, kernel in MODEL_BUILDS:
+            print(f"{name}: arch={arch} batch={batch} kernel={kernel}")
+        for name, n, m in GRAM_BUILDS:
+            print(f"{name}: gram n={n} m={m}")
+        return
+
+    only = set(filter(None, args.only.split(",")))
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "entries": []}
+
+    for name, arch, batch, kernel in MODEL_BUILDS:
+        if only and name not in only:
+            continue
+        print(f"build {name} (arch={arch}, batch={batch}, kernel={kernel})")
+        manifest["entries"] += _model_entry(name, arch, batch, kernel, args.out_dir)
+
+    for name, n, m in GRAM_BUILDS:
+        if only and name not in only:
+            continue
+        print(f"build {name}")
+        manifest["entries"].append(_gram_entry(name, n, m, args.out_dir))
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when building a subset.
+    if only and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        fresh = {e["name"] for e in manifest["entries"]}
+        manifest["entries"] = [
+            e for e in old.get("entries", []) if e["name"] not in fresh
+        ] + manifest["entries"]
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Layer-1 Pallas kernels for the DMD-accelerated trainer.
+
+Kernels
+-------
+* ``matmul``       — MXU-tiled f32 matmul (the generic building block).
+* ``fused_dense``  — x @ w + b with soft-sign fused in the same kernel, so
+                     the pre-activation never round-trips HBM↔VMEM. Exposed
+                     through ``jax.custom_vjp`` so ``jax.grad`` works; the
+                     backward pass is itself built from Pallas kernels.
+* ``linear``       — x @ w + b without activation (output layer), also with
+                     a Pallas-backed custom VJP.
+* ``softsign_bwd`` — elementwise dz = da / (1 + |z|)², the VJP of soft-sign.
+* ``gram``         — sᵀ s for a tall-skinny snapshot matrix, accumulated
+                     over row panels in a VMEM scratch output. This is the
+                     O(n m²) step of the paper's low-cost SVD.
+* ``cross_gram``   — s₋ᵀ s₊, the lag-product needed by the reduced Koopman
+                     operator (eq. 3 of the paper).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads. Tiling decisions still follow TPU VMEM/MXU shapes (128-lane
+tiles) so the same kernels are TPU-lowerable; see DESIGN.md
+§Hardware-Adaptation.
+
+Inputs with non-tile-multiple shapes are zero-padded to the tile grid and
+the result is sliced back; zero padding is exact for every kernel here
+(matmul/gram accumulate zeros, elementwise ops are sliced off).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# CPU PJRT cannot run Mosaic custom-calls; interpret mode lowers to plain
+# HLO. Keep this True for every pallas_call in the AOT path.
+INTERPRET = True
+
+# MXU-friendly tile edge. 128 matches the MXU systolic array; small
+# problems fall back to an 8-multiple (f32 sublane) tile.
+_TILE = 128
+_SUBLANE = 8
+
+
+def _round_up(value, multiple):
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def _tile_for(dim):
+    """Pick a tile edge: 128 for MXU-sized dims, an 8-multiple otherwise."""
+    if dim >= _TILE:
+        return _TILE
+    return _round_up(dim, _SUBLANE)
+
+
+def _pad2(a, rows, cols):
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x, w):
+    """Tiled Pallas matmul: (M,K) @ (K,N) → (M,N), f32.
+
+    Grid is (M/bm, N/bn); each program reads a full-K row panel of ``x``
+    and column panel of ``w`` (K ≤ 2670 in this system, so a (128, K) +
+    (K, 128) working set stays well inside a TPU core's VMEM).
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+    bm, bn = _tile_for(m), _tile_for(n)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, _SUBLANE)
+    xp, wp = _pad2(x, mp, kp), _pad2(w, kp, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# fused dense (+ soft-sign) with custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, a_ref, z_ref):
+    z = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    z_ref[...] = z
+    a_ref[...] = z / (1.0 + jnp.abs(z))
+
+
+def _fused_dense_pallas(x, w, b):
+    """Returns (softsign(x@w+b), x@w+b). The pre-activation is the residual."""
+    (m, k), (_, n) = x.shape, w.shape
+    bm, bn = _tile_for(m), _tile_for(n)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, _SUBLANE)
+    xp, wp = _pad2(x, mp, kp), _pad2(w, kp, np_)
+    bp = _pad2(b.reshape(1, -1), 1, np_)
+    act, pre = pl.pallas_call(
+        _fused_dense_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(xp, wp, bp)
+    return act[:m, :n], pre[:m, :n]
+
+
+def _softsign_bwd_kernel(z_ref, da_ref, dz_ref):
+    denom = 1.0 + jnp.abs(z_ref[...])
+    dz_ref[...] = da_ref[...] / (denom * denom)
+
+
+def softsign_bwd(z, da):
+    """Elementwise VJP of soft-sign: dz = da / (1 + |z|)²."""
+    m, n = z.shape
+    bm, bn = _tile_for(m), _tile_for(n)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    zp, dap = _pad2(z, mp, np_), _pad2(da, mp, np_)
+    out = pl.pallas_call(
+        _softsign_bwd_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(zp, dap)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def fused_dense(x, w, b):
+    """softsign(x @ w + b) as a single fused Pallas kernel (differentiable)."""
+    act, _ = _fused_dense_pallas(x, w, b)
+    return act
+
+
+def _fused_dense_fwd(x, w, b):
+    act, pre = _fused_dense_pallas(x, w, b)
+    return act, (x, w, pre)
+
+
+def _fused_dense_bwd(res, da):
+    x, w, pre = res
+    dz = softsign_bwd(pre, da)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# linear output layer with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def linear(x, w, b):
+    """x @ w + b through the Pallas matmul (differentiable, no activation)."""
+    return matmul(x, w) + b
+
+
+def _linear_fwd(x, w, b):
+    return matmul(x, w) + b, (x, w)
+
+
+def _linear_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Gram kernels (the paper's O(n m²) low-cost-SVD step)
+# ---------------------------------------------------------------------------
+
+
+def _gram_kernel(s_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    panel = s_ref[...]
+    o_ref[...] += jnp.dot(panel.T, panel, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("panel_rows",))
+def gram(s, panel_rows=1024):
+    """sᵀ s for a tall-skinny (n, m) snapshot matrix.
+
+    The n rows are tiled into VMEM-sized panels; the (m, m) output block is
+    revisited by every grid step and used as the accumulator — the Pallas
+    expression of the paper's "SVD on the columns" trick (zero row padding
+    adds zero to the Gram matrix, so padding is exact).
+    """
+    n, m = s.shape
+    bp = min(panel_rows, _round_up(n, _SUBLANE))
+    np_rows = _round_up(n, bp)
+    mp = _round_up(m, _SUBLANE)
+    sp = _pad2(s, np_rows, mp)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(np_rows // bp,),
+        in_specs=[pl.BlockSpec((bp, mp), lambda p: (p, 0))],
+        out_specs=pl.BlockSpec((mp, mp), lambda p: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+        interpret=INTERPRET,
+    )(sp)
+    return out[:m, :m]
+
+
+def _cross_gram_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("panel_rows",))
+def cross_gram(s_minus, s_plus, panel_rows=1024):
+    """s₋ᵀ s₊ for two (n, m) matrices — the DMD lag-product of eq. (3)."""
+    assert s_minus.shape[0] == s_plus.shape[0]
+    n, ma = s_minus.shape
+    _, mb = s_plus.shape
+    bp = min(panel_rows, _round_up(n, _SUBLANE))
+    np_rows = _round_up(n, bp)
+    map_, mbp = _round_up(ma, _SUBLANE), _round_up(mb, _SUBLANE)
+    ap, bpd = _pad2(s_minus, np_rows, map_), _pad2(s_plus, np_rows, mbp)
+    out = pl.pallas_call(
+        _cross_gram_kernel,
+        grid=(np_rows // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, map_), lambda p: (p, 0)),
+            pl.BlockSpec((bp, mbp), lambda p: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((map_, mbp), lambda p: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((map_, mbp), jnp.float32),
+        interpret=INTERPRET,
+    )(ap, bpd)
+    return out[:ma, :mb]

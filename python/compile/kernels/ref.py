@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel and for the full model.
+
+These are the correctness ground truth: pytest asserts that each Pallas
+kernel (run in interpret mode) matches its oracle to float32 tolerance, and
+that the full pallas-backed model matches the jnp-backed model, including
+gradients.
+"""
+
+import jax.numpy as jnp
+
+
+def softsign(z):
+    """Soft-sign activation: z / (1 + |z|)."""
+    return z / (1.0 + jnp.abs(z))
+
+
+def softsign_grad(z):
+    """d softsign / dz = 1 / (1 + |z|)^2."""
+    return 1.0 / jnp.square(1.0 + jnp.abs(z))
+
+
+def matmul(x, w):
+    """Plain f32 matmul oracle."""
+    return jnp.matmul(x, w)
+
+
+def dense(x, w, b):
+    """Affine layer oracle: x @ w + b."""
+    return jnp.matmul(x, w) + b
+
+
+def fused_dense(x, w, b):
+    """Fused affine + soft-sign oracle.
+
+    Returns (activation, pre_activation) — the same pair the Pallas kernel
+    produces (the pre-activation is the VJP residual).
+    """
+    z = jnp.matmul(x, w) + b
+    return softsign(z), z
+
+
+def gram(s):
+    """Gram-matrix oracle: sᵀ s for a tall-skinny snapshot matrix."""
+    return jnp.matmul(s.T, s)
+
+
+def cross_gram(s_minus, s_plus):
+    """Cross-Gram oracle: s₋ᵀ s₊ — the DMD lag-product."""
+    return jnp.matmul(s_minus.T, s_plus)
+
+
+def mlp_apply(params, x):
+    """Full MLP oracle: soft-sign hidden layers, linear output layer.
+
+    ``params`` is a list of (w, b) tuples, ordered input → output.
+    """
+    h = x
+    for w, b in params[:-1]:
+        h = softsign(jnp.matmul(h, w) + b)
+    w, b = params[-1]
+    return jnp.matmul(h, w) + b
+
+
+def mse_loss(params, x, y):
+    """Mean-squared-error loss oracle over the full batch."""
+    pred = mlp_apply(params, x)
+    return jnp.mean(jnp.square(pred - y))

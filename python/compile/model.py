@@ -1,0 +1,116 @@
+"""Layer-2 JAX model: the paper's regression DNN, fwd/bwd.
+
+The network (paper §4): input = 6 uncertain physical parameters
+(K₁₂, K₃, D, U₀, u_h, u_v); three soft-sign hidden layers of width
+40 / 200 / 1000; linear output layer of width 2670 (one unit per
+observation point of the pollutant field); MSE loss; Adam optimizer.
+
+The *optimizer lives in the Rust coordinator* — this module only defines
+``predict`` and ``train_step`` (loss + gradients). That split is what gives
+the coordinator free access to the weight stream the DMD engine needs
+(the paper measured a 1.41× wall-time overhead in TensorFlow, mostly from
+weight extract/assign; owning the weights in Rust removes the round-trip).
+
+Two interchangeable backends:
+* ``kernel="pallas"`` — hidden/output layers call the Layer-1 Pallas
+  kernels (``fused_dense`` / ``linear``), interpret-lowered.
+* ``kernel="jnp"``    — the pure-jnp oracle graph, which XLA fuses
+  aggressively; used for the long paper-scale training runs.
+pytest asserts both produce identical numerics (values and gradients).
+
+Parameter calling convention (shared with the Rust runtime, recorded in
+``artifacts/manifest.json``): flat argument list
+``w1, b1, w2, b2, …, wL, bL, x[, y]`` with ``w`` of shape (fan_in, fan_out)
+row-major f32 and ``b`` of shape (fan_out,).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_dense as K
+from .kernels import ref
+
+
+def init_params(key, arch):
+    """Xavier/Glorot-uniform init (paper §2) for ``arch`` layer widths.
+
+    Returns the flat [w1, b1, …, wL, bL] parameter list.
+    """
+    params = []
+    for fan_in, fan_out in zip(arch[:-1], arch[1:]):
+        key, wkey = jax.random.split(key)
+        bound = jnp.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(
+            wkey, (fan_in, fan_out), jnp.float32, -bound, bound
+        )
+        params += [w, jnp.zeros((fan_out,), jnp.float32)]
+    return params
+
+
+def _layers(flat_params):
+    """Group the flat [w1, b1, …] list into [(w, b), …] pairs."""
+    assert len(flat_params) % 2 == 0
+    return list(zip(flat_params[0::2], flat_params[1::2]))
+
+
+def predict(flat_params, x, kernel="pallas"):
+    """Forward pass: soft-sign hidden layers, linear output layer."""
+    layers = _layers(flat_params)
+    if kernel == "jnp":
+        return ref.mlp_apply(layers, x)
+    h = x
+    for w, b in layers[:-1]:
+        h = K.fused_dense(h, w, b)
+    w, b = layers[-1]
+    return K.linear(h, w, b)
+
+
+def mse_loss(flat_params, x, y, kernel="pallas"):
+    """Mean-squared error over the batch (the paper's loss)."""
+    pred = predict(flat_params, x, kernel=kernel)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def train_step(flat_params, x, y, kernel="pallas"):
+    """One backpropagation evaluation: returns (loss, [gw1, gb1, …]).
+
+    No optimizer state here — the Rust coordinator applies Adam and owns
+    the weight stream (Algorithm 1's snapshot source).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: mse_loss(p, x, y, kernel=kernel)
+    )(flat_params)
+    return (loss, *grads)
+
+
+def predict_fn(arch, batch, kernel="pallas"):
+    """(fn, example_args) pair for AOT-lowering ``predict``."""
+    specs = _param_specs(arch) + [
+        jax.ShapeDtypeStruct((batch, arch[0]), jnp.float32)
+    ]
+
+    def fn(*args):
+        return (predict(list(args[:-1]), args[-1], kernel=kernel),)
+
+    return fn, specs
+
+
+def train_step_fn(arch, batch, kernel="pallas"):
+    """(fn, example_args) pair for AOT-lowering ``train_step``."""
+    specs = _param_specs(arch) + [
+        jax.ShapeDtypeStruct((batch, arch[0]), jnp.float32),
+        jax.ShapeDtypeStruct((batch, arch[-1]), jnp.float32),
+    ]
+
+    def fn(*args):
+        return train_step(list(args[:-2]), args[-2], args[-1], kernel=kernel)
+
+    return fn, specs
+
+
+def _param_specs(arch):
+    specs = []
+    for fan_in, fan_out in zip(arch[:-1], arch[1:]):
+        specs.append(jax.ShapeDtypeStruct((fan_in, fan_out), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((fan_out,), jnp.float32))
+    return specs

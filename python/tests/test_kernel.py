@@ -1,0 +1,158 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiple raggedness) and value
+scales; assert_allclose at f32 tolerance is the core correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import fused_dense as K
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=70)
+SCALE = st.sampled_from([1e-3, 1.0, 30.0])
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, scale=SCALE)
+    def test_matches_oracle(self, m, k, n, scale):
+        ka, kb = _keys(2, seed=m * 1000 + k * 10 + n)
+        x, w = _rand(ka, (m, k), scale), _rand(kb, (k, n), scale)
+        got = K.matmul(x, w)
+        want = ref.matmul(x, w)
+        assert got.shape == (m, n)
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale * scale)
+
+    def test_tile_multiple_shapes(self):
+        ka, kb = _keys(2)
+        x, w = _rand(ka, (256, 128)), _rand(kb, (128, 384))
+        assert_allclose(K.matmul(x, w), ref.matmul(x, w), rtol=1e-5, atol=1e-4)
+
+    def test_single_row_col(self):
+        ka, kb = _keys(2)
+        x, w = _rand(ka, (1, 5)), _rand(kb, (5, 1))
+        assert_allclose(K.matmul(x, w), ref.matmul(x, w), rtol=1e-5, atol=1e-6)
+
+
+class TestFusedDense:
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM)
+    def test_activation_matches_oracle(self, m, k, n):
+        ka, kb, kc = _keys(3, seed=m + 100 * k + 10000 * n)
+        x, w, b = _rand(ka, (m, k)), _rand(kb, (k, n)), _rand(kc, (n,))
+        got = K.fused_dense(x, w, b)
+        want, _ = ref.fused_dense(x, w, b)
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_preactivation_residual(self):
+        ka, kb, kc = _keys(3)
+        x, w, b = _rand(ka, (33, 17)), _rand(kb, (17, 29)), _rand(kc, (29,))
+        act, pre = K._fused_dense_pallas(x, w, b)
+        want_act, want_pre = ref.fused_dense(x, w, b)
+        assert_allclose(act, want_act, rtol=1e-5, atol=1e-5)
+        assert_allclose(pre, want_pre, rtol=1e-5, atol=1e-5)
+
+    def test_activation_bounded(self):
+        # soft-sign maps into (-1, 1) — even for huge pre-activations.
+        ka, kb, kc = _keys(3)
+        x, w, b = _rand(ka, (8, 8), 100.0), _rand(kb, (8, 8), 100.0), _rand(kc, (8,))
+        act = K.fused_dense(x, w, b)
+        assert np.all(np.abs(np.asarray(act)) < 1.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(2, 33), k=st.integers(2, 33), n=st.integers(2, 33))
+    def test_gradients_match_oracle(self, m, k, n):
+        ka, kb, kc, kd = _keys(4, seed=m * 7 + k * 3 + n)
+        x, w, b = _rand(ka, (m, k)), _rand(kb, (k, n)), _rand(kc, (n,))
+        ct = _rand(kd, (m, n))
+
+        def pallas_scalar(x, w, b):
+            return jnp.sum(K.fused_dense(x, w, b) * ct)
+
+        def ref_scalar(x, w, b):
+            return jnp.sum(ref.fused_dense(x, w, b)[0] * ct)
+
+        g_pallas = jax.grad(pallas_scalar, argnums=(0, 1, 2))(x, w, b)
+        g_ref = jax.grad(ref_scalar, argnums=(0, 1, 2))(x, w, b)
+        for got, want in zip(g_pallas, g_ref):
+            assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestSoftsignBwd:
+    @settings(max_examples=15, deadline=None)
+    @given(m=DIM, n=DIM, scale=SCALE)
+    def test_matches_formula(self, m, n, scale):
+        ka, kb = _keys(2, seed=m * 97 + n)
+        z, da = _rand(ka, (m, n), scale), _rand(kb, (m, n))
+        got = K.softsign_bwd(z, da)
+        want = da * ref.softsign_grad(z)
+        assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestLinear:
+    @settings(max_examples=15, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM)
+    def test_value_and_grad(self, m, k, n):
+        ka, kb, kc, kd = _keys(4, seed=m + k + n)
+        x, w, b = _rand(ka, (m, k)), _rand(kb, (k, n)), _rand(kc, (n,))
+        ct = _rand(kd, (m, n))
+        assert_allclose(
+            K.linear(x, w, b), ref.dense(x, w, b), rtol=1e-5, atol=1e-5
+        )
+        g = jax.grad(lambda x, w, b: jnp.sum(K.linear(x, w, b) * ct), (0, 1, 2))(
+            x, w, b
+        )
+        gr = jax.grad(
+            lambda x, w, b: jnp.sum(ref.dense(x, w, b) * ct), (0, 1, 2)
+        )(x, w, b)
+        for got, want in zip(g, gr):
+            assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestGram:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 400),
+        m=st.integers(1, 21),
+        panel=st.sampled_from([8, 64, 1024]),
+    )
+    def test_matches_oracle(self, n, m, panel):
+        (ka,) = _keys(1, seed=n * 31 + m)
+        s = _rand(ka, (n, m))
+        got = K.gram(s, panel_rows=panel)
+        want = ref.gram(s)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_symmetry_and_psd_diag(self):
+        (ka,) = _keys(1)
+        s = _rand(ka, (333, 14))
+        g = np.asarray(K.gram(s))
+        assert_allclose(g, g.T, rtol=1e-6, atol=1e-6)
+        assert np.all(np.diag(g) >= 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 300), ma=st.integers(1, 20), mb=st.integers(1, 20))
+    def test_cross_gram(self, n, ma, mb):
+        ka, kb = _keys(2, seed=n + ma * 53 + mb)
+        a, b = _rand(ka, (n, ma)), _rand(kb, (n, mb))
+        got = K.cross_gram(a, b)
+        want = ref.cross_gram(a, b)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_cross_gram_of_self_is_gram(self):
+        (ka,) = _keys(1)
+        s = _rand(ka, (128, 9))
+        assert_allclose(K.cross_gram(s, s), K.gram(s), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,94 @@
+//! E11 — ablations of the DMD design choices DESIGN.md §5 calls out:
+//!
+//!  * amplitude projection: paper-literal `transpose` (b = Φᵀw) vs
+//!    standard least-squares `pinv` (b = Φ⁺w) — the stability result that
+//!    motivated our pinv default;
+//!  * singular-value filter tolerance (paper: 1e-10 "mild");
+//!  * eigenvalue growth clamp |λ| ≤ 1;
+//!  * optimizer-state handling across jumps is exercised implicitly (Adam
+//!    moments are kept, as the paper's TF setup does).
+
+mod common;
+
+use dmdtrain::config::Projection;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::trainer::Trainer;
+use dmdtrain::util;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config("quickstart");
+    let (ds_path, ds) = common::ensure_dataset(&cfg);
+    let runtime = Runtime::cpu(util::repo_root().join("artifacts"))?;
+    let epochs = if common::fast_mode() { 120 } else { 400 };
+
+    let mut variants: Vec<(String, dmdtrain::config::TrainConfig)> = Vec::new();
+    let base = {
+        let mut b = common::train_config(&cfg, &ds_path);
+        b.epochs = epochs;
+        b.eval_every = epochs;
+        // ablate from the *raw* algorithm — the guard is its own variant
+        if let Some(d) = b.dmd.as_mut() {
+            d.accept_worse_factor = None;
+        }
+        b
+    };
+
+    let mut plain = base.clone();
+    plain.dmd = None;
+    variants.push(("no DMD (reference)".into(), plain));
+
+    for (label, proj) in [
+        ("pinv projection (default)", Projection::Pinv),
+        ("transpose projection (paper eq. 5)", Projection::Transpose),
+    ] {
+        let mut v = base.clone();
+        v.dmd.as_mut().unwrap().projection = proj;
+        variants.push((label.into(), v));
+    }
+    for tol in [1e-10f64, 1e-4, 1e-2] {
+        let mut v = base.clone();
+        v.dmd.as_mut().unwrap().filter_tol = tol;
+        variants.push((format!("pinv, filter tol {tol:.0e}"), v));
+    }
+    {
+        let mut v = base.clone();
+        v.dmd.as_mut().unwrap().clamp_growth = Some(1.0);
+        variants.push(("pinv, |λ| clamped to 1".into(), v));
+    }
+    {
+        let mut v = base.clone();
+        v.dmd.as_mut().unwrap().accept_worse_factor = Some(1.0);
+        variants.push(("pinv, reject-worse guard".into(), v));
+    }
+    for omega in [0.5f64, 0.25] {
+        let mut v = base.clone();
+        v.dmd.as_mut().unwrap().relaxation = omega;
+        variants.push((format!("pinv, relaxation ω = {omega}"), v));
+    }
+    {
+        let mut v = base.clone();
+        v.dmd.as_mut().unwrap().noise_reinject = true;
+        variants.push(("pinv, noise re-injection (§4)".into(), v));
+    }
+
+    println!(
+        "E11 — DMD design ablations ({} epochs, quickstart problem)\n",
+        epochs
+    );
+    println!(
+        "{:<38} {:>12} {:>12} {:>10} {:>8}",
+        "variant", "train MSE", "test MSE", "mean rel", "events"
+    );
+    for (label, tc) in variants {
+        let report = Trainer::new(&runtime, tc)?.run(&ds)?;
+        println!(
+            "{label:<38} {:>12} {:>12} {:>10.3} {:>8}",
+            util::fmt_f64(report.history.final_train().unwrap()),
+            util::fmt_f64(report.history.final_test().unwrap()),
+            report.dmd_stats.mean_rel_train(),
+            report.dmd_stats.events.len()
+        );
+    }
+    println!("\n(<1 mean rel = DMD events reduce MSE on average)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Shared helpers for the paper-reproduction benches.
+
+use dmdtrain::config::{Config, DatagenConfig, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::pde::generate_dataset;
+use dmdtrain::util;
+use std::path::PathBuf;
+
+/// Load a config by name from configs/.
+pub fn config(name: &str) -> Config {
+    Config::load(util::repo_root().join(format!("configs/{name}.toml")))
+        .expect("config load")
+}
+
+/// Ensure the dataset for `cfg` exists (generate if missing), return its
+/// path and the loaded dataset.
+pub fn ensure_dataset(cfg: &Config) -> (PathBuf, Dataset) {
+    let root = util::repo_root();
+    let path = root.join(cfg.require_str("data.path").expect("data.path"));
+    if !path.exists() {
+        eprintln!("[bench setup] generating dataset {}…", path.display());
+        let mut dg = DatagenConfig::from_config(cfg);
+        dg.out = path.to_string_lossy().into_owned();
+        let report = generate_dataset(&dg, 8).expect("datagen");
+        eprintln!("[bench setup] done in {:.1}s", report.wall_secs);
+    }
+    let ds = Dataset::load(&path).expect("dataset load");
+    (path, ds)
+}
+
+/// Train config bound to the dataset path.
+pub fn train_config(cfg: &Config, ds_path: &std::path::Path) -> TrainConfig {
+    let mut tc = TrainConfig::from_config(cfg).expect("train config");
+    tc.dataset = ds_path.to_string_lossy().into_owned();
+    tc.log_every = 0;
+    tc
+}
+
+/// Output directory under runs/.
+pub fn out_dir(name: &str) -> PathBuf {
+    let dir = util::repo_root().join("runs").join(name);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    dir
+}
+
+/// Honor `DMDTRAIN_BENCH_FAST=1` to shrink grids for smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::var("DMDTRAIN_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}

@@ -1,0 +1,120 @@
+//! E7 — §3 complexity model: DMD cost ~ n(3m² + r²) and the acceleration
+//! condition t > 3m² + r².
+//!
+//! Three measurements:
+//!  1. DMD solve time vs n at fixed m — must scale linearly in n;
+//!  2. DMD solve time vs m at fixed n — must scale ~m² (the paper's
+//!     reason for picking m=14 over m=20: 0.49× the operations);
+//!  3. the native Rust Gram product vs the AOT Pallas `gram` artifact on
+//!     the same snapshot matrix (the O(nm²) step offloaded to XLA).
+
+mod common;
+
+use dmdtrain::config::DmdParams;
+use dmdtrain::dmd::{dmd_extrapolate, flops_estimate};
+use dmdtrain::linalg::gram;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::util::bench::{bench_n, header};
+use dmdtrain::util;
+
+fn snapshots(n: usize, m: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let mut w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    (0..m)
+        .map(|_| {
+            let snap = w.clone();
+            for v in &mut w {
+                *v = 0.99 * *v + 0.001 * 0.5;
+            }
+            snap
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(11);
+    let params = DmdParams::default();
+    let iters = if common::fast_mode() { 3 } else { 10 };
+
+    println!("{}", header());
+
+    // 1. scaling in n at m = 14 -------------------------------------------
+    println!("\n-- DMD solve vs n (m = 14, expect linear) --");
+    let mut per_n = Vec::new();
+    for n in [8_200usize, 201_000, 2_672_670] {
+        let cols = snapshots(n, 14, &mut rng);
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let stats = bench_n(&format!("dmd n={n} m=14"), iters, || {
+            dmd_extrapolate(&refs, &params, 55).unwrap()
+        });
+        per_n.push((n, stats.mean_s));
+    }
+    let lin_ratio = (per_n[2].1 / per_n[0].1) / (per_n[2].0 as f64 / per_n[0].0 as f64);
+    println!("linearity check: (t₃/t₁)/(n₃/n₁) = {lin_ratio:.2} (≈1 ⇒ linear in n)");
+
+    // 2. scaling in m at n = 201 000 --------------------------------------
+    println!("\n-- DMD solve vs m (n = 201 000, expect ~m²) --");
+    let mut per_m = Vec::new();
+    for m in [7usize, 14, 20] {
+        let cols = snapshots(201_000, m, &mut rng);
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let stats = bench_n(&format!("dmd n=201000 m={m}"), iters, || {
+            dmd_extrapolate(&refs, &params, 55).unwrap()
+        });
+        per_m.push((m, stats.mean_s));
+    }
+    let m_ratio = per_m[2].1 / per_m[0].1;
+    println!(
+        "m-scaling: t(m=20)/t(m=7) = {m_ratio:.2} (flop model predicts {:.2}; paper's m=14-vs-20 argument: {:.2})",
+        flops_estimate(1, 20, 19) / flops_estimate(1, 7, 6),
+        flops_estimate(1, 14, 13) / flops_estimate(1, 20, 19),
+    );
+
+    // 3. acceleration condition -------------------------------------------
+    println!("\n-- acceleration condition t > 3m² + r² (paper §3) --");
+    for (m, r) in [(14usize, 13usize), (20, 19)] {
+        let threshold = 3 * m * m + r * r;
+        println!(
+            "m={m:<3} r={r:<3} → DMD pays off when training batch t > {threshold} rows (paper's t = 800 ⇒ {})",
+            if 800 > threshold { "accelerates" } else { "does not" }
+        );
+    }
+
+    // 4. native Gram vs Pallas/XLA gram artifact --------------------------
+    println!("\n-- O(nm²) Gram step: native Rust vs AOT Pallas kernel --");
+    let runtime = Runtime::cpu(util::repo_root().join("artifacts"))?;
+    for (name, n, m) in [("gram_l2", 8_200usize, 20usize), ("gram_l3", 201_000, 14)] {
+        let exe = runtime.load(name)?;
+        let snap = Tensor::from_fn(n, m, |_, _| rng.normal() as f32);
+        let xla_stats = bench_n(&format!("{name} xla  n={n} m={m}"), iters, || {
+            exe.gram(&snap).unwrap()
+        });
+        // column-major views for the native path
+        let cols: Vec<Vec<f32>> = (0..m)
+            .map(|c| (0..n).map(|r| snap.get(r, c)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let native_stats = bench_n(&format!("{name} rust n={n} m={m}"), iters, || {
+            gram::gram(&refs)
+        });
+        // correctness cross-check
+        let g_xla = exe.gram(&snap)?;
+        let g_native = gram::gram(&refs);
+        let mut max_diff = 0.0f64;
+        for i in 0..m {
+            for j in 0..m {
+                max_diff = max_diff.max((g_xla.get(i, j) as f64 - g_native.get(i, j)).abs());
+            }
+        }
+        println!(
+            "  {name}: xla/native time ratio {:.2}, max |Δ| = {max_diff:.2e} (n·f32 tolerance)",
+            xla_stats.mean_s / native_stats.mean_s
+        );
+        // f32 accumulation error grows ~linearly in n for same-sign sums
+        // (the Gram diagonal is Σ x² ≈ n); 1e-6·n is ~10× the observed
+        // error and still catches any real layout/indexing bug.
+        assert!(max_diff < 1e-6 * n as f64, "gram mismatch: {max_diff}");
+    }
+    Ok(())
+}

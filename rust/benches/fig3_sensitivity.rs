@@ -1,0 +1,87 @@
+//! E3 — Fig 3: sensitivity of the mean relative DMD improvement to the
+//! snapshot count m and extrapolation horizon s, train and test.
+//!
+//! Paper protocol: Algorithm 1 over m ∈ [2,20], s ∈ [5,100], 3000 epochs,
+//! metric = unweighted mean over DMD events of (MSE after)/(MSE before).
+//! Here: the quickstart problem (pallas path) with a 5×5 grid by default
+//! (10×10 on the "sweep" artifact via `DMDTRAIN_BENCH_FULL=1`), reduced
+//! epochs — the paper's *shape* (improves with m, valley then degradation
+//! in s) is the reproduction target, not absolute values.
+
+mod common;
+
+use dmdtrain::config::SweepConfig;
+use dmdtrain::coordinator::run_sweep;
+use dmdtrain::util;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("DMDTRAIN_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let cfg = common::config(if full { "sweep" } else { "quickstart" });
+    let (ds_path, ds) = common::ensure_dataset(&cfg);
+    let mut base = common::train_config(&cfg, &ds_path);
+    // Paper protocol: Fig 3 measures the *raw* per-event relative error,
+    // so the shipped configs' reject-worse guard is disabled here (values
+    // > 1 are the signal that an (m, s) cell extrapolates too far).
+    if let Some(d) = base.dmd.as_mut() {
+        d.accept_worse_factor = None;
+    }
+
+    let (m_values, s_values, epochs, workers) = if common::fast_mode() {
+        (vec![4, 10], vec![5, 25], 60, 4)
+    } else if full {
+        (
+            vec![2, 4, 6, 8, 10, 12, 14, 16, 18, 20],
+            vec![5, 15, 25, 35, 45, 55, 65, 75, 85, 100],
+            300,
+            4,
+        )
+    } else {
+        (vec![2, 6, 10, 14, 20], vec![5, 15, 35, 55, 100], 200, 5)
+    };
+    let sweep = SweepConfig {
+        m_values: m_values.clone(),
+        s_values: s_values.clone(),
+        epochs,
+        workers,
+        base,
+    };
+
+    eprintln!(
+        "fig3: {}×{} grid × {} epochs (artifact '{}')",
+        m_values.len(),
+        s_values.len(),
+        epochs,
+        sweep.base.artifact
+    );
+    let t0 = std::time::Instant::now();
+    let result = run_sweep(&util::repo_root().join("artifacts"), &sweep, &ds, true)?;
+    let dir = common::out_dir("fig3");
+    result.write_csv(dir.join("grid.csv"))?;
+
+    // paper-style table
+    for (metric, test) in [("TRAIN", false), ("TEST", true)] {
+        println!("\nFig 3 ({metric}): mean relative improvement per DMD event (<1 = helps)");
+        print!("{:>6}", "m\\s");
+        for &s in &s_values {
+            print!("{s:>9}");
+        }
+        println!();
+        for &m in &m_values {
+            print!("{m:>6}");
+            for &s in &s_values {
+                let c = result.cells.iter().find(|c| c.m == m && c.s == s).unwrap();
+                let v = if test { c.mean_rel_test } else { c.mean_rel_train };
+                print!("{v:>9.3}");
+            }
+            println!();
+        }
+    }
+    if let Some(best) = result.best() {
+        println!(
+            "\nbest cell m={} s={} (paper's pick: m=14, s=55; paper's best m=20)",
+            best.m, best.s
+        );
+    }
+    println!("grid CSV → {} ({:.1}s total)", dir.display(), t0.elapsed().as_secs_f64());
+    Ok(())
+}

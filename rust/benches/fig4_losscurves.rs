@@ -1,0 +1,78 @@
+//! E4/E5 — Fig 4: train/test MSE vs epoch with and without DMD, plus the
+//! headline equal-epoch improvement factor (paper: ~two decades).
+//!
+//! Default: the reduced "sweep" artifact (paper hidden-layer structure,
+//! 267-output field, jnp kernels) at 600 epochs.
+//! `DMDTRAIN_BENCH_FULL=1`: the full paper architecture at 1500 epochs.
+
+mod common;
+
+use dmdtrain::runtime::Runtime;
+use dmdtrain::trainer::Trainer;
+use dmdtrain::util;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("DMDTRAIN_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let cfg = common::config(if full { "paper" } else { "sweep" });
+    let (ds_path, ds) = common::ensure_dataset(&cfg);
+    let mut base = common::train_config(&cfg, &ds_path);
+    base.epochs = if common::fast_mode() {
+        100
+    } else if full {
+        1500
+    } else {
+        600
+    };
+    base.eval_every = 5;
+    // Late-training stabilization: once the MSE is small, raw (m=14, s=55)
+    // jumps can diverge — the failure the paper's future-work note flags
+    // ("annealing or relaxation are necessary when performing the DMD
+    // iterations"). The reject-worse guard implements the simplest such
+    // relaxation: a jump is kept only if it does not increase the train
+    // MSE (one extra evaluation per event; ablated in E11).
+    if let Some(d) = base.dmd.as_mut() {
+        d.accept_worse_factor = Some(1.0);
+    }
+
+    let runtime = Runtime::cpu(util::repo_root().join("artifacts"))?;
+    let mut plain_cfg = base.clone();
+    plain_cfg.dmd = None;
+
+    eprintln!("fig4: plain Adam, {} epochs…", base.epochs);
+    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    eprintln!("fig4: Adam+DMD (m=14, s=55), {} epochs…", base.epochs);
+    let dmd = Trainer::new(&runtime, base.clone())?.run(&ds)?;
+
+    let dir = common::out_dir("fig4");
+    plain.history.write_csv(dir.join("loss_plain.csv"))?;
+    dmd.history.write_csv(dir.join("loss_dmd.csv"))?;
+    dmd.dmd_stats.write_csv(dir.join("dmd_events.csv"))?;
+
+    println!("\nFig 4: MSE vs epoch (sampled)");
+    println!(
+        "{:>7} {:>14} {:>14} {:>14} {:>14}",
+        "epoch", "plain train", "dmd train", "plain test", "dmd test"
+    );
+    let n = plain.history.points.len();
+    for k in 0..=10 {
+        let i = (k * (n - 1)) / 10;
+        let p = &plain.history.points[i];
+        let d = &dmd.history.points[i];
+        println!(
+            "{:>7} {:>14} {:>14} {:>14} {:>14}",
+            p.epoch,
+            util::fmt_f64(p.train_mse),
+            util::fmt_f64(d.train_mse),
+            util::fmt_f64(p.test_mse),
+            util::fmt_f64(d.test_mse)
+        );
+    }
+
+    let f_train = dmd.history.improvement_vs(&plain.history).unwrap_or(f64::NAN);
+    let f_test = plain.history.final_test().unwrap_or(f64::NAN)
+        / dmd.history.final_test().unwrap_or(f64::NAN);
+    println!("\nE5 headline: equal-epoch improvement {f_train:.1}× train / {f_test:.1}× test");
+    println!("paper: ~100× (two decades) at 3000 epochs, full scale");
+    println!("curves → {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! §Perf micro-benches for the L3 hot paths: the Gram-product family
+//! (the only O(n·) DMD work), the small eigensolvers, and literal
+//! packing. Drives the optimization loop in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use dmdtrain::linalg::{eig::eig, gram, jacobi::eig_sym};
+use dmdtrain::rng::Rng;
+use dmdtrain::tensor::Mat;
+use dmdtrain::util::bench::{bench_n, header};
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let iters = if common::fast_mode() { 3 } else { 20 };
+    println!("{}", header());
+
+    // dot / gram over the paper's biggest layer (1000×2670 + bias)
+    let n = 2_672_670usize;
+    let m = 14usize;
+    let cols: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+
+    let dot_stats = bench_n("dot_f32_f64 n=2.67M", iters, || {
+        gram::dot_f32_f64(refs[0], refs[1])
+    });
+    let gb = (2.0 * n as f64 * 4.0) / 1e9;
+    println!(
+        "  → {:.2} GB/s effective bandwidth (2 streams)",
+        gb / dot_stats.mean_s
+    );
+
+    bench_n("gram m=14 n=2.67M", iters.min(5), || gram::gram(&refs));
+    bench_n("cross_gram m=14 n=2.67M", iters.min(5), || {
+        gram::cross_gram(&refs[..m - 1], &refs[1..])
+    });
+    bench_n("combine m=13 n=2.67M", iters, || {
+        gram::combine(&refs[..m - 1], &vec![0.1f64; m - 1])
+    });
+    bench_n("project m=13 n=2.67M", iters, || {
+        gram::project(&refs[..m - 1], refs[m - 1])
+    });
+
+    // small dense solvers (r ≤ 20 — must be negligible)
+    let g = {
+        let b = Mat::from_fn(64, 20, |_, _| rng.normal());
+        b.transpose().matmul(&b)
+    };
+    bench_n("jacobi eig_sym 20x20", 200, || eig_sym(&g));
+    let a = Mat::from_fn(20, 20, |i, j| {
+        if i == j {
+            1.0 + 0.01 * rng.normal()
+        } else {
+            0.01 * rng.normal()
+        }
+    });
+    bench_n("schur eig 20x20", 200, || eig(&a).unwrap());
+}

@@ -1,0 +1,104 @@
+//! E6 — §4 wall-time overhead of adding DMD iterations.
+//!
+//! Paper: measured 1.41× (TensorFlow, weight extract/assign dominated),
+//! theoretical 1.07× from flop counting. Our coordinator owns the weights
+//! (no extract/assign round-trip), so the measured factor should land far
+//! closer to the theoretical one — that *is* the paper's own
+//! "native implementation" recommendation, quantified.
+//!
+//! Also reports the serial-vs-parallel per-layer DMD speedup (paper §3's
+//! "easily parallelized" loop).
+
+mod common;
+
+use dmdtrain::config::DmdParams;
+use dmdtrain::dmd::{extrapolate_all_layers, flops_estimate, SnapshotBuffer};
+use dmdtrain::model::Arch;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::trainer::Trainer;
+use dmdtrain::util;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config("sweep");
+    let (ds_path, ds) = common::ensure_dataset(&cfg);
+    let runtime = Runtime::cpu(util::repo_root().join("artifacts"))?;
+    let epochs = if common::fast_mode() { 60 } else { 300 };
+
+    // --- measured: full runs with / without DMD --------------------------
+    let mut base = common::train_config(&cfg, &ds_path);
+    base.epochs = epochs;
+    base.eval_every = usize::MAX; // exclude eval cost from both sides
+    base.measure_dmd = false; // paper's runs don't measure per-event MSE
+
+    let mut plain_cfg = base.clone();
+    plain_cfg.dmd = None;
+    eprintln!("walltime: plain run ({epochs} epochs)…");
+    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    eprintln!("walltime: DMD run ({epochs} epochs)…");
+    let dmd = Trainer::new(&runtime, base.clone())?.run(&ds)?;
+
+    let measured = dmd.wall_secs / plain.wall_secs;
+
+    // --- theoretical: flop model (paper §3) -------------------------------
+    // backprop epoch ≈ 6·t·P flops (fwd 2TP + bwd 4TP, t = batch rows,
+    // P = params); DMD event ≈ Σ_layers n_ℓ(3m²+r²), every m epochs.
+    let arch = Arch::new(vec![6, 40, 200, 267]).unwrap();
+    let p: usize = arch.param_count();
+    let t = ds.n_train() as f64;
+    let m = base.dmd.as_ref().unwrap().m;
+    let backprop_epoch = 6.0 * t * p as f64;
+    let dmd_event: f64 = (0..arch.num_layers())
+        .map(|l| flops_estimate(arch.layer_param_count(l), m, m - 1))
+        .sum();
+    let theoretical = 1.0 + dmd_event / (m as f64 * backprop_epoch);
+
+    println!("\nE6 — wall-time overhead of DMD iterations");
+    println!("{:>28} {:>12}", "plain s/epoch", "dmd s/epoch");
+    println!(
+        "{:>28.4} {:>12.4}",
+        plain.wall_secs / epochs as f64,
+        dmd.wall_secs / epochs as f64
+    );
+    println!("measured overhead factor    : {measured:.3}×   (paper: 1.41×)");
+    println!("theoretical (flop model)    : {theoretical:.3}×   (paper: 1.07×)");
+    println!("DMD solve time (all events) : {:.3}s", dmd.dmd_stats.total_solve_secs());
+    println!("\nprofile (DMD run):\n{}", dmd.profile.table());
+
+    // --- serial vs parallel per-layer dispatch ---------------------------
+    let arch_paper = Arch::paper();
+    let mut rng = Rng::new(7);
+    let buffers: Vec<SnapshotBuffer> = (0..arch_paper.num_layers())
+        .map(|l| {
+            let n = arch_paper.layer_param_count(l);
+            let mut b = SnapshotBuffer::new(14);
+            let mut w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            for k in 0..14 {
+                b.push(k, &w);
+                for v in &mut w {
+                    *v *= 0.995;
+                }
+            }
+            b
+        })
+        .collect();
+    let params = DmdParams::default();
+    let reps = if common::fast_mode() { 2 } else { 5 };
+    let time_it = |parallel: bool| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let outs = extrapolate_all_layers(&buffers, &params, 55, parallel);
+            assert!(outs.iter().all(|o| o.result.is_ok()));
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    let serial = time_it(false);
+    let parallel = time_it(true);
+    println!(
+        "\nper-layer DMD at paper scale (2.88 M params, m=14): serial {:.3}s, parallel {:.3}s → {:.2}× speedup",
+        serial,
+        parallel,
+        serial / parallel
+    );
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Hand-rolled argv parser (clap is unavailable offline).
+//!
+//! Grammar: `dmdtrain <subcommand> [positional…] [--key value | --flag]…`.
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = iter.next().unwrap();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                anyhow::ensure!(!body.is_empty(), "empty flag name");
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                    out.present.push(body.to_string());
+                } else {
+                    // boolean flag
+                    out.flags.insert(body.to_string(), "true".to_string());
+                    out.present.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.str_opt(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{s}'")),
+        }
+    }
+
+    pub fn bool_or(&self, name: &str, default: bool) -> anyhow::Result<bool> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(s) => anyhow::bail!("--{name}: expected bool, got '{s}'"),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--arch 6,40,200,1000,2670`.
+    pub fn usize_list(&self, name: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        match self.str_opt(name) {
+            None => Ok(None),
+            Some(s) => {
+                let mut out = Vec::new();
+                for part in s.split(',') {
+                    out.push(part.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("--{name}: bad integer '{part}'")
+                    })?);
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--config", "configs/paper.toml", "--dmd"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.str_opt("config"), Some("configs/paper.toml"));
+        assert!(a.bool_or("dmd", false).unwrap());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["sweep", "--m=14", "--s=55"]);
+        assert_eq!(a.usize_or("m", 0).unwrap(), 14);
+        assert_eq!(a.usize_or("s", 0).unwrap(), 55);
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let a = parse(&["train"]);
+        assert_eq!(a.usize_or("epochs", 3000).unwrap(), 3000);
+        assert_eq!(a.f64_or("lr", 1e-3).unwrap(), 1e-3);
+        assert!(!a.bool_or("dmd", false).unwrap());
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let a = parse(&["predict"]);
+        assert!(a.require("checkpoint").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["train", "--arch", "6,40,200,1000,2670"]);
+        assert_eq!(
+            a.usize_list("arch").unwrap().unwrap(),
+            vec![6, 40, 200, 1000, 2670]
+        );
+        assert_eq!(a.usize_list("other").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["train", "--epochs", "many"]);
+        assert!(a.usize_or("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse(&["train", "--quiet"]);
+        assert!(a.bool_or("quiet", false).unwrap());
+    }
+}

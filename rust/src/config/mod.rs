@@ -1,0 +1,11 @@
+//! TOML-subset config parser + typed experiment configs.
+//!
+//! Supported TOML subset (all the experiment configs need): `[section]`
+//! headers, `key = value` with integer / float / bool / string / flat
+//! array values, `#` comments. No nested tables, no multi-line values.
+
+mod toml;
+mod types;
+
+pub use toml::{Config, Value};
+pub use types::{AdamParams, DatagenConfig, DmdParams, Projection, SweepConfig, TrainConfig};

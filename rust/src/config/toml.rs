@@ -1,0 +1,289 @@
+//! The TOML-subset parser.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_list(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::List(items) => items.iter().map(|v| v.as_usize()).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_list(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::List(items) => items.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key → Value` (keys before any section header
+/// live in the "" section).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad section header", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, raw_val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let val = parse_value(raw_val.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            values.insert(full_key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("config {}: {e}", path.as_ref().display())
+        })?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// Override/insert a value (CLI flags override config files).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Value::as_u64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn require_str(&self, key: &str) -> anyhow::Result<String> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("config: missing string key '{key}'"))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honor '#' except inside quotes
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> anyhow::Result<Value> {
+    anyhow::ensure!(!raw.is_empty(), "empty value");
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{raw}'")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // split on commas outside quotes (no nested arrays in our subset)
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_example() {
+        let text = r#"
+# experiment config
+name = "paper-run"          # inline comment
+[model]
+arch = [6, 40, 200, 1000, 2670]
+batch = 800
+[dmd]
+enabled = true
+m = 14
+s = 55
+filter_tol = 1e-10
+[adam]
+lr = 0.001
+"#;
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.str_or("name", ""), "paper-run");
+        assert_eq!(
+            c.get("model.arch").unwrap().as_usize_list().unwrap(),
+            vec![6, 40, 200, 1000, 2670]
+        );
+        assert_eq!(c.usize_or("model.batch", 0), 800);
+        assert!(c.bool_or("dmd.enabled", false));
+        assert_eq!(c.usize_or("dmd.m", 0), 14);
+        assert!((c.f64_or("dmd.filter_tol", 0.0) - 1e-10).abs() < 1e-24);
+        assert_eq!(c.f64_or("adam.lr", 0.0), 0.001);
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let c = Config::parse("x = 5").unwrap();
+        assert_eq!(c.f64_or("x", 0.0), 5.0);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("[dmd]\nm = 14").unwrap();
+        c.set("dmd.m", Value::Int(20));
+        assert_eq!(c.usize_or("dmd.m", 0), 20);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue =").is_err());
+        assert!(Config::parse("bare line without equals").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse(r##"path = "runs/#1""##).unwrap();
+        assert_eq!(c.str_or("path", ""), "runs/#1");
+    }
+
+    #[test]
+    fn missing_keys_default() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert!(c.require_str("nope").is_err());
+    }
+}

@@ -1,0 +1,366 @@
+//! Typed experiment configurations built from [`Config`] + CLI overrides.
+
+use super::toml::Config;
+
+/// How DMD mode amplitudes `b` are computed from the last snapshot.
+///
+/// The paper writes `b = Φᵀ w` (eq. 5), but the transpose projection is
+/// only well-normalized when the Koopman eigenvector matrix `Y` is close
+/// to unitary; on early-training weight ramps (near-defective λ ≈ 1
+/// modes) it mis-scales the amplitudes and the λ^s extrapolation
+/// explodes — measured in `benches/ablation_filter.rs`. `Pinv` is the
+/// standard DMD amplitude `b = Φ⁺ w` (least squares) and is the default;
+/// it reproduces the paper's claimed acceleration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Projection {
+    /// Paper-faithful transpose projection.
+    Transpose,
+    /// Least-squares amplitude fit.
+    Pinv,
+}
+
+impl Projection {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "transpose" => Ok(Projection::Transpose),
+            "pinv" => Ok(Projection::Pinv),
+            _ => anyhow::bail!("projection must be 'transpose' or 'pinv', got '{s}'"),
+        }
+    }
+}
+
+/// DMD acceleration hyper-parameters (paper Algorithm 1 inputs).
+#[derive(Clone, Debug)]
+pub struct DmdParams {
+    /// Snapshots per DMD fit (paper: m, chosen 14).
+    pub m: usize,
+    /// Extrapolation horizon in optimizer steps (paper: s, chosen 55).
+    pub s: usize,
+    /// Singular-value ratio filter: keep modes with σᵢ/σ₀ > tol
+    /// (paper: 1e-10).
+    pub filter_tol: f64,
+    /// Mode-amplitude projection variant.
+    pub projection: Projection,
+    /// Clamp |λ| of growing modes to this bound (None = paper-faithful,
+    /// no clamping). Ablated in `ablation_filter`.
+    pub clamp_growth: Option<f64>,
+    /// Safety: skip the DMD update if it would *increase* the training
+    /// loss by more than this factor (None = always accept, as the paper
+    /// does implicitly).
+    pub accept_worse_factor: Option<f64>,
+    /// Under-relaxation of the jump: w ← w_m + ω·(w_DMD − w_m), ω ∈ (0,1].
+    /// 1.0 = the paper's full jump ("implicitly, the learning rate of DMD
+    /// iterations is 1.0"); the paper's conclusion names relaxation as the
+    /// fix for late-training degradation.
+    pub relaxation: f64,
+    /// Re-inject stochastic spread after the jump (paper §4: "include add
+    /// a random noise at the end of the DMD iterations… by randomly
+    /// sampling the difference between the distributions of weights
+    /// obtained after the DMD process and the original one"): adds
+    /// N(0, std(w_DMD − w_m)) per layer.
+    pub noise_reinject: bool,
+}
+
+impl Default for DmdParams {
+    fn default() -> Self {
+        DmdParams {
+            m: 14,
+            s: 55,
+            filter_tol: 1e-10,
+            projection: Projection::Pinv,
+            clamp_growth: None,
+            accept_worse_factor: None,
+            relaxation: 1.0,
+            noise_reinject: false,
+        }
+    }
+}
+
+impl DmdParams {
+    pub fn from_config(c: &Config) -> anyhow::Result<Self> {
+        let d = DmdParams::default();
+        let clamp = c.f64_or("dmd.clamp_growth", 0.0);
+        let worse = c.f64_or("dmd.accept_worse_factor", 0.0);
+        Ok(DmdParams {
+            m: c.usize_or("dmd.m", d.m),
+            s: c.usize_or("dmd.s", d.s),
+            filter_tol: c.f64_or("dmd.filter_tol", d.filter_tol),
+            projection: Projection::parse(&c.str_or("dmd.projection", "pinv"))?,
+            clamp_growth: (clamp > 0.0).then_some(clamp),
+            accept_worse_factor: (worse > 0.0).then_some(worse),
+            relaxation: c.f64_or("dmd.relaxation", d.relaxation),
+            noise_reinject: c.bool_or("dmd.noise_reinject", d.noise_reinject),
+        })
+    }
+}
+
+/// Adam hyper-parameters (paper uses TF defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamParams {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+impl AdamParams {
+    pub fn from_config(c: &Config) -> Self {
+        let d = AdamParams::default();
+        AdamParams {
+            lr: c.f64_or("adam.lr", d.lr),
+            beta1: c.f64_or("adam.beta1", d.beta1),
+            beta2: c.f64_or("adam.beta2", d.beta2),
+            eps: c.f64_or("adam.eps", d.eps),
+        }
+    }
+}
+
+/// Full training-run configuration (one Algorithm-1 execution).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Manifest entry base name ("paper", "quickstart", …) selecting the
+    /// AOT artifacts `train_step_<name>` / `predict_<name>`.
+    pub artifact: String,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Dataset path (written by `dmdtrain datagen`).
+    pub dataset: String,
+    pub adam: AdamParams,
+    /// None = plain backprop baseline (the paper's "without DMD").
+    pub dmd: Option<DmdParams>,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub out_dir: String,
+    /// Record per-layer weight trajectories (Fig 1) — costs memory.
+    pub record_weights: bool,
+    /// Evaluate train/test MSE before+after every DMD jump (the Fig 3
+    /// relative-improvement metric). Costs 2–4 predict passes per event.
+    pub measure_dmd: bool,
+    /// Dispatch per-layer DMD solves on scoped threads (paper §3).
+    pub parallel_dmd: bool,
+}
+
+impl TrainConfig {
+    pub fn from_config(c: &Config) -> anyhow::Result<Self> {
+        let dmd_enabled = c.bool_or("dmd.enabled", true);
+        Ok(TrainConfig {
+            artifact: c.str_or("model.artifact", "paper"),
+            epochs: c.usize_or("train.epochs", 3000),
+            seed: c.u64_or("train.seed", 0),
+            dataset: c.require_str("data.path")?,
+            adam: AdamParams::from_config(c),
+            dmd: dmd_enabled.then(|| DmdParams::from_config(c)).transpose()?,
+            eval_every: c.usize_or("train.eval_every", 10),
+            log_every: c.usize_or("train.log_every", 50),
+            out_dir: c.str_or("train.out_dir", "runs/train"),
+            record_weights: c.bool_or("train.record_weights", false),
+            measure_dmd: c.bool_or("train.measure_dmd", true),
+            parallel_dmd: c.bool_or("train.parallel_dmd", true),
+        })
+    }
+}
+
+/// Pollutant-dispersion data-generation configuration (paper §4/App. 1).
+#[derive(Clone, Debug)]
+pub struct DatagenConfig {
+    /// Structured-grid resolution for the ADR solver.
+    pub nx: usize,
+    pub ny: usize,
+    /// Observation points (paper: 2670).
+    pub n_obs: usize,
+    /// LHS samples (paper: 1000).
+    pub n_samples: usize,
+    /// Train fraction (paper: 0.8).
+    pub train_frac: f64,
+    pub seed: u64,
+    pub out: String,
+    /// Sampling ranges, paper §4.
+    pub k12: (f64, f64),
+    pub k3: (f64, f64),
+    pub d: (f64, f64),
+    pub u0: (f64, f64),
+    pub uh: (f64, f64),
+    pub uv: (f64, f64),
+}
+
+impl Default for DatagenConfig {
+    fn default() -> Self {
+        DatagenConfig {
+            nx: 96,
+            ny: 48,
+            n_obs: 2670,
+            n_samples: 1000,
+            train_frac: 0.8,
+            seed: 0,
+            out: "runs/data/pollutant.dmdt".into(),
+            k12: (1.0, 20.0),
+            k3: (0.0, 10.0),
+            d: (0.01, 0.5),
+            u0: (0.01, 2.0),
+            uh: (-0.2, 0.2),
+            uv: (-0.2, 0.2),
+        }
+    }
+}
+
+impl DatagenConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = DatagenConfig::default();
+        let range = |key: &str, dft: (f64, f64)| -> (f64, f64) {
+            match c.get(key).and_then(super::toml::Value::as_f64_list) {
+                Some(v) if v.len() == 2 => (v[0], v[1]),
+                _ => dft,
+            }
+        };
+        DatagenConfig {
+            nx: c.usize_or("pde.nx", d.nx),
+            ny: c.usize_or("pde.ny", d.ny),
+            n_obs: c.usize_or("data.n_obs", d.n_obs),
+            n_samples: c.usize_or("data.n_samples", d.n_samples),
+            train_frac: c.f64_or("data.train_frac", d.train_frac),
+            seed: c.u64_or("data.seed", d.seed),
+            out: c.str_or("data.path", &d.out),
+            k12: range("ranges.k12", d.k12),
+            k3: range("ranges.k3", d.k3),
+            d: range("ranges.d", d.d),
+            u0: range("ranges.u0", d.u0),
+            uh: range("ranges.uh", d.uh),
+            uv: range("ranges.uv", d.uv),
+        }
+    }
+}
+
+/// Sensitivity-sweep configuration (Fig 3): grids over m and s.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub m_values: Vec<usize>,
+    pub s_values: Vec<usize>,
+    pub epochs: usize,
+    pub workers: usize,
+    pub base: TrainConfig,
+}
+
+impl SweepConfig {
+    pub fn from_config(c: &Config) -> anyhow::Result<Self> {
+        let m_values = c
+            .get("sweep.m_values")
+            .and_then(super::toml::Value::as_usize_list)
+            .unwrap_or_else(|| (2..=20).step_by(2).collect());
+        let s_values = c
+            .get("sweep.s_values")
+            .and_then(super::toml::Value::as_usize_list)
+            .unwrap_or_else(|| (5..=100).step_by(10).collect());
+        Ok(SweepConfig {
+            m_values,
+            s_values,
+            epochs: c.usize_or("sweep.epochs", 300),
+            workers: c.usize_or("sweep.workers", 4),
+            base: TrainConfig::from_config(c)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = r#"
+[model]
+artifact = "paper"
+[train]
+epochs = 100
+seed = 7
+[data]
+path = "runs/data/test.dmdt"
+[dmd]
+enabled = true
+m = 14
+s = 55
+projection = "pinv"
+clamp_growth = 1.0
+[adam]
+lr = 0.002
+[sweep]
+m_values = [2, 6, 10]
+s_values = [5, 25]
+epochs = 50
+"#;
+
+    #[test]
+    fn train_config_from_toml() {
+        let c = Config::parse(TEXT).unwrap();
+        let tc = TrainConfig::from_config(&c).unwrap();
+        assert_eq!(tc.artifact, "paper");
+        assert_eq!(tc.epochs, 100);
+        assert_eq!(tc.seed, 7);
+        let dmd = tc.dmd.unwrap();
+        assert_eq!((dmd.m, dmd.s), (14, 55));
+        assert_eq!(dmd.projection, Projection::Pinv);
+        assert_eq!(dmd.clamp_growth, Some(1.0));
+        assert_eq!(tc.adam.lr, 0.002);
+    }
+
+    #[test]
+    fn relaxation_and_noise_parsed() {
+        let c = Config::parse(
+            "[data]\npath = \"x\"\n[dmd]\nrelaxation = 0.5\nnoise_reinject = true",
+        )
+        .unwrap();
+        let tc = TrainConfig::from_config(&c).unwrap();
+        let d = tc.dmd.unwrap();
+        assert_eq!(d.relaxation, 0.5);
+        assert!(d.noise_reinject);
+        // defaults: full jump, no noise (paper's base algorithm)
+        let d2 = DmdParams::default();
+        assert_eq!(d2.relaxation, 1.0);
+        assert!(!d2.noise_reinject);
+    }
+
+    #[test]
+    fn dmd_disabled_gives_none() {
+        let c = Config::parse("[dmd]\nenabled = false\n[data]\npath = \"x\"").unwrap();
+        let tc = TrainConfig::from_config(&c).unwrap();
+        assert!(tc.dmd.is_none());
+    }
+
+    #[test]
+    fn sweep_config_grids() {
+        let c = Config::parse(TEXT).unwrap();
+        let sc = SweepConfig::from_config(&c).unwrap();
+        assert_eq!(sc.m_values, vec![2, 6, 10]);
+        assert_eq!(sc.s_values, vec![5, 25]);
+        assert_eq!(sc.epochs, 50);
+    }
+
+    #[test]
+    fn datagen_defaults_match_paper() {
+        let c = Config::parse("").unwrap();
+        let dg = DatagenConfig::from_config(&c);
+        assert_eq!(dg.n_obs, 2670);
+        assert_eq!(dg.n_samples, 1000);
+        assert_eq!(dg.k12, (1.0, 20.0));
+        assert_eq!(dg.uv, (-0.2, 0.2));
+    }
+
+    #[test]
+    fn missing_dataset_errors() {
+        let c = Config::parse("").unwrap();
+        assert!(TrainConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn projection_parse_rejects_unknown() {
+        assert!(Projection::parse("fourier").is_err());
+    }
+}

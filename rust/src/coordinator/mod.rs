@@ -1,0 +1,11 @@
+//! Experiment coordination: the (m, s) sensitivity sweep of Fig 3 and
+//! shared run-directory conventions.
+//!
+//! Each grid cell is one full Algorithm-1 training run at (m, s). Cells
+//! are distributed over OS worker threads; PJRT client handles are
+//! thread-affine, so each worker builds its own [`Runtime`] and compiles
+//! its own executables (one-time cost per worker, amortized over cells).
+
+mod sweep;
+
+pub use sweep::{run_sweep, SweepCell, SweepResult};

@@ -1,0 +1,189 @@
+//! The Fig-3 sensitivity sweep: mean relative DMD improvement over an
+//! (m, s) grid, train and test.
+
+use crate::config::{SweepConfig, TrainConfig};
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::trainer::Trainer;
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One grid cell's result.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub m: usize,
+    pub s: usize,
+    /// Mean over DMD events of (MSE after)/(MSE before) — Fig 3's metric.
+    pub mean_rel_train: f64,
+    pub mean_rel_test: f64,
+    pub final_train: f64,
+    pub final_test: f64,
+    pub events: usize,
+    pub wall_secs: f64,
+}
+
+/// Full sweep output.
+#[derive(Clone, Debug, Default)]
+pub struct SweepResult {
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepResult {
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "m",
+                "s",
+                "mean_rel_train",
+                "mean_rel_test",
+                "final_train",
+                "final_test",
+                "events",
+                "wall_secs",
+            ],
+        )?;
+        for c in &self.cells {
+            w.row(&[
+                c.m as f64,
+                c.s as f64,
+                c.mean_rel_train,
+                c.mean_rel_test,
+                c.final_train,
+                c.final_test,
+                c.events as f64,
+                c.wall_secs,
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Best (m, s) by mean train relative improvement (min).
+    pub fn best(&self) -> Option<&SweepCell> {
+        self.cells
+            .iter()
+            .filter(|c| c.mean_rel_train.is_finite())
+            .min_by(|a, b| a.mean_rel_train.partial_cmp(&b.mean_rel_train).unwrap())
+    }
+}
+
+/// Run one training cell at (m, s).
+fn run_cell(
+    artifact_dir: &Path,
+    base: &TrainConfig,
+    ds: &Dataset,
+    epochs: usize,
+    m: usize,
+    s: usize,
+) -> anyhow::Result<SweepCell> {
+    let runtime = Runtime::cpu(artifact_dir)?;
+    let mut cfg = base.clone();
+    cfg.epochs = epochs;
+    cfg.log_every = 0;
+    cfg.measure_dmd = true;
+    let dmd = cfg
+        .dmd
+        .as_mut()
+        .ok_or_else(|| anyhow::anyhow!("sweep requires dmd.enabled"))?;
+    dmd.m = m;
+    dmd.s = s;
+    let mut trainer = Trainer::new(&runtime, cfg)?;
+    let report = trainer.run(ds)?;
+    Ok(SweepCell {
+        m,
+        s,
+        mean_rel_train: report.dmd_stats.mean_rel_train(),
+        mean_rel_test: report.dmd_stats.mean_rel_test(),
+        final_train: report.history.final_train().unwrap_or(f64::NAN),
+        final_test: report.history.final_test().unwrap_or(f64::NAN),
+        events: report.dmd_stats.events.len(),
+        wall_secs: report.wall_secs,
+    })
+}
+
+/// Execute the sweep over worker threads. Cell order in the result is
+/// deterministic (row-major over m × s) regardless of worker count.
+pub fn run_sweep(
+    artifact_dir: &Path,
+    sweep: &SweepConfig,
+    ds: &Dataset,
+    progress: bool,
+) -> anyhow::Result<SweepResult> {
+    let grid: Vec<(usize, usize)> = sweep
+        .m_values
+        .iter()
+        .flat_map(|&m| sweep.s_values.iter().map(move |&s| (m, s)))
+        .collect();
+
+    let workers = sweep.workers.max(1).min(grid.len().max(1));
+    let mut cells: Vec<Option<anyhow::Result<SweepCell>>> =
+        (0..grid.len()).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<anyhow::Result<SweepCell>>>> =
+            cells.iter_mut().map(std::sync::Mutex::new).collect();
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let grid = &grid;
+                let slots = &slots;
+                let done = &done;
+                scope.spawn(move || {
+                    for gi in (w..grid.len()).step_by(workers) {
+                        let (m, s) = grid[gi];
+                        let cell = run_cell(artifact_dir, &sweep.base, ds, sweep.epochs, m, s);
+                        let finished =
+                            done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                        if progress {
+                            eprintln!(
+                                "sweep [{finished}/{}] m={m} s={s} rel_train={}",
+                                grid.len(),
+                                cell.as_ref()
+                                    .map(|c| crate::util::fmt_f64(c.mean_rel_train))
+                                    .unwrap_or_else(|e| format!("ERR {e}")),
+                            );
+                        }
+                        **slots[gi].lock().unwrap() = Some(cell);
+                    }
+                });
+            }
+        });
+    }
+
+    let mut out = SweepResult::default();
+    for slot in cells {
+        out.cells.push(slot.expect("missing sweep cell")?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_result_best_and_csv() {
+        let mut r = SweepResult::default();
+        for (m, s, rel) in [(2, 5, 0.9), (14, 55, 0.3), (20, 100, 0.5)] {
+            r.cells.push(SweepCell {
+                m,
+                s,
+                mean_rel_train: rel,
+                mean_rel_test: rel + 0.05,
+                final_train: 1e-3,
+                final_test: 2e-3,
+                events: 10,
+                wall_secs: 1.0,
+            });
+        }
+        let best = r.best().unwrap();
+        assert_eq!((best.m, best.s), (14, 55));
+        let dir = std::env::temp_dir().join("dmdtrain_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("grid.csv");
+        r.write_csv(&path).unwrap();
+        let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(header[0], "m");
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1][0], 14.0);
+    }
+}

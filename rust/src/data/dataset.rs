@@ -1,0 +1,286 @@
+//! On-disk dataset format + epoch batching.
+//!
+//! Binary layout (little endian), magic `DMDT`, version 1:
+//!
+//! ```text
+//! [4]  magic "DMDT"        [u32] version
+//! [u32] n_train  [u32] n_test  [u32] n_in  [u32] n_out
+//! [n_in × 2 f32] input scaling (lo, hi pairs)
+//! [2 f32]        output scaling (lo, hi)
+//! [n_train·n_in f32]  x_train (scaled, row-major)
+//! [n_train·n_out f32] y_train
+//! [n_test·n_in f32]   x_test
+//! [n_test·n_out f32]  y_test
+//! ```
+//!
+//! Stored data is already scaled; [`Scaling`] is kept for inverse maps.
+
+use super::scaling::Scaling;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DMDT";
+const VERSION: u32 = 1;
+
+/// A train/test regression dataset (scaled).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x_train: Tensor,
+    pub y_train: Tensor,
+    pub x_test: Tensor,
+    pub y_test: Tensor,
+    pub scaling: Scaling,
+}
+
+impl Dataset {
+    /// Assemble from *raw* (unscaled) data: fits scaling on the train
+    /// split, applies it to both splits.
+    pub fn from_raw(
+        x_train: Tensor,
+        y_train: Tensor,
+        x_test: Tensor,
+        y_test: Tensor,
+    ) -> Dataset {
+        let scaling = Scaling::fit(&x_train, &y_train);
+        Dataset {
+            x_train: scaling.scale_inputs(&x_train),
+            y_train: scaling.scale_outputs(&y_train),
+            x_test: scaling.scale_inputs(&x_test),
+            y_test: scaling.scale_outputs(&y_test),
+            scaling,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.x_train.rows()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.x_test.rows()
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.x_train.cols()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.y_train.cols()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        f.write_all(MAGIC)?;
+        for v in [
+            VERSION,
+            self.n_train() as u32,
+            self.n_test() as u32,
+            self.n_in() as u32,
+            self.n_out() as u32,
+        ] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for &(lo, hi) in &self.scaling.in_ranges {
+            f.write_all(&lo.to_le_bytes())?;
+            f.write_all(&hi.to_le_bytes())?;
+        }
+        f.write_all(&self.scaling.out_range.0.to_le_bytes())?;
+        f.write_all(&self.scaling.out_range.1.to_le_bytes())?;
+        for t in [&self.x_train, &self.y_train, &self.x_test, &self.y_test] {
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Dataset> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(&path).map_err(|e| {
+            anyhow::anyhow!("dataset {}: {e}", path.as_ref().display())
+        })?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a DMDT dataset");
+        let mut u32buf = [0u8; 4];
+        let mut read_u32 = |f: &mut dyn Read| -> anyhow::Result<u32> {
+            f.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        let version = read_u32(&mut f)?;
+        anyhow::ensure!(version == VERSION, "unsupported dataset version {version}");
+        let n_train = read_u32(&mut f)? as usize;
+        let n_test = read_u32(&mut f)? as usize;
+        let n_in = read_u32(&mut f)? as usize;
+        let n_out = read_u32(&mut f)? as usize;
+
+        let read_f32s = |f: &mut dyn Read, count: usize| -> anyhow::Result<Vec<f32>> {
+            let mut bytes = vec![0u8; count * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let ranges_flat = read_f32s(&mut f, n_in * 2)?;
+        let in_ranges: Vec<(f32, f32)> = ranges_flat
+            .chunks_exact(2)
+            .map(|c| (c[0], c[1]))
+            .collect();
+        let out_flat = read_f32s(&mut f, 2)?;
+        let scaling = Scaling {
+            in_ranges,
+            out_range: (out_flat[0], out_flat[1]),
+        };
+        let x_train = Tensor::from_vec(n_train, n_in, read_f32s(&mut f, n_train * n_in)?);
+        let y_train = Tensor::from_vec(n_train, n_out, read_f32s(&mut f, n_train * n_out)?);
+        let x_test = Tensor::from_vec(n_test, n_in, read_f32s(&mut f, n_test * n_in)?);
+        let y_test = Tensor::from_vec(n_test, n_out, read_f32s(&mut f, n_test * n_out)?);
+        Ok(Dataset {
+            x_train,
+            y_train,
+            x_test,
+            y_test,
+            scaling,
+        })
+    }
+}
+
+/// Epoch batcher: shuffled fixed-size batches (the HLO has a static batch
+/// dimension, so a trailing partial batch is dropped; with the paper's
+/// full-batch setup batch == n_train and nothing is dropped).
+pub struct Batcher {
+    batch: usize,
+    order: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize) -> anyhow::Result<Batcher> {
+        anyhow::ensure!(batch >= 1 && batch <= n, "batch {batch} vs n {n}");
+        Ok(Batcher {
+            batch,
+            order: (0..n).collect(),
+        })
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    /// Shuffle and return the epoch's batches as index slices. With
+    /// batch == n the single batch is identity-ordered (full-batch mode,
+    /// deterministic like the paper's full-dataset epochs).
+    pub fn epoch(&mut self, rng: &mut Rng) -> Vec<Vec<usize>> {
+        if self.batch < self.order.len() {
+            rng.shuffle(&mut self.order);
+        }
+        self.order
+            .chunks_exact(self.batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Gather rows of (x, y) into batch tensors.
+    pub fn gather(x: &Tensor, y: &Tensor, idx: &[usize]) -> (Tensor, Tensor) {
+        let bx = Tensor::from_fn(idx.len(), x.cols(), |r, c| x.get(idx[r], c));
+        let by = Tensor::from_fn(idx.len(), y.cols(), |r, c| y.get(idx[r], c));
+        (bx, by)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dataset() -> Dataset {
+        let x_train = Tensor::from_fn(8, 2, |r, c| (r * 2 + c) as f32);
+        let y_train = Tensor::from_fn(8, 3, |r, c| (r + c) as f32 * 0.5);
+        let x_test = Tensor::from_fn(2, 2, |r, c| (r + c) as f32);
+        let y_test = Tensor::from_fn(2, 3, |r, c| (r * c) as f32);
+        Dataset::from_raw(x_train, y_train, x_test, y_test)
+    }
+
+    #[test]
+    fn from_raw_scales_train_into_unit_box() {
+        let d = tiny_dataset();
+        for &v in d.x_train.data() {
+            assert!((-1.0..=1.0).contains(&v));
+        }
+        for &v in d.y_train.data() {
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = tiny_dataset();
+        let dir = std::env::temp_dir().join("dmdtrain_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.dmdt");
+        d.save(&path).unwrap();
+        let loaded = Dataset::load(&path).unwrap();
+        assert_eq!(loaded.x_train, d.x_train);
+        assert_eq!(loaded.y_train, d.y_train);
+        assert_eq!(loaded.x_test, d.x_test);
+        assert_eq!(loaded.y_test, d.y_test);
+        assert_eq!(loaded.scaling, d.scaling);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("dmdtrain_ds_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.dmdt");
+        std::fs::write(&path, b"NOPEnope").unwrap();
+        assert!(Dataset::load(&path).is_err());
+    }
+
+    #[test]
+    fn batcher_full_batch_identity() {
+        let mut b = Batcher::new(8, 8).unwrap();
+        let mut rng = Rng::new(0);
+        let batches = b.epoch(&mut rng);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0], (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batcher_minibatch_covers_everything_once() {
+        let mut b = Batcher::new(9, 3);
+        let b = b.as_mut().unwrap();
+        let mut rng = Rng::new(1);
+        let batches = b.epoch(&mut rng);
+        assert_eq!(batches.len(), 3);
+        let mut all: Vec<usize> = batches.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batcher_drops_partial_tail() {
+        let mut b = Batcher::new(10, 4).unwrap();
+        let mut rng = Rng::new(2);
+        assert_eq!(b.batches_per_epoch(), 2);
+        assert_eq!(b.epoch(&mut rng).len(), 2);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let x = Tensor::from_fn(4, 2, |r, _| r as f32);
+        let y = Tensor::from_fn(4, 1, |r, _| (10 * r) as f32);
+        let (bx, by) = Batcher::gather(&x, &y, &[2, 0]);
+        assert_eq!(bx.get(0, 0), 2.0);
+        assert_eq!(bx.get(1, 0), 0.0);
+        assert_eq!(by.get(0, 0), 20.0);
+    }
+
+    #[test]
+    fn batcher_validates() {
+        assert!(Batcher::new(4, 0).is_err());
+        assert!(Batcher::new(4, 5).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Dataset pipeline: Latin-hypercube sampling of the six uncertain
+//! physical parameters, feature/target scaling, the on-disk dataset
+//! format, and epoch batching (DESIGN.md S7).
+
+mod dataset;
+mod lhs;
+mod scaling;
+
+pub use dataset::{Batcher, Dataset};
+pub use lhs::latin_hypercube;
+pub use scaling::Scaling;

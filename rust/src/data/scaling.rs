@@ -1,0 +1,129 @@
+//! Feature/target scaling (paper §4: "Both input and output are scaled
+//! and normalized to convenient ranges of the activation function").
+//!
+//! Inputs: per-feature affine map from the sampling range to [-1, 1]
+//! (soft-sign's responsive region). Targets: one global affine map from
+//! the training-set min/max to [-1, 1] — global (not per-output) so the
+//! relative magnitudes of the 2670 field values stay physical.
+
+use crate::tensor::Tensor;
+
+/// Invertible affine scaling for a dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scaling {
+    /// Per-input-feature (lo, hi).
+    pub in_ranges: Vec<(f32, f32)>,
+    /// Global output (lo, hi).
+    pub out_range: (f32, f32),
+}
+
+fn fwd(v: f32, lo: f32, hi: f32) -> f32 {
+    if hi > lo {
+        2.0 * (v - lo) / (hi - lo) - 1.0
+    } else {
+        0.0
+    }
+}
+
+fn inv(v: f32, lo: f32, hi: f32) -> f32 {
+    lo + (v + 1.0) * 0.5 * (hi - lo)
+}
+
+impl Scaling {
+    /// Fit from raw inputs (per-feature min/max) and raw targets (global
+    /// min/max). Fit on the *training* rows only to avoid test leakage.
+    pub fn fit(x_train: &Tensor, y_train: &Tensor) -> Scaling {
+        let mut in_ranges = Vec::with_capacity(x_train.cols());
+        for c in 0..x_train.cols() {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for r in 0..x_train.rows() {
+                let v = x_train.get(r, c);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            in_ranges.push((lo, hi));
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in y_train.data() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        Scaling {
+            in_ranges,
+            out_range: (lo, hi),
+        }
+    }
+
+    pub fn scale_inputs(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.in_ranges.len());
+        Tensor::from_fn(x.rows(), x.cols(), |r, c| {
+            let (lo, hi) = self.in_ranges[c];
+            fwd(x.get(r, c), lo, hi)
+        })
+    }
+
+    pub fn scale_outputs(&self, y: &Tensor) -> Tensor {
+        let (lo, hi) = self.out_range;
+        Tensor::from_fn(y.rows(), y.cols(), |r, c| fwd(y.get(r, c), lo, hi))
+    }
+
+    pub fn unscale_outputs(&self, y: &Tensor) -> Tensor {
+        let (lo, hi) = self.out_range;
+        Tensor::from_fn(y.rows(), y.cols(), |r, c| inv(y.get(r, c), lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_and_scale_inputs_to_unit_box() {
+        let x = Tensor::from_vec(3, 2, vec![1.0, -10.0, 3.0, 0.0, 2.0, 10.0]);
+        let y = Tensor::from_vec(3, 1, vec![0.0, 5.0, 10.0]);
+        let s = Scaling::fit(&x, &y);
+        assert_eq!(s.in_ranges, vec![(1.0, 3.0), (-10.0, 10.0)]);
+        let xs = s.scale_inputs(&x);
+        assert_eq!(xs.get(0, 0), -1.0);
+        assert_eq!(xs.get(1, 0), 1.0);
+        assert_eq!(xs.get(2, 0), 0.0);
+        assert!(xs.data().iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn output_roundtrip() {
+        let x = Tensor::from_vec(2, 1, vec![0.0, 1.0]);
+        let y = Tensor::from_vec(2, 3, vec![0.0, 2.0, 7.5, 1.0, 3.0, 10.0]);
+        let s = Scaling::fit(&x, &y);
+        assert_eq!(s.out_range, (0.0, 10.0));
+        let ys = s.scale_outputs(&y);
+        let back = s.unscale_outputs(&ys);
+        for (a, b) in back.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_feature_maps_to_zero() {
+        let x = Tensor::from_vec(2, 1, vec![4.0, 4.0]);
+        let y = Tensor::from_vec(2, 1, vec![1.0, 2.0]);
+        let s = Scaling::fit(&x, &y);
+        let xs = s.scale_inputs(&x);
+        assert_eq!(xs.get(0, 0), 0.0);
+        assert_eq!(xs.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn test_rows_can_exceed_unit_box() {
+        // scaling is fit on train; test rows outside the range just map
+        // outside [-1,1] — must not panic.
+        let x = Tensor::from_vec(2, 1, vec![0.0, 1.0]);
+        let y = Tensor::from_vec(2, 1, vec![0.0, 1.0]);
+        let s = Scaling::fit(&x, &y);
+        let x_test = Tensor::from_vec(1, 1, vec![2.0]);
+        let xs = s.scale_inputs(&x_test);
+        assert_eq!(xs.get(0, 0), 3.0);
+    }
+}

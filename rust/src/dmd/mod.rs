@@ -1,0 +1,26 @@
+//! Dynamic Mode Decomposition engine — the paper's core contribution
+//! (§3, Algorithm 1).
+//!
+//! Per layer ℓ: collect `m` flattened weight snapshots during ordinary
+//! backpropagation, identify the principal directions with the *low-cost
+//! SVD* (eigendecomposition of the (m-1)×(m-1) Gram matrix instead of an
+//! O(n²m) SVD), build the reduced Koopman operator
+//! `Ã = Σ⁻¹Vᵀ(W₋ᵀW₊)VΣ⁻¹` (eq. 3), eigendecompose it (eq. 4), and
+//! extrapolate the weights `s` optimizer steps ahead along the retained
+//! modes (eq. 5). The new weights are written back into the network and
+//! backpropagation resumes.
+//!
+//! Implementation note (DESIGN.md §5): nothing of size n×r is ever
+//! materialized. The projected-DMD modes `Φ = U_r Y` (with the POD basis
+//! `U_r = W₋ V Σ⁻¹`, the paper's eq. after (4)) are applied implicitly —
+//! projections become `m`-dim Gram products against the snapshot columns
+//! and the final state is a [`crate::linalg::gram::combine`] over `W₋`.
+//! Total cost ~`n(3m² + r²)` flops, the paper's estimate.
+
+mod engine;
+mod parallel;
+mod snapshots;
+
+pub use engine::{dmd_extrapolate, flops_estimate, DmdOutcome};
+pub use parallel::{extrapolate_all_layers, LayerOutcome};
+pub use snapshots::SnapshotBuffer;

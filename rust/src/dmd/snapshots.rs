@@ -1,0 +1,144 @@
+//! Per-layer snapshot ring buffer (the paper's snapshot matrix `W^{ℓ,m}`).
+//!
+//! One column per optimizer step, each the layer's flattened weights+bias.
+//! Storage is f32 (matching the network); all reductions over it happen
+//! with f64 accumulators in `linalg::gram`.
+
+/// Fixed-capacity snapshot buffer for one layer.
+#[derive(Clone, Debug)]
+pub struct SnapshotBuffer {
+    capacity: usize,
+    cols: Vec<Vec<f32>>,
+    /// Optimizer step at which each column was recorded.
+    steps: Vec<usize>,
+}
+
+impl SnapshotBuffer {
+    /// `capacity` = the paper's `m` (snapshots per DMD fit).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 2, "DMD needs at least 2 snapshots (m ≥ 2)");
+        SnapshotBuffer {
+            capacity,
+            cols: Vec::with_capacity(capacity),
+            steps: Vec::with_capacity(capacity),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.cols.len() == self.capacity
+    }
+
+    /// Record a snapshot. Panics if already full — Algorithm 1 always
+    /// clears after the DMD jump.
+    pub fn push(&mut self, step: usize, weights: &[f32]) {
+        assert!(!self.is_full(), "snapshot buffer overflow");
+        if let Some(first) = self.cols.first() {
+            assert_eq!(first.len(), weights.len(), "snapshot length changed");
+        }
+        self.cols.push(weights.to_vec());
+        self.steps.push(step);
+    }
+
+    /// Reuse the oldest column's allocation when refilling after a clear.
+    pub fn clear(&mut self) {
+        self.cols.clear();
+        self.steps.clear();
+    }
+
+    /// Borrow all columns, oldest first.
+    pub fn columns(&self) -> Vec<&[f32]> {
+        self.cols.iter().map(|c| c.as_slice()).collect()
+    }
+
+    pub fn last(&self) -> Option<&[f32]> {
+        self.cols.last().map(|c| c.as_slice())
+    }
+
+    pub fn last_step(&self) -> Option<usize> {
+        self.steps.last().copied()
+    }
+
+    /// Snapshot dimension n (0 when empty).
+    pub fn dim(&self) -> usize {
+        self.cols.first().map_or(0, |c| c.len())
+    }
+
+    /// Memory footprint in bytes (for the trainer's accounting).
+    pub fn bytes(&self) -> usize {
+        self.cols.iter().map(|c| c.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut b = SnapshotBuffer::new(3);
+        assert!(b.is_empty());
+        for k in 0..3 {
+            assert!(!b.is_full());
+            b.push(k, &[k as f32, 1.0]);
+        }
+        assert!(b.is_full());
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.dim(), 2);
+        assert_eq!(b.last_step(), Some(2));
+        assert_eq!(b.last(), Some(&[2.0f32, 1.0][..]));
+    }
+
+    #[test]
+    fn columns_in_order() {
+        let mut b = SnapshotBuffer::new(4);
+        for k in 0..4 {
+            b.push(10 + k, &[k as f32]);
+        }
+        let cols = b.columns();
+        assert_eq!(cols.len(), 4);
+        for (k, c) in cols.iter().enumerate() {
+            assert_eq!(c[0], k as f32);
+        }
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut b = SnapshotBuffer::new(2);
+        b.push(0, &[1.0]);
+        b.push(1, &[2.0]);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.bytes(), 0);
+        b.push(5, &[3.0]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut b = SnapshotBuffer::new(2);
+        for k in 0..3 {
+            b.push(k, &[0.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length changed")]
+    fn dimension_change_panics() {
+        let mut b = SnapshotBuffer::new(3);
+        b.push(0, &[0.0, 1.0]);
+        b.push(1, &[0.0]);
+    }
+}

@@ -1,0 +1,54 @@
+//! # dmdtrain — DMD-accelerated neural-network training
+//!
+//! Reproduction of *"Accelerating Training in Artificial Neural Networks
+//! with Dynamic Mode Decomposition"* (Tano, Portwood & Ragusa, 2020) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the training coordinator: Adam optimizer,
+//!   per-layer weight-snapshot ring buffers, the DMD engine (low-cost SVD
+//!   via the Gram matrix → reduced Koopman operator → eigen-extrapolation,
+//!   paper §3 / Algorithm 1), per-layer parallel DMD dispatch, the
+//!   pollutant-dispersion PDE data generator (paper §4 / Appendix 1), the
+//!   sensitivity-sweep coordinator (Fig 3) and the CLI.
+//! * **Layer 2 (python/compile, build-time)** — the regression DNN
+//!   (6→40→200→1000→2670, soft-sign) lowered via `jax.jit(...).lower` to
+//!   HLO text, loaded here through [`runtime`] (PJRT CPU client).
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels
+//!   (fused dense + soft-sign, Gram products) called from the Layer-2
+//!   graph, validated against pure-jnp oracles.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! compute graphs once; the `dmdtrain` binary is self-contained after.
+//!
+//! Crate map (see DESIGN.md for the paper-to-module inventory):
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`tensor`] | dense row-major f32/f64 matrices |
+//! | [`linalg`] | matmul/Gram, Jacobi symmetric eig, complex Schur eig |
+//! | [`dmd`] | snapshots, low-cost SVD, reduced Koopman, extrapolation |
+//! | [`optim`] | Adam, SGD, per-weight extrapolation baseline |
+//! | [`model`] | MLP architecture, Xavier init, HLO parameter packing |
+//! | [`data`] | Latin-hypercube sampling, dataset format, scaling |
+//! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
+//! | [`runtime`] | PJRT client, HLO-text artifacts, manifest |
+//! | [`trainer`] | Algorithm 1 driver: backprop + DMD hooks + metrics |
+//! | [`coordinator`] | (m, s) sensitivity sweeps across worker threads |
+//! | [`cli`], [`config`] | hand-rolled argv parser and TOML-subset config |
+//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates |
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dmd;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod pde;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,222 @@
+//! Small dense complex matrices (DMD operators: r ≤ m ≤ ~20) with LU
+//! solve — used for the Koopman eigenvector back-transforms and the
+//! least-squares mode-amplitude projection.
+
+use super::complex::Cplx;
+
+/// Dense row-major complex matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<Cplx>,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CMat {
+            rows,
+            cols,
+            data: vec![Cplx::ZERO; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = CMat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, Cplx::ONE);
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> Cplx) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        CMat { rows, cols, data }
+    }
+
+    /// Promote a real matrix.
+    pub fn from_real(m: &crate::tensor::Mat) -> Self {
+        CMat::from_fn(m.rows(), m.cols(), |r, c| Cplx::real(m.get(r, c)))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> Cplx {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: Cplx) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn col(&self, c: usize) -> Vec<Cplx> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Conjugate (Hermitian) transpose.
+    pub fn hermitian(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |r, c| self.get(c, r).conj())
+    }
+
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = CMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.get(i, k);
+                if aik.re == 0.0 && aik.im == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let v = out.get(i, j) + aik * other.get(k, j);
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[Cplx]) -> Vec<Cplx> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|r| {
+                let mut acc = Cplx::ZERO;
+                for c in 0..self.cols {
+                    acc += self.get(r, c) * v[c];
+                }
+                acc
+            })
+            .collect()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|z| z.abs()).fold(0.0, f64::max)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|z| z.is_finite())
+    }
+
+    /// Solve A x = b via LU with partial pivoting. A must be square.
+    pub fn solve(&self, b: &[Cplx]) -> anyhow::Result<Vec<Cplx>> {
+        anyhow::ensure!(self.rows == self.cols, "solve: non-square {:?}", self.shape());
+        anyhow::ensure!(self.rows == b.len(), "solve: rhs length mismatch");
+        let n = self.rows;
+        let mut lu = self.clone();
+        let mut x: Vec<Cplx> = b.to_vec();
+        let mut perm: Vec<usize> = (0..n).collect();
+
+        for k in 0..n {
+            // partial pivot
+            let (mut pi, mut pmax) = (k, lu.get(k, k).abs());
+            for r in k + 1..n {
+                let a = lu.get(r, k).abs();
+                if a > pmax {
+                    pi = r;
+                    pmax = a;
+                }
+            }
+            anyhow::ensure!(pmax > 1e-300, "solve: singular matrix at pivot {k}");
+            if pi != k {
+                for c in 0..n {
+                    let (a, b2) = (lu.get(k, c), lu.get(pi, c));
+                    lu.set(k, c, b2);
+                    lu.set(pi, c, a);
+                }
+                perm.swap(k, pi);
+                x.swap(k, pi);
+            }
+            let pivot = lu.get(k, k);
+            for r in k + 1..n {
+                let factor = lu.get(r, k) / pivot;
+                lu.set(r, k, factor);
+                for c in k + 1..n {
+                    let v = lu.get(r, c) - factor * lu.get(k, c);
+                    lu.set(r, c, v);
+                }
+                let xv = x[r] - factor * x[k];
+                x[r] = xv;
+            }
+        }
+        // back substitution
+        for r in (0..n).rev() {
+            let mut acc = x[r];
+            for c in r + 1..n {
+                acc = acc - lu.get(r, c) * x[c];
+            }
+            x[r] = acc / lu.get(r, r);
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(re: f64, im: f64) -> Cplx {
+        Cplx::new(re, im)
+    }
+
+    #[test]
+    fn solve_identity() {
+        let i = CMat::eye(4);
+        let b = vec![c(1.0, 2.0), c(3.0, -1.0), c(0.0, 0.5), c(-2.0, 0.0)];
+        let x = i.solve(&b).unwrap();
+        for (got, want) in x.iter().zip(&b) {
+            assert!((*got - *want).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn solve_roundtrip_random() {
+        let mut rng = crate::rng::Rng::new(17);
+        for n in [1usize, 2, 5, 12] {
+            let a = CMat::from_fn(n, n, |_, _| c(rng.normal(), rng.normal()));
+            let x_true: Vec<Cplx> = (0..n).map(|_| c(rng.normal(), rng.normal())).collect();
+            let b = a.matvec(&x_true);
+            let x = a.solve(&b).unwrap();
+            for (got, want) in x.iter().zip(&x_true) {
+                assert!((*got - *want).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_singular_errors() {
+        let a = CMat::zeros(3, 3);
+        assert!(a.solve(&[Cplx::ONE; 3]).is_err());
+    }
+
+    #[test]
+    fn hermitian_conjugates() {
+        let a = CMat::from_fn(2, 3, |r, cc| c(r as f64, cc as f64));
+        let h = a.hermitian();
+        assert_eq!(h.shape(), (3, 2));
+        assert_eq!(h.get(2, 1), c(1.0, -2.0));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = CMat::from_fn(3, 3, |r, cc| c((r + cc) as f64, (r * cc) as f64));
+        let prod = a.matmul(&CMat::eye(3));
+        assert_eq!(prod, a);
+    }
+}

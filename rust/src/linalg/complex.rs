@@ -1,0 +1,192 @@
+//! Minimal complex-scalar arithmetic (no external crates offline).
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub};
+
+/// A complex number, f64 parts.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Cplx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cplx {
+    pub const ZERO: Cplx = Cplx { re: 0.0, im: 0.0 };
+    pub const ONE: Cplx = Cplx { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Cplx { re, im }
+    }
+
+    pub fn real(re: f64) -> Self {
+        Cplx { re, im: 0.0 }
+    }
+
+    pub fn conj(self) -> Self {
+        Cplx::new(self.re, -self.im)
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// |z|² without the square root.
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    pub fn sqrt(self) -> Self {
+        // principal branch
+        let r = self.abs();
+        let re = ((r + self.re) / 2.0).sqrt();
+        let im = ((r - self.re) / 2.0).sqrt();
+        Cplx::new(re, if self.im >= 0.0 { im } else { -im })
+    }
+
+    /// z^k for integer k ≥ 0 via polar form (stable for large k — this is
+    /// the Λ^{s-m} of DMD eq. (5), where s-m can be ~100).
+    pub fn powi(self, k: u32) -> Self {
+        if k == 0 {
+            return Cplx::ONE;
+        }
+        let r = self.abs();
+        if r == 0.0 {
+            return Cplx::ZERO;
+        }
+        let theta = self.arg() * k as f64;
+        let rk = r.powi(k as i32);
+        Cplx::new(rk * theta.cos(), rk * theta.sin())
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl Add for Cplx {
+    type Output = Cplx;
+    fn add(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for Cplx {
+    fn add_assign(&mut self, o: Cplx) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for Cplx {
+    type Output = Cplx;
+    fn sub(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Cplx {
+    type Output = Cplx;
+    fn mul(self, o: Cplx) -> Cplx {
+        Cplx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl MulAssign for Cplx {
+    fn mul_assign(&mut self, o: Cplx) {
+        *self = *self * o;
+    }
+}
+
+impl Mul<f64> for Cplx {
+    type Output = Cplx;
+    fn mul(self, s: f64) -> Cplx {
+        Cplx::new(self.re * s, self.im * s)
+    }
+}
+
+impl Div for Cplx {
+    type Output = Cplx;
+    fn div(self, o: Cplx) -> Cplx {
+        // Smith's algorithm for robustness against overflow.
+        if o.re.abs() >= o.im.abs() {
+            let r = o.im / o.re;
+            let d = o.re + o.im * r;
+            Cplx::new((self.re + self.im * r) / d, (self.im - self.re * r) / d)
+        } else {
+            let r = o.re / o.im;
+            let d = o.re * r + o.im;
+            Cplx::new((self.re * r + self.im) / d, (self.im * r - self.re) / d)
+        }
+    }
+}
+
+impl Neg for Cplx {
+    type Output = Cplx;
+    fn neg(self) -> Cplx {
+        Cplx::new(-self.re, -self.im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Cplx, b: Cplx) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn mul_i_squared_is_minus_one() {
+        let i = Cplx::new(0.0, 1.0);
+        assert!(close(i * i, Cplx::real(-1.0)));
+    }
+
+    #[test]
+    fn div_inverse() {
+        let z = Cplx::new(3.0, -4.0);
+        assert!(close(z / z, Cplx::ONE));
+        let w = Cplx::new(-1.5, 0.25);
+        assert!(close((z / w) * w, z));
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        for &(re, im) in &[(4.0, 0.0), (-1.0, 0.0), (3.0, 4.0), (0.5, -2.0)] {
+            let z = Cplx::new(re, im);
+            let s = z.sqrt();
+            assert!(close(s * s, z), "sqrt({z:?}) = {s:?}");
+        }
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        let z = Cplx::new(0.9, 0.3);
+        let mut acc = Cplx::ONE;
+        for k in 0..20 {
+            assert!((z.powi(k) - acc).abs() < 1e-10, "k={k}");
+            acc *= z;
+        }
+    }
+
+    #[test]
+    fn powi_large_exponent_decay() {
+        // |z| < 1 → z^200 ~ 0 without overflow/NaN.
+        let z = Cplx::new(0.95, 0.05);
+        let p = z.powi(200);
+        assert!(p.is_finite());
+        assert!(p.abs() < 1e-3);
+    }
+
+    #[test]
+    fn abs_and_conj() {
+        let z = Cplx::new(3.0, 4.0);
+        assert_eq!(z.abs(), 5.0);
+        assert!(close(z * z.conj(), Cplx::real(25.0)));
+    }
+}

@@ -1,0 +1,198 @@
+//! Cyclic-Jacobi eigensolver for real symmetric matrices.
+//!
+//! This is the m×m eigenproblem of the paper's *low-cost SVD*: instead of
+//! an O(n²m) SVD of the tall snapshot matrix `W (n×m)`, form the Gram
+//! matrix `G = WᵀW (m×m)` in O(nm²) and diagonalize it here in O(m³):
+//! `G = V Σ² Vᵀ`. Jacobi is the right tool at this size — unconditionally
+//! convergent, and its eigenvalue accuracy on symmetric PSD matrices is
+//! what lets the σᵢ/σ₀ filter tolerance (paper: 1e-10) be meaningful.
+
+use crate::tensor::Mat;
+
+/// Eigendecomposition of a symmetric matrix: `a = V diag(λ) Vᵀ`.
+///
+/// Returns `(λ, V)` with eigenvalues sorted **descending** and
+/// eigenvectors in the corresponding columns of `V`.
+pub fn eig_sym(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows(), a.cols(), "eig_sym: non-square");
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    if n <= 1 {
+        return (if n == 1 { vec![m.get(0, 0)] } else { vec![] }, v);
+    }
+
+    let scale = m.frobenius().max(1e-300);
+    let tol = 1e-15 * scale;
+    // cyclic sweeps over all (p, q) pairs
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                off += m.get(p, q).abs();
+            }
+        }
+        if off < tol {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // rotation angle
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // apply rotation: rows/cols p and q
+                for k in 0..n {
+                    let akp = m.get(k, p);
+                    let akq = m.get(k, q);
+                    m.set(k, p, c * akp - s * akq);
+                    m.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = m.get(p, k);
+                    let aqk = m.get(q, k);
+                    m.set(p, k, c * apk - s * aqk);
+                    m.set(q, k, s * apk + c * aqk);
+                }
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    // extract + sort descending
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let evals: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    let mut evecs = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            evecs.set(r, new_col, v.get(r, old_col));
+        }
+    }
+    (evals, evecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in r..n {
+                let v = rng.normal();
+                a.set(r, c, v);
+                a.set(c, r, v);
+            }
+        }
+        a
+    }
+
+    fn check_decomposition(a: &Mat, evals: &[f64], v: &Mat, tol: f64) {
+        let n = a.rows();
+        // A v_i = λ_i v_i
+        for i in 0..n {
+            let vi = v.col(i);
+            let av = a.matvec(&vi);
+            for r in 0..n {
+                assert!(
+                    (av[r] - evals[i] * vi[r]).abs() < tol,
+                    "residual at eigpair {i}: {} vs {}",
+                    av[r],
+                    evals[i] * vi[r]
+                );
+            }
+        }
+        // VᵀV = I
+        let vtv = v.transpose().matmul(v);
+        assert!(vtv.max_diff(&Mat::eye(n)) < tol, "V not orthogonal");
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_fn(3, 3, |r, c| if r == c { (3 - r) as f64 } else { 0.0 });
+        let (evals, v) = eig_sym(&a);
+        assert_eq!(evals, vec![3.0, 2.0, 1.0]);
+        check_decomposition(&a, &evals, &v, 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 3, 1
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (evals, v) = eig_sym(&a);
+        assert!((evals[0] - 3.0).abs() < 1e-12);
+        assert!((evals[1] - 1.0).abs() < 1e-12);
+        check_decomposition(&a, &evals, &v, 1e-12);
+    }
+
+    #[test]
+    fn random_matrices_decompose() {
+        let mut rng = Rng::new(23);
+        for n in [1usize, 2, 3, 5, 10, 20] {
+            let a = random_symmetric(n, &mut rng);
+            let (evals, v) = eig_sym(&a);
+            check_decomposition(&a, &evals, &v, 1e-9);
+            // sorted descending
+            for w in evals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_eigenvalues() {
+        let mut rng = Rng::new(31);
+        let b = Mat::from_fn(30, 8, |_, _| rng.normal());
+        let g = b.transpose().matmul(&b);
+        let (evals, _) = eig_sym(&g);
+        for &l in &evals {
+            assert!(l > -1e-9, "PSD eigenvalue went negative: {l}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(5);
+        let a = random_symmetric(12, &mut rng);
+        let (evals, _) = eig_sym(&a);
+        let trace: f64 = (0..12).map(|i| a.get(i, i)).sum();
+        let sum: f64 = evals.iter().sum();
+        assert!((trace - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_gram() {
+        // Gram of a rank-2 matrix: eigenvalues beyond 2 are ~0.
+        let mut rng = Rng::new(77);
+        let u1: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let u2: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        // columns are combinations of u1, u2
+        let b = Mat::from_fn(40, 6, |r, c| (c as f64 + 1.0) * u1[r] + (c as f64).sin() * u2[r]);
+        let g = b.transpose().matmul(&b);
+        let (evals, _) = eig_sym(&g);
+        assert!(evals[0] > 1.0);
+        for &l in &evals[2..] {
+            assert!(l.abs() < 1e-8 * evals[0], "rank-2 Gram eigenvalue: {l}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch linear algebra for the DMD core (DESIGN.md S2).
+//!
+//! Sized for the paper's regime: snapshot counts `m ≤ ~20`, retained ranks
+//! `r ≤ m`, so the dense eigen-solvers here are O(m³) on tiny matrices; the
+//! only O(n·) work is the Gram-product family in [`gram`], which streams
+//! over flattened layer weights (n up to 2.67 M) with f64 accumulators.
+//!
+//! * [`complex`] — `Cplx` scalar arithmetic.
+//! * [`cmat`] — small dense complex matrices + LU solve (mode projection).
+//! * [`gram`] — Gram/cross-Gram/combine products over f32 snapshot columns.
+//! * [`jacobi`] — cyclic-Jacobi symmetric eigensolver (the m×m SVD step).
+//! * [`schur`] — Hessenberg reduction + complex shifted-QR Schur form.
+//! * [`eig`] — eigenvalues/eigenvectors of small real nonsymmetric
+//!   matrices (the reduced Koopman operator, eq. 4).
+
+pub mod cmat;
+pub mod complex;
+pub mod eig;
+pub mod gram;
+pub mod jacobi;
+pub mod schur;
+
+pub use cmat::CMat;
+pub use complex::Cplx;

@@ -1,0 +1,337 @@
+//! Complex Schur decomposition of small real matrices.
+//!
+//! The reduced Koopman operator `Ã` (paper eq. 3) is a small (r ≤ m ≤ ~20)
+//! real *non-symmetric* matrix whose eigenvalues come in complex pairs —
+//! those are exactly the oscillatory weight-evolution modes DMD tracks.
+//! Pipeline: real Householder Hessenberg reduction, then complex
+//! single-shift (Wilkinson) QR iteration with deflation, accumulating the
+//! unitary similarity so that `A = Z T Zᴴ` with `T` upper triangular.
+
+use super::cmat::CMat;
+use super::complex::Cplx;
+use crate::tensor::Mat;
+
+/// Householder reduction to upper Hessenberg form: `A = Q H Qᵀ`.
+///
+/// Returns `(H, Q)` with `Q` orthogonal and `H` zero below the first
+/// subdiagonal.
+pub fn hessenberg(a: &Mat) -> (Mat, Mat) {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut h = a.clone();
+    let mut q = Mat::eye(n);
+
+    for k in 0..n.saturating_sub(2) {
+        // Householder vector for column k, rows k+1..n
+        let mut x: Vec<f64> = (k + 1..n).map(|r| h.get(r, k)).collect();
+        let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if x[0] >= 0.0 { -norm } else { norm };
+        x[0] -= alpha;
+        let vnorm2: f64 = x.iter().map(|v| v * v).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+
+        // H := P H P with P = I - 2 v vᵀ / (vᵀv) acting on rows/cols k+1..n
+        // left multiply: rows k+1..n
+        for c in 0..n {
+            let dot: f64 = (0..x.len()).map(|i| x[i] * h.get(k + 1 + i, c)).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in 0..x.len() {
+                let v = h.get(k + 1 + i, c) - f * x[i];
+                h.set(k + 1 + i, c, v);
+            }
+        }
+        // right multiply: cols k+1..n
+        for r in 0..n {
+            let dot: f64 = (0..x.len()).map(|i| x[i] * h.get(r, k + 1 + i)).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in 0..x.len() {
+                let v = h.get(r, k + 1 + i) - f * x[i];
+                h.set(r, k + 1 + i, v);
+            }
+        }
+        // accumulate Q := Q P
+        for r in 0..n {
+            let dot: f64 = (0..x.len()).map(|i| x[i] * q.get(r, k + 1 + i)).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in 0..x.len() {
+                let v = q.get(r, k + 1 + i) - f * x[i];
+                q.set(r, k + 1 + i, v);
+            }
+        }
+        // clean the column below the subdiagonal
+        h.set(k + 1, k, alpha);
+        for r in k + 2..n {
+            h.set(r, k, 0.0);
+        }
+    }
+    (h, q)
+}
+
+/// Complex Schur form of a real square matrix: `A = Z T Zᴴ`.
+///
+/// Returns `(T, Z)` — `T` upper triangular (eigenvalues on the diagonal),
+/// `Z` unitary.
+pub fn schur(a: &Mat) -> anyhow::Result<(CMat, CMat)> {
+    let n = a.rows();
+    anyhow::ensure!(n == a.cols(), "schur: non-square {:?}", a.shape());
+    if n == 0 {
+        return Ok((CMat::zeros(0, 0), CMat::zeros(0, 0)));
+    }
+    let (h_real, q_real) = hessenberg(a);
+    let mut t = CMat::from_real(&h_real);
+    let mut z = CMat::from_real(&q_real);
+
+    let eps = 1e-15;
+    let max_iters = 60 * n.max(1);
+    let mut hi = n - 1;
+    let mut iters_at_block = 0;
+
+    'outer: loop {
+        // deflate converged 1x1 trailing blocks
+        while hi > 0 {
+            let sub = t.get(hi, hi - 1).abs();
+            let diag = t.get(hi - 1, hi - 1).abs() + t.get(hi, hi).abs();
+            if sub <= eps * diag.max(1e-300) {
+                t.set(hi, hi - 1, Cplx::ZERO);
+                hi -= 1;
+                iters_at_block = 0;
+            } else {
+                break;
+            }
+        }
+        if hi == 0 {
+            break 'outer;
+        }
+        // find the start of the active unreduced block
+        let mut lo = hi;
+        while lo > 0 {
+            let sub = t.get(lo, lo - 1).abs();
+            let diag = t.get(lo - 1, lo - 1).abs() + t.get(lo, lo).abs();
+            if sub <= eps * diag.max(1e-300) {
+                t.set(lo, lo - 1, Cplx::ZERO);
+                break;
+            }
+            lo -= 1;
+        }
+
+        iters_at_block += 1;
+        anyhow::ensure!(
+            iters_at_block <= max_iters,
+            "schur: QR iteration failed to converge (block {lo}..{hi})"
+        );
+
+        // Wilkinson shift from the trailing 2x2 of the active block;
+        // occasional exceptional shift to break symmetry cycles.
+        let shift = if iters_at_block % 20 == 0 {
+            Cplx::real(t.get(hi, hi - 1).abs() + t.get(hi - 1, hi - 2.min(hi - 1)).abs())
+        } else {
+            let a11 = t.get(hi - 1, hi - 1);
+            let a12 = t.get(hi - 1, hi);
+            let a21 = t.get(hi, hi - 1);
+            let a22 = t.get(hi, hi);
+            let tr = a11 + a22;
+            let det = a11 * a22 - a12 * a21;
+            let disc = (tr * tr - det * 4.0).sqrt();
+            let l1 = (tr + disc) * 0.5;
+            let l2 = (tr - disc) * 0.5;
+            if (l1 - a22).abs() < (l2 - a22).abs() {
+                l1
+            } else {
+                l2
+            }
+        };
+
+        // Explicit single-shift QR sweep on the active block (à la EISPACK
+        // comqr): B = T - σI, factor B = QR with a chain of Givens
+        // rotations, form RQ, then add σ back. T' = Qᴴ T Q.
+        for i in lo..=hi {
+            let v = t.get(i, i) - shift;
+            t.set(i, i, v);
+        }
+        // Left sweep: G_k zeroes the subdiagonal (k+1, k).
+        let mut rot: Vec<(Cplx, Cplx)> = Vec::with_capacity(hi - lo);
+        for k in lo..hi {
+            let x = t.get(k, k);
+            let y = t.get(k + 1, k);
+            let norm = (x.abs2() + y.abs2()).sqrt();
+            let (c, s) = if norm < 1e-300 {
+                (Cplx::ONE, Cplx::ZERO)
+            } else {
+                (x * (1.0 / norm), y * (1.0 / norm))
+            };
+            rot.push((c, s));
+            // rows k, k+1; every column from k to the right edge (rows of
+            // the active block couple to already-deflated columns too)
+            for col in k..n {
+                let tk = t.get(k, col);
+                let tk1 = t.get(k + 1, col);
+                t.set(k, col, c.conj() * tk + s.conj() * tk1);
+                t.set(k + 1, col, (-s) * tk + c * tk1);
+            }
+        }
+        // Right sweep (RQ): apply G_kᴴ to columns k, k+1 — rows 0..=k+1
+        // (R is upper triangular; rows above lo couple to the block).
+        for (j, &(c, s)) in rot.iter().enumerate() {
+            let k = lo + j;
+            for row in 0..=(k + 1).min(n - 1) {
+                let tk = t.get(row, k);
+                let tk1 = t.get(row, k + 1);
+                t.set(row, k, tk * c + tk1 * s);
+                t.set(row, k + 1, tk * (-s.conj()) + tk1 * c.conj());
+            }
+            for row in 0..n {
+                let zk = z.get(row, k);
+                let zk1 = z.get(row, k + 1);
+                z.set(row, k, zk * c + zk1 * s);
+                z.set(row, k + 1, zk * (-s.conj()) + zk1 * c.conj());
+            }
+        }
+        for i in lo..=hi {
+            let v = t.get(i, i) + shift;
+            t.set(i, i, v);
+        }
+    }
+    // zero strictly-lower entries (numerical dust)
+    for r in 1..n {
+        for c in 0..r {
+            t.set(r, c, Cplx::ZERO);
+        }
+    }
+    Ok((t, z))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn reconstruct(t: &CMat, z: &CMat) -> CMat {
+        z.matmul(t).matmul(&z.hermitian())
+    }
+
+    fn assert_reconstructs(a: &Mat, tol: f64) {
+        let (t, z) = schur(a).unwrap();
+        let n = a.rows();
+        // unitary Z
+        let ztz = z.hermitian().matmul(&z);
+        for r in 0..n {
+            for c in 0..n {
+                let want = if r == c { Cplx::ONE } else { Cplx::ZERO };
+                assert!(
+                    (ztz.get(r, c) - want).abs() < tol,
+                    "Z not unitary at ({r},{c})"
+                );
+            }
+        }
+        // A = Z T Zᴴ
+        let rec = reconstruct(&t, &z);
+        for r in 0..n {
+            for c in 0..n {
+                assert!(
+                    (rec.get(r, c) - Cplx::real(a.get(r, c))).abs() < tol,
+                    "reconstruction off at ({r},{c}): {:?} vs {}",
+                    rec.get(r, c),
+                    a.get(r, c)
+                );
+            }
+        }
+        // T upper triangular
+        for r in 1..n {
+            for c in 0..r {
+                assert_eq!(t.get(r, c), Cplx::ZERO);
+            }
+        }
+    }
+
+    #[test]
+    fn hessenberg_reconstructs() {
+        let mut rng = Rng::new(3);
+        let a = Mat::from_fn(8, 8, |_, _| rng.normal());
+        let (h, q) = hessenberg(&a);
+        // zero below subdiagonal
+        for r in 2..8 {
+            for c in 0..r - 1 {
+                assert!(h.get(r, c).abs() < 1e-12);
+            }
+        }
+        // Q orthogonal
+        let qtq = q.transpose().matmul(&q);
+        assert!(qtq.max_diff(&Mat::eye(8)) < 1e-12);
+        // A = Q H Qᵀ
+        let rec = q.matmul(&h).matmul(&q.transpose());
+        assert!(rec.max_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn schur_rotation_matrix_complex_eigs() {
+        // 2D rotation: eigenvalues e^{±iθ}
+        let theta: f64 = 0.7;
+        let a = Mat::from_vec(
+            2,
+            2,
+            vec![theta.cos(), -theta.sin(), theta.sin(), theta.cos()],
+        );
+        let (t, _z) = schur(&a).unwrap();
+        let mut eigs = vec![t.get(0, 0), t.get(1, 1)];
+        eigs.sort_by(|a, b| b.im.partial_cmp(&a.im).unwrap());
+        assert!((eigs[0] - Cplx::new(theta.cos(), theta.sin())).abs() < 1e-10);
+        assert!((eigs[1] - Cplx::new(theta.cos(), -theta.sin())).abs() < 1e-10);
+        assert_reconstructs(&a, 1e-9);
+    }
+
+    #[test]
+    fn schur_upper_triangular_input() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 1.0, 2.0, 0.0, 2.0, 5.0, 0.0, 0.0, 1.0]);
+        let (t, _z) = schur(&a).unwrap();
+        let mut eigs: Vec<f64> = (0..3).map(|i| t.get(i, i).re).collect();
+        eigs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        assert!((eigs[0] - 3.0).abs() < 1e-10);
+        assert!((eigs[1] - 2.0).abs() < 1e-10);
+        assert!((eigs[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn schur_random_matrices_reconstruct() {
+        let mut rng = Rng::new(41);
+        for n in [1usize, 2, 3, 4, 6, 10, 16, 20] {
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            assert_reconstructs(&a, 1e-8);
+        }
+    }
+
+    #[test]
+    fn schur_defective_jordan_block() {
+        // Jordan block: repeated eigenvalue 2 with a single eigenvector.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 0.0, 2.0]);
+        let (t, _z) = schur(&a).unwrap();
+        assert!((t.get(0, 0).re - 2.0).abs() < 1e-8);
+        assert!((t.get(1, 1).re - 2.0).abs() < 1e-8);
+        assert_reconstructs(&a, 1e-8);
+    }
+
+    #[test]
+    fn schur_near_identity_dmd_regime() {
+        // DMD Koopman operators are near-identity (weights evolve slowly):
+        // I + small perturbation must converge cleanly.
+        let mut rng = Rng::new(55);
+        for n in [4usize, 8, 14] {
+            let mut a = Mat::eye(n);
+            for r in 0..n {
+                for c in 0..n {
+                    let v = a.get(r, c) + 0.01 * rng.normal();
+                    a.set(r, c, v);
+                }
+            }
+            assert_reconstructs(&a, 1e-8);
+            let (t, _) = schur(&a).unwrap();
+            for i in 0..n {
+                assert!((t.get(i, i) - Cplx::ONE).abs() < 0.2);
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! `dmdtrain` — leader entrypoint.
+//!
+//! Subcommands:
+//!   datagen  — generate the pollutant-dispersion dataset (paper §4)
+//!   train    — one Algorithm-1 training run (DMD on/off via config)
+//!   sweep    — Fig-3 (m, s) sensitivity sweep
+//!   predict  — evaluate a checkpoint on a dataset
+//!   info     — show artifacts / dataset / architecture details
+
+use dmdtrain::cli::Args;
+use dmdtrain::config::{Config, DatagenConfig, SweepConfig, TrainConfig, Value};
+use dmdtrain::coordinator::run_sweep;
+use dmdtrain::data::Dataset;
+use dmdtrain::pde::generate_dataset;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::trainer::{load_params, save_params, Trainer};
+use dmdtrain::util;
+
+const USAGE: &str = "\
+dmdtrain — DMD-accelerated neural-network training (Tano et al. 2020)
+
+USAGE: dmdtrain <subcommand> [--flags]
+
+  datagen  --config <toml> [--samples N --obs N --out path --workers N]
+  train    --config <toml> [--dmd true|false --m N --s N --epochs N
+                            --artifact NAME --dataset PATH --seed N
+                            --out-dir DIR --save-checkpoint PATH]
+  sweep    --config <toml> [--workers N --epochs N --out PATH]
+  predict  --checkpoint PATH --dataset PATH [--artifact NAME]
+  info     [--artifacts DIR]
+
+Config files: configs/*.toml (see configs/paper.toml).";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "datagen" => cmd_datagen(&args),
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "predict" => cmd_predict(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Load the config file (if any) and overlay CLI overrides.
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::parse("")?,
+    };
+    // CLI overrides (flat flag → config key)
+    for (flag, key) in [
+        ("dataset", "data.path"),
+        ("artifact", "model.artifact"),
+        ("out-dir", "train.out_dir"),
+        ("projection", "dmd.projection"),
+        ("out", "data.path"),
+    ] {
+        if let Some(v) = args.str_opt(flag) {
+            cfg.set(key, Value::Str(v.to_string()));
+        }
+    }
+    for (flag, key) in [
+        ("epochs", "train.epochs"),
+        ("m", "dmd.m"),
+        ("s", "dmd.s"),
+        ("seed", "train.seed"),
+        ("samples", "data.n_samples"),
+        ("obs", "data.n_obs"),
+        ("workers", "sweep.workers"),
+        ("eval-every", "train.eval_every"),
+        ("log-every", "train.log_every"),
+    ] {
+        if let Some(v) = args.str_opt(flag) {
+            cfg.set(key, Value::Int(v.parse()?));
+        }
+    }
+    if let Some(v) = args.str_opt("dmd") {
+        cfg.set("dmd.enabled", Value::Bool(v == "true" || v == "1"));
+    }
+    if let Some(v) = args.str_opt("lr") {
+        cfg.set("adam.lr", Value::Float(v.parse()?));
+    }
+    Ok(cfg)
+}
+
+fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let dg = DatagenConfig::from_config(&cfg);
+    let workers = args.usize_or("workers", num_threads())?;
+    eprintln!(
+        "datagen: {} samples on {}×{} grid, {} observation points → {}",
+        dg.n_samples, dg.nx, dg.ny, dg.n_obs, dg.out
+    );
+    let report = generate_dataset(&dg, workers)?;
+    println!(
+        "wrote {} train + {} test rows × {} outputs in {:.1}s (mean Picard iters {:.1})",
+        report.n_train, report.n_test, report.n_obs, report.wall_secs, report.mean_picard_iters
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let tc = TrainConfig::from_config(&cfg)?;
+    let ds = Dataset::load(&tc.dataset)?;
+    let runtime = Runtime::cpu(Runtime::default_artifact_dir())?;
+    eprintln!(
+        "train: artifact={} dmd={:?} epochs={} platform={}",
+        tc.artifact,
+        tc.dmd.as_ref().map(|d| (d.m, d.s)),
+        tc.epochs,
+        runtime.platform()
+    );
+    let out_dir = tc.out_dir.clone();
+    let mut trainer = Trainer::new(&runtime, tc)?;
+    let report = trainer.run(&ds)?;
+
+    std::fs::create_dir_all(&out_dir)?;
+    report
+        .history
+        .write_csv(format!("{out_dir}/loss_history.csv"))?;
+    report
+        .dmd_stats
+        .write_csv(format!("{out_dir}/dmd_events.csv"))?;
+    std::fs::write(format!("{out_dir}/profile.txt"), report.profile.table())?;
+    if let Some(path) = args.str_opt("save-checkpoint") {
+        save_params(&report.final_params, path)?;
+    }
+    println!(
+        "final train MSE {}  test MSE {}  ({} epochs in {:.1}s, {} DMD events, mean rel {} train / {} test)",
+        util::fmt_f64(report.history.final_train().unwrap_or(f64::NAN)),
+        util::fmt_f64(report.history.final_test().unwrap_or(f64::NAN)),
+        report.epochs_run,
+        report.wall_secs,
+        report.dmd_stats.events.len(),
+        util::fmt_f64(report.dmd_stats.mean_rel_train()),
+        util::fmt_f64(report.dmd_stats.mean_rel_test()),
+    );
+    println!("\nprofile:\n{}", report.profile.table());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let sc = SweepConfig::from_config(&cfg)?;
+    let ds = Dataset::load(&sc.base.dataset)?;
+    let out = args.str_or("out", "runs/sweep/grid.csv");
+    eprintln!(
+        "sweep: {}×{} grid, {} epochs per cell, {} workers",
+        sc.m_values.len(),
+        sc.s_values.len(),
+        sc.epochs,
+        sc.workers
+    );
+    let result = run_sweep(&Runtime::default_artifact_dir(), &sc, &ds, true)?;
+    result.write_csv(&out)?;
+    if let Some(best) = result.best() {
+        println!(
+            "best cell: m={} s={} mean_rel_train={} (paper: m=14, s=55)",
+            best.m,
+            best.s,
+            util::fmt_f64(best.mean_rel_train)
+        );
+    }
+    println!("grid written to {out}");
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let ckpt = args.require("checkpoint")?;
+    let params = load_params(ckpt)?;
+    let ds = Dataset::load(cfg.require_str("data.path")?)?;
+    let artifact = cfg.str_or("model.artifact", "paper");
+    let runtime = Runtime::cpu(Runtime::default_artifact_dir())?;
+    let exe = runtime.load(&format!("predict_{artifact}"))?;
+    let train_mse = exe.mse_all(&params, &ds.x_train, &ds.y_train)?;
+    let test_mse = exe.mse_all(&params, &ds.x_test, &ds.y_test)?;
+    println!(
+        "checkpoint {ckpt}: train MSE {}  test MSE {}",
+        util::fmt_f64(train_mse),
+        util::fmt_f64(test_mse)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .str_opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Runtime::default_artifact_dir);
+    let runtime = Runtime::cpu(&dir)?;
+    println!("platform: {}", runtime.platform());
+    println!("artifacts in {}:", dir.display());
+    for name in runtime.manifest().names() {
+        let e = runtime.manifest().get(name).unwrap();
+        println!(
+            "  {:<24} kind={:<10} kernel={:<6} arch={:?} batch={}",
+            e.name, e.kind, e.kernel, e.arch, e.batch
+        );
+    }
+    Ok(())
+}
+
+fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}

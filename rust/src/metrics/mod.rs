@@ -1,0 +1,208 @@
+//! Training metrics: loss history, DMD-event statistics (the paper's
+//! "mean relative improvement" of Fig 3), and CSV/JSONL export.
+
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One recorded evaluation point.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub epoch: usize,
+    pub train_mse: f64,
+    /// NaN when not evaluated this epoch.
+    pub test_mse: f64,
+    /// 1.0 if this epoch ended with a DMD jump, else 0.0.
+    pub dmd_event: f64,
+}
+
+/// Loss history of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct LossHistory {
+    pub points: Vec<LossPoint>,
+}
+
+impl LossHistory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: LossPoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_train(&self) -> Option<f64> {
+        self.points.last().map(|p| p.train_mse)
+    }
+
+    pub fn final_test(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .rev()
+            .find(|p| p.test_mse.is_finite())
+            .map(|p| p.test_mse)
+    }
+
+    /// Minimum train MSE seen.
+    pub fn best_train(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.train_mse)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(path, &["epoch", "train_mse", "test_mse", "dmd_event"])?;
+        for p in &self.points {
+            w.row(&[p.epoch as f64, p.train_mse, p.test_mse, p.dmd_event])?;
+        }
+        w.flush()
+    }
+
+    /// Loss-reduction factor of `self` vs `other` at the final epoch —
+    /// the paper's "two decades" headline is `other/self ≈ 100`.
+    pub fn improvement_vs(&self, other: &LossHistory) -> Option<f64> {
+        Some(other.final_train()? / self.final_train()?)
+    }
+}
+
+/// Per-DMD-event record: the relative error the jump produced
+/// (paper Fig 3 metric: MSE after the DMD process / MSE before).
+#[derive(Clone, Copy, Debug)]
+pub struct DmdEvent {
+    pub epoch: usize,
+    pub rel_train: f64,
+    pub rel_test: f64,
+    /// Wall time of the DMD solve across all layers (seconds).
+    pub solve_secs: f64,
+    /// Total retained rank across layers.
+    pub total_rank: usize,
+}
+
+/// Aggregates DMD events over a run.
+#[derive(Clone, Debug, Default)]
+pub struct DmdStats {
+    pub events: Vec<DmdEvent>,
+}
+
+impl DmdStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, e: DmdEvent) {
+        self.events.push(e);
+    }
+
+    /// Unweighted mean of per-event relative errors (Fig 3 z-axis).
+    pub fn mean_rel_train(&self) -> f64 {
+        mean(self.events.iter().map(|e| e.rel_train))
+    }
+
+    pub fn mean_rel_test(&self) -> f64 {
+        mean(self.events.iter().map(|e| e.rel_test))
+    }
+
+    pub fn total_solve_secs(&self) -> f64 {
+        self.events.iter().map(|e| e.solve_secs).sum()
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["epoch", "rel_train", "rel_test", "solve_secs", "total_rank"],
+        )?;
+        for e in &self.events {
+            w.row(&[
+                e.epoch as f64,
+                e.rel_train,
+                e.rel_test,
+                e.solve_secs,
+                e.total_rank as f64,
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+fn mean(iter: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut count) = (0.0, 0usize);
+    for v in iter {
+        if v.is_finite() {
+            sum += v;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        f64::NAN
+    } else {
+        sum / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(epoch: usize, train: f64, test: f64) -> LossPoint {
+        LossPoint {
+            epoch,
+            train_mse: train,
+            test_mse: test,
+            dmd_event: 0.0,
+        }
+    }
+
+    #[test]
+    fn history_finals() {
+        let mut h = LossHistory::new();
+        h.push(pt(0, 1.0, 1.1));
+        h.push(pt(1, 0.5, f64::NAN));
+        assert_eq!(h.final_train(), Some(0.5));
+        assert_eq!(h.final_test(), Some(1.1));
+        assert_eq!(h.best_train(), Some(0.5));
+    }
+
+    #[test]
+    fn improvement_factor() {
+        let mut fast = LossHistory::new();
+        fast.push(pt(0, 0.01, f64::NAN));
+        let mut slow = LossHistory::new();
+        slow.push(pt(0, 1.0, f64::NAN));
+        assert_eq!(fast.improvement_vs(&slow), Some(100.0));
+    }
+
+    #[test]
+    fn dmd_stats_means_skip_nan() {
+        let mut s = DmdStats::new();
+        s.push(DmdEvent {
+            epoch: 14,
+            rel_train: 0.5,
+            rel_test: f64::NAN,
+            solve_secs: 0.1,
+            total_rank: 10,
+        });
+        s.push(DmdEvent {
+            epoch: 28,
+            rel_train: 0.3,
+            rel_test: 0.4,
+            solve_secs: 0.2,
+            total_rank: 12,
+        });
+        assert!((s.mean_rel_train() - 0.4).abs() < 1e-12);
+        assert!((s.mean_rel_test() - 0.4).abs() < 1e-12);
+        assert!((s.total_solve_secs() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dmdtrain_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("loss.csv");
+        let mut h = LossHistory::new();
+        h.push(pt(0, 1.0, 2.0));
+        h.write_csv(&path).unwrap();
+        let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(header[0], "epoch");
+        assert_eq!(rows[0][1], 1.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Model definition on the Rust side: architecture, Xavier init, and the
+//! parameter packing conventions shared with the AOT-lowered HLO.
+//!
+//! Calling convention (recorded in artifacts/manifest.json and checked by
+//! the runtime): the flat parameter list is `w1, b1, …, wL, bL` with `wℓ`
+//! of shape (fan_in, fan_out) row-major f32 and `bℓ` of shape (fan_out,).
+//!
+//! DMD flattening (paper: "flattening the weights for layer ℓ"): one
+//! snapshot vector per layer = `[wℓ row-major … , bℓ …]` — weights *and*
+//! bias evolve under the same per-layer reduced Koopman operator.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// MLP architecture: layer widths input → output (paper:
+/// `[6, 40, 200, 1000, 2670]`, soft-sign hidden activations, linear head).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Arch {
+    pub dims: Vec<usize>,
+}
+
+impl Arch {
+    pub fn new(dims: Vec<usize>) -> anyhow::Result<Self> {
+        anyhow::ensure!(dims.len() >= 2, "arch needs ≥ 2 layer widths");
+        anyhow::ensure!(dims.iter().all(|&d| d > 0), "zero-width layer");
+        Ok(Arch { dims })
+    }
+
+    /// The paper's network (§4).
+    pub fn paper() -> Self {
+        Arch {
+            dims: vec![6, 40, 200, 1000, 2670],
+        }
+    }
+
+    /// Number of weight layers L.
+    pub fn num_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// (fan_in, fan_out) of layer ℓ.
+    pub fn layer_shape(&self, layer: usize) -> (usize, usize) {
+        (self.dims[layer], self.dims[layer + 1])
+    }
+
+    /// Flattened per-layer parameter count: fan_in·fan_out + fan_out.
+    pub fn layer_param_count(&self, layer: usize) -> usize {
+        let (fi, fo) = self.layer_shape(layer);
+        fi * fo + fo
+    }
+
+    /// Total trainable parameters (paper: ~2.9 M).
+    pub fn param_count(&self) -> usize {
+        (0..self.num_layers()).map(|l| self.layer_param_count(l)).sum()
+    }
+
+    /// Xavier/Glorot-uniform initialization (paper §2), biases zero.
+    /// Returns the flat `[w1, b1, …]` tensor list.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<Tensor> {
+        let mut params = Vec::with_capacity(2 * self.num_layers());
+        for l in 0..self.num_layers() {
+            let (fi, fo) = self.layer_shape(l);
+            let bound = (6.0 / (fi + fo) as f64).sqrt();
+            let w = Tensor::from_fn(fi, fo, |_, _| rng.uniform_in(-bound, bound) as f32);
+            params.push(w);
+            params.push(Tensor::zeros(1, fo));
+        }
+        params
+    }
+
+    /// Flatten layer ℓ's (w, b) pair into one DMD snapshot vector.
+    pub fn flatten_layer(&self, params: &[Tensor], layer: usize) -> Vec<f32> {
+        let w = &params[2 * layer];
+        let b = &params[2 * layer + 1];
+        let mut out = Vec::with_capacity(w.len() + b.len());
+        out.extend_from_slice(w.data());
+        out.extend_from_slice(b.data());
+        out
+    }
+
+    /// Write a flattened layer vector back into the (w, b) pair.
+    pub fn unflatten_layer(&self, params: &mut [Tensor], layer: usize, flat: &[f32]) {
+        let (fi, fo) = self.layer_shape(layer);
+        assert_eq!(flat.len(), fi * fo + fo, "flat layer size mismatch");
+        params[2 * layer]
+            .data_mut()
+            .copy_from_slice(&flat[..fi * fo]);
+        params[2 * layer + 1]
+            .data_mut()
+            .copy_from_slice(&flat[fi * fo..]);
+    }
+
+    /// Expected parameter-tensor shapes, in HLO argument order.
+    pub fn param_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes = Vec::new();
+        for l in 0..self.num_layers() {
+            let (fi, fo) = self.layer_shape(l);
+            shapes.push((fi, fo));
+            shapes.push((1, fo));
+        }
+        shapes
+    }
+}
+
+/// Pure-Rust forward pass (soft-sign hidden layers, linear head).
+///
+/// This is the *reference oracle* used by tests and by `predict` when the
+/// PJRT runtime is unavailable; the hot path runs the AOT HLO instead.
+pub fn forward(arch: &Arch, params: &[Tensor], x: &Tensor) -> Tensor {
+    assert_eq!(x.cols(), arch.input_dim());
+    let mut h = x.clone();
+    for l in 0..arch.num_layers() {
+        let w = &params[2 * l];
+        let b = &params[2 * l + 1];
+        let (fi, fo) = arch.layer_shape(l);
+        assert_eq!((w.rows(), w.cols()), (fi, fo));
+        let mut z = Tensor::zeros(h.rows(), fo);
+        // z = h w + b
+        for r in 0..h.rows() {
+            let hrow = h.row(r);
+            let zrow = z.row_mut(r);
+            zrow.copy_from_slice(b.row(0));
+            for (k, &hv) in hrow.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = w.row(k);
+                for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                    *zv += hv * wv;
+                }
+            }
+        }
+        if l + 1 < arch.num_layers() {
+            for v in z.data_mut() {
+                *v /= 1.0 + v.abs(); // soft-sign
+            }
+        }
+        h = z;
+    }
+    h
+}
+
+/// MSE loss matching the L2 graph: mean over batch × outputs.
+pub fn mse(pred: &Tensor, target: &Tensor) -> f64 {
+    pred.mse(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_arch_param_count() {
+        let arch = Arch::paper();
+        // 6·40+40 + 40·200+200 + 200·1000+1000 + 1000·2670+2670 = 2_882_150
+        // (paper: "~2.9 × 10⁶ trainable parameters")
+        assert_eq!(arch.param_count(), 2_882_150);
+        assert_eq!(arch.num_layers(), 4);
+    }
+
+    #[test]
+    fn init_shapes_and_bounds() {
+        let arch = Arch::new(vec![3, 5, 2]).unwrap();
+        let mut rng = Rng::new(0);
+        let params = arch.init_params(&mut rng);
+        assert_eq!(params.len(), 4);
+        assert_eq!(params[0].shape(), (3, 5));
+        assert_eq!(params[1].shape(), (1, 5));
+        assert_eq!(params[2].shape(), (5, 2));
+        let bound = (6.0f64 / 8.0).sqrt() as f32;
+        assert!(params[0].data().iter().all(|v| v.abs() <= bound));
+        assert!(params[1].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let arch = Arch::new(vec![4, 3, 2]).unwrap();
+        let mut rng = Rng::new(1);
+        let mut params = arch.init_params(&mut rng);
+        let flat0 = arch.flatten_layer(&params, 0);
+        assert_eq!(flat0.len(), arch.layer_param_count(0));
+        let mut modified = flat0.clone();
+        for v in &mut modified {
+            *v += 1.0;
+        }
+        arch.unflatten_layer(&mut params, 0, &modified);
+        let flat_again = arch.flatten_layer(&params, 0);
+        assert_eq!(flat_again, modified);
+        // layer 1 untouched
+        let f1 = arch.flatten_layer(&params, 1);
+        assert_eq!(f1.len(), 3 * 2 + 2);
+    }
+
+    #[test]
+    fn forward_shapes_and_softsign_bounds() {
+        let arch = Arch::new(vec![2, 8, 3]).unwrap();
+        let mut rng = Rng::new(2);
+        let params = arch.init_params(&mut rng);
+        let x = Tensor::from_fn(5, 2, |_, _| rng.normal() as f32);
+        let y = forward(&arch, &params, &x);
+        assert_eq!(y.shape(), (5, 3));
+        assert!(y.is_finite());
+    }
+
+    #[test]
+    fn forward_known_tiny_network() {
+        // 1→1→1: w1=1, b1=0, w2=2, b2=0.5; x=1 → h=softsign(1)=0.5 → y=1.5
+        let arch = Arch::new(vec![1, 1, 1]).unwrap();
+        let params = vec![
+            Tensor::from_vec(1, 1, vec![1.0]),
+            Tensor::zeros(1, 1),
+            Tensor::from_vec(1, 1, vec![2.0]),
+            Tensor::from_vec(1, 1, vec![0.5]),
+        ];
+        let x = Tensor::from_vec(1, 1, vec![1.0]);
+        let y = forward(&arch, &params, &x);
+        assert!((y.get(0, 0) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linear_head_no_activation() {
+        // big weights → output exceeds 1 (soft-sign would cap at 1)
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let params = vec![
+            Tensor::from_vec(1, 1, vec![10.0]),
+            Tensor::zeros(1, 1),
+        ];
+        let x = Tensor::from_vec(1, 1, vec![1.0]);
+        let y = forward(&arch, &params, &x);
+        assert!((y.get(0, 0) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn arch_validation() {
+        assert!(Arch::new(vec![5]).is_err());
+        assert!(Arch::new(vec![5, 0, 3]).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Adam (Kingma & Ba 2014) — the paper's training optimizer.
+
+use super::Optimizer;
+use crate::config::AdamParams;
+use crate::tensor::Tensor;
+
+/// Adam with per-parameter first/second moments.
+pub struct Adam {
+    p: AdamParams,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(p: AdamParams) -> Self {
+        Adam {
+            p,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &AdamParams {
+        &self.p
+    }
+
+    fn ensure_state(&mut self, params: &[Tensor]) {
+        if self.m.len() != params.len() {
+            self.m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_state(params);
+        self.t += 1;
+        let b1 = self.p.beta1;
+        let b2 = self.p.beta2;
+        // bias-corrected step size
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let alpha = self.p.lr * bc2.sqrt() / bc1;
+        let eps = self.p.eps as f32;
+
+        for (i, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            assert_eq!(param.len(), grad.len(), "param/grad shape mismatch at {i}");
+            let (ms, vs) = (&mut self.m[i], &mut self.v[i]);
+            let pd = param.data_mut();
+            let gd = grad.data();
+            for j in 0..pd.len() {
+                let g = gd[j];
+                ms[j] = (b1 as f32) * ms[j] + (1.0 - b1 as f32) * g;
+                vs[j] = (b2 as f32) * vs[j] + (1.0 - b2 as f32) * g * g;
+                pd[j] -= (alpha as f32) * ms[j] / (vs[j].sqrt() + eps);
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.t = 0;
+        for m in &mut self.m {
+            m.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in &mut self.v {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_grad(params: &[Tensor]) -> Vec<Tensor> {
+        // loss = ||p||²/2 → grad = p
+        params.to_vec()
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut params = vec![Tensor::from_vec(1, 3, vec![5.0, -3.0, 2.0])];
+        let mut opt = Adam::new(AdamParams {
+            lr: 0.1,
+            ..Default::default()
+        });
+        let initial = params[0].norm();
+        for _ in 0..500 {
+            let grads = quadratic_grad(&params);
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].norm() < 0.01 * initial, "norm {}", params[0].norm());
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // Adam's bias correction makes the very first update ≈ lr·sign(g).
+        let mut params = vec![Tensor::from_vec(1, 2, vec![1.0, 1.0])];
+        let grads = vec![Tensor::from_vec(1, 2, vec![0.5, -2.0])];
+        let mut opt = Adam::new(AdamParams {
+            lr: 0.001,
+            ..Default::default()
+        });
+        opt.step(&mut params, &grads);
+        assert!((params[0].get(0, 0) - (1.0 - 0.001)).abs() < 1e-5);
+        assert!((params[0].get(0, 1) - (1.0 + 0.001)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reset_clears_moments() {
+        let mut params = vec![Tensor::from_vec(1, 1, vec![1.0])];
+        let grads = vec![Tensor::from_vec(1, 1, vec![1.0])];
+        let mut opt = Adam::new(AdamParams::default());
+        opt.step(&mut params, &grads);
+        opt.reset();
+        assert_eq!(opt.t, 0);
+        assert_eq!(opt.m[0][0], 0.0);
+        assert_eq!(opt.v[0][0], 0.0);
+    }
+
+    #[test]
+    fn multi_tensor_independent_state() {
+        let mut params = vec![
+            Tensor::from_vec(1, 1, vec![1.0]),
+            Tensor::from_vec(1, 1, vec![1.0]),
+        ];
+        let grads = vec![
+            Tensor::from_vec(1, 1, vec![1.0]),
+            Tensor::from_vec(1, 1, vec![0.0]),
+        ];
+        let mut opt = Adam::new(AdamParams::default());
+        opt.step(&mut params, &grads);
+        assert!(params[0].get(0, 0) < 1.0);
+        assert_eq!(params[1].get(0, 0), 1.0); // zero grad → no move
+    }
+}

@@ -1,0 +1,95 @@
+//! Per-weight extrapolation baseline (paper §2 related work).
+//!
+//! Kamarthi & Pittner (1999) accelerate training by fitting each weight's
+//! trajectory independently and extrapolating toward its converged value.
+//! The paper argues this *breaks the coherent per-layer dynamics* in large
+//! DNNs (citing Hoskins et al. 2019) — unlike DMD, which fits one reduced
+//! operator per layer. We implement the simplest faithful member of that
+//! family: an ordinary-least-squares line fit per weight over the last `m`
+//! snapshots, extrapolated `s` steps ahead. `benches/baseline_extrapolation`
+//! compares it against DMD under identical budgets (experiment E10).
+
+use crate::dmd::SnapshotBuffer;
+
+/// Per-weight line-fit extrapolator sharing the DMD snapshot plumbing.
+pub struct WeightExtrapolation;
+
+impl WeightExtrapolation {
+    /// Extrapolate every weight `steps` ahead with an OLS line fit over
+    /// the buffer's columns. Returns the new flattened weights.
+    pub fn extrapolate(buffer: &SnapshotBuffer, steps: usize) -> anyhow::Result<Vec<f32>> {
+        let cols = buffer.columns();
+        let m = cols.len();
+        anyhow::ensure!(m >= 2, "extrapolation needs ≥ 2 snapshots");
+        let n = cols[0].len();
+
+        // OLS slope/intercept over t = 0..m-1, evaluated at t = m-1+steps.
+        // slope_j = Σ_t (t - t̄)(w_tj - w̄_j) / Σ_t (t - t̄)²
+        let t_mean = (m as f64 - 1.0) / 2.0;
+        let denom: f64 = (0..m).map(|t| (t as f64 - t_mean).powi(2)).sum();
+        let t_eval = (m - 1 + steps) as f64;
+
+        let mut out = vec![0.0f32; n];
+        for j in 0..n {
+            let mut w_mean = 0.0f64;
+            for col in &cols {
+                w_mean += col[j] as f64;
+            }
+            w_mean /= m as f64;
+            let mut num = 0.0f64;
+            for (t, col) in cols.iter().enumerate() {
+                num += (t as f64 - t_mean) * (col[j] as f64 - w_mean);
+            }
+            let slope = num / denom;
+            out[j] = (w_mean + slope * (t_eval - t_mean)) as f32;
+        }
+        anyhow::ensure!(out.iter().all(|v| v.is_finite()), "non-finite extrapolation");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_linear_trajectories() {
+        // w_j(t) = a_j + b_j t is recovered exactly.
+        let mut buf = SnapshotBuffer::new(5);
+        for t in 0..5 {
+            let w: Vec<f32> = (0..4)
+                .map(|j| (j as f32 + 1.0) + (0.5 * j as f32) * t as f32)
+                .collect();
+            buf.push(t, &w);
+        }
+        let out = WeightExtrapolation::extrapolate(&buf, 10).unwrap();
+        for (j, &v) in out.iter().enumerate() {
+            let want = (j as f32 + 1.0) + (0.5 * j as f32) * 14.0;
+            assert!((v - want).abs() < 1e-4, "j={j}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn line_fit_overshoots_geometric_decay() {
+        // The known failure mode vs DMD: a geometric approach to a fixed
+        // point is extrapolated *past* the fixed point by a line fit.
+        let mut buf = SnapshotBuffer::new(6);
+        let mut w = 1.0f32;
+        for t in 0..6 {
+            buf.push(t, &[w]);
+            w *= 0.5; // converging to 0 from above
+        }
+        let out = WeightExtrapolation::extrapolate(&buf, 50).unwrap();
+        assert!(out[0] < 0.0, "line fit should overshoot below 0, got {}", out[0]);
+    }
+
+    #[test]
+    fn zero_steps_is_endpoint_of_fit() {
+        let mut buf = SnapshotBuffer::new(3);
+        for t in 0..3 {
+            buf.push(t, &[t as f32]);
+        }
+        let out = WeightExtrapolation::extrapolate(&buf, 0).unwrap();
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+}

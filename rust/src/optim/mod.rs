@@ -1,0 +1,33 @@
+//! Optimizers. The coordinator owns optimizer state (not the HLO graph) —
+//! that is what exposes the weight stream to the DMD engine without the
+//! extract/assign overhead the paper measured in TensorFlow (their 1.41×).
+//!
+//! * [`Adam`] — the paper's optimizer.
+//! * [`Sgd`] — SGD + momentum (ablation baseline).
+//! * [`WeightExtrapolation`] — per-weight line-fit extrapolation, the
+//!   related-work baseline (§2, Kamarthi & Pittner style) that DMD is
+//!   claimed to beat because per-weight fits "break the coherent
+//!   dynamics" — reproduced in `benches/baseline_extrapolation.rs`.
+
+mod adam;
+mod extrapolate;
+mod sgd;
+
+pub use adam::Adam;
+pub use extrapolate::WeightExtrapolation;
+pub use sgd::Sgd;
+
+use crate::tensor::Tensor;
+
+/// A first-order optimizer over a flat list of parameter tensors.
+pub trait Optimizer {
+    /// Apply one update in place. `grads` aligns with `params`.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]);
+
+    /// Reset internal state (moments, step counter). Called after a DMD
+    /// jump when `reset_on_jump` is configured — ablatable: the paper
+    /// keeps optimizer state implicit (TF), we default to keeping it.
+    fn reset(&mut self);
+
+    fn name(&self) -> &'static str;
+}

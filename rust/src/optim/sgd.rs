@@ -1,0 +1,83 @@
+//! SGD with classical momentum (ablation baseline).
+
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+pub struct Sgd {
+    lr: f64,
+    momentum: f64,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        if self.velocity.len() != params.len() {
+            self.velocity = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+        let (lr, mu) = (self.lr as f32, self.momentum as f32);
+        for ((param, grad), vel) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            let pd = param.data_mut();
+            let gd = grad.data();
+            for j in 0..pd.len() {
+                vel[j] = mu * vel[j] - lr * gd[j];
+                pd[j] += vel[j];
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        for v in &mut self.velocity {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut params = vec![Tensor::from_vec(1, 2, vec![1.0, 2.0])];
+        let grads = vec![Tensor::from_vec(1, 2, vec![0.5, -0.5])];
+        let mut opt = Sgd::new(0.1, 0.0);
+        opt.step(&mut params, &grads);
+        assert!((params[0].get(0, 0) - 0.95).abs() < 1e-7);
+        assert!((params[0].get(0, 1) - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut params = vec![Tensor::from_vec(1, 1, vec![0.0])];
+        let grads = vec![Tensor::from_vec(1, 1, vec![1.0])];
+        let mut opt = Sgd::new(0.1, 0.9);
+        opt.step(&mut params, &grads); // v = -0.1, p = -0.1
+        opt.step(&mut params, &grads); // v = -0.19, p = -0.29
+        assert!((params[0].get(0, 0) + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut params = vec![Tensor::from_vec(1, 1, vec![4.0])];
+        let mut opt = Sgd::new(0.05, 0.9);
+        for _ in 0..300 {
+            let grads = params.clone();
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].get(0, 0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,435 @@
+//! Steady advection–diffusion–reaction solver for the three solutes
+//! (paper eq. 8–9), finite-volume on a structured grid with first-order
+//! upwind convection, Picard linearization of the c₁c₂ coupling, and SOR
+//! inner solves.
+//!
+//! System (physical signs — see [`super`] module docs):
+//!
+//! ```text
+//! ū·∇c₁ − D∇²c₁ + K₁₂ c₁ c₂           = Q₁
+//! ū·∇c₂ − D∇²c₂ + K₁₂ c₁ c₂           = Q₂
+//! ū·∇c₃ − D∇²c₃ + K₃ c₃               = K₁₂ c₁ c₂
+//! ```
+//!
+//! Boundary conditions: inflow (x=0) Dirichlet 0; outflow (x=Lx),
+//! terrain (y=0) and top (y=Ly) zero-gradient.
+
+use super::velocity::VelocityField;
+use super::{LX, LY};
+use crate::tensor::Tensor;
+
+/// The six uncertain parameters of the regression problem (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleParams {
+    pub k12: f64,
+    pub k3: f64,
+    pub d: f64,
+    pub u0: f64,
+    pub uh: f64,
+    pub uv: f64,
+}
+
+impl SampleParams {
+    pub fn nominal() -> Self {
+        SampleParams {
+            k12: 10.0,
+            k3: 1.0,
+            d: 0.1,
+            u0: 1.0,
+            uh: 0.0,
+            uv: 0.0,
+        }
+    }
+
+    pub fn from_slice(v: &[f64]) -> anyhow::Result<Self> {
+        anyhow::ensure!(v.len() == 6, "need 6 parameters, got {}", v.len());
+        Ok(SampleParams {
+            k12: v[0],
+            k3: v[1],
+            d: v[2],
+            u0: v[3],
+            uh: v[4],
+            uv: v[5],
+        })
+    }
+
+    pub fn to_vec(self) -> Vec<f64> {
+        vec![self.k12, self.k3, self.d, self.u0, self.uh, self.uv]
+    }
+}
+
+/// Cell-centered structured grid over [0, LX] × [0, LY].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pub nx: usize,
+    pub ny: usize,
+}
+
+impl Grid {
+    pub fn new(nx: usize, ny: usize) -> Self {
+        assert!(nx >= 4 && ny >= 4, "grid too coarse");
+        Grid { nx, ny }
+    }
+
+    pub fn dx(&self) -> f64 {
+        LX / self.nx as f64
+    }
+
+    pub fn dy(&self) -> f64 {
+        LY / self.ny as f64
+    }
+
+    pub fn x(&self, i: usize) -> f64 {
+        (i as f64 + 0.5) * self.dx()
+    }
+
+    pub fn y(&self, j: usize) -> f64 {
+        (j as f64 + 0.5) * self.dy()
+    }
+
+    pub fn cells(&self) -> usize {
+        self.nx * self.ny
+    }
+}
+
+/// Steady solution fields, each (ny, nx) row-major (row = y index).
+#[derive(Clone, Debug)]
+pub struct AdrSolution {
+    pub grid: Grid,
+    pub c1: Tensor,
+    pub c2: Tensor,
+    pub c3: Tensor,
+    pub picard_iters: usize,
+}
+
+impl AdrSolution {
+    /// Bilinear interpolation of a field at physical (x, y).
+    pub fn sample(field: &Tensor, grid: Grid, x: f64, y: f64) -> f32 {
+        let (dx, dy) = (grid.dx(), grid.dy());
+        let fx = ((x / dx) - 0.5).clamp(0.0, (grid.nx - 1) as f64);
+        let fy = ((y / dy) - 0.5).clamp(0.0, (grid.ny - 1) as f64);
+        let (i0, j0) = (fx as usize, fy as usize);
+        let (i1, j1) = ((i0 + 1).min(grid.nx - 1), (j0 + 1).min(grid.ny - 1));
+        let (wx, wy) = ((fx - i0 as f64) as f32, (fy - j0 as f64) as f32);
+        let v00 = field.get(j0, i0);
+        let v10 = field.get(j0, i1);
+        let v01 = field.get(j1, i0);
+        let v11 = field.get(j1, i1);
+        v00 * (1.0 - wx) * (1.0 - wy)
+            + v10 * wx * (1.0 - wy)
+            + v01 * (1.0 - wx) * wy
+            + v11 * wx * wy
+    }
+}
+
+/// Source terms Q₁/Q₂ (paper eq. 9): emission disks near the chimney.
+fn q1(x: f64, y: f64) -> f64 {
+    if (x - 0.1).powi(2) + (y - 0.1).powi(2) < 0.25 {
+        0.1
+    } else {
+        0.0
+    }
+}
+
+fn q2(x: f64, y: f64) -> f64 {
+    if (x - 0.1).powi(2) + (y - 0.3).powi(2) < 0.25 {
+        0.1
+    } else {
+        0.0
+    }
+}
+
+/// The finite-volume ADR solver for one parameter sample.
+pub struct AdrSolver {
+    pub grid: Grid,
+    pub params: SampleParams,
+    /// SOR relaxation factor.
+    pub omega: f64,
+    pub picard_tol: f64,
+    pub max_picard: usize,
+    pub sor_tol: f64,
+    pub max_sor: usize,
+    /// Cached cell-centered velocities.
+    ux: Vec<f64>,
+    uy: Vec<f64>,
+}
+
+impl AdrSolver {
+    pub fn new(grid: Grid, params: SampleParams) -> anyhow::Result<AdrSolver> {
+        let vel = VelocityField::new(params.u0, params.uh, params.uv)?;
+        let mut ux = vec![0.0; grid.cells()];
+        let mut uy = vec![0.0; grid.cells()];
+        for j in 0..grid.ny {
+            for i in 0..grid.nx {
+                let (x, y) = (grid.x(i), grid.y(j));
+                ux[j * grid.nx + i] = vel.ux(x, y);
+                uy[j * grid.nx + i] = vel.uy(x, y);
+            }
+        }
+        Ok(AdrSolver {
+            grid,
+            params,
+            // Tolerances sized for training-data accuracy (f32 targets):
+            // advection-dominated samples make Gauss–Seidel spectral radius
+            // approach 1, so a 1e-9 tolerance would burn the whole sweep
+            // budget on stragglers for ~no information gain.
+            omega: 1.4,
+            picard_tol: 1e-6,
+            max_picard: 30,
+            sor_tol: 1e-7,
+            max_sor: 800,
+            ux,
+            uy,
+        })
+    }
+
+    /// Solve one linear ADR equation with reaction field `k(cell)` and
+    /// source `rhs(cell)` into `c` (initial guess in, solution out).
+    fn solve_linear(&self, k: &[f64], rhs: &[f64], c: &mut [f64]) -> usize {
+        let Grid { nx, ny } = self.grid;
+        let (dx, dy) = (self.grid.dx(), self.grid.dy());
+        let d = self.params.d;
+        let (ax_d, ay_d) = (d / (dx * dx), d / (dy * dy));
+
+        for sweep in 0..self.max_sor {
+            let mut max_delta = 0.0f64;
+            let mut max_c = 1e-30f64;
+            for j in 0..ny {
+                for i in 0..nx {
+                    let idx = j * nx + i;
+                    let (u, v) = (self.ux[idx], self.uy[idx]);
+                    // upwind convective coefficients
+                    let (cw, ce) = (u.max(0.0) / dx, (-u).max(0.0) / dx);
+                    let (cs, cn) = (v.max(0.0) / dy, (-v).max(0.0) / dy);
+
+                    // Neighbour contributions (upwind + diffusion). The
+                    // diagonal always carries the full convective
+                    // throughput |u|/dx + |v|/dy (= cw+ce+cs+cn), so the
+                    // matrix stays an M-matrix at every boundary:
+                    //  - west i=0: Dirichlet 0 → half-cell diffusion 2D/dx²
+                    //  - east/top/terrain: zero-gradient → diffusion drops
+                    let mut num = rhs[idx];
+                    let mut diag = k[idx].max(0.0);
+                    if i > 0 {
+                        num += (ax_d + cw) * c[idx - 1];
+                        diag += ax_d + cw;
+                    } else {
+                        diag += 2.0 * ax_d + cw;
+                    }
+                    if i + 1 < nx {
+                        num += (ax_d + ce) * c[idx + 1];
+                        diag += ax_d + ce;
+                    } else {
+                        diag += ce;
+                    }
+                    if j > 0 {
+                        num += (ay_d + cs) * c[idx - nx];
+                        diag += ay_d + cs;
+                    } else {
+                        diag += cs;
+                    }
+                    if j + 1 < ny {
+                        num += (ay_d + cn) * c[idx + nx];
+                        diag += ay_d + cn;
+                    } else {
+                        diag += cn;
+                    }
+
+                    let c_gs = num / diag.max(1e-30);
+                    let c_new = c[idx] + self.omega * (c_gs - c[idx]);
+                    max_delta = max_delta.max((c_new - c[idx]).abs());
+                    max_c = max_c.max(c_new.abs());
+                    c[idx] = c_new;
+                }
+            }
+            if max_delta < self.sor_tol * max_c {
+                return sweep + 1;
+            }
+        }
+        self.max_sor
+    }
+
+    /// Run Picard iterations to the steady coupled solution.
+    pub fn solve(&self) -> anyhow::Result<AdrSolution> {
+        let Grid { nx, ny } = self.grid;
+        let cells = self.grid.cells();
+        let mut c1 = vec![0.0f64; cells];
+        let mut c2 = vec![0.0f64; cells];
+        let mut c3 = vec![0.0f64; cells];
+
+        let mut q1v = vec![0.0f64; cells];
+        let mut q2v = vec![0.0f64; cells];
+        for j in 0..ny {
+            for i in 0..nx {
+                q1v[j * nx + i] = q1(self.grid.x(i), self.grid.y(j));
+                q2v[j * nx + i] = q2(self.grid.x(i), self.grid.y(j));
+            }
+        }
+
+        let k12 = self.params.k12;
+        let mut iters = 0;
+        for picard in 0..self.max_picard {
+            iters = picard + 1;
+            let c1_old = c1.clone();
+            let c2_old = c2.clone();
+
+            // c1 with reaction K₁₂·c₂ (Picard-frozen)
+            let k_field: Vec<f64> = c2.iter().map(|&c| k12 * c).collect();
+            self.solve_linear(&k_field, &q1v, &mut c1);
+
+            // c2 with reaction K₁₂·c₁ (updated c1 — Gauss–Seidel Picard)
+            let k_field: Vec<f64> = c1.iter().map(|&c| k12 * c).collect();
+            self.solve_linear(&k_field, &q2v, &mut c2);
+
+            let delta: f64 = c1
+                .iter()
+                .zip(&c1_old)
+                .chain(c2.iter().zip(&c2_old))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            let scale: f64 = c1
+                .iter()
+                .chain(c2.iter())
+                .fold(1e-30, |m, &v| m.max(v.abs()));
+            if delta < self.picard_tol * scale {
+                break;
+            }
+        }
+
+        // c3: linear given c1, c2 — production K₁₂c₁c₂, decay K₃
+        let k_field = vec![self.params.k3.max(0.0); cells];
+        let rhs: Vec<f64> = c1
+            .iter()
+            .zip(&c2)
+            .map(|(&a, &b)| k12 * a * b)
+            .collect();
+        self.solve_linear(&k_field, &rhs, &mut c3);
+
+        let to_tensor = |v: &[f64]| {
+            Tensor::from_vec(ny, nx, v.iter().map(|&x| x as f32).collect())
+        };
+        let sol = AdrSolution {
+            grid: self.grid,
+            c1: to_tensor(&c1),
+            c2: to_tensor(&c2),
+            c3: to_tensor(&c3),
+            picard_iters: iters,
+        };
+        anyhow::ensure!(
+            sol.c1.is_finite() && sol.c2.is_finite() && sol.c3.is_finite(),
+            "ADR solver produced non-finite fields"
+        );
+        Ok(sol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_solver(params: SampleParams) -> AdrSolver {
+        AdrSolver::new(Grid::new(32, 16), params).unwrap()
+    }
+
+    fn total(field: &Tensor) -> f64 {
+        field.data().iter().map(|&v| v as f64).sum()
+    }
+
+    #[test]
+    fn fields_nonnegative_and_finite() {
+        let sol = quick_solver(SampleParams::nominal()).solve().unwrap();
+        for f in [&sol.c1, &sol.c2, &sol.c3] {
+            assert!(f.is_finite());
+            assert!(f.data().iter().all(|&v| v >= -1e-6), "negative concentration");
+        }
+        assert!(total(&sol.c3) > 0.0, "no pollutant produced");
+    }
+
+    #[test]
+    fn pollutant_decays_with_k3() {
+        let mut p = SampleParams::nominal();
+        p.k3 = 0.1;
+        let low_decay = quick_solver(p).solve().unwrap();
+        p.k3 = 10.0;
+        let high_decay = quick_solver(p).solve().unwrap();
+        assert!(
+            total(&high_decay.c3) < 0.5 * total(&low_decay.c3),
+            "K₃ should attenuate the pollutant (Fig 2, panel 2)"
+        );
+    }
+
+    #[test]
+    fn advection_pushes_plume_downstream() {
+        let mut p = SampleParams::nominal();
+        p.u0 = 0.05;
+        let slow = quick_solver(p).solve().unwrap();
+        p.u0 = 2.0;
+        let fast = quick_solver(p).solve().unwrap();
+        // centroid of c1 moves right with stronger wind (Fig 2, panel 4)
+        let centroid_x = |sol: &AdrSolution| {
+            let mut num = 0.0;
+            let mut den = 1e-30;
+            for j in 0..sol.grid.ny {
+                for i in 0..sol.grid.nx {
+                    let v = sol.c1.get(j, i) as f64;
+                    num += v * sol.grid.x(i);
+                    den += v;
+                }
+            }
+            num / den
+        };
+        assert!(centroid_x(&fast) > centroid_x(&slow) + 0.05);
+    }
+
+    #[test]
+    fn diffusion_smooths_the_plume() {
+        let mut p = SampleParams::nominal();
+        p.d = 0.01;
+        let sharp = quick_solver(p).solve().unwrap();
+        p.d = 0.5;
+        let smooth = quick_solver(p).solve().unwrap();
+        // peak-to-mean ratio falls with D (Fig 2, panel 3)
+        let peak_ratio = |s: &AdrSolution| {
+            let peak = s.c3.data().iter().cloned().fold(0.0f32, f32::max) as f64;
+            peak / (total(&s.c3) / s.grid.cells() as f64 + 1e-30)
+        };
+        assert!(peak_ratio(&sharp) > peak_ratio(&smooth));
+    }
+
+    #[test]
+    fn k12_concentrates_production_near_source() {
+        let mut p = SampleParams::nominal();
+        p.k12 = 1.0;
+        let weak = quick_solver(p).solve().unwrap();
+        p.k12 = 20.0;
+        let strong = quick_solver(p).solve().unwrap();
+        assert!(
+            total(&strong.c3) > total(&weak.c3),
+            "faster reaction must produce more pollutant overall"
+        );
+    }
+
+    #[test]
+    fn reactants_consumed_by_reaction() {
+        let mut p = SampleParams::nominal();
+        p.k12 = 1.0;
+        let weak = quick_solver(p).solve().unwrap();
+        p.k12 = 20.0;
+        let strong = quick_solver(p).solve().unwrap();
+        assert!(total(&strong.c1) < total(&weak.c1));
+    }
+
+    #[test]
+    fn bilinear_sampling_matches_cells() {
+        let sol = quick_solver(SampleParams::nominal()).solve().unwrap();
+        let g = sol.grid;
+        let v = AdrSolution::sample(&sol.c3, g, g.x(5), g.y(7));
+        assert!((v - sol.c3.get(7, 5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn picard_converges_within_budget() {
+        let sol = quick_solver(SampleParams::nominal()).solve().unwrap();
+        assert!(sol.picard_iters < 60, "Picard used {}", sol.picard_iters);
+    }
+}

@@ -1,0 +1,241 @@
+//! Blasius boundary-layer similarity ODE with slip/blowing wall
+//! conditions (paper eq. 7):
+//!
+//! ```text
+//! 2 f''' + f'' f = 0,   f'(0) = u_h/U₀,   f(0) = −2u_v/√(νU₀),
+//! f'(η → ∞) = 1
+//! ```
+//!
+//! Solved by RK4 integration + secant shooting on f''(0). The wall values
+//! are clamped by the caller ([`super::velocity`]) to the well-posed range.
+
+/// Tabulated similarity solution on a uniform η grid.
+#[derive(Clone, Debug)]
+pub struct BlasiusSolution {
+    pub eta_max: f64,
+    pub d_eta: f64,
+    /// f(η_i)
+    pub f: Vec<f64>,
+    /// f'(η_i)
+    pub fp: Vec<f64>,
+    /// The converged shooting parameter f''(0).
+    pub fpp0: f64,
+}
+
+impl BlasiusSolution {
+    fn lookup(&self, table: &[f64], eta: f64) -> f64 {
+        if eta <= 0.0 {
+            return table[0];
+        }
+        let pos = eta / self.d_eta;
+        let i = pos as usize;
+        if i + 1 >= table.len() {
+            // beyond the table: f' = 1, f grows linearly
+            let last = table.len() - 1;
+            let df = table[last] - table[last - 1];
+            return table[last] + df * (pos - last as f64);
+        }
+        let w = pos - i as f64;
+        table[i] * (1.0 - w) + table[i + 1] * w
+    }
+
+    /// f(η) with linear extrapolation beyond the table (slope → 1 region).
+    pub fn f_at(&self, eta: f64) -> f64 {
+        self.lookup(&self.f, eta)
+    }
+
+    /// f'(η); clamps to the freestream value beyond the table.
+    pub fn fp_at(&self, eta: f64) -> f64 {
+        if eta >= self.eta_max {
+            return *self.fp.last().unwrap();
+        }
+        self.lookup(&self.fp, eta)
+    }
+}
+
+/// RK4 integration of the Blasius system from η=0 to η_max.
+/// State = (f, f', f''). Returns the trajectory (f, f') and final f'.
+fn integrate(f0: f64, fp0: f64, fpp0: f64, eta_max: f64, d_eta: f64) -> (Vec<f64>, Vec<f64>, f64) {
+    let n = (eta_max / d_eta).round() as usize;
+    let mut state = [f0, fp0, fpp0];
+    let mut f_tab = Vec::with_capacity(n + 1);
+    let mut fp_tab = Vec::with_capacity(n + 1);
+    f_tab.push(state[0]);
+    fp_tab.push(state[1]);
+    let deriv = |s: [f64; 3]| [s[1], s[2], -0.5 * s[0] * s[2]];
+    for _ in 0..n {
+        let k1 = deriv(state);
+        let s2 = [
+            state[0] + 0.5 * d_eta * k1[0],
+            state[1] + 0.5 * d_eta * k1[1],
+            state[2] + 0.5 * d_eta * k1[2],
+        ];
+        let k2 = deriv(s2);
+        let s3 = [
+            state[0] + 0.5 * d_eta * k2[0],
+            state[1] + 0.5 * d_eta * k2[1],
+            state[2] + 0.5 * d_eta * k2[2],
+        ];
+        let k3 = deriv(s3);
+        let s4 = [
+            state[0] + d_eta * k3[0],
+            state[1] + d_eta * k3[1],
+            state[2] + d_eta * k3[2],
+        ];
+        let k4 = deriv(s4);
+        for i in 0..3 {
+            state[i] += d_eta / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+        }
+        // bail out on blow-up, preserving the divergence direction so the
+        // shooting bracket keeps a meaningful sign
+        if !state.iter().all(|v| v.is_finite()) {
+            let last = *fp_tab.last().unwrap();
+            return (f_tab, fp_tab, if last >= 1.0 { 1e6 } else { -1e6 });
+        }
+        if state[1].abs() > 100.0 {
+            return (f_tab, fp_tab, state[1].signum() * 1e6);
+        }
+        f_tab.push(state[0]);
+        fp_tab.push(state[1]);
+    }
+    let final_fp = state[1];
+    (f_tab, fp_tab, final_fp)
+}
+
+/// Shooting solve: find f''(0) such that f'(η_max) = 1.
+///
+/// `f0` (blowing) and `fp0` (slip ratio) must be within the well-posed
+/// range — callers clamp; see module docs.
+pub fn solve_blasius(f0: f64, fp0: f64) -> anyhow::Result<BlasiusSolution> {
+    // Shooting is exponentially unstable in η (perturbations grow like
+    // e^{∫f/2}); η_max = 9 balances freestream matching against that
+    // amplification — beyond ~10 the f''(0) sensitivity exceeds machine
+    // precision and bisection can no longer hit the target.
+    let eta_max = 9.0;
+    let d_eta = 0.01;
+    let target = 1.0;
+
+    let shoot = |fpp0: f64| -> f64 {
+        let (_, _, final_fp) = integrate(f0, fp0, fpp0, eta_max, d_eta);
+        final_fp - target
+    };
+
+    // Bracket the root: classical Blasius has f''(0) ≈ 0.4696/√2·…;
+    // slip/suction shifts it, but [-5, 5] covers the clamped BC range.
+    let (mut a, mut b) = (-5.0f64, 5.0f64);
+    let (mut fa, mut fb) = (shoot(a), shoot(b));
+    // expand a downward if needed (strong suction cases)
+    let mut tries = 0;
+    while fa.signum() == fb.signum() && tries < 8 {
+        a *= 2.0;
+        fa = shoot(a);
+        tries += 1;
+    }
+    anyhow::ensure!(
+        fa.signum() != fb.signum(),
+        "blasius shooting: no bracket for f0={f0}, fp0={fp0} (fa={fa}, fb={fb})"
+    );
+
+    // bisection (robust against the 1e9 overflow plateau) then polish
+    for _ in 0..200 {
+        let mid = 0.5 * (a + b);
+        let fm = shoot(mid);
+        if fm == 0.0 || (b - a) < 1e-13 {
+            break;
+        }
+        if fm.signum() == fa.signum() {
+            a = mid;
+            fa = fm;
+        } else {
+            b = mid;
+            fb = fm;
+        }
+    }
+    let _ = fb;
+    let fpp0 = 0.5 * (a + b);
+    let (f, fp, final_fp) = integrate(f0, fp0, fpp0, eta_max, d_eta);
+    // Strong-blowing profiles approach the freestream slowly and the
+    // shooting instability floors the achievable residual; 2e-3 bounds
+    // the freestream velocity error at 0.2 % of U₀.
+    anyhow::ensure!(
+        (final_fp - target).abs() < 2e-3,
+        "blasius shooting did not converge: f'({eta_max}) = {final_fp}"
+    );
+    Ok(BlasiusSolution {
+        eta_max,
+        d_eta,
+        f,
+        fp,
+        fpp0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classical_blasius_wall_shear() {
+        // The paper's ODE "2f''' + f''f = 0" is f''' + ½ f f'' = 0, whose
+        // classical no-slip wall shear is f''(0) ≈ 0.332057 (the familiar
+        // Blasius constant in this normalization).
+        let sol = solve_blasius(0.0, 0.0).unwrap();
+        assert!(
+            (sol.fpp0 - 0.332057).abs() < 1e-4,
+            "f''(0) = {}",
+            sol.fpp0
+        );
+    }
+
+    #[test]
+    fn freestream_recovered() {
+        let sol = solve_blasius(0.0, 0.0).unwrap();
+        assert!((sol.fp_at(8.9) - 1.0).abs() < 2e-3);
+        assert!((sol.fp_at(50.0) - 1.0).abs() < 2e-3);
+    }
+
+    #[test]
+    fn monotone_profile_no_slip() {
+        let sol = solve_blasius(0.0, 0.0).unwrap();
+        for w in sol.fp.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "f' must be monotone for no-slip");
+        }
+        assert_eq!(sol.fp[0], 0.0);
+    }
+
+    #[test]
+    fn slip_wall_condition_honored() {
+        let sol = solve_blasius(0.0, 0.5).unwrap();
+        assert_eq!(sol.fp[0], 0.5);
+        assert!((sol.fp_at(8.5) - 1.0).abs() < 2e-3);
+        // slip reduces the velocity deficit → smaller wall shear
+        let noslip = solve_blasius(0.0, 0.0).unwrap();
+        assert!(sol.fpp0 < noslip.fpp0);
+    }
+
+    #[test]
+    fn suction_thins_blowing_thickens() {
+        let suction = solve_blasius(1.0, 0.0).unwrap(); // f(0) > 0 ⇒ suction
+        let blowing = solve_blasius(-1.0, 0.0).unwrap();
+        let noslip = solve_blasius(0.0, 0.0).unwrap();
+        // wall shear: suction increases it, blowing decreases it
+        assert!(suction.fpp0 > noslip.fpp0);
+        assert!(blowing.fpp0 < noslip.fpp0);
+    }
+
+    #[test]
+    fn negative_slip_converges() {
+        let sol = solve_blasius(0.0, -0.5).unwrap();
+        assert_eq!(sol.fp[0], -0.5);
+        assert!((sol.fp_at(sol.eta_max) - 1.0).abs() < 2e-3);
+    }
+
+    #[test]
+    fn f_at_interpolates_linearly_beyond_table() {
+        let sol = solve_blasius(0.0, 0.0).unwrap();
+        let f10 = sol.f_at(10.0);
+        let f12 = sol.f_at(12.0);
+        // beyond the boundary layer f grows at slope f' = 1 per unit η
+        assert!((f12 - f10 - 2.0).abs() < 1e-2);
+    }
+}

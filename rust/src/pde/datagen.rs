@@ -1,0 +1,168 @@
+//! Dataset generation driver: LHS parameter samples → parallel ADR solves
+//! → observation rows → train/test split → on-disk dataset (paper §4).
+
+use super::adr::{AdrSolver, Grid, SampleParams};
+use super::observe::ObservationSet;
+use crate::config::DatagenConfig;
+use crate::data::{latin_hypercube, Dataset};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Summary of a generation run.
+#[derive(Clone, Debug)]
+pub struct DatagenReport {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub n_obs: usize,
+    pub mean_picard_iters: f64,
+    pub wall_secs: f64,
+}
+
+/// Generate the pollutant-dispersion dataset and write it to
+/// `cfg.out`. Solves are distributed over `workers` OS threads.
+pub fn generate_dataset(cfg: &DatagenConfig, workers: usize) -> anyhow::Result<DatagenReport> {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let ranges = [cfg.k12, cfg.k3, cfg.d, cfg.u0, cfg.uh, cfg.uv];
+    let samples = latin_hypercube(cfg.n_samples, &ranges, &mut rng);
+    let obs = ObservationSet::generate(cfg.n_obs, cfg.seed);
+    let grid = Grid::new(cfg.nx, cfg.ny);
+
+    // Parallel solves: static round-robin partition over worker threads.
+    let workers = workers.max(1).min(cfg.n_samples);
+    let mut rows: Vec<Option<(Vec<f32>, usize)>> = vec![None; cfg.n_samples];
+    let errors = std::sync::Mutex::new(Vec::<String>::new());
+    {
+        let rows_slots: Vec<std::sync::Mutex<&mut Option<(Vec<f32>, usize)>>> =
+            rows.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let samples = &samples;
+                let obs = &obs;
+                let rows_slots = &rows_slots;
+                let errors = &errors;
+                scope.spawn(move || {
+                    for idx in (w..samples.len()).step_by(workers) {
+                        let run = || -> anyhow::Result<(Vec<f32>, usize)> {
+                            let p = SampleParams::from_slice(&samples[idx])?;
+                            let sol = AdrSolver::new(grid, p)?.solve()?;
+                            Ok((obs.observe(&sol), sol.picard_iters))
+                        };
+                        match run() {
+                            Ok(row) => **rows_slots[idx].lock().unwrap() = Some(row),
+                            Err(e) => errors
+                                .lock()
+                                .unwrap()
+                                .push(format!("sample {idx}: {e}")),
+                        }
+                    }
+                });
+            }
+        });
+    }
+    let errs = errors.into_inner().unwrap();
+    anyhow::ensure!(errs.is_empty(), "datagen failures: {}", errs.join("; "));
+
+    let mut picard_sum = 0usize;
+    let mut x_all = Tensor::zeros(cfg.n_samples, 6);
+    let mut y_all = Tensor::zeros(cfg.n_samples, cfg.n_obs);
+    for (i, slot) in rows.into_iter().enumerate() {
+        let (row, iters) = slot.expect("missing row");
+        picard_sum += iters;
+        for (c, &v) in samples[i].iter().enumerate() {
+            x_all.set(i, c, v as f32);
+        }
+        y_all.row_mut(i).copy_from_slice(&row);
+    }
+
+    // shuffled train/test split (paper: 80/20)
+    let mut split_rng = Rng::new(cfg.seed ^ 0x5117_5117);
+    let perm = split_rng.permutation(cfg.n_samples);
+    let n_train = ((cfg.n_samples as f64) * cfg.train_frac).round() as usize;
+    let n_test = cfg.n_samples - n_train;
+    anyhow::ensure!(n_train > 0 && n_test > 0, "degenerate split");
+    let gather = |idx: &[usize], src_x: &Tensor, src_y: &Tensor| {
+        let x = Tensor::from_fn(idx.len(), 6, |r, c| src_x.get(idx[r], c));
+        let y = Tensor::from_fn(idx.len(), cfg.n_obs, |r, c| src_y.get(idx[r], c));
+        (x, y)
+    };
+    let (x_train, y_train) = gather(&perm[..n_train], &x_all, &y_all);
+    let (x_test, y_test) = gather(&perm[n_train..], &x_all, &y_all);
+
+    let ds = Dataset::from_raw(x_train, y_train, x_test, y_test);
+    ds.save(&cfg.out)?;
+
+    Ok(DatagenReport {
+        n_train,
+        n_test,
+        n_obs: cfg.n_obs,
+        mean_picard_iters: picard_sum as f64 / cfg.n_samples as f64,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(out: &str) -> DatagenConfig {
+        DatagenConfig {
+            nx: 24,
+            ny: 12,
+            n_obs: 40,
+            n_samples: 12,
+            train_frac: 0.75,
+            seed: 5,
+            out: out.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generates_and_roundtrips() {
+        let dir = std::env::temp_dir().join("dmdtrain_datagen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("tiny.dmdt");
+        let cfg = tiny_cfg(out.to_str().unwrap());
+        let report = generate_dataset(&cfg, 4).unwrap();
+        assert_eq!(report.n_train, 9);
+        assert_eq!(report.n_test, 3);
+        let ds = Dataset::load(&out).unwrap();
+        assert_eq!(ds.n_train(), 9);
+        assert_eq!(ds.n_test(), 3);
+        assert_eq!(ds.n_in(), 6);
+        assert_eq!(ds.n_out(), 40);
+        // scaled data in the unit box on train
+        assert!(ds.x_train.data().iter().all(|v| (-1.0..=1.0).contains(v)));
+        assert!(ds.y_train.is_finite() && ds.y_test.is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let dir = std::env::temp_dir().join("dmdtrain_datagen_det");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out_a = dir.join("a.dmdt");
+        let out_b = dir.join("b.dmdt");
+        generate_dataset(&tiny_cfg(out_a.to_str().unwrap()), 1).unwrap();
+        generate_dataset(&tiny_cfg(out_b.to_str().unwrap()), 3).unwrap();
+        // different worker counts, identical bytes (static partition is
+        // deterministic and solves are independent)
+        let a = std::fs::read(&out_a).unwrap();
+        let b = std::fs::read(&out_b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn outputs_vary_across_samples() {
+        let dir = std::env::temp_dir().join("dmdtrain_datagen_var");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("v.dmdt");
+        generate_dataset(&tiny_cfg(out.to_str().unwrap()), 4).unwrap();
+        let ds = Dataset::load(&out).unwrap();
+        // the parameter ranges are wide → rows must differ materially
+        let r0 = ds.y_train.row(0);
+        let r1 = ds.y_train.row(1);
+        let diff: f32 = r0.iter().zip(r1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "rows suspiciously similar: {diff}");
+    }
+}

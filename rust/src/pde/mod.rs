@@ -1,0 +1,40 @@
+//! The pollutant-dispersion PDE substrate (paper §4 + Appendix 1).
+//!
+//! This is the data generator for the regression problem: a boundary-layer
+//! velocity field over terrain (Blasius similarity solution with slip /
+//! blowing wall conditions, eqs. 6–7) advecting three reacting solutes
+//! (eqs. 8–9) to steady state. 10³ Latin-hypercube parameter samples →
+//! 10³ steady c₃ fields, observed at 2670 points.
+//!
+//! Substitutions vs the paper (documented in DESIGN.md §3):
+//! * mixed finite elements → structured finite-volume (5-point stencil,
+//!   first-order upwind convection) with Picard + SOR;
+//! * the wall conditions f′(0) = u_h/U₀ and f(0) = −2u_v/√(νU₀) are
+//!   clamped to the range where the Blasius BVP is well-posed (with
+//!   ν = 10⁻⁵ the paper's raw values reach O(10²) where the shooting
+//!   problem blows up); the residual slip/blowing velocity is
+//!   superposed as an explicit near-wall layer so the ground boundary
+//!   condition still holds exactly;
+//! * the reaction signs follow the physics (reactants consumed, pollutant
+//!   produced by K₁₂c₁c₂ and destroyed by K₃c₃) — the paper's eq. (8) as
+//!   printed would make c₃ negative.
+
+mod adr;
+mod blasius;
+mod datagen;
+mod observe;
+mod velocity;
+
+pub use adr::{AdrSolution, AdrSolver, Grid, SampleParams};
+pub use blasius::{solve_blasius, BlasiusSolution};
+pub use datagen::{generate_dataset, DatagenReport};
+pub use observe::ObservationSet;
+pub use velocity::VelocityField;
+
+/// Kinematic viscosity of air in the paper's non-dimensional setup.
+pub const NU: f64 = 1e-5;
+/// Domain extent: x ∈ [0, LX], y ∈ [0, LY].
+pub const LX: f64 = 2.0;
+pub const LY: f64 = 1.0;
+/// Virtual origin offset avoiding the x→0 similarity singularity.
+pub const X0: f64 = 0.05;

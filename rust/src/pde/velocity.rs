@@ -1,0 +1,165 @@
+//! The background convective velocity field (paper eq. 6 + Appendix 1).
+//!
+//! Self-similar boundary-layer profile with η = y·√(U₀/(2ν(x+x₀))):
+//!
+//! ```text
+//! u_x(x, y) = U₀ f'(η) + Δ_h e^{−y/δ}
+//! u_y(x, y) = ½√(2νU₀/(x+x₀)) (η f'(η) − f(η)) + Δ_v(x) e^{−y/δ}
+//! ```
+//!
+//! where the Blasius wall conditions are clamped to the well-posed range
+//! and the residuals Δ_h = u_h − U₀f'(0), Δ_v(x) = u_v/√((x+x₀)/x₀) −
+//! u_y,sim(x,0) are superposed as an explicit near-wall layer of width δ
+//! so the paper's ground conditions u_x(x,0) = u_h, u_y(x,0) ∝ u_v/√x
+//! hold exactly (substitution note in [`super`] module docs).
+
+use super::blasius::{solve_blasius, BlasiusSolution};
+use super::{NU, X0};
+
+/// Clamp range for the slip ratio f'(0) = u_h/U₀.
+const SLIP_CLAMP: f64 = 0.9;
+/// Clamp range for the blowing parameter f(0) = −2u_v/√(νU₀).
+const BLOW_CLAMP: f64 = 1.5;
+/// Width of the explicit near-wall residual layer.
+const WALL_DELTA: f64 = 0.05;
+
+/// Evaluable velocity field for one parameter sample.
+#[derive(Clone, Debug)]
+pub struct VelocityField {
+    u0: f64,
+    uh: f64,
+    uv: f64,
+    sol: BlasiusSolution,
+    /// Residual slip velocity carried by the explicit wall layer.
+    delta_h: f64,
+}
+
+impl VelocityField {
+    pub fn new(u0: f64, uh: f64, uv: f64) -> anyhow::Result<VelocityField> {
+        anyhow::ensure!(u0 > 0.0, "wind speed U₀ must be positive, got {u0}");
+        let slip = (uh / u0).clamp(-SLIP_CLAMP, SLIP_CLAMP);
+        let blow = (-2.0 * uv / (NU * u0).sqrt()).clamp(-BLOW_CLAMP, BLOW_CLAMP);
+        let sol = solve_blasius(blow, slip)?;
+        let delta_h = uh - u0 * slip;
+        Ok(VelocityField {
+            u0,
+            uh,
+            uv,
+            sol,
+            delta_h,
+        })
+    }
+
+    fn eta(&self, x: f64, y: f64) -> f64 {
+        y * (self.u0 / (2.0 * NU * (x + X0))).sqrt()
+    }
+
+    /// Similarity part of u_y at (x, y).
+    fn uy_sim(&self, x: f64, y: f64) -> f64 {
+        let eta = self.eta(x, y);
+        let coeff = 0.5 * (2.0 * NU * self.u0 / (x + X0)).sqrt();
+        coeff * (eta * self.sol.fp_at(eta) - self.sol.f_at(eta))
+    }
+
+    /// Horizontal velocity.
+    pub fn ux(&self, x: f64, y: f64) -> f64 {
+        let eta = self.eta(x, y);
+        self.u0 * self.sol.fp_at(eta) + self.delta_h * (-y / WALL_DELTA).exp()
+    }
+
+    /// Vertical velocity.
+    pub fn uy(&self, x: f64, y: f64) -> f64 {
+        let sim = self.uy_sim(x, y);
+        // ground target: u_y(x, 0) = u_v / √((x+x₀)/x₀)  (paper: u_v/√x)
+        let target0 = self.uv / ((x + X0) / X0).sqrt();
+        let resid = target0 - self.uy_sim(x, 0.0);
+        sim + resid * (-y / WALL_DELTA).exp()
+    }
+
+    pub fn params(&self) -> (f64, f64, f64) {
+        (self.u0, self.uh, self.uv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freestream_away_from_wall() {
+        let v = VelocityField::new(1.0, 0.0, 0.0).unwrap();
+        // with ν = 1e-5 the boundary layer is millimetres thick: at
+        // y = 0.5 we are far outside it.
+        assert!((v.ux(1.0, 0.5) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wall_slip_condition_exact() {
+        for &(u0, uh) in &[(1.0, 0.15), (0.05, 0.2), (2.0, -0.2)] {
+            let v = VelocityField::new(u0, uh, 0.0).unwrap();
+            assert!(
+                (v.ux(0.7, 0.0) - uh).abs() < 1e-9,
+                "u_x(x,0) = {} want {uh}",
+                v.ux(0.7, 0.0)
+            );
+        }
+    }
+
+    #[test]
+    fn wall_blowing_condition_exact() {
+        for &(u0, uv) in &[(1.0, 0.1), (0.5, -0.2), (0.01, 0.2)] {
+            let v = VelocityField::new(u0, 0.0, uv).unwrap();
+            let x = 0.4;
+            let want = uv / ((x + X0) / X0).sqrt();
+            assert!(
+                (v.uy(x, 0.0) - want).abs() < 1e-9,
+                "u_y(x,0) = {} want {want}",
+                v.uy(x, 0.0)
+            );
+        }
+    }
+
+    #[test]
+    fn blowing_decays_downstream() {
+        // the u_v/√x ground profile weakens with x
+        let v = VelocityField::new(1.0, 0.0, 0.2).unwrap();
+        assert!(v.uy(0.1, 0.0) > v.uy(1.0, 0.0));
+        assert!(v.uy(1.0, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn profile_monotone_in_y_no_slip() {
+        let v = VelocityField::new(1.5, 0.0, 0.0).unwrap();
+        let mut prev = v.ux(1.0, 0.0);
+        for k in 1..=20 {
+            let y = 0.002 * k as f64;
+            let cur = v.ux(1.0, y);
+            assert!(cur >= prev - 1e-9, "u_x not monotone at y={y}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn mass_flux_sign_of_displacement() {
+        // a growing boundary layer displaces flow upward: u_y > 0 above
+        // the layer for the no-slip, no-blowing case.
+        let v = VelocityField::new(1.0, 0.0, 0.0).unwrap();
+        assert!(v.uy(0.5, 0.05) > 0.0);
+    }
+
+    #[test]
+    fn rejects_nonpositive_wind() {
+        assert!(VelocityField::new(0.0, 0.0, 0.0).is_err());
+        assert!(VelocityField::new(-1.0, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn extreme_paper_corner_converges() {
+        // U₀ = 0.01, u_h = u_v = ±0.2 — the raw Blasius BCs are O(10²)
+        // here; clamping + residual layer must keep this solvable with
+        // wall conditions still exact.
+        let v = VelocityField::new(0.01, 0.2, -0.2).unwrap();
+        assert!((v.ux(1.0, 0.0) - 0.2).abs() < 1e-9);
+        assert!(v.ux(1.0, 0.9).is_finite());
+    }
+}

@@ -1,0 +1,161 @@
+//! artifacts/manifest.json — the calling-convention contract between
+//! python/compile/aot.py and the Rust runtime.
+
+use crate::util::jsonl::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// "train_step" | "predict" | "gram"
+    pub kind: String,
+    /// Path relative to the artifact directory.
+    pub path: String,
+    /// Layer widths (model kinds only).
+    pub arch: Vec<usize>,
+    pub batch: usize,
+    /// "pallas" | "jnp"
+    pub kernel: String,
+    /// Shapes of the flat input list, in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "manifest {}: {e} (run `make artifacts` first)",
+                path.as_ref().display()
+            )
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let doc = parse(text)?;
+        let format = doc
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing format"))?;
+        anyhow::ensure!(format == 1, "manifest: unsupported format {format}");
+        let mut entries = BTreeMap::new();
+        for e in doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing entries"))?
+        {
+            let entry = ManifestEntry {
+                name: req_str(e, "name")?,
+                kind: req_str(e, "kind")?,
+                path: req_str(e, "path")?,
+                arch: usize_list(e.get("arch")),
+                batch: e.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                kernel: e
+                    .get("kernel")
+                    .and_then(Json::as_str)
+                    .unwrap_or("jnp")
+                    .to_string(),
+                input_shapes: e
+                    .get("input_shapes")
+                    .and_then(Json::as_arr)
+                    .map(|arr| arr.iter().map(|s| usize_list(Some(s))).collect())
+                    .unwrap_or_default(),
+                num_outputs: e
+                    .get("num_outputs")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("manifest entry missing num_outputs"))?,
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn req_str(e: &Json, key: &str) -> anyhow::Result<String> {
+    e.get(key)
+        .and_then(Json::as_str)
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("manifest entry missing '{key}'"))
+}
+
+fn usize_list(v: Option<&Json>) -> Vec<usize> {
+    v.and_then(Json::as_arr)
+        .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "entries": [
+        {"name": "train_step_test", "kind": "train_step",
+         "path": "train_step_test.hlo.txt", "arch": [4, 8, 6],
+         "batch": 16, "kernel": "pallas",
+         "input_shapes": [[4,8],[8],[8,6],[6],[16,4],[16,6]],
+         "num_outputs": 5},
+        {"name": "gram_l2", "kind": "gram", "path": "g.hlo.txt",
+         "n": 8200, "m": 20, "kernel": "pallas",
+         "input_shapes": [[8200, 20]], "num_outputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("train_step_test").unwrap();
+        assert_eq!(e.arch, vec![4, 8, 6]);
+        assert_eq!(e.batch, 16);
+        assert_eq!(e.num_outputs, 5);
+        assert_eq!(e.input_shapes.len(), 6);
+        assert_eq!(e.input_shapes[4], vec![16, 4]);
+        let g = m.get("gram_l2").unwrap();
+        assert_eq!(g.kind, "gram");
+        assert_eq!(g.arch, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(r#"{"format": 9, "entries": []}"#).is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // soft test: only checks when `make artifacts` has run
+        let path = crate::util::repo_root().join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.get("train_step_paper").is_some());
+            assert!(m.get("predict_test").is_some());
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and execute them from the
+//! training hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+mod executable;
+mod manifest;
+
+pub use executable::Executable;
+pub use manifest::{Manifest, ManifestEntry};
+
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus the artifact directory it loads from.
+///
+/// NOT `Send`: PJRT client handles are thread-affine in the `xla` crate —
+/// sweep workers each build their own `Runtime` (see
+/// `coordinator::sweep`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// CPU-backed runtime over an artifact directory (usually
+    /// `<repo>/artifacts`).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let artifact_dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(artifact_dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifact_dir,
+            manifest,
+        })
+    }
+
+    /// Artifact directory resolved from the repo root.
+    pub fn default_artifact_dir() -> PathBuf {
+        crate::util::repo_root().join("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by manifest name (e.g.
+    /// `train_step_paper`). Compilation happens once; call sites cache the
+    /// returned [`Executable`] for the whole run.
+    pub fn load(&self, name: &str) -> anyhow::Result<Executable> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.artifact_dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile '{name}': {e:?}"))?;
+        Ok(Executable::new(exe, entry))
+    }
+}

@@ -1,0 +1,22 @@
+//! Dense row-major matrices. Two concrete types:
+//!
+//! * [`Tensor`] — f32, the model/runtime currency (weights, snapshots,
+//!   datasets; matches the f32 HLO calling convention).
+//! * [`Mat`] — f64, the DMD/linalg currency (Gram matrices, Koopman
+//!   operators, eigen-solves) where f32 would lose the small singular
+//!   values the paper's 1e-10 filter tolerance needs to see.
+//!
+//! No external linear-algebra crates are available offline, so this is a
+//! from-scratch substrate (DESIGN.md S1).
+
+mod mat;
+mod tensor_f32;
+
+pub use mat::Mat;
+pub use tensor_f32::Tensor;
+
+/// Row-major index helper shared by both types.
+#[inline(always)]
+pub(crate) fn idx(row: usize, col: usize, cols: usize) -> usize {
+    row * cols + col
+}

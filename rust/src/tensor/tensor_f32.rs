@@ -1,0 +1,234 @@
+//! `Tensor` — dense row-major f32 matrix (vectors are 1×n or n×1).
+
+use super::idx;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "Tensor::from_vec: {}x{} needs {} elements, got {}",
+            rows,
+            cols,
+            rows * cols,
+            data.len()
+        );
+        Tensor { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Tensor { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[idx(r, c, self.cols)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[idx(r, c, self.cols)] = v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Reinterpret as a different shape with the same element count.
+    pub fn reshape(mut self, rows: usize, cols: usize) -> Self {
+        assert_eq!(rows * cols, self.data.len());
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[idx(c, r, self.rows)] = self.data[idx(r, c, self.cols)];
+            }
+        }
+        out
+    }
+
+    /// self += alpha * other (elementwise, shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean squared difference vs another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_get_set() {
+        let mut t = Tensor::zeros(3, 4);
+        t.set(2, 1, 5.0);
+        assert_eq!(t.get(2, 1), 5.0);
+        assert_eq!(t.get(0, 0), 0.0);
+        assert_eq!(t.shape(), (3, 4));
+    }
+
+    #[test]
+    fn from_fn_row_major_layout() {
+        let t = Tensor::from_fn(2, 3, |r, c| (10 * r + c) as f32);
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        assert_eq!(t.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().get(4, 2), t.get(2, 4));
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(1, 3, vec![10.0, 10.0, 10.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 7.0, 8.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn mse_of_identical_is_zero() {
+        let t = Tensor::from_fn(4, 4, |r, c| (r + c) as f32);
+        assert_eq!(t.mse(&t), 0.0);
+    }
+
+    #[test]
+    fn mse_simple() {
+        let a = Tensor::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Tensor::from_vec(1, 2, vec![1.0, 3.0]);
+        assert!((a.mse(&b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_pythagoras() {
+        let t = Tensor::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((t.norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        Tensor::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).reshape(3, 2);
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn finite_detection() {
+        let mut t = Tensor::zeros(1, 2);
+        assert!(t.is_finite());
+        t.set(0, 1, f32::NAN);
+        assert!(!t.is_finite());
+    }
+}

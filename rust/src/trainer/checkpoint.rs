@@ -1,0 +1,82 @@
+//! Parameter checkpoints: tiny binary format (magic `DMDP`, tensor count,
+//! then rows/cols/data per tensor, f32 LE).
+
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DMDP";
+
+pub fn save_params(params: &[Tensor], path: impl AsRef<Path>) -> anyhow::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for t in params {
+        f.write_all(&(t.rows() as u32).to_le_bytes())?;
+        f.write_all(&(t.cols() as u32).to_le_bytes())?;
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+pub fn load_params(path: impl AsRef<Path>) -> anyhow::Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(&path).map_err(|e| {
+        anyhow::anyhow!("checkpoint {}: {e}", path.as_ref().display())
+    })?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a DMDP checkpoint");
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    anyhow::ensure!(count < 10_000, "implausible tensor count {count}");
+    let mut params = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut b4)?;
+        let rows = u32::from_le_bytes(b4) as usize;
+        f.read_exact(&mut b4)?;
+        let cols = u32::from_le_bytes(b4) as usize;
+        let mut bytes = vec![0u8; rows * cols * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        params.push(Tensor::from_vec(rows, cols, data));
+    }
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let arch = Arch::new(vec![3, 7, 2]).unwrap();
+        let params = arch.init_params(&mut Rng::new(3));
+        let dir = std::env::temp_dir().join("dmdtrain_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.dmdp");
+        save_params(&params, &path).unwrap();
+        let loaded = load_params(&path).unwrap();
+        assert_eq!(loaded, params);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("dmdtrain_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.dmdp");
+        std::fs::write(&path, b"JUNKJUNKJUNK").unwrap();
+        assert!(load_params(&path).is_err());
+    }
+}

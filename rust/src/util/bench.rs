@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Warmup + timed iterations with mean / stddev / min / p50 / p95 and a
+//! stable text report — `cargo bench` targets in `rust/benches/` build on
+//! this plus domain-specific drivers.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} {:>10} {:>12} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            fmt_time(self.p95_s),
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<42} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "std", "min", "p95"
+    )
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Run `f` with warmup; auto-scales iteration count toward `target_secs`.
+pub fn bench<T>(name: &str, target_secs: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let first = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / first).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Fixed-iteration variant (for expensive end-to-end cases).
+pub fn bench_n<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    std::hint::black_box(f()); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, &mut samples)
+}
+
+fn stats_from(name: &str, samples: &mut [f64]) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: samples[0],
+        p50_s: pick(0.5),
+        p95_s: pick(0.95),
+    };
+    println!("{}", stats.row());
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench_n("noop_vec", 10, || vec![0u8; 1024]);
+        assert_eq!(s.iters, 10);
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.p50_s);
+        assert!(s.p50_s <= s.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn autoscale_clamps() {
+        let s = bench("sleepless", 0.01, || 1 + 1);
+        assert!(s.iters >= 3 && s.iters <= 10_000);
+    }
+
+    #[test]
+    fn time_format() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).contains("ns"));
+    }
+}

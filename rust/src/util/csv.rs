@@ -1,0 +1,112 @@
+//! Tiny CSV writer/reader — enough for experiment outputs (loss curves,
+//! sensitivity grids, concentration fields) consumed by plotting tools.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            file,
+            columns: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns,
+            "csv row has {} values, header has {}",
+            values.len(),
+            self.columns
+        );
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v:.9e}"));
+        }
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    /// Row with a leading string cell (e.g. a run label).
+    pub fn row_labeled(&mut self, label: &str, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.len() + 1 == self.columns, "csv labeled-row arity");
+        let nums: Vec<String> = values.iter().map(|v| format!("{v:.9e}")).collect();
+        writeln!(self.file, "{label},{}", nums.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a numeric CSV (skipping the header). Non-numeric leading cells are
+/// parsed as NaN placeholders.
+pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header: Vec<String> = lines
+        .next()
+        .unwrap_or("")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            line.split(',')
+                .map(|cell| cell.trim().parse::<f64>().unwrap_or(f64::NAN))
+                .collect(),
+        );
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dmdtrain_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.0]).unwrap();
+            w.row(&[3.5, -1.25e-9]).unwrap();
+            w.flush().unwrap();
+        }
+        let (header, rows) = read_csv(&path).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], vec![1.0, 2.0]);
+        assert!((rows[1][1] + 1.25e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("dmdtrain_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&[1.0]).is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Minimal JSON encoding + JSONL event log (no serde offline).
+//!
+//! Also hosts the small hand-rolled JSON *parser* used to read
+//! `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// A JSON value (subset: everything the manifest and logs need).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn encode(&self) -> String {
+        match self {
+            Json::Null => "null".into(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{}", *v as i64)
+                } else {
+                    format!("{v}")
+                }
+            }
+            Json::Str(s) => encode_str(s),
+            Json::Arr(a) => {
+                let items: Vec<String> = a.iter().map(|j| j.encode()).collect();
+                format!("[{}]", items.join(","))
+            }
+            Json::Obj(m) => {
+                let items: Vec<String> = m
+                    .iter()
+                    .map(|(k, v)| format!("{}:{}", encode_str(k), v.encode()))
+                    .collect();
+                format!("{{{}}}", items.join(","))
+            }
+        }
+    }
+}
+
+fn encode_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let bytes: Vec<char> = text.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&bytes, &mut pos)?;
+    skip_ws(&bytes, &mut pos);
+    anyhow::ensure!(pos == bytes.len(), "json: trailing content at {pos}");
+    Ok(v)
+}
+
+fn skip_ws(b: &[char], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[char], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "json: unexpected end");
+    match b[*pos] {
+        '{' => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == '}' {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    other => anyhow::bail!("json: non-string key {other:?}"),
+                };
+                skip_ws(b, pos);
+                anyhow::ensure!(
+                    *pos < b.len() && b[*pos] == ':',
+                    "json: expected ':' at {pos}"
+                );
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                map.insert(key, val);
+                skip_ws(b, pos);
+                anyhow::ensure!(*pos < b.len(), "json: unterminated object");
+                match b[*pos] {
+                    ',' => *pos += 1,
+                    '}' => {
+                        *pos += 1;
+                        return Ok(Json::Obj(map));
+                    }
+                    c => anyhow::bail!("json: unexpected '{c}' in object"),
+                }
+            }
+        }
+        '[' => {
+            *pos += 1;
+            let mut arr = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == ']' {
+                *pos += 1;
+                return Ok(Json::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                anyhow::ensure!(*pos < b.len(), "json: unterminated array");
+                match b[*pos] {
+                    ',' => *pos += 1,
+                    ']' => {
+                        *pos += 1;
+                        return Ok(Json::Arr(arr));
+                    }
+                    c => anyhow::bail!("json: unexpected '{c}' in array"),
+                }
+            }
+        }
+        '"' => {
+            *pos += 1;
+            let mut s = String::new();
+            while *pos < b.len() {
+                match b[*pos] {
+                    '"' => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    '\\' => {
+                        *pos += 1;
+                        anyhow::ensure!(*pos < b.len(), "json: bad escape");
+                        match b[*pos] {
+                            'n' => s.push('\n'),
+                            't' => s.push('\t'),
+                            'r' => s.push('\r'),
+                            'u' => {
+                                anyhow::ensure!(*pos + 4 < b.len(), "json: bad \\u");
+                                let hex: String = b[*pos + 1..*pos + 5].iter().collect();
+                                let code = u32::from_str_radix(&hex, 16)?;
+                                s.push(char::from_u32(code).unwrap_or('?'));
+                                *pos += 4;
+                            }
+                            c => s.push(c),
+                        }
+                        *pos += 1;
+                    }
+                    c => {
+                        s.push(c);
+                        *pos += 1;
+                    }
+                }
+            }
+            anyhow::bail!("json: unterminated string")
+        }
+        't' | 'f' | 'n' => {
+            let rest: String = b[*pos..].iter().take(5).collect();
+            if rest.starts_with("true") {
+                *pos += 4;
+                Ok(Json::Bool(true))
+            } else if rest.starts_with("false") {
+                *pos += 5;
+                Ok(Json::Bool(false))
+            } else if rest.starts_with("null") {
+                *pos += 4;
+                Ok(Json::Null)
+            } else {
+                anyhow::bail!("json: bad literal at {pos}")
+            }
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && (b[*pos].is_ascii_digit()
+                    || matches!(b[*pos], '-' | '+' | '.' | 'e' | 'E'))
+            {
+                *pos += 1;
+            }
+            let text: String = b[start..*pos].iter().collect();
+            Ok(Json::Num(text.parse()?))
+        }
+    }
+}
+
+/// Append-only JSONL event writer (one JSON object per line).
+pub struct JsonlWriter {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlWriter {
+            file: std::io::BufWriter::new(std::fs::File::create(path)?),
+        })
+    }
+
+    pub fn event(&mut self, fields: &[(&str, Json)]) -> anyhow::Result<()> {
+        let obj = Json::Obj(
+            fields
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        );
+        writeln!(self.file, "{}", obj.encode())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_like() {
+        let text = r#"{
+          "format": 1,
+          "entries": [
+            {"name": "train_step_test", "arch": [4, 8, 6], "batch": 16,
+             "input_shapes": [[4, 8], [8]], "num_outputs": 5}
+          ]
+        }"#;
+        let j = parse(text).unwrap();
+        assert_eq!(j.get("format").unwrap().as_f64(), Some(1.0));
+        let e = &j.get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(e.get("name").unwrap().as_str(), Some("train_step_test"));
+        assert_eq!(e.get("batch").unwrap().as_usize(), Some(16));
+        let shapes = e.get("input_shapes").unwrap().as_arr().unwrap();
+        assert_eq!(shapes[0].as_arr().unwrap()[1].as_usize(), Some(8));
+    }
+
+    #[test]
+    fn encode_parse_roundtrip() {
+        let mut obj = BTreeMap::new();
+        obj.insert("s".into(), Json::Str("a\"b\\c\nd".into()));
+        obj.insert("n".into(), Json::Num(-1.25e-5));
+        obj.insert("b".into(), Json::Bool(true));
+        obj.insert(
+            "a".into(),
+            Json::Arr(vec![Json::Num(1.0), Json::Null]),
+        );
+        let v = Json::Obj(obj);
+        assert_eq!(parse(&v.encode()).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{invalid}").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn jsonl_writes_lines() {
+        let dir = std::env::temp_dir().join("dmdtrain_jsonl_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.event(&[("epoch", Json::Num(1.0)), ("loss", Json::Num(0.5))])
+                .unwrap();
+            w.event(&[("epoch", Json::Num(2.0)), ("loss", Json::Num(0.25))])
+                .unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = parse(lines[0]).unwrap();
+        assert_eq!(first.get("loss").unwrap().as_f64(), Some(0.5));
+    }
+}

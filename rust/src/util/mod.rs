@@ -1,0 +1,63 @@
+//! Infrastructure substrates: timers, run directories, CSV/JSONL writers,
+//! a micro-benchmark harness (criterion is unavailable offline) and a
+//! mini property-testing harness.
+
+pub mod bench;
+pub mod csv;
+pub mod jsonl;
+pub mod prop;
+pub mod timer;
+
+use std::path::{Path, PathBuf};
+
+/// Create (if needed) and return a run directory `runs/<name>/`.
+pub fn run_dir(name: &str) -> anyhow::Result<PathBuf> {
+    let dir = Path::new("runs").join(name);
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Root of the repository: walks up from the current exe/cwd until it sees
+/// `Cargo.toml`. Benches/tests run from the crate root already, but
+/// examples invoked from elsewhere still find `artifacts/`.
+pub fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+/// Format a float for logs: compact scientific below 1e-3 / above 1e4.
+pub fn fmt_f64(v: f64) -> String {
+    let a = v.abs();
+    if v == 0.0 {
+        "0".to_string()
+    } else if !(1e-3..1e4).contains(&a) {
+        format!("{v:.4e}")
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_f64_ranges() {
+        assert_eq!(fmt_f64(0.0), "0");
+        assert!(fmt_f64(1.5e-7).contains('e'));
+        assert!(!fmt_f64(3.25).contains('e'));
+        assert!(fmt_f64(7.3e9).contains('e'));
+    }
+
+    #[test]
+    fn repo_root_has_cargo_toml() {
+        assert!(repo_root().join("Cargo.toml").exists());
+    }
+}

@@ -1,0 +1,118 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` seeded random inputs; on failure
+//! it retries with progressively "smaller" generator budgets (a cheap
+//! shrinking analogue) and reports the smallest failing seed/case so runs
+//! are reproducible: every failure message carries the seed.
+
+use crate::rng::Rng;
+
+/// Generator context handed to properties: a seeded RNG plus a size budget
+/// the generator should respect (shrinking lowers it).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Dimension in [1, size].
+    pub fn dim(&mut self) -> usize {
+        1 + self.rng.below(self.size.max(1))
+    }
+
+    /// Dimension in [lo, hi] (inclusive), clamped by budget.
+    pub fn dim_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| scale * self.rng.normal()).collect()
+    }
+
+    pub fn vec_normal_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| scale * self.rng.normal() as f32)
+            .collect()
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics (with seed info) if any
+/// case fails after shrink attempts.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base_seed = 0xD31D_0000u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: 24,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: same seed, smaller budgets
+            let mut smallest = (g.size, msg);
+            for size in (1..24).rev() {
+                let mut g2 = Gen {
+                    rng: Rng::new(seed),
+                    size,
+                };
+                if let Err(m2) = prop(&mut g2) {
+                    smallest = (size, m2);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 smallest failing size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", 50, |g| {
+            let (a, b) = (g.f64_in(-10.0, 10.0), g.f64_in(-10.0, 10.0));
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let d = g.dim_in(3, 9);
+            if (3..=9).contains(&d) {
+                Ok(())
+            } else {
+                Err(format!("dim_in out of range: {d}"))
+            }
+        });
+    }
+}

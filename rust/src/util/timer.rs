@@ -1,0 +1,134 @@
+//! Wall-clock timers and accumulating timing scopes for the perf pass.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A single-shot stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named timing scopes; prints a profile table.
+///
+/// Used by the trainer to attribute wall time to backprop execution,
+/// literal packing, DMD solves, metric evaluation, etc. (the paper's
+/// 1.41×-overhead analysis, EXPERIMENTS.md §Perf).
+#[derive(Default, Debug)]
+pub struct Profile {
+    scopes: BTreeMap<String, (Duration, u64)>,
+}
+
+impl Profile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn scope<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, name: &str, d: Duration) {
+        let e = self
+            .scopes
+            .entry(name.to_string())
+            .or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.scopes.get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.scopes.get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Merge another profile into this one (for per-thread profiles).
+    pub fn merge(&mut self, other: &Profile) {
+        for (k, (d, c)) in &other.scopes {
+            let e = self
+                .scopes
+                .entry(k.clone())
+                .or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    /// Render as an aligned table sorted by total time, descending.
+    pub fn table(&self) -> String {
+        let mut rows: Vec<_> = self.scopes.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut out = format!(
+            "{:<28} {:>12} {:>10} {:>12}\n",
+            "scope", "total (s)", "calls", "mean (ms)"
+        );
+        for (name, (dur, count)) in rows {
+            let total = dur.as_secs_f64();
+            let mean_ms = if *count > 0 {
+                1e3 * total / *count as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{name:<28} {total:>12.4} {count:>10} {mean_ms:>12.4}\n"
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_accumulates() {
+        let mut p = Profile::new();
+        for _ in 0..3 {
+            p.scope("work", || std::thread::sleep(Duration::from_millis(2)));
+        }
+        assert_eq!(p.count("work"), 3);
+        assert!(p.total("work") >= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn merge_sums_counts() {
+        let mut a = Profile::new();
+        a.add("x", Duration::from_millis(5));
+        let mut b = Profile::new();
+        b.add("x", Duration::from_millis(7));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.total("x"), Duration::from_millis(12));
+        assert_eq!(a.count("y"), 1);
+    }
+
+    #[test]
+    fn table_contains_scopes() {
+        let mut p = Profile::new();
+        p.add("alpha", Duration::from_millis(1));
+        let t = p.table();
+        assert!(t.contains("alpha"));
+        assert!(t.contains("scope"));
+    }
+}

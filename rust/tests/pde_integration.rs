@@ -1,0 +1,148 @@
+//! PDE substrate integration: the Fig-2 one-at-a-time qualitative
+//! responses and full datagen pipeline invariants.
+
+use dmdtrain::config::DatagenConfig;
+use dmdtrain::data::Dataset;
+use dmdtrain::pde::{generate_dataset, AdrSolution, AdrSolver, Grid, SampleParams};
+use dmdtrain::tensor::Tensor;
+
+fn solve(p: SampleParams) -> AdrSolution {
+    AdrSolver::new(Grid::new(48, 24), p).unwrap().solve().unwrap()
+}
+
+fn total(f: &Tensor) -> f64 {
+    f.data().iter().map(|&v| v as f64).sum()
+}
+
+fn centroid_x(sol: &AdrSolution, f: &Tensor) -> f64 {
+    let (mut num, mut den) = (0.0, 1e-30);
+    for j in 0..sol.grid.ny {
+        for i in 0..sol.grid.nx {
+            let v = f.get(j, i) as f64;
+            num += v * sol.grid.x(i);
+            den += v;
+        }
+    }
+    num / den
+}
+
+fn centroid_y(sol: &AdrSolution, f: &Tensor) -> f64 {
+    let (mut num, mut den) = (0.0, 1e-30);
+    for j in 0..sol.grid.ny {
+        for i in 0..sol.grid.nx {
+            let v = f.get(j, i) as f64;
+            num += v * sol.grid.y(j);
+            den += v;
+        }
+    }
+    num / den
+}
+
+/// Fig 2, all six panels as quantitative one-at-a-time checks.
+#[test]
+fn fig2_one_at_a_time_responses() {
+    let nominal = SampleParams::nominal();
+    let base = solve(nominal);
+
+    // K12 ↑ → more pollutant produced, concentrated near the source
+    let k12 = solve(SampleParams { k12: 20.0, ..nominal });
+    assert!(total(&k12.c3) > total(&base.c3));
+
+    // K3 ↑ → pollutant attenuated everywhere
+    let k3 = solve(SampleParams { k3: 10.0, ..nominal });
+    assert!(total(&k3.c3) < 0.7 * total(&base.c3));
+
+    // D ↑ → smoother field (lower peak/mean)
+    let d_hi = solve(SampleParams { d: 0.5, ..nominal });
+    let peak_over_mean = |s: &AdrSolution| {
+        s.c3.max_abs() as f64 / (total(&s.c3) / s.grid.cells() as f64 + 1e-30)
+    };
+    assert!(peak_over_mean(&d_hi) < peak_over_mean(&base));
+
+    // U0 ↑ → plume advected downstream (centroid moves right)
+    let u0 = solve(SampleParams { u0: 2.0, ..nominal });
+    assert!(centroid_x(&u0, &u0.c3) > centroid_x(&base, &base.c3) + 0.02);
+
+    // u_h ↑ → further downstream advection near the ground
+    let uh = solve(SampleParams { uh: 0.2, ..nominal });
+    let uh_neg = solve(SampleParams { uh: -0.2, ..nominal });
+    assert!(centroid_x(&uh, &uh.c3) > centroid_x(&uh_neg, &uh_neg.c3));
+
+    // u_v ↑ → pollutant lifted away from the ground (centroid rises)
+    let uv = solve(SampleParams { uv: 0.2, ..nominal });
+    let uv_neg = solve(SampleParams { uv: -0.2, ..nominal });
+    assert!(centroid_y(&uv, &uv.c3) > centroid_y(&uv_neg, &uv_neg.c3));
+}
+
+#[test]
+fn fields_physical_across_corner_cases() {
+    let nominal = SampleParams::nominal();
+    // extreme corners of the sampling box (paper §4 ranges)
+    let corners = [
+        SampleParams { k12: 1.0, k3: 0.0, d: 0.01, u0: 0.01, uh: -0.2, uv: -0.2 },
+        SampleParams { k12: 20.0, k3: 10.0, d: 0.5, u0: 2.0, uh: 0.2, uv: 0.2 },
+        SampleParams { k12: 20.0, k3: 0.0, d: 0.01, u0: 2.0, uh: -0.2, uv: 0.2 },
+        nominal,
+    ];
+    for (i, p) in corners.iter().enumerate() {
+        let sol = solve(*p);
+        for f in [&sol.c1, &sol.c2, &sol.c3] {
+            assert!(f.is_finite(), "corner {i} produced non-finite field");
+            assert!(
+                f.data().iter().all(|&v| v >= -1e-5),
+                "corner {i}: negative concentration"
+            );
+        }
+        assert!(total(&sol.c1) > 0.0, "corner {i}: no reactant 1");
+    }
+}
+
+#[test]
+fn grid_refinement_converges() {
+    // coarse vs fine grids must agree on the integral quantity within a
+    // first-order-upwind tolerance
+    let p = SampleParams::nominal();
+    let coarse = AdrSolver::new(Grid::new(32, 16), p).unwrap().solve().unwrap();
+    let fine = AdrSolver::new(Grid::new(96, 48), p).unwrap().solve().unwrap();
+    let mean = |s: &AdrSolution| total(&s.c3) / s.grid.cells() as f64;
+    let (mc, mf) = (mean(&coarse), mean(&fine));
+    assert!(
+        (mc - mf).abs() / mf.abs() < 0.35,
+        "grid refinement drift: {mc} vs {mf}"
+    );
+}
+
+#[test]
+fn datagen_pipeline_full_roundtrip() {
+    let dir = std::env::temp_dir().join("dmdtrain_pde_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("it.dmdt");
+    let cfg = DatagenConfig {
+        nx: 32,
+        ny: 16,
+        n_obs: 50,
+        n_samples: 15,
+        train_frac: 0.8,
+        seed: 11,
+        out: out.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    let report = generate_dataset(&cfg, 4).unwrap();
+    assert_eq!(report.n_train + report.n_test, 15);
+    let ds = Dataset::load(&out).unwrap();
+    assert_eq!(ds.n_in(), 6);
+    assert_eq!(ds.n_out(), 50);
+    // outputs must respond to inputs: nearest-neighbour rows in parameter
+    // space should not be identical in target space
+    let y0 = ds.y_train.row(0);
+    let distinct = (1..ds.n_train())
+        .filter(|&r| {
+            ds.y_train
+                .row(r)
+                .iter()
+                .zip(y0)
+                .any(|(a, b)| (a - b).abs() > 1e-4)
+        })
+        .count();
+    assert!(distinct >= ds.n_train() - 2);
+}

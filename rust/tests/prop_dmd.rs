@@ -1,0 +1,196 @@
+//! Property tests for the DMD engine over random linear-dynamics
+//! families — the invariants that make Algorithm 1 trustworthy.
+
+use dmdtrain::config::{DmdParams, Projection};
+use dmdtrain::dmd::dmd_extrapolate;
+use dmdtrain::prop_assert;
+use dmdtrain::tensor::Mat;
+use dmdtrain::util::prop::{check, Gen};
+
+/// Random stable diagonalizable dynamics: A = Q D Qᵀ with |λ| ≤ ρ.
+fn random_stable(g: &mut Gen, n: usize, rho: f64) -> Mat {
+    // random orthogonal via Gram–Schmidt on a Gaussian matrix
+    let raw = Mat::from_vec(n, n, g.vec_normal(n * n, 1.0));
+    let mut q = Mat::zeros(n, n);
+    for c in 0..n {
+        let mut v: Vec<f64> = (0..n).map(|r| raw.get(r, c)).collect();
+        for prev in 0..c {
+            let dot: f64 = (0..n).map(|r| q.get(r, prev) * v[r]).sum();
+            for (r, vr) in v.iter_mut().enumerate() {
+                *vr -= dot * q.get(r, prev);
+            }
+        }
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-9);
+        for (r, vr) in v.iter().enumerate() {
+            q.set(r, c, vr / norm);
+        }
+    }
+    let d = Mat::from_fn(n, n, |r, c| {
+        if r == c {
+            rho * g.f64_in(0.3, 1.0)
+        } else {
+            0.0
+        }
+    });
+    q.matmul(&d).matmul(&q.transpose())
+}
+
+fn snapshots(a: &Mat, w0: &[f64], m: usize) -> Vec<Vec<f32>> {
+    let mut w = w0.to_vec();
+    (0..m)
+        .map(|_| {
+            let snap: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+            w = a.matvec(&w);
+            snap
+        })
+        .collect()
+}
+
+#[test]
+fn prop_exact_dynamics_extrapolated() {
+    // For stable diagonalizable dynamics fully captured by the snapshots,
+    // pinv-DMD extrapolation matches the true future state.
+    check("dmd_exact_linear", 25, |g| {
+        let n = g.dim_in(2, 6);
+        let m = 2 * n + 2; // enough snapshots to span the dynamics
+        let s = g.dim_in(1, 20);
+        let a = random_stable(g, n, 0.95);
+        let w0 = g.vec_normal(n, 1.0);
+        let cols = snapshots(&a, &w0, m);
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut params = DmdParams::default();
+        params.projection = Projection::Pinv;
+        let out = dmd_extrapolate(&refs, &params, s)
+            .map_err(|e| format!("dmd failed: {e}"))?;
+        // true future: m-1+s steps from w0
+        let mut w_true = w0.clone();
+        for _ in 0..(m - 1 + s) {
+            w_true = a.matvec(&w_true);
+        }
+        let scale = w0.iter().map(|v| v.abs()).fold(0.1, f64::max);
+        for (got, want) in out.new_weights.iter().zip(&w_true) {
+            prop_assert!(
+                (*got as f64 - want).abs() < 2e-2 * scale,
+                "extrapolation off: {got} vs {want} (n={n}, m={m}, s={s})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank_bounded_and_eigs_sorted() {
+    check("dmd_rank_bounds", 30, |g| {
+        let n = g.dim_in(3, 50);
+        let m = g.dim_in(3, 12);
+        let a = random_stable(g, n.min(8), 0.9);
+        // embed the low-dim dynamics in n dims (first block), rest decays
+        let w0 = g.vec_normal(a.rows(), 1.0);
+        let small = snapshots(&a, &w0, m);
+        let cols: Vec<Vec<f32>> = small
+            .iter()
+            .map(|c| {
+                let mut v = c.clone();
+                v.resize(n, 0.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let out = dmd_extrapolate(&refs, &DmdParams::default(), 5)
+            .map_err(|e| format!("dmd failed: {e}"))?;
+        prop_assert!(out.rank <= m - 1, "rank {} exceeds m-1 = {}", out.rank, m - 1);
+        prop_assert!(
+            out.eigenvalues.len() == out.rank,
+            "eigenvalue count vs rank"
+        );
+        for w in out.eigenvalues.windows(2) {
+            prop_assert!(
+                w[0].abs() >= w[1].abs() - 1e-12,
+                "eigenvalues not sorted by magnitude"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stable_dynamics_stay_bounded() {
+    // |λ| ≤ 1 systems: the extrapolated state must not exceed the
+    // snapshot scale by more than a modest factor, for any s.
+    check("dmd_bounded", 25, |g| {
+        let n = g.dim_in(2, 8);
+        let m = 2 * n + 2;
+        let s = g.dim_in(1, 200);
+        let a = random_stable(g, n, 0.99);
+        let w0 = g.vec_normal(n, 1.0);
+        let cols = snapshots(&a, &w0, m);
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut params = DmdParams::default();
+        params.projection = Projection::Pinv;
+        let out = dmd_extrapolate(&refs, &params, s)
+            .map_err(|e| format!("dmd failed: {e}"))?;
+        let w0_norm = w0.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let out_norm = out
+            .new_weights
+            .iter()
+            .map(|&v| (v as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        prop_assert!(
+            out_norm < 10.0 * w0_norm + 1.0,
+            "stable dynamics exploded: {out_norm} vs {w0_norm} (s={s})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clamp_enforces_unit_circle() {
+    check("dmd_clamp", 25, |g| {
+        let n = g.dim_in(2, 6);
+        let m = 2 * n + 2;
+        // unstable dynamics: scale eigenvalues past 1
+        let a0 = random_stable(g, n, 1.0);
+        let a = {
+            let mut m2 = a0.clone();
+            m2.scale(1.2);
+            m2
+        };
+        let w0 = g.vec_normal(n, 1.0);
+        let cols = snapshots(&a, &w0, m);
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut params = DmdParams::default();
+        params.clamp_growth = Some(1.0);
+        let out = dmd_extrapolate(&refs, &params, 50)
+            .map_err(|e| format!("dmd failed: {e}"))?;
+        for l in &out.eigenvalues {
+            prop_assert!(l.abs() <= 1.0 + 1e-9, "clamp violated: |λ| = {}", l.abs());
+        }
+        prop_assert!(
+            out.new_weights.iter().all(|v| v.is_finite()),
+            "clamped output not finite"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic() {
+    check("dmd_deterministic", 20, |g| {
+        let n = g.dim_in(2, 30);
+        let m = g.dim_in(3, 10);
+        let cols: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal_f32(n, 1.0)).collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let p = DmdParams::default();
+        let a = dmd_extrapolate(&refs, &p, 7);
+        let b = dmd_extrapolate(&refs, &p, 7);
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                prop_assert!(x.new_weights == y.new_weights, "nondeterministic output");
+                Ok(())
+            }
+            (Err(_), Err(_)) => Ok(()),
+            _ => Err("determinism: one call failed, one succeeded".into()),
+        }
+    });
+}

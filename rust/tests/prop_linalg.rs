@@ -1,0 +1,148 @@
+//! Property tests for the linear-algebra substrate (mini-harness in
+//! `util::prop`; seeds are reported on failure for reproduction).
+
+use dmdtrain::linalg::{cmat::CMat, complex::Cplx, eig::eig, gram, jacobi::eig_sym};
+use dmdtrain::prop_assert;
+use dmdtrain::tensor::Mat;
+use dmdtrain::util::prop::check;
+
+fn random_mat(g: &mut dmdtrain::util::prop::Gen, n: usize) -> Mat {
+    let data = g.vec_normal(n * n, 1.0);
+    Mat::from_vec(n, n, data)
+}
+
+#[test]
+fn prop_jacobi_reconstructs_symmetric() {
+    check("jacobi_reconstructs", 40, |g| {
+        let n = g.dim_in(1, 16);
+        let a0 = random_mat(g, n);
+        // symmetrize
+        let a = Mat::from_fn(n, n, |r, c| 0.5 * (a0.get(r, c) + a0.get(c, r)));
+        let (evals, v) = eig_sym(&a);
+        // A = V Λ Vᵀ
+        let lam = Mat::from_fn(n, n, |r, c| if r == c { evals[r] } else { 0.0 });
+        let rec = v.matmul(&lam).matmul(&v.transpose());
+        prop_assert!(
+            rec.max_diff(&a) < 1e-8 * (1.0 + a.frobenius()),
+            "reconstruction error {} for n={n}",
+            rec.max_diff(&a)
+        );
+        // eigenvalues sorted descending
+        for w in evals.windows(2) {
+            prop_assert!(w[0] >= w[1] - 1e-12, "unsorted eigenvalues");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schur_eig_residual_small() {
+    check("eig_residual", 40, |g| {
+        let n = g.dim_in(1, 14);
+        let a = random_mat(g, n);
+        let e = eig(&a).map_err(|err| format!("eig failed: {err}"))?;
+        let ac = CMat::from_real(&a);
+        for k in 0..n {
+            let v = e.vectors.col(k);
+            let av = ac.matvec(&v);
+            for r in 0..n {
+                let resid = (av[r] - e.values[k] * v[r]).abs();
+                prop_assert!(
+                    resid < 1e-6 * (1.0 + a.frobenius()),
+                    "residual {resid} at eigenpair {k}, n={n}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigenvalue_sum_is_trace() {
+    check("trace_invariant", 60, |g| {
+        let n = g.dim_in(1, 12);
+        let a = random_mat(g, n);
+        let e = eig(&a).map_err(|err| format!("eig failed: {err}"))?;
+        let trace: f64 = (0..n).map(|i| a.get(i, i)).sum();
+        let sum: Cplx = e
+            .values
+            .iter()
+            .fold(Cplx::ZERO, |acc, &v| acc + v);
+        prop_assert!(
+            (sum.re - trace).abs() < 1e-8 * (1.0 + trace.abs()),
+            "Σλ = {} vs trace {trace}",
+            sum.re
+        );
+        prop_assert!(sum.im.abs() < 1e-8, "eigenvalues not conjugate-paired");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gram_is_psd_and_symmetric() {
+    check("gram_psd", 40, |g| {
+        let n = g.dim_in(2, 500);
+        let m = g.dim_in(1, 16);
+        let cols: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal_f32(n, 1.0)).collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let gram_m = gram::gram(&refs);
+        for i in 0..m {
+            for j in 0..m {
+                prop_assert!(
+                    gram_m.get(i, j) == gram_m.get(j, i),
+                    "gram not symmetric"
+                );
+            }
+        }
+        let (evals, _) = eig_sym(&gram_m);
+        prop_assert!(
+            evals.iter().all(|&l| l > -1e-6 * evals[0].max(1.0)),
+            "gram not PSD: {evals:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cmat_solve_roundtrip() {
+    check("cmat_solve", 60, |g| {
+        let n = g.dim_in(1, 12);
+        let a = CMat::from_fn(n, n, |_, _| {
+            Cplx::new(g.rng.normal(), g.rng.normal())
+        });
+        let x: Vec<Cplx> = (0..n)
+            .map(|_| Cplx::new(g.rng.normal(), g.rng.normal()))
+            .collect();
+        let b = a.matvec(&x);
+        let solved = a.solve(&b).map_err(|e| format!("solve: {e}"))?;
+        for (got, want) in solved.iter().zip(&x) {
+            prop_assert!(
+                (*got - *want).abs() < 1e-7 * (1.0 + want.abs()),
+                "solve roundtrip off"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_project_combine_adjoint() {
+    // ⟨C k, w⟩ = ⟨k, Cᵀ w⟩ — combine and project are adjoint.
+    check("project_combine_adjoint", 40, |g| {
+        let n = g.dim_in(2, 400);
+        let m = g.dim_in(1, 10);
+        let cols: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal_f32(n, 1.0)).collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let k = g.vec_normal(m, 1.0);
+        let w = g.vec_normal_f32(n, 1.0);
+        let ck = gram::combine(&refs, &k);
+        let lhs: f64 = ck.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let ctw = gram::project(&refs, &w);
+        let rhs: f64 = ctw.iter().zip(&k).map(|(a, b)| a * b).sum();
+        prop_assert!(
+            (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()),
+            "adjoint identity violated: {lhs} vs {rhs}"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,142 @@
+//! Property tests for the PDE substrate over random parameter draws
+//! from the paper's sampling box.
+
+use dmdtrain::data::latin_hypercube;
+use dmdtrain::pde::{AdrSolver, Grid, SampleParams, VelocityField, LX, LY, X0};
+use dmdtrain::prop_assert;
+use dmdtrain::rng::Rng;
+use dmdtrain::util::prop::check;
+
+const RANGES: &[(f64, f64)] = &[
+    (1.0, 20.0),
+    (0.0, 10.0),
+    (0.01, 0.5),
+    (0.01, 2.0),
+    (-0.2, 0.2),
+    (-0.2, 0.2),
+];
+
+fn random_params(g: &mut dmdtrain::util::prop::Gen) -> SampleParams {
+    SampleParams {
+        k12: g.f64_in(1.0, 20.0),
+        k3: g.f64_in(0.0, 10.0),
+        d: g.f64_in(0.01, 0.5),
+        u0: g.f64_in(0.01, 2.0),
+        uh: g.f64_in(-0.2, 0.2),
+        uv: g.f64_in(-0.2, 0.2),
+    }
+}
+
+#[test]
+fn prop_lhs_stratification_every_dimension() {
+    check("lhs_strata", 20, |g| {
+        let n = g.dim_in(2, 60);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let pts = latin_hypercube(n, RANGES, &mut rng);
+        for (d, &(lo, hi)) in RANGES.iter().enumerate() {
+            let mut hits = vec![0usize; n];
+            for p in &pts {
+                let t = if hi > lo { (p[d] - lo) / (hi - lo) } else { 0.0 };
+                let stratum = ((t * n as f64) as usize).min(n - 1);
+                hits[stratum] += 1;
+            }
+            prop_assert!(
+                hits.iter().all(|&h| h == 1),
+                "dimension {d} not stratified: {hits:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_velocity_wall_conditions_exact() {
+    check("velocity_walls", 30, |g| {
+        let u0 = g.f64_in(0.01, 2.0);
+        let uh = g.f64_in(-0.2, 0.2);
+        let uv = g.f64_in(-0.2, 0.2);
+        let v = VelocityField::new(u0, uh, uv).map_err(|e| format!("{e}"))?;
+        for k in 1..5 {
+            let x = LX * k as f64 / 5.0;
+            prop_assert!(
+                (v.ux(x, 0.0) - uh).abs() < 1e-8,
+                "u_x(x,0) = {} ≠ u_h = {uh}",
+                v.ux(x, 0.0)
+            );
+            let want = uv / ((x + X0) / X0).sqrt();
+            prop_assert!(
+                (v.uy(x, 0.0) - want).abs() < 1e-8,
+                "u_y(x,0) = {} ≠ {want}",
+                v.uy(x, 0.0)
+            );
+            // far field ≈ freestream
+            prop_assert!(
+                (v.ux(x, 0.8 * LY) - u0).abs() < 0.05 * u0 + 0.05,
+                "far field u_x = {} vs U₀ = {u0}",
+                v.ux(x, 0.8 * LY)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adr_solutions_physical() {
+    check("adr_physical", 10, |g| {
+        let p = random_params(g);
+        let sol = AdrSolver::new(Grid::new(32, 16), p)
+            .map_err(|e| format!("{e}"))?
+            .solve()
+            .map_err(|e| format!("{e}"))?;
+        for (name, f) in [("c1", &sol.c1), ("c2", &sol.c2), ("c3", &sol.c3)] {
+            prop_assert!(f.is_finite(), "{name} not finite for {p:?}");
+            prop_assert!(
+                f.data().iter().all(|&v| v >= -1e-5),
+                "{name} negative for {p:?}"
+            );
+            // bounded: sources emit 0.1 over an O(1) area into an O(1)
+            // domain with outflow — fields must stay O(10)
+            prop_assert!(
+                f.max_abs() < 100.0,
+                "{name} unphysically large ({}) for {p:?}",
+                f.max_abs()
+            );
+        }
+        // pollutant only exists where reactants meet: if K12 is at the
+        // low end, total c3 is below total c1
+        let t1: f64 = sol.c1.data().iter().map(|&v| v as f64).sum();
+        let t3: f64 = sol.c3.data().iter().map(|&v| v as f64).sum();
+        prop_assert!(t1 > 0.0, "no reactant mass");
+        prop_assert!(t3 >= 0.0, "negative pollutant mass");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pollutant_monotone_in_decay() {
+    // increasing K₃ (with everything else fixed) can only reduce the
+    // total pollutant mass.
+    check("k3_monotone", 8, |g| {
+        let mut p = random_params(g);
+        p.k3 = 0.5;
+        let lo = AdrSolver::new(Grid::new(28, 14), p)
+            .map_err(|e| format!("{e}"))?
+            .solve()
+            .map_err(|e| format!("{e}"))?;
+        p.k3 = 8.0;
+        let hi = AdrSolver::new(Grid::new(28, 14), p)
+            .map_err(|e| format!("{e}"))?
+            .solve()
+            .map_err(|e| format!("{e}"))?;
+        let total = |t: &dmdtrain::tensor::Tensor| -> f64 {
+            t.data().iter().map(|&v| v as f64).sum()
+        };
+        prop_assert!(
+            total(&hi.c3) <= total(&lo.c3) * 1.001,
+            "K₃ ↑ increased pollutant: {} → {}",
+            total(&lo.c3),
+            total(&hi.c3)
+        );
+        Ok(())
+    });
+}

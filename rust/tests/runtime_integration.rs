@@ -1,0 +1,157 @@
+//! Runtime integration: AOT HLO artifacts → PJRT CPU execution, checked
+//! against the pure-Rust model oracle. Requires `make artifacts`.
+
+use dmdtrain::model::{forward, mse, Arch};
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::util;
+
+fn runtime() -> Runtime {
+    Runtime::cpu(util::repo_root().join("artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+fn random_batch(arch: &Arch, batch: usize, seed: u64) -> (Vec<Tensor>, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let params = arch.init_params(&mut rng);
+    let x = Tensor::from_fn(batch, arch.input_dim(), |_, _| rng.normal() as f32 * 0.5);
+    let y = Tensor::from_fn(batch, arch.output_dim(), |_, _| rng.normal() as f32 * 0.5);
+    (params, x, y)
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let rt = runtime();
+    for name in [
+        "train_step_test",
+        "predict_test",
+        "train_step_test_jnp",
+        "train_step_paper",
+        "predict_paper",
+        "gram_l2",
+    ] {
+        assert!(rt.manifest().get(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn predict_matches_rust_oracle() {
+    let rt = runtime();
+    let exe = rt.load("predict_test").unwrap();
+    let arch = Arch::new(exe.entry().arch.clone()).unwrap();
+    let (params, x, _) = random_batch(&arch, exe.batch(), 1);
+    let got = exe.predict_batch(&params, &x).unwrap();
+    let want = forward(&arch, &params, &x);
+    assert_eq!(got.shape(), want.shape());
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert!((g - w).abs() < 1e-4, "pallas HLO vs rust oracle: {g} vs {w}");
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    let rt = runtime();
+    let pallas = rt.load("train_step_test").unwrap();
+    let jnp = rt.load("train_step_test_jnp").unwrap();
+    let arch = Arch::new(pallas.entry().arch.clone()).unwrap();
+    let (params, x, y) = random_batch(&arch, pallas.batch(), 2);
+    let (loss_p, grads_p) = pallas.train_step(&params, &x, &y).unwrap();
+    let (loss_j, grads_j) = jnp.train_step(&params, &x, &y).unwrap();
+    assert!((loss_p - loss_j).abs() < 1e-5 * loss_j.abs().max(1.0));
+    for (gp, gj) in grads_p.iter().zip(&grads_j) {
+        for (a, b) in gp.data().iter().zip(gj.data()) {
+            assert!((a - b).abs() < 1e-4, "grad mismatch {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn train_step_loss_matches_prediction_mse() {
+    let rt = runtime();
+    let ts = rt.load("train_step_test").unwrap();
+    let pr = rt.load("predict_test").unwrap();
+    let arch = Arch::new(ts.entry().arch.clone()).unwrap();
+    let (params, x, y) = random_batch(&arch, ts.batch(), 3);
+    let (loss, _) = ts.train_step(&params, &x, &y).unwrap();
+    let pred = pr.predict_batch(&params, &x).unwrap();
+    assert!((loss - mse(&pred, &y)).abs() < 1e-5 * loss.max(1.0));
+}
+
+#[test]
+fn gradients_point_downhill() {
+    let rt = runtime();
+    let ts = rt.load("train_step_test").unwrap();
+    let arch = Arch::new(ts.entry().arch.clone()).unwrap();
+    let (mut params, x, y) = random_batch(&arch, ts.batch(), 4);
+    let (loss0, grads) = ts.train_step(&params, &x, &y).unwrap();
+    let lr = 1e-2f32;
+    for (p, g) in params.iter_mut().zip(&grads) {
+        p.axpy(-lr, g);
+    }
+    let (loss1, _) = ts.train_step(&params, &x, &y).unwrap();
+    assert!(loss1 < loss0, "gradient step increased loss: {loss0} → {loss1}");
+}
+
+#[test]
+fn predict_all_handles_ragged_row_counts() {
+    let rt = runtime();
+    let exe = rt.load("predict_test").unwrap();
+    let arch = Arch::new(exe.entry().arch.clone()).unwrap();
+    let b = exe.batch();
+    let (params, _, _) = random_batch(&arch, b, 5);
+    let mut rng = Rng::new(6);
+    // rows < batch, == batch, and a non-multiple > batch
+    for rows in [1usize, 3, b, b + 7, 2 * b] {
+        let x = Tensor::from_fn(rows, arch.input_dim(), |_, _| rng.normal() as f32);
+        let out = exe.predict_all(&params, &x).unwrap();
+        assert_eq!(out.shape(), (rows, arch.output_dim()));
+        let want = forward(&arch, &params, &x);
+        for (g, w) in out.data().iter().zip(want.data()) {
+            assert!((g - w).abs() < 1e-4, "padded predict mismatch");
+        }
+    }
+}
+
+#[test]
+fn gram_artifact_matches_native() {
+    let rt = runtime();
+    let exe = rt.load("gram_l2").unwrap();
+    let dims = exe.entry().input_shapes[0].clone();
+    let (n, m) = (dims[0], dims[1]);
+    let mut rng = Rng::new(7);
+    let s = Tensor::from_fn(n, m, |_, _| rng.normal() as f32);
+    let g = exe.gram(&s).unwrap();
+    assert_eq!(g.shape(), (m, m));
+    let cols: Vec<Vec<f32>> = (0..m)
+        .map(|c| (0..n).map(|r| s.get(r, c)).collect())
+        .collect();
+    let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+    let native = dmdtrain::linalg::gram::gram(&refs);
+    for i in 0..m {
+        for j in 0..m {
+            let (a, b) = (g.get(i, j) as f64, native.get(i, j));
+            // f32 accumulation in the kernel vs f64 natively: tolerance
+            // scales with √n
+            assert!(
+                (a - b).abs() < 1e-3 * (n as f64).sqrt(),
+                "gram[{i}][{j}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let rt = runtime();
+    let exe = rt.load("predict_test").unwrap();
+    let arch = Arch::new(exe.entry().arch.clone()).unwrap();
+    let (params, x, _) = random_batch(&arch, exe.batch(), 8);
+    assert!(exe.predict_batch(&params[..2].to_vec(), &x).is_err());
+}
+
+#[test]
+fn unknown_artifact_name_errors() {
+    let rt = runtime();
+    assert!(rt.load("train_step_nonexistent").is_err());
+}

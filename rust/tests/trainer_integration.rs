@@ -1,0 +1,226 @@
+//! Trainer integration: Algorithm 1 end-to-end on a synthetic dataset
+//! through the real PJRT runtime (pallas `test` artifact, 6→8→6).
+
+use dmdtrain::config::{Config, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::{load_params, save_params, Trainer};
+use dmdtrain::rng::Rng;
+use dmdtrain::util;
+
+fn runtime() -> Runtime {
+    Runtime::cpu(util::repo_root().join("artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+/// Synthetic smooth regression task matching the `test` artifact
+/// (6 inputs → 6 outputs, batch 16).
+fn synthetic_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, 6, |r, c| {
+            let v: f64 = (0..6)
+                .map(|k| ((k + c + 1) as f64 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.3 * v) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+fn base_config(epochs: usize, dmd: bool) -> TrainConfig {
+    let text = format!(
+        r#"
+[model]
+artifact = "test"
+[data]
+path = "unused"
+[train]
+epochs = {epochs}
+seed = 3
+eval_every = 5
+log_every = 0
+[adam]
+lr = 0.003
+[dmd]
+enabled = {dmd}
+m = 5
+s = 8
+"#
+    );
+    TrainConfig::from_config(&Config::parse(&text).unwrap()).unwrap()
+}
+
+#[test]
+fn plain_training_reduces_loss() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 1);
+    let mut trainer = Trainer::new(&rt, base_config(300, false)).unwrap();
+    let report = trainer.run(&ds).unwrap();
+    let first = report.history.points.first().unwrap().train_mse;
+    let last = report.history.final_train().unwrap();
+    assert!(last < 0.5 * first, "training barely moved: {first} → {last}"); // capacity-limited tiny net
+    assert!(report.history.final_test().unwrap().is_finite());
+    assert_eq!(report.dmd_stats.events.len(), 0);
+}
+
+#[test]
+fn dmd_events_fire_on_schedule() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 2);
+    let mut trainer = Trainer::new(&rt, base_config(23, true)).unwrap();
+    let report = trainer.run(&ds).unwrap();
+    // full-batch: 1 step per epoch, m = 5 → events at steps 5, 10, 15, 20
+    assert_eq!(report.dmd_stats.events.len(), 4);
+    for e in &report.dmd_stats.events {
+        assert!(e.rel_train.is_finite());
+        assert!(e.total_rank >= 1);
+    }
+    // profile contains the expected scopes
+    assert!(report.profile.count("backprop_exec") == 23);
+    assert!(report.profile.count("dmd_solve") == 4);
+}
+
+#[test]
+fn dmd_run_outperforms_or_matches_plain_here() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 3);
+    let plain = Trainer::new(&rt, base_config(80, false))
+        .unwrap()
+        .run(&ds)
+        .unwrap();
+    let dmd = Trainer::new(&rt, base_config(80, true))
+        .unwrap()
+        .run(&ds)
+        .unwrap();
+    let ratio =
+        dmd.history.final_train().unwrap() / plain.history.final_train().unwrap();
+    // DMD should help (paper's claim); accept parity with margin to keep
+    // the test robust across seeds
+    assert!(ratio < 1.5, "DMD made training much worse: ratio {ratio}");
+}
+
+#[test]
+fn reject_worse_guard_never_degrades_events() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 4);
+    let mut cfg = base_config(40, true);
+    cfg.dmd.as_mut().unwrap().accept_worse_factor = Some(1.0);
+    let report = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    for e in &report.dmd_stats.events {
+        assert!(
+            e.rel_train <= 1.0 + 1e-9,
+            "guarded event still degraded: {}",
+            e.rel_train
+        );
+    }
+}
+
+#[test]
+fn zero_relaxation_makes_jumps_noops() {
+    // ω = 0 ⇒ w ← w_m exactly: every event's relative error must be 1.
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 9);
+    let mut cfg = base_config(25, true);
+    cfg.dmd.as_mut().unwrap().relaxation = 0.0;
+    let report = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    assert!(!report.dmd_stats.events.is_empty());
+    for e in &report.dmd_stats.events {
+        assert!(
+            (e.rel_train - 1.0).abs() < 1e-9,
+            "ω=0 event changed the loss: rel = {}",
+            e.rel_train
+        );
+    }
+}
+
+#[test]
+fn half_relaxation_between_noop_and_full() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 10);
+    let run = |omega: f64| {
+        let mut cfg = base_config(30, true);
+        cfg.dmd.as_mut().unwrap().relaxation = omega;
+        Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap()
+    };
+    let full = run(1.0);
+    let half = run(0.5);
+    // different trajectories, both finite
+    assert!(full.history.final_train().unwrap().is_finite());
+    assert!(half.history.final_train().unwrap().is_finite());
+    assert_ne!(
+        full.history.final_train().unwrap(),
+        half.history.final_train().unwrap()
+    );
+}
+
+#[test]
+fn noise_reinjection_runs_and_stays_finite() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 11);
+    let mut cfg = base_config(30, true);
+    cfg.dmd.as_mut().unwrap().noise_reinject = true;
+    let report = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    assert!(report.history.final_train().unwrap().is_finite());
+    assert!(report.final_params.iter().all(|p| p.is_finite()));
+    assert!(!report.dmd_stats.events.is_empty());
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 5);
+    let a = Trainer::new(&rt, base_config(15, true))
+        .unwrap()
+        .run(&ds)
+        .unwrap();
+    let b = Trainer::new(&rt, base_config(15, true))
+        .unwrap()
+        .run(&ds)
+        .unwrap();
+    assert_eq!(
+        a.history.final_train().unwrap(),
+        b.history.final_train().unwrap()
+    );
+    for (pa, pb) in a.final_params.iter().zip(&b.final_params) {
+        assert_eq!(pa, pb);
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 6);
+    let mut trainer = Trainer::new(&rt, base_config(20, false)).unwrap();
+    let report = trainer.run(&ds).unwrap();
+
+    let dir = std::env::temp_dir().join("dmdtrain_trainer_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.dmdp");
+    save_params(&report.final_params, &path).unwrap();
+    let params = load_params(&path).unwrap();
+
+    let exe = rt.load("predict_test").unwrap();
+    let mse_orig = exe
+        .mse_all(&report.final_params, &ds.x_test, &ds.y_test)
+        .unwrap();
+    let mse_loaded = exe.mse_all(&params, &ds.x_test, &ds.y_test).unwrap();
+    assert_eq!(mse_orig, mse_loaded);
+}
+
+#[test]
+fn mismatched_dataset_is_rejected() {
+    let rt = runtime();
+    // wrong output width (3 instead of 6)
+    let mut rng = Rng::new(7);
+    let x = Tensor::from_fn(16, 6, |_, _| rng.normal() as f32);
+    let y = Tensor::from_fn(16, 3, |_, _| rng.normal() as f32);
+    let ds = Dataset::from_raw(x.clone(), y.clone(), x, y);
+    let mut trainer = Trainer::new(&rt, base_config(5, false)).unwrap();
+    assert!(trainer.run(&ds).is_err());
+}
