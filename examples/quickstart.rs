@@ -2,9 +2,9 @@
 //! workload:
 //!
 //! 1. generate a pollutant-dispersion dataset (Rust PDE substrate),
-//! 2. train the 6→16→32→64 DNN through the AOT-lowered *Pallas* kernels
-//!    (Layer 1+2) with plain Adam,
-//! 3. train again with DMD acceleration (Layer 3, paper Algorithm 1),
+//! 2. train the 6→16→32→64 DNN through the native multithreaded CPU
+//!    backend (fused forward + hand-derived backprop) with plain Adam,
+//! 3. train again with DMD acceleration (paper Algorithm 1),
 //! 4. report the equal-epoch improvement factor (the paper's headline).
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 2 + 3. train without and with DMD -------------------------------
     let runtime = Runtime::cpu(root.join("artifacts"))?;
-    println!("platform: {} (AOT pallas kernels)", runtime.platform());
+    println!("platform: {}", runtime.platform());
 
     let mut base = TrainConfig::from_config(&cfg)?;
     base.dataset = ds_path.to_string_lossy().into_owned();

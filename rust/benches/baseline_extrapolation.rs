@@ -36,7 +36,7 @@ fn train_with_line_fit(
         .map(|_| SnapshotBuffer::new(m))
         .collect();
 
-    let mut batcher = Batcher::new(ds.n_train(), train_exe.batch())?;
+    let mut batcher = Batcher::new(ds.n_train(), train_exe.effective_batch(ds.n_train()))?;
     let mut brng = rng.fork(1);
     let mut step = 0;
     for _epoch in 0..cfg.epochs {

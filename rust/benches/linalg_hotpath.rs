@@ -1,17 +1,35 @@
-//! §Perf micro-benches for the L3 hot paths: the Gram-product family
-//! (the only O(n·) DMD work), the small eigensolvers, and literal
-//! packing. Drives the optimization loop in EXPERIMENTS.md §Perf.
+//! §Perf micro-benches for the native hot paths: the Gram-product family
+//! (the only O(n·) DMD work) serial vs pool-parallel, the fused native
+//! `train_step` at paper scale (batch 1000) vs the single-threaded
+//! scalar baseline, and the small eigensolvers. Emits the perf
+//! trajectory artifact `BENCH_linalg.json` at the crate root (consumed
+//! by CI).
 
 mod common;
 
 use dmdtrain::linalg::{eig::eig, gram, jacobi::eig_sym};
+use dmdtrain::model::Arch;
 use dmdtrain::rng::Rng;
-use dmdtrain::tensor::Mat;
-use dmdtrain::util::bench::{bench_n, header};
+use dmdtrain::runtime::{ManifestEntry, NativeExecutable};
+use dmdtrain::tensor::{Mat, Tensor};
+use dmdtrain::util;
+use dmdtrain::util::bench::{bench_n, header, BenchStats};
+use dmdtrain::util::pool::WorkerPool;
+
+fn json_stat(s: &BenchStats) -> String {
+    format!(
+        r#"{{"name": "{}", "iters": {}, "mean_s": {:.6e}, "std_s": {:.6e}, "min_s": {:.6e}, "p50_s": {:.6e}, "p95_s": {:.6e}}}"#,
+        s.name, s.iters, s.mean_s, s.std_s, s.min_s, s.p50_s, s.p95_s
+    )
+}
 
 fn main() {
     let mut rng = Rng::new(3);
-    let iters = if common::fast_mode() { 3 } else { 20 };
+    let fast = common::fast_mode();
+    let iters = if fast { 3 } else { 20 };
+    let threads = WorkerPool::global().threads();
+    let mut results: Vec<BenchStats> = Vec::new();
+    println!("pool: {threads} threads");
     println!("{}", header());
 
     // dot / gram over the paper's biggest layer (1000×2670 + bias)
@@ -30,24 +48,96 @@ fn main() {
         "  → {:.2} GB/s effective bandwidth (2 streams)",
         gb / dot_stats.mean_s
     );
+    results.push(dot_stats);
 
-    bench_n("gram m=14 n=2.67M", iters.min(5), || gram::gram(&refs));
-    bench_n("cross_gram m=14 n=2.67M", iters.min(5), || {
+    // Gram family: serial baseline vs the pool-parallel default, with
+    // the bit-identity invariant asserted on the fly.
+    let gram_ser = bench_n("gram serial m=14 n=2.67M", iters.min(5), || {
+        gram::gram_serial(&refs)
+    });
+    let gram_par = bench_n("gram pool   m=14 n=2.67M", iters.min(5), || {
+        gram::gram(&refs)
+    });
+    {
+        let a = gram::gram_serial(&refs);
+        let b = gram::gram(&refs);
+        assert!(
+            (0..m).all(|i| (0..m).all(|j| a.get(i, j).to_bits() == b.get(i, j).to_bits())),
+            "parallel gram is not bit-identical to serial"
+        );
+    }
+    println!(
+        "  → gram speedup {:.2}× on {threads} threads (bit-identical)",
+        gram_ser.mean_s / gram_par.mean_s
+    );
+    let gram_speedup = gram_ser.mean_s / gram_par.mean_s;
+    results.push(gram_ser);
+    results.push(gram_par);
+
+    let cg = bench_n("cross_gram m=14 n=2.67M", iters.min(5), || {
         gram::cross_gram(&refs[..m - 1], &refs[1..])
     });
-    bench_n("combine m=13 n=2.67M", iters, || {
+    results.push(cg);
+    let comb_ser = bench_n("combine serial m=13 n=2.67M", iters, || {
+        gram::combine_serial(&refs[..m - 1], &vec![0.1f64; m - 1])
+    });
+    let comb_par = bench_n("combine pool   m=13 n=2.67M", iters, || {
         gram::combine(&refs[..m - 1], &vec![0.1f64; m - 1])
     });
-    bench_n("project m=13 n=2.67M", iters, || {
+    println!(
+        "  → combine speedup {:.2}×",
+        comb_ser.mean_s / comb_par.mean_s
+    );
+    results.push(comb_ser);
+    results.push(comb_par);
+    let proj = bench_n("project m=13 n=2.67M", iters, || {
         gram::project(&refs[..m - 1], refs[m - 1])
     });
+    results.push(proj);
+    drop(refs);
+    drop(cols);
+
+    // ---- native train_step at paper scale (batch 1000) ------------------
+    // The acceptance metric for the native backend: fused forward +
+    // backprop on 6→40→200→1000→2670, full pool vs strictly serial.
+    let arch = Arch::paper();
+    let batch = 1000usize;
+    let entry = ManifestEntry::native_model("train_step", "train_step_paper", &arch.dims, 0);
+    let par_exe = NativeExecutable::new(entry.clone()).expect("native exe");
+    let ser_exe = NativeExecutable::with_pool(entry, None).expect("serial exe");
+    let mut prng = Rng::new(41);
+    let params = arch.init_params(&mut prng);
+    let x = Tensor::from_fn(batch, arch.input_dim(), |_, _| prng.uniform_in(-1.0, 1.0) as f32);
+    let y = Tensor::from_fn(batch, arch.output_dim(), |_, _| prng.uniform_in(-0.5, 0.5) as f32);
+
+    let ts_iters = if fast { 1 } else { 3 };
+    let ts_ser = bench_n("train_step paper b=1000 serial", ts_iters, || {
+        ser_exe.train_step(&params, &x, &y).expect("serial train_step")
+    });
+    let ts_par = bench_n("train_step paper b=1000 pool", ts_iters, || {
+        par_exe.train_step(&params, &x, &y).expect("pool train_step")
+    });
+    let ts_speedup = ts_ser.mean_s / ts_par.mean_s;
+    let (ts_ser_mean_s, ts_par_mean_s) = (ts_ser.mean_s, ts_par.mean_s);
+    // determinism across the two pool configurations
+    let (loss_s, grads_s) = ser_exe.train_step(&params, &x, &y).unwrap();
+    let (loss_p, grads_p) = par_exe.train_step(&params, &x, &y).unwrap();
+    assert_eq!(loss_s, loss_p, "pool train_step loss differs from serial");
+    for (gs, gp) in grads_s.iter().zip(&grads_p) {
+        assert_eq!(gs.data(), gp.data(), "pool gradients differ from serial");
+    }
+    println!(
+        "  → train_step speedup {ts_speedup:.2}× on {threads} threads (target ≥ 4× multi-core; bit-identical)"
+    );
+    results.push(ts_ser);
+    results.push(ts_par);
 
     // small dense solvers (r ≤ 20 — must be negligible)
     let g = {
         let b = Mat::from_fn(64, 20, |_, _| rng.normal());
         b.transpose().matmul(&b)
     };
-    bench_n("jacobi eig_sym 20x20", 200, || eig_sym(&g));
+    results.push(bench_n("jacobi eig_sym 20x20", 200, || eig_sym(&g)));
     let a = Mat::from_fn(20, 20, |i, j| {
         if i == j {
             1.0 + 0.01 * rng.normal()
@@ -55,5 +145,20 @@ fn main() {
             0.01 * rng.normal()
         }
     });
-    bench_n("schur eig 20x20", 200, || eig(&a).unwrap());
+    results.push(bench_n("schur eig 20x20", 200, || eig(&a).unwrap()));
+
+    // ---- perf-trajectory artifact ---------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_speedup:.3},\n  \"train_step_paper_b1000_serial_s\": {:.6e},\n  \"train_step_paper_b1000_pool_s\": {:.6e},\n  \"train_step_speedup\": {ts_speedup:.3},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        ts_ser_mean_s,
+        ts_par_mean_s,
+        results
+            .iter()
+            .map(json_stat)
+            .collect::<Vec<_>>()
+            .join(",\n    ")
+    );
+    let out = util::repo_root().join("BENCH_linalg.json");
+    std::fs::write(&out, json).expect("write BENCH_linalg.json");
+    println!("\nperf artifact → {}", out.display());
 }

@@ -186,9 +186,23 @@ impl Batcher {
 
     /// Gather rows of (x, y) into batch tensors.
     pub fn gather(x: &Tensor, y: &Tensor, idx: &[usize]) -> (Tensor, Tensor) {
-        let bx = Tensor::from_fn(idx.len(), x.cols(), |r, c| x.get(idx[r], c));
-        let by = Tensor::from_fn(idx.len(), y.cols(), |r, c| y.get(idx[r], c));
+        let mut bx = Tensor::zeros(idx.len(), x.cols());
+        let mut by = Tensor::zeros(idx.len(), y.cols());
+        Self::gather_into(x, y, idx, &mut bx, &mut by);
         (bx, by)
+    }
+
+    /// Gather rows of (x, y) into preallocated batch tensors — row-wise
+    /// `copy_from_slice` instead of per-element indexing, and zero
+    /// allocations when the destination pair is reused across steps
+    /// (the trainer's mini-batch scratch).
+    pub fn gather_into(x: &Tensor, y: &Tensor, idx: &[usize], bx: &mut Tensor, by: &mut Tensor) {
+        assert_eq!(bx.shape(), (idx.len(), x.cols()), "bx shape mismatch");
+        assert_eq!(by.shape(), (idx.len(), y.cols()), "by shape mismatch");
+        for (r, &i) in idx.iter().enumerate() {
+            bx.row_mut(r).copy_from_slice(x.row(i));
+            by.row_mut(r).copy_from_slice(y.row(i));
+        }
     }
 }
 
@@ -276,6 +290,22 @@ mod tests {
         assert_eq!(bx.get(0, 0), 2.0);
         assert_eq!(bx.get(1, 0), 0.0);
         assert_eq!(by.get(0, 0), 20.0);
+    }
+
+    #[test]
+    fn gather_into_reuses_buffers() {
+        let x = Tensor::from_fn(5, 3, |r, c| (10 * r + c) as f32);
+        let y = Tensor::from_fn(5, 2, |r, c| (100 * r + c) as f32);
+        let mut bx = Tensor::zeros(2, 3);
+        let mut by = Tensor::zeros(2, 2);
+        Batcher::gather_into(&x, &y, &[4, 1], &mut bx, &mut by);
+        assert_eq!(bx.row(0), x.row(4));
+        assert_eq!(bx.row(1), x.row(1));
+        assert_eq!(by.row(0), y.row(4));
+        // second gather into the same buffers overwrites cleanly
+        Batcher::gather_into(&x, &y, &[0, 2], &mut bx, &mut by);
+        assert_eq!(bx.row(0), x.row(0));
+        assert_eq!(by.row(1), y.row(2));
     }
 
     #[test]

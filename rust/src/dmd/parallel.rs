@@ -3,13 +3,22 @@
 //! Paper §3: "the whole for loop in this algorithm can be easily
 //! parallelized by computing DMD modes and updating weights concurrently
 //! across all layers." Layers are independent (layer-local snapshot
-//! matrices), so one scoped thread per layer suffices; the heavy layers
+//! matrices), so one pool task per layer suffices; the heavy layers
 //! (200×1000, 1000×2670) dominate, giving near-linear speedup over the
-//! serial loop for the paper architecture.
+//! serial loop for the paper architecture. Tasks run on the shared
+//! [`WorkerPool`] (the same one the native backend and the Gram products
+//! use), and the inner Gram/combine products nest on it safely — a
+//! waiting task helps drain the queue instead of deadlocking.
+//!
+//! The `parallel_matches_serial` test below is the repo's standing
+//! bit-identity invariant: because every product reduces in a fixed
+//! panel order (see `linalg::gram`), parallel and serial dispatch agree
+//! to the last bit.
 
 use super::engine::{dmd_extrapolate, DmdOutcome};
 use super::snapshots::SnapshotBuffer;
 use crate::config::DmdParams;
+use crate::util::pool::WorkerPool;
 
 /// Per-layer result (layer index + outcome or error).
 pub struct LayerOutcome {
@@ -26,7 +35,8 @@ pub fn extrapolate_all_layers(
     steps: usize,
     parallel: bool,
 ) -> Vec<LayerOutcome> {
-    if !parallel || buffers.len() <= 1 {
+    let pool = WorkerPool::global();
+    if !parallel || buffers.len() <= 1 || pool.threads() == 1 {
         return buffers
             .iter()
             .enumerate()
@@ -38,24 +48,26 @@ pub fn extrapolate_all_layers(
     }
 
     let mut outcomes: Vec<Option<LayerOutcome>> = (0..buffers.len()).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = buffers
+    {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = buffers
             .iter()
+            .zip(outcomes.iter_mut())
             .enumerate()
-            .map(|(layer, buf)| {
-                scope.spawn(move || LayerOutcome {
-                    layer,
-                    result: dmd_extrapolate(&buf.columns(), params, steps),
-                })
+            .map(|(layer, (buf, slot))| {
+                Box::new(move || {
+                    *slot = Some(LayerOutcome {
+                        layer,
+                        result: dmd_extrapolate(&buf.columns(), params, steps),
+                    });
+                }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
-        for h in handles {
-            let out = h.join().expect("DMD layer thread panicked");
-            let slot = out.layer;
-            outcomes[slot] = Some(out);
-        }
-    });
-    outcomes.into_iter().map(|o| o.unwrap()).collect()
+        pool.run_tasks(tasks);
+    }
+    outcomes
+        .into_iter()
+        .map(|o| o.expect("pool task filled its layer slot"))
+        .collect()
 }
 
 #[cfg(test)]

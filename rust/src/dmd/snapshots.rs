@@ -11,6 +11,9 @@ pub struct SnapshotBuffer {
     cols: Vec<Vec<f32>>,
     /// Optimizer step at which each column was recorded.
     steps: Vec<usize>,
+    /// Retired column allocations, recycled by the next fill cycle so
+    /// the steady-state snapshot path never allocates.
+    free: Vec<Vec<f32>>,
 }
 
 impl SnapshotBuffer {
@@ -21,6 +24,7 @@ impl SnapshotBuffer {
             capacity,
             cols: Vec::with_capacity(capacity),
             steps: Vec::with_capacity(capacity),
+            free: Vec::new(),
         }
     }
 
@@ -43,17 +47,36 @@ impl SnapshotBuffer {
     /// Record a snapshot. Panics if already full — Algorithm 1 always
     /// clears after the DMD jump.
     pub fn push(&mut self, step: usize, weights: &[f32]) {
+        self.push_parts(step, &[weights]);
+    }
+
+    /// Record a snapshot assembled from consecutive slices — the (w, b)
+    /// pair of a layer — copied straight into a recycled column. This is
+    /// the allocation-free fast path `Trainer::record_snapshots` uses
+    /// instead of materializing `Arch::flatten_layer`'s fresh `Vec`
+    /// every step.
+    pub fn push_parts(&mut self, step: usize, parts: &[&[f32]]) {
         assert!(!self.is_full(), "snapshot buffer overflow");
+        let total: usize = parts.iter().map(|p| p.len()).sum();
         if let Some(first) = self.cols.first() {
-            assert_eq!(first.len(), weights.len(), "snapshot length changed");
+            assert_eq!(first.len(), total, "snapshot length changed");
         }
-        self.cols.push(weights.to_vec());
+        let mut col = self
+            .free
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(total));
+        col.clear();
+        for p in parts {
+            col.extend_from_slice(p);
+        }
+        self.cols.push(col);
         self.steps.push(step);
     }
 
-    /// Reuse the oldest column's allocation when refilling after a clear.
+    /// Retire all columns into the recycle list (their allocations are
+    /// reused by the next fill cycle).
     pub fn clear(&mut self) {
-        self.cols.clear();
+        self.free.append(&mut self.cols);
         self.steps.clear();
     }
 
@@ -123,6 +146,36 @@ mod tests {
         assert_eq!(b.bytes(), 0);
         b.push(5, &[3.0]);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn push_parts_concatenates_and_recycles() {
+        let mut b = SnapshotBuffer::new(2);
+        b.push_parts(0, &[&[1.0, 2.0][..], &[3.0][..]]);
+        b.push_parts(1, &[&[4.0, 5.0][..], &[6.0][..]]);
+        assert_eq!(b.dim(), 3);
+        assert_eq!(b.last(), Some(&[4.0f32, 5.0, 6.0][..]));
+        // capture the allocations, clear, refill: pointers must be reused
+        let ptrs: Vec<*const f32> = b.cols.iter().map(|c| c.as_ptr()).collect();
+        b.clear();
+        assert!(b.is_empty());
+        b.push_parts(2, &[&[7.0, 8.0, 9.0][..]]);
+        b.push_parts(3, &[&[1.0][..], &[2.0, 3.0][..]]);
+        assert_eq!(b.len(), 2);
+        let reused: Vec<*const f32> = b.cols.iter().map(|c| c.as_ptr()).collect();
+        for p in &reused {
+            assert!(ptrs.contains(p), "column allocation was not recycled");
+        }
+        assert_eq!(b.columns()[0], &[7.0f32, 8.0, 9.0][..]);
+        assert_eq!(b.columns()[1], &[1.0f32, 2.0, 3.0][..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length changed")]
+    fn push_parts_dimension_change_panics() {
+        let mut b = SnapshotBuffer::new(3);
+        b.push_parts(0, &[&[0.0, 1.0][..]]);
+        b.push_parts(1, &[&[0.0][..], &[1.0, 2.0][..]]);
     }
 
     #[test]

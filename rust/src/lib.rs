@@ -1,41 +1,52 @@
 //! # dmdtrain — DMD-accelerated neural-network training
 //!
 //! Reproduction of *"Accelerating Training in Artificial Neural Networks
-//! with Dynamic Mode Decomposition"* (Tano, Portwood & Ragusa, 2020) as a
-//! three-layer Rust + JAX + Pallas system:
+//! with Dynamic Mode Decomposition"* (Tano, Portwood & Ragusa, 2020),
+//! built around a **native multithreaded CPU backend**: the whole
+//! training hot path (fused soft-sign forward, hand-derived backprop,
+//! the per-layer DMD solves and the O(n·m²) Gram products) runs in pure
+//! Rust, parallelized over one persistent worker pool
+//! ([`util::pool::WorkerPool`]).
 //!
-//! * **Layer 3 (this crate)** — the training coordinator: Adam optimizer,
-//!   per-layer weight-snapshot ring buffers, the DMD engine (low-cost SVD
-//!   via the Gram matrix → reduced Koopman operator → eigen-extrapolation,
-//!   paper §3 / Algorithm 1), per-layer parallel DMD dispatch, the
-//!   pollutant-dispersion PDE data generator (paper §4 / Appendix 1), the
-//!   sensitivity-sweep coordinator (Fig 3) and the CLI.
-//! * **Layer 2 (python/compile, build-time)** — the regression DNN
-//!   (6→40→200→1000→2670, soft-sign) lowered via `jax.jit(...).lower` to
-//!   HLO text, loaded here through [`runtime`] (PJRT CPU client).
-//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels
-//!   (fused dense + soft-sign, Gram products) called from the Layer-2
-//!   graph, validated against pure-jnp oracles.
+//! ## Backend selection
 //!
-//! Python never runs on the training path: `make artifacts` lowers the
-//! compute graphs once; the `dmdtrain` binary is self-contained after.
+//! * **Native (default)** — zero external dependencies, no artifacts on
+//!   disk. `Runtime::cpu(...)` resolves the standard artifact names
+//!   ("test", "quickstart", "sweep", "paper") from a built-in manifest
+//!   and executes them with [`linalg::gemm`]'s blocked parallel kernels.
+//! * **PJRT/XLA (`--features pjrt`)** — the original AOT path: the DNN
+//!   (6→40→200→1000→2670, soft-sign) lowered via `jax.jit(...).lower`
+//!   to HLO text by `make artifacts` (python/compile, with Pallas
+//!   kernels for dense+soft-sign and Gram), executed through the
+//!   external `xla` crate. Select at runtime with
+//!   `DMDTRAIN_BACKEND=pjrt`.
+//!
+//! ## Deterministic parallelism
+//!
+//! Every parallel kernel is bit-identical to its serial execution, for
+//! any thread count: GEMM partitions *output rows* (each element is
+//! accumulated by one thread in serial loop order), and the Gram family
+//! reduces per-[`linalg::gram::PANEL`] partial dots in a fixed ascending
+//! panel order. `dmd::parallel`'s `parallel_matches_serial` test is the
+//! standing invariant; seeds reproduce exactly regardless of
+//! `DMDTRAIN_THREADS`.
 //!
 //! Crate map (see DESIGN.md for the paper-to-module inventory):
 //!
 //! | module | role |
 //! |--------|------|
 //! | [`tensor`] | dense row-major f32/f64 matrices |
-//! | [`linalg`] | matmul/Gram, Jacobi symmetric eig, complex Schur eig |
+//! | [`linalg`] | parallel GEMM/Gram, Jacobi symmetric eig, Schur eig |
 //! | [`dmd`] | snapshots, low-cost SVD, reduced Koopman, extrapolation |
 //! | [`optim`] | Adam, SGD, per-weight extrapolation baseline |
-//! | [`model`] | MLP architecture, Xavier init, HLO parameter packing |
+//! | [`model`] | MLP architecture, Xavier init, forward oracle |
 //! | [`data`] | Latin-hypercube sampling, dataset format, scaling |
-//! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
-//! | [`runtime`] | PJRT client, HLO-text artifacts, manifest |
+//! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`) |
 //! | [`trainer`] | Algorithm 1 driver: backprop + DMD hooks + metrics |
 //! | [`coordinator`] | (m, s) sensitivity sweeps across worker threads |
+//! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
 //! | [`cli`], [`config`] | hand-rolled argv parser and TOML-subset config |
-//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates |
+//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates (incl. the worker pool) |
 
 pub mod cli;
 pub mod config;

@@ -1,0 +1,418 @@
+//! Blocked, parallel f32 GEMM — the native backend's training hot path.
+//!
+//! Three kernels cover the whole fused forward/backward pass of the
+//! soft-sign MLP (see `runtime::native`):
+//!
+//! * [`gemm_nn_bias_act`] — `C = act(A·B + bias)` (forward dense layer),
+//! * [`gemm_nt`] — `C = A·Bᵀ` (gradient back-propagation `δ Wᵀ`),
+//! * [`gemm_tn`] — `C = Aᵀ·B` (weight gradients `hᵀ δ`).
+//!
+//! Parallelism is *output-partitioned*: contiguous output-row ranges go
+//! to pool tasks, every output element is accumulated by exactly one
+//! thread in exactly the serial loop order, so results are bit-identical
+//! to serial execution for any thread count. Cache blocking (column
+//! panels of `NB`, i-blocks of `IB` in the transposed kernel) reorders
+//! only *which* elements are touched when — never the accumulation order
+//! within an element.
+//!
+//! [`gemm_nn_bias_act`] intentionally matches `model::forward`'s scalar
+//! loop (ascending-k accumulation, zero-input skip), so native `predict`
+//! reproduces the pure-Rust oracle exactly, not just approximately.
+
+use crate::util::pool::{aligned_ranges, WorkerPool};
+
+/// Column-panel width: `NB` f32 of the output row stay register/L1
+/// resident while a k-strip of B streams through.
+const NB: usize = 256;
+
+/// i-block for the transposed kernel: one pass over B updates `IB`
+/// output rows, cutting B traffic by `IB`×.
+const IB: usize = 8;
+
+/// Below this flop count the task-dispatch overhead dominates — run
+/// serially even when a pool is supplied.
+const PAR_FLOPS: usize = 1 << 17;
+
+fn tasks_for(pool: &WorkerPool) -> usize {
+    pool.threads() * 2
+}
+
+/// Split a row-major buffer into per-range row slices (ranges are
+/// contiguous, ascending and cover all rows).
+fn split_rows<'a>(
+    mut rest: &'a mut [f32],
+    ranges: &[std::ops::Range<usize>],
+    row_len: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut parts = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut((r.end - r.start) * row_len);
+        parts.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+    parts
+}
+
+/// `out = act(A·B + bias)`: A is (m×k), B is (k×n), `bias` broadcasts
+/// over rows, `softsign` applies x/(1+|x|) to every element (hidden
+/// layers; the head stays linear).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_bias_act(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(out.len(), m * n, "C shape");
+    if let Some(bi) = bias {
+        assert_eq!(bi.len(), n, "bias length");
+    }
+    let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && m > 1);
+    match par {
+        None => kernel_nn(a, k, b, n, bias, softsign, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(m, tasks_for(pool), 1);
+            let parts = split_rows(out, &ranges, n);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let a_rows = &a[r.start * k..r.end * k];
+                    Box::new(move || kernel_nn(a_rows, k, b, n, bias, softsign, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+}
+
+/// Serial NN kernel over a row block. Accumulation per output element is
+/// ascending in k with a single f32 accumulator — the exact order of the
+/// `model::forward` oracle (including its zero-input skip).
+fn kernel_nn(
+    a_rows: &[f32],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    let rows = if k > 0 { a_rows.len() / k } else { out.len() / n.max(1) };
+    for r in 0..rows {
+        let arow = &a_rows[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        match bias {
+            Some(bi) => orow.copy_from_slice(bi),
+            None => orow.fill(0.0),
+        }
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + NB).min(n);
+            let oblk = &mut orow[jb..je];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // oracle-identical skip
+                }
+                let bblk = &b[kk * n + jb..kk * n + je];
+                for (o, &bv) in oblk.iter_mut().zip(bblk) {
+                    *o += av * bv;
+                }
+            }
+            jb = je;
+        }
+        if softsign {
+            for v in orow.iter_mut() {
+                *v = *v / (1.0 + v.abs());
+            }
+        }
+    }
+}
+
+/// `out = A·Bᵀ`: A is (m×k), B is (n×k) — both operands are read along
+/// contiguous rows, each output element is one unrolled dot product.
+pub fn gemm_nt(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), n * k, "B shape");
+    assert_eq!(out.len(), m * n, "C shape");
+    let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && m > 1);
+    match par {
+        None => kernel_nt(a, k, b, n, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(m, tasks_for(pool), 1);
+            let parts = split_rows(out, &ranges, n);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let a_rows = &a[r.start * k..r.end * k];
+                    Box::new(move || kernel_nt(a_rows, k, b, n, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+}
+
+fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    let rows = if k > 0 {
+        a_rows.len() / k
+    } else if n > 0 {
+        out.len() / n
+    } else {
+        0
+    };
+    for r in 0..rows {
+        let arow = &a_rows[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_f32(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Four-lane unrolled f32 dot product (fixed lane order — deterministic).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = 4 * i;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in 4 * chunks..a.len() {
+        tail += a[j] * b[j];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// `out = Aᵀ·B`: A is (m×k), B is (m×n), out is (k×n). Output rows
+/// (columns of A) are processed in blocks of [`IB`] so one streaming
+/// pass over B feeds `IB` accumulator rows.
+pub fn gemm_tn(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), m * n, "B shape");
+    assert_eq!(out.len(), k * n, "C shape");
+    let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && k > 1);
+    match par {
+        None => kernel_tn(a, m, k, b, n, 0..k, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(k, tasks_for(pool), IB);
+            let parts = split_rows(out, &ranges, n);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let range = r.clone();
+                    Box::new(move || kernel_tn(a, m, k, b, n, range, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+}
+
+/// Serial TN kernel for output rows `i_range` (writes into `out`, whose
+/// row 0 corresponds to `i_range.start`). Accumulation per element is
+/// ascending in the shared dimension m — deterministic.
+fn kernel_tn(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i_range: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    let base = i_range.start;
+    let mut ib = i_range.start;
+    while ib < i_range.end {
+        let ie = (ib + IB).min(i_range.end);
+        for r in 0..m {
+            let brow = &b[r * n..(r + 1) * n];
+            for i in ib..ie {
+                let av = a[r * k + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(i - base) * n..(i - base + 1) * n];
+                let mut jb = 0;
+                while jb < n {
+                    let je = (jb + NB).min(n);
+                    let bblk = &brow[jb..je];
+                    for (o, &bv) in orow[jb..je].iter_mut().zip(bblk) {
+                        *o += av * bv;
+                    }
+                    jb = je;
+                }
+            }
+        }
+        ib = ie;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Naive reference with the same ascending-k order as the kernels.
+    fn naive_nn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for kk in 0..k {
+                let av = a[r * k + kk];
+                for j in 0..n {
+                    out[r * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn nn_matches_naive_and_parallel_is_bit_identical() {
+        let (m, k, n) = (37, 23, 41);
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let mut serial = vec![0.0f32; m * n];
+        kernel_nn(&a, k, &b, n, None, false, &mut serial);
+        let want = naive_nn(&a, m, k, &b, n);
+        for (s, w) in serial.iter().zip(&want) {
+            assert!((s - w).abs() < 1e-4, "{s} vs {w}");
+        }
+        // bigger problem so the parallel path actually engages
+        let (m, k, n) = (160, 80, 96);
+        let a = rand_vec(m * k, 3);
+        let b = rand_vec(k * n, 4);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_nn_bias_act(None, &a, m, k, &b, n, None, false, &mut serial);
+        let pool = WorkerPool::new(4);
+        let mut par = vec![0.0f32; m * n];
+        gemm_nn_bias_act(Some(&pool), &a, m, k, &b, n, None, false, &mut par);
+        assert_eq!(serial, par, "parallel NN must be bit-identical to serial");
+    }
+
+    #[test]
+    fn nn_bias_and_softsign_fused() {
+        let (m, k, n) = (5, 4, 3);
+        let a = rand_vec(m * k, 5);
+        let b = rand_vec(k * n, 6);
+        let bias = rand_vec(n, 7);
+        let mut out = vec![0.0f32; m * n];
+        gemm_nn_bias_act(None, &a, m, k, &b, n, Some(&bias), true, &mut out);
+        let lin = naive_nn(&a, m, k, &b, n);
+        for r in 0..m {
+            for j in 0..n {
+                let z = lin[r * n + j] + bias[j];
+                let want = z / (1.0 + z.abs());
+                let got = out[r * n + j];
+                assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_matches_oracle_transpose() {
+        let (m, k, n) = (9, 31, 7);
+        let a = rand_vec(m * k, 8);
+        let bt = rand_vec(n * k, 9); // B stored (n×k): out = A·Bᵀ
+        let mut out = vec![0.0f32; m * n];
+        gemm_nt(None, &a, m, k, &bt, n, &mut out);
+        for r in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[r * k + kk] * bt[j * k + kk]).sum();
+                assert!((out[r * n + j] - want).abs() < 1e-4);
+            }
+        }
+        let pool = WorkerPool::new(3);
+        let (m, k, n) = (120, 90, 70);
+        let a = rand_vec(m * k, 10);
+        let bt = rand_vec(n * k, 11);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_nt(None, &a, m, k, &bt, n, &mut serial);
+        let mut par = vec![0.0f32; m * n];
+        gemm_nt(Some(&pool), &a, m, k, &bt, n, &mut par);
+        assert_eq!(serial, par, "parallel NT must be bit-identical to serial");
+    }
+
+    #[test]
+    fn tn_matches_transposed_naive() {
+        let (m, k, n) = (21, 13, 17);
+        let a = rand_vec(m * k, 12);
+        let b = rand_vec(m * n, 13);
+        let mut out = vec![0.0f32; k * n];
+        gemm_tn(None, &a, m, k, &b, n, &mut out);
+        for i in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|r| a[r * k + i] * b[r * n + j]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-4);
+            }
+        }
+        let pool = WorkerPool::new(4);
+        let (m, k, n) = (150, 64, 48);
+        let a = rand_vec(m * k, 14);
+        let b = rand_vec(m * n, 15);
+        let mut serial = vec![0.0f32; k * n];
+        gemm_tn(None, &a, m, k, &b, n, &mut serial);
+        let mut par = vec![0.0f32; k * n];
+        gemm_tn(Some(&pool), &a, m, k, &b, n, &mut par);
+        assert_eq!(serial, par, "parallel TN must be bit-identical to serial");
+    }
+
+    #[test]
+    fn dot_f32_matches_sum() {
+        let a = rand_vec(103, 16);
+        let b = rand_vec(103, 17);
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot_f32(&a, &b) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let mut out = vec![0.0f32; 0];
+        gemm_nn_bias_act(None, &[], 0, 0, &[], 0, None, false, &mut out);
+        let mut out1 = vec![0.0f32; 3];
+        // k = 0: out = bias only
+        gemm_nn_bias_act(None, &[], 1, 0, &[], 3, Some(&[1.0, 2.0, 3.0]), false, &mut out1);
+        assert_eq!(out1, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -10,8 +10,21 @@
 //! the n-dimensional space — nothing n×r is ever materialized (see
 //! DESIGN.md §5): the Koopman modes are applied as
 //! `Φ c = W₊ · (V Σ⁻¹ Y c)`, i.e. a [`combine`] over snapshot columns.
+//!
+//! # Deterministic parallel reduction
+//!
+//! The products are parallelized over the shared worker pool by
+//! range-splitting at fixed [`PANEL`] boundaries. The unit of
+//! accumulation is one panel: each (column-pair, panel) partial dot is
+//! computed by exactly one thread with the serial inner loop, partials
+//! are stored per panel, and the final reduction sums panels in
+//! ascending panel order — a *fixed* tree independent of thread count.
+//! Parallel results are therefore bit-identical to serial execution
+//! (`*_serial` variants; enforced by tests here and by
+//! `dmd::parallel::tests::parallel_matches_serial`).
 
 use crate::tensor::Mat;
+use crate::util::pool::{aligned_ranges, WorkerPool};
 
 /// Dot product of two equal-length f32 slices with f64 accumulation.
 ///
@@ -39,82 +52,233 @@ pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
 /// Row-panel size for the blocked Gram products: 4096 f32 = 16 KiB per
 /// column, so a full panel across m ≤ 20 columns (≤320 KiB) stays in L2
 /// and each column chunk is read from RAM exactly once instead of m
-/// times. Measured ~5× on the paper's 2.67 M-row layer (§Perf).
-const PANEL: usize = 4096;
+/// times. Measured ~5× on the paper's 2.67 M-row layer (§Perf). Also the
+/// fixed parallel split granularity (see module docs).
+pub const PANEL: usize = 4096;
 
-/// `G = CᵀC` for columns `C = [c₀ … c_{m-1}]`: `G[i][j] = cᵢ·cⱼ`.
-/// Exploits symmetry (m(m+1)/2 dots) and row-panel blocking.
-pub fn gram(cols: &[&[f32]]) -> Mat {
-    let m = cols.len();
-    let n = cols.first().map_or(0, |c| c.len());
-    let mut acc = vec![0.0f64; m * m];
-    let mut start = 0;
-    while start < n {
-        let end = (start + PANEL).min(n);
-        for i in 0..m {
-            let ci = &cols[i][start..end];
-            for j in i..m {
-                acc[i * m + j] += dot_f32_f64(ci, &cols[j][start..end]);
+/// Work threshold below which the pool is bypassed (task dispatch would
+/// dominate the panel dots).
+const PAR_WORK: usize = 1 << 18;
+
+fn panel_count(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (n - 1) / PANEL + 1
+    }
+}
+
+fn use_pool<'p>(
+    pool: Option<&'p WorkerPool>,
+    n: usize,
+    pair_work: usize,
+) -> Option<&'p WorkerPool> {
+    pool.filter(|p| p.threads() > 1 && panel_count(n) > 1 && n.saturating_mul(pair_work) >= PAR_WORK)
+}
+
+/// Compute per-panel partial dots for `pairs` (each an index pair into
+/// `a`/`b` column sets) and reduce them in ascending panel order.
+fn panel_partials(
+    a: &[&[f32]],
+    b: &[&[f32]],
+    pairs: &[(usize, usize)],
+    n: usize,
+    pool: Option<&WorkerPool>,
+) -> Vec<f64> {
+    let np = panel_count(n);
+    let pc = pairs.len();
+    if np == 0 || pc == 0 {
+        return vec![0.0f64; pc];
+    }
+    let mut partials = vec![0.0f64; np * pc];
+    let fill_panels = |first_panel: usize, chunk: &mut [f64]| {
+        for (off, slot) in chunk.chunks_mut(pc).enumerate() {
+            let p = first_panel + off;
+            let start = p * PANEL;
+            let end = (start + PANEL).min(n);
+            for (s, &(i, j)) in slot.iter_mut().zip(pairs) {
+                *s = dot_f32_f64(&a[i][start..end], &b[j][start..end]);
             }
         }
-        start = end;
+    };
+    match use_pool(pool, n, pc) {
+        None => fill_panels(0, &mut partials),
+        Some(pool) => {
+            let ranges = aligned_ranges(np, pool.threads() * 2, 1);
+            let mut rest: &mut [f64] = &mut partials;
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut((r.end - r.start) * pc);
+                let first = r.start;
+                let f = &fill_panels;
+                tasks.push(Box::new(move || f(first, head)));
+                rest = tail;
+            }
+            pool.run_tasks(tasks);
+        }
     }
-    let mut g = Mat::zeros(m, m);
+    // fixed reduction: ascending panel order, one accumulator per pair —
+    // identical to the serial single-accumulator panel loop.
+    let mut acc = vec![0.0f64; pc];
+    for p in 0..np {
+        let slot = &partials[p * pc..(p + 1) * pc];
+        for (dst, &v) in acc.iter_mut().zip(slot) {
+            *dst += v;
+        }
+    }
+    acc
+}
+
+fn gram_impl(cols: &[&[f32]], pool: Option<&WorkerPool>) -> Mat {
+    let m = cols.len();
+    let n = cols.first().map_or(0, |c| c.len());
+    let mut pairs = Vec::with_capacity(m * (m + 1) / 2);
     for i in 0..m {
         for j in i..m {
-            g.set(i, j, acc[i * m + j]);
-            g.set(j, i, acc[i * m + j]);
+            pairs.push((i, j));
         }
+    }
+    let acc = panel_partials(cols, cols, &pairs, n, pool);
+    let mut g = Mat::zeros(m, m);
+    for (&(i, j), &v) in pairs.iter().zip(&acc) {
+        g.set(i, j, v);
+        g.set(j, i, v);
     }
     g
 }
 
-/// `C = AᵀB` for column sets A (ma cols) and B (mb cols), row-panel
-/// blocked like [`gram`].
-pub fn cross_gram(a: &[&[f32]], b: &[&[f32]]) -> Mat {
+/// `G = CᵀC` for columns `C = [c₀ … c_{m-1}]`: `G[i][j] = cᵢ·cⱼ`.
+/// Exploits symmetry (m(m+1)/2 dots), row-panel blocking, and the shared
+/// worker pool (bit-identical to [`gram_serial`]).
+pub fn gram(cols: &[&[f32]]) -> Mat {
+    gram_impl(cols, Some(WorkerPool::global()))
+}
+
+/// [`gram`] on an explicit pool (`None` = serial) — for callers that
+/// manage their own pool, e.g. the native backend's baseline mode.
+pub fn gram_with(pool: Option<&WorkerPool>, cols: &[&[f32]]) -> Mat {
+    gram_impl(cols, pool)
+}
+
+/// Single-threaded [`gram`] (baseline + determinism oracle).
+pub fn gram_serial(cols: &[&[f32]]) -> Mat {
+    gram_impl(cols, None)
+}
+
+fn cross_gram_impl(a: &[&[f32]], b: &[&[f32]], pool: Option<&WorkerPool>) -> Mat {
     let (ma, mb) = (a.len(), b.len());
     let n = a.first().map_or(0, |c| c.len());
-    let mut acc = vec![0.0f64; ma * mb];
-    let mut start = 0;
-    while start < n {
-        let end = (start + PANEL).min(n);
-        for i in 0..ma {
-            let ai = &a[i][start..end];
-            for j in 0..mb {
-                acc[i * mb + j] += dot_f32_f64(ai, &b[j][start..end]);
-            }
-        }
-        start = end;
-    }
-    let mut c = Mat::zeros(ma, mb);
+    let mut pairs = Vec::with_capacity(ma * mb);
     for i in 0..ma {
         for j in 0..mb {
-            c.set(i, j, acc[i * mb + j]);
+            pairs.push((i, j));
         }
+    }
+    let acc = panel_partials(a, b, &pairs, n, pool);
+    let mut c = Mat::zeros(ma, mb);
+    for (&(i, j), &v) in pairs.iter().zip(&acc) {
+        c.set(i, j, v);
     }
     c
 }
 
-/// `Cᵀ w` — project an n-vector onto each column (m dots).
-pub fn project(cols: &[&[f32]], w: &[f32]) -> Vec<f64> {
-    cols.iter().map(|c| dot_f32_f64(c, w)).collect()
+/// `C = AᵀB` for column sets A (ma cols) and B (mb cols), row-panel
+/// blocked like [`gram`] and parallel over the shared pool.
+pub fn cross_gram(a: &[&[f32]], b: &[&[f32]]) -> Mat {
+    cross_gram_impl(a, b, Some(WorkerPool::global()))
 }
 
-/// `C k` — linear combination of columns with f64 coefficients, emitted
-/// as the f32 weight vector that goes back into the network.
-pub fn combine(cols: &[&[f32]], coeffs: &[f64]) -> Vec<f32> {
-    assert_eq!(cols.len(), coeffs.len());
-    let n = cols.first().map_or(0, |c| c.len());
-    let mut out = vec![0.0f64; n];
+/// Single-threaded [`cross_gram`].
+pub fn cross_gram_serial(a: &[&[f32]], b: &[&[f32]]) -> Mat {
+    cross_gram_impl(a, b, None)
+}
+
+fn project_impl(cols: &[&[f32]], w: &[f32], pool: Option<&WorkerPool>) -> Vec<f64> {
+    let n = w.len();
+    let mut out = vec![0.0f64; cols.len()];
+    match use_pool(pool, n, cols.len()) {
+        None => {
+            for (o, c) in out.iter_mut().zip(cols) {
+                *o = dot_f32_f64(c, w);
+            }
+        }
+        Some(pool) => {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .iter_mut()
+                .zip(cols)
+                .map(|(o, c)| {
+                    Box::new(move || *o = dot_f32_f64(c, w)) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+    out
+}
+
+/// `Cᵀ w` — project an n-vector onto each column (m dots, one per task;
+/// every dot runs the serial kernel, so results are thread-count
+/// independent).
+pub fn project(cols: &[&[f32]], w: &[f32]) -> Vec<f64> {
+    project_impl(cols, w, Some(WorkerPool::global()))
+}
+
+/// Combine a contiguous element range: f64 accumulation over columns in
+/// order, cast to f32 at the end — element-independent, so any
+/// partitioning is bit-identical to serial.
+fn combine_range(
+    cols: &[&[f32]],
+    coeffs: &[f64],
+    range: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let mut acc = vec![0.0f64; range.end - range.start];
     for (col, &k) in cols.iter().zip(coeffs) {
         if k == 0.0 {
             continue;
         }
-        for (o, &v) in out.iter_mut().zip(col.iter()) {
+        for (o, &v) in acc.iter_mut().zip(&col[range.clone()]) {
             *o += k * v as f64;
         }
     }
-    out.into_iter().map(|v| v as f32).collect()
+    for (o, &v) in out.iter_mut().zip(&acc) {
+        *o = v as f32;
+    }
+}
+
+fn combine_impl(cols: &[&[f32]], coeffs: &[f64], pool: Option<&WorkerPool>) -> Vec<f32> {
+    assert_eq!(cols.len(), coeffs.len());
+    let n = cols.first().map_or(0, |c| c.len());
+    let mut out = vec![0.0f32; n];
+    match use_pool(pool, n, cols.len()) {
+        None => combine_range(cols, coeffs, 0..n, &mut out),
+        Some(pool) => {
+            let ranges = aligned_ranges(n, pool.threads() * 2, PANEL);
+            let mut rest: &mut [f32] = &mut out;
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut(r.end - r.start);
+                let range = r.clone();
+                tasks.push(Box::new(move || combine_range(cols, coeffs, range, head)));
+                rest = tail;
+            }
+            pool.run_tasks(tasks);
+        }
+    }
+    out
+}
+
+/// `C k` — linear combination of columns with f64 coefficients, emitted
+/// as the f32 weight vector that goes back into the network. Parallel
+/// over PANEL-aligned output ranges (disjoint writes — bit-identical to
+/// [`combine_serial`]).
+pub fn combine(cols: &[&[f32]], coeffs: &[f64]) -> Vec<f32> {
+    combine_impl(cols, coeffs, Some(WorkerPool::global()))
+}
+
+/// Single-threaded [`combine`].
+pub fn combine_serial(cols: &[&[f32]], coeffs: &[f64]) -> Vec<f32> {
+    combine_impl(cols, coeffs, None)
 }
 
 #[cfg(test)]
@@ -200,5 +364,64 @@ mod tests {
         let cols = random_cols(33, 3, 9);
         let out = combine(&refs(&cols), &[0.0, 0.0, 0.0]);
         assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    // ---- deterministic-parallel-reduction invariants --------------------
+
+    #[test]
+    fn parallel_gram_bit_identical_to_serial() {
+        // n spans several panels with a ragged tail so the parallel split
+        // actually engages and boundary handling is exercised.
+        let n = 3 * PANEL + 1234;
+        let cols = random_cols(n, 6, 21);
+        let r = refs(&cols);
+        let par = gram(&r);
+        let ser = gram_serial(&r);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(
+                    par.get(i, j).to_bits(),
+                    ser.get(i, j).to_bits(),
+                    "gram[{i}][{j}] differs between parallel and serial"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_cross_gram_bit_identical_to_serial() {
+        let n = 4 * PANEL + 777;
+        let a = random_cols(n, 5, 22);
+        let b = random_cols(n, 4, 23);
+        let par = cross_gram(&refs(&a), &refs(&b));
+        let ser = cross_gram_serial(&refs(&a), &refs(&b));
+        for i in 0..5 {
+            for j in 0..4 {
+                assert_eq!(par.get(i, j).to_bits(), ser.get(i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_combine_bit_identical_to_serial() {
+        let n = 16 * PANEL + 99;
+        let cols = random_cols(n, 7, 24);
+        let coeffs: Vec<f64> = (0..7).map(|i| 0.1 * (i as f64) - 0.3).collect();
+        let par = combine(&refs(&cols), &coeffs);
+        let ser = combine_serial(&refs(&cols), &coeffs);
+        assert_eq!(par.len(), ser.len());
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn gram_ragged_panel_tail_matches_oracle() {
+        let n = PANEL + 3;
+        let cols = random_cols(n, 3, 25);
+        let g = gram(&refs(&cols));
+        let w = Mat::from_fn(n, 3, |r, c| cols[c][r] as f64);
+        let want = w.transpose().matmul(&w);
+        assert!(g.max_diff(&want) < 1e-5 * n as f64);
     }
 }

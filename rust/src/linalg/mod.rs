@@ -7,7 +7,11 @@
 //!
 //! * [`complex`] — `Cplx` scalar arithmetic.
 //! * [`cmat`] — small dense complex matrices + LU solve (mode projection).
-//! * [`gram`] — Gram/cross-Gram/combine products over f32 snapshot columns.
+//! * [`gemm`] — blocked, pool-parallel f32 GEMM (the native backend's
+//!   forward/backward kernels; deterministic output partitioning).
+//! * [`gram`] — Gram/cross-Gram/combine products over f32 snapshot
+//!   columns, parallel with a fixed panel-reduction order (bit-identical
+//!   to serial).
 //! * [`jacobi`] — cyclic-Jacobi symmetric eigensolver (the m×m SVD step).
 //! * [`schur`] — Hessenberg reduction + complex shifted-QR Schur form.
 //! * [`eig`] — eigenvalues/eigenvectors of small real nonsymmetric
@@ -16,6 +20,7 @@
 pub mod cmat;
 pub mod complex;
 pub mod eig;
+pub mod gemm;
 pub mod gram;
 pub mod jacobi;
 pub mod schur;

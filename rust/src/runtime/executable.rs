@@ -1,199 +1,104 @@
-//! A compiled artifact + typed entry points for the trainer.
+//! `Executable` — one typed entry point per artifact, dispatching to the
+//! selected backend:
 //!
-//! Handles f32 literal packing for the manifest calling convention
-//! (`w1, b1, …, wL, bL, x[, y]`, biases rank-1) and tuple unpacking of
-//! the outputs (`return_tuple=True` at lowering).
+//! * [`NativeExecutable`] (default) — pure-Rust fused forward/backprop
+//!   over the shared worker pool, zero external dependencies;
+//! * `PjrtExecutable` (feature `pjrt`) — the AOT HLO path through the
+//!   external `xla` crate.
+//!
+//! The trainer, coordinator, CLI, examples and benches all talk to this
+//! enum, so swapping backends never touches call sites.
 
 use super::manifest::ManifestEntry;
+use super::native::NativeExecutable;
+#[cfg(feature = "pjrt")]
+use super::pjrt::{PjrtDeviceBatch, PjrtExecutable};
 use crate::tensor::Tensor;
 
-/// A compiled HLO module with its manifest contract.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    entry: ManifestEntry,
+/// A loaded artifact on some backend.
+pub enum Executable {
+    Native(NativeExecutable),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtExecutable),
 }
 
-/// A device-resident (x, y) batch. In the paper's full-batch regime the
-/// training batch never changes, so uploading it once and reusing the
-/// PJRT buffers removes a per-step host→device copy of the whole batch
-/// (8.5 MB/step at paper scale) — see EXPERIMENTS.md §Perf.
-pub struct DeviceBatch {
-    bufs: Vec<xla::PjRtBuffer>,
-    rows: usize,
+/// A batch pinned for repeated [`Executable::train_step_on`] calls. On
+/// the native backend the data is already "device-resident" (host
+/// memory), so pinning just borrows the dataset tensors — zero copies;
+/// on PJRT it holds uploaded device buffers.
+pub enum DeviceBatch<'a> {
+    Native { x: &'a Tensor, y: &'a Tensor },
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtDeviceBatch),
 }
 
-impl DeviceBatch {
+impl DeviceBatch<'_> {
     pub fn rows(&self) -> usize {
-        self.rows
+        match self {
+            DeviceBatch::Native { x, .. } => x.rows(),
+            #[cfg(feature = "pjrt")]
+            DeviceBatch::Pjrt(b) => b.rows(),
+        }
     }
 }
 
 impl Executable {
-    pub(super) fn new(exe: xla::PjRtLoadedExecutable, entry: ManifestEntry) -> Self {
-        Executable { exe, entry }
-    }
-
     pub fn entry(&self) -> &ManifestEntry {
-        &self.entry
-    }
-
-    pub fn batch(&self) -> usize {
-        self.entry.batch
-    }
-
-    /// Pack a tensor as an f32 literal with explicit dims (rank 1 for
-    /// biases / rank 2 otherwise, per the manifest shape).
-    fn literal(t: &Tensor, dims: &[usize]) -> anyhow::Result<xla::Literal> {
-        let count: usize = dims.iter().product();
-        anyhow::ensure!(
-            count == t.len(),
-            "literal shape {:?} vs tensor {:?}",
-            dims,
-            t.shape()
-        );
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
-        };
-        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
-            .map_err(|e| anyhow::anyhow!("literal packing: {e:?}"))
-    }
-
-    /// Unpack an f32 literal into a Tensor with the given logical shape.
-    fn tensor_from(lit: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Tensor> {
-        let v: Vec<f32> = lit
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
-        anyhow::ensure!(
-            v.len() == rows * cols,
-            "output size {} vs {}x{}",
-            v.len(),
-            rows,
-            cols
-        );
-        Ok(Tensor::from_vec(rows, cols, v))
-    }
-
-    fn execute(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
-        anyhow::ensure!(
-            inputs.len() == self.entry.input_shapes.len(),
-            "'{}' expects {} inputs, got {}",
-            self.entry.name,
-            self.entry.input_shapes.len(),
-            inputs.len()
-        );
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute '{}': {e:?}", self.entry.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch '{}': {e:?}", self.entry.name))?;
-        let outs = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple '{}': {e:?}", self.entry.name))?;
-        anyhow::ensure!(
-            outs.len() == self.entry.num_outputs,
-            "'{}' returned {} outputs, manifest says {}",
-            self.entry.name,
-            outs.len(),
-            self.entry.num_outputs
-        );
-        Ok(outs)
-    }
-
-    /// Pack the parameter list (+ batch tensors) per the manifest.
-    fn pack_inputs(
-        &self,
-        params: &[Tensor],
-        extra: &[&Tensor],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
-        let shapes = &self.entry.input_shapes;
-        anyhow::ensure!(
-            params.len() + extra.len() == shapes.len(),
-            "'{}': {} params + {} batch tensors vs {} inputs",
-            self.entry.name,
-            params.len(),
-            extra.len(),
-            shapes.len()
-        );
-        let mut lits = Vec::with_capacity(shapes.len());
-        for (t, dims) in params
-            .iter()
-            .chain(extra.iter().copied())
-            .zip(shapes.iter())
-        {
-            lits.push(Self::literal(t, dims)?);
+        match self {
+            Executable::Native(e) => e.entry(),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => e.entry(),
         }
-        Ok(lits)
     }
 
-    /// Upload an (x, y) batch to the device for repeated use with
-    /// [`Self::train_step_on`].
-    pub fn upload_batch(&self, x: &Tensor, y: &Tensor) -> anyhow::Result<DeviceBatch> {
-        anyhow::ensure!(self.entry.kind == "train_step", "not a train_step artifact");
-        let client = self.exe.client().clone();
-        let shapes = &self.entry.input_shapes;
-        let (xd, yd) = (&shapes[shapes.len() - 2], &shapes[shapes.len() - 1]);
-        anyhow::ensure!(
-            x.len() == xd.iter().product::<usize>() && y.len() == yd.iter().product(),
-            "batch shape mismatch"
-        );
-        let up = |t: &Tensor, dims: &[usize]| {
-            client
-                .buffer_from_host_buffer::<f32>(t.data(), dims, None)
-                .map_err(|e| anyhow::anyhow!("batch upload: {e:?}"))
-        };
-        Ok(DeviceBatch {
-            bufs: vec![up(x, xd)?, up(y, yd)?],
-            rows: x.rows(),
-        })
+    /// Static batch size (0 = dynamic: the native backend accepts any
+    /// row count and the trainer uses the full training set).
+    pub fn batch(&self) -> usize {
+        self.entry().batch
     }
 
-    /// `train_step` against a device-resident batch: only the parameters
-    /// move host→device each step.
+    /// Resolve the batch size against a training-set size: dynamic
+    /// entries (batch = 0) train full-batch — the single place the
+    /// 0-means-dynamic convention is interpreted.
+    pub fn effective_batch(&self, n_train: usize) -> usize {
+        match self.entry().batch {
+            0 => n_train,
+            b => b,
+        }
+    }
+
+    /// Pin an (x, y) batch for repeated [`Self::train_step_on`] calls.
+    pub fn upload_batch<'a>(
+        &self,
+        x: &'a Tensor,
+        y: &'a Tensor,
+    ) -> anyhow::Result<DeviceBatch<'a>> {
+        match self {
+            Executable::Native(e) => {
+                anyhow::ensure!(
+                    e.entry().kind == "train_step",
+                    "not a train_step artifact"
+                );
+                Ok(DeviceBatch::Native { x, y })
+            }
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => Ok(DeviceBatch::Pjrt(e.upload_batch(x, y)?)),
+        }
+    }
+
+    /// `train_step` against a pinned batch.
     pub fn train_step_on(
         &self,
         params: &[Tensor],
-        batch: &DeviceBatch,
+        batch: &DeviceBatch<'_>,
     ) -> anyhow::Result<(f64, Vec<Tensor>)> {
-        anyhow::ensure!(self.entry.kind == "train_step", "not a train_step artifact");
-        let shapes = &self.entry.input_shapes;
-        anyhow::ensure!(
-            params.len() + 2 == shapes.len(),
-            "'{}' expects {} params",
-            self.entry.name,
-            shapes.len() - 2
-        );
-        let client = self.exe.client().clone();
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(shapes.len());
-        for (t, dims) in params.iter().zip(shapes.iter()) {
-            bufs.push(
-                client
-                    .buffer_from_host_buffer::<f32>(t.data(), dims, None)
-                    .map_err(|e| anyhow::anyhow!("param upload: {e:?}"))?,
-            );
+        match (self, batch) {
+            (Executable::Native(e), DeviceBatch::Native { x, y }) => e.train_step(params, x, y),
+            #[cfg(feature = "pjrt")]
+            (Executable::Pjrt(e), DeviceBatch::Pjrt(b)) => e.train_step_on(params, b),
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("DeviceBatch belongs to a different backend"),
         }
-        let arg_refs: Vec<&xla::PjRtBuffer> =
-            bufs.iter().chain(batch.bufs.iter()).collect();
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&arg_refs)
-            .map_err(|e| anyhow::anyhow!("execute_b '{}': {e:?}", self.entry.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
-        let outs = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        anyhow::ensure!(outs.len() == self.entry.num_outputs, "output arity");
-        let loss = outs[0]
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow::anyhow!("loss read: {e:?}"))? as f64;
-        let mut grads = Vec::with_capacity(params.len());
-        for (i, param) in params.iter().enumerate() {
-            grads.push(Self::tensor_from(&outs[1 + i], param.rows(), param.cols())?);
-        }
-        Ok((loss, grads))
     }
 
     /// `train_step`: returns (loss, gradients in parameter order).
@@ -203,74 +108,50 @@ impl Executable {
         x: &Tensor,
         y: &Tensor,
     ) -> anyhow::Result<(f64, Vec<Tensor>)> {
-        anyhow::ensure!(self.entry.kind == "train_step", "not a train_step artifact");
-        let inputs = self.pack_inputs(params, &[x, y])?;
-        let outs = self.execute(&inputs)?;
-        let loss = outs[0]
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow::anyhow!("loss read: {e:?}"))? as f64;
-        let mut grads = Vec::with_capacity(params.len());
-        for (i, param) in params.iter().enumerate() {
-            grads.push(Self::tensor_from(
-                &outs[1 + i],
-                param.rows(),
-                param.cols(),
-            )?);
+        match self {
+            Executable::Native(e) => e.train_step(params, x, y),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => e.train_step(params, x, y),
         }
-        Ok((loss, grads))
     }
 
-    /// `predict` on exactly one batch (rows == manifest batch).
+    /// `predict` on one batch (static-batch artifacts enforce the row
+    /// count).
     pub fn predict_batch(&self, params: &[Tensor], x: &Tensor) -> anyhow::Result<Tensor> {
-        anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
-        anyhow::ensure!(x.rows() == self.entry.batch, "predict batch mismatch");
-        let inputs = self.pack_inputs(params, &[x])?;
-        let outs = self.execute(&inputs)?;
-        let n_out = *self.entry.arch.last().unwrap();
-        Self::tensor_from(&outs[0], self.entry.batch, n_out)
-    }
-
-    /// `predict` over an arbitrary number of rows: chunks of the static
-    /// batch size, zero-padding the tail and discarding padded rows.
-    pub fn predict_all(&self, params: &[Tensor], x: &Tensor) -> anyhow::Result<Tensor> {
-        let b = self.entry.batch;
-        let n = x.rows();
-        let n_out = *self.entry.arch.last().unwrap();
-        let mut out = Tensor::zeros(n, n_out);
-        let mut row = 0;
-        while row < n {
-            let take = (n - row).min(b);
-            let chunk = Tensor::from_fn(b, x.cols(), |r, c| {
-                if r < take {
-                    x.get(row + r, c)
-                } else {
-                    0.0
-                }
-            });
-            let pred = self.predict_batch(params, &chunk)?;
-            for r in 0..take {
-                out.row_mut(row + r).copy_from_slice(pred.row(r));
-            }
-            row += take;
+        match self {
+            Executable::Native(e) => e.predict_batch(params, x),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => e.predict_batch(params, x),
         }
-        Ok(out)
     }
 
-    /// MSE over an arbitrary row count via [`Self::predict_all`]
-    /// (masked — padded rows excluded).
+    /// `predict` over an arbitrary number of rows.
+    pub fn predict_all(&self, params: &[Tensor], x: &Tensor) -> anyhow::Result<Tensor> {
+        match self {
+            Executable::Native(e) => e.predict_all(params, x),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => e.predict_all(params, x),
+        }
+    }
+
+    /// MSE over an arbitrary row count via [`Self::predict_all`].
     pub fn mse_all(&self, params: &[Tensor], x: &Tensor, y: &Tensor) -> anyhow::Result<f64> {
         let pred = self.predict_all(params, x)?;
+        anyhow::ensure!(
+            pred.shape() == y.shape(),
+            "mse_all: prediction {:?} vs target {:?}",
+            pred.shape(),
+            y.shape()
+        );
         Ok(pred.mse(y))
     }
 
-    /// `gram` artifact: run the standalone Pallas Gram kernel (snapshot
-    /// matrix (n, m) → (m, m)).
+    /// Standalone Gram kernel (snapshot matrix (n, m) → (m, m)).
     pub fn gram(&self, s: &Tensor) -> anyhow::Result<Tensor> {
-        anyhow::ensure!(self.entry.kind == "gram", "not a gram artifact");
-        let dims = &self.entry.input_shapes[0];
-        let inputs = vec![Self::literal(s, dims)?];
-        let outs = self.execute(&inputs)?;
-        let m = dims[1];
-        Self::tensor_from(&outs[0], m, m)
+        match self {
+            Executable::Native(e) => e.gram(s),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => e.gram(s),
+        }
     }
 }

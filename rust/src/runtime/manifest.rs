@@ -23,6 +23,57 @@ pub struct ManifestEntry {
     pub num_outputs: usize,
 }
 
+impl ManifestEntry {
+    /// Entry for a native model artifact (no file on disk). `batch = 0`
+    /// means dynamic: the native kernels accept any row count and the
+    /// trainer uses the full training set.
+    pub fn native_model(kind: &str, name: &str, arch: &[usize], batch: usize) -> ManifestEntry {
+        let mut input_shapes: Vec<Vec<usize>> = Vec::new();
+        for w in arch.windows(2) {
+            input_shapes.push(vec![w[0], w[1]]);
+            input_shapes.push(vec![w[1]]);
+        }
+        let n_in = arch.first().copied().unwrap_or(0);
+        let n_out = arch.last().copied().unwrap_or(0);
+        let num_outputs = match kind {
+            "train_step" => {
+                input_shapes.push(vec![batch, n_in]);
+                input_shapes.push(vec![batch, n_out]);
+                1 + 2 * arch.len().saturating_sub(1)
+            }
+            _ => {
+                input_shapes.push(vec![batch, n_in]);
+                1
+            }
+        };
+        ManifestEntry {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            path: String::new(),
+            arch: arch.to_vec(),
+            batch,
+            kernel: "native".to_string(),
+            input_shapes,
+            num_outputs,
+        }
+    }
+
+    /// Entry for a native standalone Gram product over an (n, m)
+    /// snapshot matrix.
+    pub fn native_gram(name: &str, n: usize, m: usize) -> ManifestEntry {
+        ManifestEntry {
+            name: name.to_string(),
+            kind: "gram".to_string(),
+            path: String::new(),
+            arch: Vec::new(),
+            batch: 0,
+            kernel: "native".to_string(),
+            input_shapes: vec![vec![n, m]],
+            num_outputs: 1,
+        }
+    }
+}
+
 /// Parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
@@ -30,6 +81,49 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The built-in native manifest: the standard artifact names the
+    /// repo's trainer, benches and examples refer to, served with zero
+    /// files on disk. An on-disk `artifacts/manifest.json` overrides
+    /// this wholesale when present (see `Runtime::native`).
+    pub fn builtin() -> Manifest {
+        let mut entries = BTreeMap::new();
+        let mut add = |e: ManifestEntry| {
+            entries.insert(e.name.clone(), e);
+        };
+        let models: [(&str, &[usize], usize); 4] = [
+            // ("test" keeps its historical static batch so the trainer
+            // integration tests exercise the static-batch path)
+            ("test", &[6, 8, 6], 16),
+            ("quickstart", &[6, 16, 32, 64], 0),
+            ("sweep", &[6, 40, 200, 267], 0),
+            ("paper", &[6, 40, 200, 1000, 2670], 0),
+        ];
+        for (base, arch, batch) in models {
+            add(ManifestEntry::native_model(
+                "train_step",
+                &format!("train_step_{base}"),
+                arch,
+                batch,
+            ));
+            add(ManifestEntry::native_model(
+                "predict",
+                &format!("predict_{base}"),
+                arch,
+                batch,
+            ));
+        }
+        // name-compat alias for the historical jnp-kernel variant
+        add(ManifestEntry::native_model(
+            "train_step",
+            "train_step_test_jnp",
+            &[6, 8, 6],
+            16,
+        ));
+        add(ManifestEntry::native_gram("gram_l2", 8_200, 20));
+        add(ManifestEntry::native_gram("gram_l3", 201_000, 14));
+        Manifest { entries }
+    }
+
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Manifest> {
         let text = std::fs::read_to_string(&path).map_err(|e| {
             anyhow::anyhow!(
@@ -157,5 +251,38 @@ mod tests {
             assert!(m.get("train_step_paper").is_some());
             assert!(m.get("predict_test").is_some());
         }
+    }
+
+    #[test]
+    fn builtin_serves_standard_names() {
+        let m = Manifest::builtin();
+        for name in [
+            "train_step_test",
+            "predict_test",
+            "train_step_test_jnp",
+            "train_step_quickstart",
+            "predict_quickstart",
+            "train_step_sweep",
+            "predict_sweep",
+            "train_step_paper",
+            "predict_paper",
+            "gram_l2",
+            "gram_l3",
+        ] {
+            assert!(m.get(name).is_some(), "builtin missing {name}");
+        }
+        let ts = m.get("train_step_paper").unwrap();
+        assert_eq!(ts.arch, vec![6, 40, 200, 1000, 2670]);
+        assert_eq!(ts.batch, 0, "paper entry is dynamic-batch");
+        assert_eq!(ts.num_outputs, 1 + 2 * 4);
+        assert_eq!(ts.kernel, "native");
+        let t = m.get("train_step_test").unwrap();
+        assert_eq!(t.batch, 16, "test entry keeps its static batch");
+        // input shapes follow the historical calling convention
+        assert_eq!(t.input_shapes.len(), 2 * 2 + 2);
+        assert_eq!(t.input_shapes[0], vec![6, 8]);
+        assert_eq!(t.input_shapes[1], vec![8]);
+        let g = m.get("gram_l2").unwrap();
+        assert_eq!(g.input_shapes[0], vec![8_200, 20]);
     }
 }

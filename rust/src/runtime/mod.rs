@@ -1,42 +1,114 @@
-//! PJRT runtime: load the AOT-lowered HLO-text artifacts produced by
-//! `make artifacts` (python/compile/aot.py) and execute them from the
-//! training hot path. Python never runs here.
+//! Execution runtime with pluggable backends.
 //!
-//! Interchange is HLO *text* — jax ≥ 0.5 emits `HloModuleProto`s with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+//! * **Native (default)** — the training hot path (`train_step`,
+//!   `predict`, `gram`) runs entirely in Rust ([`native`]), parallelized
+//!   over the shared worker pool. No artifacts, no external crates: a
+//!   built-in manifest ([`Manifest::builtin`]) describes the known
+//!   architectures ("test", "quickstart", "sweep", "paper"), and an
+//!   on-disk `artifacts/manifest.json` — when present — overrides it, so
+//!   custom archs lowered by `make artifacts` still resolve by name.
+//! * **PJRT (feature `pjrt`, off by default)** — loads the AOT-lowered
+//!   HLO-text artifacts produced by `make artifacts`
+//!   (python/compile/aot.py) and executes them through the external
+//!   `xla` crate. Interchange is HLO *text* — jax ≥ 0.5 emits
+//!   `HloModuleProto`s with 64-bit instruction ids that xla_extension
+//!   0.5.1 rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md and aot.py). Select at runtime with
+//!   `DMDTRAIN_BACKEND=pjrt` (or [`Runtime::pjrt`]).
 
 mod executable;
 mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-pub use executable::Executable;
+pub use executable::{DeviceBatch, Executable};
 pub use manifest::{Manifest, ManifestEntry};
+pub use native::NativeExecutable;
 
 use std::path::{Path, PathBuf};
 
-/// A PJRT CPU client plus the artifact directory it loads from.
+/// Which engine executes the loaded artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+/// A backend plus the manifest it resolves artifact names against.
 ///
-/// NOT `Send`: PJRT client handles are thread-affine in the `xla` crate —
-/// sweep workers each build their own `Runtime` (see
-/// `coordinator::sweep`).
+/// The native runtime is cheap to construct and freely shareable;
+/// PJRT client handles are thread-affine in the `xla` crate — sweep
+/// workers each build their own `Runtime` (see `coordinator::sweep`).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
+    backend: BackendKind,
     manifest: Manifest,
+    artifact_dir: PathBuf,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
 }
 
 impl Runtime {
-    /// CPU-backed runtime over an artifact directory (usually
-    /// `<repo>/artifacts`).
+    /// CPU runtime over an artifact directory (usually
+    /// `<repo>/artifacts`). Defaults to the native backend;
+    /// `DMDTRAIN_BACKEND=pjrt` selects the AOT/HLO path (and fails
+    /// loudly when the `pjrt` feature is not compiled in, rather than
+    /// silently running the wrong engine).
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        match std::env::var("DMDTRAIN_BACKEND").ok().as_deref() {
+            None | Some("") | Some("native") => Self::native(artifact_dir),
+            Some("pjrt") => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Self::pjrt(artifact_dir)
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    anyhow::bail!(
+                        "DMDTRAIN_BACKEND=pjrt but the pjrt backend is not compiled in — \
+                         rebuild with `--features pjrt` (see Cargo.toml for the xla dependency)"
+                    )
+                }
+            }
+            Some(other) => anyhow::bail!(
+                "unknown DMDTRAIN_BACKEND '{other}' (expected 'native' or 'pjrt')"
+            ),
+        }
+    }
+
+    /// The native backend. `artifact_dir/manifest.json` is honored when
+    /// present (custom archs); otherwise the built-in manifest serves
+    /// the standard artifact names with zero files on disk.
+    pub fn native(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let artifact_dir = artifact_dir.as_ref().to_path_buf();
+        let manifest_path = artifact_dir.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            Manifest::load(manifest_path)?
+        } else {
+            Manifest::builtin()
+        };
+        Ok(Runtime {
+            backend: BackendKind::Native,
+            manifest,
+            artifact_dir,
+            #[cfg(feature = "pjrt")]
+            client: None,
+        })
+    }
+
+    /// The PJRT/XLA backend (requires `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
         let artifact_dir = artifact_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(artifact_dir.join("manifest.json"))?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
         Ok(Runtime {
-            client,
-            artifact_dir,
+            backend: BackendKind::Pjrt,
             manifest,
+            artifact_dir,
+            client: Some(client),
         })
     }
 
@@ -45,34 +117,83 @@ impl Runtime {
         crate::util::repo_root().join("artifacts")
     }
 
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match self.backend {
+            BackendKind::Native => format!(
+                "native-cpu ({} threads)",
+                crate::util::pool::WorkerPool::global().threads()
+            ),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => self
+                .client
+                .as_ref()
+                .map(|c| c.platform_name())
+                .unwrap_or_else(|| "pjrt".to_string()),
+        }
     }
 
-    /// Load + compile one artifact by manifest name (e.g.
-    /// `train_step_paper`). Compilation happens once; call sites cache the
-    /// returned [`Executable`] for the whole run.
+    /// Load one artifact by manifest name (e.g. `train_step_paper`).
+    /// Native loads are instant; PJRT compiles once — call sites cache
+    /// the returned [`Executable`] for the whole run.
     pub fn load(&self, name: &str) -> anyhow::Result<Executable> {
         let entry = self
             .manifest
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
             .clone();
-        let path = self.artifact_dir.join(&entry.path);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile '{name}': {e:?}"))?;
-        Ok(Executable::new(exe, entry))
+        match self.backend {
+            BackendKind::Native => Ok(Executable::Native(NativeExecutable::new(entry)?)),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                let path = self.artifact_dir.join(&entry.path);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+                )
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .as_ref()
+                    .expect("pjrt runtime has a client")
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compile '{name}': {e:?}"))?;
+                Ok(Executable::Pjrt(pjrt::PjrtExecutable::new(exe, entry)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_without_artifacts() {
+        let dir = std::env::temp_dir().join("dmdtrain_no_artifacts_here");
+        let rt = Runtime::native(&dir).unwrap();
+        assert_eq!(rt.backend(), BackendKind::Native);
+        assert!(rt.platform().starts_with("native-cpu"));
+        let exe = rt.load("train_step_paper").unwrap();
+        assert_eq!(exe.entry().arch, vec![6, 40, 200, 1000, 2670]);
+        assert!(rt.load("train_step_nonexistent").is_err());
+    }
+
+    #[test]
+    fn cpu_defaults_to_native() {
+        let rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
+        assert_eq!(rt.backend(), BackendKind::Native);
     }
 }

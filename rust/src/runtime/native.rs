@@ -1,0 +1,358 @@
+//! The native CPU backend: fused forward + hand-derived backprop for the
+//! soft-sign MLP, executed entirely in Rust over the shared worker pool.
+//!
+//! This is the default execution engine — no AOT artifacts, no external
+//! runtime. The forward pass is `linalg::gemm::gemm_nn_bias_act` per
+//! layer (bias + soft-sign fused into the GEMM epilogue); the backward
+//! pass is the analytic gradient of
+//!
+//! ```text
+//! L = mean[(f(x) − y)²],   f = wL·σ(…σ(x·w1 + b1)…) + bL,
+//! σ(z) = z/(1+|z|),  σ′(z) = 1/(1+|z|)² = (1−|σ(z)|)²
+//! ```
+//!
+//! so `σ′` is recovered from the stored *activation* — no pre-activation
+//! tensor is kept. Gradients match the loss exactly (central-difference
+//! checked in `tests/native_backend.rs`), and `predict` reproduces the
+//! `model::forward` oracle bit-for-bit: the GEMM accumulates each output
+//! element in the same ascending-k order as the oracle's scalar loop.
+//!
+//! Parallelism is deterministic: GEMM work is output-row partitioned, so
+//! any thread count produces identical floats (see `linalg::gemm`).
+
+use super::manifest::ManifestEntry;
+use crate::linalg::gemm;
+use crate::model::Arch;
+use crate::tensor::Tensor;
+use crate::util::pool::WorkerPool;
+
+/// A "compiled" native artifact: the architecture plus the pool the
+/// kernels fan out over (`None` = strictly single-threaded — the scalar
+/// baseline in `benches/linalg_hotpath.rs`).
+pub struct NativeExecutable {
+    entry: ManifestEntry,
+    arch: Option<Arch>,
+    pool: Option<&'static WorkerPool>,
+}
+
+impl NativeExecutable {
+    /// Build on the process-wide worker pool (the default backend path).
+    pub fn new(entry: ManifestEntry) -> anyhow::Result<Self> {
+        Self::with_pool(entry, Some(WorkerPool::global()))
+    }
+
+    /// Build with an explicit pool choice; `None` forces serial kernels.
+    pub fn with_pool(
+        entry: ManifestEntry,
+        pool: Option<&'static WorkerPool>,
+    ) -> anyhow::Result<Self> {
+        let arch = if entry.kind == "gram" {
+            None
+        } else {
+            Some(Arch::new(entry.arch.clone())?)
+        };
+        Ok(NativeExecutable { entry, arch, pool })
+    }
+
+    pub fn entry(&self) -> &ManifestEntry {
+        &self.entry
+    }
+
+    /// Static batch size; 0 means dynamic (any row count, trainer uses
+    /// the full training set).
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    fn arch(&self) -> anyhow::Result<&Arch> {
+        self.arch
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("'{}' has no model architecture", self.entry.name))
+    }
+
+    fn check_params(&self, arch: &Arch, params: &[Tensor]) -> anyhow::Result<()> {
+        let shapes = arch.param_shapes();
+        anyhow::ensure!(
+            params.len() == shapes.len(),
+            "'{}' expects {} parameter tensors, got {}",
+            self.entry.name,
+            shapes.len(),
+            params.len()
+        );
+        for (i, (t, &(r, c))) in params.iter().zip(&shapes).enumerate() {
+            anyhow::ensure!(
+                t.len() == r * c,
+                "'{}' param {i}: expected {r}×{c}, got {:?}",
+                self.entry.name,
+                t.shape()
+            );
+        }
+        Ok(())
+    }
+
+    /// Forward pass retaining every layer's activation (index ℓ holds the
+    /// output of layer ℓ; the last one is the prediction).
+    fn forward_acts(&self, arch: &Arch, params: &[Tensor], x: &Tensor) -> Vec<Tensor> {
+        let layers = arch.num_layers();
+        let rows = x.rows();
+        let mut acts: Vec<Tensor> = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let (fi, fo) = arch.layer_shape(l);
+            let w = &params[2 * l];
+            let b = &params[2 * l + 1];
+            let mut z = Tensor::zeros(rows, fo);
+            {
+                let input = if l == 0 { x } else { &acts[l - 1] };
+                gemm::gemm_nn_bias_act(
+                    self.pool,
+                    input.data(),
+                    rows,
+                    fi,
+                    w.data(),
+                    fo,
+                    Some(b.row(0)),
+                    l + 1 < layers, // soft-sign on hidden layers only
+                    z.data_mut(),
+                );
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Loss + gradients for one batch — the whole training hot path.
+    pub fn train_step(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> anyhow::Result<(f64, Vec<Tensor>)> {
+        anyhow::ensure!(self.entry.kind == "train_step", "not a train_step artifact");
+        let arch = self.arch()?;
+        self.check_params(arch, params)?;
+        if self.entry.batch > 0 {
+            // static-batch entries keep the manifest contract the HLO
+            // path enforced at literal packing
+            anyhow::ensure!(
+                x.rows() == self.entry.batch,
+                "'{}': batch {} vs manifest batch {}",
+                self.entry.name,
+                x.rows(),
+                self.entry.batch
+            );
+        }
+        anyhow::ensure!(
+            x.cols() == arch.input_dim()
+                && y.cols() == arch.output_dim()
+                && x.rows() == y.rows(),
+            "'{}': batch ({}, {}) / ({}, {}) does not fit arch {:?}",
+            self.entry.name,
+            x.rows(),
+            x.cols(),
+            y.rows(),
+            y.cols(),
+            arch.dims
+        );
+        let layers = arch.num_layers();
+        let rows = x.rows();
+        anyhow::ensure!(rows > 0, "empty batch");
+
+        let acts = self.forward_acts(arch, params, x);
+        let pred = &acts[layers - 1];
+        let loss = pred.mse(y);
+
+        // δ_L = ∂L/∂z_L = 2 (pred − y) / (batch · n_out)  (linear head)
+        let scale = 2.0f32 / pred.len() as f32;
+        let mut delta = Tensor::zeros(rows, arch.output_dim());
+        for ((d, &p), &t) in delta
+            .data_mut()
+            .iter_mut()
+            .zip(pred.data())
+            .zip(y.data())
+        {
+            *d = (p - t) * scale;
+        }
+
+        let mut grads: Vec<Tensor> = arch
+            .param_shapes()
+            .iter()
+            .map(|&(r, c)| Tensor::zeros(r, c))
+            .collect();
+
+        for l in (0..layers).rev() {
+            let (fi, fo) = arch.layer_shape(l);
+            // dW_ℓ = input_ℓᵀ · δ_ℓ
+            {
+                let input = if l == 0 { x } else { &acts[l - 1] };
+                gemm::gemm_tn(
+                    self.pool,
+                    input.data(),
+                    rows,
+                    fi,
+                    delta.data(),
+                    fo,
+                    grads[2 * l].data_mut(),
+                );
+            }
+            // db_ℓ = column sums of δ_ℓ (ascending rows — deterministic)
+            {
+                let gb = grads[2 * l + 1].data_mut();
+                for r in 0..rows {
+                    for (g, &d) in gb.iter_mut().zip(&delta.data()[r * fo..(r + 1) * fo]) {
+                        *g += d;
+                    }
+                }
+            }
+            if l > 0 {
+                // δ_{ℓ-1} = (δ_ℓ · W_ℓᵀ) ⊙ σ′, σ′ = (1 − |a_{ℓ-1}|)²
+                let w = &params[2 * l];
+                let mut nd = Tensor::zeros(rows, fi);
+                gemm::gemm_nt(self.pool, delta.data(), rows, fo, w.data(), fi, nd.data_mut());
+                for (d, &a) in nd.data_mut().iter_mut().zip(acts[l - 1].data()) {
+                    let s = 1.0 - a.abs();
+                    *d *= s * s;
+                }
+                delta = nd;
+            }
+        }
+        Ok((loss, grads))
+    }
+
+    /// `predict` on one batch (rows must equal the static batch when the
+    /// entry declares one).
+    pub fn predict_batch(&self, params: &[Tensor], x: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
+        if self.entry.batch > 0 {
+            anyhow::ensure!(x.rows() == self.entry.batch, "predict batch mismatch");
+        }
+        self.forward(params, x)
+    }
+
+    /// `predict` over any number of rows — the native graph has no static
+    /// batch dimension, so no chunking/padding is needed.
+    pub fn predict_all(&self, params: &[Tensor], x: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(self.entry.kind == "predict", "not a predict artifact");
+        self.forward(params, x)
+    }
+
+    fn forward(&self, params: &[Tensor], x: &Tensor) -> anyhow::Result<Tensor> {
+        let arch = self.arch()?;
+        self.check_params(arch, params)?;
+        anyhow::ensure!(
+            x.cols() == arch.input_dim(),
+            "'{}': input width {} vs arch {:?}",
+            self.entry.name,
+            x.cols(),
+            arch.dims
+        );
+        // inference keeps only the previous activation — O(rows·max_width)
+        // memory, unlike the backprop path which must retain every layer
+        let layers = arch.num_layers();
+        let rows = x.rows();
+        let mut h: Option<Tensor> = None;
+        for l in 0..layers {
+            let (fi, fo) = arch.layer_shape(l);
+            let w = &params[2 * l];
+            let b = &params[2 * l + 1];
+            let mut z = Tensor::zeros(rows, fo);
+            {
+                let input = h.as_ref().unwrap_or(x);
+                gemm::gemm_nn_bias_act(
+                    self.pool,
+                    input.data(),
+                    rows,
+                    fi,
+                    w.data(),
+                    fo,
+                    Some(b.row(0)),
+                    l + 1 < layers,
+                    z.data_mut(),
+                );
+            }
+            h = Some(z);
+        }
+        h.ok_or_else(|| anyhow::anyhow!("'{}': arch has no layers", self.entry.name))
+    }
+
+    /// Standalone Gram product over a snapshot matrix (n, m) → (m, m) —
+    /// kept for the `gram_l*` bench artifacts.
+    pub fn gram(&self, s: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(self.entry.kind == "gram", "not a gram artifact");
+        if let Some(dims) = self.entry.input_shapes.first() {
+            let count: usize = dims.iter().product();
+            anyhow::ensure!(
+                s.len() == count,
+                "gram input {:?} vs manifest {:?}",
+                s.shape(),
+                dims
+            );
+        }
+        let (n, m) = s.shape();
+        let cols: Vec<Vec<f32>> = (0..m)
+            .map(|c| (0..n).map(|r| s.get(r, c)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let g = crate::linalg::gram::gram_with(self.pool, &refs);
+        Ok(Tensor::from_fn(m, m, |i, j| g.get(i, j) as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward;
+    use crate::rng::Rng;
+    use crate::runtime::Manifest;
+
+    fn exe(name: &str) -> NativeExecutable {
+        let entry = Manifest::builtin().get(name).expect("builtin entry").clone();
+        NativeExecutable::new(entry).unwrap()
+    }
+
+    #[test]
+    fn predict_matches_oracle_bitwise() {
+        let pr = exe("predict_test");
+        let arch = Arch::new(pr.entry().arch.clone()).unwrap();
+        let mut rng = Rng::new(3);
+        let params = arch.init_params(&mut rng);
+        let x = Tensor::from_fn(16, arch.input_dim(), |_, _| rng.normal() as f32 * 0.5);
+        let got = pr.predict_batch(&params, &x).unwrap();
+        let want = forward(&arch, &params, &x);
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got.data(), want.data(), "native predict must equal the oracle exactly");
+    }
+
+    #[test]
+    fn loss_equals_prediction_mse() {
+        let ts = exe("train_step_test");
+        let pr = exe("predict_test");
+        let arch = Arch::new(ts.entry().arch.clone()).unwrap();
+        let mut rng = Rng::new(4);
+        let params = arch.init_params(&mut rng);
+        let x = Tensor::from_fn(16, arch.input_dim(), |_, _| rng.normal() as f32);
+        let y = Tensor::from_fn(16, arch.output_dim(), |_, _| rng.normal() as f32);
+        let (loss, grads) = ts.train_step(&params, &x, &y).unwrap();
+        let pred = pr.predict_batch(&params, &x).unwrap();
+        assert_eq!(loss, pred.mse(&y));
+        assert_eq!(grads.len(), params.len());
+        for (g, p) in grads.iter().zip(&params) {
+            assert_eq!(g.shape(), p.shape());
+        }
+    }
+
+    #[test]
+    fn wrong_inputs_rejected() {
+        let ts = exe("train_step_test");
+        let pr = exe("predict_test");
+        let arch = Arch::new(ts.entry().arch.clone()).unwrap();
+        let mut rng = Rng::new(5);
+        let params = arch.init_params(&mut rng);
+        let x = Tensor::zeros(16, arch.input_dim());
+        let y_bad = Tensor::zeros(16, arch.output_dim() + 1);
+        assert!(ts.train_step(&params, &x, &y_bad).is_err());
+        assert!(ts.train_step(&params[..2], &x, &Tensor::zeros(16, 6)).is_err());
+        assert!(pr.predict_batch(&params, &Tensor::zeros(3, 6)).is_err(), "static batch enforced");
+        // kind checks
+        assert!(pr.train_step(&params, &x, &Tensor::zeros(16, 6)).is_err());
+    }
+}

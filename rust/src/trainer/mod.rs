@@ -1,12 +1,19 @@
 //! The training coordinator — paper Algorithm 1.
 //!
-//! Plain backpropagation runs through the AOT `train_step` executable
-//! (loss + grads), Adam updates happen here in Rust, and every optimizer
-//! step appends one flattened snapshot per layer. When the buffers reach
-//! `m` snapshots, the per-layer DMD solves run (in parallel), the
-//! extrapolated weights are written back, the buffers are cleared, and
-//! backpropagation resumes — exactly the paper's loop. With
+//! Plain backpropagation runs through the backend's `train_step`
+//! executable (native fused forward/backprop by default; AOT HLO with
+//! the `pjrt` feature), Adam updates happen here in Rust, and every
+//! optimizer step appends one flattened snapshot per layer — copied
+//! straight into recycled snapshot columns (`SnapshotBuffer::push_parts`,
+//! no per-step allocation). When the buffers reach `m` snapshots, the
+//! per-layer DMD solves run (in parallel over the shared worker pool),
+//! the extrapolated weights are written back, the buffers are cleared,
+//! and backpropagation resumes — exactly the paper's loop. With
 //! `cfg.dmd = None` the same loop is the paper's "without DMD" baseline.
+//!
+//! Artifacts may declare `batch = 0` (dynamic): the trainer then runs
+//! full-batch on the whole training set, which also enables the pinned
+//! batch fast path (no per-step gather).
 
 mod checkpoint;
 
@@ -92,8 +99,11 @@ impl Trainer {
 
     fn record_snapshots(&mut self, step: usize) {
         for layer in 0..self.arch.num_layers() {
-            let flat = self.arch.flatten_layer(&self.params, layer);
-            self.buffers[layer].push(step, &flat);
+            // copy (w, b) straight into a recycled snapshot column —
+            // no intermediate flatten_layer Vec on the hot path
+            let w = &self.params[2 * layer];
+            let b = &self.params[2 * layer + 1];
+            self.buffers[layer].push_parts(step, &[w.data(), b.data()]);
         }
     }
 
@@ -165,7 +175,9 @@ impl Trainer {
         let mut history = LossHistory::new();
         let mut dmd_stats = DmdStats::new();
 
-        let batch = self.train_exe.batch();
+        // batch = 0 in the manifest means dynamic: full-batch training
+        // on the whole training set (the paper's regime).
+        let batch = self.train_exe.effective_batch(ds.n_train());
         anyhow::ensure!(
             ds.n_in() == self.arch.input_dim() && ds.n_out() == self.arch.output_dim(),
             "dataset ({}, {}) does not match arch {:?}",
@@ -193,6 +205,16 @@ impl Trainer {
         } else {
             None
         };
+        // mini-batch path: one reused (x, y) scratch pair for the whole
+        // run — Batcher::gather_into copies rows, never allocates
+        let mut gather_scratch = if device_batch.is_none() {
+            Some((
+                Tensor::zeros(batch, ds.n_in()),
+                Tensor::zeros(batch, ds.n_out()),
+            ))
+        } else {
+            None
+        };
 
         for epoch in 0..self.cfg.epochs {
             let mut epoch_loss = 0.0;
@@ -205,11 +227,13 @@ impl Trainer {
                         self.train_exe.train_step_on(&self.params, db)
                     })?
                 } else {
-                    let (bx, by) = profile.scope("batch_gather", || {
-                        Batcher::gather(&ds.x_train, &ds.y_train, &idx)
+                    let (bx, by) = gather_scratch.as_mut().expect("scratch on batch path");
+                    profile.scope("batch_gather", || {
+                        Batcher::gather_into(&ds.x_train, &ds.y_train, &idx, bx, by)
                     });
+                    let (bx, by) = (&*bx, &*by);
                     profile.scope("backprop_exec", || {
-                        self.train_exe.train_step(&self.params, &bx, &by)
+                        self.train_exe.train_step(&self.params, bx, by)
                     })?
                 };
                 anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");

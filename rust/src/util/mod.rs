@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod csv;
 pub mod jsonl;
+pub mod pool;
 pub mod prop;
 pub mod timer;
 

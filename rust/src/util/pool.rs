@@ -1,0 +1,365 @@
+//! Persistent worker pool shared by the native training backend, the
+//! parallel Gram products and the per-layer DMD dispatch.
+//!
+//! Design: one process-wide pool ([`WorkerPool::global`], sized by
+//! `DMDTRAIN_THREADS` or the available parallelism) with a plain
+//! mutex-guarded job queue. [`WorkerPool::run_tasks`] submits a batch of
+//! *scoped* closures (they may borrow the caller's stack) and blocks
+//! until every one has finished — the blocking join is what makes the
+//! lifetime erasure sound. While waiting, the submitting thread helps
+//! drain the queue, so nested submissions (a DMD layer task calling the
+//! parallel Gram product) cannot deadlock: a waiting thread either runs
+//! pending jobs or sleeps only when all of its own jobs are already
+//! claimed by other threads.
+//!
+//! Determinism note: the pool itself never reorders *results* — callers
+//! partition work into tasks that write disjoint output slots (or
+//! per-panel partials reduced in fixed order), so everything built on it
+//! is bit-identical to its serial execution (see `linalg::gram`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+impl Queue {
+    fn try_pop(&self) -> Option<Job> {
+        self.state.lock().unwrap().jobs.pop_front()
+    }
+}
+
+/// Completion latch for one `run_tasks` batch: remaining count plus the
+/// first panic message observed (re-raised on the submitting thread).
+struct Latch {
+    state: Mutex<(usize, Option<String>)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch {
+            state: Mutex::new((count, None)),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic_msg: Option<String>) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if st.1.is_none() {
+            st.1 = panic_msg;
+        }
+        if st.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    /// Block until the batch completes; returns the first panic message.
+    fn wait(&self) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.1.take()
+    }
+}
+
+/// A fixed-size pool of persistent worker threads.
+///
+/// `threads` counts the submitting thread too: a pool of size `t` spawns
+/// `t − 1` OS threads and the caller participates while joining, so
+/// `WorkerPool::new(1)` is exactly serial execution (used as the
+/// single-threaded baseline in the benches).
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            ready: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                std::thread::spawn(move || worker_loop(&queue))
+            })
+            .collect();
+        WorkerPool {
+            queue,
+            handles,
+            threads,
+        }
+    }
+
+    /// The process-wide pool: `DMDTRAIN_THREADS` override, else the
+    /// machine's available parallelism.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(default_threads()))
+    }
+
+    /// Total parallelism (workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of scoped tasks to completion across the pool.
+    ///
+    /// Tasks may borrow from the caller's stack (`'scope`): the call
+    /// blocks until every task has run, which is what makes handing the
+    /// borrows to other threads sound. Panics inside a task are caught
+    /// on the worker (keeping it alive) and re-raised here once the
+    /// whole batch has settled.
+    pub fn run_tasks<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if self.threads == 1 || tasks.len() <= 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            for t in tasks {
+                // SAFETY: lifetime erasure to put the closure in the
+                // 'static queue. Sound because this function does not
+                // return until `latch` has counted the task complete,
+                // so no borrow in `t` outlives the caller's frame.
+                let t: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(t) };
+                let latch = Arc::clone(&latch);
+                st.jobs.push_back(Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(t));
+                    latch.complete(result.err().map(panic_message));
+                }));
+            }
+            self.queue.ready.notify_all();
+        }
+        // Help: run queued jobs (ours or anyone's) instead of idling.
+        // Once the queue is momentarily empty every one of our tasks is
+        // claimed (running or done), so blocking on the latch is safe.
+        while !latch.is_done() {
+            match self.queue.try_pop() {
+                Some(job) => job(),
+                None => break,
+            }
+        }
+        if let Some(msg) = latch.wait() {
+            panic!("pool task panicked: {msg}");
+        }
+    }
+
+    /// Run `f(0), …, f(n−1)` across the pool, blocking until all done.
+    pub fn for_each<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        let fr = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+            .map(|i| Box::new(move || fr(i)) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        self.run_tasks(tasks);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            st.shutdown = true;
+            self.queue.ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(queue: &Queue) {
+    loop {
+        let job = {
+            let mut st = queue.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = queue.ready.wait(st).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+fn default_threads() -> usize {
+    std::env::var("DMDTRAIN_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+/// Split `n` items into at most `parts` contiguous ranges, each aligned
+/// down to a multiple of `align` (except the last). Used by the GEMM and
+/// Gram kernels so task boundaries never split a panel.
+pub fn aligned_ranges(n: usize, parts: usize, align: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1);
+    let align = align.max(1);
+    let chunk = {
+        let raw = n.div_euclid(parts) + usize::from(n % parts != 0);
+        // round up to the alignment so every boundary is aligned
+        let rem = raw % align;
+        if rem == 0 {
+            raw.max(align)
+        } else {
+            raw + (align - rem)
+        }
+    };
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn for_each_runs_every_index_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each(100, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_tasks_writes_disjoint_slots() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 32];
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(k, chunk)| {
+                    Box::new(move || {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = 100 * k + j;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, 100 * (i / 8) + i % 8);
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut sum = 0u64;
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(|| sum = 42) as Box<dyn FnOnce() + Send + '_>];
+            pool.run_tasks(tasks);
+        }
+        assert_eq!(sum, 42);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.for_each(4, |_| {
+            // nested batch on the same (global-style) pool
+            pool.for_each(4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn panics_propagate_to_submitter() {
+        let pool = WorkerPool::new(3);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each(8, |i| {
+                if i == 5 {
+                    panic!("boom {i}");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // pool still usable after a panicking batch
+        let n = AtomicUsize::new(0);
+        pool.for_each(8, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn aligned_ranges_cover_exactly() {
+        for (n, parts, align) in [(10, 3, 4), (4096 * 5 + 17, 8, 4096), (3, 8, 4096), (0, 4, 8)] {
+            let ranges = aligned_ranges(n, parts, align);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                assert!(r.start % align == 0, "unaligned start {}", r.start);
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+            assert!(ranges.len() <= parts.max(1) || align > 1);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Native-backend correctness: central-finite-difference gradient checks
+//! on tiny architectures, exact parity of native `predict` with the
+//! `model::forward` oracle, and a trainer integration run on a toy
+//! dataset — all with default features (no `pjrt`, no artifacts).
+
+use dmdtrain::config::{Config, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::model::{forward, Arch};
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::{ManifestEntry, NativeExecutable, Runtime};
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::Trainer;
+
+fn native_train_step(arch: &[usize]) -> NativeExecutable {
+    NativeExecutable::new(ManifestEntry::native_model("train_step", "train_step_tiny", arch, 0))
+        .unwrap()
+}
+
+fn native_predict(arch: &[usize]) -> NativeExecutable {
+    NativeExecutable::new(ManifestEntry::native_model("predict", "predict_tiny", arch, 0))
+        .unwrap()
+}
+
+fn random_problem(arch: &Arch, rows: usize, seed: u64) -> (Vec<Tensor>, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let params = arch.init_params(&mut rng);
+    let x = Tensor::from_fn(rows, arch.input_dim(), |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let y = Tensor::from_fn(rows, arch.output_dim(), |_, _| rng.uniform_in(-0.5, 0.5) as f32);
+    (params, x, y)
+}
+
+/// Central finite differences over *every* entry of every parameter
+/// tensor, compared against the analytic gradients by norm-relative
+/// error. The perturbation uses the actually-representable f32 step
+/// (fl(w+h) − w) to keep the difference quotient honest.
+fn gradient_check(dims: Vec<usize>, rows: usize, seed: u64) {
+    let arch = Arch::new(dims.clone()).unwrap();
+    let exe = native_train_step(&dims);
+    let (params, x, y) = random_problem(&arch, rows, seed);
+    let (_loss, grads) = exe.train_step(&params, &x, &y).unwrap();
+
+    let h = 5e-3f32;
+    for pi in 0..params.len() {
+        let mut num = 0.0f64; // ||g_fd − g||²
+        let mut den = 0.0f64; // ||g_fd||² + ||g||²
+        for j in 0..params[pi].len() {
+            let mut p_plus = params.clone();
+            let mut p_minus = params.clone();
+            let w = params[pi].data()[j];
+            let wp = w + h;
+            let wm = w - h;
+            p_plus[pi].data_mut()[j] = wp;
+            p_minus[pi].data_mut()[j] = wm;
+            let (lp, _) = exe.train_step(&p_plus, &x, &y).unwrap();
+            let (lm, _) = exe.train_step(&p_minus, &x, &y).unwrap();
+            let fd = (lp - lm) / ((wp - wm) as f64);
+            let g = grads[pi].data()[j] as f64;
+            num += (fd - g) * (fd - g);
+            den += fd * fd + g * g;
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(
+            rel < 1e-3,
+            "arch {dims:?} param {pi}: finite-difference mismatch, norm-rel err {rel:.2e}"
+        );
+    }
+}
+
+#[test]
+fn gradcheck_single_hidden_layer() {
+    gradient_check(vec![3, 4, 2], 7, 11);
+}
+
+#[test]
+fn gradcheck_two_hidden_layers() {
+    gradient_check(vec![2, 5, 3, 2], 9, 12);
+}
+
+#[test]
+fn gradcheck_scalar_chain() {
+    gradient_check(vec![1, 1, 1], 4, 13);
+}
+
+#[test]
+fn gradcheck_linear_network_no_hidden() {
+    gradient_check(vec![3, 2], 6, 14);
+}
+
+#[test]
+fn predict_is_bitwise_equal_to_forward_oracle() {
+    for (dims, rows, seed) in [
+        (vec![6usize, 8, 6], 16usize, 21u64),
+        (vec![6, 16, 32, 64], 33, 22),
+        (vec![2, 7, 7, 3], 5, 23),
+    ] {
+        let arch = Arch::new(dims.clone()).unwrap();
+        let exe = native_predict(&dims);
+        let (params, x, _) = random_problem(&arch, rows, seed);
+        let got = exe.predict_all(&params, &x).unwrap();
+        let want = forward(&arch, &params, &x);
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "native predict must match the oracle exactly (arch {dims:?})"
+        );
+    }
+}
+
+#[test]
+fn gradient_descent_on_analytic_gradients_reduces_loss() {
+    let dims = vec![4usize, 10, 4];
+    let arch = Arch::new(dims.clone()).unwrap();
+    let exe = native_train_step(&dims);
+    let (mut params, x, y) = random_problem(&arch, 12, 31);
+    let (first, _) = exe.train_step(&params, &x, &y).unwrap();
+    for _ in 0..50 {
+        let (loss, grads) = exe.train_step(&params, &x, &y).unwrap();
+        assert!(loss.is_finite());
+        for (p, g) in params.iter_mut().zip(&grads) {
+            p.axpy(-0.5, g);
+        }
+    }
+    let (last, _) = exe.train_step(&params, &x, &y).unwrap();
+    assert!(
+        last < 0.5 * first.max(1e-12) || last < 1e-6,
+        "plain gradient descent barely moved: {first} → {last}"
+    );
+}
+
+fn toy_dataset(n_train: usize, n_test: usize, n_out: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, n_out, |r, c| {
+            let v: f64 = (0..6)
+                .map(|k| ((k + c + 1) as f64 * 0.7 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.25 * v) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+/// Trainer integration on the dynamic-batch (batch = 0) quickstart
+/// artifact: full Algorithm-1 loop, DMD on, converges on a toy dataset —
+/// all through the default native backend.
+#[test]
+fn trainer_converges_on_toy_dataset_dynamic_batch() {
+    let rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
+    let ds = toy_dataset(40, 12, 64, 5);
+    let text = r#"
+[model]
+artifact = "quickstart"
+[data]
+path = "unused"
+[train]
+epochs = 120
+seed = 1
+eval_every = 20
+log_every = 0
+[adam]
+lr = 0.005
+[dmd]
+enabled = true
+m = 6
+s = 10
+"#;
+    let cfg = TrainConfig::from_config(&Config::parse(text).unwrap()).unwrap();
+    let mut trainer = Trainer::new(&rt, cfg).unwrap();
+    let report = trainer.run(&ds).unwrap();
+    let first = report.history.points.first().unwrap().train_mse;
+    let last = report.history.final_train().unwrap();
+    assert!(
+        last < 0.3 * first,
+        "native trainer barely converged: {first} → {last}"
+    );
+    assert!(report.history.final_test().unwrap().is_finite());
+    // full-batch (dynamic) → one step per epoch → DMD fires every m epochs
+    assert!(!report.dmd_stats.events.is_empty(), "no DMD events fired");
+    assert!(report.final_params.iter().all(|p| p.is_finite()));
+}
+
+/// Same seed twice → bit-identical results, with the pool engaged: the
+/// deterministic-parallel-reduction invariant at trainer scale.
+#[test]
+fn trainer_is_deterministic_with_parallel_kernels() {
+    let rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
+    let ds = toy_dataset(24, 8, 64, 6);
+    let text = r#"
+[model]
+artifact = "quickstart"
+[data]
+path = "unused"
+[train]
+epochs = 25
+seed = 9
+log_every = 0
+[dmd]
+enabled = true
+m = 5
+s = 8
+"#;
+    let cfg = TrainConfig::from_config(&Config::parse(text).unwrap()).unwrap();
+    let a = Trainer::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+    let b = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    assert_eq!(
+        a.history.final_train().unwrap(),
+        b.history.final_train().unwrap()
+    );
+    for (pa, pb) in a.final_params.iter().zip(&b.final_params) {
+        assert_eq!(pa.data(), pb.data(), "non-deterministic training");
+    }
+}

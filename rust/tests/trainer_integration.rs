@@ -1,5 +1,6 @@
 //! Trainer integration: Algorithm 1 end-to-end on a synthetic dataset
-//! through the real PJRT runtime (pallas `test` artifact, 6→8→6).
+//! through the default runtime (native backend, `test` artifact 6→8→6,
+//! static batch 16).
 
 use dmdtrain::config::{Config, TrainConfig};
 use dmdtrain::data::Dataset;
@@ -10,8 +11,7 @@ use dmdtrain::rng::Rng;
 use dmdtrain::util;
 
 fn runtime() -> Runtime {
-    Runtime::cpu(util::repo_root().join("artifacts"))
-        .expect("artifacts missing — run `make artifacts`")
+    Runtime::cpu(util::repo_root().join("artifacts")).expect("runtime")
 }
 
 /// Synthetic smooth regression task matching the `test` artifact

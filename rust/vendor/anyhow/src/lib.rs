@@ -1,0 +1,145 @@
+//! Minimal offline drop-in for the [`anyhow`](https://docs.rs/anyhow)
+//! error crate, vendored so the default build has zero registry
+//! dependencies (the container builds fully offline).
+//!
+//! Implements exactly the subset `dmdtrain` uses:
+//!
+//! * [`Error`] — an opaque error carrying a message and an optional
+//!   source chain entry,
+//! * [`Result<T>`] — `Result<T, Error>`,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros,
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std errors exactly like the real crate.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` (that is what makes the blanket `From` possible).
+
+use std::fmt;
+
+/// An opaque error: a display message plus an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error value (mirrors `anyhow::Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Borrow the wrapped source error, if this came from one.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:?}` / `.unwrap()` shows the message, like the real crate.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/zzz")?;
+        Ok(())
+    }
+
+    fn checked(v: i32) -> Result<i32> {
+        ensure!(v > 0, "need positive, got {v}");
+        if v > 100 {
+            bail!("too big: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.source().is_some());
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(checked(5).unwrap(), 5);
+        assert!(checked(-1).unwrap_err().to_string().contains("-1"));
+        assert!(checked(200).unwrap_err().to_string().contains("200"));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e: Error = anyhow!("x = {}, y = {}", 1, 2);
+        assert_eq!(e.to_string(), "x = 1, y = 2");
+        assert_eq!(format!("{e:#}"), "x = 1, y = 2");
+        assert_eq!(format!("{e:?}"), "x = 1, y = 2");
+    }
+}
