@@ -32,8 +32,11 @@ fn train_with_line_fit(
     let mut rng = Rng::new(cfg.seed);
     let mut params = arch.init_params(&mut rng);
     let mut adam = Adam::new(Default::default());
+    // without_gram: the line-fit baseline never reads WᵀW, so it must
+    // not pay the streaming-Gram cost the DMD path amortizes — keeps
+    // the E10 "identical budgets" comparison honest
     let mut buffers: Vec<SnapshotBuffer> = (0..arch.num_layers())
-        .map(|_| SnapshotBuffer::new(m))
+        .map(|_| SnapshotBuffer::without_gram(m))
         .collect();
 
     let mut batcher = Batcher::new(ds.n_train(), train_exe.effective_batch(ds.n_train()))?;

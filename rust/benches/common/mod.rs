@@ -1,5 +1,9 @@
 //! Shared helpers for the paper-reproduction benches.
 
+#![allow(dead_code)]
+
+pub mod pr1;
+
 use dmdtrain::config::{Config, DatagenConfig, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::pde::generate_dataset;

@@ -1,0 +1,225 @@
+//! Frozen PR-1 scalar kernels — the perf baseline `linalg_hotpath`
+//! measures the packed/tiled microkernels against.
+//!
+//! These are verbatim copies of the PR-1 serial GEMM/Gram inner loops
+//! (4-lane dots, column-panel NN, IB-blocked TN) so the speedup numbers
+//! in `BENCH_linalg.json` always compare against the same fixed
+//! reference, independent of what `linalg::gemm`/`linalg::gram` evolve
+//! into. Do not "optimize" this module.
+
+#![allow(dead_code)]
+
+use dmdtrain::model::Arch;
+use dmdtrain::tensor::Tensor;
+
+const NB: usize = 256;
+const IB: usize = 8;
+const PANEL: usize = 4096;
+
+/// PR-1 four-lane f32 dot.
+#[inline]
+pub fn dot4_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = 4 * i;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in 4 * chunks..a.len() {
+        tail += a[j] * b[j];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// PR-1 four-lane f32→f64 dot (the old Gram inner kernel).
+#[inline]
+pub fn dot4_f64(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = 4 * i;
+        acc[0] += a[j] as f64 * b[j] as f64;
+        acc[1] += a[j + 1] as f64 * b[j + 1] as f64;
+        acc[2] += a[j + 2] as f64 * b[j + 2] as f64;
+        acc[3] += a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for j in 4 * chunks..a.len() {
+        tail += a[j] as f64 * b[j] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// PR-1 serial Gram: symmetric pairs, PANEL-blocked, dot4_f64 inner.
+pub fn gram_serial(cols: &[&[f32]]) -> Vec<f64> {
+    let m = cols.len();
+    let n = cols.first().map_or(0, |c| c.len());
+    let mut g = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in i..m {
+            let mut acc = 0.0f64;
+            let mut start = 0;
+            while start < n {
+                let end = (start + PANEL).min(n);
+                acc += dot4_f64(&cols[i][start..end], &cols[j][start..end]);
+                start = end;
+            }
+            g[i * m + j] = acc;
+            g[j * m + i] = acc;
+        }
+    }
+    g
+}
+
+/// PR-1 serial NN kernel: `out = act(A·B + bias)` with NB column panels.
+pub fn kernel_nn(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        match bias {
+            Some(bi) => orow.copy_from_slice(bi),
+            None => orow.fill(0.0),
+        }
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + NB).min(n);
+            let oblk = &mut orow[jb..je];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let bblk = &b[kk * n + jb..kk * n + je];
+                for (o, &bv) in oblk.iter_mut().zip(bblk) {
+                    *o += av * bv;
+                }
+            }
+            jb = je;
+        }
+        if softsign {
+            for v in orow.iter_mut() {
+                *v = *v / (1.0 + v.abs());
+            }
+        }
+    }
+}
+
+/// PR-1 serial NT kernel: `out = A·Bᵀ`, one dot4 per element.
+pub fn kernel_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot4_f32(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// PR-1 serial TN kernel: `out = Aᵀ·B`, IB row blocks × NB column panels.
+pub fn kernel_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    let mut ib = 0;
+    while ib < k {
+        let ie = (ib + IB).min(k);
+        for r in 0..m {
+            let brow = &b[r * n..(r + 1) * n];
+            for i in ib..ie {
+                let av = a[r * k + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                let mut jb = 0;
+                while jb < n {
+                    let je = (jb + NB).min(n);
+                    for (o, &bv) in orow[jb..je].iter_mut().zip(&brow[jb..je]) {
+                        *o += av * bv;
+                    }
+                    jb = je;
+                }
+            }
+        }
+        ib = ie;
+    }
+}
+
+/// PR-1 serial fused train_step: forward (NN), MSE loss, hand-derived
+/// backprop (TN weight grads, row-sum bias grads, NT delta backprop) —
+/// the exact structure of `runtime::native::train_step` on the PR-1
+/// serial kernels.
+pub fn train_step(arch: &Arch, params: &[Tensor], x: &Tensor, y: &Tensor) -> (f64, Vec<Tensor>) {
+    let layers = arch.num_layers();
+    let rows = x.rows();
+    let mut acts: Vec<Tensor> = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let (fi, fo) = arch.layer_shape(l);
+        let w = &params[2 * l];
+        let b = &params[2 * l + 1];
+        let mut z = Tensor::zeros(rows, fo);
+        {
+            let input = if l == 0 { x } else { &acts[l - 1] };
+            kernel_nn(
+                input.data(),
+                rows,
+                fi,
+                w.data(),
+                fo,
+                Some(b.row(0)),
+                l + 1 < layers,
+                z.data_mut(),
+            );
+        }
+        acts.push(z);
+    }
+    let pred = &acts[layers - 1];
+    let loss = pred.mse(y);
+
+    let scale = 2.0f32 / pred.len() as f32;
+    let mut delta = Tensor::zeros(rows, arch.output_dim());
+    for ((d, &p), &t) in delta.data_mut().iter_mut().zip(pred.data()).zip(y.data()) {
+        *d = (p - t) * scale;
+    }
+    let mut grads: Vec<Tensor> = arch
+        .param_shapes()
+        .iter()
+        .map(|&(r, c)| Tensor::zeros(r, c))
+        .collect();
+    for l in (0..layers).rev() {
+        let (fi, fo) = arch.layer_shape(l);
+        {
+            let input = if l == 0 { x } else { &acts[l - 1] };
+            kernel_tn(input.data(), rows, fi, delta.data(), fo, grads[2 * l].data_mut());
+        }
+        {
+            let gb = grads[2 * l + 1].data_mut();
+            for r in 0..rows {
+                for (g, &d) in gb.iter_mut().zip(&delta.data()[r * fo..(r + 1) * fo]) {
+                    *g += d;
+                }
+            }
+        }
+        if l > 0 {
+            let w = &params[2 * l];
+            let mut nd = Tensor::zeros(rows, fi);
+            kernel_nt(delta.data(), rows, fo, w.data(), fi, nd.data_mut());
+            for (d, &a) in nd.data_mut().iter_mut().zip(acts[l - 1].data()) {
+                let s = 1.0 - a.abs();
+                *d *= s * s;
+            }
+            delta = nd;
+        }
+    }
+    (loss, grads)
+}

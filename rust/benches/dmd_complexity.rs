@@ -1,25 +1,30 @@
 //! E7 — §3 complexity model: DMD cost ~ n(3m² + r²) and the acceleration
 //! condition t > 3m² + r².
 //!
-//! Three measurements:
+//! Measurements (all recorded into the perf-trajectory artifact
+//! `BENCH_dmd.json` at the crate root, uploaded by CI):
 //!  1. DMD solve time vs n at fixed m — must scale linearly in n;
 //!  2. DMD solve time vs m at fixed n — must scale ~m² (the paper's
 //!     reason for picking m=14 over m=20: 0.49× the operations);
-//!  3. the pool-parallel Gram product (via the `gram_l*` artifacts on
+//!  3. the DMD-round *burst* with a streamed snapshot Gram
+//!     (`dmd_extrapolate_with_gram` reading `SnapshotBuffer::gram_full`)
+//!     vs the batch path that rebuilds WᵀW inside the round — the
+//!     PR-2 streaming win;
+//!  4. the pool-parallel Gram product (via the `gram_l*` artifacts on
 //!     the native backend) vs the single-threaded serial kernel on the
-//!     same snapshot matrix — the O(nm²) step's parallel payoff, with
-//!     the bit-identity invariant checked on the way.
+//!     same snapshot matrix, with the bit-identity invariant checked.
 
 mod common;
 
 use dmdtrain::config::DmdParams;
-use dmdtrain::dmd::{dmd_extrapolate, flops_estimate};
+use dmdtrain::dmd::{dmd_extrapolate, dmd_extrapolate_with_gram, flops_estimate, SnapshotBuffer};
 use dmdtrain::linalg::gram;
 use dmdtrain::rng::Rng;
 use dmdtrain::runtime::Runtime;
 use dmdtrain::tensor::Tensor;
-use dmdtrain::util::bench::{bench_n, header};
 use dmdtrain::util;
+use dmdtrain::util::bench::{bench_n, header};
+use dmdtrain::util::pool::WorkerPool;
 
 fn snapshots(n: usize, m: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
     let mut w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
@@ -37,7 +42,10 @@ fn snapshots(n: usize, m: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(11);
     let params = DmdParams::default();
-    let iters = if common::fast_mode() { 3 } else { 10 };
+    let fast = common::fast_mode();
+    let iters = if fast { 3 } else { 10 };
+    let threads = WorkerPool::global().threads();
+    let mut json_rows: Vec<String> = Vec::new();
 
     println!("{}", header());
 
@@ -50,6 +58,10 @@ fn main() -> anyhow::Result<()> {
         let stats = bench_n(&format!("dmd n={n} m=14"), iters, || {
             dmd_extrapolate(&refs, &params, 55).unwrap()
         });
+        json_rows.push(format!(
+            r#"{{"case": "solve_vs_n", "n": {n}, "m": 14, "mean_s": {:.6e}}}"#,
+            stats.mean_s
+        ));
         per_n.push((n, stats.mean_s));
     }
     let lin_ratio = (per_n[2].1 / per_n[0].1) / (per_n[2].0 as f64 / per_n[0].0 as f64);
@@ -64,6 +76,10 @@ fn main() -> anyhow::Result<()> {
         let stats = bench_n(&format!("dmd n=201000 m={m}"), iters, || {
             dmd_extrapolate(&refs, &params, 55).unwrap()
         });
+        json_rows.push(format!(
+            r#"{{"case": "solve_vs_m", "n": 201000, "m": {m}, "mean_s": {:.6e}}}"#,
+            stats.mean_s
+        ));
         per_m.push((m, stats.mean_s));
     }
     let m_ratio = per_m[2].1 / per_m[0].1;
@@ -73,7 +89,39 @@ fn main() -> anyhow::Result<()> {
         flops_estimate(1, 14, 13) / flops_estimate(1, 20, 19),
     );
 
-    // 3. acceleration condition -------------------------------------------
+    // 3. DMD-round burst: streamed Gram vs batch rebuild ------------------
+    println!("\n-- DMD-round burst: streamed WᵀW vs batch rebuild (n = 2.67 M, m = 14) --");
+    let (burst_batch_s, burst_stream_s) = {
+        let n = 2_672_670usize;
+        let m = 14usize;
+        let cols = snapshots(n, m, &mut rng);
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut buf = SnapshotBuffer::new(m);
+        for (i, c) in cols.iter().enumerate() {
+            buf.push(i, c);
+        }
+        let g = buf.gram_full();
+        let batch = bench_n("dmd burst batch-gram n=2.67M m=14", iters.min(5), || {
+            dmd_extrapolate(&refs, &params, 55).unwrap()
+        });
+        let streamed = bench_n("dmd burst streamed-gram n=2.67M m=14", iters.min(5), || {
+            dmd_extrapolate_with_gram(&refs, &g, &params, 55).unwrap()
+        });
+        // the streamed path must agree to the bit with the batch path
+        let a = dmd_extrapolate(&refs, &params, 55).unwrap();
+        let b = dmd_extrapolate_with_gram(&refs, &g, &params, 55).unwrap();
+        assert_eq!(a.rank, b.rank, "streamed-gram rank differs");
+        assert_eq!(a.new_weights, b.new_weights, "streamed-gram weights differ");
+        println!(
+            "  → burst {:.1} ms → {:.1} ms ({:.2}× smaller) with the Gram already streamed",
+            batch.mean_s * 1e3,
+            streamed.mean_s * 1e3,
+            batch.mean_s / streamed.mean_s
+        );
+        (batch.mean_s, streamed.mean_s)
+    };
+
+    // 4. acceleration condition -------------------------------------------
     println!("\n-- acceleration condition t > 3m² + r² (paper §3) --");
     for (m, r) in [(14usize, 13usize), (20, 19)] {
         let threshold = 3 * m * m + r * r;
@@ -83,9 +131,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 4. pool-parallel Gram (artifact path) vs serial kernel --------------
+    // 5. pool-parallel Gram (artifact path) vs serial kernel --------------
     println!("\n-- O(nm²) Gram step: pool-parallel vs single-threaded --");
     let runtime = Runtime::cpu(util::repo_root().join("artifacts"))?;
+    let mut gram_ratios: Vec<(String, f64)> = Vec::new();
     for (name, n, m) in [("gram_l2", 8_200usize, 20usize), ("gram_l3", 201_000, 14)] {
         let exe = runtime.load(name)?;
         let snap = Tensor::from_fn(n, m, |_, _| rng.normal() as f32);
@@ -121,13 +170,29 @@ fn main() -> anyhow::Result<()> {
                 max_diff = max_diff.max((g_exe.get(i, j) as f64 - g_ser.get(i, j)).abs());
             }
         }
+        let ratio = serial_stats.mean_s / pool_stats.mean_s;
         println!(
-            "  {name}: serial/pool time ratio {:.2}, artifact f32 cast max |Δ| = {max_diff:.2e}",
-            serial_stats.mean_s / pool_stats.mean_s
+            "  {name}: serial/pool time ratio {ratio:.2}, artifact f32 cast max |Δ| = {max_diff:.2e}"
         );
         // the artifact emits f32: tolerance is the cast error at the
         // Gram's magnitude (diagonal ≈ n)
         assert!(max_diff < 1e-6 * n as f64, "gram mismatch: {max_diff}");
+        gram_ratios.push((name.to_string(), ratio));
     }
+
+    // ---- perf-trajectory artifact ---------------------------------------
+    let gram_json = gram_ratios
+        .iter()
+        .map(|(name, r)| format!(r#""{name}": {r:.3}"#))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let json = format!(
+        "{{\n  \"bench\": \"dmd_complexity\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"linearity_ratio\": {lin_ratio:.3},\n  \"m_scaling_t20_over_t7\": {m_ratio:.3},\n  \"burst_batch_gram_s\": {burst_batch_s:.6e},\n  \"burst_streamed_gram_s\": {burst_stream_s:.6e},\n  \"burst_reduction\": {:.3},\n  \"gram_pool_over_serial\": {{{gram_json}}},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        burst_batch_s / burst_stream_s,
+        json_rows.join(",\n    ")
+    );
+    let out = util::repo_root().join("BENCH_dmd.json");
+    std::fs::write(&out, json).expect("write BENCH_dmd.json");
+    println!("\nperf artifact → {}", out.display());
     Ok(())
 }

@@ -31,29 +31,54 @@ pub fn flops_estimate(n: usize, m: usize, r: usize) -> f64 {
 /// Run DMD on `m` snapshot columns (oldest first) and extrapolate the
 /// layer `steps` optimizer steps beyond the last snapshot (paper eq. 5,
 /// exponent `s − m` counted from the `b`-anchor at the last snapshot).
+///
+/// Computes the full snapshot Gram in one batch pass, then delegates to
+/// [`dmd_extrapolate_with_gram`]. Callers holding a `SnapshotBuffer`
+/// should pass its streamed Gram instead (`buf.gram_full()`) — the
+/// buffer already paid the `O(n·m²)` incrementally, one `O(n·m)` row
+/// per push, and the two paths are bit-identical.
 pub fn dmd_extrapolate(
     cols: &[&[f32]],
     params: &DmdParams,
     steps: usize,
 ) -> anyhow::Result<DmdOutcome> {
+    // One blocked pass over all m columns yields the full snapshot Gram
+    // G_full = WᵀW — O(n m²), the only O(n·) work in the solve.
+    let g_full = gram::gram(cols);
+    dmd_extrapolate_with_gram(cols, &g_full, params, steps)
+}
+
+/// [`dmd_extrapolate`] with a precomputed full snapshot Gram
+/// `g_full = WᵀW` (m×m). With the Gram already streamed by the snapshot
+/// buffer, the burst cost at a DMD round drops to `O(m²)` reads plus the
+/// `O(m³)` small-matrix work and one `O(n·m)` [`gram::combine`]:
+/// both the lag Gram `G = W₋ᵀW₋` and the cross-product `C = W₋ᵀW₊`
+/// (eq. 3) are submatrices of `g_full`, and the mode-amplitude
+/// projection `W₋ᵀ w_last` is its last column.
+pub fn dmd_extrapolate_with_gram(
+    cols: &[&[f32]],
+    g_full: &Mat,
+    params: &DmdParams,
+    steps: usize,
+) -> anyhow::Result<DmdOutcome> {
     let m = cols.len();
     anyhow::ensure!(m >= 2, "DMD needs ≥ 2 snapshots, got {m}");
+    anyhow::ensure!(
+        g_full.shape() == (m, m),
+        "snapshot Gram shape {:?} does not match {m} columns",
+        g_full.shape()
+    );
     let n = cols[0].len();
     anyhow::ensure!(n > 0, "DMD on empty layer");
     let w_last = cols[m - 1];
 
     // Lagged snapshot set (paper's W⁻). The forwarded set W⁺ never needs
     // to be touched directly: every product against it is read out of the
-    // full snapshot Gram below.
+    // full snapshot Gram.
     let w_minus = &cols[..m - 1];
     let mm = m - 1;
 
     // --- low-cost SVD of W₋: G = W₋ᵀW₋ = V Σ² Vᵀ ------------------------
-    // One blocked pass over all m columns yields the full snapshot Gram
-    // G_full = WᵀW, of which both the lag Gram G = W₋ᵀW₋ and the
-    // cross-product C = W₋ᵀW₊ (eq. 3) are submatrices — ~40 % fewer flops
-    // than computing them separately (§Perf).
-    let g_full = gram::gram(cols); // O(n m²), the only O(n·) work
     let g = Mat::from_fn(mm, mm, |i, j| g_full.get(i, j));
     let (sigma2, v_full) = eig_sym(&g); // O(m³)
 
@@ -355,6 +380,35 @@ mod tests {
         assert!((out.eigenvalues[0] - Cplx::real(0.5)).abs() < 1e-6);
         assert!((out.new_weights[0] - 0.5).abs() < 1e-5);
         assert!((out.new_weights[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn streamed_gram_path_is_bit_identical_to_batch() {
+        // feed the same snapshots through a SnapshotBuffer (streaming
+        // Gram) and through the batch path: outcomes must match exactly
+        use crate::dmd::SnapshotBuffer;
+        let n = 300;
+        let a = Mat::from_fn(n, n, |i, j| if i == j { 0.93 } else { 0.0 });
+        let mut rng = Rng::new(17);
+        let v0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let cols = linear_snapshots(&a, &v0, 7);
+        let mut buf = SnapshotBuffer::new(7);
+        for (k, c) in cols.iter().enumerate() {
+            buf.push_with(None, k, c);
+        }
+        let batch = dmd_extrapolate(&refs(&cols), &params(), 12).unwrap();
+        let streamed =
+            dmd_extrapolate_with_gram(&buf.columns(), &buf.gram_full(), &params(), 12).unwrap();
+        assert_eq!(batch.rank, streamed.rank);
+        assert_eq!(batch.new_weights, streamed.new_weights);
+        assert_eq!(batch.jump_norm.to_bits(), streamed.jump_norm.to_bits());
+    }
+
+    #[test]
+    fn mismatched_gram_shape_rejected() {
+        let cols = vec![vec![1.0f32, 2.0], vec![0.5f32, 1.0]];
+        let bad = Mat::zeros(3, 3);
+        assert!(dmd_extrapolate_with_gram(&refs(&cols), &bad, &params(), 1).is_err());
     }
 
     #[test]

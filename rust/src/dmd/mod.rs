@@ -16,11 +16,17 @@
 //! projections become `m`-dim Gram products against the snapshot columns
 //! and the final state is a [`crate::linalg::gram::combine`] over `W₋`.
 //! Total cost ~`n(3m² + r²)` flops, the paper's estimate.
+//!
+//! Since PR 2 the `n(…m²)` Gram term no longer lands at the DMD round:
+//! [`SnapshotBuffer`] streams `WᵀW` one `O(n·m)` row per push (see
+//! `snapshots`), and [`dmd_extrapolate_with_gram`] consumes it — the
+//! round itself is `O(m²)` Gram reads + `O(m³)` small solves + one
+//! `O(n·m)` combine, bit-identical to the batch path.
 
 mod engine;
 mod parallel;
 mod snapshots;
 
-pub use engine::{dmd_extrapolate, flops_estimate, DmdOutcome};
+pub use engine::{dmd_extrapolate, dmd_extrapolate_with_gram, flops_estimate, DmdOutcome};
 pub use parallel::{extrapolate_all_layers, LayerOutcome};
 pub use snapshots::SnapshotBuffer;

@@ -10,12 +10,17 @@
 //! use), and the inner Gram/combine products nest on it safely — a
 //! waiting task helps drain the queue instead of deadlocking.
 //!
+//! Each layer's solve consumes the buffer's streamed Gram, so the only
+//! O(n·) work left inside a task is the final `gram::combine` — the
+//! per-layer tasks are now small enough that layer-level parallelism is
+//! almost free on top of the panel-level parallelism of the pushes.
+//!
 //! The `parallel_matches_serial` test below is the repo's standing
 //! bit-identity invariant: because every product reduces in a fixed
 //! panel order (see `linalg::gram`), parallel and serial dispatch agree
 //! to the last bit.
 
-use super::engine::{dmd_extrapolate, DmdOutcome};
+use super::engine::{dmd_extrapolate_with_gram, DmdOutcome};
 use super::snapshots::SnapshotBuffer;
 use crate::config::DmdParams;
 use crate::util::pool::WorkerPool;
@@ -26,9 +31,11 @@ pub struct LayerOutcome {
     pub result: anyhow::Result<DmdOutcome>,
 }
 
-/// Run [`dmd_extrapolate`] concurrently over all layers' snapshot
-/// buffers. `parallel = false` runs serially (for the walltime bench's
-/// serial-vs-parallel comparison).
+/// Run the DMD solve concurrently over all layers' snapshot buffers,
+/// reading each buffer's **streamed** Gram (`SnapshotBuffer::gram_full`)
+/// instead of rebuilding WᵀW — the `O(n·m²)` burst the batch path paid
+/// here is already amortized into the pushes. `parallel = false` runs
+/// serially (for the walltime bench's serial-vs-parallel comparison).
 pub fn extrapolate_all_layers(
     buffers: &[SnapshotBuffer],
     params: &DmdParams,
@@ -37,14 +44,17 @@ pub fn extrapolate_all_layers(
 ) -> Vec<LayerOutcome> {
     let pool = WorkerPool::global();
     if !parallel || buffers.len() <= 1 || pool.threads() == 1 {
-        return buffers
-            .iter()
-            .enumerate()
-            .map(|(layer, buf)| LayerOutcome {
+        // one reusable column-view scratch across the serial loop
+        let mut cols: Vec<&[f32]> = Vec::new();
+        let mut outcomes = Vec::with_capacity(buffers.len());
+        for (layer, buf) in buffers.iter().enumerate() {
+            buf.columns_into(&mut cols);
+            outcomes.push(LayerOutcome {
                 layer,
-                result: dmd_extrapolate(&buf.columns(), params, steps),
-            })
-            .collect();
+                result: dmd_extrapolate_with_gram(&cols, &buf.gram_full(), params, steps),
+            });
+        }
+        return outcomes;
     }
 
     let mut outcomes: Vec<Option<LayerOutcome>> = (0..buffers.len()).map(|_| None).collect();
@@ -55,9 +65,15 @@ pub fn extrapolate_all_layers(
             .enumerate()
             .map(|(layer, (buf, slot))| {
                 Box::new(move || {
+                    let cols = buf.columns();
                     *slot = Some(LayerOutcome {
                         layer,
-                        result: dmd_extrapolate(&buf.columns(), params, steps),
+                        result: dmd_extrapolate_with_gram(
+                            &cols,
+                            &buf.gram_full(),
+                            params,
+                            steps,
+                        ),
                     });
                 }) as Box<dyn FnOnce() + Send + '_>
             })

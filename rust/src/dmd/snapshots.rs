@@ -1,8 +1,29 @@
-//! Per-layer snapshot ring buffer (the paper's snapshot matrix `W^{ℓ,m}`).
+//! Per-layer snapshot ring buffer (the paper's snapshot matrix `W^{ℓ,m}`)
+//! with a **streaming Gram**: the buffer maintains a running `WᵀW`.
 //!
 //! One column per optimizer step, each the layer's flattened weights+bias.
 //! Storage is f32 (matching the network); all reductions over it happen
 //! with f64 accumulators in `linalg::gram`.
+//!
+//! # Streaming Gram lifecycle
+//!
+//! Every [`SnapshotBuffer::push_parts`] computes the one new row/column
+//! of `WᵀW` — `O(n·m)` panel-parallel dots of the new column against all
+//! resident columns (`linalg::gram::last_column_dots`) — so by the time
+//! the buffer is full the complete `m×m` Gram already exists and
+//! [`SnapshotBuffer::gram_full`] is an `O(m²)` read. The DMD round's
+//! former `O(n·m²)` Gram burst is gone: the same total work now
+//! amortizes into the m optimizer steps between rounds, where the worker
+//! pool is otherwise idle. [`SnapshotBuffer::clear`] retires the columns
+//! (allocations recycled) and zeroes the running Gram.
+//!
+//! By the fixed panel-reduction order of `gram::pair_dots`, the running
+//! Gram is bit-identical to a batch `gram::gram` over the same columns,
+//! for any thread count (property-tested in `tests/prop_linalg.rs`).
+
+use crate::linalg::gram;
+use crate::tensor::Mat;
+use crate::util::pool::WorkerPool;
 
 /// Fixed-capacity snapshot buffer for one layer.
 #[derive(Clone, Debug)]
@@ -14,17 +35,43 @@ pub struct SnapshotBuffer {
     /// Retired column allocations, recycled by the next fill cycle so
     /// the steady-state snapshot path never allocates.
     free: Vec<Vec<f32>>,
+    /// Running WᵀW, row-major with stride `capacity`; entries (i, j)
+    /// with `i, j < len()` are valid. Empty when Gram streaming is off.
+    g: Vec<f64>,
+    /// Whether pushes stream the Gram row. Off for consumers that never
+    /// read WᵀW (e.g. the per-weight extrapolation baseline), so they
+    /// do not pay O(n·m) per push for a product they discard.
+    stream_gram: bool,
 }
 
 impl SnapshotBuffer {
-    /// `capacity` = the paper's `m` (snapshots per DMD fit).
+    /// `capacity` = the paper's `m` (snapshots per DMD fit), with Gram
+    /// streaming on — the DMD path.
     pub fn new(capacity: usize) -> Self {
+        Self::with_capacity_and_streaming(capacity, true)
+    }
+
+    /// A buffer that only stores snapshots, without maintaining the
+    /// running WᵀW — for consumers (like `optim::WeightExtrapolation`)
+    /// that never solve DMD on it. [`SnapshotBuffer::gram_full`] still
+    /// works; it falls back to a batch Gram (bit-identical anyway).
+    pub fn without_gram(capacity: usize) -> Self {
+        Self::with_capacity_and_streaming(capacity, false)
+    }
+
+    fn with_capacity_and_streaming(capacity: usize, stream_gram: bool) -> Self {
         assert!(capacity >= 2, "DMD needs at least 2 snapshots (m ≥ 2)");
         SnapshotBuffer {
             capacity,
             cols: Vec::with_capacity(capacity),
             steps: Vec::with_capacity(capacity),
             free: Vec::new(),
+            g: if stream_gram {
+                vec![0.0f64; capacity * capacity]
+            } else {
+                Vec::new()
+            },
+            stream_gram,
         }
     }
 
@@ -50,12 +97,26 @@ impl SnapshotBuffer {
         self.push_parts(step, &[weights]);
     }
 
+    /// [`SnapshotBuffer::push`] with an explicit pool for the streaming
+    /// Gram row (`None` = serial).
+    pub fn push_with(&mut self, pool: Option<&WorkerPool>, step: usize, weights: &[f32]) {
+        self.push_parts_with(pool, step, &[weights]);
+    }
+
     /// Record a snapshot assembled from consecutive slices — the (w, b)
-    /// pair of a layer — copied straight into a recycled column. This is
+    /// pair of a layer — copied straight into a recycled column, then
+    /// stream-update the running Gram on the shared worker pool. This is
     /// the allocation-free fast path `Trainer::record_snapshots` uses
     /// instead of materializing `Arch::flatten_layer`'s fresh `Vec`
     /// every step.
     pub fn push_parts(&mut self, step: usize, parts: &[&[f32]]) {
+        self.push_parts_with(Some(WorkerPool::global()), step, parts);
+    }
+
+    /// [`SnapshotBuffer::push_parts`] with an explicit pool for the
+    /// streaming Gram row (`None` = serial; results are bit-identical
+    /// either way by the fixed panel-reduction order).
+    pub fn push_parts_with(&mut self, pool: Option<&WorkerPool>, step: usize, parts: &[&[f32]]) {
         assert!(!self.is_full(), "snapshot buffer overflow");
         let total: usize = parts.iter().map(|p| p.len()).sum();
         if let Some(first) = self.cols.first() {
@@ -71,18 +132,57 @@ impl SnapshotBuffer {
         }
         self.cols.push(col);
         self.steps.push(step);
+        if self.stream_gram {
+            // one new row/column of WᵀW: O(n·m) dots against the
+            // resident columns, panel-parallel on the pool
+            let m = self.cols.len();
+            let dots = gram::last_column_dots(&self.cols, total, pool);
+            let cap = self.capacity;
+            for (i, &v) in dots.iter().enumerate() {
+                self.g[i * cap + (m - 1)] = v;
+                self.g[(m - 1) * cap + i] = v;
+            }
+        }
     }
 
     /// Retire all columns into the recycle list (their allocations are
-    /// reused by the next fill cycle).
+    /// reused by the next fill cycle) and reset the running Gram.
     pub fn clear(&mut self) {
         self.free.append(&mut self.cols);
         self.steps.clear();
+        for v in &mut self.g {
+            *v = 0.0;
+        }
     }
 
     /// Borrow all columns, oldest first.
+    ///
+    /// Allocates a fresh `Vec` of references per call — hot-loop callers
+    /// should use [`SnapshotBuffer::columns_into`] with a reused scratch
+    /// vector instead.
     pub fn columns(&self) -> Vec<&[f32]> {
         self.cols.iter().map(|c| c.as_slice()).collect()
+    }
+
+    /// Fill `out` with all column views, oldest first, reusing `out`'s
+    /// allocation (the hot-path replacement for [`SnapshotBuffer::columns`]).
+    pub fn columns_into<'a>(&'a self, out: &mut Vec<&'a [f32]>) {
+        out.clear();
+        out.extend(self.cols.iter().map(|c| c.as_slice()));
+    }
+
+    /// The running snapshot Gram `WᵀW` as a dense `len()×len()` matrix —
+    /// an `O(m²)` read of the streamed entries; no column data is
+    /// touched. Bit-identical to `gram::gram(&self.columns())`. On a
+    /// [`SnapshotBuffer::without_gram`] buffer this falls back to the
+    /// `O(n·m²)` batch product.
+    pub fn gram_full(&self) -> Mat {
+        if !self.stream_gram {
+            return gram::gram(&self.columns());
+        }
+        let m = self.cols.len();
+        let cap = self.capacity;
+        Mat::from_fn(m, m, |i, j| self.g[i * cap + j])
     }
 
     pub fn last(&self) -> Option<&[f32]> {
@@ -98,15 +198,17 @@ impl SnapshotBuffer {
         self.cols.first().map_or(0, |c| c.len())
     }
 
-    /// Memory footprint in bytes (for the trainer's accounting).
+    /// Memory footprint in bytes (for the trainer's accounting),
+    /// including the running Gram.
     pub fn bytes(&self) -> usize {
-        self.cols.iter().map(|c| c.len() * 4).sum()
+        self.cols.iter().map(|c| c.len() * 4).sum::<usize>() + self.g.len() * 8
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gram::gram_serial;
 
     #[test]
     fn fills_to_capacity() {
@@ -134,6 +236,9 @@ mod tests {
         for (k, c) in cols.iter().enumerate() {
             assert_eq!(c[0], k as f32);
         }
+        let mut scratch: Vec<&[f32]> = Vec::new();
+        b.columns_into(&mut scratch);
+        assert_eq!(scratch, cols);
     }
 
     #[test]
@@ -143,9 +248,45 @@ mod tests {
         b.push(1, &[2.0]);
         b.clear();
         assert!(b.is_empty());
-        assert_eq!(b.bytes(), 0);
         b.push(5, &[3.0]);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn streaming_gram_tracks_pushes_and_clear() {
+        let mut b = SnapshotBuffer::new(3);
+        b.push_with(None, 0, &[1.0, 2.0]);
+        b.push_with(None, 1, &[3.0, -1.0]);
+        let g = b.gram_full();
+        assert_eq!(g.shape(), (2, 2));
+        assert_eq!(g.get(0, 0), 5.0); // 1+4
+        assert_eq!(g.get(0, 1), 1.0); // 3-2
+        assert_eq!(g.get(1, 0), 1.0);
+        assert_eq!(g.get(1, 1), 10.0); // 9+1
+        // matches the batch Gram exactly
+        let batch = gram_serial(&b.columns());
+        assert_eq!(g.max_diff(&batch), 0.0);
+        // after clear + refill, stale entries never leak
+        b.clear();
+        assert_eq!(b.gram_full().shape(), (0, 0));
+        b.push_with(None, 2, &[2.0, 0.0]);
+        let g2 = b.gram_full();
+        assert_eq!(g2.shape(), (1, 1));
+        assert_eq!(g2.get(0, 0), 4.0);
+    }
+
+    #[test]
+    fn without_gram_skips_streaming_but_gram_full_still_works() {
+        let mut b = SnapshotBuffer::without_gram(3);
+        b.push(0, &[1.0, 2.0]);
+        b.push(1, &[3.0, -1.0]);
+        assert!(b.g.is_empty(), "untracked buffer must not allocate WᵀW");
+        let g = b.gram_full(); // batch fallback
+        let batch = gram_serial(&b.columns());
+        assert_eq!(g.max_diff(&batch), 0.0);
+        b.clear();
+        b.push(2, &[1.0, 1.0]);
+        assert_eq!(b.gram_full().get(0, 0), 2.0);
     }
 
     #[test]
@@ -168,6 +309,9 @@ mod tests {
         }
         assert_eq!(b.columns()[0], &[7.0f32, 8.0, 9.0][..]);
         assert_eq!(b.columns()[1], &[1.0f32, 2.0, 3.0][..]);
+        // the streaming Gram followed the refill
+        let batch = gram_serial(&b.columns());
+        assert_eq!(b.gram_full().max_diff(&batch), 0.0);
     }
 
     #[test]

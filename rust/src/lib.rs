@@ -21,23 +21,35 @@
 //!   external `xla` crate. Select at runtime with
 //!   `DMDTRAIN_BACKEND=pjrt`.
 //!
+//! ## Hot-path engineering
+//!
+//! Every inner reduction bottoms out in [`linalg::dot`]'s fixed 8-lane
+//! accumulator kernels; [`linalg::gemm`] runs register tiles with
+//! B-panel packing on top of them, and [`dmd::SnapshotBuffer`] *streams*
+//! the snapshot Gram (one `O(n·m)` row of `WᵀW` per push) so the DMD
+//! round reads the Gram back in `O(m²)` instead of rebuilding it in an
+//! `O(n·m²)` burst. `benches/linalg_hotpath.rs` tracks both against the
+//! frozen PR-1 scalar kernels.
+//!
 //! ## Deterministic parallelism
 //!
 //! Every parallel kernel is bit-identical to its serial execution, for
 //! any thread count: GEMM partitions *output rows* (each element is
-//! accumulated by one thread in serial loop order), and the Gram family
-//! reduces per-[`linalg::gram::PANEL`] partial dots in a fixed ascending
-//! panel order. `dmd::parallel`'s `parallel_matches_serial` test is the
-//! standing invariant; seeds reproduce exactly regardless of
-//! `DMDTRAIN_THREADS`.
+//! accumulated by one thread in a fixed per-element order, independent
+//! of register-tile position), and the Gram family — batch *and*
+//! streaming — reduces per-[`linalg::gram::PANEL`] partial dots in a
+//! fixed ascending panel order. `dmd::parallel`'s
+//! `parallel_matches_serial` test and `tests/prop_linalg.rs`'s
+//! streaming-Gram property are the standing invariants; seeds reproduce
+//! exactly regardless of `DMDTRAIN_THREADS`.
 //!
 //! Crate map (see DESIGN.md for the paper-to-module inventory):
 //!
 //! | module | role |
 //! |--------|------|
 //! | [`tensor`] | dense row-major f32/f64 matrices |
-//! | [`linalg`] | parallel GEMM/Gram, Jacobi symmetric eig, Schur eig |
-//! | [`dmd`] | snapshots, low-cost SVD, reduced Koopman, extrapolation |
+//! | [`linalg`] | lane-unrolled dots, tiled GEMM/Gram, Jacobi + Schur eig |
+//! | [`dmd`] | snapshots + streaming Gram, low-cost SVD, reduced Koopman, extrapolation |
 //! | [`optim`] | Adam, SGD, per-weight extrapolation baseline |
 //! | [`model`] | MLP architecture, Xavier init, forward oracle |
 //! | [`data`] | Latin-hypercube sampling, dataset format, scaling |

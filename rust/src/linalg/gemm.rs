@@ -1,4 +1,5 @@
-//! Blocked, parallel f32 GEMM — the native backend's training hot path.
+//! Blocked, parallel f32 GEMM — the native backend's training hot path,
+//! built on register-tiled, SIMD-width microkernels.
 //!
 //! Three kernels cover the whole fused forward/backward pass of the
 //! soft-sign MLP (see `runtime::native`):
@@ -7,27 +8,64 @@
 //! * [`gemm_nt`] — `C = A·Bᵀ` (gradient back-propagation `δ Wᵀ`),
 //! * [`gemm_tn`] — `C = Aᵀ·B` (weight gradients `hᵀ δ`).
 //!
-//! Parallelism is *output-partitioned*: contiguous output-row ranges go
-//! to pool tasks, every output element is accumulated by exactly one
-//! thread in exactly the serial loop order, so results are bit-identical
-//! to serial execution for any thread count. Cache blocking (column
-//! panels of `NB`, i-blocks of `IB` in the transposed kernel) reorders
-//! only *which* elements are touched when — never the accumulation order
-//! within an element.
+//! # Microkernel scheme
 //!
-//! [`gemm_nn_bias_act`] intentionally matches `model::forward`'s scalar
-//! loop (ascending-k accumulation, zero-input skip), so native `predict`
-//! reproduces the pure-Rust oracle exactly, not just approximately.
+//! All three kernels accumulate into register tiles sized in multiples
+//! of the crate-wide SIMD width [`LANES`] (8 f32 lanes):
+//!
+//! * **NN** packs B once per call into column panels of [`NR`] = 16
+//!   (2×8 lanes) so the k-loop streams contiguous memory, then runs an
+//!   [`MR`]×[`NR`] register tile per output block — C never round-trips
+//!   through memory during the reduction. Below [`NN_PACK_MIN_ROWS`]
+//!   output rows the pack cannot amortize and an unpacked fallback with
+//!   the identical per-element order runs instead.
+//! * **NT** is dot-product shaped: an [`MR`]×[`NT_JR`] tile of
+//!   8-lane accumulator arrays (the same per-element arithmetic as
+//!   [`dot_f32`]) amortizes each A-row load over two B rows.
+//! * **TN** runs a [`TN_IR`]×[`TN_JR`] tile over the shared dimension,
+//!   one broadcast-FMA row per step, with C resident in registers.
+//!
+//! # Determinism
+//!
+//! Parallelism is *output-partitioned*: contiguous output-row ranges go
+//! to pool tasks and every output element is accumulated by exactly one
+//! thread. The per-element accumulation order is a fixed property of the
+//! kernel — independent of tile position, row range, or thread count —
+//! so results are bit-identical to serial execution for any pool size:
+//!
+//! * NN: accumulator initialized from the bias, ascending-k updates with
+//!   the zero-input skip — *exactly* the `model::forward` scalar oracle,
+//!   so native `predict` reproduces the pure-Rust oracle bit-for-bit.
+//! * NT: the [`dot_f32`] lane order (8 lanes, fixed pairwise
+//!   reduction, ascending scalar tail).
+//! * TN: a single accumulator ascending in the shared dimension.
 
+use crate::linalg::dot::LANES;
 use crate::util::pool::{aligned_ranges, WorkerPool};
 
-/// Column-panel width: `NB` f32 of the output row stay register/L1
-/// resident while a k-strip of B streams through.
-const NB: usize = 256;
+pub use crate::linalg::dot::dot_f32;
 
-/// i-block for the transposed kernel: one pass over B updates `IB`
-/// output rows, cutting B traffic by `IB`×.
-const IB: usize = 8;
+/// Row-tile height shared by all three kernels.
+const MR: usize = 4;
+
+/// NN packed-panel width: 16 f32 = 2 SIMD lanes-groups per C row tile.
+pub const NR: usize = 16;
+
+/// NT column tile (each column holds one 8-lane accumulator array).
+const NT_JR: usize = 2;
+
+/// TN i-tile (output rows = columns of A).
+const TN_IR: usize = 4;
+
+/// TN j-tile: 16 f32 of C stay in registers per tile.
+const TN_JR: usize = 16;
+
+/// Below this row count the NN kernel skips B packing (the O(k·n) pack
+/// cannot amortize over so few rows) and runs the unpacked fallback.
+const NN_PACK_MIN_ROWS: usize = 16;
+
+/// Column-panel width of the unpacked NN fallback (PR-1 blocking).
+const NN_NB: usize = 256;
 
 /// Below this flop count the task-dispatch overhead dominates — run
 /// serially even when a pool is supplied.
@@ -54,6 +92,69 @@ fn split_rows<'a>(
     parts
 }
 
+// ---------------------------------------------------------------------
+// NN: C = act(A·B + bias), with B packed into NR-wide column panels
+// ---------------------------------------------------------------------
+
+/// B repacked into column panels: panel `p` holds columns
+/// `[p·NR, (p+1)·NR)` as a contiguous (k × NR) row-major block,
+/// zero-padded past column n. Packing costs one pass over B and buys a
+/// unit-stride k-loop for every row of A — the panel is reused `m`
+/// times, so the copy amortizes away for any real batch.
+struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedB {
+    fn panel_count(n: usize) -> usize {
+        if n == 0 {
+            0
+        } else {
+            (n - 1) / NR + 1
+        }
+    }
+
+    fn pack(pool: Option<&WorkerPool>, b: &[f32], k: usize, n: usize) -> PackedB {
+        let np = Self::panel_count(n);
+        let mut data = vec![0.0f32; np * k * NR];
+        if np == 0 || k == 0 {
+            // degenerate shapes: nothing to pack (chunk size would be 0)
+            return PackedB { data, k, n };
+        }
+        let pack_panel = |p: usize, dst: &mut [f32]| {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            for kk in 0..k {
+                dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            }
+        };
+        match pool.filter(|p| p.threads() > 1 && np > 1 && k * n >= 1 << 16) {
+            None => {
+                for (p, dst) in data.chunks_mut(k * NR).enumerate() {
+                    pack_panel(p, dst);
+                }
+            }
+            Some(pool) => {
+                let f = &pack_panel;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                    .chunks_mut(k * NR)
+                    .enumerate()
+                    .map(|(p, dst)| Box::new(move || f(p, dst)) as Box<dyn FnOnce() + Send + '_>)
+                    .collect();
+                pool.run_tasks(tasks);
+            }
+        }
+        PackedB { data, k, n }
+    }
+
+    #[inline]
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
 /// `out = act(A·B + bias)`: A is (m×k), B is (k×n), `bias` broadcasts
 /// over rows, `softsign` applies x/(1+|x|) to every element (hidden
 /// layers; the head stays linear).
@@ -76,17 +177,43 @@ pub fn gemm_nn_bias_act(
         assert_eq!(bi.len(), n, "bias length");
     }
     let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && m > 1);
+    if m < NN_PACK_MIN_ROWS {
+        // packing B is O(k·n) — with only a few output rows it cannot
+        // amortize (it would double the memory traffic of a single-row
+        // predict). The unpacked kernel has the same per-element order,
+        // so the choice of path never changes bits.
+        match par {
+            None => kernel_nn_unpacked(a, k, b, n, bias, softsign, out),
+            Some(pool) => {
+                let ranges = aligned_ranges(m, tasks_for(pool), 1);
+                let parts = split_rows(out, &ranges, n);
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                    .iter()
+                    .zip(parts)
+                    .map(|(r, chunk)| {
+                        let a_rows = &a[r.start * k..r.end * k];
+                        Box::new(move || kernel_nn_unpacked(a_rows, k, b, n, bias, softsign, chunk))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_tasks(tasks);
+            }
+        }
+        return;
+    }
+    let bp = PackedB::pack(par, b, k, n);
     match par {
-        None => kernel_nn(a, k, b, n, bias, softsign, out),
+        None => kernel_nn(a, k, &bp, bias, softsign, out),
         Some(pool) => {
-            let ranges = aligned_ranges(m, tasks_for(pool), 1);
+            let ranges = aligned_ranges(m, tasks_for(pool), MR);
             let parts = split_rows(out, &ranges, n);
             let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                 .iter()
                 .zip(parts)
                 .map(|(r, chunk)| {
                     let a_rows = &a[r.start * k..r.end * k];
-                    Box::new(move || kernel_nn(a_rows, k, b, n, bias, softsign, chunk))
+                    let bpr = &bp;
+                    Box::new(move || kernel_nn(a_rows, k, bpr, bias, softsign, chunk))
                         as Box<dyn FnOnce() + Send + '_>
                 })
                 .collect();
@@ -95,10 +222,11 @@ pub fn gemm_nn_bias_act(
     }
 }
 
-/// Serial NN kernel over a row block. Accumulation per output element is
-/// ascending in k with a single f32 accumulator — the exact order of the
-/// `model::forward` oracle (including its zero-input skip).
-fn kernel_nn(
+/// Unpacked NN fallback for row counts below [`NN_PACK_MIN_ROWS`]:
+/// the PR-1 column-panel loop. Per-element accumulation is the same
+/// bias-init, ascending-k, zero-skip order as the packed tile, so the
+/// two paths are bit-identical.
+fn kernel_nn_unpacked(
     a_rows: &[f32],
     k: usize,
     b: &[f32],
@@ -107,7 +235,13 @@ fn kernel_nn(
     softsign: bool,
     out: &mut [f32],
 ) {
-    let rows = if k > 0 { a_rows.len() / k } else { out.len() / n.max(1) };
+    let rows = if k > 0 {
+        a_rows.len() / k
+    } else if n > 0 {
+        out.len() / n
+    } else {
+        0
+    };
     for r in 0..rows {
         let arow = &a_rows[r * k..(r + 1) * k];
         let orow = &mut out[r * n..(r + 1) * n];
@@ -117,7 +251,7 @@ fn kernel_nn(
         }
         let mut jb = 0;
         while jb < n {
-            let je = (jb + NB).min(n);
+            let je = (jb + NN_NB).min(n);
             let oblk = &mut orow[jb..je];
             for (kk, &av) in arow.iter().enumerate() {
                 if av == 0.0 {
@@ -138,8 +272,107 @@ fn kernel_nn(
     }
 }
 
+/// Serial NN kernel over a row block, on packed B. Accumulation per
+/// output element is: init from bias, ascending k, zero-input skip —
+/// the exact order of the `model::forward` oracle.
+fn kernel_nn(
+    a_rows: &[f32],
+    k: usize,
+    bp: &PackedB,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    let n = bp.n;
+    let rows = if k > 0 {
+        a_rows.len() / k
+    } else if n > 0 {
+        out.len() / n
+    } else {
+        0
+    };
+    let np = PackedB::panel_count(n);
+    // panels outer: one (k × NR) packed panel stays cache-resident while
+    // every row tile streams past it, so B is pulled from memory once
+    // per call instead of once per row block
+    for p in 0..np {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let panel = bp.panel(p);
+        let mut binit = [0.0f32; NR];
+        if let Some(bi) = bias {
+            binit[..w].copy_from_slice(&bi[j0..j0 + w]);
+        }
+        let mut r = 0;
+        while r < rows {
+            let mr = (rows - r).min(MR);
+            match mr {
+                4 => tile_nn::<4>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+                3 => tile_nn::<3>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+                2 => tile_nn::<2>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+                _ => tile_nn::<1>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+            }
+            r += mr;
+        }
+    }
+}
+
+/// One R×NR register tile of the NN kernel. Each output element owns a
+/// single accumulator lane: bias init, ascending-k broadcast-FMA with
+/// the oracle's zero-input skip, then the optional soft-sign epilogue.
+/// Padded panel lanes (≥ w) accumulate against zeros and are discarded
+/// at write-back.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_nn<const R: usize>(
+    a_rows: &[f32],
+    r0: usize,
+    k: usize,
+    panel: &[f32],
+    binit: &[f32; NR],
+    softsign: bool,
+    out: &mut [f32],
+    n: usize,
+    j0: usize,
+    w: usize,
+) {
+    let mut arow: [&[f32]; R] = [&[]; R];
+    for (i, ar) in arow.iter_mut().enumerate() {
+        *ar = &a_rows[(r0 + i) * k..(r0 + i) * k + k];
+    }
+    let mut acc = [*binit; R];
+    for kk in 0..k {
+        let brow = &panel[kk * NR..(kk + 1) * NR];
+        for i in 0..R {
+            let av = arow[i][kk];
+            if av == 0.0 {
+                continue; // oracle-identical skip
+            }
+            let acc_i = &mut acc[i];
+            for l in 0..NR {
+                acc_i[l] += av * brow[l];
+            }
+        }
+    }
+    for i in 0..R {
+        let orow = &mut out[(r0 + i) * n + j0..(r0 + i) * n + j0 + w];
+        if softsign {
+            for (o, &v) in orow.iter_mut().zip(&acc[i][..w]) {
+                *o = v / (1.0 + v.abs());
+            }
+        } else {
+            orow.copy_from_slice(&acc[i][..w]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NT: C = A·Bᵀ (dot-product shaped)
+// ---------------------------------------------------------------------
+
 /// `out = A·Bᵀ`: A is (m×k), B is (n×k) — both operands are read along
-/// contiguous rows, each output element is one unrolled dot product.
+/// contiguous rows, each output element is one [`dot_f32`]-ordered
+/// dot product.
 pub fn gemm_nt(
     pool: Option<&WorkerPool>,
     a: &[f32],
@@ -156,7 +389,7 @@ pub fn gemm_nt(
     match par {
         None => kernel_nt(a, k, b, n, out),
         Some(pool) => {
-            let ranges = aligned_ranges(m, tasks_for(pool), 1);
+            let ranges = aligned_ranges(m, tasks_for(pool), MR);
             let parts = split_rows(out, &ranges, n);
             let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                 .iter()
@@ -172,6 +405,11 @@ pub fn gemm_nt(
     }
 }
 
+/// A-row block height: one block of A rows (≤ NT_RB·k floats) stays
+/// cache-resident while the whole of B streams past it once, instead of
+/// re-streaming B for every 4-row tile.
+const NT_RB: usize = 32;
+
 fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     let rows = if k > 0 {
         a_rows.len() / k
@@ -180,38 +418,95 @@ fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     } else {
         0
     };
-    for r in 0..rows {
-        let arow = &a_rows[r * k..(r + 1) * k];
-        let orow = &mut out[r * n..(r + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o = dot_f32(arow, &b[j * k..(j + 1) * k]);
+    let jt = n - n % NT_JR;
+    let mut rb = 0;
+    while rb < rows {
+        let rbe = (rb + NT_RB).min(rows);
+        let mut j = 0;
+        while j + NT_JR <= n {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let mut r = rb;
+            while r < rbe {
+                let mr = (rbe - r).min(MR);
+                match mr {
+                    4 => tile_nt::<4>(a_rows, r, k, b0, b1, n, j, out),
+                    3 => tile_nt::<3>(a_rows, r, k, b0, b1, n, j, out),
+                    2 => tile_nt::<2>(a_rows, r, k, b0, b1, n, j, out),
+                    _ => tile_nt::<1>(a_rows, r, k, b0, b1, n, j, out),
+                }
+                r += mr;
+            }
+            j += NT_JR;
+        }
+        // column tail: plain dot_f32 per element (same bits as the tile)
+        for jj in jt..n {
+            let bj = &b[jj * k..jj * k + k];
+            for r in rb..rbe {
+                out[r * n + jj] = dot_f32(&a_rows[r * k..r * k + k], bj);
+            }
+        }
+        rb = rbe;
+    }
+}
+
+/// R rows of A against one pair of B rows. Each output element keeps its
+/// own 8-lane accumulator array updated in the exact [`dot_f32`]
+/// sequence, so tile position never changes bits (the j/row tails fall
+/// back to `dot_f32` itself).
+#[inline]
+fn tile_nt<const R: usize>(
+    a_rows: &[f32],
+    r0: usize,
+    k: usize,
+    b0: &[f32],
+    b1: &[f32],
+    n: usize,
+    j: usize,
+    out: &mut [f32],
+) {
+    let mut arow: [&[f32]; R] = [&[]; R];
+    for (i, ar) in arow.iter_mut().enumerate() {
+        *ar = &a_rows[(r0 + i) * k..(r0 + i) * k + k];
+    }
+    let chunks = k / LANES;
+    let mut acc = [[[0.0f32; LANES]; NT_JR]; R];
+    for c in 0..chunks {
+        let base = c * LANES;
+        let xb0 = &b0[base..base + LANES];
+        let xb1 = &b1[base..base + LANES];
+        for i in 0..R {
+            let xa = &arow[i][base..base + LANES];
+            let acc_i = &mut acc[i];
+            for l in 0..LANES {
+                acc_i[0][l] += xa[l] * xb0[l];
+            }
+            for l in 0..LANES {
+                acc_i[1][l] += xa[l] * xb1[l];
+            }
+        }
+    }
+    let tail = chunks * LANES;
+    for i in 0..R {
+        for (jj, bj) in [b0, b1].iter().enumerate() {
+            let lanes = &acc[i][jj];
+            let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            for t in tail..k {
+                s += arow[i][t] * bj[t];
+            }
+            out[(r0 + i) * n + j + jj] = s;
         }
     }
 }
 
-/// Four-lane unrolled f32 dot product (fixed lane order — deterministic).
-#[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = 4 * i;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut tail = 0.0f32;
-    for j in 4 * chunks..a.len() {
-        tail += a[j] * b[j];
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
-}
+// ---------------------------------------------------------------------
+// TN: C = Aᵀ·B (outer-product shaped over the shared dimension)
+// ---------------------------------------------------------------------
 
-/// `out = Aᵀ·B`: A is (m×k), B is (m×n), out is (k×n). Output rows
-/// (columns of A) are processed in blocks of [`IB`] so one streaming
-/// pass over B feeds `IB` accumulator rows.
+/// `out = Aᵀ·B`: A is (m×k), B is (m×n), out is (k×n). Register tiles
+/// of [`TN_IR`]×[`TN_JR`] accumulate over ascending shared-dimension
+/// rows with C resident in registers until write-back.
 pub fn gemm_tn(
     pool: Option<&WorkerPool>,
     a: &[f32],
@@ -228,7 +523,7 @@ pub fn gemm_tn(
     match par {
         None => kernel_tn(a, m, k, b, n, 0..k, out),
         Some(pool) => {
-            let ranges = aligned_ranges(k, tasks_for(pool), IB);
+            let ranges = aligned_ranges(k, tasks_for(pool), TN_IR);
             let parts = split_rows(out, &ranges, n);
             let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                 .iter()
@@ -245,8 +540,10 @@ pub fn gemm_tn(
 }
 
 /// Serial TN kernel for output rows `i_range` (writes into `out`, whose
-/// row 0 corresponds to `i_range.start`). Accumulation per element is
-/// ascending in the shared dimension m — deterministic.
+/// row 0 corresponds to `i_range.start`). Every output element is one
+/// accumulator summed over ascending shared-dimension index — identical
+/// in the register tile and in the scalar tails, so any i-partition is
+/// bit-identical.
 fn kernel_tn(
     a: &[f32],
     m: usize,
@@ -256,31 +553,68 @@ fn kernel_tn(
     i_range: std::ops::Range<usize>,
     out: &mut [f32],
 ) {
-    out.fill(0.0);
     let base = i_range.start;
-    let mut ib = i_range.start;
-    while ib < i_range.end {
-        let ie = (ib + IB).min(i_range.end);
-        for r in 0..m {
-            let brow = &b[r * n..(r + 1) * n];
-            for i in ib..ie {
-                let av = a[r * k + i];
-                if av == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[(i - base) * n..(i - base + 1) * n];
-                let mut jb = 0;
-                while jb < n {
-                    let je = (jb + NB).min(n);
-                    let bblk = &brow[jb..je];
-                    for (o, &bv) in orow[jb..je].iter_mut().zip(bblk) {
-                        *o += av * bv;
-                    }
-                    jb = je;
-                }
+    // j-panels outer: one (m × TN_JR) strip of B stays cache-resident
+    // while every i-tile streams A past it
+    let jt = n - n % TN_JR;
+    let mut j = 0;
+    while j + TN_JR <= n {
+        let mut i = i_range.start;
+        while i < i_range.end {
+            let ti = (i_range.end - i).min(TN_IR);
+            match ti {
+                4 => tile_tn::<4>(a, m, k, b, n, i, base, j, out),
+                3 => tile_tn::<3>(a, m, k, b, n, i, base, j, out),
+                2 => tile_tn::<2>(a, m, k, b, n, i, base, j, out),
+                _ => tile_tn::<1>(a, m, k, b, n, i, base, j, out),
+            }
+            i += ti;
+        }
+        j += TN_JR;
+    }
+    // j tail: scalar per element, ascending r single acc (same bits as
+    // the tile path)
+    for jj in jt..n {
+        for ii in i_range.clone() {
+            let mut s = 0.0f32;
+            for r in 0..m {
+                s += a[r * k + ii] * b[r * n + jj];
+            }
+            out[(ii - base) * n + jj] = s;
+        }
+    }
+}
+
+/// One TI×TN_JR register tile of the TN kernel: per shared-dimension row
+/// `r`, broadcast TI values of A against one 16-wide B slice.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_tn<const TI: usize>(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    base: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; TN_JR]; TI];
+    for r in 0..m {
+        let brow = &b[r * n + j0..r * n + j0 + TN_JR];
+        let abase = r * k + i0;
+        for di in 0..TI {
+            let av = a[abase + di];
+            let acc_d = &mut acc[di];
+            for l in 0..TN_JR {
+                acc_d[l] += av * brow[l];
             }
         }
-        ib = ie;
+    }
+    for di in 0..TI {
+        let orow = &mut out[(i0 + di - base) * n + j0..(i0 + di - base) * n + j0 + TN_JR];
+        orow.copy_from_slice(&acc[di]);
     }
 }
 
@@ -300,6 +634,9 @@ mod tests {
         for r in 0..m {
             for kk in 0..k {
                 let av = a[r * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
                 for j in 0..n {
                     out[r * n + j] += av * b[kk * n + j];
                 }
@@ -309,18 +646,25 @@ mod tests {
     }
 
     #[test]
-    fn nn_matches_naive_and_parallel_is_bit_identical() {
-        let (m, k, n) = (37, 23, 41);
-        let a = rand_vec(m * k, 1);
-        let b = rand_vec(k * n, 2);
-        let mut serial = vec![0.0f32; m * n];
-        kernel_nn(&a, k, &b, n, None, false, &mut serial);
-        let want = naive_nn(&a, m, k, &b, n);
-        for (s, w) in serial.iter().zip(&want) {
-            assert!((s - w).abs() < 1e-4, "{s} vs {w}");
+    fn nn_matches_oracle_order_bitwise() {
+        // the NN kernel must equal the scalar ascending-k oracle loop to
+        // the bit, tile blocking and B packing notwithstanding — this is
+        // the `model::forward` parity contract
+        for (m, k, n) in [(37, 23, 41), (5, 8, 16), (4, 16, 15), (1, 3, 50), (6, 1, 17)] {
+            let a = rand_vec(m * k, 1 + n as u64);
+            let b = rand_vec(k * n, 2 + m as u64);
+            let mut got = vec![0.0f32; m * n];
+            gemm_nn_bias_act(None, &a, m, k, &b, n, None, false, &mut got);
+            let want = naive_nn(&a, m, k, &b, n);
+            for (i, (s, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(s.to_bits(), w.to_bits(), "({m},{k},{n}) elem {i}: {s} vs {w}");
+            }
         }
-        // bigger problem so the parallel path actually engages
-        let (m, k, n) = (160, 80, 96);
+    }
+
+    #[test]
+    fn nn_parallel_is_bit_identical() {
+        let (m, k, n) = (161, 80, 97); // ragged in every dimension
         let a = rand_vec(m * k, 3);
         let b = rand_vec(k * n, 4);
         let mut serial = vec![0.0f32; m * n];
@@ -329,6 +673,26 @@ mod tests {
         let mut par = vec![0.0f32; m * n];
         gemm_nn_bias_act(Some(&pool), &a, m, k, &b, n, None, false, &mut par);
         assert_eq!(serial, par, "parallel NN must be bit-identical to serial");
+    }
+
+    #[test]
+    fn nn_zero_input_skip_matches_oracle() {
+        // inject exact zeros into A: the skip must keep bit-parity with
+        // the oracle loop that also skips them
+        let (m, k, n) = (9, 12, 21);
+        let mut a = rand_vec(m * k, 31);
+        for (i, v) in a.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_vec(k * n, 32);
+        let mut got = vec![0.0f32; m * n];
+        gemm_nn_bias_act(None, &a, m, k, &b, n, None, false, &mut got);
+        let want = naive_nn(&a, m, k, &b, n);
+        for (s, w) in got.iter().zip(&want) {
+            assert_eq!(s.to_bits(), w.to_bits());
+        }
     }
 
     #[test]
@@ -364,7 +728,7 @@ mod tests {
             }
         }
         let pool = WorkerPool::new(3);
-        let (m, k, n) = (120, 90, 70);
+        let (m, k, n) = (121, 90, 71);
         let a = rand_vec(m * k, 10);
         let bt = rand_vec(n * k, 11);
         let mut serial = vec![0.0f32; m * n];
@@ -372,6 +736,24 @@ mod tests {
         let mut par = vec![0.0f32; m * n];
         gemm_nt(Some(&pool), &a, m, k, &bt, n, &mut par);
         assert_eq!(serial, par, "parallel NT must be bit-identical to serial");
+    }
+
+    #[test]
+    fn nt_tile_matches_dot_kernel_bitwise() {
+        // the in-tile accumulation must be the exact dot_f32 sequence,
+        // wherever an element lands in the 4×2 tiling
+        for (m, k, n) in [(4, 64, 2), (5, 37, 3), (7, 8, 9), (3, 70, 1)] {
+            let a = rand_vec(m * k, 60 + k as u64);
+            let bt = rand_vec(n * k, 61 + k as u64);
+            let mut out = vec![0.0f32; m * n];
+            gemm_nt(None, &a, m, k, &bt, n, &mut out);
+            for r in 0..m {
+                for j in 0..n {
+                    let want = dot_f32(&a[r * k..(r + 1) * k], &bt[j * k..(j + 1) * k]);
+                    assert_eq!(out[r * n + j].to_bits(), want.to_bits());
+                }
+            }
+        }
     }
 
     #[test]
@@ -388,7 +770,7 @@ mod tests {
             }
         }
         let pool = WorkerPool::new(4);
-        let (m, k, n) = (150, 64, 48);
+        let (m, k, n) = (151, 66, 49); // ragged tails in every tile
         let a = rand_vec(m * k, 14);
         let b = rand_vec(m * n, 15);
         let mut serial = vec![0.0f32; k * n];
@@ -396,6 +778,26 @@ mod tests {
         let mut par = vec![0.0f32; k * n];
         gemm_tn(Some(&pool), &a, m, k, &b, n, &mut par);
         assert_eq!(serial, par, "parallel TN must be bit-identical to serial");
+    }
+
+    #[test]
+    fn tn_tile_matches_scalar_order_bitwise() {
+        // tile path and scalar-tail path share the ascending-r single
+        // accumulator order
+        let (m, k, n) = (33, 6, 18);
+        let a = rand_vec(m * k, 71);
+        let b = rand_vec(m * n, 72);
+        let mut out = vec![0.0f32; k * n];
+        gemm_tn(None, &a, m, k, &b, n, &mut out);
+        for i in 0..k {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for r in 0..m {
+                    s += a[r * k + i] * b[r * n + j];
+                }
+                assert_eq!(out[i * n + j].to_bits(), s.to_bits());
+            }
+        }
     }
 
     #[test]
@@ -414,5 +816,9 @@ mod tests {
         // k = 0: out = bias only
         gemm_nn_bias_act(None, &[], 1, 0, &[], 3, Some(&[1.0, 2.0, 3.0]), false, &mut out1);
         assert_eq!(out1, vec![1.0, 2.0, 3.0]);
+        // m = 0 in TN: output is all zeros
+        let mut out2 = vec![9.0f32; 2 * 3];
+        gemm_tn(None, &[], 0, 2, &[], 3, &mut out2);
+        assert!(out2.iter().all(|&v| v == 0.0));
     }
 }

@@ -11,6 +11,13 @@
 //! DESIGN.md §5): the Koopman modes are applied as
 //! `Φ c = W₊ · (V Σ⁻¹ Y c)`, i.e. a [`combine`] over snapshot columns.
 //!
+//! Since PR 2 the full snapshot Gram is usually not built here at all:
+//! `dmd::SnapshotBuffer` keeps a *running* WᵀW via [`last_column_dots`]
+//! (one `O(n·m)` row per push, amortized into the training steps), and
+//! the DMD round only reads it back. The batch [`gram`] remains the
+//! reference implementation — [`pair_dots`]' fixed panel-reduction
+//! order guarantees the two construction orders agree bit-for-bit.
+//!
 //! # Deterministic parallel reduction
 //!
 //! The products are parallelized over the shared worker pool by
@@ -26,28 +33,7 @@
 use crate::tensor::Mat;
 use crate::util::pool::{aligned_ranges, WorkerPool};
 
-/// Dot product of two equal-length f32 slices with f64 accumulation.
-///
-/// Unrolled into four independent accumulators so the compiler can keep
-/// vector lanes busy (hot path: called m² times over n-long columns).
-#[inline]
-pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = 4 * i;
-        acc[0] += a[j] as f64 * b[j] as f64;
-        acc[1] += a[j + 1] as f64 * b[j + 1] as f64;
-        acc[2] += a[j + 2] as f64 * b[j + 2] as f64;
-        acc[3] += a[j + 3] as f64 * b[j + 3] as f64;
-    }
-    let mut tail = 0.0f64;
-    for j in 4 * chunks..a.len() {
-        tail += a[j] as f64 * b[j] as f64;
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
-}
+pub use crate::linalg::dot::dot_f32_f64;
 
 /// Row-panel size for the blocked Gram products: 4096 f32 = 16 KiB per
 /// column, so a full panel across m ≤ 20 columns (≤320 KiB) stays in L2
@@ -76,11 +62,20 @@ fn use_pool<'p>(
     pool.filter(|p| p.threads() > 1 && panel_count(n) > 1 && n.saturating_mul(pair_work) >= PAR_WORK)
 }
 
-/// Compute per-panel partial dots for `pairs` (each an index pair into
-/// `a`/`b` column sets) and reduce them in ascending panel order.
-fn panel_partials(
-    a: &[&[f32]],
-    b: &[&[f32]],
+/// Compute the f64 dot product of every `(i, j)` pair — `a[i]·b[j]` over
+/// the first `n` elements — with the fixed panel-reduction order, fanned
+/// out over the pool when supplied.
+///
+/// This is the one primitive every Gram-family product (and the snapshot
+/// buffer's streaming WᵀW row updates) is built on: each (pair, panel)
+/// partial is one [`dot_f32_f64`] computed by exactly one thread, and
+/// partials reduce in ascending panel order — so a pair's value depends
+/// only on the two columns and `n`, never on which other pairs were
+/// requested alongside it or on the thread count. Incremental and batch
+/// Gram construction therefore agree bit-for-bit.
+pub fn pair_dots<A: AsRef<[f32]> + Sync, B: AsRef<[f32]> + Sync>(
+    a: &[A],
+    b: &[B],
     pairs: &[(usize, usize)],
     n: usize,
     pool: Option<&WorkerPool>,
@@ -97,7 +92,7 @@ fn panel_partials(
             let start = p * PANEL;
             let end = (start + PANEL).min(n);
             for (s, &(i, j)) in slot.iter_mut().zip(pairs) {
-                *s = dot_f32_f64(&a[i][start..end], &b[j][start..end]);
+                *s = dot_f32_f64(&a[i].as_ref()[start..end], &b[j].as_ref()[start..end]);
             }
         }
     };
@@ -129,6 +124,25 @@ fn panel_partials(
     acc
 }
 
+/// Streaming-Gram row update: dots of the **last** column in `cols`
+/// against every column (itself included), i.e. the one new row/column
+/// of WᵀW after a snapshot push. `O(n·m)` instead of the `O(n·m²)`
+/// batch rebuild; by the [`pair_dots`] contract each entry is
+/// bit-identical to the same entry of a batch [`gram`] over the same
+/// columns.
+pub fn last_column_dots<C: AsRef<[f32]> + Sync>(
+    cols: &[C],
+    n: usize,
+    pool: Option<&WorkerPool>,
+) -> Vec<f64> {
+    let m = cols.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    let pairs: Vec<(usize, usize)> = (0..m).map(|i| (i, m - 1)).collect();
+    pair_dots(cols, cols, &pairs, n, pool)
+}
+
 fn gram_impl(cols: &[&[f32]], pool: Option<&WorkerPool>) -> Mat {
     let m = cols.len();
     let n = cols.first().map_or(0, |c| c.len());
@@ -138,7 +152,7 @@ fn gram_impl(cols: &[&[f32]], pool: Option<&WorkerPool>) -> Mat {
             pairs.push((i, j));
         }
     }
-    let acc = panel_partials(cols, cols, &pairs, n, pool);
+    let acc = pair_dots(cols, cols, &pairs, n, pool);
     let mut g = Mat::zeros(m, m);
     for (&(i, j), &v) in pairs.iter().zip(&acc) {
         g.set(i, j, v);
@@ -174,7 +188,7 @@ fn cross_gram_impl(a: &[&[f32]], b: &[&[f32]], pool: Option<&WorkerPool>) -> Mat
             pairs.push((i, j));
         }
     }
-    let acc = panel_partials(a, b, &pairs, n, pool);
+    let acc = pair_dots(a, b, &pairs, n, pool);
     let mut c = Mat::zeros(ma, mb);
     for (&(i, j), &v) in pairs.iter().zip(&acc) {
         c.set(i, j, v);
@@ -412,6 +426,42 @@ mod tests {
         assert_eq!(par.len(), ser.len());
         for (p, s) in par.iter().zip(&ser) {
             assert_eq!(p.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_row_updates_match_batch_gram_bitwise() {
+        // build WᵀW one column at a time via last_column_dots; every
+        // entry must equal the batch gram to the bit, serial and pooled.
+        // n is large enough that the later pooled row updates clear the
+        // PAR_WORK threshold and really fan out over panels.
+        let n = 16 * PANEL + 57;
+        let cols = random_cols(n, 6, 30);
+        let batch = gram_serial(&refs(&cols));
+        let mut g = vec![0.0f64; 6 * 6];
+        for m in 1..=6 {
+            let dots = last_column_dots(&cols[..m], n, None);
+            assert_eq!(dots.len(), m);
+            for (i, &v) in dots.iter().enumerate() {
+                g[i * 6 + (m - 1)] = v;
+                g[(m - 1) * 6 + i] = v;
+            }
+        }
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(
+                    g[i * 6 + j].to_bits(),
+                    batch.get(i, j).to_bits(),
+                    "streaming G[{i}][{j}] differs from batch gram"
+                );
+            }
+        }
+        let pool = WorkerPool::new(3);
+        for m in 1..=6 {
+            let dots = last_column_dots(&cols[..m], n, Some(&pool));
+            for (i, &v) in dots.iter().enumerate() {
+                assert_eq!(v.to_bits(), batch.get(i, m - 1).to_bits());
+            }
         }
     }
 

@@ -7,11 +7,16 @@
 //!
 //! * [`complex`] — `Cplx` scalar arithmetic.
 //! * [`cmat`] — small dense complex matrices + LU solve (mode projection).
-//! * [`gemm`] — blocked, pool-parallel f32 GEMM (the native backend's
-//!   forward/backward kernels; deterministic output partitioning).
+//! * [`dot`] — the shared lane-unrolled dot-product microkernels (f32
+//!   and f32→f64 accumulation); every inner reduction in [`gemm`] and
+//!   [`gram`] bottoms out here with a fixed, documented lane order.
+//! * [`gemm`] — register-tiled, pool-parallel f32 GEMM with B-panel
+//!   packing (the native backend's forward/backward kernels;
+//!   deterministic output partitioning).
 //! * [`gram`] — Gram/cross-Gram/combine products over f32 snapshot
 //!   columns, parallel with a fixed panel-reduction order (bit-identical
-//!   to serial).
+//!   to serial); also the streaming per-pair dots the snapshot buffer
+//!   uses to keep a running WᵀW.
 //! * [`jacobi`] — cyclic-Jacobi symmetric eigensolver (the m×m SVD step).
 //! * [`schur`] — Hessenberg reduction + complex shifted-QR Schur form.
 //! * [`eig`] — eigenvalues/eigenvectors of small real nonsymmetric
@@ -19,6 +24,7 @@
 
 pub mod cmat;
 pub mod complex;
+pub mod dot;
 pub mod eig;
 pub mod gemm;
 pub mod gram;

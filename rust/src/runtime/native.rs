@@ -15,10 +15,12 @@
 //! tensor is kept. Gradients match the loss exactly (central-difference
 //! checked in `tests/native_backend.rs`), and `predict` reproduces the
 //! `model::forward` oracle bit-for-bit: the GEMM accumulates each output
-//! element in the same ascending-k order as the oracle's scalar loop.
+//! element in the same ascending-k order as the oracle's scalar loop,
+//! register tiling and B-panel packing notwithstanding.
 //!
-//! Parallelism is deterministic: GEMM work is output-row partitioned, so
-//! any thread count produces identical floats (see `linalg::gemm`).
+//! Parallelism is deterministic: GEMM work is output-row partitioned and
+//! every kernel's per-element accumulation order is fixed, so any thread
+//! count produces identical floats (see `linalg::gemm` / `linalg::dot`).
 
 use super::manifest::ManifestEntry;
 use crate::linalg::gemm;
@@ -288,9 +290,15 @@ impl NativeExecutable {
             );
         }
         let (n, m) = s.shape();
-        let cols: Vec<Vec<f32>> = (0..m)
-            .map(|c| (0..n).map(|r| s.get(r, c)).collect())
-            .collect();
+        // transpose the row-major (n×m) snapshot into m contiguous
+        // columns in one pass over the rows — per-element get() was
+        // quadratic in bounds checks at n ~ 2.67 M
+        let mut cols = vec![vec![0.0f32; n]; m];
+        for r in 0..n {
+            for (col, &v) in cols.iter_mut().zip(s.row(r)) {
+                col[r] = v;
+            }
+        }
         let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
         let g = crate::linalg::gram::gram_with(self.pool, &refs);
         Ok(Tensor::from_fn(m, m, |i, j| g.get(i, j) as f32))

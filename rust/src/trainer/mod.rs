@@ -5,11 +5,14 @@
 //! the `pjrt` feature), Adam updates happen here in Rust, and every
 //! optimizer step appends one flattened snapshot per layer — copied
 //! straight into recycled snapshot columns (`SnapshotBuffer::push_parts`,
-//! no per-step allocation). When the buffers reach `m` snapshots, the
-//! per-layer DMD solves run (in parallel over the shared worker pool),
-//! the extrapolated weights are written back, the buffers are cleared,
-//! and backpropagation resumes — exactly the paper's loop. With
-//! `cfg.dmd = None` the same loop is the paper's "without DMD" baseline.
+//! no per-step allocation) which *stream* the snapshot Gram: each push
+//! also computes the one new row of WᵀW on the worker pool, so the DMD
+//! round never rebuilds it. When the buffers reach `m` snapshots, the
+//! per-layer DMD solves run (in parallel over the shared worker pool)
+//! against the streamed Grams, the extrapolated weights are written
+//! back, the buffers are cleared, and backpropagation resumes — exactly
+//! the paper's loop. With `cfg.dmd = None` the same loop is the paper's
+//! "without DMD" baseline.
 //!
 //! Artifacts may declare `batch = 0` (dynamic): the trainer then runs
 //! full-batch on the whole training set, which also enables the pinned
@@ -99,8 +102,10 @@ impl Trainer {
 
     fn record_snapshots(&mut self, step: usize) {
         for layer in 0..self.arch.num_layers() {
-            // copy (w, b) straight into a recycled snapshot column —
-            // no intermediate flatten_layer Vec on the hot path
+            // copy (w, b) straight into a recycled snapshot column — no
+            // intermediate flatten_layer Vec on the hot path. push_parts
+            // also streams the new WᵀW row (O(n·m) on the pool), which
+            // is what lets dmd_jump skip the O(n·m²) Gram burst.
             let w = &self.params[2 * layer];
             let b = &self.params[2 * layer + 1];
             self.buffers[layer].push_parts(step, &[w.data(), b.data()]);

@@ -126,6 +126,101 @@ fn prop_cmat_solve_roundtrip() {
 }
 
 #[test]
+fn prop_streaming_gram_bit_identical_to_batch() {
+    // The PR-2 streaming-Gram invariant: a SnapshotBuffer's running WᵀW
+    // after k pushes — and after a clear() + refill — is bit-identical
+    // to a batch gram over the same columns, for ragged n spanning the
+    // panel boundary, m = 2..8, serial and pooled. n is drawn from the
+    // rng directly (not dim_in) because the generator's size budget
+    // would clamp it far below PANEL.
+    use dmdtrain::dmd::SnapshotBuffer;
+    use dmdtrain::util::pool::WorkerPool;
+    let pool = WorkerPool::new(3);
+    check("streaming_gram_bitwise", 25, |g| {
+        let m = g.dim_in(2, 8);
+        // ragged n across the panel boundary: [1, 3·PANEL+513]
+        let n = 1 + g.rng.below(3 * gram::PANEL + 513);
+        let cols: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal_f32(n, 1.0)).collect();
+        let pooled = g.rng.below(2) == 1;
+        let pool_opt = if pooled { Some(&pool) } else { None };
+        let mut buf = SnapshotBuffer::new(m);
+        // fill, clear, refill with the real columns: stale entries from
+        // the first cycle must never leak into the second
+        for (k, c) in cols.iter().enumerate() {
+            buf.push_with(pool_opt, k, c);
+        }
+        buf.clear();
+        for (k, c) in cols.iter().enumerate() {
+            // exercise the multi-part path too: split each column in two
+            let cut = n / 2;
+            buf.push_parts_with(pool_opt, k, &[&c[..cut], &c[cut..]]);
+        }
+        let streamed = buf.gram_full();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let batch = gram::gram_serial(&refs);
+        prop_assert!(
+            streamed.shape() == (m, m),
+            "streamed gram shape {:?} for m={m}",
+            streamed.shape()
+        );
+        for i in 0..m {
+            for j in 0..m {
+                prop_assert!(
+                    streamed.get(i, j).to_bits() == batch.get(i, j).to_bits(),
+                    "streamed[{i}][{j}] = {} != batch {} (m={m}, n={n}, pooled={pooled})",
+                    streamed.get(i, j),
+                    batch.get(i, j)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn streaming_gram_pooled_row_update_engages_pool_and_matches_serial() {
+    // Deterministic companion to the property above: n·m is pushed past
+    // gram's PAR_WORK threshold so the pooled last_column_dots path
+    // really fans out over panels (the random sizes above mostly stay
+    // under it), and the pooled, serial and batch constructions must
+    // agree to the bit.
+    use dmdtrain::dmd::SnapshotBuffer;
+    use dmdtrain::rng::Rng;
+    use dmdtrain::util::pool::WorkerPool;
+    let pool = WorkerPool::new(4);
+    let m = 8usize;
+    let n = 12 * gram::PANEL + 913; // ~50k rows: n·m ≈ 4·10⁵ ≥ PAR_WORK
+    let mut rng = Rng::new(77);
+    let cols: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let mut pooled = SnapshotBuffer::new(m);
+    let mut serial = SnapshotBuffer::new(m);
+    for (k, c) in cols.iter().enumerate() {
+        pooled.push_with(Some(&pool), k, c);
+        serial.push_with(None, k, c);
+    }
+    let gp = pooled.gram_full();
+    let gs = serial.gram_full();
+    let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+    let batch = gram::gram_serial(&refs);
+    for i in 0..m {
+        for j in 0..m {
+            assert_eq!(
+                gp.get(i, j).to_bits(),
+                gs.get(i, j).to_bits(),
+                "pooled vs serial streaming mismatch at [{i}][{j}]"
+            );
+            assert_eq!(
+                gs.get(i, j).to_bits(),
+                batch.get(i, j).to_bits(),
+                "streaming vs batch mismatch at [{i}][{j}]"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_project_combine_adjoint() {
     // ⟨C k, w⟩ = ⟨k, Cᵀ w⟩ — combine and project are adjoint.
     check("project_combine_adjoint", 40, |g| {
