@@ -1,0 +1,200 @@
+//! Closed-loop load generator for the inference server: drives
+//! `POST /predict` over localhost at several concurrency levels and
+//! records throughput, p50/p99 latency and the achieved mean
+//! micro-batch size into the perf-trajectory artifact
+//! `BENCH_serve.json` (uploaded by CI).
+//!
+//! The acceptance invariant it demonstrates: with a 1 ms batch window,
+//! concurrent clients coalesce (mean batch rows > 1) and throughput at
+//! concurrency 32 beats concurrency 1. Every response is also checked
+//! bit-identical against a direct `Executable::predict` on the same
+//! checkpoint, so the load test doubles as a correctness soak.
+
+mod common;
+
+use dmdtrain::config::ServeConfig;
+use dmdtrain::model::Arch;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::{Executable, ManifestEntry, NativeExecutable};
+use dmdtrain::serve::http::read_response;
+use dmdtrain::serve::Server;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::save_params;
+use dmdtrain::util;
+use dmdtrain::util::pool::WorkerPool;
+use std::fmt::Write as _;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+/// The "sweep" architecture: big enough that the GEMM is real work,
+/// small enough that the bench stays fast.
+const ARCH: [usize; 4] = [6, 40, 200, 267];
+
+fn main() -> anyhow::Result<()> {
+    let fast = common::fast_mode();
+    let requests_per_client = if fast { 50 } else { 300 };
+    let concurrencies: [usize; 3] = [1, 8, 32];
+
+    // --- model + server setup -------------------------------------------
+    let model_dir = common::out_dir("serve_bench/models");
+    let arch = Arch::new(ARCH.to_vec())?;
+    let params = arch.init_params(&mut Rng::new(42));
+    save_params(&params, model_dir.join("sweep.dmdp"))?;
+
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        model_dir: model_dir.to_string_lossy().into_owned(),
+        batch_window_us: 1_000,
+        max_batch_rows: 256,
+        threads: 64,
+        reload_secs: 0,
+    };
+    let server = Server::start(&cfg)?;
+    let addr = server.addr();
+    let metrics = server.metrics();
+    println!(
+        "serve_load: arch {ARCH:?} on {addr}, window {} µs, {} pool threads, {} reqs/client",
+        cfg.batch_window_us,
+        WorkerPool::global().threads(),
+        requests_per_client
+    );
+
+    // Each client thread sends one fixed row; expected output precomputed.
+    let exe = Executable::Native(NativeExecutable::new(ManifestEntry::native_model(
+        "predict", "direct", &ARCH, 0,
+    ))?);
+
+    let mut json_cases: Vec<String> = Vec::new();
+    let mut by_concurrency: Vec<(usize, f64, f64)> = Vec::new(); // (c, rps, mean batch)
+
+    for &concurrency in &concurrencies {
+        let batches_before = metrics.predict_batches.get();
+        let rows_before = metrics.predict_rows.get();
+
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..concurrency {
+            let row: Vec<f32> = (0..ARCH[0])
+                .map(|c| ((t * 17 + c * 5) % 23) as f32 * 0.08 - 0.8)
+                .collect();
+            let x = Tensor::from_vec(1, ARCH[0], row.clone());
+            let expected = exe.predict_all(&params, &x)?;
+            handles.push(std::thread::spawn(move || {
+                client_loop(addr, &row, &expected, requests_per_client)
+            }));
+        }
+        let mut latencies: Vec<f64> = Vec::new();
+        for h in handles {
+            latencies.extend(h.join().expect("client thread"));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        let total_reqs = concurrency * requests_per_client;
+        let rps = total_reqs as f64 / wall;
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| latencies[((latencies.len() as f64 - 1.0) * q).round() as usize];
+        let (p50, p99) = (pick(0.50), pick(0.99));
+        let d_batches = (metrics.predict_batches.get() - batches_before).max(1);
+        let d_rows = metrics.predict_rows.get() - rows_before;
+        let mean_batch = d_rows as f64 / d_batches as f64;
+
+        println!(
+            "c={concurrency:<3} {total_reqs:>6} reqs in {wall:>7.3}s  {rps:>9.0} req/s  \
+             p50 {:>8.3} ms  p99 {:>8.3} ms  mean batch {mean_batch:>6.2} rows",
+            p50 * 1e3,
+            p99 * 1e3
+        );
+        json_cases.push(format!(
+            r#"{{"concurrency": {concurrency}, "requests": {total_reqs}, "throughput_rps": {rps:.2}, "p50_ms": {:.4}, "p99_ms": {:.4}, "mean_batch_rows": {mean_batch:.3}}}"#,
+            p50 * 1e3,
+            p99 * 1e3
+        ));
+        by_concurrency.push((concurrency, rps, mean_batch));
+    }
+    server.shutdown();
+
+    // --- the micro-batching acceptance invariant -------------------------
+    let (c_lo, rps_lo, _) = by_concurrency[0];
+    let (c_hi, rps_hi, batch_hi) = *by_concurrency.last().unwrap();
+    println!(
+        "\nmicro-batching: c={c_hi} mean batch {batch_hi:.2} rows, throughput {:.2}× c={c_lo}",
+        rps_hi / rps_lo
+    );
+    assert!(
+        batch_hi > 1.0,
+        "no coalescing at concurrency {c_hi} (mean batch {batch_hi:.2})"
+    );
+    assert!(
+        rps_hi > rps_lo,
+        "throughput did not scale: {rps_hi:.0} req/s at c={c_hi} vs {rps_lo:.0} at c={c_lo}"
+    );
+
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, r#"  "bench": "serve_load","#);
+    let _ = writeln!(json, r#"  "arch": {ARCH:?},"#);
+    let _ = writeln!(json, r#"  "pool_threads": {},"#, WorkerPool::global().threads());
+    let _ = writeln!(json, r#"  "batch_window_us": {},"#, cfg.batch_window_us);
+    let _ = writeln!(json, r#"  "requests_per_client": {requests_per_client},"#);
+    let _ = writeln!(json, "  \"cases\": [\n    {}\n  ]", json_cases.join(",\n    "));
+    json.push('}');
+    let out = util::repo_root().join("BENCH_serve.json");
+    std::fs::write(&out, &json).expect("write BENCH_serve.json");
+    println!("\nwrote {}", out.display());
+    Ok(())
+}
+
+/// One keep-alive client: send `n` predicts of `row`, verify each
+/// response bit-identical to `expected`, return per-request latencies.
+fn client_loop(addr: SocketAddr, row: &[f32], expected: &Tensor, n: usize) -> Vec<f64> {
+    let mut body = String::from("{\"inputs\":[[");
+    for (i, &v) in row.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{}", v as f64);
+    }
+    body.push_str("]]}");
+    let wire = format!(
+        "POST /predict HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let mut latencies = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        writer.write_all(wire.as_bytes()).expect("write");
+        let (status, resp) = read_response(&mut reader).expect("response");
+        latencies.push(t0.elapsed().as_secs_f64());
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+        verify(&resp, expected);
+    }
+    latencies
+}
+
+/// Check the JSON outputs are bit-identical to the direct predict.
+fn verify(resp: &[u8], expected: &Tensor) {
+    let text = std::str::from_utf8(resp).expect("utf8");
+    let doc = dmdtrain::util::jsonl::parse(text).expect("json");
+    let rows = doc
+        .get("outputs")
+        .and_then(dmdtrain::util::jsonl::Json::as_arr)
+        .expect("outputs");
+    assert_eq!(rows.len(), 1);
+    let row = rows[0].as_arr().expect("row");
+    assert_eq!(row.len(), expected.cols());
+    for (i, v) in row.iter().enumerate() {
+        let got = v.as_f64().expect("number") as f32;
+        let want = expected.data()[i];
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "output {i}: served {got} vs direct {want}"
+        );
+    }
+}

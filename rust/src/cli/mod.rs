@@ -2,8 +2,19 @@
 //!
 //! Grammar: `dmdtrain <subcommand> [positional…] [--key value | --flag]…`.
 //! Flags may also be written `--key=value`.
+//!
+//! Value-taking flags consume the next token unless it starts with
+//! `--`, so negative numbers work (`--lr -0.5`). Flags in
+//! [`BOOL_FLAGS`] are *declared boolean*: they never consume the next
+//! token, so `--quiet runs/out` keeps `runs/out` as a positional
+//! instead of silently swallowing it as the flag's value (`--quiet=false`
+//! still works for explicit values).
 
 use std::collections::BTreeMap;
+
+/// Flags that never take a value. Every boolean switch the CLI grows
+/// must be declared here, or a following positional becomes its value.
+pub const BOOL_FLAGS: &[&str] = &["quiet", "help", "version"];
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -15,8 +26,17 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// Parse from an iterator of arguments (excluding argv[0]), with
+    /// [`BOOL_FLAGS`] as the declared boolean set.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        Args::parse_with_bools(argv, BOOL_FLAGS)
+    }
+
+    /// Parse with an explicit declared-boolean-flags set.
+    pub fn parse_with_bools<I: IntoIterator<Item = String>>(
+        argv: I,
+        bool_flags: &[&str],
+    ) -> anyhow::Result<Args> {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
         if let Some(first) = iter.peek() {
@@ -30,16 +50,17 @@ impl Args {
                 if let Some((k, v)) = body.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                     out.present.push(k.to_string());
-                } else if iter
-                    .peek()
-                    .map(|next| !next.starts_with("--"))
-                    .unwrap_or(false)
+                } else if !bool_flags.contains(&body)
+                    && iter
+                        .peek()
+                        .map(|next| !next.starts_with("--"))
+                        .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
                     out.flags.insert(body.to_string(), v);
                     out.present.push(body.to_string());
                 } else {
-                    // boolean flag
+                    // declared boolean, or no value token follows
                     out.flags.insert(body.to_string(), "true".to_string());
                     out.present.push(body.to_string());
                 }
@@ -172,5 +193,49 @@ mod tests {
     fn trailing_boolean_flag() {
         let a = parse(&["train", "--quiet"]);
         assert!(a.bool_or("quiet", false).unwrap());
+    }
+
+    #[test]
+    fn declared_bool_flag_does_not_swallow_positional() {
+        let a = parse(&["serve", "--quiet", "runs/models"]);
+        assert!(a.bool_or("quiet", false).unwrap());
+        assert_eq!(a.positional, vec!["runs/models".to_string()]);
+
+        // explicit value still possible through `=`
+        let a = parse(&["serve", "--quiet=false", "runs/models"]);
+        assert!(!a.bool_or("quiet", true).unwrap());
+        assert_eq!(a.positional, vec!["runs/models".to_string()]);
+    }
+
+    #[test]
+    fn key_space_value_and_key_equals_value_agree() {
+        let a = parse(&["train", "--epochs", "250"]);
+        let b = parse(&["train", "--epochs=250"]);
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 250);
+        assert_eq!(b.usize_or("epochs", 0).unwrap(), 250);
+    }
+
+    #[test]
+    fn negative_number_values_are_consumed() {
+        let a = parse(&["train", "--lr", "-0.5", "--seed", "-1"]);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+        assert_eq!(a.str_opt("seed"), Some("-1"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn trailing_bool_flags_after_values() {
+        let a = parse(&["train", "--epochs", "10", "--quiet", "--help"]);
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 10);
+        assert!(a.bool_or("quiet", false).unwrap());
+        assert!(a.bool_or("help", false).unwrap());
+    }
+
+    #[test]
+    fn custom_bool_set_via_parse_with_bools() {
+        let argv = ["run", "--fast", "input.csv"].iter().map(|s| s.to_string());
+        let a = Args::parse_with_bools(argv, &["fast"]).unwrap();
+        assert!(a.bool_or("fast", false).unwrap());
+        assert_eq!(a.positional, vec!["input.csv".to_string()]);
     }
 }

@@ -8,4 +8,6 @@ mod toml;
 mod types;
 
 pub use toml::{Config, Value};
-pub use types::{AdamParams, DatagenConfig, DmdParams, Projection, SweepConfig, TrainConfig};
+pub use types::{
+    AdamParams, DatagenConfig, DmdParams, Projection, ServeConfig, SweepConfig, TrainConfig,
+};

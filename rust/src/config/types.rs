@@ -241,6 +241,56 @@ impl DatagenConfig {
     }
 }
 
+/// Inference-server configuration (`[serve]` section + CLI overrides).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub host: String,
+    /// TCP port; 0 binds an ephemeral port.
+    pub port: u16,
+    /// Directory of `<name>.dmdp` checkpoints (+ optional sidecars).
+    pub model_dir: String,
+    /// Micro-batch coalescing window in microseconds (0 = no batching).
+    pub batch_window_us: u64,
+    /// Row cap per dispatched predict GEMM.
+    pub max_batch_rows: usize,
+    /// Max concurrent connection-handler threads.
+    pub threads: usize,
+    /// Background registry-rescan period in seconds (0 = disabled;
+    /// `POST /reload` always works).
+    pub reload_secs: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 7878,
+            model_dir: "runs/models".to_string(),
+            batch_window_us: 1_000,
+            max_batch_rows: 256,
+            threads: 64,
+            reload_secs: 2,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> anyhow::Result<Self> {
+        let d = ServeConfig::default();
+        let port = c.usize_or("serve.port", d.port as usize);
+        anyhow::ensure!(port <= u16::MAX as usize, "serve.port {port} out of range");
+        Ok(ServeConfig {
+            host: c.str_or("serve.host", &d.host),
+            port: port as u16,
+            model_dir: c.str_or("serve.model_dir", &d.model_dir),
+            batch_window_us: c.u64_or("serve.batch_window_us", d.batch_window_us),
+            max_batch_rows: c.usize_or("serve.max_batch_rows", d.max_batch_rows).max(1),
+            threads: c.usize_or("serve.threads", d.threads).max(1),
+            reload_secs: c.u64_or("serve.reload_secs", d.reload_secs),
+        })
+    }
+}
+
 /// Sensitivity-sweep configuration (Fig 3): grids over m and s.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -362,5 +412,30 @@ epochs = 50
     #[test]
     fn projection_parse_rejects_unknown() {
         assert!(Projection::parse("fourier").is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let sc = ServeConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(sc.port, 7878);
+        assert_eq!(sc.batch_window_us, 1_000);
+        assert_eq!(sc.max_batch_rows, 256);
+        assert_eq!(sc.reload_secs, 2);
+
+        let c = Config::parse(
+            "[serve]\nport = 9000\nmodel_dir = \"runs/ci/models\"\n\
+             batch_window_us = 500\nmax_batch_rows = 0\nthreads = 8\nreload_secs = 0",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(sc.port, 9000);
+        assert_eq!(sc.model_dir, "runs/ci/models");
+        assert_eq!(sc.batch_window_us, 500);
+        assert_eq!(sc.max_batch_rows, 1, "row cap clamps to >= 1");
+        assert_eq!(sc.threads, 8);
+        assert_eq!(sc.reload_secs, 0);
+
+        let bad = Config::parse("[serve]\nport = 70000").unwrap();
+        assert!(ServeConfig::from_config(&bad).is_err());
     }
 }

@@ -43,6 +43,21 @@
 //! streaming-Gram property are the standing invariants; seeds reproduce
 //! exactly regardless of `DMDTRAIN_THREADS`.
 //!
+//! ## Serving
+//!
+//! `dmdtrain serve` ([`serve`]) answers `POST /predict` over a
+//! zero-dependency `std::net` HTTP/1.1 server: a checkpoint registry
+//! ([`serve::ModelRegistry`]) hot-loads named `DMDP` files, and a
+//! micro-batcher ([`serve::Batcher`]) coalesces concurrent requests
+//! into single GEMMs on the shared worker pool. Threading: HTTP is
+//! thread-per-connection (capped by `serve.threads`); *all* predict
+//! GEMMs run on the one batcher thread, so inference never contends
+//! with itself. Determinism: the predict kernel's per-row accumulation
+//! order is independent of the other rows in a batch and JSON floats
+//! use shortest-roundtrip formatting, so served predictions are
+//! bit-identical to direct `Executable::predict` calls no matter how
+//! requests get coalesced (`tests/serve_integration.rs`).
+//!
 //! Crate map (see DESIGN.md for the paper-to-module inventory):
 //!
 //! | module | role |
@@ -54,6 +69,7 @@
 //! | [`model`] | MLP architecture, Xavier init, forward oracle |
 //! | [`data`] | Latin-hypercube sampling, dataset format, scaling |
 //! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`) |
+//! | [`serve`] | HTTP inference: checkpoint registry, micro-batched predict |
 //! | [`trainer`] | Algorithm 1 driver: backprop + DMD hooks + metrics |
 //! | [`coordinator`] | (m, s) sensitivity sweeps across worker threads |
 //! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
@@ -72,6 +88,7 @@ pub mod optim;
 pub mod pde;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod trainer;
 pub mod util;

@@ -5,10 +5,11 @@
 //!   train    — one Algorithm-1 training run (DMD on/off via config)
 //!   sweep    — Fig-3 (m, s) sensitivity sweep
 //!   predict  — evaluate a checkpoint on a dataset
+//!   serve    — HTTP inference server over a checkpoint model registry
 //!   info     — show artifacts / dataset / architecture details
 
 use dmdtrain::cli::Args;
-use dmdtrain::config::{Config, DatagenConfig, SweepConfig, TrainConfig, Value};
+use dmdtrain::config::{Config, DatagenConfig, ServeConfig, SweepConfig, TrainConfig, Value};
 use dmdtrain::coordinator::run_sweep;
 use dmdtrain::data::Dataset;
 use dmdtrain::pde::generate_dataset;
@@ -27,6 +28,9 @@ USAGE: dmdtrain <subcommand> [--flags]
                             --out-dir DIR --save-checkpoint PATH]
   sweep    --config <toml> [--workers N --epochs N --out PATH]
   predict  --checkpoint PATH --dataset PATH [--artifact NAME]
+  serve    [--config <toml> --models DIR --host H --port N
+            --batch-window-us N --max-batch N --threads N
+            --reload-secs N --port-file PATH]
   info     [--artifacts DIR]
 
 Config files: configs/*.toml (see configs/paper.toml).";
@@ -44,6 +48,7 @@ fn main() {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             println!("{USAGE}");
@@ -144,6 +149,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     std::fs::write(format!("{out_dir}/profile.txt"), report.profile.table())?;
     if let Some(path) = args.str_opt("save-checkpoint") {
         save_params(&report.final_params, path)?;
+        // Sidecar with arch + dataset scaling: `dmdtrain serve` picks it
+        // up so the model answers in physical units.
+        let arch = dmdtrain::serve::registry::infer_arch(&report.final_params)?;
+        dmdtrain::serve::registry::write_sidecar(path, &arch, Some(&ds.scaling))?;
     }
     println!(
         "final train MSE {}  test MSE {}  ({} epochs in {:.1}s, {} DMD events, mean rel {} train / {} test)",
@@ -200,6 +209,58 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
         util::fmt_f64(train_mse),
         util::fmt_f64(test_mse)
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mut sc = ServeConfig::from_config(&cfg)?;
+    if let Some(v) = args.str_opt("host") {
+        sc.host = v.to_string();
+    }
+    if let Some(v) = args.str_opt("models") {
+        sc.model_dir = v.to_string();
+    }
+    let port = args.usize_or("port", sc.port as usize)?;
+    anyhow::ensure!(port <= u16::MAX as usize, "--port {port} out of range");
+    sc.port = port as u16;
+    sc.batch_window_us = args.usize_or("batch-window-us", sc.batch_window_us as usize)? as u64;
+    sc.max_batch_rows = args.usize_or("max-batch", sc.max_batch_rows)?.max(1);
+    sc.threads = args.usize_or("threads", sc.threads)?.max(1);
+    sc.reload_secs = args.usize_or("reload-secs", sc.reload_secs as usize)? as u64;
+
+    let server = dmdtrain::serve::Server::start(&sc)?;
+    eprintln!(
+        "serve: {} model(s) from {} on http://{} (window {} µs, max batch {}, {} threads, {})",
+        server.registry().len(),
+        sc.model_dir,
+        server.addr(),
+        sc.batch_window_us,
+        sc.max_batch_rows,
+        sc.threads,
+        if sc.reload_secs > 0 {
+            format!("reload every {}s", sc.reload_secs)
+        } else {
+            "reload on POST /reload only".to_string()
+        }
+    );
+    for m in server.registry().list() {
+        eprintln!(
+            "  model '{}' arch {:?} ({} params{})",
+            m.name,
+            m.arch,
+            m.param_count(),
+            if m.scaling.is_some() { ", scaled" } else { "" }
+        );
+    }
+    // Written after bind so scripts can poll it for the ephemeral port.
+    if let Some(path) = args.str_opt("port-file") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, format!("{}", server.addr()))?;
+    }
+    server.wait();
     Ok(())
 }
 

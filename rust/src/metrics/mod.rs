@@ -1,5 +1,8 @@
 //! Training metrics: loss history, DMD-event statistics (the paper's
-//! "mean relative improvement" of Fig 3), and CSV/JSONL export.
+//! "mean relative improvement" of Fig 3), and CSV/JSONL export — plus
+//! the serving-side counters and latency histograms ([`serve`]).
+
+pub mod serve;
 
 use crate::util::csv::CsvWriter;
 use std::path::Path;

@@ -1,0 +1,362 @@
+//! Micro-batching predict dispatcher: concurrent `POST /predict`
+//! requests landing within one batch window are coalesced into a single
+//! GEMM over the shared [`crate::util::pool::WorkerPool`], so
+//! per-request cost amortizes exactly like training batches do.
+//!
+//! One dispatcher thread owns the queue: it takes the oldest pending
+//! job, keeps the window open for up to `window` (or until `max_rows`
+//! rows accumulate), stacks every same-model job's rows into one input
+//! tensor, runs one `predict`, and splits the output rows back to the
+//! per-request reply channels. Jobs for a *different* model arriving
+//! inside the window are carried over and dispatched next round.
+//!
+//! Determinism: the native predict GEMM accumulates every output element
+//! in a fixed per-row order independent of the other rows in the batch
+//! (see `linalg::gemm`), and scaling is elementwise — so a micro-batched
+//! response is bit-identical to the same request served alone, whatever
+//! the coalescing, thread count, or batch composition.
+
+use super::registry::ServedModel;
+use crate::metrics::serve::ServeMetrics;
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Queue depth before request threads block on submit (backpressure).
+const QUEUE_DEPTH: usize = 1024;
+
+/// One predict request in flight.
+pub struct PredictJob {
+    pub model: Arc<ServedModel>,
+    /// (rows, n_in) input tensor — shape pre-validated by the router.
+    pub inputs: Tensor,
+    /// Receives the (rows, n_out) result.
+    pub reply: SyncSender<anyhow::Result<Tensor>>,
+}
+
+enum Msg {
+    Job(PredictJob),
+    Shutdown,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// How long the dispatcher keeps a batch open for more rows.
+    /// `Duration::ZERO` disables coalescing (every request runs alone).
+    pub window: Duration,
+    /// Row cap per dispatched GEMM.
+    pub max_rows: usize,
+}
+
+/// Handle used by request threads to submit jobs. Each connection
+/// thread owns its clone, so the `SyncSender` is never shared by
+/// reference across threads.
+pub struct BatcherHandle {
+    tx: SyncSender<Msg>,
+}
+
+impl Clone for BatcherHandle {
+    fn clone(&self) -> Self {
+        BatcherHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl BatcherHandle {
+    /// Enqueue a job; blocks briefly when the queue is full.
+    pub fn submit(&self, job: PredictJob) -> anyhow::Result<()> {
+        self.tx
+            .send(Msg::Job(job))
+            .map_err(|_| anyhow::anyhow!("predict dispatcher is down"))
+    }
+}
+
+/// The dispatcher thread plus its submit side. Dropping the `Batcher`
+/// sends a shutdown sentinel and joins the thread (pending jobs are
+/// still answered).
+pub struct Batcher {
+    tx: SyncSender<Msg>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(cfg: BatcherConfig, metrics: Arc<ServeMetrics>) -> Batcher {
+        let (tx, rx) = sync_channel::<Msg>(QUEUE_DEPTH);
+        let thread = std::thread::Builder::new()
+            .name("dmdtrain-batcher".to_string())
+            .spawn(move || run(rx, cfg, &metrics))
+            .expect("spawn batcher thread");
+        Batcher {
+            tx,
+            thread: Some(thread),
+        }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        BatcherHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn run(rx: Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
+    let max_rows = cfg.max_rows.max(1);
+    let mut carry: VecDeque<PredictJob> = VecDeque::new();
+    'outer: loop {
+        // Head job: oldest carried-over job, else block for the next one.
+        let head = match carry.pop_front() {
+            Some(j) => j,
+            None => match rx.recv() {
+                Ok(Msg::Job(j)) => j,
+                Ok(Msg::Shutdown) | Err(_) => break 'outer,
+            },
+        };
+        let mut rows = head.inputs.rows();
+        let mut batch = vec![head];
+        let deadline = Instant::now() + cfg.window;
+        let mut stop = false;
+        while rows < max_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Job(j)) => {
+                    let same_model = Arc::ptr_eq(&j.model, &batch[0].model);
+                    if same_model && rows + j.inputs.rows() <= max_rows {
+                        rows += j.inputs.rows();
+                        batch.push(j);
+                    } else {
+                        // different model, or this job would overflow the
+                        // batch — dispatch it in a later round
+                        carry.push_back(j);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                    stop = true;
+                    break;
+                }
+            }
+        }
+        dispatch(batch, rows, metrics);
+        if stop {
+            // answer everything still queued, one dispatch each
+            while let Some(j) = carry.pop_front() {
+                let rows = j.inputs.rows();
+                dispatch(vec![j], rows, metrics);
+            }
+            break 'outer;
+        }
+    }
+}
+
+/// Run one coalesced GEMM and fan the output rows back out.
+fn dispatch(batch: Vec<PredictJob>, rows: usize, metrics: &ServeMetrics) {
+    metrics.predict_batches.inc();
+    metrics.batch_size.observe(rows as f64);
+
+    if batch.len() == 1 {
+        let job = batch.into_iter().next().unwrap();
+        let result = job.model.predict(&job.inputs);
+        let _ = job.reply.send(result);
+        return;
+    }
+
+    let model = Arc::clone(&batch[0].model);
+    let n_in = model.n_in();
+    let mut x = Tensor::zeros(rows, n_in);
+    let mut off = 0;
+    for job in &batch {
+        let r = job.inputs.rows();
+        x.data_mut()[off * n_in..(off + r) * n_in].copy_from_slice(job.inputs.data());
+        off += r;
+    }
+    match model.predict(&x) {
+        Ok(y) => {
+            let n_out = y.cols();
+            let mut off = 0;
+            for job in batch {
+                let r = job.inputs.rows();
+                let mut out = Tensor::zeros(r, n_out);
+                out.data_mut()
+                    .copy_from_slice(&y.data()[off * n_out..(off + r) * n_out]);
+                off += r;
+                let _ = job.reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in batch {
+                let _ = job
+                    .reply
+                    .send(Err(anyhow::anyhow!("batched predict failed: {msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+    use crate::rng::Rng;
+
+    fn model(dims: Vec<usize>, seed: u64) -> Arc<ServedModel> {
+        let arch = Arch::new(dims).unwrap();
+        let params = arch.init_params(&mut Rng::new(seed));
+        Arc::new(ServedModel::from_params("t", params, None).unwrap())
+    }
+
+    fn submit(
+        handle: &BatcherHandle,
+        model: &Arc<ServedModel>,
+        x: Tensor,
+    ) -> Receiver<anyhow::Result<Tensor>> {
+        let (tx, rx) = sync_channel(1);
+        handle
+            .submit(PredictJob {
+                model: Arc::clone(model),
+                inputs: x,
+                reply: tx,
+            })
+            .unwrap();
+        rx
+    }
+
+    #[test]
+    fn zero_window_serves_single_requests() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::ZERO,
+                max_rows: 64,
+            },
+            Arc::clone(&metrics),
+        );
+        let m = model(vec![3, 5, 2], 1);
+        let x = Tensor::from_fn(1, 3, |_, c| c as f32 * 0.25);
+        let expected = m.predict(&x).unwrap();
+        let rx = submit(&batcher.handle(), &m, x);
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got, expected);
+        drop(batcher);
+        assert_eq!(metrics.predict_batches.get(), 1);
+    }
+
+    #[test]
+    fn window_coalesces_and_splits_bit_identically() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::from_millis(200),
+                max_rows: 64,
+            },
+            Arc::clone(&metrics),
+        );
+        let m = model(vec![4, 6, 3], 2);
+        let handle = batcher.handle();
+        // Three jobs submitted well inside one 200 ms window.
+        let xs: Vec<Tensor> = (0..3)
+            .map(|k| Tensor::from_fn(1 + k, 4, |r, c| (k * 7 + r * 4 + c) as f32 * 0.1 - 0.4))
+            .collect();
+        let expected: Vec<Tensor> = xs.iter().map(|x| m.predict(x).unwrap()).collect();
+        let rxs: Vec<_> = xs.into_iter().map(|x| submit(&handle, &m, x)).collect();
+        for (rx, want) in rxs.into_iter().zip(&expected) {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(&got, want, "batched rows bit-identical to solo predict");
+        }
+        drop(batcher);
+        // 1+2+3 rows; coalescing means fewer dispatches than jobs.
+        assert_eq!(metrics.batch_size.count(), metrics.predict_batches.get());
+        assert!(
+            metrics.predict_batches.get() <= 2,
+            "expected coalescing, got {} dispatches",
+            metrics.predict_batches.get()
+        );
+    }
+
+    #[test]
+    fn max_rows_caps_a_batch() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::from_millis(100),
+                max_rows: 2,
+            },
+            Arc::clone(&metrics),
+        );
+        let m = model(vec![2, 3, 1], 3);
+        let handle = batcher.handle();
+        let rxs: Vec<_> = (0..4)
+            .map(|k| {
+                submit(
+                    &handle,
+                    &m,
+                    Tensor::from_fn(1, 2, |_, c| (k * 2 + c) as f32),
+                )
+            })
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        drop(batcher);
+        assert!(
+            metrics.predict_batches.get() >= 2,
+            "4 rows with max_rows=2 needs >= 2 dispatches"
+        );
+    }
+
+    #[test]
+    fn different_models_never_share_a_gemm() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::from_millis(100),
+                max_rows: 64,
+            },
+            Arc::clone(&metrics),
+        );
+        let m1 = model(vec![3, 4, 2], 4);
+        let m2 = model(vec![3, 4, 2], 5); // same shape, different weights
+        let x = Tensor::from_fn(1, 3, |_, c| c as f32 * 0.3);
+        let e1 = m1.predict(&x).unwrap();
+        let e2 = m2.predict(&x).unwrap();
+        let handle = batcher.handle();
+        let r1 = submit(&handle, &m1, x.clone());
+        let r2 = submit(&handle, &m2, x.clone());
+        assert_eq!(r1.recv().unwrap().unwrap(), e1);
+        assert_eq!(r2.recv().unwrap().unwrap(), e2);
+        drop(batcher);
+        assert_eq!(metrics.predict_batches.get(), 2);
+    }
+
+    #[test]
+    fn shutdown_answers_queued_jobs() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::from_millis(50),
+                max_rows: 8,
+            },
+            Arc::clone(&metrics),
+        );
+        let m = model(vec![2, 2], 6);
+        let rx = submit(&batcher.handle(), &m, Tensor::zeros(1, 2));
+        drop(batcher); // join — the queued job must still be answered
+        assert!(rx.recv().unwrap().is_ok());
+    }
+}

@@ -1,0 +1,292 @@
+//! Minimal HTTP/1.1 message handling over blocking streams — just the
+//! subset the inference endpoints need (request line, `Content-Length`,
+//! `Connection`, fixed-length bodies, keep-alive). Zero external
+//! dependencies, matching the crate's offline constraint.
+//!
+//! The parser is generic over [`BufRead`] so unit tests drive it from
+//! in-memory cursors; the server feeds it `BufReader<TcpStream>`.
+
+use std::io::{BufRead, Read, Write};
+
+/// Refuse request bodies larger than this (8 MiB covers thousands of
+/// paper-arch input rows with slack).
+pub const MAX_BODY: usize = 8 * 1024 * 1024;
+const MAX_HEADER_LINE: usize = 8192;
+const MAX_HEADERS: usize = 64;
+
+/// `read_line` through a `Take` so a peer streaming bytes with no
+/// newline can never grow the buffer past the cap — the length check
+/// happens *during* the read, not after it. `Ok(None)` = clean EOF
+/// before any byte.
+fn read_line_limited<R: BufRead>(reader: &mut R, cap: usize) -> anyhow::Result<Option<String>> {
+    let mut line = String::new();
+    let n = reader.by_ref().take(cap as u64 + 1).read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(line.len() <= cap, "line exceeds {cap} bytes");
+    Ok(Some(line))
+}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Upper-cased method ("GET", "POST", …).
+    pub method: String,
+    /// Path with any query string stripped.
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Whether the client asked to keep the connection open
+    /// (HTTP/1.1 default, overridable via `Connection:`).
+    pub keep_alive: bool,
+}
+
+/// Read one request off the stream. `Ok(None)` means the peer closed
+/// the connection cleanly before sending another request (keep-alive
+/// end-of-stream); errors are malformed requests or transport failures.
+pub fn read_request<R: BufRead>(reader: &mut R) -> anyhow::Result<Option<Request>> {
+    let line = match read_line_limited(reader, MAX_HEADER_LINE)? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let raw_path = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    anyhow::ensure!(
+        !method.is_empty() && raw_path.starts_with('/'),
+        "malformed request line {line:?}"
+    );
+    let path = raw_path.split('?').next().unwrap_or("/").to_string();
+
+    let mut content_length = 0usize;
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut terminated = false;
+    for _ in 0..MAX_HEADERS {
+        let h = read_line_limited(reader, MAX_HEADER_LINE)?
+            .ok_or_else(|| anyhow::anyhow!("connection closed inside headers"))?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            terminated = true;
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let v = v.trim();
+            match k.trim().to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    content_length = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad Content-Length {v:?}"))?;
+                }
+                "connection" => {
+                    let v = v.to_ascii_lowercase();
+                    if v.contains("close") {
+                        keep_alive = false;
+                    } else if v.contains("keep-alive") {
+                        keep_alive = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    anyhow::ensure!(terminated, "too many headers");
+    anyhow::ensure!(
+        content_length <= MAX_BODY,
+        "body too large ({content_length} bytes, max {MAX_BODY})"
+    );
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request {
+        method,
+        path,
+        body,
+        keep_alive,
+    }))
+}
+
+/// One response to serialize.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+        }
+    }
+
+    /// JSON error envelope `{"error": "..."}` (message JSON-escaped).
+    pub fn error(status: u16, msg: &str) -> Response {
+        let body = format!(
+            "{{\"error\":{}}}",
+            crate::util::jsonl::Json::Str(msg.to_string()).encode()
+        );
+        Response::json(status, body)
+    }
+
+    /// Serialize status line + headers + body as one buffered write.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        let mut buf = Vec::with_capacity(head.len() + self.body.len());
+        buf.extend_from_slice(head.as_bytes());
+        buf.extend_from_slice(&self.body);
+        w.write_all(&buf)?;
+        w.flush()
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Read one response off the stream — the client half, used by the
+/// integration tests and `benches/serve_load.rs`. Returns
+/// `(status, body)`.
+pub fn read_response<R: BufRead>(reader: &mut R) -> anyhow::Result<(u16, Vec<u8>)> {
+    let line = read_line_limited(reader, MAX_HEADER_LINE)?
+        .ok_or_else(|| anyhow::anyhow!("connection closed before response"))?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line {line:?}"))?;
+    let mut content_length = 0usize;
+    let mut terminated = false;
+    for _ in 0..MAX_HEADERS {
+        let h = read_line_limited(reader, MAX_HEADER_LINE)?
+            .ok_or_else(|| anyhow::anyhow!("connection closed inside response headers"))?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            terminated = true;
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad response Content-Length"))?;
+            }
+        }
+    }
+    anyhow::ensure!(terminated, "too many response headers");
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /healthz?verbose=1 HTTP/1.1\r\nHost: x\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parses_post_with_body_and_close() {
+        let raw =
+            b"POST /predict HTTP/1.1\r\nContent-Length: 4\r\nConnection: close\r\n\r\nabcd";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn eof_before_request_is_none() {
+        assert!(read_request(&mut Cursor::new(&b""[..])).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(read_request(&mut Cursor::new(&b"NONSENSE\r\n\r\n"[..])).is_err());
+        let big = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(read_request(&mut Cursor::new(big.as_bytes())).is_err());
+        assert!(read_request(&mut Cursor::new(
+            &b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..]
+        ))
+        .is_err());
+        // truncated body
+        assert!(read_request(&mut Cursor::new(
+            &b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"[..]
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn newline_free_flood_is_capped_during_the_read() {
+        // a peer streaming bytes with no '\n' must hit the line cap,
+        // not grow the buffer until OOM
+        let flood = vec![b'x'; MAX_HEADER_LINE * 4];
+        assert!(read_request(&mut Cursor::new(&flood[..])).is_err());
+        // same guard inside the header block
+        let mut wire = b"GET / HTTP/1.1\r\n".to_vec();
+        wire.extend(std::iter::repeat(b'h').take(MAX_HEADER_LINE * 4));
+        assert!(read_request(&mut Cursor::new(&wire[..])).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::json(200, "{\"ok\":true}".to_string());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, body) = read_response(&mut Cursor::new(&wire[..])).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn error_body_is_escaped_json() {
+        let resp = Response::error(400, "bad \"quote\"");
+        let body = String::from_utf8(resp.body).unwrap();
+        assert_eq!(body, "{\"error\":\"bad \\\"quote\\\"\"}");
+    }
+}

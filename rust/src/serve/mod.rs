@@ -1,0 +1,350 @@
+//! Zero-dependency inference serving for trained checkpoints.
+//!
+//! `dmdtrain serve` turns the repo's training half into a full
+//! train-then-serve system: a pure-`std::net` HTTP/1.1 server (matching
+//! the crate's offline, no-registry constraint) answers `POST /predict`
+//! against named `DMDP` checkpoints. The moving parts:
+//!
+//! * [`registry::ModelRegistry`] — loads `<name>.dmdp` checkpoints (+
+//!   optional arch/scaling sidecars) into immutable `Arc`-shared
+//!   models, with hot reload (background poll and `POST /reload`);
+//! * [`batcher::Batcher`] — coalesces concurrent predict requests
+//!   inside a configurable window into one GEMM on the shared
+//!   [`crate::util::pool::WorkerPool`];
+//! * [`router`] — `/predict`, `/models`, `/healthz`, `/metrics`
+//!   (Prometheus counters + latency histograms from
+//!   [`crate::metrics::serve`]);
+//! * [`http`] — the minimal HTTP/1.1 request/response codec.
+//!
+//! ## Threading & determinism
+//!
+//! Connection handling is thread-per-connection, capped at
+//! `serve.threads` concurrent handlers; HTTP threads only parse and
+//! encode. All GEMM work funnels through the *single* batcher thread
+//! onto the worker pool, so predict dispatches never contend with each
+//! other. The native predict kernel accumulates each output row in a
+//! fixed order independent of the other rows in the batch (see
+//! [`crate::linalg::gemm`]), and JSON floats use shortest-roundtrip
+//! formatting — a served prediction is **bit-identical** to calling
+//! `Executable::predict` directly on the same checkpoint, regardless of
+//! batch coalescing, thread count, or concurrent traffic.
+
+pub mod batcher;
+pub mod http;
+pub mod registry;
+pub mod router;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle};
+pub use registry::{ModelRegistry, ReloadReport, ServedModel};
+pub use router::AppState;
+
+use crate::config::ServeConfig;
+use crate::metrics::serve::ServeMetrics;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Close keep-alive connections idle longer than this; also bounds how
+/// long shutdown waits for an idle client.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Counting gate: caps concurrent connection handlers and lets shutdown
+/// wait for all of them to finish.
+struct Gate {
+    cap: usize,
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(cap: usize) -> Gate {
+        Gate {
+            cap: cap.max(1),
+            count: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn enter(&self) {
+        let mut n = self.count.lock().unwrap();
+        while *n >= self.cap {
+            n = self.cv.wait(n).unwrap();
+        }
+        *n += 1;
+    }
+
+    fn leave(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n -= 1;
+        self.cv.notify_all();
+    }
+
+    fn wait_idle(&self) {
+        let mut n = self.count.lock().unwrap();
+        while *n > 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+    }
+}
+
+/// Leave the gate even if the handler panics.
+struct GateGuard(Arc<Gate>);
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        self.0.leave();
+    }
+}
+
+/// A running inference server. Dropping (or calling [`Server::shutdown`])
+/// stops accepting, drains in-flight connections, then joins the batcher
+/// and reload threads.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<AppState>,
+    shutdown: Arc<AtomicBool>,
+    gate: Arc<Gate>,
+    accept_thread: Option<JoinHandle<()>>,
+    reload_thread: Option<JoinHandle<()>>,
+    /// Dropped last (after connections drain) so every in-flight predict
+    /// is answered.
+    batcher: Option<Batcher>,
+}
+
+impl Server {
+    /// Bind, load the model registry, and start serving. `port = 0`
+    /// binds an ephemeral port (read it back from [`Server::addr`]).
+    pub fn start(cfg: &ServeConfig) -> anyhow::Result<Server> {
+        let (registry, report) = ModelRegistry::open(&cfg.model_dir);
+        for (name, err) in &report.errors {
+            eprintln!("serve: model '{name}' failed to load: {err}");
+        }
+        let registry = Arc::new(registry);
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::from_micros(cfg.batch_window_us),
+                max_rows: cfg.max_batch_rows,
+            },
+            Arc::clone(&metrics),
+        );
+        let state = Arc::new(AppState {
+            registry: Arc::clone(&registry),
+            metrics,
+            started: std::time::Instant::now(),
+        });
+
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .map_err(|e| anyhow::anyhow!("bind {}:{}: {e}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(Gate::new(cfg.threads));
+
+        let accept_thread = {
+            let state = Arc::clone(&state);
+            let shutdown = Arc::clone(&shutdown);
+            let gate = Arc::clone(&gate);
+            let handle = batcher.handle();
+            std::thread::Builder::new()
+                .name("dmdtrain-accept".to_string())
+                .spawn(move || accept_loop(listener, state, handle, shutdown, gate))
+                .map_err(|e| anyhow::anyhow!("spawn accept thread: {e}"))?
+        };
+
+        let reload_thread = if cfg.reload_secs > 0 {
+            let registry = Arc::clone(&registry);
+            let metrics = Arc::clone(&state.metrics);
+            let shutdown = Arc::clone(&shutdown);
+            let period = Duration::from_secs(cfg.reload_secs);
+            Some(
+                std::thread::Builder::new()
+                    .name("dmdtrain-reload".to_string())
+                    .spawn(move || {
+                        let mut last = std::time::Instant::now();
+                        while !shutdown.load(Ordering::Relaxed) {
+                            std::thread::sleep(Duration::from_millis(50));
+                            if last.elapsed() < period {
+                                continue;
+                            }
+                            last = std::time::Instant::now();
+                            let report = registry.reload();
+                            metrics.registry_reloads.inc();
+                            for (name, err) in &report.errors {
+                                eprintln!("serve: reload of '{name}' failed: {err}");
+                            }
+                            if report.changed() {
+                                eprintln!(
+                                    "serve: registry reloaded ({} loaded, {} dropped)",
+                                    report.loaded.len(),
+                                    report.dropped.len()
+                                );
+                            }
+                        }
+                    })
+                    .map_err(|e| anyhow::anyhow!("spawn reload thread: {e}"))?,
+            )
+        } else {
+            None
+        };
+
+        Ok(Server {
+            addr,
+            state,
+            shutdown,
+            gate,
+            accept_thread: Some(accept_thread),
+            reload_thread,
+            batcher: Some(batcher),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.state.registry)
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.state.metrics)
+    }
+
+    /// Block on the accept loop — the CLI foreground mode. Only returns
+    /// if the listener fails; normal exit is process termination.
+    pub fn wait(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Graceful stop: no new connections, drain in-flight handlers,
+    /// answer queued predicts, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shutdown.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        // unblock accept() with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        self.gate.wait_idle();
+        self.batcher = None; // joins the dispatcher
+        if let Some(t) = self.reload_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<AppState>,
+    batcher: BatcherHandle,
+    shutdown: Arc<AtomicBool>,
+    gate: Arc<Gate>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                // transient accept failure (e.g. EMFILE) — back off
+                // instead of hot-spinning
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::Relaxed) {
+            break; // the wake-up connection from stop()
+        }
+        gate.enter();
+        let guard = GateGuard(Arc::clone(&gate));
+        let state = Arc::clone(&state);
+        let batcher = batcher.clone();
+        let shutdown = Arc::clone(&shutdown);
+        // On spawn failure the closure comes back inside the error and
+        // is dropped, which releases the gate slot via the guard.
+        let _ = std::thread::Builder::new()
+            .name("dmdtrain-conn".to_string())
+            .spawn(move || {
+                let _guard = guard;
+                handle_connection(stream, &state, &batcher, &shutdown);
+            });
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    state: &AppState,
+    batcher: &BatcherHandle,
+    shutdown: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_half);
+    let mut writer = stream;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean close
+            Err(e) => {
+                if !is_transport_error(&e) {
+                    let _ = http::Response::error(400, &format!("bad request: {e}"))
+                        .write_to(&mut writer, false);
+                }
+                break;
+            }
+        };
+        let keep_alive = req.keep_alive && !shutdown.load(Ordering::Relaxed);
+        let resp = router::handle(state, batcher, &req);
+        if resp.write_to(&mut writer, keep_alive).is_err() {
+            break;
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+}
+
+/// Idle timeout / peer reset / EOF — close quietly instead of answering
+/// 400 into a dead or dozing socket.
+fn is_transport_error(e: &anyhow::Error) -> bool {
+    e.source()
+        .and_then(|s| s.downcast_ref::<std::io::Error>())
+        .map(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+            )
+        })
+        .unwrap_or(false)
+}

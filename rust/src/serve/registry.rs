@@ -1,0 +1,580 @@
+//! Checkpoint model registry: named `DMDP` checkpoints (plus optional
+//! JSON sidecars carrying the manifest arch and input/output scaling)
+//! loaded into immutable [`Arc`]-shared models, with hot reload of the
+//! model directory.
+//!
+//! Layout: every `<name>.dmdp` file in the directory is one servable
+//! model. The architecture is inferred from the checkpoint's
+//! (weight, bias) tensor chain; an optional `<name>.json` sidecar can
+//! pin the expected arch (`{"arch": [6, 8, 6]}` — load fails loudly on
+//! mismatch, the corrupt-artifact guard) and attach the dataset scaling
+//! (`{"scaling": {"in": [[lo, hi], …], "out": [lo, hi]}}`) so the
+//! server answers in physical units.
+//!
+//! Reload semantics: a model whose file changed (mtime or size) is
+//! re-loaded into a *new* `Arc` — in-flight requests keep the version
+//! they resolved; a model that fails to load keeps serving its previous
+//! version (fail loudly in the report, never panic, never drop a good
+//! model for a bad file).
+
+use crate::data::Scaling;
+use crate::runtime::{Executable, ManifestEntry, NativeExecutable};
+use crate::tensor::Tensor;
+use crate::trainer::load_params;
+use crate::util::jsonl::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+use std::time::SystemTime;
+
+/// One immutable loaded model. Shared via `Arc`: request handlers and
+/// the micro-batcher read it concurrently without locks.
+pub struct ServedModel {
+    pub name: String,
+    pub arch: Vec<usize>,
+    pub params: Vec<Tensor>,
+    /// Native `predict` executable (dynamic batch) over the global pool.
+    pub exe: Executable,
+    /// Physical-units scaling; `None` serves the network's own space.
+    pub scaling: Option<Scaling>,
+}
+
+impl ServedModel {
+    /// Build directly from parameter tensors (registry loads, tests and
+    /// the load bench use this too).
+    pub fn from_params(
+        name: &str,
+        params: Vec<Tensor>,
+        scaling: Option<Scaling>,
+    ) -> anyhow::Result<ServedModel> {
+        let arch = infer_arch(&params)?;
+        if let Some(s) = &scaling {
+            anyhow::ensure!(
+                s.in_ranges.len() == arch[0],
+                "model '{name}': scaling has {} input ranges but arch {:?} expects {}",
+                s.in_ranges.len(),
+                arch,
+                arch[0]
+            );
+        }
+        let entry = ManifestEntry::native_model("predict", &format!("serve_{name}"), &arch, 0);
+        let exe = Executable::Native(NativeExecutable::new(entry)?);
+        Ok(ServedModel {
+            name: name.to_string(),
+            arch,
+            params,
+            exe,
+            scaling,
+        })
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.arch[0]
+    }
+
+    pub fn n_out(&self) -> usize {
+        *self.arch.last().unwrap()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(Tensor::len).sum()
+    }
+
+    /// Forward pass on any number of rows, applying the scaling (when
+    /// present) on the way in and out. Scaling is an elementwise affine
+    /// map, so predictions are row-independent — batching rows from
+    /// different requests yields bit-identical outputs per row.
+    pub fn predict(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        match &self.scaling {
+            None => self.exe.predict_all(&self.params, x),
+            Some(s) => {
+                let xs = s.scale_inputs(x);
+                let ys = self.exe.predict_all(&self.params, &xs)?;
+                Ok(s.unscale_outputs(&ys))
+            }
+        }
+    }
+}
+
+/// Infer the layer widths from a checkpoint's flat `[w1, b1, …]` tensor
+/// list, validating the (weight, bias) chain. This is the registry's
+/// corrupt-artifact gate: it must error, not panic.
+pub fn infer_arch(params: &[Tensor]) -> anyhow::Result<Vec<usize>> {
+    anyhow::ensure!(
+        !params.is_empty() && params.len() % 2 == 0,
+        "checkpoint holds {} tensors — expected alternating (weight, bias) pairs",
+        params.len()
+    );
+    let mut arch = vec![params[0].rows()];
+    for l in 0..params.len() / 2 {
+        let w = &params[2 * l];
+        let b = &params[2 * l + 1];
+        anyhow::ensure!(
+            w.rows() == *arch.last().unwrap(),
+            "layer {l}: weight rows {} do not chain from previous width {}",
+            w.rows(),
+            arch.last().unwrap()
+        );
+        anyhow::ensure!(
+            b.rows() == 1 && b.cols() == w.cols(),
+            "layer {l}: bias {:?} does not match weight columns {}",
+            b.shape(),
+            w.cols()
+        );
+        arch.push(w.cols());
+    }
+    anyhow::ensure!(
+        arch.iter().all(|&d| d > 0),
+        "zero-width layer in inferred arch {arch:?}"
+    );
+    Ok(arch)
+}
+
+/// (mtime, size) change detector for hot reload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Fingerprint {
+    mtime: SystemTime,
+    len: u64,
+}
+
+impl Fingerprint {
+    fn of(path: &Path) -> anyhow::Result<Fingerprint> {
+        let meta = std::fs::metadata(path)?;
+        Ok(Fingerprint {
+            mtime: meta.modified()?,
+            len: meta.len(),
+        })
+    }
+}
+
+struct LoadedEntry {
+    model: Arc<ServedModel>,
+    fingerprint: Fingerprint,
+}
+
+/// What one reload pass did.
+#[derive(Debug, Default)]
+pub struct ReloadReport {
+    /// Models loaded or re-loaded this pass.
+    pub loaded: Vec<String>,
+    /// Models dropped because their file disappeared.
+    pub dropped: Vec<String>,
+    /// (model name, error) for files that failed to load — the previous
+    /// version (if any) keeps serving.
+    pub errors: Vec<(String, String)>,
+}
+
+impl ReloadReport {
+    pub fn changed(&self) -> bool {
+        !(self.loaded.is_empty() && self.dropped.is_empty())
+    }
+}
+
+/// The registry: a model directory plus the currently loaded models.
+pub struct ModelRegistry {
+    dir: PathBuf,
+    inner: RwLock<BTreeMap<String, LoadedEntry>>,
+}
+
+impl ModelRegistry {
+    /// Open a registry over `dir` and run one load pass. A missing or
+    /// empty directory is allowed (models can arrive later and be hot
+    /// reloaded in); per-model load failures land in the report, not in
+    /// the error return.
+    pub fn open(dir: impl AsRef<Path>) -> (ModelRegistry, ReloadReport) {
+        let reg = ModelRegistry {
+            dir: dir.as_ref().to_path_buf(),
+            inner: RwLock::new(BTreeMap::new()),
+        };
+        let report = reg.reload();
+        (reg, report)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.inner
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|e| Arc::clone(&e.model))
+    }
+
+    /// The only model, when exactly one is loaded — lets `/predict`
+    /// omit the "model" field in the single-model case.
+    pub fn single(&self) -> Option<Arc<ServedModel>> {
+        let inner = self.inner.read().unwrap();
+        if inner.len() == 1 {
+            inner.values().next().map(|e| Arc::clone(&e.model))
+        } else {
+            None
+        }
+    }
+
+    pub fn list(&self) -> Vec<Arc<ServedModel>> {
+        self.inner
+            .read()
+            .unwrap()
+            .values()
+            .map(|e| Arc::clone(&e.model))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rescan the directory: load new checkpoints, re-load changed ones,
+    /// drop removed ones. File IO happens outside the write lock so
+    /// predicts are never blocked on disk.
+    pub fn reload(&self) -> ReloadReport {
+        let mut report = ReloadReport::default();
+
+        // Snapshot current fingerprints under the read lock.
+        let known: BTreeMap<String, Fingerprint> = self
+            .inner
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.fingerprint))
+            .collect();
+
+        // Scan the directory. A missing dir means zero models; any
+        // *other* read_dir failure (EMFILE under load, permissions
+        // blips) aborts the pass so a transient error can never drop
+        // every loaded model.
+        let mut present: BTreeMap<String, PathBuf> = BTreeMap::new();
+        match std::fs::read_dir(&self.dir) {
+            Ok(entries) => {
+                for entry in entries.flatten() {
+                    let path = entry.path();
+                    if path.extension().and_then(|e| e.to_str()) != Some("dmdp") {
+                        continue;
+                    }
+                    let name = match path.file_stem().and_then(|s| s.to_str()) {
+                        Some(s) if !s.is_empty() => s.to_string(),
+                        _ => continue,
+                    };
+                    present.insert(name, path);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                report.errors.push((
+                    "<scan>".to_string(),
+                    format!("read_dir {}: {e}", self.dir.display()),
+                ));
+                return report;
+            }
+        }
+
+        // Load new/changed models outside any lock.
+        let mut fresh: Vec<(String, LoadedEntry)> = Vec::new();
+        for (name, path) in &present {
+            let fp = match Fingerprint::of(path) {
+                Ok(fp) => fp,
+                Err(e) => {
+                    report.errors.push((name.clone(), format!("stat: {e}")));
+                    continue;
+                }
+            };
+            if known.get(name) == Some(&fp) {
+                continue; // unchanged
+            }
+            match load_model(name, path) {
+                Ok(model) => {
+                    report.loaded.push(name.clone());
+                    fresh.push((
+                        name.clone(),
+                        LoadedEntry {
+                            model: Arc::new(model),
+                            fingerprint: fp,
+                        },
+                    ));
+                }
+                Err(e) => report.errors.push((name.clone(), format!("{e:#}"))),
+            }
+        }
+
+        // Apply under the write lock.
+        {
+            let mut inner = self.inner.write().unwrap();
+            for (name, entry) in fresh {
+                inner.insert(name, entry);
+            }
+            let gone: Vec<String> = inner
+                .keys()
+                .filter(|k| !present.contains_key(*k))
+                .cloned()
+                .collect();
+            for name in gone {
+                inner.remove(&name);
+                report.dropped.push(name);
+            }
+        }
+        report
+    }
+}
+
+/// Load one checkpoint + optional sidecar into a model.
+fn load_model(name: &str, path: &Path) -> anyhow::Result<ServedModel> {
+    let params = load_params(path)?;
+    let inferred = infer_arch(&params)?;
+    let mut scaling = None;
+    let sidecar = path.with_extension("json");
+    if sidecar.exists() {
+        let text = std::fs::read_to_string(&sidecar)
+            .map_err(|e| anyhow::anyhow!("sidecar {}: {e}", sidecar.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow::anyhow!("sidecar {}: {e}", sidecar.display()))?;
+        if let Some(a) = doc.get("arch") {
+            let declared: Vec<usize> = a
+                .as_arr()
+                .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            anyhow::ensure!(
+                declared == inferred,
+                "sidecar declares arch {declared:?} but checkpoint tensors give {inferred:?}"
+            );
+        }
+        if let Some(s) = doc.get("scaling") {
+            scaling = Some(parse_scaling(s)?);
+        }
+    }
+    ServedModel::from_params(name, params, scaling)
+}
+
+/// Write the `<checkpoint>.json` sidecar next to a checkpoint so the
+/// registry can pin the arch and serve in physical units
+/// (`dmdtrain train --save-checkpoint` calls this with the dataset's
+/// scaling). Float ranges use shortest-roundtrip formatting, so the
+/// sidecar parses back to the exact f32 bounds.
+pub fn write_sidecar(
+    checkpoint_path: impl AsRef<Path>,
+    arch: &[usize],
+    scaling: Option<&Scaling>,
+) -> anyhow::Result<()> {
+    use std::fmt::Write as _;
+    let mut body = format!("{{\"arch\": {arch:?}");
+    if let Some(s) = scaling {
+        body.push_str(", \"scaling\": {\"in\": [");
+        for (i, &(lo, hi)) in s.in_ranges.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            let _ = write!(body, "[{}, {}]", lo as f64, hi as f64);
+        }
+        let _ = write!(
+            body,
+            "], \"out\": [{}, {}]}}",
+            s.out_range.0 as f64, s.out_range.1 as f64
+        );
+    }
+    body.push_str("}\n");
+    let sidecar = checkpoint_path.as_ref().with_extension("json");
+    std::fs::write(&sidecar, body)
+        .map_err(|e| anyhow::anyhow!("sidecar {}: {e}", sidecar.display()))?;
+    Ok(())
+}
+
+fn parse_scaling(s: &Json) -> anyhow::Result<Scaling> {
+    let pair = |j: &Json, what: &str| -> anyhow::Result<(f32, f32)> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("scaling.{what}: expected [lo, hi]"))?;
+        anyhow::ensure!(arr.len() == 2, "scaling.{what}: expected [lo, hi]");
+        let lo = arr[0]
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("scaling.{what}: non-numeric bound"))?;
+        let hi = arr[1]
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("scaling.{what}: non-numeric bound"))?;
+        Ok((lo as f32, hi as f32))
+    };
+    let in_arr = s
+        .get("in")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("scaling: missing \"in\" range list"))?;
+    let mut in_ranges = Vec::with_capacity(in_arr.len());
+    for r in in_arr {
+        in_ranges.push(pair(r, "in")?);
+    }
+    let out_range = pair(
+        s.get("out")
+            .ok_or_else(|| anyhow::anyhow!("scaling: missing \"out\" range"))?,
+        "out",
+    )?;
+    Ok(Scaling {
+        in_ranges,
+        out_range,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+    use crate::rng::Rng;
+    use crate::trainer::save_params;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dmdtrain_registry_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_model(dir: &Path, name: &str, dims: Vec<usize>, seed: u64) -> Vec<Tensor> {
+        let arch = Arch::new(dims).unwrap();
+        let params = arch.init_params(&mut Rng::new(seed));
+        save_params(&params, dir.join(format!("{name}.dmdp"))).unwrap();
+        params
+    }
+
+    #[test]
+    fn infer_arch_from_checkpoint_tensors() {
+        let arch = Arch::new(vec![6, 8, 6]).unwrap();
+        let params = arch.init_params(&mut Rng::new(1));
+        assert_eq!(infer_arch(&params).unwrap(), vec![6, 8, 6]);
+        // broken chains error, never panic
+        assert!(infer_arch(&params[..1]).is_err(), "odd tensor count");
+        let mut bad = params.clone();
+        bad[1] = Tensor::zeros(2, 8); // bias with wrong rows
+        assert!(infer_arch(&bad).is_err());
+        let mut unchained = params;
+        unchained[2] = Tensor::zeros(9, 6); // w2 rows != w1 cols
+        assert!(infer_arch(&unchained).is_err());
+    }
+
+    #[test]
+    fn open_loads_and_predicts() {
+        let dir = temp_dir("open");
+        let params = write_model(&dir, "m", vec![4, 5, 3], 7);
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert_eq!(report.loaded, vec!["m".to_string()]);
+        assert!(report.errors.is_empty());
+        let model = reg.get("m").expect("model loaded");
+        assert_eq!(model.arch, vec![4, 5, 3]);
+        assert_eq!(reg.single().unwrap().name, "m");
+
+        let x = Tensor::from_fn(2, 4, |r, c| (r * 4 + c) as f32 * 0.1 - 0.3);
+        let served = model.predict(&x).unwrap();
+        let direct = model.exe.predict_all(&params, &x).unwrap();
+        assert_eq!(served, direct, "registry predict matches direct predict");
+    }
+
+    #[test]
+    fn corrupt_checkpoint_reports_error_not_panic() {
+        let dir = temp_dir("corrupt");
+        std::fs::write(dir.join("bad.dmdp"), b"DMDPgarbage").unwrap();
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(reg.is_empty());
+        assert_eq!(report.errors.len(), 1);
+        assert_eq!(report.errors[0].0, "bad");
+    }
+
+    #[test]
+    fn sidecar_arch_mismatch_fails_loudly() {
+        let dir = temp_dir("sidecar");
+        write_model(&dir, "m", vec![3, 4, 2], 1);
+        std::fs::write(dir.join("m.json"), r#"{"arch": [3, 9, 2]}"#).unwrap();
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(reg.is_empty());
+        assert_eq!(report.errors.len(), 1);
+        assert!(report.errors[0].1.contains("arch"));
+    }
+
+    #[test]
+    fn sidecar_scaling_applies() {
+        let dir = temp_dir("scaled");
+        let params = write_model(&dir, "m", vec![2, 4, 1], 3);
+        std::fs::write(
+            dir.join("m.json"),
+            r#"{"arch": [2, 4, 1], "scaling": {"in": [[0, 10], [-1, 1]], "out": [0, 100]}}"#,
+        )
+        .unwrap();
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        let model = reg.get("m").unwrap();
+        let s = model.scaling.as_ref().unwrap();
+        assert_eq!(s.in_ranges, vec![(0.0, 10.0), (-1.0, 1.0)]);
+        assert_eq!(s.out_range, (0.0, 100.0));
+
+        let x = Tensor::from_vec(1, 2, vec![5.0, 0.5]);
+        let served = model.predict(&x).unwrap();
+        let manual = {
+            let xs = s.scale_inputs(&x);
+            let ys = model.exe.predict_all(&params, &xs).unwrap();
+            s.unscale_outputs(&ys)
+        };
+        assert_eq!(served, manual);
+    }
+
+    #[test]
+    fn hot_reload_adds_updates_and_drops() {
+        let dir = temp_dir("reload");
+        write_model(&dir, "a", vec![3, 4, 2], 1);
+        let (reg, _) = ModelRegistry::open(&dir);
+        assert_eq!(reg.len(), 1);
+        let a_v1 = reg.get("a").unwrap();
+
+        // unchanged file → no reload, same Arc
+        let rep = reg.reload();
+        assert!(!rep.changed());
+        assert!(Arc::ptr_eq(&a_v1, &reg.get("a").unwrap()));
+
+        // new model appears
+        write_model(&dir, "b", vec![5, 6, 4], 2);
+        let rep = reg.reload();
+        assert_eq!(rep.loaded, vec!["b".to_string()]);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.single().is_none(), "two models — no implicit default");
+
+        // a's file changes (different arch → different size) → new Arc
+        write_model(&dir, "a", vec![3, 7, 2], 9);
+        let rep = reg.reload();
+        assert_eq!(rep.loaded, vec!["a".to_string()]);
+        let a_v2 = reg.get("a").unwrap();
+        assert!(!Arc::ptr_eq(&a_v1, &a_v2));
+        assert_eq!(a_v2.arch, vec![3, 7, 2]);
+
+        // removal drops the model
+        std::fs::remove_file(dir.join("b.dmdp")).unwrap();
+        let rep = reg.reload();
+        assert_eq!(rep.dropped, vec!["b".to_string()]);
+        assert!(reg.get("b").is_none());
+    }
+
+    #[test]
+    fn write_sidecar_roundtrips_through_load() {
+        let dir = temp_dir("sidecar_rt");
+        write_model(&dir, "m", vec![3, 5, 2], 8);
+        let scaling = Scaling {
+            in_ranges: vec![(0.1, 19.7), (-0.25, 0.25), (1.0e-3, 2.5)],
+            out_range: (0.0, 123.456),
+        };
+        write_sidecar(dir.join("m.dmdp"), &[3, 5, 2], Some(&scaling)).unwrap();
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        let model = reg.get("m").unwrap();
+        let loaded = model.scaling.as_ref().unwrap();
+        // exact f32 bounds survive the JSON round-trip
+        assert_eq!(loaded.in_ranges, scaling.in_ranges);
+        assert_eq!(loaded.out_range, scaling.out_range);
+    }
+
+    #[test]
+    fn missing_dir_is_empty_not_error() {
+        let dir = std::env::temp_dir().join("dmdtrain_registry_never_created");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(reg.is_empty());
+        assert!(!report.changed());
+        assert!(report.errors.is_empty());
+    }
+}

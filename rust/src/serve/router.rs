@@ -1,0 +1,252 @@
+//! Request routing for the inference server.
+//!
+//! Routes:
+//! * `GET /healthz`  — liveness + loaded-model count
+//! * `GET /models`   — registry listing (name, arch, params, scaling)
+//! * `GET /metrics`  — Prometheus text exposition
+//! * `POST /reload`  — rescan the model directory now
+//! * `POST /predict` — JSON predict, coalesced by the micro-batcher
+//!
+//! `POST /predict` body: `{"model": "name", "inputs": [[…], …]}` —
+//! `inputs` is a list of rows (or one flat row), `model` may be omitted
+//! when exactly one model is loaded. Response:
+//! `{"model": "name", "rows": N, "outputs": [[…], …]}`.
+//!
+//! Float fidelity: outputs are formatted with Rust's shortest-roundtrip
+//! `Display`, so every serialized value parses back to the exact f64 of
+//! the computed f32 — served predictions are bit-identical to calling
+//! `Executable::predict` directly on the same checkpoint (the standing
+//! invariant in `tests/serve_integration.rs`).
+
+use super::batcher::{BatcherHandle, PredictJob};
+use super::http::{Request, Response};
+use super::registry::{ModelRegistry, ServedModel};
+use crate::metrics::serve::ServeMetrics;
+use crate::tensor::Tensor;
+use crate::util::jsonl::{parse, Json};
+use std::fmt::Write as _;
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Rows per single request (the batcher caps per-GEMM rows separately).
+const MAX_REQUEST_ROWS: usize = 65_536;
+
+/// Shared server state handed to every connection thread.
+pub struct AppState {
+    pub registry: Arc<ModelRegistry>,
+    pub metrics: Arc<ServeMetrics>,
+    pub started: Instant,
+}
+
+/// Dispatch one request; never panics — all failures map to 4xx/5xx.
+pub fn handle(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Response {
+    state.metrics.http_requests.inc();
+    let resp = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/models") => models(state),
+        ("GET", "/metrics") => Response::text(200, state.metrics.render_prometheus()),
+        ("POST", "/reload") => reload(state),
+        ("POST", "/predict") => predict(state, batcher, req),
+        ("GET", "/predict") | ("GET", "/reload") => {
+            Response::error(405, "use POST for this endpoint")
+        }
+        _ => Response::error(404, &format!("no route {} {}", req.method, req.path)),
+    };
+    if resp.status >= 400 {
+        state.metrics.http_errors.inc();
+    }
+    resp
+}
+
+fn healthz(state: &AppState) -> Response {
+    let body = format!(
+        "{{\"status\":\"ok\",\"models\":{},\"uptime_secs\":{}}}",
+        state.registry.len(),
+        state.started.elapsed().as_secs()
+    );
+    Response::json(200, body)
+}
+
+fn models(state: &AppState) -> Response {
+    let mut body = String::from("{\"models\":[");
+    for (i, m) in state.registry.list().iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(
+            body,
+            "{{\"name\":{},\"arch\":{:?},\"param_count\":{},\"scaled\":{}}}",
+            Json::Str(m.name.clone()).encode(),
+            m.arch,
+            m.param_count(),
+            m.scaling.is_some()
+        );
+    }
+    body.push_str("]}");
+    Response::json(200, body)
+}
+
+fn reload(state: &AppState) -> Response {
+    let report = state.registry.reload();
+    state.metrics.registry_reloads.inc();
+    let names = |v: &[String]| -> String {
+        let quoted: Vec<String> = v.iter().map(|s| Json::Str(s.clone()).encode()).collect();
+        format!("[{}]", quoted.join(","))
+    };
+    let errs: Vec<String> = report
+        .errors
+        .iter()
+        .map(|(n, e)| {
+            format!(
+                "{{\"model\":{},\"error\":{}}}",
+                Json::Str(n.clone()).encode(),
+                Json::Str(e.clone()).encode()
+            )
+        })
+        .collect();
+    let body = format!(
+        "{{\"loaded\":{},\"dropped\":{},\"errors\":[{}]}}",
+        names(&report.loaded),
+        names(&report.dropped),
+        errs.join(",")
+    );
+    Response::json(200, body)
+}
+
+fn predict(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let (model, x) = match parse_predict_body(state, &req.body) {
+        Ok(ok) => ok,
+        Err(resp) => return resp,
+    };
+    state.metrics.predict_requests.inc();
+    state.metrics.predict_rows.add(x.rows() as u64);
+
+    let (reply_tx, reply_rx) = sync_channel(1);
+    let job = PredictJob {
+        model: Arc::clone(&model),
+        inputs: x,
+        reply: reply_tx,
+    };
+    if batcher.submit(job).is_err() {
+        return Response::error(503, "predict dispatcher is down");
+    }
+    let result = match reply_rx.recv() {
+        Ok(r) => r,
+        Err(_) => return Response::error(503, "predict dispatcher dropped the request"),
+    };
+    let y = match result {
+        Ok(y) => y,
+        Err(e) => return Response::error(500, &format!("predict failed: {e:#}")),
+    };
+    state.metrics.predict_latency.observe(t0.elapsed().as_secs_f64());
+
+    let mut body = String::with_capacity(y.len() * 12 + 64);
+    let _ = write!(
+        body,
+        "{{\"model\":{},\"rows\":{},\"outputs\":[",
+        Json::Str(model.name.clone()).encode(),
+        y.rows()
+    );
+    for r in 0..y.rows() {
+        if r > 0 {
+            body.push(',');
+        }
+        body.push('[');
+        for (c, &v) in y.row(r).iter().enumerate() {
+            if c > 0 {
+                body.push(',');
+            }
+            // shortest-roundtrip Display keeps the exact f32 bits
+            // (including -0.0, which the Json::Num encoder would lose)
+            if v.is_finite() {
+                let _ = write!(body, "{}", v as f64);
+            } else {
+                body.push_str("null");
+            }
+        }
+        body.push(']');
+    }
+    body.push_str("]}");
+    Response::json(200, body)
+}
+
+/// Parse + validate a predict body; errors come back as ready responses.
+fn parse_predict_body(
+    state: &AppState,
+    body: &[u8],
+) -> Result<(Arc<ServedModel>, Tensor), Response> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| Response::error(400, "body is not valid UTF-8"))?;
+    let doc = parse(text).map_err(|e| Response::error(400, &format!("bad JSON: {e}")))?;
+
+    let model = match doc.get("model").and_then(Json::as_str) {
+        Some(name) => state
+            .registry
+            .get(name)
+            .ok_or_else(|| Response::error(404, &format!("model '{name}' not loaded")))?,
+        None => state.registry.single().ok_or_else(|| {
+            if state.registry.is_empty() {
+                Response::error(404, "no models loaded")
+            } else {
+                Response::error(400, "several models loaded — specify \"model\"")
+            }
+        })?,
+    };
+
+    let inputs = doc
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Response::error(400, "missing \"inputs\" array"))?;
+    if inputs.is_empty() {
+        return Err(Response::error(400, "\"inputs\" is empty"));
+    }
+
+    let n_in = model.n_in();
+    // one flat row, or a list of rows
+    let rows: Vec<Vec<f64>> = if inputs[0].as_f64().is_some() {
+        vec![numbers(inputs).map_err(|e| Response::error(400, &e))?]
+    } else {
+        let mut out = Vec::with_capacity(inputs.len());
+        for (i, row) in inputs.iter().enumerate() {
+            let row = row
+                .as_arr()
+                .ok_or_else(|| Response::error(400, &format!("inputs[{i}] is not an array")))?;
+            out.push(numbers(row).map_err(|e| Response::error(400, &e))?);
+        }
+        out
+    };
+    if rows.len() > MAX_REQUEST_ROWS {
+        return Err(Response::error(
+            400,
+            &format!("{} rows exceeds the per-request cap {MAX_REQUEST_ROWS}", rows.len()),
+        ));
+    }
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != n_in {
+            return Err(Response::error(
+                400,
+                &format!(
+                    "inputs[{i}] has {} features, model '{}' expects {n_in}",
+                    row.len(),
+                    model.name
+                ),
+            ));
+        }
+    }
+
+    let mut x = Tensor::zeros(rows.len(), n_in);
+    for (r, row) in rows.iter().enumerate() {
+        for (c, &v) in row.iter().enumerate() {
+            x.set(r, c, v as f32);
+        }
+    }
+    Ok((model, x))
+}
+
+fn numbers(arr: &[Json]) -> Result<Vec<f64>, String> {
+    arr.iter()
+        .map(|v| v.as_f64().ok_or_else(|| "non-numeric input value".to_string()))
+        .collect()
+}

@@ -96,11 +96,17 @@ fn encode_str(s: &str) -> String {
     out
 }
 
+/// Nesting cap: the parser recurses once per container level, and since
+/// the serve subsystem feeds it untrusted request bodies, unbounded
+/// depth would be a remote stack overflow. Manifests and predict
+/// payloads nest a handful of levels.
+const MAX_DEPTH: usize = 96;
+
 /// Parse a JSON document.
 pub fn parse(text: &str) -> anyhow::Result<Json> {
     let bytes: Vec<char> = text.chars().collect();
     let mut pos = 0usize;
-    let v = parse_value(&bytes, &mut pos)?;
+    let v = parse_value(&bytes, &mut pos, 0)?;
     skip_ws(&bytes, &mut pos);
     anyhow::ensure!(pos == bytes.len(), "json: trailing content at {pos}");
     Ok(v)
@@ -112,7 +118,8 @@ fn skip_ws(b: &[char], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[char], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_value(b: &[char], pos: &mut usize, depth: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(depth < MAX_DEPTH, "json: nesting deeper than {MAX_DEPTH}");
     skip_ws(b, pos);
     anyhow::ensure!(*pos < b.len(), "json: unexpected end");
     match b[*pos] {
@@ -126,7 +133,7 @@ fn parse_value(b: &[char], pos: &mut usize) -> anyhow::Result<Json> {
             }
             loop {
                 skip_ws(b, pos);
-                let key = match parse_value(b, pos)? {
+                let key = match parse_value(b, pos, depth + 1)? {
                     Json::Str(s) => s,
                     other => anyhow::bail!("json: non-string key {other:?}"),
                 };
@@ -136,7 +143,7 @@ fn parse_value(b: &[char], pos: &mut usize) -> anyhow::Result<Json> {
                     "json: expected ':' at {pos}"
                 );
                 *pos += 1;
-                let val = parse_value(b, pos)?;
+                let val = parse_value(b, pos, depth + 1)?;
                 map.insert(key, val);
                 skip_ws(b, pos);
                 anyhow::ensure!(*pos < b.len(), "json: unterminated object");
@@ -159,7 +166,7 @@ fn parse_value(b: &[char], pos: &mut usize) -> anyhow::Result<Json> {
                 return Ok(Json::Arr(arr));
             }
             loop {
-                arr.push(parse_value(b, pos)?);
+                arr.push(parse_value(b, pos, depth + 1)?);
                 skip_ws(b, pos);
                 anyhow::ensure!(*pos < b.len(), "json: unterminated array");
                 match b[*pos] {
@@ -309,6 +316,20 @@ mod tests {
         assert!(parse("{invalid}").is_err());
         assert!(parse("[1, 2").is_err());
         assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn rejects_pathological_nesting() {
+        // untrusted /predict bodies reach this parser: a deeply nested
+        // document must error out, not overflow the stack
+        let mut evil = String::new();
+        for _ in 0..100_000 {
+            evil.push('[');
+        }
+        let err = parse(&evil).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "unexpected error: {err}");
+        // sane depth still parses
+        assert!(parse("[[[[[[[[[[1]]]]]]]]]]").is_ok());
     }
 
     #[test]

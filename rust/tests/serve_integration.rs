@@ -1,0 +1,335 @@
+//! End-to-end serving tests: a real `Server` on an ephemeral port,
+//! driven over TCP. The standing invariant: a `/predict` response is
+//! **bit-identical** to `Executable::predict` called directly on the
+//! same checkpoint, whatever the micro-batching does.
+
+use dmdtrain::config::ServeConfig;
+use dmdtrain::model::Arch;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::{Executable, ManifestEntry, NativeExecutable};
+use dmdtrain::serve::http::read_response;
+use dmdtrain::serve::Server;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::save_params;
+use dmdtrain::util::jsonl::{parse, Json};
+use std::fmt::Write as _;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dmdtrain_serve_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Save a fresh checkpoint for `dims` and return its parameters.
+fn write_model(dir: &Path, name: &str, dims: Vec<usize>, seed: u64) -> Vec<Tensor> {
+    let arch = Arch::new(dims).unwrap();
+    let params = arch.init_params(&mut Rng::new(seed));
+    save_params(&params, dir.join(format!("{name}.dmdp"))).unwrap();
+    params
+}
+
+fn serve_cfg(dir: &Path) -> ServeConfig {
+    ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        model_dir: dir.to_string_lossy().into_owned(),
+        batch_window_us: 500,
+        max_batch_rows: 64,
+        threads: 16,
+        reload_secs: 0,
+    }
+}
+
+/// One request over a fresh connection; returns (status, body).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let wire = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(wire.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, resp) = read_response(&mut reader).expect("response");
+    (status, String::from_utf8(resp).expect("utf8 body"))
+}
+
+/// Serialize one input row with exact-roundtrip float formatting.
+fn row_json(row: &[f32]) -> String {
+    let mut s = String::from("[");
+    for (i, &v) in row.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{}", v as f64);
+    }
+    s.push(']');
+    s
+}
+
+fn predict_body(model: Option<&str>, rows: &[&[f32]]) -> String {
+    let mut s = String::from("{");
+    if let Some(m) = model {
+        let _ = write!(s, "\"model\":\"{m}\",");
+    }
+    s.push_str("\"inputs\":[");
+    for (i, row) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&row_json(row));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Parse the `outputs` field into a Tensor.
+fn parse_outputs(body: &str) -> Tensor {
+    let doc = parse(body).expect("response json");
+    let rows = doc.get("outputs").and_then(Json::as_arr).expect("outputs");
+    let cols = rows[0].as_arr().expect("row").len();
+    let mut data = Vec::with_capacity(rows.len() * cols);
+    for row in rows {
+        for v in row.as_arr().unwrap() {
+            data.push(v.as_f64().expect("number") as f32);
+        }
+    }
+    Tensor::from_vec(rows.len(), cols, data)
+}
+
+fn direct_exe(dims: &[usize]) -> Executable {
+    let entry = ManifestEntry::native_model("predict", "direct", dims, 0);
+    Executable::Native(NativeExecutable::new(entry).unwrap())
+}
+
+fn assert_bit_identical(served: &Tensor, direct: &Tensor) {
+    assert_eq!(served.shape(), direct.shape());
+    for (i, (a, b)) in served.data().iter().zip(direct.data()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "output {i} differs: served {a} vs direct {b}"
+        );
+    }
+}
+
+#[test]
+fn healthz_predict_roundtrip_is_bit_identical() {
+    let dir = temp_dir("roundtrip");
+    let params = write_model(&dir, "test", vec![6, 8, 6], 11);
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+    let addr = server.addr();
+
+    let (status, body) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ok\""));
+    assert!(body.contains("\"models\":1"));
+
+    let (status, body) = request(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"name\":\"test\""));
+    assert!(body.contains("[6, 8, 6]"));
+
+    // two-row predict, model named explicitly
+    let r0: Vec<f32> = vec![0.1, -0.7, 1.5, 0.0, -2.25, 0.3];
+    let r1: Vec<f32> = vec![-1.0, 0.5, 0.25, 3.0, 0.125, -0.6];
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/predict",
+        &predict_body(Some("test"), &[&r0, &r1]),
+    );
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+
+    let x = Tensor::from_vec(2, 6, [r0, r1].concat());
+    let direct = direct_exe(&[6, 8, 6]).predict_all(&params, &x).unwrap();
+    assert_bit_identical(&served, &direct);
+
+    // flat single-row form, model omitted (single-model registry)
+    let (status, body) = request(addr, "POST", "/predict", &predict_body(None, &[x.row(0)]));
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+    let direct_row = Tensor::from_vec(1, 6, x.row(0).to_vec());
+    let direct = direct_exe(&[6, 8, 6])
+        .predict_all(&params, &direct_row)
+        .unwrap();
+    assert_bit_identical(&served, &direct);
+
+    server.shutdown();
+}
+
+#[test]
+fn error_paths_are_loud_not_panicky() {
+    let dir = temp_dir("errors");
+    write_model(&dir, "a", vec![4, 5, 2], 1);
+    write_model(&dir, "b", vec![4, 5, 2], 2);
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+    let addr = server.addr();
+
+    let (status, body) = request(addr, "POST", "/predict", "{not json");
+    assert_eq!(status, 400, "{body}");
+
+    let row: Vec<f32> = vec![0.0; 4];
+    let (status, body) = request(addr, "POST", "/predict", &predict_body(None, &[&row]));
+    assert_eq!(status, 400, "two models, none named: {body}");
+    assert!(body.contains("model"));
+
+    let (status, body) = request(addr, "POST", "/predict", &predict_body(Some("zzz"), &[&row]));
+    assert_eq!(status, 404, "{body}");
+
+    let short: Vec<f32> = vec![0.0; 3];
+    let (status, body) = request(addr, "POST", "/predict", &predict_body(Some("a"), &[&short]));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("features"));
+
+    let (status, _) = request(addr, "POST", "/predict", r#"{"model":"a","inputs":[]}"#);
+    assert_eq!(status, 400);
+
+    let (status, _) = request(addr, "GET", "/predict", "");
+    assert_eq!(status, 405);
+
+    let (status, _) = request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    // server still healthy after the error barrage
+    let (status, _) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn hot_reload_over_http() {
+    let dir = temp_dir("reload");
+    write_model(&dir, "first", vec![3, 4, 2], 5);
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+    let addr = server.addr();
+
+    let params = write_model(&dir, "second", vec![5, 6, 3], 6);
+    let (status, body) = request(addr, "POST", "/reload", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"second\""), "{body}");
+
+    let (status, body) = request(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"first\"") && body.contains("\"second\""));
+
+    let row: Vec<f32> = vec![0.2, -0.4, 0.6, 0.8, -1.0];
+    let (status, body) = request(addr, "POST", "/predict", &predict_body(Some("second"), &[&row]));
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+    let x = Tensor::from_vec(1, 5, row);
+    let direct = direct_exe(&[5, 6, 3]).predict_all(&params, &x).unwrap();
+    assert_bit_identical(&served, &direct);
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests() {
+    let dir = temp_dir("keepalive");
+    write_model(&dir, "m", vec![2, 3, 1], 7);
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for i in 0..3 {
+        let body = predict_body(None, &[&[0.1 * i as f32, -0.2]]);
+        let wire = format!(
+            "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(wire.as_bytes()).unwrap();
+        let (status, resp) = read_response(&mut reader).unwrap();
+        assert_eq!(status, 200, "request {i}: {}", String::from_utf8_lossy(&resp));
+    }
+    drop(stream);
+    drop(reader);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_get_correct_answers_and_metrics_add_up() {
+    let dir = temp_dir("concurrent");
+    let params = write_model(&dir, "m", vec![6, 10, 4], 9);
+    let mut cfg = serve_cfg(&dir);
+    cfg.batch_window_us = 2_000; // encourage coalescing
+    let server = Server::start(&cfg).unwrap();
+    let addr = server.addr();
+
+    const CLIENTS: usize = 8;
+    const REQS: usize = 5;
+    let mut handles = Vec::new();
+    for t in 0..CLIENTS {
+        let params = params.clone();
+        let entry = ManifestEntry::native_model("predict", "direct", &[6, 10, 4], 0);
+        handles.push(std::thread::spawn(move || {
+            let exe = Executable::Native(NativeExecutable::new(entry).unwrap());
+            for i in 0..REQS {
+                let row: Vec<f32> = (0..6)
+                    .map(|c| ((t * 31 + i * 7 + c) % 13) as f32 * 0.17 - 0.9)
+                    .collect();
+                let (status, body) =
+                    request(addr, "POST", "/predict", &predict_body(None, &[&row]));
+                assert_eq!(status, 200, "{body}");
+                let served = parse_outputs(&body);
+                let x = Tensor::from_vec(1, 6, row);
+                let direct = exe.predict_all(&params, &x).unwrap();
+                assert_eq!(served.shape(), direct.shape());
+                for (a, b) in served.data().iter().zip(direct.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let metrics = server.metrics();
+    assert_eq!(metrics.predict_requests.get(), (CLIENTS * REQS) as u64);
+    assert_eq!(metrics.predict_rows.get(), (CLIENTS * REQS) as u64);
+    let batches = metrics.predict_batches.get();
+    assert!(batches >= 1 && batches <= metrics.predict_rows.get());
+
+    let (status, text) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(text.contains("dmdtrain_predict_rows_total 40"));
+    assert!(text.contains("# TYPE dmdtrain_predict_latency_seconds histogram"));
+    server.shutdown();
+}
+
+#[test]
+fn scaling_sidecar_served_in_physical_units() {
+    let dir = temp_dir("scaling");
+    let params = write_model(&dir, "m", vec![2, 5, 1], 13);
+    std::fs::write(
+        dir.join("m.json"),
+        r#"{"arch": [2, 5, 1], "scaling": {"in": [[0, 10], [-2, 2]], "out": [0, 50]}}"#,
+    )
+    .unwrap();
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+
+    let row: Vec<f32> = vec![7.5, -1.0];
+    let (status, body) = request(
+        server.addr(),
+        "POST",
+        "/predict",
+        &predict_body(Some("m"), &[&row]),
+    );
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+
+    let scaling = dmdtrain::data::Scaling {
+        in_ranges: vec![(0.0, 10.0), (-2.0, 2.0)],
+        out_range: (0.0, 50.0),
+    };
+    let x = Tensor::from_vec(1, 2, row);
+    let xs = scaling.scale_inputs(&x);
+    let ys = direct_exe(&[2, 5, 1]).predict_all(&params, &xs).unwrap();
+    let direct = scaling.unscale_outputs(&ys);
+    assert_bit_identical(&served, &direct);
+    server.shutdown();
+}
