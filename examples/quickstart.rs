@@ -13,7 +13,7 @@ use dmdtrain::config::{Config, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::pde::generate_dataset;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
 
 fn main() -> anyhow::Result<()> {
@@ -52,14 +52,14 @@ fn main() -> anyhow::Result<()> {
     let mut plain_cfg = base.clone();
     plain_cfg.dmd = None;
     println!("\n=== plain Adam ({} epochs) ===", plain_cfg.epochs);
-    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    let plain = TrainSession::new(&runtime, plain_cfg)?.run(&ds)?;
 
     println!(
         "\n=== Adam + DMD (m={}, s={}) ===",
         base.dmd.as_ref().unwrap().m,
         base.dmd.as_ref().unwrap().s
     );
-    let dmd = Trainer::new(&runtime, base)?.run(&ds)?;
+    let dmd = TrainSession::new(&runtime, base)?.run(&ds)?;
 
     // --- 4. report --------------------------------------------------------
     let improvement = dmd.history.improvement_vs(&plain.history);

@@ -12,7 +12,7 @@ use dmdtrain::config::{Config, DatagenConfig, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::pde::generate_dataset;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
 
 fn main() -> anyhow::Result<()> {
@@ -53,9 +53,9 @@ fn main() -> anyhow::Result<()> {
     let mut plain_cfg = base.clone();
     plain_cfg.dmd = None;
     println!("=== plain Adam, {epochs} epochs ===");
-    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    let plain = TrainSession::new(&runtime, plain_cfg)?.run(&ds)?;
     println!("=== Adam + DMD (m=14, s=55), {epochs} epochs ===");
-    let dmd = Trainer::new(&runtime, base)?.run(&ds)?;
+    let dmd = TrainSession::new(&runtime, base)?.run(&ds)?;
 
     let dir = root.join("runs/fig4");
     std::fs::create_dir_all(&dir)?;

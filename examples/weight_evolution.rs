@@ -11,7 +11,7 @@
 use dmdtrain::config::{Config, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util::{self, csv::CsvWriter};
 
 fn main() -> anyhow::Result<()> {
@@ -32,20 +32,22 @@ fn main() -> anyhow::Result<()> {
     tc.record_weights = true;
     tc.log_every = 100;
 
-    let mut trainer = Trainer::new(&runtime, tc)?;
-    let report = trainer.run(&ds)?;
-    let n_layers = trainer.arch.num_layers();
+    let mut session = TrainSession::new(&runtime, tc)?;
+    let n_layers = session.arch().num_layers();
+    // record_weights installs the WeightTrace observer; the sampled
+    // trajectories come back on the report
+    let report = session.run(&ds)?;
 
     let dir = root.join("runs/fig1");
     std::fs::create_dir_all(&dir)?;
     for layer in 0..n_layers {
-        let n_tracked = trainer.weight_trace[0][layer].len();
+        let n_tracked = report.weight_trace[0][layer].len();
         let header: Vec<String> = std::iter::once("step".to_string())
             .chain((0..n_tracked).map(|k| format!("w{k}")))
             .collect();
         let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
         let mut w = CsvWriter::create(dir.join(format!("layer{layer}.csv")), &header_refs)?;
-        for (step, row) in trainer.weight_trace.iter().enumerate() {
+        for (step, row) in report.weight_trace.iter().enumerate() {
             let mut vals = vec![step as f64];
             vals.extend(row[layer].iter().map(|&v| v as f64));
             w.row(&vals)?;
@@ -56,14 +58,14 @@ fn main() -> anyhow::Result<()> {
         "fig1 → {} ({} layers × {} steps; final train MSE {})",
         dir.display(),
         n_layers,
-        trainer.weight_trace.len(),
+        report.weight_trace.len(),
         util::fmt_f64(report.history.final_train().unwrap())
     );
 
     // quick quantitative echo of the paper's three observations
     for layer in 0..n_layers {
-        let first: &[f32] = &trainer.weight_trace[0][layer];
-        let last: &[f32] = trainer.weight_trace.last().unwrap()[layer].as_slice();
+        let first: &[f32] = &report.weight_trace[0][layer];
+        let last: &[f32] = report.weight_trace.last().unwrap()[layer].as_slice();
         let drift: f64 = first
             .iter()
             .zip(last)

@@ -12,7 +12,7 @@ mod common;
 
 use dmdtrain::config::Projection;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
 
 fn main() -> anyhow::Result<()> {
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         "variant", "train MSE", "test MSE", "mean rel", "events"
     );
     for (label, tc) in variants {
-        let report = Trainer::new(&runtime, tc)?.run(&ds)?;
+        let report = TrainSession::new(&runtime, tc)?.run(&ds)?;
         println!(
             "{label:<38} {:>12} {:>12} {:>10.3} {:>8}",
             util::fmt_f64(report.history.final_train().unwrap()),

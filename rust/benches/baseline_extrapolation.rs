@@ -4,69 +4,18 @@
 //!
 //! The paper's claim: per-weight fits "break the coherent dynamics of the
 //! evolution of weights at each layer", so DMD (one reduced operator per
-//! layer) should beat them. Reproduced here on the quickstart problem.
+//! layer) should beat them. Reproduced here on the quickstart problem —
+//! and since the line fit is now a first-class accelerator
+//! (`trainer::accel::LineFitAccelerator`), all three runs go through the
+//! same `TrainSession` loop and differ *only* in `accel.kind`: exactly
+//! the "swap one component" comparison the API redesign promises.
 
 mod common;
 
-use dmdtrain::data::{Batcher, Dataset};
-use dmdtrain::dmd::SnapshotBuffer;
-use dmdtrain::optim::{Adam, Optimizer, WeightExtrapolation};
-use dmdtrain::model::Arch;
+use dmdtrain::config::AccelKind;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::rng::Rng;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
-
-/// Plain-Adam training with a per-weight extrapolation jump every m
-/// steps (the same cadence Algorithm 1 gives DMD).
-fn train_with_line_fit(
-    runtime: &Runtime,
-    cfg: &dmdtrain::config::TrainConfig,
-    ds: &Dataset,
-    m: usize,
-    s: usize,
-) -> anyhow::Result<(f64, f64)> {
-    let train_exe = runtime.load(&format!("train_step_{}", cfg.artifact))?;
-    let predict_exe = runtime.load(&format!("predict_{}", cfg.artifact))?;
-    let arch = Arch::new(train_exe.entry().arch.clone())?;
-    let mut rng = Rng::new(cfg.seed);
-    let mut params = arch.init_params(&mut rng);
-    let mut adam = Adam::new(Default::default());
-    // without_gram: the line-fit baseline never reads WᵀW, so it must
-    // not pay the streaming-Gram cost the DMD path amortizes — keeps
-    // the E10 "identical budgets" comparison honest
-    let mut buffers: Vec<SnapshotBuffer> = (0..arch.num_layers())
-        .map(|_| SnapshotBuffer::without_gram(m))
-        .collect();
-
-    let mut batcher = Batcher::new(ds.n_train(), train_exe.effective_batch(ds.n_train()))?;
-    let mut brng = rng.fork(1);
-    let mut step = 0;
-    for _epoch in 0..cfg.epochs {
-        for idx in batcher.epoch(&mut brng) {
-            let (bx, by) = Batcher::gather(&ds.x_train, &ds.y_train, &idx);
-            let (_loss, grads) = train_exe.train_step(&params, &bx, &by)?;
-            adam.step(&mut params, &grads);
-            step += 1;
-            for l in 0..arch.num_layers() {
-                let flat = arch.flatten_layer(&params, l);
-                buffers[l].push(step, &flat);
-            }
-            if buffers[0].is_full() {
-                for (l, buf) in buffers.iter_mut().enumerate() {
-                    if let Ok(new_w) = WeightExtrapolation::extrapolate(buf, s) {
-                        arch.unflatten_layer(&mut params, l, &new_w);
-                    }
-                    buf.clear();
-                }
-            }
-        }
-    }
-    Ok((
-        predict_exe.mse_all(&params, &ds.x_train, &ds.y_train)?,
-        predict_exe.mse_all(&params, &ds.x_test, &ds.y_test)?,
-    ))
-}
 
 fn main() -> anyhow::Result<()> {
     let cfg = common::config("quickstart");
@@ -76,6 +25,14 @@ fn main() -> anyhow::Result<()> {
     let mut base = common::train_config(&cfg, &ds_path);
     base.epochs = if common::fast_mode() { 120 } else { 600 };
     base.eval_every = base.epochs;
+    // raw strategies, no guard/relaxation/noise: the E10 protocol
+    // compares the bare surrogates under identical budgets
+    base.measure_dmd = false;
+    if let Some(d) = base.dmd.as_mut() {
+        d.accept_worse_factor = None;
+        d.relaxation = 1.0;
+        d.noise_reinject = false;
+    }
     let (m, s) = {
         let d = base.dmd.as_ref().unwrap();
         (d.m, d.s)
@@ -83,41 +40,37 @@ fn main() -> anyhow::Result<()> {
 
     // plain Adam
     let mut plain_cfg = base.clone();
-    plain_cfg.dmd = None;
+    plain_cfg.accel = AccelKind::None;
     eprintln!("baseline bench: plain Adam…");
-    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    let plain = TrainSession::new(&runtime, plain_cfg)?.run(&ds)?;
 
-    // DMD
+    // per-layer DMD
+    let mut dmd_cfg = base.clone();
+    dmd_cfg.accel = AccelKind::Dmd;
     eprintln!("baseline bench: DMD (m={m}, s={s})…");
-    let dmd = Trainer::new(&runtime, base.clone())?.run(&ds)?;
+    let dmd = TrainSession::new(&runtime, dmd_cfg)?.run(&ds)?;
 
-    // per-weight line fit at the same (m, s)
+    // per-weight line fit at the same (m, s) cadence
+    let mut lf_cfg = base.clone();
+    lf_cfg.accel = AccelKind::LineFit;
     eprintln!("baseline bench: per-weight line fit (m={m}, s={s})…");
-    let (lf_train, lf_test) = train_with_line_fit(&runtime, &base, &ds, m, s)?;
+    let linefit = TrainSession::new(&runtime, lf_cfg)?.run(&ds)?;
 
-    println!("\nE10 — acceleration baselines, {} epochs, (m={m}, s={s})", base.epochs);
-    println!("{:<28} {:>14} {:>14}", "method", "train MSE", "test MSE");
-    for (name, tr, te) in [
-        (
-            "plain Adam",
-            plain.history.final_train().unwrap(),
-            plain.history.final_test().unwrap(),
-        ),
-        (
-            "per-weight line fit (§2)",
-            lf_train,
-            lf_test,
-        ),
-        (
-            "per-layer DMD (paper)",
-            dmd.history.final_train().unwrap(),
-            dmd.history.final_test().unwrap(),
-        ),
+    println!(
+        "\nE10 — acceleration baselines, {} epochs, (m={m}, s={s})",
+        base.epochs
+    );
+    println!("{:<28} {:>14} {:>14} {:>8}", "method", "train MSE", "test MSE", "events");
+    for (name, report) in [
+        ("plain Adam", &plain),
+        ("per-weight line fit (§2)", &linefit),
+        ("per-layer DMD (paper)", &dmd),
     ] {
         println!(
-            "{name:<28} {:>14} {:>14}",
-            util::fmt_f64(tr),
-            util::fmt_f64(te)
+            "{name:<28} {:>14} {:>14} {:>8}",
+            util::fmt_f64(report.history.final_train().unwrap()),
+            util::fmt_f64(report.history.final_test().unwrap()),
+            report.accel.events
         );
     }
     println!("\npaper's expectation: DMD < plain; line fit unreliable (coherence broken)");

@@ -8,7 +8,7 @@
 mod common;
 
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
 
 fn main() -> anyhow::Result<()> {
@@ -39,9 +39,9 @@ fn main() -> anyhow::Result<()> {
     plain_cfg.dmd = None;
 
     eprintln!("fig4: plain Adam, {} epochs…", base.epochs);
-    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    let plain = TrainSession::new(&runtime, plain_cfg)?.run(&ds)?;
     eprintln!("fig4: Adam+DMD (m=14, s=55), {} epochs…", base.epochs);
-    let dmd = Trainer::new(&runtime, base.clone())?.run(&ds)?;
+    let dmd = TrainSession::new(&runtime, base.clone())?.run(&ds)?;
 
     let dir = common::out_dir("fig4");
     plain.history.write_csv(dir.join("loss_plain.csv"))?;

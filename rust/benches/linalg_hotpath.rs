@@ -217,6 +217,66 @@ fn main() {
     results.push(ts_ser);
     results.push(ts_par);
 
+    // ---- TrainSession indirection overhead at paper scale ----------------
+    // The session redesign routes every step through trait objects
+    // (Optimizer / Accelerator / Observer). This measures a full
+    // session step (backprop + Adam, accel=none) against the raw
+    // train_step + Adam::step composite on identical data — the CI gate
+    // asserts the ratio stays within 3%.
+    let (sess_min_s, raw_min_s) = {
+        use dmdtrain::config::{Config, TrainConfig};
+        use dmdtrain::data::Dataset;
+        use dmdtrain::optim::{Adam, Optimizer};
+        use dmdtrain::runtime::Runtime;
+        use dmdtrain::trainer::TrainSession;
+
+        let ds = Dataset::from_raw(
+            x.clone(),
+            y.clone(),
+            Tensor::from_fn(8, arch.input_dim(), |_, _| prng.uniform_in(-1.0, 1.0) as f32),
+            Tensor::from_fn(8, arch.output_dim(), |_, _| prng.uniform_in(-0.5, 0.5) as f32),
+        );
+        let text = r#"
+[model]
+artifact = "paper"
+[data]
+path = "unused"
+[train]
+epochs = 1000000
+eval_every = 1000000
+log_every = 0
+[dmd]
+enabled = false
+"#;
+        let cfg = TrainConfig::from_config(&Config::parse(text).unwrap()).expect("session cfg");
+        let runtime = Runtime::cpu(Runtime::default_artifact_dir()).expect("runtime");
+        let mut session = TrainSession::new(&runtime, cfg).expect("session");
+        // warm-up epoch 0 separately: it carries the one-off test eval
+        session.run_epoch(&ds).expect("session warmup epoch");
+        let overhead_iters = ts_iters.max(3);
+        let sess = bench_n("train_step paper b=1000 session+adam", overhead_iters, || {
+            session.run_epoch(&ds).expect("session epoch").train_mse
+        });
+
+        let mut raw_params = arch.init_params(&mut Rng::new(41));
+        let mut raw_adam = Adam::new(Default::default());
+        let raw = bench_n("train_step paper b=1000 raw+adam", overhead_iters, || {
+            let (loss, grads) = par_exe
+                .train_step(&raw_params, &ds.x_train, &ds.y_train)
+                .expect("raw train_step");
+            raw_adam.step(&mut raw_params, &grads);
+            loss
+        });
+        let (s_min, r_min) = (sess.min_s, raw.min_s);
+        results.push(sess);
+        results.push(raw);
+        (s_min, r_min)
+    };
+    let session_overhead = sess_min_s / raw_min_s;
+    println!(
+        "  → TrainSession full-batch step vs raw train_step+Adam: {session_overhead:.3}× (gate ≤ 1.03×)"
+    );
+
     // small dense solvers (r ≤ 20 — must be negligible)
     let g = {
         let b = Mat::from_fn(64, 20, |_, _| rng.normal());
@@ -234,7 +294,7 @@ fn main() {
 
     // ---- perf-trajectory artifact ---------------------------------------
     let json = format!(
-        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_pool_speedup:.3},\n  \"gram_kernel_speedup_vs_pr1\": {gram_kernel_speedup:.3},\n  \"gram_speedup_vs_pr1_scalar\": {gram_speedup_vs_pr1:.3},\n  \"gram_stream_fill_s\": {stream_fill_s:.6e},\n  \"train_step_paper_b1000_pr1_scalar_s\": {ts_pr1_mean_s:.6e},\n  \"train_step_paper_b1000_serial_s\": {ts_ser_mean_s:.6e},\n  \"train_step_paper_b1000_pool_s\": {ts_par_mean_s:.6e},\n  \"train_step_speedup\": {ts_pool_speedup:.3},\n  \"train_step_kernel_speedup_vs_pr1\": {ts_kernel_speedup:.3},\n  \"train_step_speedup_vs_pr1_scalar\": {ts_speedup_vs_pr1:.3},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_pool_speedup:.3},\n  \"gram_kernel_speedup_vs_pr1\": {gram_kernel_speedup:.3},\n  \"gram_speedup_vs_pr1_scalar\": {gram_speedup_vs_pr1:.3},\n  \"gram_stream_fill_s\": {stream_fill_s:.6e},\n  \"train_step_paper_b1000_pr1_scalar_s\": {ts_pr1_mean_s:.6e},\n  \"train_step_paper_b1000_serial_s\": {ts_ser_mean_s:.6e},\n  \"train_step_paper_b1000_pool_s\": {ts_par_mean_s:.6e},\n  \"train_step_speedup\": {ts_pool_speedup:.3},\n  \"train_step_kernel_speedup_vs_pr1\": {ts_kernel_speedup:.3},\n  \"train_step_speedup_vs_pr1_scalar\": {ts_speedup_vs_pr1:.3},\n  \"train_session_step_s\": {sess_min_s:.6e},\n  \"train_step_raw_adam_s\": {raw_min_s:.6e},\n  \"train_session_step_overhead_vs_raw\": {session_overhead:.4},\n  \"results\": [\n    {}\n  ]\n}}\n",
         results
             .iter()
             .map(json_stat)

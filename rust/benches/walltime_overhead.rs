@@ -16,7 +16,7 @@ use dmdtrain::dmd::{extrapolate_all_layers, flops_estimate, SnapshotBuffer};
 use dmdtrain::model::Arch;
 use dmdtrain::rng::Rng;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
 
 fn main() -> anyhow::Result<()> {
@@ -34,9 +34,9 @@ fn main() -> anyhow::Result<()> {
     let mut plain_cfg = base.clone();
     plain_cfg.dmd = None;
     eprintln!("walltime: plain run ({epochs} epochs)…");
-    let plain = Trainer::new(&runtime, plain_cfg)?.run(&ds)?;
+    let plain = TrainSession::new(&runtime, plain_cfg)?.run(&ds)?;
     eprintln!("walltime: DMD run ({epochs} epochs)…");
-    let dmd = Trainer::new(&runtime, base.clone())?.run(&ds)?;
+    let dmd = TrainSession::new(&runtime, base.clone())?.run(&ds)?;
 
     let measured = dmd.wall_secs / plain.wall_secs;
 

@@ -9,5 +9,6 @@ mod types;
 
 pub use toml::{Config, Value};
 pub use types::{
-    AdamParams, DatagenConfig, DmdParams, Projection, ServeConfig, SweepConfig, TrainConfig,
+    AccelKind, AdamParams, DatagenConfig, DmdParams, Projection, ServeConfig, SgdParams,
+    SweepConfig, TrainConfig,
 };

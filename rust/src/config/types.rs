@@ -94,6 +94,32 @@ impl DmdParams {
     }
 }
 
+/// Which acceleration strategy the training session runs between
+/// backprop bursts (the `[accel]` TOML section). The jump strategy is a
+/// swappable component, not a fixed loop — see
+/// `trainer::accel::Accelerator`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccelKind {
+    /// Per-layer DMD extrapolation — the paper's Algorithm 1.
+    Dmd,
+    /// Per-weight OLS line fit (Kamarthi & Pittner style, the paper's
+    /// §2 related-work baseline), sharing the DMD (m, s) cadence.
+    LineFit,
+    /// No acceleration: plain backprop (the paper's "without DMD").
+    None,
+}
+
+impl AccelKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "dmd" => Ok(AccelKind::Dmd),
+            "linefit" => Ok(AccelKind::LineFit),
+            "none" => Ok(AccelKind::None),
+            _ => anyhow::bail!("accel.kind must be 'dmd', 'linefit' or 'none', got '{s}'"),
+        }
+    }
+}
+
 /// Adam hyper-parameters (paper uses TF defaults).
 #[derive(Clone, Copy, Debug)]
 pub struct AdamParams {
@@ -126,6 +152,33 @@ impl AdamParams {
     }
 }
 
+/// SGD hyper-parameters (`[sgd]` section; used by the `sgd` and
+/// `sgd_momentum` optimizers).
+#[derive(Clone, Copy, Debug)]
+pub struct SgdParams {
+    pub lr: f64,
+    pub momentum: f64,
+}
+
+impl Default for SgdParams {
+    fn default() -> Self {
+        SgdParams {
+            lr: 1e-2,
+            momentum: 0.9,
+        }
+    }
+}
+
+impl SgdParams {
+    pub fn from_config(c: &Config) -> Self {
+        let d = SgdParams::default();
+        SgdParams {
+            lr: c.f64_or("sgd.lr", d.lr),
+            momentum: c.f64_or("sgd.momentum", d.momentum),
+        }
+    }
+}
+
 /// Full training-run configuration (one Algorithm-1 execution).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -137,11 +190,27 @@ pub struct TrainConfig {
     /// Dataset path (written by `dmdtrain datagen`).
     pub dataset: String,
     pub adam: AdamParams,
+    pub sgd: SgdParams,
+    /// Optimizer name: "adam" (default), "sgd" or "sgd_momentum".
+    pub optimizer: String,
+    /// Acceleration strategy; `dmd = None` (dmd.enabled = false) always
+    /// means no acceleration regardless of this kind.
+    pub accel: AccelKind,
     /// None = plain backprop baseline (the paper's "without DMD").
     pub dmd: Option<DmdParams>,
     pub eval_every: usize,
     pub log_every: usize,
     pub out_dir: String,
+    /// Stop after this many epochs without train-MSE improvement
+    /// (0 = disabled). Implemented by `trainer::observe::EarlyStop`.
+    pub early_stop_patience: usize,
+    /// Minimum train-MSE improvement that resets the patience counter.
+    pub early_stop_min_delta: f64,
+    /// Save a parameter checkpoint into `out_dir` every N epochs
+    /// (0 = disabled). Implemented by `trainer::observe::CheckpointEvery`.
+    pub checkpoint_every: usize,
+    /// Stream per-epoch metrics as JSONL to this path (live monitoring).
+    pub metrics_jsonl: Option<String>,
     /// Record per-layer weight trajectories (Fig 1) — costs memory.
     pub record_weights: bool,
     /// Evaluate train/test MSE before+after every DMD jump (the Fig 3
@@ -154,16 +223,24 @@ pub struct TrainConfig {
 impl TrainConfig {
     pub fn from_config(c: &Config) -> anyhow::Result<Self> {
         let dmd_enabled = c.bool_or("dmd.enabled", true);
+        let metrics_jsonl = c.str_or("train.metrics_jsonl", "");
         Ok(TrainConfig {
             artifact: c.str_or("model.artifact", "paper"),
             epochs: c.usize_or("train.epochs", 3000),
             seed: c.u64_or("train.seed", 0),
             dataset: c.require_str("data.path")?,
             adam: AdamParams::from_config(c),
+            sgd: SgdParams::from_config(c),
+            optimizer: c.str_or("train.optimizer", "adam"),
+            accel: AccelKind::parse(&c.str_or("accel.kind", "dmd"))?,
             dmd: dmd_enabled.then(|| DmdParams::from_config(c)).transpose()?,
             eval_every: c.usize_or("train.eval_every", 10),
             log_every: c.usize_or("train.log_every", 50),
             out_dir: c.str_or("train.out_dir", "runs/train"),
+            early_stop_patience: c.usize_or("train.early_stop_patience", 0),
+            early_stop_min_delta: c.f64_or("train.early_stop_min_delta", 0.0),
+            checkpoint_every: c.usize_or("train.checkpoint_every", 0),
+            metrics_jsonl: (!metrics_jsonl.is_empty()).then_some(metrics_jsonl),
             record_weights: c.bool_or("train.record_weights", false),
             measure_dmd: c.bool_or("train.measure_dmd", true),
             parallel_dmd: c.bool_or("train.parallel_dmd", true),
@@ -382,6 +459,49 @@ epochs = 50
         let c = Config::parse("[dmd]\nenabled = false\n[data]\npath = \"x\"").unwrap();
         let tc = TrainConfig::from_config(&c).unwrap();
         assert!(tc.dmd.is_none());
+    }
+
+    #[test]
+    fn accelerator_selectable_from_toml() {
+        // default: dmd
+        let c = Config::parse("[data]\npath = \"x\"").unwrap();
+        assert_eq!(TrainConfig::from_config(&c).unwrap().accel, AccelKind::Dmd);
+        for (kind, want) in [
+            ("dmd", AccelKind::Dmd),
+            ("linefit", AccelKind::LineFit),
+            ("none", AccelKind::None),
+        ] {
+            let text = format!("[data]\npath = \"x\"\n[accel]\nkind = \"{kind}\"");
+            let tc = TrainConfig::from_config(&Config::parse(&text).unwrap()).unwrap();
+            assert_eq!(tc.accel, want);
+        }
+        let bad = Config::parse("[data]\npath = \"x\"\n[accel]\nkind = \"koopman\"").unwrap();
+        assert!(TrainConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn optimizer_and_observer_knobs_parse() {
+        let c = Config::parse(
+            "[data]\npath = \"x\"\n[train]\noptimizer = \"sgd_momentum\"\n\
+             early_stop_patience = 5\nearly_stop_min_delta = 0.001\n\
+             checkpoint_every = 10\nmetrics_jsonl = \"runs/m.jsonl\"\n\
+             [sgd]\nlr = 0.05\nmomentum = 0.8",
+        )
+        .unwrap();
+        let tc = TrainConfig::from_config(&c).unwrap();
+        assert_eq!(tc.optimizer, "sgd_momentum");
+        assert_eq!(tc.sgd.lr, 0.05);
+        assert_eq!(tc.sgd.momentum, 0.8);
+        assert_eq!(tc.early_stop_patience, 5);
+        assert_eq!(tc.early_stop_min_delta, 0.001);
+        assert_eq!(tc.checkpoint_every, 10);
+        assert_eq!(tc.metrics_jsonl.as_deref(), Some("runs/m.jsonl"));
+        // defaults
+        let d = TrainConfig::from_config(&Config::parse("[data]\npath = \"x\"").unwrap()).unwrap();
+        assert_eq!(d.optimizer, "adam");
+        assert_eq!(d.early_stop_patience, 0);
+        assert_eq!(d.checkpoint_every, 0);
+        assert!(d.metrics_jsonl.is_none());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use crate::config::{SweepConfig, TrainConfig};
 use crate::data::Dataset;
 use crate::runtime::Runtime;
-use crate::trainer::Trainer;
+use crate::trainer::TrainSession;
 use crate::util::csv::CsvWriter;
 use std::path::Path;
 
@@ -87,8 +87,8 @@ fn run_cell(
         .ok_or_else(|| anyhow::anyhow!("sweep requires dmd.enabled"))?;
     dmd.m = m;
     dmd.s = s;
-    let mut trainer = Trainer::new(&runtime, cfg)?;
-    let report = trainer.run(ds)?;
+    let mut session = TrainSession::new(&runtime, cfg)?;
+    let report = session.run(ds)?;
     Ok(SweepCell {
         m,
         s,

@@ -193,6 +193,12 @@ impl SnapshotBuffer {
         self.steps.last().copied()
     }
 
+    /// Optimizer step of each resident column, oldest first (aligned
+    /// with [`SnapshotBuffer::columns`]) — checkpoint export reads this.
+    pub fn steps(&self) -> &[usize] {
+        &self.steps
+    }
+
     /// Snapshot dimension n (0 when empty).
     pub fn dim(&self) -> usize {
         self.cols.first().map_or(0, |c| c.len())

@@ -8,13 +8,19 @@
 //!   serve    — HTTP inference server over a checkpoint model registry
 //!   info     — show artifacts / dataset / architecture details
 
+// Same stylistic-lint posture as the library crate (see lib.rs): CI
+// runs clippy with -D warnings.
+#![allow(clippy::uninlined_format_args, clippy::collapsible_if)]
+
 use dmdtrain::cli::Args;
 use dmdtrain::config::{Config, DatagenConfig, ServeConfig, SweepConfig, TrainConfig, Value};
 use dmdtrain::coordinator::run_sweep;
 use dmdtrain::data::Dataset;
 use dmdtrain::pde::generate_dataset;
 use dmdtrain::runtime::Runtime;
-use dmdtrain::trainer::{load_params, save_params, Trainer};
+use dmdtrain::trainer::{
+    load_params, load_train_state, save_params, save_train_state, SessionBuilder,
+};
 use dmdtrain::util;
 
 const USAGE: &str = "\
@@ -25,7 +31,11 @@ USAGE: dmdtrain <subcommand> [--flags]
   datagen  --config <toml> [--samples N --obs N --out path --workers N]
   train    --config <toml> [--dmd true|false --m N --s N --epochs N
                             --artifact NAME --dataset PATH --seed N
-                            --out-dir DIR --save-checkpoint PATH]
+                            --optimizer adam|sgd|sgd_momentum
+                            --accel dmd|linefit|none
+                            --out-dir DIR --save-checkpoint PATH
+                            --resume PATH --metrics-jsonl PATH
+                            --early-stop-patience N --checkpoint-every N]
   sweep    --config <toml> [--workers N --epochs N --out PATH]
   predict  --checkpoint PATH --dataset PATH [--artifact NAME]
   serve    [--config <toml> --models DIR --host H --port N
@@ -78,6 +88,9 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("out-dir", "train.out_dir"),
         ("projection", "dmd.projection"),
         ("out", "data.path"),
+        ("optimizer", "train.optimizer"),
+        ("accel", "accel.kind"),
+        ("metrics-jsonl", "train.metrics_jsonl"),
     ] {
         if let Some(v) = args.str_opt(flag) {
             cfg.set(key, Value::Str(v.to_string()));
@@ -93,6 +106,8 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("workers", "sweep.workers"),
         ("eval-every", "train.eval_every"),
         ("log-every", "train.log_every"),
+        ("early-stop-patience", "train.early_stop_patience"),
+        ("checkpoint-every", "train.checkpoint_every"),
     ] {
         if let Some(v) = args.str_opt(flag) {
             cfg.set(key, Value::Int(v.parse()?));
@@ -129,15 +144,36 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let ds = Dataset::load(&tc.dataset)?;
     let runtime = Runtime::cpu(Runtime::default_artifact_dir())?;
     eprintln!(
-        "train: artifact={} dmd={:?} epochs={} platform={}",
+        "train: artifact={} optimizer={} accel={:?} dmd={:?} epochs={} platform={}",
         tc.artifact,
+        tc.optimizer,
+        tc.accel,
         tc.dmd.as_ref().map(|d| (d.m, d.s)),
         tc.epochs,
         runtime.platform()
     );
     let out_dir = tc.out_dir.clone();
-    let mut trainer = Trainer::new(&runtime, tc)?;
-    let report = trainer.run(&ds)?;
+    let mut session = SessionBuilder::new(&runtime, tc).build()?;
+    if let Some(ckpt) = args.str_opt("resume") {
+        let params = load_params(ckpt)?;
+        let sidecar = format!("{ckpt}.resume");
+        if std::path::Path::new(&sidecar).exists() {
+            let st = load_train_state(&sidecar)?;
+            session.restore(params, &st)?;
+            let at = session.state();
+            eprintln!(
+                "resumed {ckpt} at epoch {} (step {}; training trajectory continues \
+                 bit-identically, observer state restarts)",
+                at.epoch, at.step
+            );
+        } else {
+            session.resume_from(params, 0)?;
+            eprintln!(
+                "warm start from {ckpt} (no .resume sidecar: optimizer and RNG state are fresh)"
+            );
+        }
+    }
+    let report = session.run(&ds)?;
 
     std::fs::create_dir_all(&out_dir)?;
     report
@@ -149,18 +185,24 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     std::fs::write(format!("{out_dir}/profile.txt"), report.profile.table())?;
     if let Some(path) = args.str_opt("save-checkpoint") {
         save_params(&report.final_params, path)?;
+        // Resume sidecar: counters, RNG streams, optimizer moments and
+        // snapshot buffers — `train --resume <path>` continues
+        // bit-identically from here.
+        save_train_state(format!("{path}.resume"), &session.export_state()?)?;
         // Sidecar with arch + dataset scaling: `dmdtrain serve` picks it
         // up so the model answers in physical units.
         let arch = dmdtrain::serve::registry::infer_arch(&report.final_params)?;
         dmdtrain::serve::registry::write_sidecar(path, &arch, Some(&ds.scaling))?;
     }
     println!(
-        "final train MSE {}  test MSE {}  ({} epochs in {:.1}s, {} DMD events, mean rel {} train / {} test)",
+        "final train MSE {}  test MSE {}  ({} epochs in {:.1}s{}, {} {} events, mean rel {} train / {} test)",
         util::fmt_f64(report.history.final_train().unwrap_or(f64::NAN)),
         util::fmt_f64(report.history.final_test().unwrap_or(f64::NAN)),
         report.epochs_run,
         report.wall_secs,
+        if report.stopped_early { ", early stop" } else { "" },
         report.dmd_stats.events.len(),
+        report.accel.name,
         util::fmt_f64(report.dmd_stats.mean_rel_train()),
         util::fmt_f64(report.dmd_stats.mean_rel_test()),
     );

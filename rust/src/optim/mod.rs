@@ -3,11 +3,18 @@
 //! extract/assign overhead the paper measured in TensorFlow (their 1.41×).
 //!
 //! * [`Adam`] — the paper's optimizer.
-//! * [`Sgd`] — SGD + momentum (ablation baseline).
+//! * [`Sgd`] — plain gradient descent (the paper's "plain GD" regime).
+//! * [`SgdMomentum`] — classical heavy-ball momentum (ablation baseline).
 //! * [`WeightExtrapolation`] — per-weight line-fit extrapolation, the
 //!   related-work baseline (§2, Kamarthi & Pittner style) that DMD is
 //!   claimed to beat because per-weight fits "break the coherent
-//!   dynamics" — reproduced in `benches/baseline_extrapolation.rs`.
+//!   dynamics" — now a first-class accelerator
+//!   (`trainer::accel::LineFitAccelerator`).
+//!
+//! The optimizer is chosen by name in `TrainConfig`
+//! (`train.optimizer = "adam" | "sgd" | "sgd_momentum"`) and built via
+//! [`from_name`]; every optimizer can export/import its full state
+//! ([`OptimizerState`]) so resumed training is bit-identical.
 
 mod adam;
 mod extrapolate;
@@ -15,8 +22,9 @@ mod sgd;
 
 pub use adam::Adam;
 pub use extrapolate::WeightExtrapolation;
-pub use sgd::Sgd;
+pub use sgd::{Sgd, SgdMomentum};
 
+use crate::config::{AdamParams, SgdParams};
 use crate::tensor::Tensor;
 
 /// A first-order optimizer over a flat list of parameter tensors.
@@ -30,4 +38,57 @@ pub trait Optimizer {
     fn reset(&mut self);
 
     fn name(&self) -> &'static str;
+
+    /// Snapshot the full internal state for checkpointing. Slot layout
+    /// is optimizer-specific (Adam: `[m, v]`; momentum: `[velocity]`);
+    /// each slot aligns with the parameter-tensor list.
+    fn export_state(&self) -> OptimizerState;
+
+    /// Restore a state produced by [`Optimizer::export_state`] on the
+    /// same optimizer kind. Errors on a kind mismatch.
+    fn import_state(&mut self, st: &OptimizerState) -> anyhow::Result<()>;
+}
+
+/// Serializable optimizer state (see [`Optimizer::export_state`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimizerState {
+    /// Optimizer name the state belongs to.
+    pub kind: String,
+    /// Step counter (Adam's bias-correction `t`; 0 for stateless kinds).
+    pub t: u64,
+    /// Per-parameter f32 state vectors, grouped by slot.
+    pub slots: Vec<Vec<Vec<f32>>>,
+}
+
+/// Build an optimizer by config name.
+pub fn from_name(
+    name: &str,
+    adam: AdamParams,
+    sgd: SgdParams,
+) -> anyhow::Result<Box<dyn Optimizer>> {
+    match name {
+        "adam" => Ok(Box::new(Adam::new(adam))),
+        "sgd" => Ok(Box::new(Sgd::new(sgd.lr))),
+        "sgd_momentum" => Ok(Box::new(SgdMomentum::new(sgd.lr, sgd.momentum))),
+        other => anyhow::bail!(
+            "unknown optimizer '{other}' (expected adam, sgd or sgd_momentum)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        let (a, s) = (AdamParams::default(), SgdParams::default());
+        assert_eq!(from_name("adam", a, s).unwrap().name(), "adam");
+        assert_eq!(from_name("sgd", a, s).unwrap().name(), "sgd");
+        assert_eq!(
+            from_name("sgd_momentum", a, s).unwrap().name(),
+            "sgd_momentum"
+        );
+        assert!(from_name("lbfgs", a, s).is_err());
+    }
 }

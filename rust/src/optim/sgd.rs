@@ -1,17 +1,66 @@
-//! SGD with classical momentum (ablation baseline).
+//! Plain SGD and SGD with classical momentum.
+//!
+//! `Sgd` is the paper's "plain gradient descent" regime (no state at
+//! all); `SgdMomentum` is the classical heavy-ball ablation baseline.
+//! Both are selectable by name from `TrainConfig` (`train.optimizer`).
 
-use super::Optimizer;
+use super::{Optimizer, OptimizerState};
 use crate::tensor::Tensor;
 
+/// Plain gradient descent: `p ← p − lr·g`. Stateless.
 pub struct Sgd {
+    lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Self {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        let lr = self.lr as f32;
+        for (param, grad) in params.iter_mut().zip(grads) {
+            let pd = param.data_mut();
+            let gd = grad.data();
+            for j in 0..pd.len() {
+                pd[j] -= lr * gd[j];
+            }
+        }
+    }
+
+    fn reset(&mut self) {}
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn export_state(&self) -> OptimizerState {
+        OptimizerState {
+            kind: "sgd".to_string(),
+            t: 0,
+            slots: Vec::new(),
+        }
+    }
+
+    fn import_state(&mut self, st: &OptimizerState) -> anyhow::Result<()> {
+        anyhow::ensure!(st.kind == "sgd", "state is for '{}', not sgd", st.kind);
+        Ok(())
+    }
+}
+
+/// SGD with classical momentum: `v ← μv − lr·g; p ← p + v`.
+pub struct SgdMomentum {
     lr: f64,
     momentum: f64,
     velocity: Vec<Vec<f32>>,
 }
 
-impl Sgd {
+impl SgdMomentum {
     pub fn new(lr: f64, momentum: f64) -> Self {
-        Sgd {
+        SgdMomentum {
             lr,
             momentum,
             velocity: Vec::new(),
@@ -19,8 +68,9 @@ impl Sgd {
     }
 }
 
-impl Optimizer for Sgd {
+impl Optimizer for SgdMomentum {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
         if self.velocity.len() != params.len() {
             self.velocity = params.iter().map(|p| vec![0.0; p.len()]).collect();
         }
@@ -42,7 +92,26 @@ impl Optimizer for Sgd {
     }
 
     fn name(&self) -> &'static str {
-        "sgd"
+        "sgd_momentum"
+    }
+
+    fn export_state(&self) -> OptimizerState {
+        OptimizerState {
+            kind: "sgd_momentum".to_string(),
+            t: 0,
+            slots: vec![self.velocity.clone()],
+        }
+    }
+
+    fn import_state(&mut self, st: &OptimizerState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            st.kind == "sgd_momentum",
+            "state is for '{}', not sgd_momentum",
+            st.kind
+        );
+        anyhow::ensure!(st.slots.len() == 1, "sgd_momentum expects 1 state slot");
+        self.velocity = st.slots[0].clone();
+        Ok(())
     }
 }
 
@@ -54,7 +123,7 @@ mod tests {
     fn plain_sgd_step() {
         let mut params = vec![Tensor::from_vec(1, 2, vec![1.0, 2.0])];
         let grads = vec![Tensor::from_vec(1, 2, vec![0.5, -0.5])];
-        let mut opt = Sgd::new(0.1, 0.0);
+        let mut opt = Sgd::new(0.1);
         opt.step(&mut params, &grads);
         assert!((params[0].get(0, 0) - 0.95).abs() < 1e-7);
         assert!((params[0].get(0, 1) - 2.05).abs() < 1e-7);
@@ -64,7 +133,7 @@ mod tests {
     fn momentum_accumulates() {
         let mut params = vec![Tensor::from_vec(1, 1, vec![0.0])];
         let grads = vec![Tensor::from_vec(1, 1, vec![1.0])];
-        let mut opt = Sgd::new(0.1, 0.9);
+        let mut opt = SgdMomentum::new(0.1, 0.9);
         opt.step(&mut params, &grads); // v = -0.1, p = -0.1
         opt.step(&mut params, &grads); // v = -0.19, p = -0.29
         assert!((params[0].get(0, 0) + 0.29).abs() < 1e-6);
@@ -73,11 +142,34 @@ mod tests {
     #[test]
     fn converges_on_quadratic() {
         let mut params = vec![Tensor::from_vec(1, 1, vec![4.0])];
-        let mut opt = Sgd::new(0.05, 0.9);
+        let mut opt = SgdMomentum::new(0.05, 0.9);
         for _ in 0..300 {
             let grads = params.clone();
             opt.step(&mut params, &grads);
         }
         assert!(params[0].get(0, 0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn momentum_state_roundtrip_is_exact() {
+        let grads = vec![Tensor::from_vec(1, 2, vec![1.0, -2.0])];
+        let mut a = SgdMomentum::new(0.1, 0.9);
+        let mut pa = vec![Tensor::from_vec(1, 2, vec![0.3, 0.7])];
+        for _ in 0..5 {
+            a.step(&mut pa, &grads);
+        }
+        let st = a.export_state();
+        let mut b = SgdMomentum::new(0.1, 0.9);
+        b.import_state(&st).unwrap();
+        let mut pb = pa.clone();
+        a.step(&mut pa, &grads);
+        b.step(&mut pb, &grads);
+        assert_eq!(pa[0].data(), pb[0].data());
+    }
+
+    #[test]
+    fn import_rejects_wrong_kind() {
+        let st = Sgd::new(0.1).export_state();
+        assert!(SgdMomentum::new(0.1, 0.9).import_state(&st).is_err());
     }
 }

@@ -1,0 +1,803 @@
+//! Pluggable training accelerators — the jump strategy of Algorithm 1 as
+//! a swappable component.
+//!
+//! The paper's loop is one instance of a general pattern: backprop bursts
+//! punctuated by a surrogate jump. Related work swaps the surrogate —
+//! correlation-mode extrapolation (arXiv 2212.09040), Koopman-mode
+//! analysis of the training dynamics (arXiv 2006.11765), per-weight line
+//! fits (Kamarthi & Pittner) — so the `TrainSession` only knows the
+//! protocol: [`Accelerator::observe`] each optimizer step,
+//! [`Accelerator::maybe_jump`] when [`Accelerator::ready`], and
+//! [`Accelerator::report`] at the end.
+//!
+//! * [`DmdAccelerator`] — the paper's per-layer DMD extrapolation with
+//!   the §4/conclusion extensions: under-relaxation `ω`, stochastic
+//!   noise re-injection, and the accept-worse rejection guard.
+//! * [`LineFitAccelerator`] — per-weight OLS line fit (the E10 baseline
+//!   promoted to a first-class strategy), same cadence and jump policy.
+//! * [`NoAccel`] — plain backprop (the paper's "without DMD").
+//!
+//! Every jump decision draws from the RNG and measures through the
+//! closures handed in via [`JumpCtx`], so a DMD run through the session
+//! is bit-identical to the pre-redesign monolithic trainer loop
+//! (asserted in `tests/session_equivalence.rs`).
+
+use crate::config::DmdParams;
+use crate::dmd::{extrapolate_all_layers, SnapshotBuffer};
+use crate::metrics::DmdEvent;
+use crate::model::Arch;
+use crate::optim::WeightExtrapolation;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::util::timer::Profile;
+
+/// One exported snapshot column: (optimizer step, flattened layer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotCol {
+    pub step: u64,
+    pub data: Vec<f32>,
+}
+
+/// Everything a jump needs from the session: the epoch (for event
+/// records), the RNG (noise re-injection), the profile, and a loss
+/// evaluator for the measurement / rejection guard.
+pub struct JumpCtx<'a> {
+    pub epoch: usize,
+    /// Evaluate train/test MSE before and after every jump (the Fig 3
+    /// relative-improvement metric). The guard measures regardless.
+    pub measure_enabled: bool,
+    pub rng: &'a mut Rng,
+    pub profile: &'a mut Profile,
+    /// `params → (train MSE, test MSE)` at those parameters.
+    pub measure: &'a mut dyn FnMut(&[Tensor]) -> anyhow::Result<(f64, f64)>,
+}
+
+/// Aggregate accelerator outcome for the training report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccelReport {
+    pub name: &'static str,
+    /// Jump events fired.
+    pub events: usize,
+    /// Per-layer extrapolations written back across all events.
+    pub accepted_layers: usize,
+    /// Events rolled back by the accept-worse guard.
+    pub rejected_events: usize,
+}
+
+/// A training accelerator: observes the post-step weight stream and
+/// occasionally rewrites the parameters with a surrogate extrapolation.
+pub trait Accelerator {
+    fn name(&self) -> &'static str;
+
+    /// Record the parameter state after optimizer step `step`.
+    fn observe(&mut self, step: usize, arch: &Arch, params: &[Tensor], profile: &mut Profile);
+
+    /// True when the next [`Accelerator::maybe_jump`] will fire.
+    fn ready(&self) -> bool;
+
+    /// Attempt one acceleration jump; returns the event record if one
+    /// fired (whether or not the guard later rolled it back).
+    fn maybe_jump(
+        &mut self,
+        arch: &Arch,
+        params: &mut Vec<Tensor>,
+        ctx: &mut JumpCtx<'_>,
+    ) -> anyhow::Result<Option<DmdEvent>>;
+
+    /// Aggregate outcome so far.
+    fn report(&self) -> AccelReport;
+
+    /// Export resident snapshot columns for a resume checkpoint
+    /// (empty for stateless accelerators).
+    fn export_snapshots(&self) -> Vec<Vec<SnapshotCol>> {
+        Vec::new()
+    }
+
+    /// Restore snapshot columns exported by
+    /// [`Accelerator::export_snapshots`]. The streaming Gram is rebuilt
+    /// push-by-push, bit-identical to the original fill.
+    fn import_snapshots(
+        &mut self,
+        _arch: &Arch,
+        snaps: &[Vec<SnapshotCol>],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snaps.iter().all(|l| l.is_empty()),
+            "checkpoint carries snapshots but accelerator '{}' keeps none",
+            self.name()
+        );
+        Ok(())
+    }
+}
+
+/// The shared post-solve jump policy: under-relaxation
+/// `w ← w_m + ω·(w_prop − w_m)` and optional stochastic-spread
+/// re-injection `w += N(0, std(w_prop − w_m))` (paper §4 / conclusion).
+#[derive(Clone, Copy, Debug)]
+pub struct JumpPolicy {
+    pub relaxation: f64,
+    pub noise_reinject: bool,
+}
+
+impl JumpPolicy {
+    pub fn from_params(d: &DmdParams) -> Self {
+        JumpPolicy {
+            relaxation: d.relaxation,
+            noise_reinject: d.noise_reinject,
+        }
+    }
+
+    /// Apply the policy to a proposed flat update. `last` is the most
+    /// recent snapshot `w_m`; the noise spread is measured against the
+    /// *raw* proposal even when the jump itself is relaxed.
+    pub fn blend(&self, proposed: &[f32], last: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let omega = self.relaxation.clamp(0.0, 1.0) as f32;
+        let mut w: Vec<f32> = if omega < 1.0 {
+            // w ← w_m + ω (w_prop − w_m)
+            proposed
+                .iter()
+                .zip(last)
+                .map(|(&d, &l)| l + omega * (d - l))
+                .collect()
+        } else {
+            proposed.to_vec()
+        };
+        if self.noise_reinject {
+            // restore the stochastic spread the surrogate filtered out:
+            // N(0, std(w_prop − w_m)) per layer
+            let n = w.len() as f64;
+            let var = proposed
+                .iter()
+                .zip(last)
+                .map(|(&d, &l)| ((d - l) as f64).powi(2))
+                .sum::<f64>()
+                / n.max(1.0);
+            let std = var.sqrt();
+            for v in &mut w {
+                *v += (std * rng.normal()) as f32;
+            }
+        }
+        w
+    }
+}
+
+fn snapshot_buffers(
+    snaps: &[Vec<SnapshotCol>],
+    buffers: &mut [SnapshotBuffer],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        snaps.len() == buffers.len(),
+        "checkpoint has {} snapshot layers, accelerator has {}",
+        snaps.len(),
+        buffers.len()
+    );
+    for (buf, layer) in buffers.iter_mut().zip(snaps) {
+        anyhow::ensure!(
+            layer.len() < buf.capacity(),
+            "checkpoint snapshot layer holds {} columns, capacity is {}",
+            layer.len(),
+            buf.capacity()
+        );
+        buf.clear();
+        for col in layer {
+            buf.push(col.step as usize, &col.data);
+        }
+    }
+    Ok(())
+}
+
+fn export_buffers(buffers: &[SnapshotBuffer]) -> Vec<Vec<SnapshotCol>> {
+    buffers
+        .iter()
+        .map(|buf| {
+            buf.steps()
+                .iter()
+                .zip(buf.columns())
+                .map(|(&step, col)| SnapshotCol {
+                    step: step as u64,
+                    data: col.to_vec(),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Record a snapshot of every layer's (w, b) pair — copied straight into
+/// recycled snapshot columns (no per-step `flatten_layer` allocation).
+fn record_layers(buffers: &mut [SnapshotBuffer], arch: &Arch, params: &[Tensor], step: usize) {
+    for layer in 0..arch.num_layers() {
+        let w = &params[2 * layer];
+        let b = &params[2 * layer + 1];
+        buffers[layer].push_parts(step, &[w.data(), b.data()]);
+    }
+}
+
+/// The jump scaffolding shared by every measuring accelerator: optional
+/// before/after loss measurement, the accept-worse rollback, solve
+/// timing and stats accounting. `solve` performs the surrogate
+/// extrapolation + write-back (and must clear its buffers — the clear
+/// is part of the timed solve, as in the original loop), returning
+/// (written-back layers, total rank).
+fn run_guarded_jump(
+    guard: Option<f64>,
+    stats: &mut AccelReport,
+    params: &mut Vec<Tensor>,
+    ctx: &mut JumpCtx<'_>,
+    solve: impl FnOnce(&mut Vec<Tensor>, &mut Rng, &mut Profile) -> (usize, usize),
+) -> anyhow::Result<DmdEvent> {
+    let need_measure = ctx.measure_enabled || guard.is_some();
+    let (before_tr, before_te) = if need_measure {
+        ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    // keep a copy for the optional rejection guard (not in the paper;
+    // the paper's own future-work note asks for "annealing or
+    // relaxation")
+    let saved = guard.map(|_| params.clone());
+    let t0 = std::time::Instant::now();
+    let (accepted, total_rank) = solve(params, &mut *ctx.rng, &mut *ctx.profile);
+    let solve_secs = t0.elapsed().as_secs_f64();
+
+    let (mut rel_train, mut rel_test) = (f64::NAN, f64::NAN);
+    let mut rejected = false;
+    if need_measure {
+        let (after_tr, after_te) =
+            ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?;
+        rel_train = after_tr / before_tr;
+        rel_test = after_te / before_te;
+        if let (Some(factor), Some(saved)) = (guard, saved) {
+            if !(after_tr <= before_tr * factor) {
+                *params = saved; // reject the jump
+                rel_train = 1.0;
+                rel_test = 1.0;
+                rejected = true;
+            }
+        }
+    }
+    stats.events += 1;
+    stats.accepted_layers += accepted;
+    stats.rejected_events += rejected as usize;
+    Ok(DmdEvent {
+        epoch: ctx.epoch,
+        rel_train,
+        rel_test,
+        solve_secs,
+        total_rank,
+    })
+}
+
+// ---------------------------------------------------------------------
+// DMD
+// ---------------------------------------------------------------------
+
+/// The paper's Algorithm-1 accelerator: per-layer snapshot buffers with
+/// streamed Grams, the parallel DMD solve, relaxation / noise / guard.
+pub struct DmdAccelerator {
+    dmd: DmdParams,
+    parallel: bool,
+    buffers: Vec<SnapshotBuffer>,
+    stats: AccelReport,
+}
+
+impl DmdAccelerator {
+    pub fn new(dmd: DmdParams, num_layers: usize, parallel: bool) -> Self {
+        let buffers = (0..num_layers).map(|_| SnapshotBuffer::new(dmd.m)).collect();
+        DmdAccelerator {
+            dmd,
+            parallel,
+            buffers,
+            stats: AccelReport {
+                name: "dmd",
+                ..Default::default()
+            },
+        }
+    }
+}
+
+impl Accelerator for DmdAccelerator {
+    fn name(&self) -> &'static str {
+        "dmd"
+    }
+
+    fn observe(&mut self, step: usize, arch: &Arch, params: &[Tensor], profile: &mut Profile) {
+        let buffers = &mut self.buffers;
+        profile.scope("snapshot_record", || {
+            record_layers(buffers, arch, params, step);
+        });
+    }
+
+    fn ready(&self) -> bool {
+        self.buffers[0].is_full()
+    }
+
+    fn maybe_jump(
+        &mut self,
+        arch: &Arch,
+        params: &mut Vec<Tensor>,
+        ctx: &mut JumpCtx<'_>,
+    ) -> anyhow::Result<Option<DmdEvent>> {
+        if !self.ready() {
+            return Ok(None);
+        }
+        let DmdAccelerator {
+            dmd,
+            parallel,
+            buffers,
+            stats,
+        } = self;
+        let policy = JumpPolicy::from_params(dmd);
+        let parallel = *parallel;
+        let ev = run_guarded_jump(
+            dmd.accept_worse_factor,
+            stats,
+            params,
+            ctx,
+            |params, rng, profile| {
+                let outcomes = profile.scope("dmd_solve", || {
+                    extrapolate_all_layers(buffers, dmd, dmd.s, parallel)
+                });
+                let mut accepted = 0usize;
+                let mut total_rank = 0usize;
+                profile.scope("dmd_assign", || {
+                    for out in &outcomes {
+                        match &out.result {
+                            Ok(o) => {
+                                let last = buffers[out.layer].last().expect("full buffer");
+                                let w = policy.blend(&o.new_weights, last, rng);
+                                arch.unflatten_layer(params, out.layer, &w);
+                                accepted += 1;
+                                total_rank += o.rank;
+                            }
+                            Err(_) => {
+                                // per-layer failure (degenerate
+                                // snapshots): keep the backprop
+                                // weights for that layer
+                            }
+                        }
+                    }
+                });
+                for buf in buffers.iter_mut() {
+                    buf.clear();
+                }
+                (accepted, total_rank)
+            },
+        )?;
+        Ok(Some(ev))
+    }
+
+    fn report(&self) -> AccelReport {
+        self.stats
+    }
+
+    fn export_snapshots(&self) -> Vec<Vec<SnapshotCol>> {
+        export_buffers(&self.buffers)
+    }
+
+    fn import_snapshots(
+        &mut self,
+        _arch: &Arch,
+        snaps: &[Vec<SnapshotCol>],
+    ) -> anyhow::Result<()> {
+        snapshot_buffers(snaps, &mut self.buffers)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-weight line fit (E10 baseline, promoted)
+// ---------------------------------------------------------------------
+
+/// Per-weight OLS line-fit extrapolation at the DMD cadence: fit each
+/// weight's trajectory over the last `m` snapshots, extrapolate `s`
+/// steps ahead. Shares the relaxation / noise / guard policy so the two
+/// strategies differ only in the surrogate.
+pub struct LineFitAccelerator {
+    dmd: DmdParams,
+    buffers: Vec<SnapshotBuffer>,
+    stats: AccelReport,
+}
+
+impl LineFitAccelerator {
+    pub fn new(dmd: DmdParams, num_layers: usize) -> Self {
+        // without_gram: the line fit never reads WᵀW, so it must not pay
+        // the streaming-Gram cost the DMD path amortizes
+        let buffers = (0..num_layers)
+            .map(|_| SnapshotBuffer::without_gram(dmd.m))
+            .collect();
+        LineFitAccelerator {
+            dmd,
+            buffers,
+            stats: AccelReport {
+                name: "linefit",
+                ..Default::default()
+            },
+        }
+    }
+}
+
+impl Accelerator for LineFitAccelerator {
+    fn name(&self) -> &'static str {
+        "linefit"
+    }
+
+    fn observe(&mut self, step: usize, arch: &Arch, params: &[Tensor], profile: &mut Profile) {
+        let buffers = &mut self.buffers;
+        profile.scope("snapshot_record", || {
+            record_layers(buffers, arch, params, step);
+        });
+    }
+
+    fn ready(&self) -> bool {
+        self.buffers[0].is_full()
+    }
+
+    fn maybe_jump(
+        &mut self,
+        arch: &Arch,
+        params: &mut Vec<Tensor>,
+        ctx: &mut JumpCtx<'_>,
+    ) -> anyhow::Result<Option<DmdEvent>> {
+        if !self.ready() {
+            return Ok(None);
+        }
+        let LineFitAccelerator {
+            dmd,
+            buffers,
+            stats,
+        } = self;
+        let policy = JumpPolicy::from_params(dmd);
+        let s = dmd.s;
+        let ev = run_guarded_jump(
+            dmd.accept_worse_factor,
+            stats,
+            params,
+            ctx,
+            |params, rng, profile| {
+                let mut accepted = 0usize;
+                profile.scope("linefit_solve", || {
+                    for (layer, buf) in buffers.iter().enumerate() {
+                        if let Ok(new_w) = WeightExtrapolation::extrapolate(buf, s) {
+                            let last = buf.last().expect("full buffer");
+                            let w = policy.blend(&new_w, last, rng);
+                            arch.unflatten_layer(params, layer, &w);
+                            accepted += 1;
+                        }
+                    }
+                });
+                for buf in buffers.iter_mut() {
+                    buf.clear();
+                }
+                // a line fit retains slope + intercept per weight —
+                // report 2 "modes" per written-back layer
+                (accepted, 2 * accepted)
+            },
+        )?;
+        Ok(Some(ev))
+    }
+
+    fn report(&self) -> AccelReport {
+        self.stats
+    }
+
+    fn export_snapshots(&self) -> Vec<Vec<SnapshotCol>> {
+        export_buffers(&self.buffers)
+    }
+
+    fn import_snapshots(
+        &mut self,
+        _arch: &Arch,
+        snaps: &[Vec<SnapshotCol>],
+    ) -> anyhow::Result<()> {
+        snapshot_buffers(snaps, &mut self.buffers)
+    }
+}
+
+// ---------------------------------------------------------------------
+// None
+// ---------------------------------------------------------------------
+
+/// Plain backprop: never observes, never jumps.
+pub struct NoAccel;
+
+impl Accelerator for NoAccel {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn observe(&mut self, _step: usize, _arch: &Arch, _params: &[Tensor], _profile: &mut Profile) {}
+
+    fn ready(&self) -> bool {
+        false
+    }
+
+    fn maybe_jump(
+        &mut self,
+        _arch: &Arch,
+        _params: &mut Vec<Tensor>,
+        _ctx: &mut JumpCtx<'_>,
+    ) -> anyhow::Result<Option<DmdEvent>> {
+        Ok(None)
+    }
+
+    fn report(&self) -> AccelReport {
+        AccelReport {
+            name: "none",
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Tiny arch (1 layer, 1→2: 4 flattened components) whose weight
+    /// trajectory the tests decay geometrically toward 0.
+    fn geometric_setup(m: usize) -> (Arch, Vec<Tensor>, DmdAccelerator, Profile) {
+        let arch = Arch::new(vec![1, 2]).unwrap();
+        let params = vec![
+            Tensor::from_vec(1, 2, vec![1.0, 2.0]),
+            Tensor::from_vec(1, 2, vec![0.5, -1.0]),
+        ];
+        let dmd = DmdParams {
+            m,
+            s: 10,
+            ..Default::default()
+        };
+        let accel = DmdAccelerator::new(dmd, arch.num_layers(), false);
+        (arch, params, accel, Profile::new())
+    }
+
+    fn decay(params: &mut [Tensor], ratio: f32) {
+        for p in params.iter_mut() {
+            for v in p.data_mut() {
+                *v *= ratio;
+            }
+        }
+    }
+
+    fn fill(
+        accel: &mut dyn Accelerator,
+        arch: &Arch,
+        params: &mut Vec<Tensor>,
+        profile: &mut Profile,
+        m: usize,
+    ) {
+        for step in 1..=m {
+            decay(params, 0.9);
+            accel.observe(step, arch, &params[..], profile);
+        }
+        assert!(accel.ready());
+    }
+
+    fn noop_measure() -> impl FnMut(&[Tensor]) -> anyhow::Result<(f64, f64)> {
+        |_: &[Tensor]| Ok((1.0, 1.0))
+    }
+
+    #[test]
+    fn relaxation_zero_makes_jump_a_noop() {
+        let (arch, mut params, mut accel, mut profile) = geometric_setup(4);
+        accel.dmd.relaxation = 0.0;
+        fill(&mut accel, &arch, &mut params, &mut profile, 4);
+        let before: Vec<Vec<f32>> = params.iter().map(|p| p.data().to_vec()).collect();
+        let mut rng = Rng::new(0);
+        let mut measure = noop_measure();
+        let mut ctx = JumpCtx {
+            epoch: 0,
+            measure_enabled: false,
+            rng: &mut rng,
+            profile: &mut profile,
+            measure: &mut measure,
+        };
+        let ev = accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap();
+        assert!(ev.is_some(), "full buffer must fire");
+        // ω = 0 ⇒ w ← w_m exactly: parameters unchanged to the bit
+        for (p, b) in params.iter().zip(&before) {
+            assert_eq!(p.data(), &b[..], "ω=0 jump moved the weights");
+        }
+        // buffers cleared for the next burst
+        assert!(!accel.ready());
+    }
+
+    #[test]
+    fn relaxation_half_lands_between_noop_and_full() {
+        let run = |omega: f64| -> Vec<f32> {
+            let (arch, mut params, mut accel, mut profile) = geometric_setup(4);
+            accel.dmd.relaxation = omega;
+            fill(&mut accel, &arch, &mut params, &mut profile, 4);
+            let mut rng = Rng::new(0);
+            let mut measure = noop_measure();
+            let mut ctx = JumpCtx {
+                epoch: 0,
+                measure_enabled: false,
+                rng: &mut rng,
+                profile: &mut profile,
+                measure: &mut measure,
+            };
+            accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().unwrap();
+            params.iter().flat_map(|p| p.data().to_vec()).collect()
+        };
+        let w0 = run(0.0);
+        let w_half = run(0.5);
+        let w1 = run(1.0);
+        for ((a, h), b) in w0.iter().zip(&w_half).zip(&w1) {
+            // exact by construction: h = a + 0.5 (b − a) in f32
+            let want = a + 0.5 * (b - a);
+            assert!((h - want).abs() < 1e-6, "ω=0.5 blend off: {h} vs {want}");
+        }
+        assert_ne!(w0, w1, "full jump should move the weights");
+    }
+
+    #[test]
+    fn noise_reinjection_is_deterministic_and_perturbs() {
+        let run = |noise: bool, seed: u64| -> Vec<f32> {
+            let (arch, mut params, mut accel, mut profile) = geometric_setup(4);
+            accel.dmd.noise_reinject = noise;
+            fill(&mut accel, &arch, &mut params, &mut profile, 4);
+            let mut rng = Rng::new(seed);
+            let mut measure = noop_measure();
+            let mut ctx = JumpCtx {
+                epoch: 0,
+                measure_enabled: false,
+                rng: &mut rng,
+                profile: &mut profile,
+                measure: &mut measure,
+            };
+            accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().unwrap();
+            params.iter().flat_map(|p| p.data().to_vec()).collect()
+        };
+        let clean = run(false, 7);
+        let noisy_a = run(true, 7);
+        let noisy_b = run(true, 7);
+        let noisy_c = run(true, 8);
+        assert_ne!(clean, noisy_a, "noise re-injection must perturb the jump");
+        assert_eq!(noisy_a, noisy_b, "same seed ⇒ same noise");
+        assert_ne!(noisy_a, noisy_c, "different seed ⇒ different noise");
+        assert!(noisy_a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn accept_worse_guard_rolls_back_bad_jumps() {
+        let (arch, mut params, mut accel, mut profile) = geometric_setup(4);
+        accel.dmd.accept_worse_factor = Some(1.0);
+        fill(&mut accel, &arch, &mut params, &mut profile, 4);
+        let before: Vec<Vec<f32>> = params.iter().map(|p| p.data().to_vec()).collect();
+        let mut rng = Rng::new(0);
+        // scripted measurement: 1.0 before the jump, 10.0 after ⇒ reject
+        let calls = std::cell::Cell::new(0usize);
+        let mut measure = |_: &[Tensor]| -> anyhow::Result<(f64, f64)> {
+            calls.set(calls.get() + 1);
+            Ok(if calls.get() == 1 { (1.0, 1.0) } else { (10.0, 10.0) })
+        };
+        let mut ctx = JumpCtx {
+            epoch: 3,
+            measure_enabled: false,
+            rng: &mut rng,
+            profile: &mut profile,
+            measure: &mut measure,
+        };
+        let ev = accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().unwrap();
+        assert_eq!(calls.get(), 2, "guard must measure before and after");
+        assert_eq!(ev.rel_train, 1.0, "rejected events report rel = 1");
+        assert_eq!(ev.rel_test, 1.0);
+        for (p, b) in params.iter().zip(&before) {
+            assert_eq!(p.data(), &b[..], "guard did not restore the weights");
+        }
+        assert_eq!(accel.report().rejected_events, 1);
+    }
+
+    #[test]
+    fn accept_worse_guard_keeps_good_jumps() {
+        let (arch, mut params, mut accel, mut profile) = geometric_setup(4);
+        accel.dmd.accept_worse_factor = Some(1.0);
+        fill(&mut accel, &arch, &mut params, &mut profile, 4);
+        let before: Vec<Vec<f32>> = params.iter().map(|p| p.data().to_vec()).collect();
+        let mut rng = Rng::new(0);
+        let calls = std::cell::Cell::new(0usize);
+        let mut measure = |_: &[Tensor]| -> anyhow::Result<(f64, f64)> {
+            calls.set(calls.get() + 1);
+            Ok(if calls.get() == 1 { (1.0, 1.0) } else { (0.25, 0.5) })
+        };
+        let mut ctx = JumpCtx {
+            epoch: 0,
+            measure_enabled: false,
+            rng: &mut rng,
+            profile: &mut profile,
+            measure: &mut measure,
+        };
+        let ev = accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().unwrap();
+        assert_eq!(ev.rel_train, 0.25);
+        assert_eq!(ev.rel_test, 0.5);
+        let after: Vec<Vec<f32>> = params.iter().map(|p| p.data().to_vec()).collect();
+        assert_ne!(before, after, "accepted jump must keep the new weights");
+        assert_eq!(accel.report().rejected_events, 0);
+    }
+
+    #[test]
+    fn linefit_is_exact_on_linear_trajectories() {
+        // w(t) = a + b·t per component ⇒ the line fit lands exactly on
+        // w(m-1+s); geometric decay would overshoot (see optim tests).
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let mut params = vec![Tensor::from_vec(1, 1, vec![0.0]), Tensor::zeros(1, 1)];
+        let dmd = DmdParams {
+            m: 5,
+            s: 10,
+            ..Default::default()
+        };
+        let mut accel = LineFitAccelerator::new(dmd, arch.num_layers());
+        let mut profile = Profile::new();
+        for step in 0..5 {
+            params[0].data_mut()[0] = 1.0 + 0.5 * step as f32;
+            params[1].data_mut()[0] = -0.25 * step as f32;
+            accel.observe(step, &arch, &params, &mut profile);
+        }
+        let mut rng = Rng::new(0);
+        let mut measure = noop_measure();
+        let mut ctx = JumpCtx {
+            epoch: 0,
+            measure_enabled: false,
+            rng: &mut rng,
+            profile: &mut profile,
+            measure: &mut measure,
+        };
+        let ev = accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().unwrap();
+        // t_eval = m-1+s = 14
+        assert!((params[0].get(0, 0) - (1.0 + 0.5 * 14.0)).abs() < 1e-4);
+        assert!((params[1].get(0, 0) - (-0.25 * 14.0)).abs() < 1e-4);
+        assert_eq!(ev.total_rank, 2, "2 pseudo-modes per written-back layer");
+        assert!(!accel.ready(), "buffers cleared after the jump");
+    }
+
+    #[test]
+    fn noaccel_never_fires() {
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let mut params = vec![Tensor::from_vec(1, 1, vec![1.0]), Tensor::zeros(1, 1)];
+        let mut profile = Profile::new();
+        let mut accel = NoAccel;
+        for step in 0..10 {
+            accel.observe(step, &arch, &params, &mut profile);
+        }
+        assert!(!accel.ready());
+        let mut rng = Rng::new(0);
+        let mut measure = noop_measure();
+        let mut ctx = JumpCtx {
+            epoch: 0,
+            measure_enabled: true,
+            rng: &mut rng,
+            profile: &mut profile,
+            measure: &mut measure,
+        };
+        assert!(accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().is_none());
+        assert_eq!(profile.count("snapshot_record"), 0);
+    }
+
+    #[test]
+    fn snapshot_export_import_roundtrip() {
+        let (arch, mut params, mut accel, mut profile) = geometric_setup(5);
+        // partial fill: 3 of 5 snapshots resident
+        for step in 1..=3 {
+            decay(&mut params, 0.9);
+            accel.observe(step, &arch, &params, &mut profile);
+        }
+        let snaps = accel.export_snapshots();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].len(), 3);
+        assert_eq!(snaps[0][2].step, 3);
+        let mut fresh = DmdAccelerator::new(
+            DmdParams {
+                m: 5,
+                s: 10,
+                ..Default::default()
+            },
+            arch.num_layers(),
+            false,
+        );
+        fresh.import_snapshots(&arch, &snaps).unwrap();
+        assert_eq!(fresh.export_snapshots(), snaps);
+        // the rebuilt streaming Gram matches the original bit-for-bit
+        let a = accel.buffers[0].gram_full();
+        let b = fresh.buffers[0].gram_full();
+        assert_eq!(a.max_diff(&b), 0.0);
+    }
+}

@@ -9,12 +9,23 @@
 //! loader validates dimensions *before* allocating so the serve-side
 //! model registry fails loudly on corrupt or truncated artifacts
 //! instead of panicking or ballooning memory.
+//!
+//! Resume sidecars ([`TrainState`], magic `DMDR`) complement a `.dmdp`
+//! parameter file with everything else a `TrainSession` needs to
+//! continue bit-identically: step/epoch counters, both RNG streams
+//! (including the cached Box–Muller spare), the optimizer state slots,
+//! and the resident snapshot columns.
 
+use super::accel::SnapshotCol;
+use crate::optim::OptimizerState;
+use crate::rng::RngState;
 use crate::tensor::Tensor;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"DMDP";
+const RESUME_MAGIC: &[u8; 4] = b"DMDR";
+const RESUME_VERSION: u32 = 1;
 /// Upper bounds making corrupt headers fail fast: no real arch comes
 /// close (paper arch: 2670 cols, ~2.7 M elements in the largest tensor).
 const MAX_DIM: usize = 16_777_216; // 2^24 rows or cols
@@ -78,6 +89,201 @@ pub fn load_params(path: impl AsRef<Path>) -> anyhow::Result<Vec<Tensor>> {
         params.push(Tensor::from_vec(rows, cols, data));
     }
     Ok(params)
+}
+
+/// Full training state beyond the parameters — see the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub step: u64,
+    pub epoch: u64,
+    pub rng: RngState,
+    pub batch_rng: RngState,
+    pub opt: OptimizerState,
+    /// The batcher's current row-order permutation (empty when the
+    /// session never bound a dataset). Each epoch shuffles the order in
+    /// place, so restoring the RNG alone is not enough on the
+    /// mini-batch path.
+    pub batch_order: Vec<u64>,
+    /// Resident snapshot columns per layer (possibly mid-fill).
+    pub snapshots: Vec<Vec<SnapshotCol>>,
+}
+
+fn write_u32(f: &mut impl Write, v: u32) -> anyhow::Result<()> {
+    f.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(f: &mut impl Write, v: u64) -> anyhow::Result<()> {
+    f.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_f32s(f: &mut impl Write, data: &[f32]) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_rng(f: &mut impl Write, st: &RngState) -> anyhow::Result<()> {
+    for v in st.s {
+        write_u64(f, v)?;
+    }
+    f.write_all(&[st.spare_normal.is_some() as u8])?;
+    write_u64(f, st.spare_normal.unwrap_or(0.0).to_bits())?;
+    Ok(())
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(f: &mut impl Read, count: usize) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(count <= MAX_ELEMS, "implausible f32 count {count}");
+    let mut bytes = vec![0u8; count * 4];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_rng(f: &mut impl Read) -> anyhow::Result<RngState> {
+    let mut s = [0u64; 4];
+    for v in &mut s {
+        *v = read_u64(f)?;
+    }
+    let mut flag = [0u8; 1];
+    f.read_exact(&mut flag)?;
+    let bits = read_u64(f)?;
+    Ok(RngState {
+        s,
+        spare_normal: (flag[0] != 0).then_some(f64::from_bits(bits)),
+    })
+}
+
+/// Write a [`TrainState`] resume sidecar (magic `DMDR`, version 1).
+pub fn save_train_state(path: impl AsRef<Path>, st: &TrainState) -> anyhow::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(RESUME_MAGIC)?;
+    write_u32(&mut f, RESUME_VERSION)?;
+    write_u64(&mut f, st.step)?;
+    write_u64(&mut f, st.epoch)?;
+    write_rng(&mut f, &st.rng)?;
+    write_rng(&mut f, &st.batch_rng)?;
+    // optimizer state
+    write_u32(&mut f, st.opt.kind.len() as u32)?;
+    f.write_all(st.opt.kind.as_bytes())?;
+    write_u64(&mut f, st.opt.t)?;
+    write_u32(&mut f, st.opt.slots.len() as u32)?;
+    for slot in &st.opt.slots {
+        write_u32(&mut f, slot.len() as u32)?;
+        for vec in slot {
+            write_u32(&mut f, vec.len() as u32)?;
+            write_f32s(&mut f, vec)?;
+        }
+    }
+    // batcher order
+    write_u32(&mut f, st.batch_order.len() as u32)?;
+    for &i in &st.batch_order {
+        write_u64(&mut f, i)?;
+    }
+    // snapshot buffers
+    write_u32(&mut f, st.snapshots.len() as u32)?;
+    for layer in &st.snapshots {
+        write_u32(&mut f, layer.len() as u32)?;
+        for col in layer {
+            write_u64(&mut f, col.step)?;
+            write_u32(&mut f, col.data.len() as u32)?;
+            write_f32s(&mut f, &col.data)?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a [`TrainState`] resume sidecar.
+pub fn load_train_state(path: impl AsRef<Path>) -> anyhow::Result<TrainState> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(&path).map_err(|e| {
+        anyhow::anyhow!("resume sidecar {}: {e}", path.as_ref().display())
+    })?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == RESUME_MAGIC, "not a DMDR resume sidecar");
+    let version = read_u32(&mut f)?;
+    anyhow::ensure!(version == RESUME_VERSION, "unsupported resume version {version}");
+    let step = read_u64(&mut f)?;
+    let epoch = read_u64(&mut f)?;
+    let rng = read_rng(&mut f)?;
+    let batch_rng = read_rng(&mut f)?;
+    // optimizer state
+    let kind_len = read_u32(&mut f)? as usize;
+    anyhow::ensure!(kind_len <= 64, "implausible optimizer-name length {kind_len}");
+    let mut kind_bytes = vec![0u8; kind_len];
+    f.read_exact(&mut kind_bytes)?;
+    let kind = String::from_utf8(kind_bytes)
+        .map_err(|_| anyhow::anyhow!("optimizer name is not UTF-8"))?;
+    let t = read_u64(&mut f)?;
+    let n_slots = read_u32(&mut f)? as usize;
+    anyhow::ensure!(n_slots <= 16, "implausible optimizer slot count {n_slots}");
+    let mut slots = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        let n_vecs = read_u32(&mut f)? as usize;
+        anyhow::ensure!(n_vecs <= 10_000, "implausible state-vector count {n_vecs}");
+        let mut slot = Vec::with_capacity(n_vecs);
+        for _ in 0..n_vecs {
+            let len = read_u32(&mut f)? as usize;
+            slot.push(read_f32s(&mut f, len)?);
+        }
+        slots.push(slot);
+    }
+    // batcher order
+    let n_order = read_u32(&mut f)? as usize;
+    anyhow::ensure!(n_order <= MAX_ELEMS, "implausible batch-order length {n_order}");
+    let mut batch_order = Vec::with_capacity(n_order);
+    for _ in 0..n_order {
+        batch_order.push(read_u64(&mut f)?);
+    }
+    // snapshot buffers
+    let n_layers = read_u32(&mut f)? as usize;
+    anyhow::ensure!(n_layers <= 10_000, "implausible snapshot layer count {n_layers}");
+    let mut snapshots = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let n_cols = read_u32(&mut f)? as usize;
+        anyhow::ensure!(n_cols <= 100_000, "implausible snapshot column count {n_cols}");
+        let mut layer = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            let col_step = read_u64(&mut f)?;
+            let len = read_u32(&mut f)? as usize;
+            layer.push(SnapshotCol {
+                step: col_step,
+                data: read_f32s(&mut f, len)?,
+            });
+        }
+        snapshots.push(layer);
+    }
+    Ok(TrainState {
+        step,
+        epoch,
+        rng,
+        batch_rng,
+        opt: OptimizerState { kind, t, slots },
+        batch_order,
+        snapshots,
+    })
 }
 
 #[cfg(test)]
@@ -193,5 +399,65 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("not/here.dmdp"));
+    }
+
+    fn sample_train_state() -> TrainState {
+        let mut rng = Rng::new(5);
+        rng.normal(); // leave a cached spare in the state
+        TrainState {
+            step: 123,
+            epoch: 7,
+            rng: rng.state(),
+            batch_rng: Rng::new(9).state(),
+            opt: crate::optim::OptimizerState {
+                kind: "adam".to_string(),
+                t: 123,
+                slots: vec![
+                    vec![vec![0.1, -0.2], vec![0.0; 3]],
+                    vec![vec![1e-8, 2e-8], vec![0.5; 3]],
+                ],
+            },
+            batch_order: vec![3, 0, 2, 1],
+            snapshots: vec![
+                vec![
+                    SnapshotCol {
+                        step: 121,
+                        data: vec![1.0, 2.0, 3.0],
+                    },
+                    SnapshotCol {
+                        step: 122,
+                        data: vec![4.0, 5.0, 6.0],
+                    },
+                ],
+                vec![],
+            ],
+        }
+    }
+
+    #[test]
+    fn train_state_roundtrip() {
+        let st = sample_train_state();
+        let dir = std::env::temp_dir().join("dmdtrain_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.resume");
+        save_train_state(&path, &st).unwrap();
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded, st);
+    }
+
+    #[test]
+    fn train_state_rejects_garbage_and_truncation() {
+        let dir = std::env::temp_dir().join("dmdtrain_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.resume");
+        std::fs::write(&path, b"NOPEnopeNOPE").unwrap();
+        let err = load_train_state(&path).unwrap_err().to_string();
+        assert!(err.contains("DMDR"), "unexpected error: {err}");
+
+        let good = dir.join("trunc_src.resume");
+        save_train_state(&good, &sample_train_state()).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(load_train_state(&path).is_err());
     }
 }

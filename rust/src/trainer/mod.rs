@@ -1,357 +1,39 @@
-//! The training coordinator — paper Algorithm 1.
+//! The training core — paper Algorithm 1 as a composable state machine.
 //!
-//! Plain backpropagation runs through the backend's `train_step`
-//! executable (native fused forward/backprop by default; AOT HLO with
-//! the `pjrt` feature), Adam updates happen here in Rust, and every
-//! optimizer step appends one flattened snapshot per layer — copied
-//! straight into recycled snapshot columns (`SnapshotBuffer::push_parts`,
-//! no per-step allocation) which *stream* the snapshot Gram: each push
-//! also computes the one new row of WᵀW on the worker pool, so the DMD
-//! round never rebuilds it. When the buffers reach `m` snapshots, the
-//! per-layer DMD solves run (in parallel over the shared worker pool)
-//! against the streamed Grams, the extrapolated weights are written
-//! back, the buffers are cleared, and backpropagation resumes — exactly
-//! the paper's loop. With `cfg.dmd = None` the same loop is the paper's
-//! "without DMD" baseline.
+//! The monolithic `Trainer::run` loop is gone; training is now a
+//! [`TrainSession`] assembled by [`SessionBuilder`] from three trait
+//! seams:
 //!
-//! Artifacts may declare `batch = 0` (dynamic): the trainer then runs
-//! full-batch on the whole training set, which also enables the pinned
-//! batch fast path (no per-step gather).
+//! * [`accel::Accelerator`] — the jump strategy (per-layer DMD with
+//!   relaxation / noise re-injection / rejection guard, per-weight line
+//!   fit, or none), selected from the `[accel]` TOML section.
+//! * [`crate::optim::Optimizer`] — Adam / SGD / SGD-momentum, selected
+//!   by `train.optimizer`.
+//! * [`observe::Observer`] — logging, early stopping, periodic
+//!   checkpoints, JSONL metric streaming, Fig-1 weight tracing.
+//!
+//! Callers own the loop (`step()` / `run_epoch()` / `run()`), and
+//! training is resumable: `export_state()` + the `DMDR` sidecar
+//! ([`checkpoint`]) make a restored run bit-identical to an
+//! uninterrupted one. The per-step numerics are unchanged from the old
+//! loop — backprop through the backend's `train_step` executable,
+//! optimizer update in Rust, one streamed snapshot per layer per step,
+//! DMD burst when the buffers fill — and `tests/session_equivalence.rs`
+//! pins the bit-identity against a frozen copy of the old loop.
 
+pub mod accel;
 mod checkpoint;
+pub mod observe;
+pub mod session;
 
-pub use checkpoint::{load_params, save_params};
-
-use crate::config::TrainConfig;
-use crate::data::{Batcher, Dataset};
-use crate::dmd::{extrapolate_all_layers, SnapshotBuffer};
-use crate::metrics::{DmdEvent, DmdStats, LossHistory, LossPoint};
-use crate::model::Arch;
-use crate::optim::{Adam, Optimizer};
-use crate::rng::Rng;
-use crate::runtime::{Executable, Runtime};
-use crate::tensor::Tensor;
-use crate::util::timer::Profile;
-
-/// Outcome of a full training run.
-pub struct TrainReport {
-    pub history: LossHistory,
-    pub dmd_stats: DmdStats,
-    pub profile: Profile,
-    pub final_params: Vec<Tensor>,
-    pub epochs_run: usize,
-    pub wall_secs: f64,
-}
-
-/// The Algorithm-1 driver.
-pub struct Trainer {
-    pub arch: Arch,
-    cfg: TrainConfig,
-    train_exe: Executable,
-    predict_exe: Executable,
-    params: Vec<Tensor>,
-    adam: Adam,
-    buffers: Vec<SnapshotBuffer>,
-    rng: Rng,
-    /// Optional per-layer weight-trajectory recorder (Fig 1): one row per
-    /// step per layer with a few tracked components.
-    pub weight_trace: Vec<Vec<Vec<f32>>>,
-}
-
-impl Trainer {
-    /// Build from a runtime: loads `train_step_<artifact>` and
-    /// `predict_<artifact>`, initializes parameters (Xavier).
-    pub fn new(runtime: &Runtime, cfg: TrainConfig) -> anyhow::Result<Trainer> {
-        let train_exe = runtime.load(&format!("train_step_{}", cfg.artifact))?;
-        let predict_exe = runtime.load(&format!("predict_{}", cfg.artifact))?;
-        let arch = Arch::new(train_exe.entry().arch.clone())?;
-        let mut rng = Rng::new(cfg.seed);
-        let params = arch.init_params(&mut rng);
-        let buffers = match &cfg.dmd {
-            Some(d) => (0..arch.num_layers())
-                .map(|_| SnapshotBuffer::new(d.m))
-                .collect(),
-            None => Vec::new(),
-        };
-        let adam = Adam::new(cfg.adam);
-        Ok(Trainer {
-            arch,
-            cfg,
-            train_exe,
-            predict_exe,
-            params,
-            adam,
-            buffers,
-            rng,
-            weight_trace: Vec::new(),
-        })
-    }
-
-    pub fn params(&self) -> &[Tensor] {
-        &self.params
-    }
-
-    pub fn set_params(&mut self, params: Vec<Tensor>) {
-        assert_eq!(params.len(), self.params.len());
-        self.params = params;
-    }
-
-    pub fn config(&self) -> &TrainConfig {
-        &self.cfg
-    }
-
-    fn record_snapshots(&mut self, step: usize) {
-        for layer in 0..self.arch.num_layers() {
-            // copy (w, b) straight into a recycled snapshot column — no
-            // intermediate flatten_layer Vec on the hot path. push_parts
-            // also streams the new WᵀW row (O(n·m) on the pool), which
-            // is what lets dmd_jump skip the O(n·m²) Gram burst.
-            let w = &self.params[2 * layer];
-            let b = &self.params[2 * layer + 1];
-            self.buffers[layer].push_parts(step, &[w.data(), b.data()]);
-        }
-    }
-
-    /// One DMD acceleration event over all layers (paper Algorithm 1
-    /// inner loop), with the paper's named extensions applied after the
-    /// solve: under-relaxation of the jump and optional stochastic-spread
-    /// re-injection (§4 / conclusion). Returns (accepted_layers,
-    /// total_rank).
-    fn dmd_jump(&mut self, profile: &mut Profile) -> (usize, usize) {
-        let dmd = self.cfg.dmd.clone().expect("dmd_jump without DMD config");
-        let outcomes = profile.scope("dmd_solve", || {
-            extrapolate_all_layers(&self.buffers, &dmd, dmd.s, self.cfg.parallel_dmd)
-        });
-        let omega = dmd.relaxation.clamp(0.0, 1.0) as f32;
-        let mut accepted = 0;
-        let mut total_rank = 0;
-        profile.scope("dmd_assign", || {
-            for out in &outcomes {
-                match &out.result {
-                    Ok(o) => {
-                        let last = self.buffers[out.layer].last().expect("full buffer");
-                        let mut w: Vec<f32> = if omega < 1.0 {
-                            // w ← w_m + ω (w_DMD − w_m)
-                            o.new_weights
-                                .iter()
-                                .zip(last)
-                                .map(|(&d, &l)| l + omega * (d - l))
-                                .collect()
-                        } else {
-                            o.new_weights.clone()
-                        };
-                        if dmd.noise_reinject {
-                            // restore the stochastic spread DMD filtered
-                            // out: N(0, std(w_DMD − w_m)) per layer
-                            let n = w.len() as f64;
-                            let var = o
-                                .new_weights
-                                .iter()
-                                .zip(last)
-                                .map(|(&d, &l)| ((d - l) as f64).powi(2))
-                                .sum::<f64>()
-                                / n.max(1.0);
-                            let std = var.sqrt();
-                            for v in &mut w {
-                                *v += (std * self.rng.normal()) as f32;
-                            }
-                        }
-                        self.arch.unflatten_layer(&mut self.params, out.layer, &w);
-                        accepted += 1;
-                        total_rank += o.rank;
-                    }
-                    Err(_) => {
-                        // per-layer failure (degenerate snapshots): keep
-                        // the backprop weights for that layer
-                    }
-                }
-            }
-        });
-        for buf in &mut self.buffers {
-            buf.clear();
-        }
-        (accepted, total_rank)
-    }
-
-    /// Full training run on a dataset.
-    pub fn run(&mut self, ds: &Dataset) -> anyhow::Result<TrainReport> {
-        let t_start = std::time::Instant::now();
-        let mut profile = Profile::new();
-        let mut history = LossHistory::new();
-        let mut dmd_stats = DmdStats::new();
-
-        // batch = 0 in the manifest means dynamic: full-batch training
-        // on the whole training set (the paper's regime).
-        let batch = self.train_exe.effective_batch(ds.n_train());
-        anyhow::ensure!(
-            ds.n_in() == self.arch.input_dim() && ds.n_out() == self.arch.output_dim(),
-            "dataset ({}, {}) does not match arch {:?}",
-            ds.n_in(),
-            ds.n_out(),
-            self.arch.dims
-        );
-        anyhow::ensure!(
-            ds.n_train() >= batch,
-            "dataset has {} train rows < batch {batch}",
-            ds.n_train()
-        );
-        let mut batcher = Batcher::new(ds.n_train(), batch)?;
-        let mut rng = self.rng.fork(1);
-        let mut step = 0usize;
-        let dmd_m = self.cfg.dmd.as_ref().map(|d| d.m);
-
-        // Full-batch fast path: the batch is constant for the whole run,
-        // so upload it to the device once (§Perf: removes a per-step
-        // host→device copy of the entire dataset).
-        let device_batch = if batch == ds.n_train() {
-            Some(profile.scope("batch_upload", || {
-                self.train_exe.upload_batch(&ds.x_train, &ds.y_train)
-            })?)
-        } else {
-            None
-        };
-        // mini-batch path: one reused (x, y) scratch pair for the whole
-        // run — Batcher::gather_into copies rows, never allocates
-        let mut gather_scratch = if device_batch.is_none() {
-            Some((
-                Tensor::zeros(batch, ds.n_in()),
-                Tensor::zeros(batch, ds.n_out()),
-            ))
-        } else {
-            None
-        };
-
-        for epoch in 0..self.cfg.epochs {
-            let mut epoch_loss = 0.0;
-            let mut n_batches = 0;
-            let mut dmd_fired = false;
-
-            for idx in batcher.epoch(&mut rng) {
-                let (loss, grads) = if let Some(db) = &device_batch {
-                    profile.scope("backprop_exec", || {
-                        self.train_exe.train_step_on(&self.params, db)
-                    })?
-                } else {
-                    let (bx, by) = gather_scratch.as_mut().expect("scratch on batch path");
-                    profile.scope("batch_gather", || {
-                        Batcher::gather_into(&ds.x_train, &ds.y_train, &idx, bx, by)
-                    });
-                    let (bx, by) = (&*bx, &*by);
-                    profile.scope("backprop_exec", || {
-                        self.train_exe.train_step(&self.params, bx, by)
-                    })?
-                };
-                anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
-                profile.scope("adam_update", || {
-                    self.adam.step(&mut self.params, &grads)
-                });
-                step += 1;
-                epoch_loss += loss;
-                n_batches += 1;
-
-                if self.cfg.record_weights {
-                    self.trace_weights();
-                }
-
-                if let Some(m) = dmd_m {
-                    profile.scope("snapshot_record", || self.record_snapshots(step));
-                    if self.buffers[0].len() == m {
-                        let guard = self.cfg.dmd.as_ref().unwrap().accept_worse_factor;
-                        let need_measure = self.cfg.measure_dmd || guard.is_some();
-                        let (before_tr, before_te) = if need_measure {
-                            profile.scope("dmd_measure", || self.measure(ds))?
-                        } else {
-                            (f64::NAN, f64::NAN)
-                        };
-                        // keep a copy for the optional rejection guard
-                        // (not in the paper; the paper's own future-work
-                        // note asks for "annealing or relaxation")
-                        let saved = guard.map(|_| self.params.clone());
-                        let t0 = std::time::Instant::now();
-                        let (_accepted, total_rank) = self.dmd_jump(&mut profile);
-                        let solve_secs = t0.elapsed().as_secs_f64();
-                        let (mut rel_train, mut rel_test) = (f64::NAN, f64::NAN);
-                        if need_measure {
-                            let (after_tr, after_te) =
-                                profile.scope("dmd_measure", || self.measure(ds))?;
-                            rel_train = after_tr / before_tr;
-                            rel_test = after_te / before_te;
-                            if let (Some(factor), Some(saved)) = (guard, saved) {
-                                if !(after_tr <= before_tr * factor) {
-                                    self.params = saved; // reject the jump
-                                    rel_train = 1.0;
-                                    rel_test = 1.0;
-                                }
-                            }
-                        }
-                        dmd_stats.push(DmdEvent {
-                            epoch,
-                            rel_train,
-                            rel_test,
-                            solve_secs,
-                            total_rank,
-                        });
-                        dmd_fired = true;
-                    }
-                }
-            }
-
-            let train_mse = epoch_loss / n_batches.max(1) as f64;
-            let test_mse = if epoch % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
-                profile.scope("test_eval", || {
-                    self.predict_exe
-                        .mse_all(&self.params, &ds.x_test, &ds.y_test)
-                })?
-            } else {
-                f64::NAN
-            };
-            history.push(LossPoint {
-                epoch,
-                train_mse,
-                test_mse,
-                dmd_event: if dmd_fired { 1.0 } else { 0.0 },
-            });
-            if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
-                eprintln!(
-                    "[{}] epoch {epoch:>5} train {} test {}{}",
-                    self.cfg.artifact,
-                    crate::util::fmt_f64(train_mse),
-                    crate::util::fmt_f64(test_mse),
-                    if dmd_fired { "  [DMD]" } else { "" }
-                );
-            }
-        }
-
-        Ok(TrainReport {
-            history,
-            dmd_stats,
-            profile,
-            final_params: self.params.clone(),
-            epochs_run: self.cfg.epochs,
-            wall_secs: t_start.elapsed().as_secs_f64(),
-        })
-    }
-
-    /// (train MSE, test MSE) at the current parameters.
-    fn measure(&self, ds: &Dataset) -> anyhow::Result<(f64, f64)> {
-        let train = self
-            .predict_exe
-            .mse_all(&self.params, &ds.x_train, &ds.y_train)?;
-        let test = self
-            .predict_exe
-            .mse_all(&self.params, &ds.x_test, &ds.y_test)?;
-        Ok((train, test))
-    }
-
-    /// Record a small per-layer weight sample for Fig 1 (first 32
-    /// components of each layer's flattened vector).
-    fn trace_weights(&mut self) {
-        let row: Vec<Vec<f32>> = (0..self.arch.num_layers())
-            .map(|l| {
-                let flat = self.arch.flatten_layer(&self.params, l);
-                flat[..flat.len().min(32)].to_vec()
-            })
-            .collect();
-        self.weight_trace.push(row);
-    }
-}
+pub use accel::{
+    AccelReport, Accelerator, DmdAccelerator, JumpCtx, LineFitAccelerator, NoAccel, SnapshotCol,
+};
+pub use checkpoint::{load_params, load_train_state, save_params, save_train_state, TrainState};
+pub use observe::{
+    CheckpointEvery, EarlyStop, EpochEvent, JsonlMetrics, LogObserver, Observer, Signal,
+    StepEvent, WeightTrace,
+};
+pub use session::{
+    EpochSummary, SessionBuilder, SessionState, StepOutcome, TrainReport, TrainSession,
+};

@@ -1,0 +1,413 @@
+//! Training observers — side-channel hooks on the `TrainSession` loop.
+//!
+//! The monolithic trainer hardwired logging, weight tracing and history
+//! collection into its loop; observers move every side effect behind
+//! three callbacks: [`Observer::on_step`] after each optimizer step,
+//! [`Observer::on_epoch`] after each epoch's evaluation (returning a
+//! [`Signal`] that can stop the run), and [`Observer::on_jump`] after
+//! each accelerator event. [`Observer::finish`] lets an observer deposit
+//! collected data into the final `TrainReport`.
+//!
+//! Shipped observers (assembled from `TrainConfig` by `SessionBuilder`):
+//!
+//! * [`LogObserver`] — the classic per-epoch stderr line (`log_every`).
+//! * [`EarlyStop`] — stop after `patience` epochs without the train MSE
+//!   improving by more than `min_delta`.
+//! * [`CheckpointEvery`] — periodic parameter checkpoints every N epochs.
+//! * [`JsonlMetrics`] — stream per-epoch metrics and jump events as
+//!   JSONL for live monitoring (`tail -f`).
+//! * [`WeightTrace`] — the Fig-1 per-layer weight recorder, sampling
+//!   the first ≤32 components straight off the (w, b) tensors (no
+//!   per-step `flatten_layer` allocation).
+
+use super::checkpoint::save_params;
+use super::session::TrainReport;
+use crate::metrics::DmdEvent;
+use crate::model::Arch;
+use crate::tensor::Tensor;
+use crate::util::jsonl::{Json, JsonlWriter};
+use std::path::{Path, PathBuf};
+
+/// Per-step event payload.
+pub struct StepEvent<'a> {
+    /// 1-based optimizer step count after this step.
+    pub step: usize,
+    pub epoch: usize,
+    pub loss: f64,
+    pub params: &'a [Tensor],
+    pub arch: &'a Arch,
+}
+
+/// Per-epoch event payload (after evaluation).
+pub struct EpochEvent<'a> {
+    pub epoch: usize,
+    /// Total epochs configured for the run.
+    pub epochs: usize,
+    pub train_mse: f64,
+    /// NaN when this epoch was not evaluated on the test split.
+    pub test_mse: f64,
+    pub dmd_fired: bool,
+    pub params: &'a [Tensor],
+    pub arch: &'a Arch,
+    pub artifact: &'a str,
+}
+
+/// Epoch verdict: keep going or stop the run (early stopping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    Continue,
+    Stop,
+}
+
+/// A training observer. All hooks default to no-ops.
+pub trait Observer {
+    fn on_step(&mut self, _ev: &StepEvent<'_>) {}
+
+    fn on_epoch(&mut self, _ev: &EpochEvent<'_>) -> anyhow::Result<Signal> {
+        Ok(Signal::Continue)
+    }
+
+    fn on_jump(&mut self, _ev: &DmdEvent) {}
+
+    /// Called once when `TrainSession::run` assembles its report.
+    fn finish(&mut self, _report: &mut TrainReport) {}
+}
+
+// ---------------------------------------------------------------------
+
+/// The classic per-epoch stderr log line.
+pub struct LogObserver {
+    artifact: String,
+    every: usize,
+}
+
+impl LogObserver {
+    pub fn new(artifact: String, every: usize) -> Self {
+        LogObserver { artifact, every }
+    }
+}
+
+impl Observer for LogObserver {
+    fn on_epoch(&mut self, ev: &EpochEvent<'_>) -> anyhow::Result<Signal> {
+        if self.every > 0 && ev.epoch % self.every == 0 {
+            eprintln!(
+                "[{}] epoch {:>5} train {} test {}{}",
+                self.artifact,
+                ev.epoch,
+                crate::util::fmt_f64(ev.train_mse),
+                crate::util::fmt_f64(ev.test_mse),
+                if ev.dmd_fired { "  [DMD]" } else { "" }
+            );
+        }
+        Ok(Signal::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Stop when the train MSE has not improved by more than `min_delta`
+/// for `patience` consecutive epochs.
+pub struct EarlyStop {
+    patience: usize,
+    min_delta: f64,
+    best: f64,
+    bad_epochs: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        assert!(patience > 0, "EarlyStop needs patience >= 1");
+        EarlyStop {
+            patience,
+            min_delta,
+            best: f64::INFINITY,
+            bad_epochs: 0,
+        }
+    }
+}
+
+impl Observer for EarlyStop {
+    fn on_epoch(&mut self, ev: &EpochEvent<'_>) -> anyhow::Result<Signal> {
+        if ev.train_mse.is_finite() && ev.train_mse < self.best - self.min_delta {
+            self.best = ev.train_mse;
+            self.bad_epochs = 0;
+        } else {
+            self.bad_epochs += 1;
+            if self.bad_epochs >= self.patience {
+                return Ok(Signal::Stop);
+            }
+        }
+        Ok(Signal::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Save a parameter checkpoint every `every` epochs into `dir`
+/// (`ckpt_epoch<N>.dmdp`, N = 1-based epoch count).
+pub struct CheckpointEvery {
+    every: usize,
+    dir: PathBuf,
+}
+
+impl CheckpointEvery {
+    pub fn new(every: usize, dir: impl AsRef<Path>) -> Self {
+        assert!(every > 0, "CheckpointEvery needs every >= 1");
+        CheckpointEvery {
+            every,
+            dir: dir.as_ref().to_path_buf(),
+        }
+    }
+}
+
+impl Observer for CheckpointEvery {
+    fn on_epoch(&mut self, ev: &EpochEvent<'_>) -> anyhow::Result<Signal> {
+        if (ev.epoch + 1) % self.every == 0 {
+            let path = self.dir.join(format!("ckpt_epoch{:06}.dmdp", ev.epoch + 1));
+            save_params(ev.params, &path)?;
+        }
+        Ok(Signal::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Stream per-epoch metrics (and jump events) as JSONL.
+pub struct JsonlMetrics {
+    w: JsonlWriter,
+}
+
+impl JsonlMetrics {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Ok(JsonlMetrics {
+            w: JsonlWriter::create(path)?,
+        })
+    }
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl Observer for JsonlMetrics {
+    fn on_epoch(&mut self, ev: &EpochEvent<'_>) -> anyhow::Result<Signal> {
+        self.w.event(&[
+            ("type", Json::Str("epoch".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("train_mse", num_or_null(ev.train_mse)),
+            ("test_mse", num_or_null(ev.test_mse)),
+            ("dmd", Json::Bool(ev.dmd_fired)),
+        ])?;
+        self.w.flush()?;
+        Ok(Signal::Continue)
+    }
+
+    fn on_jump(&mut self, ev: &DmdEvent) {
+        // best-effort: a full disk must not abort training
+        let _ = self.w.event(&[
+            ("type", Json::Str("jump".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("rel_train", num_or_null(ev.rel_train)),
+            ("rel_test", num_or_null(ev.rel_test)),
+            ("solve_secs", Json::Num(ev.solve_secs)),
+            ("total_rank", Json::Num(ev.total_rank as f64)),
+        ]);
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Record a small per-layer weight sample per step (Fig 1): the first
+/// `sample` components of each layer's flattened (w, b) vector, read
+/// directly off the tensors — the old `flatten_layer` path materialized
+/// a fresh full-layer `Vec` per layer per step just to keep ≤32 floats.
+pub struct WeightTrace {
+    sample: usize,
+    rows: Vec<Vec<Vec<f32>>>,
+}
+
+impl WeightTrace {
+    pub fn new(sample: usize) -> Self {
+        WeightTrace {
+            sample,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Sample one row without flattening: weights first, then bias, in
+    /// exactly the `flatten_layer` order.
+    fn sample_row(&self, arch: &Arch, params: &[Tensor]) -> Vec<Vec<f32>> {
+        (0..arch.num_layers())
+            .map(|l| {
+                let w = params[2 * l].data();
+                let b = params[2 * l + 1].data();
+                let take = self.sample.min(w.len() + b.len());
+                let from_w = take.min(w.len());
+                let mut out = Vec::with_capacity(take);
+                out.extend_from_slice(&w[..from_w]);
+                out.extend_from_slice(&b[..take - from_w]);
+                out
+            })
+            .collect()
+    }
+}
+
+impl Observer for WeightTrace {
+    fn on_step(&mut self, ev: &StepEvent<'_>) {
+        let row = self.sample_row(ev.arch, ev.params);
+        self.rows.push(row);
+    }
+
+    fn finish(&mut self, report: &mut TrainReport) {
+        report.weight_trace = std::mem::take(&mut self.rows);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn epoch_event<'a>(
+        epoch: usize,
+        train: f64,
+        params: &'a [Tensor],
+        arch: &'a Arch,
+    ) -> EpochEvent<'a> {
+        EpochEvent {
+            epoch,
+            epochs: 100,
+            train_mse: train,
+            test_mse: f64::NAN,
+            dmd_fired: false,
+            params,
+            arch,
+            artifact: "test",
+        }
+    }
+
+    #[test]
+    fn early_stop_fires_after_patience_plateau() {
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let params = arch.init_params(&mut Rng::new(0));
+        let mut es = EarlyStop::new(3, 0.0);
+        // improving: never stops
+        for (e, mse) in [1.0, 0.5, 0.25].iter().enumerate() {
+            let ev = epoch_event(e, *mse, &params, &arch);
+            assert_eq!(es.on_epoch(&ev).unwrap(), Signal::Continue);
+        }
+        // plateau: stops on the 3rd bad epoch
+        let ev = epoch_event(3, 0.25, &params, &arch);
+        assert_eq!(es.on_epoch(&ev).unwrap(), Signal::Continue);
+        let ev = epoch_event(4, 0.25, &params, &arch);
+        assert_eq!(es.on_epoch(&ev).unwrap(), Signal::Continue);
+        let ev = epoch_event(5, 0.26, &params, &arch);
+        assert_eq!(es.on_epoch(&ev).unwrap(), Signal::Stop);
+    }
+
+    #[test]
+    fn early_stop_min_delta_requires_real_improvement() {
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let params = arch.init_params(&mut Rng::new(0));
+        let mut es = EarlyStop::new(2, 0.1);
+        // 1.0 → 0.95 is within min_delta: counts as a bad epoch
+        for (e, mse, want) in [
+            (0, 1.0, Signal::Continue),
+            (1, 0.95, Signal::Continue),
+            (2, 0.93, Signal::Stop),
+        ] {
+            let ev = epoch_event(e, mse, &params, &arch);
+            assert_eq!(es.on_epoch(&ev).unwrap(), want, "epoch {e}");
+        }
+    }
+
+    #[test]
+    fn weight_trace_samples_without_flattening() {
+        // layer 0: 2×3 w (6) + 3 b = 9 < 32 → whole layer, w then b
+        let arch = Arch::new(vec![2, 3]).unwrap();
+        let params = vec![
+            Tensor::from_fn(2, 3, |r, c| (r * 3 + c) as f32),
+            Tensor::from_vec(1, 3, vec![10.0, 11.0, 12.0]),
+        ];
+        let mut tr = WeightTrace::new(32);
+        let ev = StepEvent {
+            step: 1,
+            epoch: 0,
+            loss: 0.0,
+            params: &params,
+            arch: &arch,
+        };
+        tr.on_step(&ev);
+        assert_eq!(tr.rows.len(), 1);
+        let want: Vec<f32> = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 10.0, 11.0, 12.0];
+        assert_eq!(tr.rows[0][0], want);
+        // matches flatten_layer's prefix exactly
+        let flat = arch.flatten_layer(&params, 0);
+        assert_eq!(&flat[..9], &tr.rows[0][0][..]);
+
+        // large layer: capped at the sample size
+        let arch2 = Arch::new(vec![10, 10]).unwrap();
+        let params2 = arch2.init_params(&mut Rng::new(1));
+        let tr2 = WeightTrace::new(32);
+        let row = tr2.sample_row(&arch2, &params2);
+        assert_eq!(row[0].len(), 32);
+        let flat2 = arch2.flatten_layer(&params2, 0);
+        assert_eq!(&flat2[..32], &row[0][..]);
+    }
+
+    #[test]
+    fn checkpoint_every_writes_on_schedule() {
+        let dir = std::env::temp_dir().join("dmdtrain_obs_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let arch = Arch::new(vec![2, 2]).unwrap();
+        let params = arch.init_params(&mut Rng::new(0));
+        let mut ck = CheckpointEvery::new(2, &dir);
+        for epoch in 0..4 {
+            let ev = epoch_event(epoch, 1.0, &params, &arch);
+            ck.on_epoch(&ev).unwrap();
+        }
+        assert!(dir.join("ckpt_epoch000002.dmdp").exists());
+        assert!(dir.join("ckpt_epoch000004.dmdp").exists());
+        assert!(!dir.join("ckpt_epoch000001.dmdp").exists());
+        let saved = dir.join("ckpt_epoch000002.dmdp");
+        let loaded = super::super::checkpoint::load_params(saved).unwrap();
+        assert_eq!(loaded, params);
+    }
+
+    #[test]
+    fn jsonl_metrics_stream_parses_back() {
+        let dir = std::env::temp_dir().join("dmdtrain_obs_jsonl_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let params = arch.init_params(&mut Rng::new(0));
+        {
+            let mut jm = JsonlMetrics::create(&path).unwrap();
+            let ev = epoch_event(0, 0.5, &params, &arch);
+            jm.on_epoch(&ev).unwrap();
+            jm.on_jump(&DmdEvent {
+                epoch: 0,
+                rel_train: 0.8,
+                rel_test: f64::NAN,
+                solve_secs: 0.01,
+                total_rank: 4,
+            });
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let epoch_line = crate::util::jsonl::parse(lines[0]).unwrap();
+        assert_eq!(epoch_line.get("type").unwrap().as_str(), Some("epoch"));
+        assert_eq!(epoch_line.get("train_mse").unwrap().as_f64(), Some(0.5));
+        // NaN test MSE must serialize as null, not break the stream
+        assert_eq!(epoch_line.get("test_mse"), Some(&Json::Null));
+        let jump_line = crate::util::jsonl::parse(lines[1]).unwrap();
+        assert_eq!(jump_line.get("type").unwrap().as_str(), Some("jump"));
+        assert_eq!(jump_line.get("rel_train").unwrap().as_f64(), Some(0.8));
+    }
+}

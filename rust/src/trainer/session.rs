@@ -1,0 +1,690 @@
+//! `TrainSession` — the step-granular training state machine.
+//!
+//! The session replaces the monolithic `Trainer::run` loop with a
+//! composable core assembled by [`SessionBuilder`] from three seams:
+//!
+//! * an [`Optimizer`](crate::optim::Optimizer) (Adam / SGD / momentum,
+//!   chosen by name in `TrainConfig`),
+//! * an [`Accelerator`](super::accel::Accelerator) (DMD / line-fit /
+//!   none, chosen from the `[accel]` TOML section), and
+//! * a list of [`Observer`](super::observe::Observer)s (logging, early
+//!   stopping, periodic checkpoints, JSONL metrics, weight tracing).
+//!
+//! Callers own the loop: [`TrainSession::step`] advances one optimizer
+//! step (drawing a fresh epoch of batches on demand),
+//! [`TrainSession::run_epoch`] finishes an epoch (evaluation + history +
+//! observers), and [`TrainSession::run`] drives epochs to completion or
+//! early stop and assembles the [`TrainReport`]. The per-step sequence
+//! is exactly the paper's Algorithm 1 — backprop, optimizer update,
+//! snapshot, jump when the buffers fill — and a DMD run through the
+//! session is bit-identical to the pre-redesign trainer loop (asserted
+//! against a frozen reference in `tests/session_equivalence.rs`).
+//!
+//! Resumable training: [`TrainSession::export_state`] captures the step
+//! and epoch counters, both RNG streams, the optimizer moments and the
+//! resident snapshot columns ([`super::checkpoint::TrainState`]);
+//! [`TrainSession::restore`] makes a resumed run bit-identical to an
+//! uninterrupted one. [`TrainSession::resume_from`] is the coarse
+//! warm-start (parameters only).
+
+use super::accel::{
+    AccelReport, Accelerator, DmdAccelerator, JumpCtx, LineFitAccelerator, NoAccel,
+};
+use super::checkpoint::TrainState;
+use super::observe::{
+    CheckpointEvery, EarlyStop, EpochEvent, JsonlMetrics, LogObserver, Observer, Signal,
+    StepEvent, WeightTrace,
+};
+use crate::config::{AccelKind, TrainConfig};
+use crate::data::{Batcher, Dataset};
+use crate::metrics::{DmdStats, LossHistory, LossPoint};
+use crate::model::Arch;
+use crate::optim::{self, Optimizer};
+use crate::rng::Rng;
+use crate::runtime::{DeviceBatch, Executable, Runtime};
+use crate::tensor::Tensor;
+use crate::util::timer::Profile;
+
+/// Outcome of a full training run.
+pub struct TrainReport {
+    pub history: LossHistory,
+    pub dmd_stats: DmdStats,
+    pub profile: Profile,
+    pub final_params: Vec<Tensor>,
+    /// Epochs actually executed by this `run` call (differs from
+    /// `cfg.epochs` under early stopping or resume).
+    pub epochs_run: usize,
+    pub wall_secs: f64,
+    /// Fig-1 weight trajectories (filled by the `WeightTrace` observer
+    /// when `record_weights` is set).
+    pub weight_trace: Vec<Vec<Vec<f32>>>,
+    /// Accelerator aggregate (strategy name, events, rejections).
+    pub accel: AccelReport,
+    /// True when an observer stopped the run before `cfg.epochs`.
+    pub stopped_early: bool,
+}
+
+/// Outcome of one optimizer step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// 1-based total optimizer step count.
+    pub step: usize,
+    pub epoch: usize,
+    pub loss: f64,
+    /// True when the accelerator fired on this step.
+    pub jumped: bool,
+    /// True when this step finished the current epoch's batches.
+    pub epoch_end: bool,
+}
+
+/// Outcome of one finished epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochSummary {
+    pub epoch: usize,
+    pub train_mse: f64,
+    /// NaN when not evaluated this epoch.
+    pub test_mse: f64,
+    pub dmd_fired: bool,
+    /// True when an observer requested an early stop.
+    pub stopped: bool,
+}
+
+/// Lightweight progress view of a session.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionState {
+    pub epoch: usize,
+    pub step: usize,
+    pub stopped: bool,
+}
+
+/// Assembles a [`TrainSession`] from a [`TrainConfig`], with optional
+/// overrides for each seam.
+pub struct SessionBuilder<'rt> {
+    runtime: &'rt Runtime,
+    cfg: TrainConfig,
+    optimizer: Option<Box<dyn Optimizer>>,
+    accelerator: Option<Box<dyn Accelerator>>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl<'rt> SessionBuilder<'rt> {
+    pub fn new(runtime: &'rt Runtime, cfg: TrainConfig) -> Self {
+        SessionBuilder {
+            runtime,
+            cfg,
+            optimizer: None,
+            accelerator: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Override the config-selected optimizer.
+    pub fn optimizer(mut self, o: Box<dyn Optimizer>) -> Self {
+        self.optimizer = Some(o);
+        self
+    }
+
+    /// Override the config-selected accelerator.
+    pub fn accelerator(mut self, a: Box<dyn Accelerator>) -> Self {
+        self.accelerator = Some(a);
+        self
+    }
+
+    /// Append a custom observer (runs after the config-derived ones).
+    pub fn observe(mut self, o: Box<dyn Observer>) -> Self {
+        self.observers.push(o);
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<TrainSession> {
+        let cfg = self.cfg;
+        let train_exe = self.runtime.load(&format!("train_step_{}", cfg.artifact))?;
+        let predict_exe = self.runtime.load(&format!("predict_{}", cfg.artifact))?;
+        let arch = Arch::new(train_exe.entry().arch.clone())?;
+        // RNG discipline (bit-compatible with the old trainer): the
+        // master stream seeds the parameters, then forks the batch
+        // stream; later draws (noise re-injection) come off the master.
+        let mut rng = Rng::new(cfg.seed);
+        let params = arch.init_params(&mut rng);
+        let batch_rng = rng.fork(1);
+
+        let optimizer = match self.optimizer {
+            Some(o) => o,
+            None => optim::from_name(&cfg.optimizer, cfg.adam, cfg.sgd)?,
+        };
+        let accel: Box<dyn Accelerator> = match self.accelerator {
+            Some(a) => a,
+            None => match (&cfg.dmd, cfg.accel) {
+                // dmd.enabled = false always means "no acceleration"
+                (None, _) | (_, AccelKind::None) => Box::new(NoAccel),
+                (Some(d), AccelKind::Dmd) => Box::new(DmdAccelerator::new(
+                    d.clone(),
+                    arch.num_layers(),
+                    cfg.parallel_dmd,
+                )),
+                (Some(d), AccelKind::LineFit) => {
+                    Box::new(LineFitAccelerator::new(d.clone(), arch.num_layers()))
+                }
+            },
+        };
+
+        let mut observers: Vec<Box<dyn Observer>> = Vec::new();
+        if cfg.log_every > 0 {
+            let log = LogObserver::new(cfg.artifact.clone(), cfg.log_every);
+            observers.push(Box::new(log));
+        }
+        if cfg.record_weights {
+            observers.push(Box::new(WeightTrace::new(32)));
+        }
+        if cfg.early_stop_patience > 0 {
+            observers.push(Box::new(EarlyStop::new(
+                cfg.early_stop_patience,
+                cfg.early_stop_min_delta,
+            )));
+        }
+        if cfg.checkpoint_every > 0 {
+            let ck = CheckpointEvery::new(cfg.checkpoint_every, &cfg.out_dir);
+            observers.push(Box::new(ck));
+        }
+        if let Some(path) = &cfg.metrics_jsonl {
+            observers.push(Box::new(JsonlMetrics::create(path)?));
+        }
+        observers.extend(self.observers);
+
+        Ok(TrainSession {
+            arch,
+            cfg,
+            train_exe,
+            predict_exe,
+            params,
+            optimizer,
+            accel,
+            observers,
+            rng,
+            batch_rng,
+            step: 0,
+            epoch: 0,
+            stopped: false,
+            profile: Profile::new(),
+            history: LossHistory::new(),
+            dmd_stats: DmdStats::new(),
+            batcher: None,
+            full_batch: false,
+            scratch: None,
+            bound: None,
+            restored_order: None,
+            queue: Vec::new(),
+            qi: 0,
+            epoch_loss: 0.0,
+            epoch_batches: 0,
+            epoch_jumped: false,
+            epoch_open: false,
+        })
+    }
+}
+
+/// The step-granular Algorithm-1 state machine.
+pub struct TrainSession {
+    arch: Arch,
+    cfg: TrainConfig,
+    train_exe: Executable,
+    predict_exe: Executable,
+    params: Vec<Tensor>,
+    optimizer: Box<dyn Optimizer>,
+    accel: Box<dyn Accelerator>,
+    observers: Vec<Box<dyn Observer>>,
+    rng: Rng,
+    batch_rng: Rng,
+    step: usize,
+    epoch: usize,
+    stopped: bool,
+    profile: Profile,
+    history: LossHistory,
+    dmd_stats: DmdStats,
+    // dataset binding (created on first step/run against a dataset)
+    batcher: Option<Batcher>,
+    full_batch: bool,
+    /// Mini-batch path: one reused (x, y) scratch pair for the whole
+    /// run — `Batcher::gather_into` copies rows, never allocates.
+    scratch: Option<(Tensor, Tensor)>,
+    /// (n_train, n_in, n_out) of the bound dataset.
+    bound: Option<(usize, usize, usize)>,
+    /// Batcher order restored from a checkpoint, applied at bind time.
+    restored_order: Option<Vec<usize>>,
+    // epoch-in-progress state
+    queue: Vec<Vec<usize>>,
+    qi: usize,
+    epoch_loss: f64,
+    epoch_batches: usize,
+    epoch_jumped: bool,
+    /// True from `begin_epoch` until `finish_epoch` — lets raw `step()`
+    /// loops finalize a completed epoch before the next one starts.
+    epoch_open: bool,
+}
+
+impl TrainSession {
+    /// Build a session straight from a config with the config-selected
+    /// optimizer, accelerator and observers (the common path).
+    pub fn new(runtime: &Runtime, cfg: TrainConfig) -> anyhow::Result<TrainSession> {
+        SessionBuilder::new(runtime, cfg).build()
+    }
+
+    pub fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn set_params(&mut self, params: Vec<Tensor>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn history(&self) -> &LossHistory {
+        &self.history
+    }
+
+    pub fn dmd_stats(&self) -> &DmdStats {
+        &self.dmd_stats
+    }
+
+    /// Lightweight progress view.
+    pub fn state(&self) -> SessionState {
+        SessionState {
+            epoch: self.epoch,
+            step: self.step,
+            stopped: self.stopped,
+        }
+    }
+
+    /// Validate the dataset against the architecture and set up the
+    /// batcher; idempotent for a same-shaped dataset.
+    fn bind(&mut self, ds: &Dataset) -> anyhow::Result<()> {
+        let fp = (ds.n_train(), ds.n_in(), ds.n_out());
+        if let Some(b) = self.bound {
+            anyhow::ensure!(
+                b == fp,
+                "session is bound to a dataset of shape {:?}, got {:?}",
+                b,
+                fp
+            );
+            return Ok(());
+        }
+        anyhow::ensure!(
+            ds.n_in() == self.arch.input_dim() && ds.n_out() == self.arch.output_dim(),
+            "dataset ({}, {}) does not match arch {:?}",
+            ds.n_in(),
+            ds.n_out(),
+            self.arch.dims
+        );
+        // batch = 0 in the manifest means dynamic: full-batch training
+        // on the whole training set (the paper's regime).
+        let batch = self.train_exe.effective_batch(ds.n_train());
+        anyhow::ensure!(
+            ds.n_train() >= batch,
+            "dataset has {} train rows < batch {batch}",
+            ds.n_train()
+        );
+        let mut batcher = Batcher::new(ds.n_train(), batch)?;
+        if let Some(order) = self.restored_order.take() {
+            batcher.set_order(order)?;
+        }
+        self.batcher = Some(batcher);
+        self.full_batch = batch == ds.n_train();
+        self.scratch = if self.full_batch {
+            None
+        } else {
+            Some((
+                Tensor::zeros(batch, ds.n_in()),
+                Tensor::zeros(batch, ds.n_out()),
+            ))
+        };
+        self.bound = Some(fp);
+        Ok(())
+    }
+
+    /// Draw a fresh epoch of batch indices and reset the epoch
+    /// accumulators.
+    fn begin_epoch(&mut self) {
+        let batcher = self.batcher.as_mut().expect("begin_epoch before bind");
+        self.queue = batcher.epoch(&mut self.batch_rng);
+        self.qi = 0;
+        self.epoch_loss = 0.0;
+        self.epoch_batches = 0;
+        self.epoch_jumped = false;
+        self.epoch_open = true;
+    }
+
+    /// One optimizer step: backprop on the next batch, optimizer
+    /// update, accelerator observe + (possibly) jump. Starts a new
+    /// epoch's batch queue on demand — finalizing the previous epoch
+    /// first ([`TrainSession::finish_epoch`]) if a raw `step()` loop
+    /// left it completed but unrecorded.
+    pub fn step(&mut self, ds: &Dataset) -> anyhow::Result<StepOutcome> {
+        self.step_with(ds, None)
+    }
+
+    /// [`TrainSession::step`] against an optionally pinned full batch
+    /// (`run_epoch` pins once per epoch so the PJRT backend keeps its
+    /// device upload across steps; on native, pinning just borrows the
+    /// dataset tensors).
+    fn step_with(
+        &mut self,
+        ds: &Dataset,
+        pinned: Option<&DeviceBatch<'_>>,
+    ) -> anyhow::Result<StepOutcome> {
+        self.bind(ds)?;
+        if self.qi >= self.queue.len() {
+            if self.epoch_open {
+                // a raw step() loop ran the epoch to completion without
+                // finalizing it: record it before starting the next one
+                self.finish_epoch(ds)?;
+            }
+            self.begin_epoch();
+        }
+
+        // --- backprop -------------------------------------------------
+        let (loss, grads) = if let Some(db) = pinned {
+            let exe = &self.train_exe;
+            let params = &self.params;
+            self.profile
+                .scope("backprop_exec", || exe.train_step_on(params, db))?
+        } else if self.full_batch {
+            // the batch is the whole (device-resident) training set —
+            // no per-step gather
+            let exe = &self.train_exe;
+            let params = &self.params;
+            self.profile.scope("backprop_exec", || {
+                exe.train_step(params, &ds.x_train, &ds.y_train)
+            })?
+        } else {
+            let idx = &self.queue[self.qi];
+            let (bx, by) = self.scratch.as_mut().expect("scratch on batch path");
+            self.profile.scope("batch_gather", || {
+                Batcher::gather_into(&ds.x_train, &ds.y_train, idx, bx, by)
+            });
+            let (bx, by) = (&*bx, &*by);
+            let exe = &self.train_exe;
+            let params = &self.params;
+            self.profile
+                .scope("backprop_exec", || exe.train_step(params, bx, by))?
+        };
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {}", self.step);
+
+        // --- optimizer update -----------------------------------------
+        {
+            let opt = &mut self.optimizer;
+            let params = &mut self.params;
+            self.profile.scope("optim_update", || opt.step(params, &grads));
+        }
+        self.step += 1;
+        self.epoch_loss += loss;
+        self.epoch_batches += 1;
+
+        // --- observers ------------------------------------------------
+        {
+            let ev = StepEvent {
+                step: self.step,
+                epoch: self.epoch,
+                loss,
+                params: &self.params,
+                arch: &self.arch,
+            };
+            for o in &mut self.observers {
+                o.on_step(&ev);
+            }
+        }
+
+        // --- accelerator ----------------------------------------------
+        let mut jumped = false;
+        {
+            let accel = &mut self.accel;
+            let arch = &self.arch;
+            let params = &mut self.params;
+            let profile = &mut self.profile;
+            let rng = &mut self.rng;
+            let predict_exe = &self.predict_exe;
+            accel.observe(self.step, arch, &params[..], profile);
+            if accel.ready() {
+                let mut measure = |p: &[Tensor]| -> anyhow::Result<(f64, f64)> {
+                    let train = predict_exe.mse_all(p, &ds.x_train, &ds.y_train)?;
+                    let test = predict_exe.mse_all(p, &ds.x_test, &ds.y_test)?;
+                    Ok((train, test))
+                };
+                let mut ctx = JumpCtx {
+                    epoch: self.epoch,
+                    measure_enabled: self.cfg.measure_dmd,
+                    rng,
+                    profile,
+                    measure: &mut measure,
+                };
+                if let Some(ev) = accel.maybe_jump(arch, params, &mut ctx)? {
+                    self.dmd_stats.push(ev);
+                    for o in &mut self.observers {
+                        o.on_jump(&ev);
+                    }
+                    self.epoch_jumped = true;
+                    jumped = true;
+                }
+            }
+        }
+
+        self.qi += 1;
+        Ok(StepOutcome {
+            step: self.step,
+            epoch: self.epoch,
+            loss,
+            jumped,
+            epoch_end: self.qi >= self.queue.len(),
+        })
+    }
+
+    /// Finish the current epoch: evaluate, record history, notify
+    /// observers, advance the epoch counter. Raw `step()` loops call
+    /// this when [`StepOutcome::epoch_end`] is set (continuing to
+    /// `step()` instead finalizes the epoch automatically).
+    pub fn finish_epoch(&mut self, ds: &Dataset) -> anyhow::Result<EpochSummary> {
+        anyhow::ensure!(
+            self.epoch_open,
+            "finish_epoch without an epoch in progress"
+        );
+        self.epoch_open = false;
+        let epoch = self.epoch;
+        let train_mse = self.epoch_loss / self.epoch_batches.max(1) as f64;
+        let test_mse = if epoch % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
+            let exe = &self.predict_exe;
+            let params = &self.params;
+            self.profile
+                .scope("test_eval", || exe.mse_all(params, &ds.x_test, &ds.y_test))?
+        } else {
+            f64::NAN
+        };
+        let dmd_fired = self.epoch_jumped;
+        self.history.push(LossPoint {
+            epoch,
+            train_mse,
+            test_mse,
+            dmd_event: if dmd_fired { 1.0 } else { 0.0 },
+        });
+        let mut stop = false;
+        {
+            let ev = EpochEvent {
+                epoch,
+                epochs: self.cfg.epochs,
+                train_mse,
+                test_mse,
+                dmd_fired,
+                params: &self.params,
+                arch: &self.arch,
+                artifact: &self.cfg.artifact,
+            };
+            for o in &mut self.observers {
+                if o.on_epoch(&ev)? == Signal::Stop {
+                    stop = true;
+                }
+            }
+        }
+        self.epoch += 1;
+        if stop {
+            self.stopped = true;
+        }
+        Ok(EpochSummary {
+            epoch,
+            train_mse,
+            test_mse,
+            dmd_fired,
+            stopped: self.stopped,
+        })
+    }
+
+    /// Run one full epoch (continuing a partially-stepped one, if the
+    /// caller mixed raw [`TrainSession::step`] calls).
+    pub fn run_epoch(&mut self, ds: &Dataset) -> anyhow::Result<EpochSummary> {
+        self.bind(ds)?;
+        anyhow::ensure!(
+            self.epoch < self.cfg.epochs,
+            "all {} configured epochs already run",
+            self.cfg.epochs
+        );
+        // Full-batch fast path: the batch is constant for the whole
+        // epoch, so pin it once (§Perf: on PJRT this removes a per-step
+        // host→device copy of the entire dataset; on native it is a
+        // zero-copy borrow).
+        let pinned = if self.full_batch {
+            let exe = &self.train_exe;
+            Some(self.profile.scope("batch_upload", || {
+                exe.upload_batch(&ds.x_train, &ds.y_train)
+            })?)
+        } else {
+            None
+        };
+        loop {
+            let out = self.step_with(ds, pinned.as_ref())?;
+            if out.epoch_end {
+                break;
+            }
+        }
+        self.finish_epoch(ds)
+    }
+
+    /// Full training run: epochs until `cfg.epochs` or an observer
+    /// stops the run, then assemble the report.
+    pub fn run(&mut self, ds: &Dataset) -> anyhow::Result<TrainReport> {
+        let t_start = std::time::Instant::now();
+        let start_epoch = self.epoch;
+        self.bind(ds)?;
+        while self.epoch < self.cfg.epochs && !self.stopped {
+            self.run_epoch(ds)?;
+        }
+        let mut report = TrainReport {
+            history: std::mem::take(&mut self.history),
+            dmd_stats: std::mem::take(&mut self.dmd_stats),
+            profile: std::mem::take(&mut self.profile),
+            final_params: self.params.clone(),
+            epochs_run: self.epoch - start_epoch,
+            wall_secs: t_start.elapsed().as_secs_f64(),
+            weight_trace: Vec::new(),
+            accel: self.accel.report(),
+            stopped_early: self.stopped,
+        };
+        for o in &mut self.observers {
+            o.finish(&mut report);
+        }
+        Ok(report)
+    }
+
+    /// Coarse warm start: adopt checkpointed parameters at a given step
+    /// count. Optimizer moments, RNG streams and snapshot buffers start
+    /// fresh — use [`TrainSession::restore`] for bit-exact resumption.
+    pub fn resume_from(&mut self, params: Vec<Tensor>, step: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.params.len(),
+            "checkpoint has {} tensors, arch {:?} needs {}",
+            params.len(),
+            self.arch.dims,
+            self.params.len()
+        );
+        for (i, (p, q)) in params.iter().zip(&self.params).enumerate() {
+            anyhow::ensure!(
+                p.shape() == q.shape(),
+                "checkpoint tensor {i} is {:?}, arch needs {:?}",
+                p.shape(),
+                q.shape()
+            );
+        }
+        self.params = params;
+        self.step = step;
+        Ok(())
+    }
+
+    /// Capture the full training state for a resume sidecar. Only legal
+    /// at an epoch boundary (no epoch in progress — run_epoch/
+    /// finish_epoch first).
+    pub fn export_state(&self) -> anyhow::Result<TrainState> {
+        anyhow::ensure!(
+            !self.epoch_open,
+            "export_state mid-epoch ({} of {} batches run; finish the epoch first)",
+            self.qi,
+            self.queue.len()
+        );
+        Ok(TrainState {
+            step: self.step as u64,
+            epoch: self.epoch as u64,
+            rng: self.rng.state(),
+            batch_rng: self.batch_rng.state(),
+            opt: self.optimizer.export_state(),
+            batch_order: self
+                .batcher
+                .as_ref()
+                .map(|b| b.order().iter().map(|&i| i as u64).collect())
+                .unwrap_or_default(),
+            snapshots: self.accel.export_snapshots(),
+        })
+    }
+
+    /// Bit-exact resume: adopt checkpointed parameters plus the full
+    /// [`TrainState`] (counters, RNG streams, optimizer moments,
+    /// batcher order, snapshot buffers). The restored *training
+    /// trajectory* — losses, jump decisions, final parameters — is
+    /// bit-identical to the uninterrupted run. Observer state is *not*
+    /// part of the checkpoint: `EarlyStop` patience counters,
+    /// `WeightTrace` rows and the `AccelReport` aggregates restart at
+    /// the resume point, so an early-stopped run may stop at a
+    /// different epoch than its uninterrupted twin.
+    pub fn restore(&mut self, params: Vec<Tensor>, st: &TrainState) -> anyhow::Result<()> {
+        self.resume_from(params, st.step as usize)?;
+        self.epoch = st.epoch as usize;
+        anyhow::ensure!(
+            self.epoch <= self.cfg.epochs,
+            "checkpoint is at epoch {}, config has only {}",
+            self.epoch,
+            self.cfg.epochs
+        );
+        self.rng = Rng::from_state(&st.rng);
+        self.batch_rng = Rng::from_state(&st.batch_rng);
+        self.optimizer.import_state(&st.opt)?;
+        {
+            let accel = &mut self.accel;
+            accel.import_snapshots(&self.arch, &st.snapshots)?;
+        }
+        let order: Vec<usize> = st.batch_order.iter().map(|&i| i as usize).collect();
+        if order.is_empty() {
+            self.restored_order = None;
+        } else if let Some(batcher) = self.batcher.as_mut() {
+            batcher.set_order(order)?;
+        } else {
+            self.restored_order = Some(order);
+        }
+        self.queue.clear();
+        self.qi = 0;
+        self.epoch_open = false;
+        self.stopped = false;
+        Ok(())
+    }
+}

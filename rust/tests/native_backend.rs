@@ -9,7 +9,7 @@ use dmdtrain::model::{forward, Arch};
 use dmdtrain::rng::Rng;
 use dmdtrain::runtime::{ManifestEntry, NativeExecutable, Runtime};
 use dmdtrain::tensor::Tensor;
-use dmdtrain::trainer::Trainer;
+use dmdtrain::trainer::TrainSession;
 
 fn native_train_step(arch: &[usize]) -> NativeExecutable {
     NativeExecutable::new(ManifestEntry::native_model("train_step", "train_step_tiny", arch, 0))
@@ -170,8 +170,8 @@ m = 6
 s = 10
 "#;
     let cfg = TrainConfig::from_config(&Config::parse(text).unwrap()).unwrap();
-    let mut trainer = Trainer::new(&rt, cfg).unwrap();
-    let report = trainer.run(&ds).unwrap();
+    let mut session = TrainSession::new(&rt, cfg).unwrap();
+    let report = session.run(&ds).unwrap();
     let first = report.history.points.first().unwrap().train_mse;
     let last = report.history.final_train().unwrap();
     assert!(
@@ -205,8 +205,8 @@ m = 5
 s = 8
 "#;
     let cfg = TrainConfig::from_config(&Config::parse(text).unwrap()).unwrap();
-    let a = Trainer::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
-    let b = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    let a = TrainSession::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+    let b = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
     assert_eq!(
         a.history.final_train().unwrap(),
         b.history.final_train().unwrap()

@@ -1,0 +1,352 @@
+//! The API-redesign acceptance gate: a DMD-accelerated run through the
+//! new `TrainSession` must reproduce the *old* monolithic `Trainer::run`
+//! loop bit-identically — same seed, same snapshot cadence, same jump
+//! decisions, same loss history, same final parameters.
+//!
+//! The old trainer is deleted, so `frozen` below preserves its exact
+//! loop (verbatim numeric order: init → fork batch RNG → per step
+//! backprop / Adam / snapshot / jump with relaxation, noise
+//! re-injection and the accept-worse guard → per epoch eval) built only
+//! from public APIs. If the session ever drifts numerically, this file
+//! is the tripwire.
+
+use dmdtrain::config::{AccelKind, Config, TrainConfig};
+use dmdtrain::data::{Batcher, Dataset};
+use dmdtrain::dmd::{extrapolate_all_layers, SnapshotBuffer};
+use dmdtrain::metrics::{LossHistory, LossPoint};
+use dmdtrain::model::Arch;
+use dmdtrain::optim::{Adam, Optimizer};
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::TrainSession;
+use dmdtrain::util;
+
+mod frozen {
+    //! The pre-redesign `Trainer::run`, preserved for the equivalence
+    //! assertion (mirrors the deleted monolithic loop line by line).
+
+    use super::*;
+
+    pub struct FrozenReport {
+        pub history: LossHistory,
+        pub final_params: Vec<Tensor>,
+        pub events: usize,
+    }
+
+    pub fn run(runtime: &Runtime, cfg: &TrainConfig, ds: &Dataset) -> FrozenReport {
+        let train_exe = runtime
+            .load(&format!("train_step_{}", cfg.artifact))
+            .expect("train exe");
+        let predict_exe = runtime
+            .load(&format!("predict_{}", cfg.artifact))
+            .expect("predict exe");
+        let arch = Arch::new(train_exe.entry().arch.clone()).expect("arch");
+        let mut rng = Rng::new(cfg.seed);
+        let mut params = arch.init_params(&mut rng);
+        let mut buffers: Vec<SnapshotBuffer> = match &cfg.dmd {
+            Some(d) => (0..arch.num_layers()).map(|_| SnapshotBuffer::new(d.m)).collect(),
+            None => Vec::new(),
+        };
+        let mut adam = Adam::new(cfg.adam);
+        let mut history = LossHistory::new();
+        let mut events = 0usize;
+
+        let batch = train_exe.effective_batch(ds.n_train());
+        let mut batcher = Batcher::new(ds.n_train(), batch).expect("batcher");
+        let mut brng = rng.fork(1);
+        let mut step = 0usize;
+        let dmd_m = cfg.dmd.as_ref().map(|d| d.m);
+        let full_batch = batch == ds.n_train();
+        let measure = |params: &[Tensor]| -> (f64, f64) {
+            let train = predict_exe
+                .mse_all(params, &ds.x_train, &ds.y_train)
+                .expect("train mse");
+            let test = predict_exe
+                .mse_all(params, &ds.x_test, &ds.y_test)
+                .expect("test mse");
+            (train, test)
+        };
+
+        for epoch in 0..cfg.epochs {
+            let mut epoch_loss = 0.0;
+            let mut n_batches = 0usize;
+            let mut dmd_fired = false;
+
+            for idx in batcher.epoch(&mut brng) {
+                let (loss, grads) = if full_batch {
+                    train_exe
+                        .train_step(&params, &ds.x_train, &ds.y_train)
+                        .expect("train_step")
+                } else {
+                    let (bx, by) = Batcher::gather(&ds.x_train, &ds.y_train, &idx);
+                    train_exe.train_step(&params, &bx, &by).expect("train_step")
+                };
+                assert!(loss.is_finite(), "loss diverged at step {step}");
+                adam.step(&mut params, &grads);
+                step += 1;
+                epoch_loss += loss;
+                n_batches += 1;
+
+                if let Some(m) = dmd_m {
+                    for layer in 0..arch.num_layers() {
+                        let w = &params[2 * layer];
+                        let b = &params[2 * layer + 1];
+                        buffers[layer].push_parts(step, &[w.data(), b.data()]);
+                    }
+                    if buffers[0].len() == m {
+                        let dmd = cfg.dmd.clone().unwrap();
+                        let guard = dmd.accept_worse_factor;
+                        let need_measure = cfg.measure_dmd || guard.is_some();
+                        let (before_tr, _before_te) = if need_measure {
+                            measure(&params)
+                        } else {
+                            (f64::NAN, f64::NAN)
+                        };
+                        let saved = guard.map(|_| params.clone());
+                        let outcomes =
+                            extrapolate_all_layers(&buffers, &dmd, dmd.s, cfg.parallel_dmd);
+                        let omega = dmd.relaxation.clamp(0.0, 1.0) as f32;
+                        for out in &outcomes {
+                            if let Ok(o) = &out.result {
+                                let last = buffers[out.layer].last().expect("full buffer");
+                                let mut w: Vec<f32> = if omega < 1.0 {
+                                    o.new_weights
+                                        .iter()
+                                        .zip(last)
+                                        .map(|(&d, &l)| l + omega * (d - l))
+                                        .collect()
+                                } else {
+                                    o.new_weights.clone()
+                                };
+                                if dmd.noise_reinject {
+                                    let n = w.len() as f64;
+                                    let var = o
+                                        .new_weights
+                                        .iter()
+                                        .zip(last)
+                                        .map(|(&d, &l)| ((d - l) as f64).powi(2))
+                                        .sum::<f64>()
+                                        / n.max(1.0);
+                                    let std = var.sqrt();
+                                    for v in &mut w {
+                                        *v += (std * rng.normal()) as f32;
+                                    }
+                                }
+                                arch.unflatten_layer(&mut params, out.layer, &w);
+                            }
+                        }
+                        for buf in &mut buffers {
+                            buf.clear();
+                        }
+                        if need_measure {
+                            let (after_tr, _after_te) = measure(&params);
+                            if let (Some(factor), Some(saved)) = (guard, saved) {
+                                if !(after_tr <= before_tr * factor) {
+                                    params = saved; // reject the jump
+                                }
+                            }
+                        }
+                        events += 1;
+                        dmd_fired = true;
+                    }
+                }
+            }
+
+            let train_mse = epoch_loss / n_batches.max(1) as f64;
+            let test_mse = if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+                predict_exe
+                    .mse_all(&params, &ds.x_test, &ds.y_test)
+                    .expect("eval")
+            } else {
+                f64::NAN
+            };
+            history.push(LossPoint {
+                epoch,
+                train_mse,
+                test_mse,
+                dmd_event: if dmd_fired { 1.0 } else { 0.0 },
+            });
+        }
+
+        FrozenReport {
+            history,
+            final_params: params,
+            events,
+        }
+    }
+}
+
+fn runtime() -> Runtime {
+    Runtime::cpu(util::repo_root().join("artifacts")).expect("runtime")
+}
+
+/// Synthetic regression data matching (n_in → n_out).
+fn synthetic_dataset(
+    n_train: usize,
+    n_test: usize,
+    n_in: usize,
+    n_out: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, n_in, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, n_out, |r, c| {
+            let v: f64 = (0..n_in)
+                .map(|k| (((k + c) % 7 + 1) as f64 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.3 * v / n_in as f64) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+fn config(artifact: &str, epochs: usize, m: usize, s: usize) -> TrainConfig {
+    let text = format!(
+        r#"
+[model]
+artifact = "{artifact}"
+[data]
+path = "unused"
+[train]
+epochs = {epochs}
+seed = 3
+eval_every = 5
+log_every = 0
+[adam]
+lr = 0.003
+[dmd]
+enabled = true
+m = {m}
+s = {s}
+"#
+    );
+    TrainConfig::from_config(&Config::parse(&text).unwrap()).unwrap()
+}
+
+fn assert_equivalent(cfg: &TrainConfig, ds: &Dataset) {
+    let rt = runtime();
+    let old = frozen::run(&rt, cfg, ds);
+    let new = TrainSession::new(&rt, cfg.clone()).unwrap().run(ds).unwrap();
+
+    assert_eq!(old.history.points.len(), new.history.points.len());
+    for (a, b) in old.history.points.iter().zip(&new.history.points) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(
+            a.train_mse.to_bits(),
+            b.train_mse.to_bits(),
+            "train MSE diverged at epoch {} ({} vs {})",
+            a.epoch,
+            a.train_mse,
+            b.train_mse
+        );
+        assert_eq!(
+            a.test_mse.to_bits(),
+            b.test_mse.to_bits(),
+            "test MSE diverged at epoch {}",
+            a.epoch
+        );
+        assert_eq!(a.dmd_event, b.dmd_event, "jump schedule diverged at epoch {}", a.epoch);
+    }
+    assert_eq!(old.events, new.dmd_stats.events.len(), "event count diverged");
+    assert_eq!(old.final_params.len(), new.final_params.len());
+    for (i, (a, b)) in old.final_params.iter().zip(&new.final_params).enumerate() {
+        assert_eq!(a.data(), b.data(), "final params diverged in tensor {i}");
+    }
+}
+
+/// Static-batch mini-batch path (test artifact, 32 rows at batch 16):
+/// shuffled batches, measured jumps.
+#[test]
+fn session_matches_frozen_trainer_minibatch_dmd() {
+    let ds = synthetic_dataset(32, 8, 6, 6, 1);
+    let cfg = config("test", 24, 5, 8);
+    assert_equivalent(&cfg, &ds);
+}
+
+/// Relaxation ω = 0.5 plus noise re-injection: the master RNG stream
+/// must line up draw for draw.
+#[test]
+fn session_matches_frozen_trainer_relaxed_noisy() {
+    let ds = synthetic_dataset(16, 8, 6, 6, 2);
+    let mut cfg = config("test", 22, 5, 8);
+    {
+        let d = cfg.dmd.as_mut().unwrap();
+        d.relaxation = 0.5;
+        d.noise_reinject = true;
+    }
+    assert_equivalent(&cfg, &ds);
+}
+
+/// The accept-worse rejection guard (extra measurement + rollback).
+#[test]
+fn session_matches_frozen_trainer_with_guard() {
+    let ds = synthetic_dataset(16, 8, 6, 6, 3);
+    let mut cfg = config("test", 20, 4, 25);
+    cfg.dmd.as_mut().unwrap().accept_worse_factor = Some(1.0);
+    assert_equivalent(&cfg, &ds);
+}
+
+/// The paper architecture (6→40→200→1000→2670, dynamic full batch):
+/// the acceptance-criterion run. Few epochs — the point is bit-identity
+/// at full scale, not convergence.
+#[test]
+fn session_matches_frozen_trainer_paper_arch() {
+    let ds = synthetic_dataset(12, 4, 6, 2670, 4);
+    let mut cfg = config("paper", 6, 2, 5);
+    cfg.measure_dmd = false; // keep the debug-build runtime in check
+    assert_equivalent(&cfg, &ds);
+}
+
+/// Accelerator selection from TOML: dmd / linefit / none all build and
+/// behave as configured through the same session.
+#[test]
+fn accelerator_kinds_selectable_from_toml() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 6, 6, 5);
+    for (kind, want_name, want_events) in
+        [("dmd", "dmd", 4), ("linefit", "linefit", 4), ("none", "none", 0)]
+    {
+        let text = format!(
+            r#"
+[model]
+artifact = "test"
+[data]
+path = "unused"
+[train]
+epochs = 20
+seed = 3
+eval_every = 5
+log_every = 0
+[accel]
+kind = "{kind}"
+[dmd]
+enabled = true
+m = 5
+s = 8
+"#
+        );
+        let cfg = TrainConfig::from_config(&Config::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            cfg.accel,
+            match kind {
+                "dmd" => AccelKind::Dmd,
+                "linefit" => AccelKind::LineFit,
+                _ => AccelKind::None,
+            }
+        );
+        let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+        assert_eq!(report.accel.name, want_name);
+        assert_eq!(
+            report.dmd_stats.events.len(),
+            want_events,
+            "accel '{kind}' fired the wrong number of events"
+        );
+        assert!(report.history.final_train().unwrap().is_finite());
+        assert!(report.final_params.iter().all(|p| p.is_finite()));
+    }
+}

@@ -1,12 +1,15 @@
-//! Trainer integration: Algorithm 1 end-to-end on a synthetic dataset
-//! through the default runtime (native backend, `test` artifact 6→8→6,
-//! static batch 16).
+//! TrainSession integration: Algorithm 1 end-to-end on a synthetic
+//! dataset through the default runtime (native backend, `test` artifact
+//! 6→8→6, static batch 16), plus resumable-training round-trips and the
+//! early-stop / checkpoint observers.
 
 use dmdtrain::config::{Config, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::runtime::Runtime;
 use dmdtrain::tensor::Tensor;
-use dmdtrain::trainer::{load_params, save_params, Trainer};
+use dmdtrain::trainer::{
+    load_params, load_train_state, save_params, save_train_state, TrainSession,
+};
 use dmdtrain::rng::Rng;
 use dmdtrain::util;
 
@@ -60,21 +63,25 @@ s = 8
 fn plain_training_reduces_loss() {
     let rt = runtime();
     let ds = synthetic_dataset(16, 8, 1);
-    let mut trainer = Trainer::new(&rt, base_config(300, false)).unwrap();
-    let report = trainer.run(&ds).unwrap();
+    let mut session = TrainSession::new(&rt, base_config(300, false)).unwrap();
+    let report = session.run(&ds).unwrap();
     let first = report.history.points.first().unwrap().train_mse;
     let last = report.history.final_train().unwrap();
     assert!(last < 0.5 * first, "training barely moved: {first} → {last}"); // capacity-limited tiny net
     assert!(report.history.final_test().unwrap().is_finite());
     assert_eq!(report.dmd_stats.events.len(), 0);
+    // epochs_run reports the actual count, not cfg.epochs blindly
+    assert_eq!(report.epochs_run, 300);
+    assert!(!report.stopped_early);
+    assert_eq!(report.accel.name, "none");
 }
 
 #[test]
 fn dmd_events_fire_on_schedule() {
     let rt = runtime();
     let ds = synthetic_dataset(16, 8, 2);
-    let mut trainer = Trainer::new(&rt, base_config(23, true)).unwrap();
-    let report = trainer.run(&ds).unwrap();
+    let mut session = TrainSession::new(&rt, base_config(23, true)).unwrap();
+    let report = session.run(&ds).unwrap();
     // full-batch: 1 step per epoch, m = 5 → events at steps 5, 10, 15, 20
     assert_eq!(report.dmd_stats.events.len(), 4);
     for e in &report.dmd_stats.events {
@@ -90,11 +97,11 @@ fn dmd_events_fire_on_schedule() {
 fn dmd_run_outperforms_or_matches_plain_here() {
     let rt = runtime();
     let ds = synthetic_dataset(16, 8, 3);
-    let plain = Trainer::new(&rt, base_config(80, false))
+    let plain = TrainSession::new(&rt, base_config(80, false))
         .unwrap()
         .run(&ds)
         .unwrap();
-    let dmd = Trainer::new(&rt, base_config(80, true))
+    let dmd = TrainSession::new(&rt, base_config(80, true))
         .unwrap()
         .run(&ds)
         .unwrap();
@@ -111,7 +118,7 @@ fn reject_worse_guard_never_degrades_events() {
     let ds = synthetic_dataset(16, 8, 4);
     let mut cfg = base_config(40, true);
     cfg.dmd.as_mut().unwrap().accept_worse_factor = Some(1.0);
-    let report = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
     for e in &report.dmd_stats.events {
         assert!(
             e.rel_train <= 1.0 + 1e-9,
@@ -128,7 +135,7 @@ fn zero_relaxation_makes_jumps_noops() {
     let ds = synthetic_dataset(16, 8, 9);
     let mut cfg = base_config(25, true);
     cfg.dmd.as_mut().unwrap().relaxation = 0.0;
-    let report = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
     assert!(!report.dmd_stats.events.is_empty());
     for e in &report.dmd_stats.events {
         assert!(
@@ -146,7 +153,7 @@ fn half_relaxation_between_noop_and_full() {
     let run = |omega: f64| {
         let mut cfg = base_config(30, true);
         cfg.dmd.as_mut().unwrap().relaxation = omega;
-        Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap()
+        TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap()
     };
     let full = run(1.0);
     let half = run(0.5);
@@ -165,7 +172,7 @@ fn noise_reinjection_runs_and_stays_finite() {
     let ds = synthetic_dataset(16, 8, 11);
     let mut cfg = base_config(30, true);
     cfg.dmd.as_mut().unwrap().noise_reinject = true;
-    let report = Trainer::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
     assert!(report.history.final_train().unwrap().is_finite());
     assert!(report.final_params.iter().all(|p| p.is_finite()));
     assert!(!report.dmd_stats.events.is_empty());
@@ -175,11 +182,11 @@ fn noise_reinjection_runs_and_stays_finite() {
 fn deterministic_given_seed() {
     let rt = runtime();
     let ds = synthetic_dataset(16, 8, 5);
-    let a = Trainer::new(&rt, base_config(15, true))
+    let a = TrainSession::new(&rt, base_config(15, true))
         .unwrap()
         .run(&ds)
         .unwrap();
-    let b = Trainer::new(&rt, base_config(15, true))
+    let b = TrainSession::new(&rt, base_config(15, true))
         .unwrap()
         .run(&ds)
         .unwrap();
@@ -196,8 +203,8 @@ fn deterministic_given_seed() {
 fn checkpoint_roundtrip_preserves_eval() {
     let rt = runtime();
     let ds = synthetic_dataset(16, 8, 6);
-    let mut trainer = Trainer::new(&rt, base_config(20, false)).unwrap();
-    let report = trainer.run(&ds).unwrap();
+    let mut session = TrainSession::new(&rt, base_config(20, false)).unwrap();
+    let report = session.run(&ds).unwrap();
 
     let dir = std::env::temp_dir().join("dmdtrain_trainer_it");
     std::fs::create_dir_all(&dir).unwrap();
@@ -213,6 +220,164 @@ fn checkpoint_roundtrip_preserves_eval() {
     assert_eq!(mse_orig, mse_loaded);
 }
 
+/// The resume round-trip (train k epochs → save → restore → finish)
+/// must be bit-identical to an uninterrupted run: the `.resume` sidecar
+/// carries the RNG streams (incl. the Box–Muller spare), the Adam
+/// moments, the step/epoch counters and the mid-fill snapshot buffers.
+#[test]
+fn resume_roundtrip_is_bit_identical_to_uninterrupted_run() {
+    let rt = runtime();
+    // 32 train rows at static batch 16 → 2 shuffled mini-batches per
+    // epoch (exercises the batch-RNG stream); m = 3 with 20 total steps
+    // leaves the snapshot buffers mid-fill at the save point.
+    let ds = synthetic_dataset(32, 8, 12);
+    let mut cfg = base_config(20, true);
+    cfg.dmd.as_mut().unwrap().m = 3;
+    cfg.dmd.as_mut().unwrap().noise_reinject = true; // exercises master RNG carry
+
+    // A: uninterrupted
+    let full = TrainSession::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+
+    // B: 10 epochs, save, restore into a fresh session, finish
+    let mut first_half = TrainSession::new(&rt, cfg.clone()).unwrap();
+    for _ in 0..10 {
+        first_half.run_epoch(&ds).unwrap();
+    }
+    let dir = std::env::temp_dir().join("dmdtrain_resume_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("half.dmdp");
+    let sidecar = dir.join("half.dmdp.resume");
+    save_params(first_half.params(), &ckpt).unwrap();
+    save_train_state(&sidecar, &first_half.export_state().unwrap()).unwrap();
+    drop(first_half);
+
+    let params = load_params(&ckpt).unwrap();
+    let st = load_train_state(&sidecar).unwrap();
+    let mut resumed = TrainSession::new(&rt, cfg).unwrap();
+    resumed.restore(params, &st).unwrap();
+    assert_eq!(resumed.state().epoch, 10);
+    assert_eq!(resumed.state().step, 20);
+    let second_half = resumed.run(&ds).unwrap();
+    assert_eq!(second_half.epochs_run, 10);
+
+    // final parameters: bit-identical
+    assert_eq!(full.final_params.len(), second_half.final_params.len());
+    for (a, b) in full.final_params.iter().zip(&second_half.final_params) {
+        assert_eq!(a.data(), b.data(), "resumed params diverged");
+    }
+    // loss history over the resumed epochs: bit-identical
+    let tail = &full.history.points[10..];
+    assert_eq!(tail.len(), second_half.history.points.len());
+    for (a, b) in tail.iter().zip(&second_half.history.points) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.test_mse.to_bits(), b.test_mse.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.dmd_event, b.dmd_event);
+    }
+}
+
+/// Without the sidecar, `resume_from` is a coarse warm start: shapes
+/// are validated, counters adopted, but optimizer/RNG state is fresh.
+#[test]
+fn resume_from_validates_shapes() {
+    let rt = runtime();
+    let mut session = TrainSession::new(&rt, base_config(5, false)).unwrap();
+    let good = session.params().to_vec();
+    assert!(session.resume_from(good, 7).is_ok());
+    assert_eq!(session.state().step, 7);
+    // wrong tensor count rejected
+    let mut session2 = TrainSession::new(&rt, base_config(5, false)).unwrap();
+    assert!(session2.resume_from(Vec::new(), 0).is_err());
+    // wrong shape rejected
+    let bad = vec![Tensor::zeros(1, 1); session2.params().len()];
+    assert!(session2.resume_from(bad, 0).is_err());
+}
+
+/// EarlyStop halts a plateaued run and the report says so (epochs_run
+/// < cfg.epochs — the old trainer always reported cfg.epochs).
+#[test]
+fn early_stop_reports_actual_epochs_run() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 13);
+    let mut cfg = base_config(50, false);
+    cfg.adam.lr = 0.0; // loss never improves
+    cfg.early_stop_patience = 3;
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    assert!(report.stopped_early, "plateaued run must early-stop");
+    assert_eq!(report.epochs_run, 4, "best at epoch 0 + 3 bad epochs");
+    assert_eq!(report.history.points.len(), 4);
+}
+
+#[test]
+fn checkpoint_every_writes_during_run() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 14);
+    let dir = std::env::temp_dir().join("dmdtrain_ckpt_every_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = base_config(9, false);
+    cfg.checkpoint_every = 4;
+    cfg.out_dir = dir.to_string_lossy().into_owned();
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    let ck = load_params(dir.join("ckpt_epoch000008.dmdp")).unwrap();
+    assert!(dir.join("ckpt_epoch000004.dmdp").exists());
+    assert_eq!(ck.len(), report.final_params.len());
+}
+
+#[test]
+fn jsonl_metrics_stream_during_run() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 15);
+    let dir = std::env::temp_dir().join("dmdtrain_jsonl_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+    let mut cfg = base_config(7, true);
+    cfg.metrics_jsonl = Some(path.to_string_lossy().into_owned());
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let epoch_lines = text.lines().filter(|l| l.contains("\"epoch\"")).count();
+    assert!(epoch_lines >= 7, "expected ≥7 metric lines, got {epoch_lines}");
+    let jump_lines = text.lines().filter(|l| l.contains("\"jump\"")).count();
+    assert_eq!(jump_lines, report.dmd_stats.events.len());
+}
+
+/// Callers that own the loop via raw `step()` must not lose epochs:
+/// stepping past an epoch boundary auto-finalizes the completed epoch
+/// (history + observers), and `finish_epoch` is public for the tail.
+#[test]
+fn raw_step_loop_records_every_epoch() {
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 16);
+    // full batch (16 rows at batch 16) → one step per epoch
+    let mut session = TrainSession::new(&rt, base_config(3, false)).unwrap();
+    loop {
+        let out = session.step(&ds).unwrap();
+        if out.epoch_end {
+            break;
+        }
+    }
+    assert_eq!(session.history().points.len(), 0, "epoch 0 not finalized yet");
+    let out = session.step(&ds).unwrap(); // first step of epoch 1
+    assert_eq!(out.epoch, 1, "auto-finalize must advance the epoch");
+    assert_eq!(session.history().points.len(), 1);
+    assert_eq!(session.state().epoch, 1);
+    // explicit finalize of a completed epoch also works
+    loop {
+        let out = session.step(&ds).unwrap();
+        if out.epoch_end {
+            break;
+        }
+    }
+    let summary = session.finish_epoch(&ds).unwrap();
+    assert_eq!(summary.epoch, 1);
+    assert_eq!(session.history().points.len(), 2);
+    // double-finalize is rejected
+    assert!(session.finish_epoch(&ds).is_err());
+    // export is legal at the boundary, not with an epoch in flight
+    assert!(session.export_state().is_ok());
+    session.step(&ds).unwrap();
+    assert!(session.export_state().is_err());
+}
+
 #[test]
 fn mismatched_dataset_is_rejected() {
     let rt = runtime();
@@ -221,6 +386,6 @@ fn mismatched_dataset_is_rejected() {
     let x = Tensor::from_fn(16, 6, |_, _| rng.normal() as f32);
     let y = Tensor::from_fn(16, 3, |_, _| rng.normal() as f32);
     let ds = Dataset::from_raw(x.clone(), y.clone(), x, y);
-    let mut trainer = Trainer::new(&rt, base_config(5, false)).unwrap();
-    assert!(trainer.run(&ds).is_err());
+    let mut session = TrainSession::new(&rt, base_config(5, false)).unwrap();
+    assert!(session.run(&ds).is_err());
 }
