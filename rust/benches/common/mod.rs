@@ -3,6 +3,7 @@
 #![allow(dead_code)]
 
 pub mod pr1;
+pub mod pr2;
 
 use dmdtrain::config::{Config, DatagenConfig, TrainConfig};
 use dmdtrain::data::Dataset;

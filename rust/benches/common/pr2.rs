@@ -1,0 +1,640 @@
+//! Frozen PR-2 kernels — the perf baseline the fused zero-allocation
+//! `train_step` (PR 5) is measured against in `linalg_hotpath`.
+//!
+//! These are verbatim copies of the PR-2 packed/tiled GEMM kernels and
+//! the PR-2 `NativeExecutable::train_step` structure (fresh `Tensor`
+//! allocations per step, σ′ mask / δ_L residual / bias column-sums as
+//! separate serial scalar passes after each GEMM), so
+//! `train_step_fused_speedup_vs_pr2` in `BENCH_linalg.json` always
+//! compares against the same fixed reference, independent of what
+//! `linalg::gemm` / `runtime::native` evolve into. Do not "optimize"
+//! this module. (Same freezing pattern as [`super::pr1`].)
+
+#![allow(dead_code)]
+
+use dmdtrain::model::Arch;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::util::pool::{aligned_ranges, WorkerPool};
+
+/// PR-2 accumulator-lane count (one 256-bit vector of f32).
+const LANES: usize = 8;
+
+/// PR-2 row-tile height shared by all three kernels.
+const MR: usize = 4;
+
+/// PR-2 NN packed-panel width.
+const NR: usize = 16;
+
+/// PR-2 NT column tile.
+const NT_JR: usize = 2;
+
+/// PR-2 TN i-tile.
+const TN_IR: usize = 4;
+
+/// PR-2 TN j-tile.
+const TN_JR: usize = 16;
+
+/// PR-2 NN packing threshold.
+const NN_PACK_MIN_ROWS: usize = 16;
+
+/// PR-2 unpacked-NN column panel.
+const NN_NB: usize = 256;
+
+/// PR-2 parallelism floor.
+const PAR_FLOPS: usize = 1 << 17;
+
+/// PR-2 NT A-row block height.
+const NT_RB: usize = 32;
+
+fn tasks_for(pool: &WorkerPool) -> usize {
+    pool.threads() * 2
+}
+
+fn split_rows<'a>(
+    mut rest: &'a mut [f32],
+    ranges: &[std::ops::Range<usize>],
+    row_len: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut parts = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut((r.end - r.start) * row_len);
+        parts.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+    parts
+}
+
+/// PR-2 8-lane f32 dot (the `linalg::dot::dot_f32` of PR 2).
+#[inline]
+pub fn dot8_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// PR-2 NN kernel (owning PackedB, freshly allocated per call)
+// ---------------------------------------------------------------------
+
+struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedB {
+    fn panel_count(n: usize) -> usize {
+        if n == 0 {
+            0
+        } else {
+            (n - 1) / NR + 1
+        }
+    }
+
+    fn pack(pool: Option<&WorkerPool>, b: &[f32], k: usize, n: usize) -> PackedB {
+        let np = Self::panel_count(n);
+        let mut data = vec![0.0f32; np * k * NR];
+        if np == 0 || k == 0 {
+            return PackedB { data, k, n };
+        }
+        let pack_panel = |p: usize, dst: &mut [f32]| {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            for kk in 0..k {
+                dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            }
+        };
+        match pool.filter(|p| p.threads() > 1 && np > 1 && k * n >= 1 << 16) {
+            None => {
+                for (p, dst) in data.chunks_mut(k * NR).enumerate() {
+                    pack_panel(p, dst);
+                }
+            }
+            Some(pool) => {
+                let f = &pack_panel;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                    .chunks_mut(k * NR)
+                    .enumerate()
+                    .map(|(p, dst)| Box::new(move || f(p, dst)) as Box<dyn FnOnce() + Send + '_>)
+                    .collect();
+                pool.run_tasks(tasks);
+            }
+        }
+        PackedB { data, k, n }
+    }
+
+    #[inline]
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+/// PR-2 `gemm_nn_bias_act`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_bias_act(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(out.len(), m * n, "C shape");
+    if let Some(bi) = bias {
+        assert_eq!(bi.len(), n, "bias length");
+    }
+    let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && m > 1);
+    if m < NN_PACK_MIN_ROWS {
+        match par {
+            None => kernel_nn_unpacked(a, k, b, n, bias, softsign, out),
+            Some(pool) => {
+                let ranges = aligned_ranges(m, tasks_for(pool), 1);
+                let parts = split_rows(out, &ranges, n);
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                    .iter()
+                    .zip(parts)
+                    .map(|(r, chunk)| {
+                        let a_rows = &a[r.start * k..r.end * k];
+                        Box::new(move || kernel_nn_unpacked(a_rows, k, b, n, bias, softsign, chunk))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_tasks(tasks);
+            }
+        }
+        return;
+    }
+    let bp = PackedB::pack(par, b, k, n);
+    match par {
+        None => kernel_nn(a, k, &bp, bias, softsign, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(m, tasks_for(pool), MR);
+            let parts = split_rows(out, &ranges, n);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let a_rows = &a[r.start * k..r.end * k];
+                    let bpr = &bp;
+                    Box::new(move || kernel_nn(a_rows, k, bpr, bias, softsign, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+}
+
+fn kernel_nn_unpacked(
+    a_rows: &[f32],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    let rows = if k > 0 {
+        a_rows.len() / k
+    } else if n > 0 {
+        out.len() / n
+    } else {
+        0
+    };
+    for r in 0..rows {
+        let arow = &a_rows[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        match bias {
+            Some(bi) => orow.copy_from_slice(bi),
+            None => orow.fill(0.0),
+        }
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + NN_NB).min(n);
+            let oblk = &mut orow[jb..je];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let bblk = &b[kk * n + jb..kk * n + je];
+                for (o, &bv) in oblk.iter_mut().zip(bblk) {
+                    *o += av * bv;
+                }
+            }
+            jb = je;
+        }
+        if softsign {
+            for v in orow.iter_mut() {
+                *v = *v / (1.0 + v.abs());
+            }
+        }
+    }
+}
+
+fn kernel_nn(
+    a_rows: &[f32],
+    k: usize,
+    bp: &PackedB,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    out: &mut [f32],
+) {
+    let n = bp.n;
+    let rows = if k > 0 {
+        a_rows.len() / k
+    } else if n > 0 {
+        out.len() / n
+    } else {
+        0
+    };
+    let np = PackedB::panel_count(n);
+    for p in 0..np {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let panel = bp.panel(p);
+        let mut binit = [0.0f32; NR];
+        if let Some(bi) = bias {
+            binit[..w].copy_from_slice(&bi[j0..j0 + w]);
+        }
+        let mut r = 0;
+        while r < rows {
+            let mr = (rows - r).min(MR);
+            match mr {
+                4 => tile_nn::<4>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+                3 => tile_nn::<3>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+                2 => tile_nn::<2>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+                _ => tile_nn::<1>(a_rows, r, k, panel, &binit, softsign, out, n, j0, w),
+            }
+            r += mr;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_nn<const R: usize>(
+    a_rows: &[f32],
+    r0: usize,
+    k: usize,
+    panel: &[f32],
+    binit: &[f32; NR],
+    softsign: bool,
+    out: &mut [f32],
+    n: usize,
+    j0: usize,
+    w: usize,
+) {
+    let mut arow: [&[f32]; R] = [&[]; R];
+    for (i, ar) in arow.iter_mut().enumerate() {
+        *ar = &a_rows[(r0 + i) * k..(r0 + i) * k + k];
+    }
+    let mut acc = [*binit; R];
+    for kk in 0..k {
+        let brow = &panel[kk * NR..(kk + 1) * NR];
+        for i in 0..R {
+            let av = arow[i][kk];
+            if av == 0.0 {
+                continue;
+            }
+            let acc_i = &mut acc[i];
+            for l in 0..NR {
+                acc_i[l] += av * brow[l];
+            }
+        }
+    }
+    for i in 0..R {
+        let orow = &mut out[(r0 + i) * n + j0..(r0 + i) * n + j0 + w];
+        if softsign {
+            for (o, &v) in orow.iter_mut().zip(&acc[i][..w]) {
+                *o = v / (1.0 + v.abs());
+            }
+        } else {
+            orow.copy_from_slice(&acc[i][..w]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PR-2 NT kernel
+// ---------------------------------------------------------------------
+
+/// PR-2 `gemm_nt`.
+pub fn gemm_nt(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), n * k, "B shape");
+    assert_eq!(out.len(), m * n, "C shape");
+    let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && m > 1);
+    match par {
+        None => kernel_nt(a, k, b, n, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(m, tasks_for(pool), MR);
+            let parts = split_rows(out, &ranges, n);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let a_rows = &a[r.start * k..r.end * k];
+                    Box::new(move || kernel_nt(a_rows, k, b, n, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+}
+
+fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    let rows = if k > 0 {
+        a_rows.len() / k
+    } else if n > 0 {
+        out.len() / n
+    } else {
+        0
+    };
+    let jt = n - n % NT_JR;
+    let mut rb = 0;
+    while rb < rows {
+        let rbe = (rb + NT_RB).min(rows);
+        let mut j = 0;
+        while j + NT_JR <= n {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let mut r = rb;
+            while r < rbe {
+                let mr = (rbe - r).min(MR);
+                match mr {
+                    4 => tile_nt::<4>(a_rows, r, k, b0, b1, n, j, out),
+                    3 => tile_nt::<3>(a_rows, r, k, b0, b1, n, j, out),
+                    2 => tile_nt::<2>(a_rows, r, k, b0, b1, n, j, out),
+                    _ => tile_nt::<1>(a_rows, r, k, b0, b1, n, j, out),
+                }
+                r += mr;
+            }
+            j += NT_JR;
+        }
+        for jj in jt..n {
+            let bj = &b[jj * k..jj * k + k];
+            for r in rb..rbe {
+                out[r * n + jj] = dot8_f32(&a_rows[r * k..r * k + k], bj);
+            }
+        }
+        rb = rbe;
+    }
+}
+
+#[inline]
+fn tile_nt<const R: usize>(
+    a_rows: &[f32],
+    r0: usize,
+    k: usize,
+    b0: &[f32],
+    b1: &[f32],
+    n: usize,
+    j: usize,
+    out: &mut [f32],
+) {
+    let mut arow: [&[f32]; R] = [&[]; R];
+    for (i, ar) in arow.iter_mut().enumerate() {
+        *ar = &a_rows[(r0 + i) * k..(r0 + i) * k + k];
+    }
+    let chunks = k / LANES;
+    let mut acc = [[[0.0f32; LANES]; NT_JR]; R];
+    for c in 0..chunks {
+        let base = c * LANES;
+        let xb0 = &b0[base..base + LANES];
+        let xb1 = &b1[base..base + LANES];
+        for i in 0..R {
+            let xa = &arow[i][base..base + LANES];
+            let acc_i = &mut acc[i];
+            for l in 0..LANES {
+                acc_i[0][l] += xa[l] * xb0[l];
+            }
+            for l in 0..LANES {
+                acc_i[1][l] += xa[l] * xb1[l];
+            }
+        }
+    }
+    let tail = chunks * LANES;
+    for i in 0..R {
+        for (jj, bj) in [b0, b1].iter().enumerate() {
+            let lanes = &acc[i][jj];
+            let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            for t in tail..k {
+                s += arow[i][t] * bj[t];
+            }
+            out[(r0 + i) * n + j + jj] = s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PR-2 TN kernel
+// ---------------------------------------------------------------------
+
+/// PR-2 `gemm_tn`.
+pub fn gemm_tn(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), m * n, "B shape");
+    assert_eq!(out.len(), k * n, "C shape");
+    let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && k > 1);
+    match par {
+        None => kernel_tn(a, m, k, b, n, 0..k, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(k, tasks_for(pool), TN_IR);
+            let parts = split_rows(out, &ranges, n);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let range = r.clone();
+                    Box::new(move || kernel_tn(a, m, k, b, n, range, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
+    }
+}
+
+fn kernel_tn(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i_range: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let base = i_range.start;
+    let jt = n - n % TN_JR;
+    let mut j = 0;
+    while j + TN_JR <= n {
+        let mut i = i_range.start;
+        while i < i_range.end {
+            let ti = (i_range.end - i).min(TN_IR);
+            match ti {
+                4 => tile_tn::<4>(a, m, k, b, n, i, base, j, out),
+                3 => tile_tn::<3>(a, m, k, b, n, i, base, j, out),
+                2 => tile_tn::<2>(a, m, k, b, n, i, base, j, out),
+                _ => tile_tn::<1>(a, m, k, b, n, i, base, j, out),
+            }
+            i += ti;
+        }
+        j += TN_JR;
+    }
+    for jj in jt..n {
+        for ii in i_range.clone() {
+            let mut s = 0.0f32;
+            for r in 0..m {
+                s += a[r * k + ii] * b[r * n + jj];
+            }
+            out[(ii - base) * n + jj] = s;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_tn<const TI: usize>(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    base: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; TN_JR]; TI];
+    for r in 0..m {
+        let brow = &b[r * n + j0..r * n + j0 + TN_JR];
+        let abase = r * k + i0;
+        for di in 0..TI {
+            let av = a[abase + di];
+            let acc_d = &mut acc[di];
+            for l in 0..TN_JR {
+                acc_d[l] += av * brow[l];
+            }
+        }
+    }
+    for di in 0..TI {
+        let orow = &mut out[(i0 + di - base) * n + j0..(i0 + di - base) * n + j0 + TN_JR];
+        orow.copy_from_slice(&acc[di]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// PR-2 train_step (the pre-workspace NativeExecutable::train_step)
+// ---------------------------------------------------------------------
+
+/// PR-2 fused train_step: forward (packed NN), MSE loss, hand-derived
+/// backprop (tiled TN weight grads, serial row-sum bias grads, tiled NT
+/// delta backprop with a separate serial σ′ pass) — the exact structure
+/// and allocation behavior of the PR-2 `runtime::native::train_step`
+/// (fresh `Tensor`s for activations, deltas and gradients every call).
+pub fn train_step(
+    pool: Option<&WorkerPool>,
+    arch: &Arch,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Tensor,
+) -> (f64, Vec<Tensor>) {
+    let layers = arch.num_layers();
+    let rows = x.rows();
+    let mut acts: Vec<Tensor> = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let (fi, fo) = arch.layer_shape(l);
+        let w = &params[2 * l];
+        let b = &params[2 * l + 1];
+        let mut z = Tensor::zeros(rows, fo);
+        {
+            let input = if l == 0 { x } else { &acts[l - 1] };
+            gemm_nn_bias_act(
+                pool,
+                input.data(),
+                rows,
+                fi,
+                w.data(),
+                fo,
+                Some(b.row(0)),
+                l + 1 < layers,
+                z.data_mut(),
+            );
+        }
+        acts.push(z);
+    }
+    let pred = &acts[layers - 1];
+    let loss = pred.mse(y);
+
+    let scale = 2.0f32 / pred.len() as f32;
+    let mut delta = Tensor::zeros(rows, arch.output_dim());
+    for ((d, &p), &t) in delta.data_mut().iter_mut().zip(pred.data()).zip(y.data()) {
+        *d = (p - t) * scale;
+    }
+    let mut grads: Vec<Tensor> = arch
+        .param_shapes()
+        .iter()
+        .map(|&(r, c)| Tensor::zeros(r, c))
+        .collect();
+    for l in (0..layers).rev() {
+        let (fi, fo) = arch.layer_shape(l);
+        {
+            let input = if l == 0 { x } else { &acts[l - 1] };
+            gemm_tn(pool, input.data(), rows, fi, delta.data(), fo, grads[2 * l].data_mut());
+        }
+        {
+            let gb = grads[2 * l + 1].data_mut();
+            for r in 0..rows {
+                for (g, &d) in gb.iter_mut().zip(&delta.data()[r * fo..(r + 1) * fo]) {
+                    *g += d;
+                }
+            }
+        }
+        if l > 0 {
+            let w = &params[2 * l];
+            let mut nd = Tensor::zeros(rows, fi);
+            gemm_nt(pool, delta.data(), rows, fo, w.data(), fi, nd.data_mut());
+            for (d, &a) in nd.data_mut().iter_mut().zip(acts[l - 1].data()) {
+                let s = 1.0 - a.abs();
+                *d *= s * s;
+            }
+            delta = nd;
+        }
+    }
+    (loss, grads)
+}

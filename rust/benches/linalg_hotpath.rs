@@ -2,12 +2,15 @@
 //! (the only O(n·) DMD work) — batch, streaming, serial and
 //! pool-parallel — the fused native `train_step` at paper scale (batch
 //! 1000), and the small eigensolvers. Every headline number is measured
-//! against the *frozen PR-1 scalar kernels* (`common::pr1`), so the perf
-//! trajectory in `BENCH_linalg.json` tracks kernel improvements against
-//! a fixed reference: `gram_speedup_vs_pr1_scalar` and
-//! `train_step_speedup_vs_pr1_scalar` are the acceptance metrics
-//! (targets ≥3× and ≥2× on the CI runner). Bit-identity invariants
-//! (parallel vs serial, streaming vs batch) are asserted on the fly.
+//! against a *frozen* baseline: the PR-1 scalar kernels (`common::pr1`)
+//! for the long-run trajectory, and the PR-2 packed/tiled kernels
+//! (`common::pr2`) for the fused zero-allocation workspace path, so the
+//! perf numbers in `BENCH_linalg.json` always compare against fixed
+//! references: `gram_speedup_vs_pr1_scalar`,
+//! `train_step_speedup_vs_pr1_scalar` (targets ≥3× and ≥2×) and
+//! `train_step_fused_speedup_vs_pr2` (CI gate ≥1.15×) are the
+//! acceptance metrics. Bit-identity invariants (parallel vs serial,
+//! streaming vs batch, fused vs PR-2) are asserted on the fly.
 
 mod common;
 
@@ -15,7 +18,7 @@ use dmdtrain::dmd::SnapshotBuffer;
 use dmdtrain::linalg::{eig::eig, gram, jacobi::eig_sym};
 use dmdtrain::model::Arch;
 use dmdtrain::rng::Rng;
-use dmdtrain::runtime::{ManifestEntry, NativeExecutable};
+use dmdtrain::runtime::{ManifestEntry, NativeExecutable, TrainWorkspace};
 use dmdtrain::tensor::{Mat, Tensor};
 use dmdtrain::util;
 use dmdtrain::util::bench::{bench_n, header, BenchStats};
@@ -217,6 +220,43 @@ fn main() {
     results.push(ts_ser);
     results.push(ts_par);
 
+    // ---- fused workspace path vs the frozen PR-2 kernels -----------------
+    // The PR-5 acceptance metric: train_step_into against one reused
+    // TrainWorkspace (zero steady-state allocation, fused σ′/residual/db
+    // epilogues) vs the frozen PR-2 train_step (fresh tensors per step,
+    // serial epilogue passes), both on the same pool.
+    let ts_pr2 = bench_n("train_step paper b=1000 pr2 pool", ts_iters, || {
+        common::pr2::train_step(Some(WorkerPool::global()), &arch, &params, &x, &y)
+    });
+    let mut ws = TrainWorkspace::new(&arch, batch);
+    // warm once so the packing scratch reaches its steady-state size
+    par_exe.train_step_into(&mut ws, &params, &x, &y).expect("fused warmup");
+    let ts_fused = bench_n("train_step paper b=1000 fused ws", ts_iters, || {
+        par_exe.train_step_into(&mut ws, &params, &x, &y).expect("fused train_step")
+    });
+    let ts_fused_speedup_vs_pr2 = ts_pr2.mean_s / ts_fused.mean_s;
+    let (ts_pr2_mean_s, ts_fused_mean_s) = (ts_pr2.mean_s, ts_fused.mean_s);
+    // the fused epilogues must be bit-identical to the PR-2 kernels +
+    // separate serial passes they replace
+    {
+        let loss_f = par_exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+        let (loss_2, grads_2) =
+            common::pr2::train_step(Some(WorkerPool::global()), &arch, &params, &x, &y);
+        assert_eq!(
+            loss_f.to_bits(),
+            loss_2.to_bits(),
+            "fused loss differs from the PR-2 kernels"
+        );
+        for (gf, g2) in ws.grads().iter().zip(&grads_2) {
+            assert_eq!(gf.data(), g2.data(), "fused gradients differ from the PR-2 kernels");
+        }
+    }
+    println!(
+        "  → train_step fused workspace: {ts_fused_speedup_vs_pr2:.2}× vs frozen PR-2 pool (CI gate ≥ 1.15×; bit-identical grads)"
+    );
+    results.push(ts_pr2);
+    results.push(ts_fused);
+
     // ---- TrainSession indirection overhead at paper scale ----------------
     // The session redesign routes every step through trait objects
     // (Optimizer / Accelerator / Observer). This measures a full
@@ -260,11 +300,14 @@ enabled = false
 
         let mut raw_params = arch.init_params(&mut Rng::new(41));
         let mut raw_adam = Adam::new(Default::default());
+        // the raw composite uses the same workspace hot path the
+        // session does, so the ratio isolates pure trait indirection
+        let mut raw_ws = TrainWorkspace::new(&arch, batch);
         let raw = bench_n("train_step paper b=1000 raw+adam", overhead_iters, || {
-            let (loss, grads) = par_exe
-                .train_step(&raw_params, &ds.x_train, &ds.y_train)
+            let loss = par_exe
+                .train_step_into(&mut raw_ws, &raw_params, &ds.x_train, &ds.y_train)
                 .expect("raw train_step");
-            raw_adam.step(&mut raw_params, &grads);
+            raw_adam.step(&mut raw_params, raw_ws.grads());
             loss
         });
         let (s_min, r_min) = (sess.min_s, raw.min_s);
@@ -294,7 +337,7 @@ enabled = false
 
     // ---- perf-trajectory artifact ---------------------------------------
     let json = format!(
-        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_pool_speedup:.3},\n  \"gram_kernel_speedup_vs_pr1\": {gram_kernel_speedup:.3},\n  \"gram_speedup_vs_pr1_scalar\": {gram_speedup_vs_pr1:.3},\n  \"gram_stream_fill_s\": {stream_fill_s:.6e},\n  \"train_step_paper_b1000_pr1_scalar_s\": {ts_pr1_mean_s:.6e},\n  \"train_step_paper_b1000_serial_s\": {ts_ser_mean_s:.6e},\n  \"train_step_paper_b1000_pool_s\": {ts_par_mean_s:.6e},\n  \"train_step_speedup\": {ts_pool_speedup:.3},\n  \"train_step_kernel_speedup_vs_pr1\": {ts_kernel_speedup:.3},\n  \"train_step_speedup_vs_pr1_scalar\": {ts_speedup_vs_pr1:.3},\n  \"train_session_step_s\": {sess_min_s:.6e},\n  \"train_step_raw_adam_s\": {raw_min_s:.6e},\n  \"train_session_step_overhead_vs_raw\": {session_overhead:.4},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_pool_speedup:.3},\n  \"gram_kernel_speedup_vs_pr1\": {gram_kernel_speedup:.3},\n  \"gram_speedup_vs_pr1_scalar\": {gram_speedup_vs_pr1:.3},\n  \"gram_stream_fill_s\": {stream_fill_s:.6e},\n  \"train_step_paper_b1000_pr1_scalar_s\": {ts_pr1_mean_s:.6e},\n  \"train_step_paper_b1000_serial_s\": {ts_ser_mean_s:.6e},\n  \"train_step_paper_b1000_pool_s\": {ts_par_mean_s:.6e},\n  \"train_step_paper_b1000_pr2_pool_s\": {ts_pr2_mean_s:.6e},\n  \"train_step_paper_b1000_fused_s\": {ts_fused_mean_s:.6e},\n  \"train_step_speedup\": {ts_pool_speedup:.3},\n  \"train_step_kernel_speedup_vs_pr1\": {ts_kernel_speedup:.3},\n  \"train_step_speedup_vs_pr1_scalar\": {ts_speedup_vs_pr1:.3},\n  \"train_step_fused_speedup_vs_pr2\": {ts_fused_speedup_vs_pr2:.3},\n  \"train_session_step_s\": {sess_min_s:.6e},\n  \"train_step_raw_adam_s\": {raw_min_s:.6e},\n  \"train_session_step_overhead_vs_raw\": {session_overhead:.4},\n  \"results\": [\n    {}\n  ]\n}}\n",
         results
             .iter()
             .map(json_stat)

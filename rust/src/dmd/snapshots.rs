@@ -106,9 +106,12 @@ impl SnapshotBuffer {
     /// Record a snapshot assembled from consecutive slices — the (w, b)
     /// pair of a layer — copied straight into a recycled column, then
     /// stream-update the running Gram on the shared worker pool. This is
-    /// the allocation-free fast path `Trainer::record_snapshots` uses
-    /// instead of materializing `Arch::flatten_layer`'s fresh `Vec`
-    /// every step.
+    /// the allocation-free fast path the accelerators use instead of
+    /// materializing `Arch::flatten_layer`'s fresh `Vec` every step: the
+    /// slices are borrowed directly from the live parameter tensors the
+    /// workspace-driven `train_step_into` + optimizer just updated, so
+    /// the whole observe path (like the step itself) stays free of
+    /// tensor-sized allocations in steady state.
     pub fn push_parts(&mut self, step: usize, parts: &[&[f32]]) {
         self.push_parts_with(Some(WorkerPool::global()), step, parts);
     }

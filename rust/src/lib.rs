@@ -31,6 +31,23 @@
 //! `O(n·m²)` burst. `benches/linalg_hotpath.rs` tracks both against the
 //! frozen PR-1 scalar kernels.
 //!
+//! The training step itself is **zero-allocation in steady state**:
+//! [`runtime::TrainWorkspace`] preallocates activations, the delta
+//! ping-pong pair, gradient tensors and the GEMM packing scratch from
+//! the `Arch` and batch shape, and
+//! `NativeExecutable::train_step_into` fills it with the backward
+//! epilogues *fused into the GEMM dispatches* — the σ′ = (1−|a|)² mask
+//! at NT tile write-back, the δ_L residual as a row-partitioned
+//! producer, the bias column-sums as column-partitioned tasks inside
+//! the TN dispatch. Determinism contract: every fused epilogue is
+//! bit-identical to "plain kernel, then the legacy serial pass"
+//! (fixed per-element order, locked by `tests/workspace_equivalence.rs`
+//! and the in-bench fused-vs-PR-2 assertion). Own a [`runtime::TrainWorkspace`]
+//! whenever you call `train_step` in a loop — `trainer::TrainSession`
+//! keeps one per session and its optimizer consumes the gradients in
+//! place; the plain `train_step` entry point survives as a thin wrapper
+//! that clones the gradients out of an internal workspace.
+//!
 //! ## Deterministic parallelism
 //!
 //! Every parallel kernel is bit-identical to its serial execution, for
@@ -85,7 +102,7 @@
 //! | [`optim`] | Adam / SGD / momentum (by-name factory), line-fit extrapolation |
 //! | [`model`] | MLP architecture, Xavier init, forward oracle |
 //! | [`data`] | Latin-hypercube sampling, dataset format, scaling |
-//! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`) |
+//! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`); `TrainWorkspace` zero-alloc hot path |
 //! | [`serve`] | HTTP inference: checkpoint registry, micro-batched predict |
 //! | [`trainer`] | `TrainSession` state machine (`trainer::session`), pluggable accelerators (`trainer::accel`), observers (`trainer::observe`), resume checkpoints |
 //! | [`coordinator`] | (m, s) sensitivity sweeps across worker threads |

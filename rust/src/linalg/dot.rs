@@ -110,6 +110,29 @@ pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
     s
 }
 
+/// Column sums of a row-major (rows × n) block, restricted to the
+/// columns `[j0, j0 + out.len())`: `out[j − j0] = Σ_r b[r·n + j]`.
+///
+/// This is the bias-gradient reduction `db = Σ_r δ[r, ·]` of the native
+/// backward pass. Order contract: every column is one f32 accumulator
+/// summed over **ascending rows** (the legacy serial bias loop), and
+/// columns are independent of each other — so any column partition of
+/// the output (the fused `gemm_tn_bias` parallel path) is bit-identical
+/// to the full-width serial pass. Rows are walked outer / columns inner
+/// so the loads stay contiguous per row chunk.
+pub fn col_sums_f32(b: &[f32], rows: usize, n: usize, j0: usize, out: &mut [f32]) {
+    let w = out.len();
+    debug_assert!(j0 + w <= n, "column window out of range");
+    debug_assert_eq!(b.len(), rows * n, "B shape");
+    out.fill(0.0);
+    for r in 0..rows {
+        let row = &b[r * n + j0..r * n + j0 + w];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +184,31 @@ mod tests {
         let ac = a.clone();
         let bc = b.clone();
         assert_eq!(dot_f32_f64(&a, &b).to_bits(), dot_f32_f64(&ac, &bc).to_bits());
+    }
+
+    #[test]
+    fn col_sums_match_legacy_bias_loop_for_any_partition() {
+        // the legacy bias-gradient loop: zeroed accumulator, ascending
+        // rows, full width
+        let (rows, n) = (37, 21);
+        let b = rand_vec(rows * n, 91);
+        let mut legacy = vec![0.0f32; n];
+        for r in 0..rows {
+            for (g, &d) in legacy.iter_mut().zip(&b[r * n..(r + 1) * n]) {
+                *g += d;
+            }
+        }
+        let mut full = vec![0.0f32; n];
+        col_sums_f32(&b, rows, n, 0, &mut full);
+        assert_eq!(full, legacy, "full-width col_sums diverged from the legacy loop");
+        // any column partition must reproduce the same bits
+        for split in [1usize, 5, 8, 20] {
+            let mut parts = vec![0.0f32; n];
+            let (lo, hi) = parts.split_at_mut(split);
+            col_sums_f32(&b, rows, n, 0, lo);
+            col_sums_f32(&b, rows, n, split, hi);
+            assert_eq!(parts, legacy, "split at {split} changed bits");
+        }
     }
 
     #[test]

@@ -8,6 +8,25 @@
 //! * [`gemm_nt`] — `C = A·Bᵀ` (gradient back-propagation `δ Wᵀ`),
 //! * [`gemm_tn`] — `C = Aᵀ·B` (weight gradients `hᵀ δ`).
 //!
+//! # Fused backward epilogues (zero-allocation hot path)
+//!
+//! The backward pass used to follow each GEMM with a separate serial
+//! scalar sweep; those sweeps are now fused variants of the kernels,
+//! each bit-identical to "plain kernel, then the legacy scalar pass":
+//!
+//! * [`gemm_nt_mask`] — the soft-sign derivative σ′ = (1 − |a|)² is
+//!   applied to every C element at register-tile write-back, while the
+//!   tile is still hot (`δ_{ℓ−1} = (δ_ℓ·Wᵀ) ⊙ σ′`).
+//! * [`gemm_tn_bias`] — the bias-gradient column sums
+//!   `db[j] = Σ_r δ[r,j]` ride inside the TN dispatch as extra
+//!   column-partitioned pool tasks ([`col_sums_f32`]'s ascending-row
+//!   accumulators, so the partition never changes bits).
+//! * [`residual_scale`] — the δ_L loss-residual producer
+//!   `(pred − y)·scale`, row-partitioned instead of one serial pass.
+//! * [`gemm_nn_bias_act_scratch`] — the NN kernel with a caller-owned
+//!   B-packing scratch, so steady-state forward passes stop allocating
+//!   (the `runtime::native::TrainWorkspace` path).
+//!
 //! # Microkernel scheme
 //!
 //! All three kernels accumulate into register tiles sized in multiples
@@ -43,7 +62,7 @@
 use crate::linalg::dot::LANES;
 use crate::util::pool::{aligned_ranges, WorkerPool};
 
-pub use crate::linalg::dot::dot_f32;
+pub use crate::linalg::dot::{col_sums_f32, dot_f32};
 
 /// Row-tile height shared by all three kernels.
 const MR: usize = 4;
@@ -101,13 +120,18 @@ fn split_rows<'a>(
 /// zero-padded past column n. Packing costs one pass over B and buys a
 /// unit-stride k-loop for every row of A — the panel is reused `m`
 /// times, so the copy amortizes away for any real batch.
-struct PackedB {
-    data: Vec<f32>,
+///
+/// The panel storage is borrowed from a caller-owned scratch `Vec`
+/// (grown once, then reused), so steady-state packing performs zero
+/// heap allocation — the workspace train path passes the same scratch
+/// every step.
+struct PackedB<'s> {
+    data: &'s [f32],
     k: usize,
     n: usize,
 }
 
-impl PackedB {
+impl<'s> PackedB<'s> {
     fn panel_count(n: usize) -> usize {
         if n == 0 {
             0
@@ -116,37 +140,58 @@ impl PackedB {
         }
     }
 
-    fn pack(pool: Option<&WorkerPool>, b: &[f32], k: usize, n: usize) -> PackedB {
+    fn pack(
+        pool: Option<&WorkerPool>,
+        b: &[f32],
+        k: usize,
+        n: usize,
+        scratch: &'s mut Vec<f32>,
+    ) -> PackedB<'s> {
         let np = Self::panel_count(n);
-        let mut data = vec![0.0f32; np * k * NR];
+        let need = np * k * NR;
+        if scratch.len() < need {
+            scratch.resize(need, 0.0);
+        }
         if np == 0 || k == 0 {
             // degenerate shapes: nothing to pack (chunk size would be 0)
-            return PackedB { data, k, n };
+            return PackedB { data: &scratch[..need], k, n };
         }
         let pack_panel = |p: usize, dst: &mut [f32]| {
             let j0 = p * NR;
             let w = NR.min(n - j0);
             for kk in 0..k {
                 dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
-            }
-        };
-        match pool.filter(|p| p.threads() > 1 && np > 1 && k * n >= 1 << 16) {
-            None => {
-                for (p, dst) in data.chunks_mut(k * NR).enumerate() {
-                    pack_panel(p, dst);
+                if w < NR {
+                    // the scratch is reused across calls, so the pad
+                    // lanes must be re-zeroed explicitly (their
+                    // accumulators are discarded at write-back, but
+                    // stale garbage could turn them into NaN/inf work)
+                    dst[kk * NR + w..(kk + 1) * NR].fill(0.0);
                 }
             }
-            Some(pool) => {
-                let f = &pack_panel;
-                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
-                    .chunks_mut(k * NR)
-                    .enumerate()
-                    .map(|(p, dst)| Box::new(move || f(p, dst)) as Box<dyn FnOnce() + Send + '_>)
-                    .collect();
-                pool.run_tasks(tasks);
+        };
+        {
+            let data = &mut scratch[..need];
+            match pool.filter(|p| p.threads() > 1 && np > 1 && k * n >= 1 << 16) {
+                None => {
+                    for (p, dst) in data.chunks_mut(k * NR).enumerate() {
+                        pack_panel(p, dst);
+                    }
+                }
+                Some(pool) => {
+                    let f = &pack_panel;
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                        .chunks_mut(k * NR)
+                        .enumerate()
+                        .map(|(p, dst)| {
+                            Box::new(move || f(p, dst)) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_tasks(tasks);
+                }
             }
         }
-        PackedB { data, k, n }
+        PackedB { data: &scratch[..need], k, n }
     }
 
     #[inline]
@@ -157,7 +202,9 @@ impl PackedB {
 
 /// `out = act(A·B + bias)`: A is (m×k), B is (k×n), `bias` broadcasts
 /// over rows, `softsign` applies x/(1+|x|) to every element (hidden
-/// layers; the head stays linear).
+/// layers; the head stays linear). Allocates a fresh packing scratch
+/// per call — hot-loop callers use [`gemm_nn_bias_act_scratch`] with a
+/// reused buffer instead.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nn_bias_act(
     pool: Option<&WorkerPool>,
@@ -168,6 +215,28 @@ pub fn gemm_nn_bias_act(
     n: usize,
     bias: Option<&[f32]>,
     softsign: bool,
+    out: &mut [f32],
+) {
+    let mut scratch = Vec::new();
+    gemm_nn_bias_act_scratch(pool, a, m, k, b, n, bias, softsign, &mut scratch, out);
+}
+
+/// [`gemm_nn_bias_act`] with a caller-owned B-packing scratch: the
+/// buffer grows to the packed size on first use and is reused verbatim
+/// afterwards, so a steady-state forward pass performs zero heap
+/// allocation. Bit-identical to the allocating entry point for any
+/// scratch content (pad lanes are re-zeroed during the pack).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_bias_act_scratch(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    softsign: bool,
+    pack_scratch: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     assert_eq!(a.len(), m * k, "A shape");
@@ -201,7 +270,7 @@ pub fn gemm_nn_bias_act(
         }
         return;
     }
-    let bp = PackedB::pack(par, b, k, n);
+    let bp = PackedB::pack(par, b, k, n, pack_scratch);
     match par {
         None => kernel_nn(a, k, &bp, bias, softsign, out),
         Some(pool) => {
@@ -278,7 +347,7 @@ fn kernel_nn_unpacked(
 fn kernel_nn(
     a_rows: &[f32],
     k: usize,
-    bp: &PackedB,
+    bp: &PackedB<'_>,
     bias: Option<&[f32]>,
     softsign: bool,
     out: &mut [f32],
@@ -382,12 +451,51 @@ pub fn gemm_nt(
     n: usize,
     out: &mut [f32],
 ) {
+    gemm_nt_impl(pool, a, m, k, b, n, None, out);
+}
+
+/// `out = (A·Bᵀ) ⊙ σ′(act)` — [`gemm_nt`] with the soft-sign backward
+/// mask σ′ = (1 − |act|)² fused into the epilogue, applied to each C
+/// element at register-tile write-back while the tile is still hot.
+/// `act` aligns element-for-element with `out` (m×n; the stored
+/// *activations* of the layer being back-propagated through).
+///
+/// Bit-identity contract: each element is `dot · (s·s)` with
+/// `s = 1 − |act|` in f32 — exactly the legacy "plain `gemm_nt`, then a
+/// scalar mask pass" arithmetic, so fusing never changes bits (locked
+/// by `nt_mask_fused_epilogue_is_bit_identical_to_serial_mask`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_mask(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    act: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(act.len(), m * n, "mask shape");
+    gemm_nt_impl(pool, a, m, k, b, n, Some(act), out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_impl(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    mask: Option<&[f32]>,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), n * k, "B shape");
     assert_eq!(out.len(), m * n, "C shape");
     let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && m > 1);
     match par {
-        None => kernel_nt(a, k, b, n, out),
+        None => kernel_nt(a, k, b, n, mask, out),
         Some(pool) => {
             let ranges = aligned_ranges(m, tasks_for(pool), MR);
             let parts = split_rows(out, &ranges, n);
@@ -396,7 +504,8 @@ pub fn gemm_nt(
                 .zip(parts)
                 .map(|(r, chunk)| {
                     let a_rows = &a[r.start * k..r.end * k];
-                    Box::new(move || kernel_nt(a_rows, k, b, n, chunk))
+                    let mrows = mask.map(|mm| &mm[r.start * n..r.end * n]);
+                    Box::new(move || kernel_nt(a_rows, k, b, n, mrows, chunk))
                         as Box<dyn FnOnce() + Send + '_>
                 })
                 .collect();
@@ -410,7 +519,7 @@ pub fn gemm_nt(
 /// re-streaming B for every 4-row tile.
 const NT_RB: usize = 32;
 
-fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, mask: Option<&[f32]>, out: &mut [f32]) {
     let rows = if k > 0 {
         a_rows.len() / k
     } else if n > 0 {
@@ -430,10 +539,10 @@ fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
             while r < rbe {
                 let mr = (rbe - r).min(MR);
                 match mr {
-                    4 => tile_nt::<4>(a_rows, r, k, b0, b1, n, j, out),
-                    3 => tile_nt::<3>(a_rows, r, k, b0, b1, n, j, out),
-                    2 => tile_nt::<2>(a_rows, r, k, b0, b1, n, j, out),
-                    _ => tile_nt::<1>(a_rows, r, k, b0, b1, n, j, out),
+                    4 => tile_nt::<4>(a_rows, r, k, b0, b1, n, j, mask, out),
+                    3 => tile_nt::<3>(a_rows, r, k, b0, b1, n, j, mask, out),
+                    2 => tile_nt::<2>(a_rows, r, k, b0, b1, n, j, mask, out),
+                    _ => tile_nt::<1>(a_rows, r, k, b0, b1, n, j, mask, out),
                 }
                 r += mr;
             }
@@ -443,17 +552,35 @@ fn kernel_nt(a_rows: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
         for jj in jt..n {
             let bj = &b[jj * k..jj * k + k];
             for r in rb..rbe {
-                out[r * n + jj] = dot_f32(&a_rows[r * k..r * k + k], bj);
+                let idx = r * n + jj;
+                let s = dot_f32(&a_rows[r * k..r * k + k], bj);
+                out[idx] = apply_mask(mask, idx, s);
             }
         }
         rb = rbe;
     }
 }
 
+/// The fused σ′ epilogue: `v · (s·s)` with `s = 1 − |act|`, exactly the
+/// legacy scalar pass `*d *= s*s` per element (no mask: identity).
+#[inline(always)]
+fn apply_mask(mask: Option<&[f32]>, idx: usize, v: f32) -> f32 {
+    match mask {
+        Some(mm) => {
+            let s = 1.0 - mm[idx].abs();
+            v * (s * s)
+        }
+        None => v,
+    }
+}
+
 /// R rows of A against one pair of B rows. Each output element keeps its
 /// own 8-lane accumulator array updated in the exact [`dot_f32`]
 /// sequence, so tile position never changes bits (the j/row tails fall
-/// back to `dot_f32` itself).
+/// back to `dot_f32` itself). The optional σ′ mask is applied at
+/// write-back, after the lane reduction — the same arithmetic the
+/// legacy separate pass performed on the stored value.
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn tile_nt<const R: usize>(
     a_rows: &[f32],
@@ -463,6 +590,7 @@ fn tile_nt<const R: usize>(
     b1: &[f32],
     n: usize,
     j: usize,
+    mask: Option<&[f32]>,
     out: &mut [f32],
 ) {
     let mut arow: [&[f32]; R] = [&[]; R];
@@ -495,7 +623,8 @@ fn tile_nt<const R: usize>(
             for t in tail..k {
                 s += arow[i][t] * bj[t];
             }
-            out[(r0 + i) * n + j + jj] = s;
+            let idx = (r0 + i) * n + j + jj;
+            out[idx] = apply_mask(mask, idx, s);
         }
     }
 }
@@ -516,16 +645,49 @@ pub fn gemm_tn(
     n: usize,
     out: &mut [f32],
 ) {
+    gemm_tn_bias(pool, a, m, k, b, n, out, None);
+}
+
+/// [`gemm_tn`] with the bias-gradient column sums fused into the same
+/// dispatch: `db[j] = Σ_r b[r·n + j]` (the `db_ℓ = Σ_r δ_ℓ[r,·]` of the
+/// backward pass, with B = δ).
+///
+/// On the pooled path the sums ride as extra **column-partitioned**
+/// tasks inside `gemm_tn`'s row-partitioned parallel region, so they
+/// overlap the TN tiles instead of running as a serial scalar pass
+/// afterwards. Order contract ([`col_sums_f32`]): one f32 accumulator
+/// per column over ascending rows, columns mutually independent — any
+/// column partition (and the serial path) produces identical bits to
+/// the legacy zero-init ascending-row bias loop.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_bias(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    db: Option<&mut [f32]>,
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), m * n, "B shape");
     assert_eq!(out.len(), k * n, "C shape");
+    if let Some(d) = &db {
+        assert_eq!(d.len(), n, "db length");
+    }
     let par = pool.filter(|p| p.threads() > 1 && 2 * m * k * n >= PAR_FLOPS && k > 1);
     match par {
-        None => kernel_tn(a, m, k, b, n, 0..k, out),
+        None => {
+            kernel_tn(a, m, k, b, n, 0..k, out);
+            if let Some(d) = db {
+                col_sums_f32(b, m, n, 0, d);
+            }
+        }
         Some(pool) => {
             let ranges = aligned_ranges(k, tasks_for(pool), TN_IR);
             let parts = split_rows(out, &ranges, n);
-            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
                 .iter()
                 .zip(parts)
                 .map(|(r, chunk)| {
@@ -534,6 +696,14 @@ pub fn gemm_tn(
                         as Box<dyn FnOnce() + Send + '_>
                 })
                 .collect();
+            if let Some(d) = db {
+                let cranges = aligned_ranges(n, pool.threads(), LANES);
+                let dparts = split_rows(d, &cranges, 1);
+                for (cr, chunk) in cranges.iter().zip(dparts) {
+                    let j0 = cr.start;
+                    tasks.push(Box::new(move || col_sums_f32(b, m, n, j0, chunk)));
+                }
+            }
             pool.run_tasks(tasks);
         }
     }
@@ -615,6 +785,52 @@ fn tile_tn<const TI: usize>(
     for di in 0..TI {
         let orow = &mut out[(i0 + di - base) * n + j0..(i0 + di - base) * n + j0 + TN_JR];
         orow.copy_from_slice(&acc[di]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// δ_L residual producer
+// ---------------------------------------------------------------------
+
+/// `out[e] = (pred[e] − y[e]) · scale` — the loss-residual producer for
+/// the first backward GEMM (`δ_L = 2(pred − y)/(batch·n_out)` with the
+/// caller passing the scale), writing straight into the workspace delta
+/// buffer instead of a freshly allocated tensor.
+///
+/// Purely elementwise, so the pooled row partition is bit-identical to
+/// the legacy serial pass for any thread count.
+pub fn residual_scale(
+    pool: Option<&WorkerPool>,
+    pred: &[f32],
+    y: &[f32],
+    scale: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(pred.len(), y.len(), "pred/target shape");
+    assert_eq!(pred.len(), out.len(), "out shape");
+    let kernel = |p: &[f32], t: &[f32], o: &mut [f32]| {
+        for ((o, &pv), &tv) in o.iter_mut().zip(p).zip(t) {
+            *o = (pv - tv) * scale;
+        }
+    };
+    // one multiply-add per element: parallelize only when the element
+    // count alone clears the dispatch-overhead floor
+    match pool.filter(|p| p.threads() > 1 && out.len() >= PAR_FLOPS) {
+        None => kernel(pred, y, out),
+        Some(pool) => {
+            let ranges = aligned_ranges(out.len(), tasks_for(pool), LANES);
+            let parts = split_rows(out, &ranges, 1);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                .iter()
+                .zip(parts)
+                .map(|(r, chunk)| {
+                    let p = &pred[r.start..r.end];
+                    let t = &y[r.start..r.end];
+                    Box::new(move || kernel(p, t, chunk)) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks);
+        }
     }
 }
 
@@ -798,6 +1014,100 @@ mod tests {
                 assert_eq!(out[i * n + j].to_bits(), s.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn nn_scratch_reuse_is_bit_identical_with_dirty_buffer() {
+        // a dirty, wrong-sized scratch (stale data incl. pad lanes from
+        // a previous larger shape) must never change bits
+        let mut scratch = vec![7.5f32; 9];
+        for (m, k, n) in [(37, 23, 41), (18, 9, 17), (16, 4, 3)] {
+            let a = rand_vec(m * k, 40 + n as u64);
+            let b = rand_vec(k * n, 41 + m as u64);
+            let mut fresh = vec![0.0f32; m * n];
+            gemm_nn_bias_act(None, &a, m, k, &b, n, None, false, &mut fresh);
+            let mut reused = vec![0.0f32; m * n];
+            gemm_nn_bias_act_scratch(None, &a, m, k, &b, n, None, false, &mut scratch, &mut reused);
+            assert_eq!(fresh, reused, "({m},{k},{n}): scratch reuse changed bits");
+        }
+    }
+
+    #[test]
+    fn nt_mask_fused_epilogue_is_bit_identical_to_serial_mask() {
+        for (m, k, n) in [(9, 31, 7), (64, 40, 33), (4, 8, 2), (121, 90, 71)] {
+            let a = rand_vec(m * k, 50 + k as u64);
+            let bt = rand_vec(n * k, 51 + k as u64);
+            let act = rand_vec(m * n, 52 + k as u64);
+            // legacy: plain NT, then the scalar σ′ pass
+            let mut plain = vec![0.0f32; m * n];
+            gemm_nt(None, &a, m, k, &bt, n, &mut plain);
+            for (d, &av) in plain.iter_mut().zip(&act) {
+                let s = 1.0 - av.abs();
+                *d *= s * s;
+            }
+            let mut fused = vec![0.0f32; m * n];
+            gemm_nt_mask(None, &a, m, k, &bt, n, &act, &mut fused);
+            for (i, (f, w)) in fused.iter().zip(&plain).enumerate() {
+                assert_eq!(f.to_bits(), w.to_bits(), "({m},{k},{n}) elem {i}: {f} vs {w}");
+            }
+            // pooled fused must equal serial fused
+            let pool = WorkerPool::new(3);
+            let mut par = vec![0.0f32; m * n];
+            gemm_nt_mask(Some(&pool), &a, m, k, &bt, n, &act, &mut par);
+            assert_eq!(fused, par, "parallel fused NT mask differs from serial");
+        }
+    }
+
+    #[test]
+    fn tn_bias_fused_column_sums_match_legacy_loop_bitwise() {
+        for (m, k, n) in [(21, 13, 17), (151, 3, 49), (33, 6, 18), (1000, 5, 37)] {
+            let a = rand_vec(m * k, 80 + n as u64);
+            let b = rand_vec(m * n, 81 + n as u64);
+            // legacy: plain TN, then the serial zero-init ascending-row
+            // bias loop
+            let mut out_plain = vec![0.0f32; k * n];
+            gemm_tn(None, &a, m, k, &b, n, &mut out_plain);
+            let mut db_legacy = vec![0.0f32; n];
+            for r in 0..m {
+                for (g, &d) in db_legacy.iter_mut().zip(&b[r * n..(r + 1) * n]) {
+                    *g += d;
+                }
+            }
+            let mut out_fused = vec![0.0f32; k * n];
+            let mut db = vec![9.0f32; n]; // dirty: db is overwritten, not accumulated
+            gemm_tn_bias(None, &a, m, k, &b, n, &mut out_fused, Some(&mut db));
+            assert_eq!(out_plain, out_fused, "({m},{k},{n}): fused TN changed C");
+            for (i, (got, want)) in db.iter().zip(&db_legacy).enumerate() {
+                assert_eq!(got.to_bits(), want.to_bits(), "db[{i}]: {got} vs {want}");
+            }
+            // pooled fused (column-partitioned db) must equal serial
+            let pool = WorkerPool::new(4);
+            let mut out_par = vec![0.0f32; k * n];
+            let mut db_par = vec![0.0f32; n];
+            gemm_tn_bias(Some(&pool), &a, m, k, &b, n, &mut out_par, Some(&mut db_par));
+            assert_eq!(out_fused, out_par, "parallel fused TN differs from serial");
+            assert_eq!(db, db_par, "parallel db differs from serial");
+        }
+    }
+
+    #[test]
+    fn residual_scale_matches_legacy_pass_for_any_pool() {
+        // big enough to clear the parallel threshold (PAR_FLOPS elems)
+        let len = PAR_FLOPS + 13;
+        let pred = rand_vec(len, 70);
+        let y = rand_vec(len, 71);
+        let scale = 2.0f32 / len as f32;
+        let mut legacy = vec![0.0f32; len];
+        for ((d, &p), &t) in legacy.iter_mut().zip(&pred).zip(&y) {
+            *d = (p - t) * scale;
+        }
+        let mut serial = vec![0.0f32; len];
+        residual_scale(None, &pred, &y, scale, &mut serial);
+        assert_eq!(serial, legacy, "serial residual pass diverged");
+        let pool = WorkerPool::new(3);
+        let mut par = vec![0.0f32; len];
+        residual_scale(Some(&pool), &pred, &y, scale, &mut par);
+        assert_eq!(par, legacy, "parallel residual pass diverged");
     }
 
     #[test]

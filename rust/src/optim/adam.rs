@@ -39,24 +39,35 @@ impl Optimizer for Adam {
         assert_eq!(params.len(), grads.len());
         self.ensure_state(params);
         self.t += 1;
-        let b1 = self.p.beta1;
-        let b2 = self.p.beta2;
+        let b1 = self.p.beta1 as f32;
+        let b2 = self.p.beta2 as f32;
         // bias-corrected step size
-        let bc1 = 1.0 - b1.powi(self.t as i32);
-        let bc2 = 1.0 - b2.powi(self.t as i32);
-        let alpha = self.p.lr * bc2.sqrt() / bc1;
+        let bc1 = 1.0 - self.p.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.p.beta2.powi(self.t as i32);
+        let alpha = (self.p.lr * bc2.sqrt() / bc1) as f32;
         let eps = self.p.eps as f32;
 
         for (i, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
             assert_eq!(param.len(), grad.len(), "param/grad shape mismatch at {i}");
             let (ms, vs) = (&mut self.m[i], &mut self.v[i]);
-            let pd = param.data_mut();
-            let gd = grad.data();
-            for j in 0..pd.len() {
-                let g = gd[j];
-                ms[j] = (b1 as f32) * ms[j] + (1.0 - b1 as f32) * g;
-                vs[j] = (b2 as f32) * vs[j] + (1.0 - b2 as f32) * g * g;
-                pd[j] -= (alpha as f32) * ms[j] / (vs[j].sqrt() + eps);
+            // stale moments (same tensor count, different widths — e.g.
+            // a mismatched import_state) must fail loudly: the lockstep
+            // zip below would otherwise silently truncate the update
+            assert_eq!(ms.len(), param.len(), "Adam moment/param length mismatch at {i}");
+            // `grads` is usually borrowed straight from the session's
+            // TrainWorkspace; the update walks all four slices in
+            // lockstep (same per-element arithmetic as the indexed loop
+            // it replaced, with the bounds checks hoisted)
+            for (((p, &g), m), v) in param
+                .data_mut()
+                .iter_mut()
+                .zip(grad.data())
+                .zip(ms.iter_mut())
+                .zip(vs.iter_mut())
+            {
+                *m = b1 * *m + (1.0 - b1) * g;
+                *v = b2 * *v + (1.0 - b2) * g * g;
+                *p -= alpha * *m / (v.sqrt() + eps);
             }
         }
     }

@@ -30,6 +30,11 @@ use crate::tensor::Tensor;
 /// A first-order optimizer over a flat list of parameter tensors.
 pub trait Optimizer {
     /// Apply one update in place. `grads` aligns with `params`.
+    ///
+    /// §Perf: `grads` is a borrow, so callers can hand in gradients
+    /// resident in a `runtime::TrainWorkspace` (the `TrainSession` hot
+    /// path does exactly that) — no per-step `Vec<Tensor>` collection
+    /// is ever required by this trait.
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]);
 
     /// Reset internal state (moments, step counter). Called after a DMD

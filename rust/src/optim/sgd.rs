@@ -22,11 +22,12 @@ impl Optimizer for Sgd {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         assert_eq!(params.len(), grads.len());
         let lr = self.lr as f32;
+        // gradients come in borrowed (typically from the session's
+        // TrainWorkspace); lockstep slice walk, bounds checks hoisted
         for (param, grad) in params.iter_mut().zip(grads) {
-            let pd = param.data_mut();
-            let gd = grad.data();
-            for j in 0..pd.len() {
-                pd[j] -= lr * gd[j];
+            assert_eq!(param.len(), grad.len(), "param/grad shape mismatch");
+            for (p, &g) in param.data_mut().iter_mut().zip(grad.data()) {
+                *p -= lr * g;
             }
         }
     }
@@ -76,11 +77,19 @@ impl Optimizer for SgdMomentum {
         }
         let (lr, mu) = (self.lr as f32, self.momentum as f32);
         for ((param, grad), vel) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
-            let pd = param.data_mut();
-            let gd = grad.data();
-            for j in 0..pd.len() {
-                vel[j] = mu * vel[j] - lr * gd[j];
-                pd[j] += vel[j];
+            assert_eq!(param.len(), grad.len(), "param/grad shape mismatch");
+            // stale velocity (e.g. a mismatched import_state) must fail
+            // loudly, not silently truncate the lockstep zip below
+            assert_eq!(vel.len(), param.len(), "velocity/param length mismatch");
+            // lockstep slice walk over workspace-borrowed gradients
+            for ((p, &g), v) in param
+                .data_mut()
+                .iter_mut()
+                .zip(grad.data())
+                .zip(vel.iter_mut())
+            {
+                *v = mu * *v - lr * g;
+                *p += *v;
             }
         }
     }

@@ -10,7 +10,7 @@
 //! enum, so swapping backends never touches call sites.
 
 use super::manifest::ManifestEntry;
-use super::native::NativeExecutable;
+use super::native::{NativeExecutable, TrainWorkspace};
 #[cfg(feature = "pjrt")]
 use super::pjrt::{PjrtDeviceBatch, PjrtExecutable};
 use crate::tensor::Tensor;
@@ -102,6 +102,8 @@ impl Executable {
     }
 
     /// `train_step`: returns (loss, gradients in parameter order).
+    /// Allocates the gradient `Vec` per call — hot loops use
+    /// [`Self::train_step_into`] with a caller-owned workspace instead.
     pub fn train_step(
         &self,
         params: &[Tensor],
@@ -112,6 +114,52 @@ impl Executable {
             Executable::Native(e) => e.train_step(params, x, y),
             #[cfg(feature = "pjrt")]
             Executable::Pjrt(e) => e.train_step(params, x, y),
+        }
+    }
+
+    /// `train_step` against a caller-owned [`TrainWorkspace`]: the loss
+    /// returns by value, the gradients stay resident in `ws.grads()`.
+    /// On the native backend this is the zero-allocation fused hot path
+    /// ([`NativeExecutable::train_step_into`]); PJRT has no workspace
+    /// concept, so its gradients are adopted into `ws` after the fact —
+    /// callers see one contract either way.
+    pub fn train_step_into(
+        &self,
+        ws: &mut TrainWorkspace,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> anyhow::Result<f64> {
+        match self {
+            Executable::Native(e) => e.train_step_into(ws, params, x, y),
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(e) => {
+                let (loss, grads) = e.train_step(params, x, y)?;
+                ws.adopt_grads(grads);
+                Ok(loss)
+            }
+        }
+    }
+
+    /// [`Self::train_step_into`] against a pinned batch.
+    pub fn train_step_on_into(
+        &self,
+        ws: &mut TrainWorkspace,
+        params: &[Tensor],
+        batch: &DeviceBatch<'_>,
+    ) -> anyhow::Result<f64> {
+        match (self, batch) {
+            (Executable::Native(e), DeviceBatch::Native { x, y }) => {
+                e.train_step_into(ws, params, x, y)
+            }
+            #[cfg(feature = "pjrt")]
+            (Executable::Pjrt(e), DeviceBatch::Pjrt(b)) => {
+                let (loss, grads) = e.train_step_on(params, b)?;
+                ws.adopt_grads(grads);
+                Ok(loss)
+            }
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("DeviceBatch belongs to a different backend"),
         }
     }
 

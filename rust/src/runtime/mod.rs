@@ -24,7 +24,7 @@ mod pjrt;
 
 pub use executable::{DeviceBatch, Executable};
 pub use manifest::{Manifest, ManifestEntry};
-pub use native::NativeExecutable;
+pub use native::{NativeExecutable, TrainWorkspace};
 
 use std::path::{Path, PathBuf};
 

@@ -18,6 +18,23 @@
 //! element in the same ascending-k order as the oracle's scalar loop,
 //! register tiling and B-panel packing notwithstanding.
 //!
+//! # The zero-allocation hot path
+//!
+//! [`NativeExecutable::train_step_into`] runs the whole
+//! forward/backward step against a caller-owned [`TrainWorkspace`]:
+//! activations, the delta ping-pong pair, the gradient tensors and the
+//! GEMM packing scratch are all preallocated from the `Arch` and batch
+//! shape, and the σ′ mask, δ_L residual and bias column-sums are fused
+//! into the GEMM dispatches (`linalg::gemm::gemm_nt_mask` /
+//! `gemm_tn_bias` / `residual_scale`). After the first step on a given
+//! (arch, batch) shape the path performs **zero heap allocation** on
+//! the serial kernels (asserted by `tests/workspace_alloc.rs`; the
+//! pooled path keeps only the tiny per-dispatch task boxes), and every
+//! fused epilogue is bit-identical to the legacy "GEMM, then a serial
+//! scalar pass" it replaces. [`NativeExecutable::train_step`] survives
+//! as a thin compatibility wrapper that owns a workspace internally and
+//! clones the gradients out.
+//!
 //! Parallelism is deterministic: GEMM work is output-row partitioned and
 //! every kernel's per-element accumulation order is fixed, so any thread
 //! count produces identical floats (see `linalg::gemm` / `linalg::dot`).
@@ -27,6 +44,118 @@ use crate::linalg::gemm;
 use crate::model::Arch;
 use crate::tensor::Tensor;
 use crate::util::pool::WorkerPool;
+use std::sync::Mutex;
+
+/// Preallocated buffers for the fused training hot path, sized once
+/// from the `Arch` and batch shape and reused every step.
+///
+/// Own one of these whenever you call `train_step` in a loop — the
+/// `TrainSession` keeps one per session — and let
+/// [`NativeExecutable::train_step_into`] fill it: the loss comes back
+/// by value, the gradients stay resident in [`TrainWorkspace::grads`]
+/// (aligned with the parameter list) for the optimizer to consume in
+/// place. The workspace is pure scratch: it carries no trajectory
+/// state, so it is *not* part of resume checkpoints — a fresh one is
+/// bit-equivalent.
+pub struct TrainWorkspace {
+    /// Arch dims the buffers are currently sized for.
+    dims: Vec<usize>,
+    rows: usize,
+    /// Layer activations, index ℓ = output of layer ℓ (rows × fo_ℓ);
+    /// the last one is the prediction.
+    acts: Vec<Tensor>,
+    /// Delta ping-pong buffers, each rows × (max layer width): the
+    /// backward pass alternates between them instead of allocating a
+    /// fresh δ per layer.
+    dping: Vec<f32>,
+    dpong: Vec<f32>,
+    /// Gradient tensors, aligned with the `[w1, b1, …]` parameter list.
+    grads: Vec<Tensor>,
+    /// B-packing scratch shared by the forward GEMMs (grows to the
+    /// largest layer once).
+    pack: Vec<f32>,
+}
+
+impl TrainWorkspace {
+    /// An unsized workspace; the first `train_step_into` sizes it.
+    pub fn empty() -> Self {
+        TrainWorkspace {
+            dims: Vec::new(),
+            rows: 0,
+            acts: Vec::new(),
+            dping: Vec::new(),
+            dpong: Vec::new(),
+            grads: Vec::new(),
+            pack: Vec::new(),
+        }
+    }
+
+    /// A workspace sized for `arch` at `rows` batch rows.
+    pub fn new(arch: &Arch, rows: usize) -> Self {
+        let mut ws = Self::empty();
+        ws.ensure(arch, rows);
+        ws
+    }
+
+    /// (Re)size for an (arch, batch) shape; a no-op when already sized —
+    /// the steady-state path through `train_step_into`. A rows-only
+    /// change rebuilds just the row-dependent buffers (activations,
+    /// deltas); the gradient tensors depend only on the arch and are
+    /// kept.
+    pub fn ensure(&mut self, arch: &Arch, rows: usize) {
+        let same_arch = self.dims == arch.dims;
+        if same_arch && self.rows == rows {
+            return;
+        }
+        if !same_arch {
+            self.dims = arch.dims.clone();
+            self.grads = arch
+                .param_shapes()
+                .iter()
+                .map(|&(r, c)| Tensor::zeros(r, c))
+                .collect();
+        }
+        self.rows = rows;
+        self.acts = (0..arch.num_layers())
+            .map(|l| Tensor::zeros(rows, arch.layer_shape(l).1))
+            .collect();
+        // deltas only ever carry layer-output widths — dims[0] (the
+        // input width) never appears in the backward pass
+        let wmax = arch.dims[1..].iter().copied().max().unwrap_or(0);
+        self.dping = vec![0.0; rows * wmax];
+        self.dpong = vec![0.0; rows * wmax];
+        // the pack scratch grows inside the first forward pass
+    }
+
+    /// Batch rows the workspace is sized for (0 before first use).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Gradients of the last `train_step_into`, in parameter order.
+    pub fn grads(&self) -> &[Tensor] {
+        &self.grads
+    }
+
+    /// Prediction of the last forward pass (the final activation).
+    pub fn prediction(&self) -> Option<&Tensor> {
+        self.acts.last()
+    }
+
+    /// Adopt externally computed gradients (the PJRT backend has no
+    /// workspace path; `Executable::train_step_into` copies its output
+    /// here so callers see one contract). The adopted tensors replace
+    /// the sized buffers wholesale, so the workspace is invalidated
+    /// back to the unsized state (`rows()` = 0, no prediction) — a
+    /// later native `train_step_into` re-sizes it from scratch instead
+    /// of treating the foreign tensors as its own gradient buffers.
+    pub fn adopt_grads(&mut self, grads: Vec<Tensor>) {
+        self.dims.clear();
+        self.rows = 0;
+        self.acts.clear();
+        self.grads = grads;
+    }
+}
 
 /// A "compiled" native artifact: the architecture plus the pool the
 /// kernels fan out over (`None` = strictly single-threaded — the scalar
@@ -35,6 +164,11 @@ pub struct NativeExecutable {
     entry: ManifestEntry,
     arch: Option<Arch>,
     pool: Option<&'static WorkerPool>,
+    /// Workspace backing the legacy allocating [`Self::train_step`]
+    /// wrapper (lazy; the zero-allocation path is caller-owned).
+    ws: Mutex<Option<TrainWorkspace>>,
+    /// Flat column scratch for [`Self::gram`] (reused across calls).
+    gram_scratch: Mutex<Vec<f32>>,
 }
 
 impl NativeExecutable {
@@ -53,7 +187,13 @@ impl NativeExecutable {
         } else {
             Some(Arch::new(entry.arch.clone())?)
         };
-        Ok(NativeExecutable { entry, arch, pool })
+        Ok(NativeExecutable {
+            entry,
+            arch,
+            pool,
+            ws: Mutex::new(None),
+            gram_scratch: Mutex::new(Vec::new()),
+        })
     }
 
     pub fn entry(&self) -> &ManifestEntry {
@@ -72,63 +212,51 @@ impl NativeExecutable {
             .ok_or_else(|| anyhow::anyhow!("'{}' has no model architecture", self.entry.name))
     }
 
+    /// Shape-check the parameter list without allocating (this runs on
+    /// the zero-allocation hot path every step).
     fn check_params(&self, arch: &Arch, params: &[Tensor]) -> anyhow::Result<()> {
-        let shapes = arch.param_shapes();
+        let want = 2 * arch.num_layers();
         anyhow::ensure!(
-            params.len() == shapes.len(),
+            params.len() == want,
             "'{}' expects {} parameter tensors, got {}",
             self.entry.name,
-            shapes.len(),
+            want,
             params.len()
         );
-        for (i, (t, &(r, c))) in params.iter().zip(&shapes).enumerate() {
+        for l in 0..arch.num_layers() {
+            let (fi, fo) = arch.layer_shape(l);
             anyhow::ensure!(
-                t.len() == r * c,
-                "'{}' param {i}: expected {r}×{c}, got {:?}",
+                params[2 * l].len() == fi * fo,
+                "'{}' param {}: expected {fi}×{fo}, got {:?}",
                 self.entry.name,
-                t.shape()
+                2 * l,
+                params[2 * l].shape()
+            );
+            anyhow::ensure!(
+                params[2 * l + 1].len() == fo,
+                "'{}' param {}: expected 1×{fo}, got {:?}",
+                self.entry.name,
+                2 * l + 1,
+                params[2 * l + 1].shape()
             );
         }
         Ok(())
     }
 
-    /// Forward pass retaining every layer's activation (index ℓ holds the
-    /// output of layer ℓ; the last one is the prediction).
-    fn forward_acts(&self, arch: &Arch, params: &[Tensor], x: &Tensor) -> Vec<Tensor> {
-        let layers = arch.num_layers();
-        let rows = x.rows();
-        let mut acts: Vec<Tensor> = Vec::with_capacity(layers);
-        for l in 0..layers {
-            let (fi, fo) = arch.layer_shape(l);
-            let w = &params[2 * l];
-            let b = &params[2 * l + 1];
-            let mut z = Tensor::zeros(rows, fo);
-            {
-                let input = if l == 0 { x } else { &acts[l - 1] };
-                gemm::gemm_nn_bias_act(
-                    self.pool,
-                    input.data(),
-                    rows,
-                    fi,
-                    w.data(),
-                    fo,
-                    Some(b.row(0)),
-                    l + 1 < layers, // soft-sign on hidden layers only
-                    z.data_mut(),
-                );
-            }
-            acts.push(z);
-        }
-        acts
-    }
-
-    /// Loss + gradients for one batch — the whole training hot path.
-    pub fn train_step(
+    /// Loss + gradients for one batch — the whole training hot path,
+    /// against a caller-owned workspace. Zero heap allocation in steady
+    /// state: activations, deltas, gradients and the packing scratch
+    /// all live in `ws`, the σ′ mask / δ_L residual / bias column-sums
+    /// are fused into the GEMM dispatches, and every fused epilogue is
+    /// bit-identical to the legacy separate-pass path (see
+    /// `linalg::gemm`). Gradients land in `ws.grads()`.
+    pub fn train_step_into(
         &self,
+        ws: &mut TrainWorkspace,
         params: &[Tensor],
         x: &Tensor,
         y: &Tensor,
-    ) -> anyhow::Result<(f64, Vec<Tensor>)> {
+    ) -> anyhow::Result<f64> {
         anyhow::ensure!(self.entry.kind == "train_step", "not a train_step artifact");
         let arch = self.arch()?;
         self.check_params(arch, params)?;
@@ -158,66 +286,115 @@ impl NativeExecutable {
         let layers = arch.num_layers();
         let rows = x.rows();
         anyhow::ensure!(rows > 0, "empty batch");
+        ws.ensure(arch, rows);
 
-        let acts = self.forward_acts(arch, params, x);
-        let pred = &acts[layers - 1];
+        // ---- forward: every activation into the workspace ------------
+        for l in 0..layers {
+            let (fi, fo) = arch.layer_shape(l);
+            let w = &params[2 * l];
+            let b = &params[2 * l + 1];
+            let (head, tail) = ws.acts.split_at_mut(l);
+            let input = if l == 0 { x.data() } else { head[l - 1].data() };
+            gemm::gemm_nn_bias_act_scratch(
+                self.pool,
+                input,
+                rows,
+                fi,
+                w.data(),
+                fo,
+                Some(b.row(0)),
+                l + 1 < layers, // soft-sign on hidden layers only
+                &mut ws.pack,
+                tail[0].data_mut(),
+            );
+        }
+        let pred = &ws.acts[layers - 1];
         let loss = pred.mse(y);
 
-        // δ_L = ∂L/∂z_L = 2 (pred − y) / (batch · n_out)  (linear head)
+        // ---- δ_L = 2 (pred − y) / (batch · n_out): fused residual
+        //      producer straight into the ping buffer (linear head) ----
+        let n_out = arch.output_dim();
         let scale = 2.0f32 / pred.len() as f32;
-        let mut delta = Tensor::zeros(rows, arch.output_dim());
-        for ((d, &p), &t) in delta
-            .data_mut()
-            .iter_mut()
-            .zip(pred.data())
-            .zip(y.data())
-        {
-            *d = (p - t) * scale;
-        }
+        gemm::residual_scale(
+            self.pool,
+            pred.data(),
+            y.data(),
+            scale,
+            &mut ws.dping[..rows * n_out],
+        );
 
-        let mut grads: Vec<Tensor> = arch
-            .param_shapes()
-            .iter()
-            .map(|&(r, c)| Tensor::zeros(r, c))
-            .collect();
-
+        // ---- backward: ping-pong deltas, fused epilogues --------------
+        let TrainWorkspace {
+            acts,
+            dping,
+            dpong,
+            grads,
+            ..
+        } = ws;
+        let (mut cur, mut nxt) = (dping.as_mut_slice(), dpong.as_mut_slice());
         for l in (0..layers).rev() {
             let (fi, fo) = arch.layer_shape(l);
-            // dW_ℓ = input_ℓᵀ · δ_ℓ
+            let delta = &cur[..rows * fo];
             {
-                let input = if l == 0 { x } else { &acts[l - 1] };
-                gemm::gemm_tn(
+                // dW_ℓ = input_ℓᵀ · δ_ℓ with db_ℓ = Σ_r δ_ℓ[r,·] fused
+                // into the same dispatch (ascending-row column sums)
+                let input = if l == 0 { x.data() } else { acts[l - 1].data() };
+                let (gw_half, gb_half) = grads.split_at_mut(2 * l + 1);
+                gemm::gemm_tn_bias(
                     self.pool,
-                    input.data(),
+                    input,
                     rows,
                     fi,
-                    delta.data(),
+                    delta,
                     fo,
-                    grads[2 * l].data_mut(),
+                    gw_half[2 * l].data_mut(),
+                    Some(gb_half[0].data_mut()),
                 );
-            }
-            // db_ℓ = column sums of δ_ℓ (ascending rows — deterministic)
-            {
-                let gb = grads[2 * l + 1].data_mut();
-                for r in 0..rows {
-                    for (g, &d) in gb.iter_mut().zip(&delta.data()[r * fo..(r + 1) * fo]) {
-                        *g += d;
-                    }
-                }
             }
             if l > 0 {
                 // δ_{ℓ-1} = (δ_ℓ · W_ℓᵀ) ⊙ σ′, σ′ = (1 − |a_{ℓ-1}|)²
+                // applied per C tile inside the NT kernel
                 let w = &params[2 * l];
-                let mut nd = Tensor::zeros(rows, fi);
-                gemm::gemm_nt(self.pool, delta.data(), rows, fo, w.data(), fi, nd.data_mut());
-                for (d, &a) in nd.data_mut().iter_mut().zip(acts[l - 1].data()) {
-                    let s = 1.0 - a.abs();
-                    *d *= s * s;
-                }
-                delta = nd;
+                gemm::gemm_nt_mask(
+                    self.pool,
+                    delta,
+                    rows,
+                    fo,
+                    w.data(),
+                    fi,
+                    acts[l - 1].data(),
+                    &mut nxt[..rows * fi],
+                );
+                std::mem::swap(&mut cur, &mut nxt);
             }
         }
-        Ok((loss, grads))
+        Ok(loss)
+    }
+
+    /// Legacy `train_step`: a thin compatibility wrapper over
+    /// [`Self::train_step_into`] that owns a workspace internally and
+    /// clones the gradients into the returned `Vec` (hot-loop callers
+    /// should own a [`TrainWorkspace`] and skip the clone).
+    ///
+    /// Concurrency note: the internal workspace is shared, so
+    /// concurrent `train_step` calls on one executable serialize on its
+    /// lock (every in-tree caller owns its executable; truly concurrent
+    /// callers should use `train_step_into` with per-thread workspaces).
+    pub fn train_step(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> anyhow::Result<(f64, Vec<Tensor>)> {
+        // The workspace is pure scratch (fully overwritten or re-sized
+        // by every step), so a poisoned lock — a previous call panicking
+        // mid-step — is recoverable: take the guard anyway instead of
+        // turning one panic into a permanent PoisonError for every
+        // later caller.
+        let mut slot = self.ws.lock().unwrap_or_else(|e| e.into_inner());
+        let ws = slot.get_or_insert_with(TrainWorkspace::empty);
+        let loss = self.train_step_into(ws, params, x, y)?;
+        Ok((loss, ws.grads().to_vec()))
     }
 
     /// `predict` on one batch (rows must equal the static batch when the
@@ -277,7 +454,13 @@ impl NativeExecutable {
     }
 
     /// Standalone Gram product over a snapshot matrix (n, m) → (m, m) —
-    /// kept for the `gram_l*` bench artifacts.
+    /// kept for the `gram_l*` bench artifacts (the training path uses
+    /// the streaming Gram in `dmd::SnapshotBuffer` instead).
+    ///
+    /// The flat column scratch stays resident in the executable between
+    /// calls — n·m floats, deliberate: these artifacts exist to be
+    /// called in benchmark loops, where the reuse is the point. Drop
+    /// the executable to release it.
     pub fn gram(&self, s: &Tensor) -> anyhow::Result<Tensor> {
         anyhow::ensure!(self.entry.kind == "gram", "not a gram artifact");
         if let Some(dims) = self.entry.input_shapes.first() {
@@ -290,16 +473,26 @@ impl NativeExecutable {
             );
         }
         let (n, m) = s.shape();
+        if n == 0 || m == 0 {
+            return Ok(Tensor::zeros(m, m));
+        }
         // transpose the row-major (n×m) snapshot into m contiguous
-        // columns in one pass over the rows — per-element get() was
-        // quadratic in bounds checks at n ~ 2.67 M
-        let mut cols = vec![vec![0.0f32; n]; m];
+        // stride-n column views inside one flat reusable scratch — the
+        // former `vec![vec![0.0; n]; m]` allocated m nested Vecs
+        // (~2.67 M floats each at paper scale) on every invocation
+        // scratch is rewritten in full below, so a poisoned lock (a
+        // panicking earlier call) is recoverable
+        let mut scratch = self.gram_scratch.lock().unwrap_or_else(|e| e.into_inner());
+        if scratch.len() < n * m {
+            scratch.resize(n * m, 0.0);
+        }
+        let cols = &mut scratch[..n * m];
         for r in 0..n {
-            for (col, &v) in cols.iter_mut().zip(s.row(r)) {
-                col[r] = v;
+            for (c, &v) in s.row(r).iter().enumerate() {
+                cols[c * n + r] = v;
             }
         }
-        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let refs: Vec<&[f32]> = cols.chunks_exact(n).collect();
         let g = crate::linalg::gram::gram_with(self.pool, &refs);
         Ok(Tensor::from_fn(m, m, |i, j| g.get(i, j) as f32))
     }
@@ -349,6 +542,57 @@ mod tests {
     }
 
     #[test]
+    fn workspace_path_matches_legacy_wrapper_bitwise() {
+        let ts = exe("train_step_test");
+        let arch = Arch::new(ts.entry().arch.clone()).unwrap();
+        let mut rng = Rng::new(6);
+        let params = arch.init_params(&mut rng);
+        let x = Tensor::from_fn(16, arch.input_dim(), |_, _| rng.normal() as f32);
+        let y = Tensor::from_fn(16, arch.output_dim(), |_, _| rng.normal() as f32);
+        let (loss_legacy, grads_legacy) = ts.train_step(&params, &x, &y).unwrap();
+        let mut ws = TrainWorkspace::new(&arch, 16);
+        // repeated calls reuse the buffers and must reproduce the same
+        // bits every time
+        for _ in 0..3 {
+            let loss = ts.train_step_into(&mut ws, &params, &x, &y).unwrap();
+            assert_eq!(loss.to_bits(), loss_legacy.to_bits());
+            for (g, gl) in ws.grads().iter().zip(&grads_legacy) {
+                assert_eq!(g.data(), gl.data(), "workspace grads diverged from legacy");
+            }
+        }
+        assert_eq!(ws.rows(), 16);
+        assert_eq!(ws.prediction().unwrap().shape(), (16, arch.output_dim()));
+    }
+
+    #[test]
+    fn workspace_resizes_on_batch_shape_change() {
+        // dynamic-batch entry (batch = 0): the workspace must follow
+        // the row count up and back down, bit-identically each time
+        let ts = NativeExecutable::new(ManifestEntry::native_model(
+            "train_step",
+            "train_step_ws_resize",
+            &[6, 8, 6],
+            0,
+        ))
+        .unwrap();
+        let arch = Arch::new(ts.entry().arch.clone()).unwrap();
+        let mut rng = Rng::new(8);
+        let params = arch.init_params(&mut rng);
+        let mut ws = TrainWorkspace::empty();
+        for rows in [4usize, 16, 4] {
+            let x = Tensor::from_fn(rows, arch.input_dim(), |_, _| rng.normal() as f32);
+            let y = Tensor::from_fn(rows, arch.output_dim(), |_, _| rng.normal() as f32);
+            let loss_ws = ts.train_step_into(&mut ws, &params, &x, &y).unwrap();
+            assert_eq!(ws.rows(), rows);
+            let (loss, grads) = ts.train_step(&params, &x, &y).unwrap();
+            assert_eq!(loss_ws.to_bits(), loss.to_bits());
+            for (g, gl) in ws.grads().iter().zip(&grads) {
+                assert_eq!(g.data(), gl.data());
+            }
+        }
+    }
+
+    #[test]
     fn wrong_inputs_rejected() {
         let ts = exe("train_step_test");
         let pr = exe("predict_test");
@@ -362,5 +606,7 @@ mod tests {
         assert!(pr.predict_batch(&params, &Tensor::zeros(3, 6)).is_err(), "static batch enforced");
         // kind checks
         assert!(pr.train_step(&params, &x, &Tensor::zeros(16, 6)).is_err());
+        let mut ws = TrainWorkspace::empty();
+        assert!(pr.train_step_into(&mut ws, &params, &x, &Tensor::zeros(16, 6)).is_err());
     }
 }

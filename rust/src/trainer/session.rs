@@ -26,6 +26,17 @@
 //! [`TrainSession::restore`] makes a resumed run bit-identical to an
 //! uninterrupted one. [`TrainSession::resume_from`] is the coarse
 //! warm-start (parameters only).
+//!
+//! §Perf: every step drives the backend through
+//! [`Executable::train_step_into`] against one session-owned
+//! [`TrainWorkspace`] — activations, deltas, gradients and GEMM packing
+//! scratch are preallocated once (resized only if the batch shape ever
+//! changes) and the optimizer consumes the gradients straight out of
+//! the workspace, so the steady-state loop performs zero tensor
+//! allocation. The workspace is pure scratch with no trajectory state:
+//! it is deliberately *not* part of `export_state`/`restore` — a
+//! resumed session re-sizes a fresh one on its first step,
+//! bit-identically.
 
 use super::accel::{
     AccelReport, Accelerator, DmdAccelerator, JumpCtx, LineFitAccelerator, NoAccel,
@@ -41,7 +52,7 @@ use crate::metrics::{DmdStats, LossHistory, LossPoint};
 use crate::model::Arch;
 use crate::optim::{self, Optimizer};
 use crate::rng::Rng;
-use crate::runtime::{DeviceBatch, Executable, Runtime};
+use crate::runtime::{DeviceBatch, Executable, Runtime, TrainWorkspace};
 use crate::tensor::Tensor;
 use crate::util::timer::Profile;
 
@@ -211,6 +222,7 @@ impl<'rt> SessionBuilder<'rt> {
             batcher: None,
             full_batch: false,
             scratch: None,
+            workspace: TrainWorkspace::empty(),
             bound: None,
             restored_order: None,
             queue: Vec::new(),
@@ -247,6 +259,11 @@ pub struct TrainSession {
     /// Mini-batch path: one reused (x, y) scratch pair for the whole
     /// run — `Batcher::gather_into` copies rows, never allocates.
     scratch: Option<(Tensor, Tensor)>,
+    /// The session's backprop workspace: sized on the first step, then
+    /// reused every step (zero steady-state allocation; gradients are
+    /// consumed from it in place by the optimizer). Pure scratch — not
+    /// checkpoint state.
+    workspace: TrainWorkspace,
     /// (n_train, n_in, n_out) of the bound dataset.
     bound: Option<(usize, usize, usize)>,
     /// Batcher order restored from a checkpoint, applied at bind time.
@@ -389,19 +406,22 @@ impl TrainSession {
             self.begin_epoch();
         }
 
-        // --- backprop -------------------------------------------------
-        let (loss, grads) = if let Some(db) = pinned {
+        // --- backprop (fused workspace path: gradients land in the
+        //     session-owned TrainWorkspace, zero steady-state alloc) ---
+        let loss = if let Some(db) = pinned {
             let exe = &self.train_exe;
             let params = &self.params;
+            let ws = &mut self.workspace;
             self.profile
-                .scope("backprop_exec", || exe.train_step_on(params, db))?
+                .scope("backprop_exec", || exe.train_step_on_into(ws, params, db))?
         } else if self.full_batch {
             // the batch is the whole (device-resident) training set —
             // no per-step gather
             let exe = &self.train_exe;
             let params = &self.params;
+            let ws = &mut self.workspace;
             self.profile.scope("backprop_exec", || {
-                exe.train_step(params, &ds.x_train, &ds.y_train)
+                exe.train_step_into(ws, params, &ds.x_train, &ds.y_train)
             })?
         } else {
             let idx = &self.queue[self.qi];
@@ -412,16 +432,19 @@ impl TrainSession {
             let (bx, by) = (&*bx, &*by);
             let exe = &self.train_exe;
             let params = &self.params;
+            let ws = &mut self.workspace;
             self.profile
-                .scope("backprop_exec", || exe.train_step(params, bx, by))?
+                .scope("backprop_exec", || exe.train_step_into(ws, params, bx, by))?
         };
         anyhow::ensure!(loss.is_finite(), "loss diverged at step {}", self.step);
 
-        // --- optimizer update -----------------------------------------
+        // --- optimizer update (gradients consumed from the workspace
+        //     in place — no collected Vec<Tensor> per step) ------------
         {
             let opt = &mut self.optimizer;
             let params = &mut self.params;
-            self.profile.scope("optim_update", || opt.step(params, &grads));
+            let grads = self.workspace.grads();
+            self.profile.scope("optim_update", || opt.step(params, grads));
         }
         self.step += 1;
         self.epoch_loss += loss;

@@ -7,7 +7,7 @@ use dmdtrain::config::{Config, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::model::{forward, Arch};
 use dmdtrain::rng::Rng;
-use dmdtrain::runtime::{ManifestEntry, NativeExecutable, Runtime};
+use dmdtrain::runtime::{ManifestEntry, NativeExecutable, Runtime, TrainWorkspace};
 use dmdtrain::tensor::Tensor;
 use dmdtrain::trainer::TrainSession;
 
@@ -33,11 +33,26 @@ fn random_problem(arch: &Arch, rows: usize, seed: u64) -> (Vec<Tensor>, Tensor, 
 /// tensor, compared against the analytic gradients by norm-relative
 /// error. The perturbation uses the actually-representable f32 step
 /// (fl(w+h) − w) to keep the difference quotient honest.
+///
+/// Also locks the fused-epilogue workspace path: `train_step_into`
+/// must reproduce the legacy gradients bit-for-bit before the FD check
+/// blesses them against the loss.
 fn gradient_check(dims: Vec<usize>, rows: usize, seed: u64) {
     let arch = Arch::new(dims.clone()).unwrap();
     let exe = native_train_step(&dims);
     let (params, x, y) = random_problem(&arch, rows, seed);
-    let (_loss, grads) = exe.train_step(&params, &x, &y).unwrap();
+    let (loss, grads) = exe.train_step(&params, &x, &y).unwrap();
+
+    let mut ws = TrainWorkspace::new(&arch, rows);
+    let loss_ws = exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+    assert_eq!(loss_ws.to_bits(), loss.to_bits(), "workspace loss diverged ({dims:?})");
+    for (pi, (gw, gl)) in ws.grads().iter().zip(&grads).enumerate() {
+        assert_eq!(
+            gw.data(),
+            gl.data(),
+            "arch {dims:?} param {pi}: workspace gradients diverge from the legacy path"
+        );
+    }
 
     let h = 5e-3f32;
     for pi in 0..params.len() {

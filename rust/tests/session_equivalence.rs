@@ -9,6 +9,14 @@
 //! re-injection and the accept-worse guard → per epoch eval) built only
 //! from public APIs. If the session ever drifts numerically, this file
 //! is the tripwire.
+//!
+//! Since PR 5 this equivalence also covers the **workspace hot path**
+//! end to end: the frozen loop deliberately drives the legacy
+//! allocating `Executable::train_step` (and `Batcher::gather`) while
+//! `TrainSession` internally runs `train_step_into` against its reused
+//! `TrainWorkspace` with the fused σ′ / residual / bias-sum epilogues —
+//! so every assertion below also pins workspace ≡ legacy, including the
+//! DMD jump trajectory (snapshots taken from workspace-updated params).
 
 use dmdtrain::config::{AccelKind, Config, TrainConfig};
 use dmdtrain::data::{Batcher, Dataset};

@@ -1,0 +1,172 @@
+//! Steady-state allocation accounting for the fused training hot path:
+//! after warm-up, `NativeExecutable::train_step_into` against a reused
+//! `TrainWorkspace` must perform **zero** heap allocations on the
+//! serial kernel path, and only tiny per-dispatch task boxes on the
+//! pooled path (never tensor-sized churn).
+//!
+//! The counting allocator tracks allocations **per thread** (const-init
+//! TLS, safe inside the allocator), so concurrently running tests and
+//! pool worker threads cannot pollute the measured section — exactly
+//! the calling-thread contract `train_step_into` makes.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use dmdtrain::model::Arch;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::{ManifestEntry, NativeExecutable, TrainWorkspace};
+use dmdtrain::tensor::Tensor;
+
+struct CountingAlloc;
+
+thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+fn record(bytes: usize) {
+    // try_with: TLS may be unavailable during thread teardown, and the
+    // allocator must never panic or recurse there
+    let _ = TRACKING.try_with(|t| {
+        if t.get() {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            let _ = BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` with this thread's allocation counters armed; returns
+/// (result, allocation count, allocated bytes).
+fn counted<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
+    ALLOCS.with(|c| c.set(0));
+    BYTES.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    let out = f();
+    TRACKING.with(|t| t.set(false));
+    (out, ALLOCS.with(|c| c.get()), BYTES.with(|c| c.get()))
+}
+
+fn problem(dims: &[usize], rows: usize, seed: u64) -> (Arch, Vec<Tensor>, Tensor, Tensor) {
+    let arch = Arch::new(dims.to_vec()).unwrap();
+    let mut rng = Rng::new(seed);
+    let params = arch.init_params(&mut rng);
+    let x = Tensor::from_fn(rows, arch.input_dim(), |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let y = Tensor::from_fn(rows, arch.output_dim(), |_, _| rng.uniform_in(-0.5, 0.5) as f32);
+    (arch, params, x, y)
+}
+
+/// The core zero-allocation contract: serial kernels, warm workspace →
+/// not a single heap allocation across many steps.
+#[test]
+fn train_step_into_serial_is_allocation_free_after_warmup() {
+    let dims = [6usize, 16, 32, 64];
+    let entry = ManifestEntry::native_model("train_step", "train_step_alloc", &dims, 0);
+    let exe = NativeExecutable::with_pool(entry, None).unwrap();
+    let (arch, params, x, y) = problem(&dims, 32, 7);
+    let mut ws = TrainWorkspace::new(&arch, 32);
+    // warm-up: the GEMM packing scratch grows to its steady-state size
+    let mut warm = 0.0;
+    for _ in 0..3 {
+        warm = exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+    }
+    let ((), allocs, bytes) = counted(|| {
+        for _ in 0..8 {
+            let loss = exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+            assert_eq!(loss.to_bits(), warm.to_bits());
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "steady-state train_step_into allocated {allocs} times ({bytes} bytes) over 8 steps"
+    );
+}
+
+/// The pooled path boxes its per-dispatch task closures (tiny,
+/// O(threads) per GEMM) — what the workspace eliminates is the
+/// tensor-sized churn. Bound the caller-thread allocation volume per
+/// step far below one activation tensor.
+#[test]
+fn train_step_into_pooled_keeps_only_dispatch_allocations() {
+    let dims = [6usize, 16, 32, 64];
+    let entry = ManifestEntry::native_model("train_step", "train_step_alloc_pool", &dims, 0);
+    let exe = NativeExecutable::new(entry).unwrap(); // global pool
+    let rows = 256;
+    let (arch, params, x, y) = problem(&dims, rows, 9);
+    let mut ws = TrainWorkspace::new(&arch, rows);
+    for _ in 0..3 {
+        exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+    }
+    let steps = 4u64;
+    let ((), allocs, bytes) = counted(|| {
+        for _ in 0..steps {
+            exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+        }
+    });
+    // one activation tensor alone is rows×64×4 = 64 KiB; the dispatch
+    // boxes for a whole step must stay well under that. The box count
+    // scales with the global pool size (tasks_for = 2·threads per
+    // dispatch), so the ceiling scales with it too — the bound stays
+    // meaningful from CI's pinned 4 threads up to many-core dev boxes.
+    let threads = dmdtrain::util::pool::WorkerPool::global().threads() as u64;
+    let byte_ceiling = 64 * 1024 + threads * 2048;
+    let alloc_ceiling = 4096 + threads * 64;
+    assert!(
+        bytes / steps < byte_ceiling,
+        "pooled train_step_into allocated {} bytes/step (dispatch boxes only should be < {byte_ceiling})",
+        bytes / steps
+    );
+    assert!(
+        allocs / steps < alloc_ceiling,
+        "pooled train_step_into made {} allocations/step",
+        allocs / steps
+    );
+}
+
+/// The legacy wrapper still allocates (the returned grads Vec) but must
+/// not re-grow its internal workspace after the first call.
+#[test]
+fn legacy_wrapper_reuses_its_internal_workspace() {
+    let dims = [4usize, 8, 4];
+    let entry = ManifestEntry::native_model("train_step", "train_step_alloc_legacy", &dims, 0);
+    let exe = NativeExecutable::with_pool(entry, None).unwrap();
+    let (_arch, params, x, y) = problem(&dims, 16, 11);
+    let (warm, _) = exe.train_step(&params, &x, &y).unwrap();
+    let ((), _allocs, bytes) = counted(|| {
+        for _ in 0..4 {
+            let (loss, grads) = exe.train_step(&params, &x, &y).unwrap();
+            assert_eq!(loss.to_bits(), warm.to_bits());
+            assert_eq!(grads.len(), params.len());
+        }
+    });
+    // per call: the cloned grads (4·8+8+8·4+4 = 76 floats ≈ 304 B plus
+    // Vec/Tensor headers) — nothing workspace-sized
+    assert!(
+        bytes < 16 * 1024,
+        "legacy wrapper allocated {bytes} bytes over 4 calls — workspace not reused?"
+    );
+}

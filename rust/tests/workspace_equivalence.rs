@@ -1,0 +1,131 @@
+//! Bit-equivalence of the fused workspace hot path against the legacy
+//! allocating `train_step`, both per call and across whole training
+//! loops (mini-batch and full-batch), plus the serial/pooled
+//! thread-count invariance of the fused epilogues.
+
+use dmdtrain::model::Arch;
+use dmdtrain::optim::{Adam, Optimizer};
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::{ManifestEntry, NativeExecutable, TrainWorkspace};
+use dmdtrain::tensor::Tensor;
+
+fn exe(dims: &[usize], name: &str) -> NativeExecutable {
+    NativeExecutable::new(ManifestEntry::native_model("train_step", name, dims, 0)).unwrap()
+}
+
+fn exe_serial(dims: &[usize], name: &str) -> NativeExecutable {
+    NativeExecutable::with_pool(ManifestEntry::native_model("train_step", name, dims, 0), None)
+        .unwrap()
+}
+
+fn problem(dims: &[usize], rows: usize, seed: u64) -> (Arch, Vec<Tensor>, Tensor, Tensor) {
+    let arch = Arch::new(dims.to_vec()).unwrap();
+    let mut rng = Rng::new(seed);
+    let params = arch.init_params(&mut rng);
+    let x = Tensor::from_fn(rows, arch.input_dim(), |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let y = Tensor::from_fn(rows, arch.output_dim(), |_, _| rng.uniform_in(-0.5, 0.5) as f32);
+    (arch, params, x, y)
+}
+
+/// Direct single-step parity: loss and every gradient tensor bitwise.
+#[test]
+fn workspace_grads_match_legacy_train_step_bitwise() {
+    for (dims, rows, seed) in [
+        (&[6usize, 8, 6][..], 16usize, 1u64),
+        (&[6, 16, 32, 64][..], 33, 2),
+        (&[3, 5, 2][..], 1, 3),
+        (&[2, 7, 7, 3][..], 161, 4),
+    ] {
+        let exe = exe(dims, "ts_ws_parity");
+        let (arch, params, x, y) = problem(dims, rows, seed);
+        let (loss_legacy, grads_legacy) = exe.train_step(&params, &x, &y).unwrap();
+        let mut ws = TrainWorkspace::new(&arch, rows);
+        let loss_ws = exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+        assert_eq!(
+            loss_ws.to_bits(),
+            loss_legacy.to_bits(),
+            "loss diverged for arch {dims:?}"
+        );
+        for (i, (gw, gl)) in ws.grads().iter().zip(&grads_legacy).enumerate() {
+            assert_eq!(gw.shape(), gl.shape());
+            assert_eq!(gw.data(), gl.data(), "grad tensor {i} diverged for arch {dims:?}");
+        }
+    }
+}
+
+/// The fused epilogues are thread-count invariant: pooled and serial
+/// executables produce identical bits into their workspaces.
+#[test]
+fn workspace_pooled_and_serial_paths_are_bit_identical() {
+    let dims = [6usize, 16, 32, 64];
+    let rows = 161; // ragged against every tile size
+    let par = exe(&dims, "ts_ws_pool");
+    let ser = exe_serial(&dims, "ts_ws_serial");
+    let (arch, params, x, y) = problem(&dims, rows, 5);
+    let mut ws_par = TrainWorkspace::new(&arch, rows);
+    let mut ws_ser = TrainWorkspace::new(&arch, rows);
+    let loss_par = par.train_step_into(&mut ws_par, &params, &x, &y).unwrap();
+    let loss_ser = ser.train_step_into(&mut ws_ser, &params, &x, &y).unwrap();
+    assert_eq!(loss_par.to_bits(), loss_ser.to_bits());
+    for (gp, gs) in ws_par.grads().iter().zip(ws_ser.grads()) {
+        assert_eq!(gp.data(), gs.data(), "pooled workspace grads differ from serial");
+    }
+}
+
+/// Whole-loop parity: an Adam training loop driven by the legacy
+/// allocating path and one driven by the workspace path (gradients
+/// consumed in place) must produce bit-identical trajectories — on the
+/// mini-batch shape, then on the full batch, with ONE workspace reused
+/// across the batch-shape change (exercising the resize path).
+#[test]
+fn training_loop_workspace_matches_legacy_minibatch_and_full_batch() {
+    let dims = [6usize, 10, 8];
+    let n_rows = 24;
+    let (arch, params0, x_all, y_all) = problem(&dims, n_rows, 6);
+    let exe = exe(&dims, "ts_ws_loop");
+    let mut ws = TrainWorkspace::empty();
+
+    for batch in [8usize, n_rows] {
+        // fixed deterministic batch schedule: consecutive row windows
+        let gather = |start: usize| {
+            let bx = Tensor::from_fn(batch, arch.input_dim(), |r, c| x_all.get(start + r, c));
+            let by = Tensor::from_fn(batch, arch.output_dim(), |r, c| y_all.get(start + r, c));
+            (bx, by)
+        };
+        let starts: Vec<usize> = (0..20).map(|s| (s * batch) % (n_rows - batch + 1)).collect();
+
+        // legacy loop: fresh Vec<Tensor> gradients every step
+        let mut params_a = params0.clone();
+        let mut adam_a = Adam::new(Default::default());
+        let mut losses_a = Vec::new();
+        for &s in &starts {
+            let (bx, by) = gather(s);
+            let (loss, grads) = exe.train_step(&params_a, &bx, &by).unwrap();
+            adam_a.step(&mut params_a, &grads);
+            losses_a.push(loss);
+        }
+
+        // workspace loop: gradients consumed straight from the ws
+        let mut params_b = params0.clone();
+        let mut adam_b = Adam::new(Default::default());
+        for (i, &s) in starts.iter().enumerate() {
+            let (bx, by) = gather(s);
+            let loss = exe.train_step_into(&mut ws, &params_b, &bx, &by).unwrap();
+            assert_eq!(
+                loss.to_bits(),
+                losses_a[i].to_bits(),
+                "batch {batch}: loss diverged at step {i}"
+            );
+            adam_b.step(&mut params_b, ws.grads());
+        }
+        assert_eq!(ws.rows(), batch);
+        for (j, (pa, pb)) in params_a.iter().zip(&params_b).enumerate() {
+            assert_eq!(
+                pa.data(),
+                pb.data(),
+                "batch {batch}: params diverged in tensor {j} after {} steps",
+                starts.len()
+            );
+        }
+    }
+}
