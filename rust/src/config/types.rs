@@ -179,6 +179,71 @@ impl SgdParams {
     }
 }
 
+/// Divergence-recovery policy (`[recovery]` section): what a
+/// `TrainSession` does when a step produces a non-finite loss instead
+/// of aborting the process. See `trainer::session` for the mechanism
+/// (rolling last-good state, bounded rollback retries, jump cooldown).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Roll back to the last good state on a non-finite loss (false =
+    /// legacy behavior: error out immediately).
+    pub enabled: bool,
+    /// Rollbacks allowed since the last *successful* capture before the
+    /// run errors out with diagnostics.
+    pub max_retries: usize,
+    /// Capture the last-good state every N epochs (the capture costs a
+    /// params + optimizer-moments copy, so it is amortized; 1 = every
+    /// epoch).
+    pub snapshot_every: usize,
+    /// Accelerator-jump opportunities to skip after a rollback — the
+    /// extrapolated jump is the usual divergence source, so the retry
+    /// proceeds on plain backprop first.
+    pub jump_cooldown: usize,
+    /// Multiply the optimizer learning rate by this on every rollback
+    /// (1.0 = keep the step size). Persists for the rest of the run:
+    /// the lr is not part of the restored optimizer state.
+    pub lr_shrink: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            enabled: true,
+            max_retries: 3,
+            snapshot_every: 10,
+            jump_cooldown: 1,
+            lr_shrink: 1.0,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// The legacy fail-fast behavior (divergence aborts the run).
+    pub fn disabled() -> Self {
+        RecoveryPolicy {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn from_config(c: &Config) -> anyhow::Result<Self> {
+        let d = RecoveryPolicy::default();
+        let p = RecoveryPolicy {
+            enabled: c.bool_or("recovery.enabled", d.enabled),
+            max_retries: c.usize_or("recovery.max_retries", d.max_retries),
+            snapshot_every: c.usize_or("recovery.snapshot_every", d.snapshot_every).max(1),
+            jump_cooldown: c.usize_or("recovery.jump_cooldown", d.jump_cooldown),
+            lr_shrink: c.f64_or("recovery.lr_shrink", d.lr_shrink),
+        };
+        anyhow::ensure!(
+            p.lr_shrink > 0.0 && p.lr_shrink <= 1.0,
+            "recovery.lr_shrink must be in (0, 1], got {}",
+            p.lr_shrink
+        );
+        Ok(p)
+    }
+}
+
 /// Full training-run configuration (one Algorithm-1 execution).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -218,6 +283,8 @@ pub struct TrainConfig {
     pub measure_dmd: bool,
     /// Dispatch per-layer DMD solves on scoped threads (paper §3).
     pub parallel_dmd: bool,
+    /// Divergence-recovery policy (`[recovery]` section).
+    pub recovery: RecoveryPolicy,
 }
 
 impl TrainConfig {
@@ -244,6 +311,7 @@ impl TrainConfig {
             record_weights: c.bool_or("train.record_weights", false),
             measure_dmd: c.bool_or("train.measure_dmd", true),
             parallel_dmd: c.bool_or("train.parallel_dmd", true),
+            recovery: RecoveryPolicy::from_config(c)?,
         })
     }
 }
@@ -502,6 +570,34 @@ epochs = 50
         assert_eq!(d.early_stop_patience, 0);
         assert_eq!(d.checkpoint_every, 0);
         assert!(d.metrics_jsonl.is_none());
+    }
+
+    #[test]
+    fn recovery_policy_defaults_and_overrides() {
+        let d = TrainConfig::from_config(&Config::parse("[data]\npath = \"x\"").unwrap())
+            .unwrap()
+            .recovery;
+        assert!(d.enabled);
+        assert_eq!(d.max_retries, 3);
+        assert_eq!(d.snapshot_every, 10);
+        assert_eq!(d.jump_cooldown, 1);
+        assert_eq!(d.lr_shrink, 1.0);
+
+        let c = Config::parse(
+            "[data]\npath = \"x\"\n[recovery]\nenabled = false\nmax_retries = 7\n\
+             snapshot_every = 0\njump_cooldown = 3\nlr_shrink = 0.5",
+        )
+        .unwrap();
+        let p = TrainConfig::from_config(&c).unwrap().recovery;
+        assert!(!p.enabled);
+        assert_eq!(p.max_retries, 7);
+        assert_eq!(p.snapshot_every, 1, "snapshot_every clamps to >= 1");
+        assert_eq!(p.jump_cooldown, 3);
+        assert_eq!(p.lr_shrink, 0.5);
+
+        let bad = Config::parse("[data]\npath = \"x\"\n[recovery]\nlr_shrink = 0.0").unwrap();
+        assert!(TrainConfig::from_config(&bad).is_err());
+        assert!(!RecoveryPolicy::disabled().enabled);
     }
 
     #[test]

@@ -61,6 +61,11 @@ pub fn dmd_extrapolate_with_gram(
     params: &DmdParams,
     steps: usize,
 ) -> anyhow::Result<DmdOutcome> {
+    // failpoint: simulate a failed solve (fault-injection harness). The
+    // caller-side contract is "Err ⇒ that layer keeps its backprop
+    // weights", so an injected Err exercises the degradation path.
+    crate::util::failpoint::inject_io("dmd.solve")
+        .map_err(|e| anyhow::anyhow!("injected DMD solve failure: {e}"))?;
     let m = cols.len();
     anyhow::ensure!(m >= 2, "DMD needs ≥ 2 snapshots, got {m}");
     anyhow::ensure!(

@@ -92,6 +92,26 @@
 //! bit-identical to direct `Executable::predict` calls no matter how
 //! requests get coalesced (`tests/serve_integration.rs`).
 //!
+//! ## Fault tolerance
+//!
+//! Training is crash-safe and self-healing. Every checkpoint artifact
+//! (params, resume sidecar, registry sidecars) is written through
+//! [`util::durable::atomic_write`] — tmp file + fsync + rename + parent
+//! directory fsync — and carries a CRC-32 trailer verified at load, so
+//! a crash at *any* byte offset leaves the previous checkpoint intact
+//! and silent corruption is rejected instead of served. At run time,
+//! [`trainer::TrainSession`] watches for non-finite losses/gradients
+//! and rolls back to a rolling last-known-good state
+//! ([`config::RecoveryPolicy`], the `[recovery]` TOML section) with
+//! bounded retries, an optional learning-rate shrink and a jump
+//! cooldown; failed DMD solves degrade to "no jump for that layer"
+//! with the failure counted in the event, never a fatal error. All of
+//! it is exercised by a fail-point registry ([`util::failpoint`]) —
+//! `DMDTRAIN_FAILPOINTS` / `--failpoints` inject IO errors, torn
+//! writes, NaNs and panics by name; when nothing is armed the hot-path
+//! cost is a single relaxed atomic load (`tests/fault_injection.rs`,
+//! and `tests/workspace_alloc.rs` keeps the step zero-allocation).
+//!
 //! Crate map (see DESIGN.md for the paper-to-module inventory):
 //!
 //! | module | role |
@@ -104,11 +124,11 @@
 //! | [`data`] | Latin-hypercube sampling, dataset format, scaling |
 //! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`); `TrainWorkspace` zero-alloc hot path |
 //! | [`serve`] | HTTP inference: checkpoint registry, micro-batched predict |
-//! | [`trainer`] | `TrainSession` state machine (`trainer::session`), pluggable accelerators (`trainer::accel`), observers (`trainer::observe`), resume checkpoints |
+//! | [`trainer`] | `TrainSession` state machine (`trainer::session`), pluggable accelerators (`trainer::accel`), observers (`trainer::observe`), CRC-trailed resume checkpoints, divergence recovery |
 //! | [`coordinator`] | (m, s) sensitivity sweeps across worker threads |
 //! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
 //! | [`cli`], [`config`] | hand-rolled argv parser and TOML-subset config |
-//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates (incl. the worker pool) |
+//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates: worker pool, CRC-32 (`util::crc32`), durable writes (`util::durable`), fail-point registry (`util::failpoint`) |
 
 // CI runs `cargo clippy -- -D warnings`. The numeric kernels lean on
 // index loops, single-letter math names and long argument lists on

@@ -35,13 +35,19 @@ USAGE: dmdtrain <subcommand> [--flags]
                             --accel dmd|linefit|none
                             --out-dir DIR --save-checkpoint PATH
                             --resume PATH --metrics-jsonl PATH
-                            --early-stop-patience N --checkpoint-every N]
+                            --early-stop-patience N --checkpoint-every N
+                            --recovery true|false --recovery-retries N
+                            --recovery-snapshot-every N
+                            --recovery-cooldown N --recovery-lr-shrink X]
   sweep    --config <toml> [--workers N --epochs N --out PATH]
   predict  --checkpoint PATH --dataset PATH [--artifact NAME]
   serve    [--config <toml> --models DIR --host H --port N
             --batch-window-us N --max-batch N --threads N
             --reload-secs N --port-file PATH]
   info     [--artifacts DIR]
+
+Fault injection (testing): --failpoints \"name=action[@N];…\" or the
+DMDTRAIN_FAILPOINTS env var — actions: error, nan, panic, partial:BYTES.
 
 Config files: configs/*.toml (see configs/paper.toml).";
 
@@ -53,6 +59,16 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Fault-injection arming: the env var is picked up once here, and
+    // `--failpoints` layers explicit specs on top (tests and the CI
+    // fault-injection job drive both paths).
+    util::failpoint::init_from_env();
+    if let Some(spec) = args.str_opt("failpoints") {
+        if let Err(e) = util::failpoint::arm_spec(spec) {
+            eprintln!("argument error: --failpoints: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
     let result = match args.subcommand.as_str() {
         "datagen" => cmd_datagen(&args),
         "train" => cmd_train(&args),
@@ -108,6 +124,9 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("log-every", "train.log_every"),
         ("early-stop-patience", "train.early_stop_patience"),
         ("checkpoint-every", "train.checkpoint_every"),
+        ("recovery-retries", "recovery.max_retries"),
+        ("recovery-snapshot-every", "recovery.snapshot_every"),
+        ("recovery-cooldown", "recovery.jump_cooldown"),
     ] {
         if let Some(v) = args.str_opt(flag) {
             cfg.set(key, Value::Int(v.parse()?));
@@ -115,6 +134,12 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.str_opt("dmd") {
         cfg.set("dmd.enabled", Value::Bool(v == "true" || v == "1"));
+    }
+    if let Some(v) = args.str_opt("recovery") {
+        cfg.set("recovery.enabled", Value::Bool(v == "true" || v == "1"));
+    }
+    if let Some(v) = args.str_opt("recovery-lr-shrink") {
+        cfg.set("recovery.lr_shrink", Value::Float(v.parse()?));
     }
     if let Some(v) = args.str_opt("lr") {
         cfg.set("adam.lr", Value::Float(v.parse()?));

@@ -79,6 +79,9 @@ pub struct DmdEvent {
     pub solve_secs: f64,
     /// Total retained rank across layers.
     pub total_rank: usize,
+    /// Layers whose solve failed or went non-finite this event — those
+    /// layers kept their backprop weights (degraded, not fatal).
+    pub failed_layers: usize,
 }
 
 /// Aggregates DMD events over a run.
@@ -112,7 +115,14 @@ impl DmdStats {
     pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         let mut w = CsvWriter::create(
             path,
-            &["epoch", "rel_train", "rel_test", "solve_secs", "total_rank"],
+            &[
+                "epoch",
+                "rel_train",
+                "rel_test",
+                "solve_secs",
+                "total_rank",
+                "failed_layers",
+            ],
         )?;
         for e in &self.events {
             w.row(&[
@@ -121,6 +131,7 @@ impl DmdStats {
                 e.rel_test,
                 e.solve_secs,
                 e.total_rank as f64,
+                e.failed_layers as f64,
             ])?;
         }
         w.flush()
@@ -183,6 +194,7 @@ mod tests {
             rel_test: f64::NAN,
             solve_secs: 0.1,
             total_rank: 10,
+            failed_layers: 0,
         });
         s.push(DmdEvent {
             epoch: 28,
@@ -190,6 +202,7 @@ mod tests {
             rel_test: 0.4,
             solve_secs: 0.2,
             total_rank: 12,
+            failed_layers: 1,
         });
         assert!((s.mean_rel_train() - 0.4).abs() < 1e-12);
         assert!((s.mean_rel_test() - 0.4).abs() < 1e-12);

@@ -151,6 +151,9 @@ pub struct ServeMetrics {
     pub predict_rows: Counter,
     /// GEMM dispatches performed by the micro-batcher.
     pub predict_batches: Counter,
+    /// Predict requests shed with 429 (bounded-wait submit gave up on a
+    /// full queue).
+    pub predict_shed: Counter,
     /// Registry reload passes (background poll or `POST /reload`).
     pub registry_reloads: Counter,
     /// Whole-request predict latency (queue + window + GEMM + split).
@@ -173,6 +176,7 @@ impl ServeMetrics {
             predict_requests: Counter::new(),
             predict_rows: Counter::new(),
             predict_batches: Counter::new(),
+            predict_shed: Counter::new(),
             registry_reloads: Counter::new(),
             predict_latency: Histogram::latency(),
             batch_size: Histogram::batch_rows(),
@@ -192,12 +196,13 @@ impl ServeMetrics {
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(2048);
-        let counters: [(&str, &str, &Counter); 6] = [
+        let counters: [(&str, &str, &Counter); 7] = [
             ("dmdtrain_http_requests_total", "HTTP requests received", &self.http_requests),
             ("dmdtrain_http_errors_total", "HTTP responses with status >= 400", &self.http_errors),
             ("dmdtrain_predict_requests_total", "predict requests accepted", &self.predict_requests),
             ("dmdtrain_predict_rows_total", "input rows across predict requests", &self.predict_rows),
             ("dmdtrain_predict_batches_total", "micro-batched GEMM dispatches", &self.predict_batches),
+            ("dmdtrain_predict_shed_total", "predict requests shed with 429", &self.predict_shed),
             ("dmdtrain_registry_reloads_total", "model registry reload passes", &self.registry_reloads),
         ];
         for (name, help, c) in counters {

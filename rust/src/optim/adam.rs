@@ -102,6 +102,10 @@ impl Optimizer for Adam {
         self.v = st.slots[1].clone();
         Ok(())
     }
+
+    fn scale_lr(&mut self, factor: f64) {
+        self.p.lr *= factor;
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +176,24 @@ mod tests {
             b.step(&mut pb, &grads);
         }
         assert_eq!(pa[0].data(), pb[0].data());
+    }
+
+    #[test]
+    fn scale_lr_shrinks_the_first_step() {
+        // first Adam update ≈ lr·sign(g), so a halved lr halves the move
+        let grads = vec![Tensor::from_vec(1, 1, vec![2.0])];
+        let mut opt = Adam::new(AdamParams {
+            lr: 0.001,
+            ..Default::default()
+        });
+        opt.scale_lr(0.5);
+        let mut params = vec![Tensor::from_vec(1, 1, vec![1.0])];
+        opt.step(&mut params, &grads);
+        assert!((params[0].get(0, 0) - (1.0 - 0.0005)).abs() < 1e-6);
+        // the shrink is not part of the exported state: import does not undo it
+        let st = opt.export_state();
+        opt.import_state(&st).unwrap();
+        assert_eq!(opt.params().lr, 0.0005);
     }
 
     #[test]

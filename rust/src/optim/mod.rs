@@ -52,6 +52,12 @@ pub trait Optimizer {
     /// Restore a state produced by [`Optimizer::export_state`] on the
     /// same optimizer kind. Errors on a kind mismatch.
     fn import_state(&mut self, st: &OptimizerState) -> anyhow::Result<()>;
+
+    /// Multiply the learning rate by `factor` in place. Used by
+    /// divergence recovery (`RecoveryPolicy::lr_shrink`) to take smaller
+    /// steps after a rollback. Deliberately *not* part of
+    /// [`OptimizerState`], so the shrink survives a state restore.
+    fn scale_lr(&mut self, factor: f64);
 }
 
 /// Serializable optimizer state (see [`Optimizer::export_state`]).

@@ -50,6 +50,10 @@ impl Optimizer for Sgd {
         anyhow::ensure!(st.kind == "sgd", "state is for '{}', not sgd", st.kind);
         Ok(())
     }
+
+    fn scale_lr(&mut self, factor: f64) {
+        self.lr *= factor;
+    }
 }
 
 /// SGD with classical momentum: `v ← μv − lr·g; p ← p + v`.
@@ -121,6 +125,10 @@ impl Optimizer for SgdMomentum {
         anyhow::ensure!(st.slots.len() == 1, "sgd_momentum expects 1 state slot");
         self.velocity = st.slots[0].clone();
         Ok(())
+    }
+
+    fn scale_lr(&mut self, factor: f64) {
+        self.lr *= factor;
     }
 }
 

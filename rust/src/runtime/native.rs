@@ -137,6 +137,13 @@ impl TrainWorkspace {
         &self.grads
     }
 
+    /// Mutable view of the gradient tensors. Exists for the
+    /// fault-injection harness (the `train.grad` failpoint poisons an
+    /// entry through this to exercise divergence recovery).
+    pub fn grads_mut(&mut self) -> &mut [Tensor] {
+        &mut self.grads
+    }
+
     /// Prediction of the last forward pass (the final activation).
     pub fn prediction(&self) -> Option<&Tensor> {
         self.acts.last()

@@ -19,14 +19,44 @@
 use super::registry::ServedModel;
 use crate::metrics::serve::ServeMetrics;
 use crate::tensor::Tensor;
+use crate::util::failpoint;
 use std::collections::VecDeque;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Queue depth before request threads block on submit (backpressure).
+/// Queue depth before submits start waiting (backpressure).
 const QUEUE_DEPTH: usize = 1024;
+
+/// Longest a submit waits on a full queue before shedding the request.
+/// Bounded so a wedged dispatcher turns into load shedding (HTTP 429 at
+/// the router), never an indefinitely blocked connection thread.
+const SUBMIT_WAIT: Duration = Duration::from_millis(50);
+
+/// Client back-off hint surfaced as `Retry-After` on a shed response.
+pub const RETRY_AFTER_SECS: u64 = 1;
+
+/// Why a submit was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue stayed full for the whole bounded wait — the request
+    /// is shed (the router answers 429 + `Retry-After`).
+    Overloaded,
+    /// The dispatcher thread is gone (shutdown or crash) — 503.
+    Down,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "predict queue is full"),
+            SubmitError::Down => write!(f, "predict dispatcher is down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// One predict request in flight.
 pub struct PredictJob {
@@ -67,11 +97,29 @@ impl Clone for BatcherHandle {
 }
 
 impl BatcherHandle {
-    /// Enqueue a job; blocks briefly when the queue is full.
-    pub fn submit(&self, job: PredictJob) -> anyhow::Result<()> {
-        self.tx
-            .send(Msg::Job(job))
-            .map_err(|_| anyhow::anyhow!("predict dispatcher is down"))
+    /// Enqueue a job. Waits at most [`SUBMIT_WAIT`] when the queue is
+    /// full, then sheds with [`SubmitError::Overloaded`] — submit never
+    /// blocks a connection thread indefinitely.
+    pub fn submit(&self, job: PredictJob) -> Result<(), SubmitError> {
+        // failpoint: `serve.batcher.full` simulates a saturated queue
+        if failpoint::fire("serve.batcher.full").is_some() {
+            return Err(SubmitError::Overloaded);
+        }
+        let mut msg = Msg::Job(job);
+        let deadline = Instant::now() + SUBMIT_WAIT;
+        loop {
+            match self.tx.try_send(msg) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Disconnected(_)) => return Err(SubmitError::Down),
+                Err(TrySendError::Full(m)) => {
+                    if Instant::now() >= deadline {
+                        return Err(SubmitError::Overloaded);
+                    }
+                    msg = m;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
     }
 }
 
@@ -116,6 +164,10 @@ fn run(rx: Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
     let max_rows = cfg.max_rows.max(1);
     let mut carry: VecDeque<PredictJob> = VecDeque::new();
     'outer: loop {
+        // failpoint: `serve.batcher.panic` kills the dispatcher thread —
+        // submits then fail with `Down` and the router answers 503
+        // instead of hanging (asserted in tests/fault_injection.rs)
+        failpoint::panic_point("serve.batcher.panic");
         // Head job: oldest carried-over job, else block for the next one.
         let head = match carry.pop_front() {
             Some(j) => j,
@@ -342,6 +394,76 @@ mod tests {
         assert_eq!(r2.recv().unwrap().unwrap(), e2);
         drop(batcher);
         assert_eq!(metrics.predict_batches.get(), 2);
+    }
+
+    #[test]
+    fn full_queue_failpoint_sheds_with_overloaded() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::ZERO,
+                max_rows: 8,
+            },
+            Arc::clone(&metrics),
+        );
+        let m = model(vec![2, 2], 7);
+        let handle = batcher.handle();
+        {
+            let _fp = failpoint::scoped("serve.batcher.full", failpoint::FailAction::Error);
+            let (tx, _rx) = sync_channel(1);
+            let err = handle
+                .submit(PredictJob {
+                    model: Arc::clone(&m),
+                    inputs: Tensor::zeros(1, 2),
+                    reply: tx,
+                })
+                .unwrap_err();
+            assert_eq!(err, SubmitError::Overloaded);
+        }
+        // disarmed again: the same submit goes through
+        let rx = submit(&handle, &m, Tensor::zeros(1, 2));
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn panicked_dispatcher_turns_submits_into_down() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = {
+            let _fp = failpoint::scoped("serve.batcher.panic", failpoint::FailAction::Panic);
+            let b = Batcher::start(
+                BatcherConfig {
+                    window: Duration::ZERO,
+                    max_rows: 8,
+                },
+                Arc::clone(&metrics),
+            );
+            // the dispatcher dies on its first loop iteration; wait for
+            // the channel to disconnect (submits before that may be
+            // accepted into the dying queue and are never answered)
+            let m = model(vec![2, 2], 8);
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                let (tx, _rx) = sync_channel(1);
+                match b.handle().submit(PredictJob {
+                    model: Arc::clone(&m),
+                    inputs: Tensor::zeros(1, 2),
+                    reply: tx,
+                }) {
+                    Err(SubmitError::Down) => break,
+                    _ => {
+                        assert!(
+                            Instant::now() < deadline,
+                            "dispatcher never went down after injected panic"
+                        );
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+            b
+        };
+        drop(batcher);
     }
 
     #[test]

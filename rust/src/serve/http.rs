@@ -111,6 +111,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Emitted as a `Retry-After: <secs>` header when set (load
+    /// shedding: 429 responses carry the client back-off hint).
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
@@ -119,6 +122,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: body.into_bytes(),
+            retry_after: None,
         }
     }
 
@@ -127,6 +131,7 @@ impl Response {
             status,
             content_type: "text/plain; charset=utf-8",
             body: body.into_bytes(),
+            retry_after: None,
         }
     }
 
@@ -139,14 +144,25 @@ impl Response {
         Response::json(status, body)
     }
 
+    /// Attach a `Retry-After: <secs>` header (builder-style).
+    pub fn with_retry_after(mut self, secs: u64) -> Response {
+        self.retry_after = Some(secs);
+        self
+    }
+
     /// Serialize status line + headers + body as one buffered write.
     pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let retry = match self.retry_after {
+            Some(secs) => format!("Retry-After: {secs}\r\n"),
+            None => String::new(),
+        };
         let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n",
             self.status,
             reason(self.status),
             self.content_type,
             self.body.len(),
+            retry,
             if keep_alive { "keep-alive" } else { "close" },
         );
         let mut buf = Vec::with_capacity(head.len() + self.body.len());
@@ -163,6 +179,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -281,6 +298,21 @@ mod tests {
         let text = String::from_utf8(wire).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn retry_after_header_is_emitted_on_shed() {
+        let resp = Response::error(429, "overloaded").with_retry_after(1);
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, false).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        // and absent when unset
+        let plain = Response::json(200, "{}".to_string());
+        let mut wire = Vec::new();
+        plain.write_to(&mut wire, true).unwrap();
+        assert!(!String::from_utf8(wire).unwrap().contains("Retry-After"));
     }
 
     #[test]

@@ -353,7 +353,9 @@ fn load_model(name: &str, path: &Path) -> anyhow::Result<ServedModel> {
 /// registry can pin the arch and serve in physical units
 /// (`dmdtrain train --save-checkpoint` calls this with the dataset's
 /// scaling). Float ranges use shortest-roundtrip formatting, so the
-/// sidecar parses back to the exact f32 bounds.
+/// sidecar parses back to the exact f32 bounds. Written atomically
+/// (tmp + fsync + rename, failpoint `"ckpt.sidecar"`) so a crash never
+/// leaves a half-written sidecar next to a good checkpoint.
 pub fn write_sidecar(
     checkpoint_path: impl AsRef<Path>,
     arch: &[usize],
@@ -377,7 +379,7 @@ pub fn write_sidecar(
     }
     body.push_str("}\n");
     let sidecar = checkpoint_path.as_ref().with_extension("json");
-    std::fs::write(&sidecar, body)
+    crate::util::durable::atomic_write(&sidecar, "ckpt.sidecar", body.as_bytes())
         .map_err(|e| anyhow::anyhow!("sidecar {}: {e}", sidecar.display()))?;
     Ok(())
 }
@@ -548,6 +550,49 @@ mod tests {
         let rep = reg.reload();
         assert_eq!(rep.dropped, vec!["b".to_string()]);
         assert!(reg.get("b").is_none());
+    }
+
+    #[test]
+    fn torn_or_corrupt_reload_keeps_previous_model() {
+        let dir = temp_dir("torn");
+        write_model(&dir, "m", vec![3, 4, 2], 5);
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        let v1 = reg.get("m").unwrap();
+        let path = dir.join("m.dmdp");
+        let good = std::fs::read(&path).unwrap();
+
+        // torn file: a crash mid-write leaves a truncated checkpoint
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        let rep = reg.reload();
+        assert_eq!(rep.errors.len(), 1, "{:?}", rep.errors);
+        assert_eq!(rep.errors[0].0, "m");
+        assert!(rep.loaded.is_empty() && rep.dropped.is_empty());
+        assert!(
+            Arc::ptr_eq(&v1, &reg.get("m").unwrap()),
+            "previous model must keep serving past a torn file"
+        );
+
+        // bit rot: full-length file failing the CRC trailer
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        let rep = reg.reload();
+        assert_eq!(rep.errors.len(), 1, "{:?}", rep.errors);
+        assert!(
+            rep.errors[0].1.contains("checksum") || rep.errors[0].1.contains("implausible"),
+            "unexpected error: {}",
+            rep.errors[0].1
+        );
+        assert!(Arc::ptr_eq(&v1, &reg.get("m").unwrap()));
+
+        // a repaired file loads again, into a fresh Arc
+        std::fs::write(&path, &good).unwrap();
+        let rep = reg.reload();
+        assert_eq!(rep.loaded, vec!["m".to_string()], "{:?}", rep.errors);
+        assert!(!Arc::ptr_eq(&v1, &reg.get("m").unwrap()));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! `Executable::predict` directly on the same checkpoint (the standing
 //! invariant in `tests/serve_integration.rs`).
 
-use super::batcher::{BatcherHandle, PredictJob};
+use super::batcher::{BatcherHandle, PredictJob, SubmitError, RETRY_AFTER_SECS};
 use super::http::{Request, Response};
 use super::registry::{ModelRegistry, ServedModel};
 use crate::metrics::serve::ServeMetrics;
@@ -129,8 +129,18 @@ fn predict(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Response
         inputs: x,
         reply: reply_tx,
     };
-    if batcher.submit(job).is_err() {
-        return Response::error(503, "predict dispatcher is down");
+    match batcher.submit(job) {
+        Ok(()) => {}
+        Err(SubmitError::Overloaded) => {
+            // load shed: bounded-wait submit gave up on a full queue —
+            // tell the client to back off instead of queueing forever
+            state.metrics.predict_shed.inc();
+            return Response::error(429, "predict queue is full, retry later")
+                .with_retry_after(RETRY_AFTER_SECS);
+        }
+        Err(SubmitError::Down) => {
+            return Response::error(503, "predict dispatcher is down");
+        }
     }
     let result = match reply_rx.recv() {
         Ok(r) => r,

@@ -60,8 +60,13 @@ pub struct AccelReport {
     pub events: usize,
     /// Per-layer extrapolations written back across all events.
     pub accepted_layers: usize,
-    /// Events rolled back by the accept-worse guard.
+    /// Events rolled back by the accept-worse guard (including jumps
+    /// whose after-measurement went non-finite).
     pub rejected_events: usize,
+    /// Per-layer solves that failed or went non-finite across all
+    /// events — those layers kept their backprop weights (the run
+    /// degrades instead of erroring).
+    pub degraded_layers: usize,
 }
 
 /// A training accelerator: observes the post-step weight stream and
@@ -86,6 +91,12 @@ pub trait Accelerator {
 
     /// Aggregate outcome so far.
     fn report(&self) -> AccelReport;
+
+    /// Discard the pending jump: clear any resident snapshot columns so
+    /// the next burst starts fresh. Called by divergence recovery to
+    /// skip the jump opportunity that preceded a rollback (no-op for
+    /// stateless accelerators).
+    fn skip_jump(&mut self) {}
 
     /// Export resident snapshot columns for a resume checkpoint
     /// (empty for stateless accelerators).
@@ -217,13 +228,18 @@ fn record_layers(buffers: &mut [SnapshotBuffer], arch: &Arch, params: &[Tensor],
 /// timing and stats accounting. `solve` performs the surrogate
 /// extrapolation + write-back (and must clear its buffers — the clear
 /// is part of the timed solve, as in the original loop), returning
-/// (written-back layers, total rank).
+/// (written-back layers, total rank, failed layers).
+///
+/// Fault tolerance: when measurement is on, a jump whose *after*
+/// training MSE comes back non-finite is rolled back to the pre-jump
+/// weights ("no jump this round") and counted as a rejected event — a
+/// bad extrapolation degrades the run instead of poisoning it.
 fn run_guarded_jump(
     guard: Option<f64>,
     stats: &mut AccelReport,
     params: &mut Vec<Tensor>,
     ctx: &mut JumpCtx<'_>,
-    solve: impl FnOnce(&mut Vec<Tensor>, &mut Rng, &mut Profile) -> (usize, usize),
+    solve: impl FnOnce(&mut Vec<Tensor>, &mut Rng, &mut Profile) -> (usize, usize, usize),
 ) -> anyhow::Result<DmdEvent> {
     let need_measure = ctx.measure_enabled || guard.is_some();
     let (before_tr, before_te) = if need_measure {
@@ -231,12 +247,13 @@ fn run_guarded_jump(
     } else {
         (f64::NAN, f64::NAN)
     };
-    // keep a copy for the optional rejection guard (not in the paper;
-    // the paper's own future-work note asks for "annealing or
-    // relaxation")
-    let saved = guard.map(|_| params.clone());
+    // keep a copy for the rejection paths (the guard is not in the
+    // paper — its own future-work note asks for "annealing or
+    // relaxation"; the non-finite rollback is this crate's robustness
+    // extension)
+    let saved = need_measure.then(|| params.clone());
     let t0 = std::time::Instant::now();
-    let (accepted, total_rank) = solve(params, &mut *ctx.rng, &mut *ctx.profile);
+    let (accepted, total_rank, failed) = solve(params, &mut *ctx.rng, &mut *ctx.profile);
     let solve_secs = t0.elapsed().as_secs_f64();
 
     let (mut rel_train, mut rel_test) = (f64::NAN, f64::NAN);
@@ -246,24 +263,25 @@ fn run_guarded_jump(
             ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?;
         rel_train = after_tr / before_tr;
         rel_test = after_te / before_te;
-        if let (Some(factor), Some(saved)) = (guard, saved) {
-            if !(after_tr <= before_tr * factor) {
-                *params = saved; // reject the jump
-                rel_train = 1.0;
-                rel_test = 1.0;
-                rejected = true;
-            }
+        let guard_rejects = matches!(guard, Some(factor) if !(after_tr <= before_tr * factor));
+        if guard_rejects || !after_tr.is_finite() {
+            *params = saved.expect("saved whenever measuring"); // reject the jump
+            rel_train = 1.0;
+            rel_test = 1.0;
+            rejected = true;
         }
     }
     stats.events += 1;
     stats.accepted_layers += accepted;
     stats.rejected_events += rejected as usize;
+    stats.degraded_layers += failed;
     Ok(DmdEvent {
         epoch: ctx.epoch,
         rel_train,
         rel_test,
         solve_secs,
         total_rank,
+        failed_layers: failed,
     })
 }
 
@@ -339,20 +357,23 @@ impl Accelerator for DmdAccelerator {
                 });
                 let mut accepted = 0usize;
                 let mut total_rank = 0usize;
+                let mut failed = 0usize;
                 profile.scope("dmd_assign", || {
                     for out in &outcomes {
                         match &out.result {
-                            Ok(o) => {
+                            Ok(o) if o.new_weights.iter().all(|v| v.is_finite()) => {
                                 let last = buffers[out.layer].last().expect("full buffer");
                                 let w = policy.blend(&o.new_weights, last, rng);
                                 arch.unflatten_layer(params, out.layer, &w);
                                 accepted += 1;
                                 total_rank += o.rank;
                             }
-                            Err(_) => {
+                            _ => {
                                 // per-layer failure (degenerate
-                                // snapshots): keep the backprop
-                                // weights for that layer
+                                // snapshots, failed solve, non-finite
+                                // proposal): keep the backprop weights
+                                // for that layer — degrade, don't die
+                                failed += 1;
                             }
                         }
                     }
@@ -360,7 +381,7 @@ impl Accelerator for DmdAccelerator {
                 for buf in buffers.iter_mut() {
                     buf.clear();
                 }
-                (accepted, total_rank)
+                (accepted, total_rank, failed)
             },
         )?;
         Ok(Some(ev))
@@ -368,6 +389,12 @@ impl Accelerator for DmdAccelerator {
 
     fn report(&self) -> AccelReport {
         self.stats
+    }
+
+    fn skip_jump(&mut self) {
+        for buf in self.buffers.iter_mut() {
+            buf.clear();
+        }
     }
 
     fn export_snapshots(&self) -> Vec<Vec<SnapshotCol>> {
@@ -454,13 +481,17 @@ impl Accelerator for LineFitAccelerator {
             ctx,
             |params, rng, profile| {
                 let mut accepted = 0usize;
+                let mut failed = 0usize;
                 profile.scope("linefit_solve", || {
                     for (layer, buf) in buffers.iter().enumerate() {
-                        if let Ok(new_w) = WeightExtrapolation::extrapolate(buf, s) {
-                            let last = buf.last().expect("full buffer");
-                            let w = policy.blend(&new_w, last, rng);
-                            arch.unflatten_layer(params, layer, &w);
-                            accepted += 1;
+                        match WeightExtrapolation::extrapolate(buf, s) {
+                            Ok(new_w) if new_w.iter().all(|v| v.is_finite()) => {
+                                let last = buf.last().expect("full buffer");
+                                let w = policy.blend(&new_w, last, rng);
+                                arch.unflatten_layer(params, layer, &w);
+                                accepted += 1;
+                            }
+                            _ => failed += 1, // keep backprop weights
                         }
                     }
                 });
@@ -469,7 +500,7 @@ impl Accelerator for LineFitAccelerator {
                 }
                 // a line fit retains slope + intercept per weight —
                 // report 2 "modes" per written-back layer
-                (accepted, 2 * accepted)
+                (accepted, 2 * accepted, failed)
             },
         )?;
         Ok(Some(ev))
@@ -477,6 +508,12 @@ impl Accelerator for LineFitAccelerator {
 
     fn report(&self) -> AccelReport {
         self.stats
+    }
+
+    fn skip_jump(&mut self) {
+        for buf in self.buffers.iter_mut() {
+            buf.clear();
+        }
     }
 
     fn export_snapshots(&self) -> Vec<Vec<SnapshotCol>> {
@@ -770,6 +807,22 @@ mod tests {
         };
         assert!(accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().is_none());
         assert_eq!(profile.count("snapshot_record"), 0);
+    }
+
+    #[test]
+    fn skip_jump_clears_buffers_without_touching_params() {
+        let (arch, mut params, mut accel, mut profile) = geometric_setup(4);
+        fill(&mut accel, &arch, &mut params, &mut profile, 4);
+        let before: Vec<Vec<f32>> = params.iter().map(|p| p.data().to_vec()).collect();
+        accel.skip_jump();
+        assert!(!accel.ready(), "skip must drain the pending burst");
+        for (p, b) in params.iter().zip(&before) {
+            assert_eq!(p.data(), &b[..]);
+        }
+        assert_eq!(accel.report().events, 0, "a skipped jump is not an event");
+        // the next burst fills and fires normally
+        fill(&mut accel, &arch, &mut params, &mut profile, 4);
+        assert!(accel.ready());
     }
 
     #[test]

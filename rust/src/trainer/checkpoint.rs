@@ -1,14 +1,23 @@
-//! Parameter checkpoints: tiny binary format (magic `DMDP`, tensor count,
-//! then rows/cols/data per tensor, f32 LE).
+//! Parameter checkpoints: tiny binary format (magic `DMP2`, tensor count,
+//! then rows/cols/data per tensor, f32 LE, CRC-32 trailer).
 //!
-//! IO is bulk per tensor: `save_params` serializes each tensor's data
-//! into one byte buffer and issues a single write (the per-f32
-//! `write_all` loop it replaced cost a `BufWriter` round-trip per
-//! element — measurable on the ~2.9 M-parameter paper arch), and
-//! `load_params` mirrors it with one `read_exact` per tensor. The
-//! loader validates dimensions *before* allocating so the serve-side
-//! model registry fails loudly on corrupt or truncated artifacts
-//! instead of panicking or ballooning memory.
+//! **Durability.** Every artifact is written through
+//! [`util::durable::atomic_write`](crate::util::durable::atomic_write)
+//! (tmp file + fsync + rename + fsync(dir)), so a crash mid-save — at
+//! *any* byte offset — leaves the previous checkpoint intact; a reader
+//! never observes a torn file. Each write is guarded by a failpoint
+//! (`ckpt.params` / `ckpt.resume`) so tests can inject exactly that
+//! crash.
+//!
+//! **Integrity.** The current formats (params magic `DMP2`, resume
+//! version 2) end in a CRC-32 trailer over all preceding bytes;
+//! corruption that slips past the durability story (bad disk, manual
+//! edits) is rejected at load with a checksum error. Legacy files
+//! (params magic `DMDP`, resume version 1 — no checksum) still load.
+//!
+//! The loader validates dimensions *before* allocating so the
+//! serve-side model registry fails loudly on corrupt or truncated
+//! artifacts instead of panicking or ballooning memory.
 //!
 //! Resume sidecars ([`TrainState`], magic `DMDR`) complement a `.dmdp`
 //! parameter file with everything else a `TrainSession` needs to
@@ -20,23 +29,25 @@ use super::accel::SnapshotCol;
 use crate::optim::OptimizerState;
 use crate::rng::RngState;
 use crate::tensor::Tensor;
+use crate::util::crc32::crc32;
+use crate::util::durable::atomic_write;
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"DMDP";
+const LEGACY_MAGIC: &[u8; 4] = b"DMDP";
+const MAGIC_V2: &[u8; 4] = b"DMP2";
 const RESUME_MAGIC: &[u8; 4] = b"DMDR";
-const RESUME_VERSION: u32 = 1;
+const RESUME_VERSION_LEGACY: u32 = 1;
+const RESUME_VERSION: u32 = 2;
+/// Failpoints guarding the two checkpoint artifact writes.
+pub const FP_SAVE_PARAMS: &str = "ckpt.params";
+pub const FP_SAVE_RESUME: &str = "ckpt.resume";
 /// Upper bounds making corrupt headers fail fast: no real arch comes
 /// close (paper arch: 2670 cols, ~2.7 M elements in the largest tensor).
 const MAX_DIM: usize = 16_777_216; // 2^24 rows or cols
 const MAX_ELEMS: usize = 268_435_456; // 2^28 f32 = 1 GiB per tensor
 
-pub fn save_params(params: &[Tensor], path: impl AsRef<Path>) -> anyhow::Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(MAGIC)?;
+fn write_params_body(f: &mut impl Write, params: &[Tensor]) -> anyhow::Result<()> {
     f.write_all(&(params.len() as u32).to_le_bytes())?;
     let mut buf: Vec<u8> = Vec::new();
     for t in params {
@@ -49,17 +60,20 @@ pub fn save_params(params: &[Tensor], path: impl AsRef<Path>) -> anyhow::Result<
         }
         f.write_all(&buf)?;
     }
-    f.flush()?;
     Ok(())
 }
 
-pub fn load_params(path: impl AsRef<Path>) -> anyhow::Result<Vec<Tensor>> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(&path).map_err(|e| {
-        anyhow::anyhow!("checkpoint {}: {e}", path.as_ref().display())
-    })?);
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a DMDP checkpoint");
+pub fn save_params(params: &[Tensor], path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(MAGIC_V2);
+    write_params_body(&mut bytes, params)?;
+    let crc = crc32(&bytes);
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    atomic_write(path.as_ref(), FP_SAVE_PARAMS, &bytes)
+        .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.as_ref().display()))
+}
+
+fn read_params_body(f: &mut impl Read) -> anyhow::Result<Vec<Tensor>> {
     let mut b4 = [0u8; 4];
     f.read_exact(&mut b4)?;
     let count = u32::from_le_bytes(b4) as usize;
@@ -89,6 +103,36 @@ pub fn load_params(path: impl AsRef<Path>) -> anyhow::Result<Vec<Tensor>> {
         params.push(Tensor::from_vec(rows, cols, data));
     }
     Ok(params)
+}
+
+/// Split `bytes` into (body, trailer-verified) for a CRC-trailed file.
+fn verify_crc_trailer<'a>(bytes: &'a [u8], what: &str) -> anyhow::Result<&'a [u8]> {
+    anyhow::ensure!(
+        bytes.len() >= 4,
+        "{what}: truncated checkpoint (no checksum trailer)"
+    );
+    let (body, trailer) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let actual = crc32(body);
+    anyhow::ensure!(
+        stored == actual,
+        "{what}: checksum mismatch (stored {stored:08x}, computed {actual:08x}) — truncated or corrupt file"
+    );
+    Ok(body)
+}
+
+pub fn load_params(path: impl AsRef<Path>) -> anyhow::Result<Vec<Tensor>> {
+    let bytes = std::fs::read(&path)
+        .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.as_ref().display()))?;
+    anyhow::ensure!(bytes.len() >= 4, "not a DMDP checkpoint");
+    if bytes[..4] == *MAGIC_V2 {
+        let body = verify_crc_trailer(&bytes, "checkpoint")?;
+        read_params_body(&mut &body[4..])
+    } else if bytes[..4] == *LEGACY_MAGIC {
+        read_params_body(&mut &bytes[4..])
+    } else {
+        anyhow::bail!("not a DMDP checkpoint")
+    }
 }
 
 /// Full training state beyond the parameters — see the module docs.
@@ -172,105 +216,101 @@ fn read_rng(f: &mut impl Read) -> anyhow::Result<RngState> {
     })
 }
 
-/// Write a [`TrainState`] resume sidecar (magic `DMDR`, version 1).
-pub fn save_train_state(path: impl AsRef<Path>, st: &TrainState) -> anyhow::Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(RESUME_MAGIC)?;
-    write_u32(&mut f, RESUME_VERSION)?;
-    write_u64(&mut f, st.step)?;
-    write_u64(&mut f, st.epoch)?;
-    write_rng(&mut f, &st.rng)?;
-    write_rng(&mut f, &st.batch_rng)?;
+fn write_resume_body(f: &mut impl Write, st: &TrainState) -> anyhow::Result<()> {
+    write_u64(f, st.step)?;
+    write_u64(f, st.epoch)?;
+    write_rng(f, &st.rng)?;
+    write_rng(f, &st.batch_rng)?;
     // optimizer state
-    write_u32(&mut f, st.opt.kind.len() as u32)?;
+    write_u32(f, st.opt.kind.len() as u32)?;
     f.write_all(st.opt.kind.as_bytes())?;
-    write_u64(&mut f, st.opt.t)?;
-    write_u32(&mut f, st.opt.slots.len() as u32)?;
+    write_u64(f, st.opt.t)?;
+    write_u32(f, st.opt.slots.len() as u32)?;
     for slot in &st.opt.slots {
-        write_u32(&mut f, slot.len() as u32)?;
+        write_u32(f, slot.len() as u32)?;
         for vec in slot {
-            write_u32(&mut f, vec.len() as u32)?;
-            write_f32s(&mut f, vec)?;
+            write_u32(f, vec.len() as u32)?;
+            write_f32s(f, vec)?;
         }
     }
     // batcher order
-    write_u32(&mut f, st.batch_order.len() as u32)?;
+    write_u32(f, st.batch_order.len() as u32)?;
     for &i in &st.batch_order {
-        write_u64(&mut f, i)?;
+        write_u64(f, i)?;
     }
     // snapshot buffers
-    write_u32(&mut f, st.snapshots.len() as u32)?;
+    write_u32(f, st.snapshots.len() as u32)?;
     for layer in &st.snapshots {
-        write_u32(&mut f, layer.len() as u32)?;
+        write_u32(f, layer.len() as u32)?;
         for col in layer {
-            write_u64(&mut f, col.step)?;
-            write_u32(&mut f, col.data.len() as u32)?;
-            write_f32s(&mut f, &col.data)?;
+            write_u64(f, col.step)?;
+            write_u32(f, col.data.len() as u32)?;
+            write_f32s(f, &col.data)?;
         }
     }
-    f.flush()?;
     Ok(())
 }
 
-/// Read a [`TrainState`] resume sidecar.
-pub fn load_train_state(path: impl AsRef<Path>) -> anyhow::Result<TrainState> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(&path).map_err(|e| {
-        anyhow::anyhow!("resume sidecar {}: {e}", path.as_ref().display())
-    })?);
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == RESUME_MAGIC, "not a DMDR resume sidecar");
-    let version = read_u32(&mut f)?;
-    anyhow::ensure!(version == RESUME_VERSION, "unsupported resume version {version}");
-    let step = read_u64(&mut f)?;
-    let epoch = read_u64(&mut f)?;
-    let rng = read_rng(&mut f)?;
-    let batch_rng = read_rng(&mut f)?;
+/// Write a [`TrainState`] resume sidecar (magic `DMDR`, version 2:
+/// CRC-32 trailer; crash-safe via tmp + fsync + rename).
+pub fn save_train_state(path: impl AsRef<Path>, st: &TrainState) -> anyhow::Result<()> {
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(RESUME_MAGIC);
+    write_u32(&mut bytes, RESUME_VERSION)?;
+    write_resume_body(&mut bytes, st)?;
+    let crc = crc32(&bytes);
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    atomic_write(path.as_ref(), FP_SAVE_RESUME, &bytes)
+        .map_err(|e| anyhow::anyhow!("resume sidecar {}: {e}", path.as_ref().display()))
+}
+
+fn read_resume_body(f: &mut impl Read) -> anyhow::Result<TrainState> {
+    let step = read_u64(f)?;
+    let epoch = read_u64(f)?;
+    let rng = read_rng(f)?;
+    let batch_rng = read_rng(f)?;
     // optimizer state
-    let kind_len = read_u32(&mut f)? as usize;
+    let kind_len = read_u32(f)? as usize;
     anyhow::ensure!(kind_len <= 64, "implausible optimizer-name length {kind_len}");
     let mut kind_bytes = vec![0u8; kind_len];
     f.read_exact(&mut kind_bytes)?;
     let kind = String::from_utf8(kind_bytes)
         .map_err(|_| anyhow::anyhow!("optimizer name is not UTF-8"))?;
-    let t = read_u64(&mut f)?;
-    let n_slots = read_u32(&mut f)? as usize;
+    let t = read_u64(f)?;
+    let n_slots = read_u32(f)? as usize;
     anyhow::ensure!(n_slots <= 16, "implausible optimizer slot count {n_slots}");
     let mut slots = Vec::with_capacity(n_slots);
     for _ in 0..n_slots {
-        let n_vecs = read_u32(&mut f)? as usize;
+        let n_vecs = read_u32(f)? as usize;
         anyhow::ensure!(n_vecs <= 10_000, "implausible state-vector count {n_vecs}");
         let mut slot = Vec::with_capacity(n_vecs);
         for _ in 0..n_vecs {
-            let len = read_u32(&mut f)? as usize;
-            slot.push(read_f32s(&mut f, len)?);
+            let len = read_u32(f)? as usize;
+            slot.push(read_f32s(f, len)?);
         }
         slots.push(slot);
     }
     // batcher order
-    let n_order = read_u32(&mut f)? as usize;
+    let n_order = read_u32(f)? as usize;
     anyhow::ensure!(n_order <= MAX_ELEMS, "implausible batch-order length {n_order}");
     let mut batch_order = Vec::with_capacity(n_order);
     for _ in 0..n_order {
-        batch_order.push(read_u64(&mut f)?);
+        batch_order.push(read_u64(f)?);
     }
     // snapshot buffers
-    let n_layers = read_u32(&mut f)? as usize;
+    let n_layers = read_u32(f)? as usize;
     anyhow::ensure!(n_layers <= 10_000, "implausible snapshot layer count {n_layers}");
     let mut snapshots = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
-        let n_cols = read_u32(&mut f)? as usize;
+        let n_cols = read_u32(f)? as usize;
         anyhow::ensure!(n_cols <= 100_000, "implausible snapshot column count {n_cols}");
         let mut layer = Vec::with_capacity(n_cols);
         for _ in 0..n_cols {
-            let col_step = read_u64(&mut f)?;
-            let len = read_u32(&mut f)? as usize;
+            let col_step = read_u64(f)?;
+            let len = read_u32(f)? as usize;
             layer.push(SnapshotCol {
                 step: col_step,
-                data: read_f32s(&mut f, len)?,
+                data: read_f32s(f, len)?,
             });
         }
         snapshots.push(layer);
@@ -284,6 +324,26 @@ pub fn load_train_state(path: impl AsRef<Path>) -> anyhow::Result<TrainState> {
         batch_order,
         snapshots,
     })
+}
+
+/// Read a [`TrainState`] resume sidecar (version 2 with checksum, or
+/// legacy version 1 without).
+pub fn load_train_state(path: impl AsRef<Path>) -> anyhow::Result<TrainState> {
+    let bytes = std::fs::read(&path)
+        .map_err(|e| anyhow::anyhow!("resume sidecar {}: {e}", path.as_ref().display()))?;
+    anyhow::ensure!(
+        bytes.len() >= 8 && bytes[..4] == *RESUME_MAGIC,
+        "not a DMDR resume sidecar"
+    );
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    match version {
+        RESUME_VERSION_LEGACY => read_resume_body(&mut &bytes[8..]),
+        RESUME_VERSION => {
+            let body = verify_crc_trailer(&bytes, "resume sidecar")?;
+            read_resume_body(&mut &body[8..])
+        }
+        _ => anyhow::bail!("unsupported resume version {version}"),
+    }
 }
 
 #[cfg(test)]
@@ -326,6 +386,39 @@ mod tests {
     }
 
     #[test]
+    fn legacy_uncrcd_params_still_load() {
+        let arch = Arch::new(vec![3, 5, 2]).unwrap();
+        let params = arch.init_params(&mut Rng::new(11));
+        // hand-write the legacy DMDP layout: magic + body, no trailer
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(LEGACY_MAGIC);
+        write_params_body(&mut bytes, &params).unwrap();
+        let path = temp_path("legacy");
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(load_params(&path).unwrap(), params);
+    }
+
+    #[test]
+    fn corrupted_byte_fails_checksum() {
+        let arch = Arch::new(vec![4, 6, 3]).unwrap();
+        let params = arch.init_params(&mut Rng::new(4));
+        let path = temp_path("corrupt");
+        save_params(&params, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // flip one bit at several offsets: header, mid-data, near end
+        for off in [5usize, good.len() / 2, good.len() - 6] {
+            let mut bad = good.clone();
+            bad[off] ^= 0x40;
+            std::fs::write(&path, &bad).unwrap();
+            let err = load_params(&path).unwrap_err().to_string();
+            assert!(
+                err.contains("checksum") || err.contains("implausible"),
+                "flip at {off}: unexpected error: {err}"
+            );
+        }
+    }
+
+    #[test]
     fn rejects_garbage() {
         let path = temp_path("garbage");
         std::fs::write(&path, b"JUNKJUNKJUNK").unwrap();
@@ -360,8 +453,8 @@ mod tests {
 
     #[test]
     fn rejects_implausible_dims_before_allocating() {
-        // header claims a 0xFFFFFFFF × 0xFFFFFFFF tensor — must error
-        // out on validation, not attempt a ~16 EiB allocation
+        // legacy header claims a 0xFFFFFFFF × 0xFFFFFFFF tensor — must
+        // error out on validation, not attempt a ~16 EiB allocation
         let mut bytes = Vec::new();
         bytes.extend_from_slice(b"DMDP");
         bytes.extend_from_slice(&1u32.to_le_bytes());
@@ -443,6 +536,34 @@ mod tests {
         save_train_state(&path, &st).unwrap();
         let loaded = load_train_state(&path).unwrap();
         assert_eq!(loaded, st);
+    }
+
+    #[test]
+    fn legacy_v1_resume_still_loads() {
+        let st = sample_train_state();
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(RESUME_MAGIC);
+        write_u32(&mut bytes, RESUME_VERSION_LEGACY).unwrap();
+        write_resume_body(&mut bytes, &st).unwrap(); // no CRC trailer
+        let dir = std::env::temp_dir().join("dmdtrain_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy_v1.resume");
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(load_train_state(&path).unwrap(), st);
+    }
+
+    #[test]
+    fn resume_corruption_fails_checksum() {
+        let dir = std::env::temp_dir().join("dmdtrain_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.resume");
+        save_train_state(&path, &sample_train_state()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, bytes).unwrap();
+        let err = load_train_state(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
     }
 
     #[test]

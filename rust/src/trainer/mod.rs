@@ -20,6 +20,12 @@
 //! optimizer update in Rust, one streamed snapshot per layer per step,
 //! DMD burst when the buffers fill — and `tests/session_equivalence.rs`
 //! pins the bit-identity against a frozen copy of the old loop.
+//!
+//! Fault tolerance: checkpoints are CRC-trailed and written atomically
+//! (tmp + fsync + rename, [`checkpoint`]), and the session carries a
+//! divergence-recovery seam ([`crate::config::RecoveryPolicy`]) that
+//! rolls non-finite losses/gradients back to a rolling last-good state
+//! with bounded retries instead of aborting the run.
 
 pub mod accel;
 mod checkpoint;
@@ -29,7 +35,10 @@ pub mod session;
 pub use accel::{
     AccelReport, Accelerator, DmdAccelerator, JumpCtx, LineFitAccelerator, NoAccel, SnapshotCol,
 };
-pub use checkpoint::{load_params, load_train_state, save_params, save_train_state, TrainState};
+pub use checkpoint::{
+    load_params, load_train_state, save_params, save_train_state, TrainState, FP_SAVE_PARAMS,
+    FP_SAVE_RESUME,
+};
 pub use observe::{
     CheckpointEvery, EarlyStop, EpochEvent, JsonlMetrics, LogObserver, Observer, Signal,
     StepEvent, WeightTrace,

@@ -215,6 +215,7 @@ impl Observer for JsonlMetrics {
             ("rel_test", num_or_null(ev.rel_test)),
             ("solve_secs", Json::Num(ev.solve_secs)),
             ("total_rank", Json::Num(ev.total_rank as f64)),
+            ("failed_layers", Json::Num(ev.failed_layers as f64)),
         ]);
     }
 }
@@ -396,6 +397,7 @@ mod tests {
                 rel_test: f64::NAN,
                 solve_secs: 0.01,
                 total_rank: 4,
+                failed_layers: 0,
             });
         }
         let text = std::fs::read_to_string(&path).unwrap();

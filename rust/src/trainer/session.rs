@@ -54,7 +54,12 @@ use crate::optim::{self, Optimizer};
 use crate::rng::Rng;
 use crate::runtime::{DeviceBatch, Executable, Runtime, TrainWorkspace};
 use crate::tensor::Tensor;
+use crate::util::failpoint;
 use crate::util::timer::Profile;
+use std::collections::VecDeque;
+
+/// Per-step losses kept for the retry-exhaustion diagnostic.
+const RECENT_LOSS_WINDOW: usize = 8;
 
 /// Outcome of a full training run.
 pub struct TrainReport {
@@ -231,6 +236,11 @@ impl<'rt> SessionBuilder<'rt> {
             epoch_batches: 0,
             epoch_jumped: false,
             epoch_open: false,
+            last_good: None,
+            retries_used: 0,
+            last_divergence_step: 0,
+            jump_cooldown: 0,
+            recent_losses: VecDeque::with_capacity(RECENT_LOSS_WINDOW),
         })
     }
 }
@@ -277,6 +287,21 @@ pub struct TrainSession {
     /// True from `begin_epoch` until `finish_epoch` — lets raw `step()`
     /// loops finalize a completed epoch before the next one starts.
     epoch_open: bool,
+    // --- divergence recovery (`cfg.recovery`, the `[recovery]` seam) ---
+    /// Rolling last-known-good state: parameters + full [`TrainState`],
+    /// captured at epoch boundaries every `recovery.snapshot_every`
+    /// epochs. `None` until the first capture or when recovery is off.
+    last_good: Option<(Vec<Tensor>, TrainState)>,
+    /// Retries spent against the current divergence frontier.
+    retries_used: usize,
+    /// Step index of the most recent divergence — retries reset only
+    /// when a later divergence shows the run made it past this point.
+    last_divergence_step: usize,
+    /// Jump opportunities left to skip after a rollback (a bad
+    /// extrapolation replayed verbatim would diverge again).
+    jump_cooldown: usize,
+    /// Last few per-step losses, reported when retries are exhausted.
+    recent_losses: VecDeque<f64>,
 }
 
 impl TrainSession {
@@ -397,15 +422,101 @@ impl TrainSession {
         pinned: Option<&DeviceBatch<'_>>,
     ) -> anyhow::Result<StepOutcome> {
         self.bind(ds)?;
-        if self.qi >= self.queue.len() {
-            if self.epoch_open {
-                // a raw step() loop ran the epoch to completion without
-                // finalizing it: record it before starting the next one
-                self.finish_epoch(ds)?;
+        loop {
+            if self.qi >= self.queue.len() {
+                if self.epoch_open {
+                    // a raw step() loop ran the epoch to completion
+                    // without finalizing it: record it before starting
+                    // the next one
+                    self.finish_epoch(ds)?;
+                }
+                self.maybe_capture_good()?;
+                self.begin_epoch();
             }
-            self.begin_epoch();
+            // `None` means the step hit a non-finite loss/gradient and
+            // recovery rolled the session back to `last_good` — loop
+            // around to reopen the epoch queue and replay from there.
+            if let Some(out) = self.step_attempt(ds, pinned)? {
+                return Ok(out);
+            }
         }
+    }
 
+    /// Refresh the rolling last-known-good state at an epoch boundary.
+    /// Cheap amortized: fires every `recovery.snapshot_every` epochs
+    /// (and whenever no good state exists yet, e.g. right after a
+    /// checkpoint restore landed between multiples).
+    fn maybe_capture_good(&mut self) -> anyhow::Result<()> {
+        let pol = self.cfg.recovery;
+        if !pol.enabled {
+            return Ok(());
+        }
+        if self.last_good.is_none() || self.epoch % pol.snapshot_every.max(1) == 0 {
+            let st = self.export_state()?;
+            self.last_good = Some((self.params.clone(), st));
+        }
+        Ok(())
+    }
+
+    /// Roll the session back to the last good state after a non-finite
+    /// loss or gradient at (not-yet-counted) step `self.step`. Errors
+    /// when recovery is disabled (the legacy divergence abort), when no
+    /// good state exists, or when the retry budget for this divergence
+    /// point is exhausted — the exhaustion error carries the step, the
+    /// epoch and the recent loss history.
+    #[cold]
+    fn recover_from_divergence(&mut self, loss: f64) -> anyhow::Result<()> {
+        let (step, epoch) = (self.step, self.epoch);
+        let pol = self.cfg.recovery;
+        anyhow::ensure!(pol.enabled, "loss diverged at step {step}");
+        let Some((params, st)) = self.last_good.clone() else {
+            anyhow::bail!(
+                "loss diverged at step {step} (epoch {epoch}) with no recovery \
+                 point captured yet"
+            );
+        };
+        if step > self.last_divergence_step {
+            // the run made it past the previous frontier: fresh budget
+            self.retries_used = 0;
+            self.last_divergence_step = step;
+        }
+        if self.retries_used >= pol.max_retries {
+            let recent: Vec<String> = self
+                .recent_losses
+                .iter()
+                .map(|l| format!("{l:.3e}"))
+                .collect();
+            anyhow::bail!(
+                "divergence recovery exhausted: {} rollback(s) did not get past \
+                 step {step} (epoch {epoch}, loss {loss}); recent losses [{}]",
+                pol.max_retries,
+                recent.join(", ")
+            );
+        }
+        self.retries_used += 1;
+        let restored_epoch = st.epoch as usize;
+        self.restore(params, &st)?;
+        // drop the history/event records of the epochs being replayed so
+        // a recovered run reports each epoch exactly once
+        self.history.points.retain(|p| p.epoch < restored_epoch);
+        self.dmd_stats.events.retain(|e| e.epoch < restored_epoch);
+        self.jump_cooldown = pol.jump_cooldown;
+        if pol.lr_shrink < 1.0 {
+            // not part of OptimizerState, so the restore above did not
+            // undo it — smaller steps persist through the replay
+            self.optimizer.scale_lr(pol.lr_shrink);
+        }
+        Ok(())
+    }
+
+    /// One attempt at an optimizer step: `Ok(Some(out))` on success,
+    /// `Ok(None)` when divergence recovery rolled the session back (the
+    /// caller replays), `Err` when the step failed for good.
+    fn step_attempt(
+        &mut self,
+        ds: &Dataset,
+        pinned: Option<&DeviceBatch<'_>>,
+    ) -> anyhow::Result<Option<StepOutcome>> {
         // --- backprop (fused workspace path: gradients land in the
         //     session-owned TrainWorkspace, zero steady-state alloc) ---
         let loss = if let Some(db) = pinned {
@@ -436,7 +547,33 @@ impl TrainSession {
             self.profile
                 .scope("backprop_exec", || exe.train_step_into(ws, params, bx, by))?
         };
-        anyhow::ensure!(loss.is_finite(), "loss diverged at step {}", self.step);
+        // fault injection: `train.loss=nan@N` / `train.grad=nan@N`
+        // poison this step's outputs to exercise divergence recovery
+        let loss = failpoint::nan_or("train.loss", loss);
+        if failpoint::fire("train.grad").is_some() {
+            if let Some(g) = self.workspace.grads_mut().first_mut() {
+                if let Some(v) = g.data_mut().first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        if self.cfg.recovery.enabled {
+            if self.recent_losses.len() == RECENT_LOSS_WINDOW {
+                self.recent_losses.pop_front();
+            }
+            self.recent_losses.push_back(loss);
+        }
+        let diverged = !loss.is_finite()
+            || (self.cfg.recovery.enabled
+                && !self
+                    .workspace
+                    .grads()
+                    .iter()
+                    .all(|g| g.data().iter().all(|v| v.is_finite())));
+        if diverged {
+            self.recover_from_divergence(loss)?;
+            return Ok(None);
+        }
 
         // --- optimizer update (gradients consumed from the workspace
         //     in place — no collected Vec<Tensor> per step) ------------
@@ -475,37 +612,45 @@ impl TrainSession {
             let predict_exe = &self.predict_exe;
             accel.observe(self.step, arch, &params[..], profile);
             if accel.ready() {
-                let mut measure = |p: &[Tensor]| -> anyhow::Result<(f64, f64)> {
-                    let train = predict_exe.mse_all(p, &ds.x_train, &ds.y_train)?;
-                    let test = predict_exe.mse_all(p, &ds.x_test, &ds.y_test)?;
-                    Ok((train, test))
-                };
-                let mut ctx = JumpCtx {
-                    epoch: self.epoch,
-                    measure_enabled: self.cfg.measure_dmd,
-                    rng,
-                    profile,
-                    measure: &mut measure,
-                };
-                if let Some(ev) = accel.maybe_jump(arch, params, &mut ctx)? {
-                    self.dmd_stats.push(ev);
-                    for o in &mut self.observers {
-                        o.on_jump(&ev);
+                if self.jump_cooldown > 0 {
+                    // post-rollback cooldown: discard this jump
+                    // opportunity instead of replaying the (possibly
+                    // divergence-causing) extrapolation verbatim
+                    self.jump_cooldown -= 1;
+                    accel.skip_jump();
+                } else {
+                    let mut measure = |p: &[Tensor]| -> anyhow::Result<(f64, f64)> {
+                        let train = predict_exe.mse_all(p, &ds.x_train, &ds.y_train)?;
+                        let test = predict_exe.mse_all(p, &ds.x_test, &ds.y_test)?;
+                        Ok((train, test))
+                    };
+                    let mut ctx = JumpCtx {
+                        epoch: self.epoch,
+                        measure_enabled: self.cfg.measure_dmd,
+                        rng,
+                        profile,
+                        measure: &mut measure,
+                    };
+                    if let Some(ev) = accel.maybe_jump(arch, params, &mut ctx)? {
+                        self.dmd_stats.push(ev);
+                        for o in &mut self.observers {
+                            o.on_jump(&ev);
+                        }
+                        self.epoch_jumped = true;
+                        jumped = true;
                     }
-                    self.epoch_jumped = true;
-                    jumped = true;
                 }
             }
         }
 
         self.qi += 1;
-        Ok(StepOutcome {
+        Ok(Some(StepOutcome {
             step: self.step,
             epoch: self.epoch,
             loss,
             jumped,
             epoch_end: self.qi >= self.queue.len(),
-        })
+        }))
     }
 
     /// Finish the current epoch: evaluate, record history, notify

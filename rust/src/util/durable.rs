@@ -1,0 +1,156 @@
+//! Crash-safe file replacement: tmp file + fsync(file) + rename +
+//! fsync(parent dir). A reader never observes a half-written file — it
+//! sees either the previous complete file or the new complete one —
+//! and after the fsyncs the new contents survive power loss.
+//!
+//! Every write goes through a named [`failpoint`](crate::util::failpoint)
+//! so tests can inject IO errors and torn writes at any byte offset:
+//! a `Partial(n)` action truncates the payload to `n` bytes *in the
+//! tmp file* and then errors, which is exactly what a crash mid-write
+//! looks like — the rename never happens and the previous file is
+//! untouched.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::failpoint;
+
+/// Atomically replace `path` with `bytes`.
+///
+/// `fp_name` names the failpoint guarding this write (e.g.
+/// `"ckpt.params"`); pass a unique name per artifact kind so tests can
+/// tear one artifact without touching the others.
+pub fn atomic_write(path: &Path, fp_name: &str, bytes: &[u8]) -> std::io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    failpoint::inject_io(fp_name)?;
+
+    // unique-ish tmp name: pid keeps concurrent processes apart; within
+    // a process, checkpoint writers are serialised by the caller.
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| std::io::Error::other(format!("{} has no file name", path.display())))?;
+    let tmp = path.with_file_name(format!(
+        ".{}.tmp.{}",
+        file_name.to_string_lossy(),
+        std::process::id()
+    ));
+
+    let result = write_tmp_and_rename(&tmp, path, fp_name, bytes, dir);
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp); // best-effort cleanup of the torn tmp
+    }
+    result
+}
+
+fn write_tmp_and_rename(
+    tmp: &Path,
+    path: &Path,
+    fp_name: &str,
+    bytes: &[u8],
+    dir: Option<&Path>,
+) -> std::io::Result<()> {
+    let mut f = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(tmp)?;
+    match failpoint::write_cap(fp_name) {
+        Some(cap) => {
+            // simulated crash: part of the payload reaches the tmp file,
+            // then the write "fails" — rename is never attempted
+            let cap = cap.min(bytes.len());
+            f.write_all(&bytes[..cap])?;
+            let _ = f.sync_all();
+            return Err(std::io::Error::other(format!(
+                "failpoint {fp_name:?} injected partial write ({cap} of {} bytes)",
+                bytes.len()
+            )));
+        }
+        None => f.write_all(bytes)?,
+    }
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(tmp, path)?;
+    // fsync the directory so the rename itself is durable; not all
+    // platforms allow opening a directory for sync — best-effort there
+    if let Some(dir) = dir {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::failpoint::{self, FailAction};
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("dmdtrain_durable_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("basic");
+        let p = d.join("file.bin");
+        atomic_write(&p, "t.durable", b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, "t.durable", b"second, longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn injected_error_leaves_previous_file() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("err");
+        let p = d.join("file.bin");
+        atomic_write(&p, "t.durable", b"good").unwrap();
+        {
+            let _fp = failpoint::scoped("t.durable", FailAction::Error);
+            assert!(atomic_write(&p, "t.durable", b"never lands").is_err());
+        }
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn partial_write_at_any_offset_leaves_previous_file() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("partial");
+        let p = d.join("file.bin");
+        let payload = b"replacement payload bytes";
+        atomic_write(&p, "t.durable", b"previous contents").unwrap();
+        for cap in [0usize, 1, payload.len() / 2, payload.len() - 1] {
+            let _fp = failpoint::scoped("t.durable", FailAction::Partial(cap));
+            let err = atomic_write(&p, "t.durable", payload).unwrap_err();
+            assert!(err.to_string().contains("partial write"), "{err}");
+            drop(_fp);
+            assert_eq!(
+                std::fs::read(&p).unwrap(),
+                b"previous contents",
+                "torn write at {cap} bytes must not touch the live file"
+            );
+        }
+        // no tmp litter left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files not cleaned up: {leftovers:?}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,0 +1,353 @@
+//! Zero-dependency fault-injection failpoints.
+//!
+//! A failpoint is a named site in production code where a test (or an
+//! operator, via the `DMDTRAIN_FAILPOINTS` environment variable) can
+//! inject a fault: an IO error, a partial write, a NaN, or a panic.
+//! Sites call [`fire`] (or one of the typed helpers) with their name;
+//! when nothing is armed this costs **one relaxed atomic load** — no
+//! lock, no allocation — so the steady-state training hot path is
+//! unaffected (see `tests/workspace_alloc.rs`).
+//!
+//! Arming:
+//! - programmatic: [`scoped`] / [`scoped_at`] return an RAII guard that
+//!   disarms on drop — the form tests use;
+//! - environment: `DMDTRAIN_FAILPOINTS="train.loss=nan@12;ckpt.params=partial:120"`
+//!   parsed lazily on the first `fire` call (and eagerly by the CLI);
+//! - config/CLI: `arm_spec` accepts the same grammar for `--failpoints`.
+//!
+//! Grammar: `name=action[;name=action…]` where `action` is one of
+//! `error`, `panic`, `nan`, `partial:BYTES`, each optionally suffixed
+//! with `@N` to fire only on the N-th hit (1-based, one-shot: the
+//! failpoint disarms itself after firing so a rolled-back retry of the
+//! same step does not re-trip it).
+//!
+//! Tests that arm failpoints in a shared test binary must hold
+//! [`serial_guard`] for their whole body: the registry is global, and
+//! a concurrently running test would otherwise observe the fault.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Return an injected error from the site.
+    Error,
+    /// Replace the site's value with NaN.
+    Nan,
+    /// Cap a write at this many bytes, then fail (torn write).
+    Partial(usize),
+    /// Panic at the site (dispatcher/thread death).
+    Panic,
+}
+
+struct Armed {
+    action: FailAction,
+    /// `Some(n)`: fire on the n-th hit only (1-based), then disarm.
+    /// `None`: fire on every hit until disarmed.
+    fire_at: Option<u64>,
+    hits: u64,
+}
+
+/// Number of armed entries, or `UNINIT` before the env var has been
+/// parsed. The disarmed fast path is a single relaxed load of this.
+const UNINIT: usize = usize::MAX;
+static ARMED_COUNT: AtomicUsize = AtomicUsize::new(UNINIT);
+
+fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+    static REG: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock() -> MutexGuard<'static, HashMap<String, Armed>> {
+    // a test that panicked while armed must not wedge every later test
+    registry().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Parse `DMDTRAIN_FAILPOINTS` once; later calls are no-ops.
+pub fn init_from_env() {
+    if ARMED_COUNT.load(Ordering::Relaxed) != UNINIT {
+        return;
+    }
+    let mut map = lock();
+    if ARMED_COUNT.load(Ordering::Relaxed) != UNINIT {
+        return; // raced: someone else initialised while we waited
+    }
+    if let Ok(spec) = std::env::var("DMDTRAIN_FAILPOINTS") {
+        if let Err(e) = arm_spec_into(&mut map, &spec) {
+            eprintln!("warning: ignoring invalid DMDTRAIN_FAILPOINTS entry: {e}");
+        }
+    }
+    ARMED_COUNT.store(map.len(), Ordering::Relaxed);
+}
+
+fn parse_action(spec: &str) -> anyhow::Result<(FailAction, Option<u64>)> {
+    let (body, fire_at) = match spec.split_once('@') {
+        Some((b, n)) => (
+            b,
+            Some(n.parse::<u64>().map_err(|_| {
+                anyhow::anyhow!("bad hit count {n:?} in failpoint action {spec:?}")
+            })?),
+        ),
+        None => (spec, None),
+    };
+    let action = match body.split_once(':') {
+        Some(("partial", bytes)) => FailAction::Partial(bytes.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("bad byte count {bytes:?} in failpoint action {spec:?}")
+        })?),
+        None if body == "error" => FailAction::Error,
+        None if body == "nan" => FailAction::Nan,
+        None if body == "panic" => FailAction::Panic,
+        _ => anyhow::bail!("unknown failpoint action {spec:?}"),
+    };
+    Ok((action, fire_at))
+}
+
+fn arm_spec_into(map: &mut HashMap<String, Armed>, spec: &str) -> anyhow::Result<()> {
+    for entry in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, action) = entry
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("failpoint entry {entry:?} is not name=action"))?;
+        let (action, fire_at) = parse_action(action.trim())?;
+        map.insert(
+            name.trim().to_string(),
+            Armed {
+                action,
+                fire_at,
+                hits: 0,
+            },
+        );
+    }
+    Ok(())
+}
+
+/// Arm failpoints from a spec string (the `--failpoints` CLI flag).
+pub fn arm_spec(spec: &str) -> anyhow::Result<()> {
+    init_from_env();
+    let mut map = lock();
+    arm_spec_into(&mut map, spec)?;
+    ARMED_COUNT.store(map.len(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// Arm `name` with `action`; `fire_at = Some(n)` fires on the n-th hit
+/// only (one-shot), `None` fires on every hit.
+pub fn arm(name: &str, action: FailAction, fire_at: Option<u64>) {
+    init_from_env();
+    let mut map = lock();
+    map.insert(
+        name.to_string(),
+        Armed {
+            action,
+            fire_at,
+            hits: 0,
+        },
+    );
+    ARMED_COUNT.store(map.len(), Ordering::Relaxed);
+}
+
+/// Disarm `name` (no-op when not armed).
+pub fn disarm(name: &str) {
+    init_from_env();
+    let mut map = lock();
+    map.remove(name);
+    ARMED_COUNT.store(map.len(), Ordering::Relaxed);
+}
+
+/// Disarm everything (test hygiene).
+pub fn disarm_all() {
+    init_from_env();
+    let mut map = lock();
+    map.clear();
+    ARMED_COUNT.store(0, Ordering::Relaxed);
+}
+
+/// Check the failpoint `name`; returns the action if it fires.
+///
+/// Disarmed cost: one relaxed atomic load (after the first call ever,
+/// which parses the environment).
+#[inline]
+pub fn fire(name: &str) -> Option<FailAction> {
+    let n = ARMED_COUNT.load(Ordering::Relaxed);
+    if n == 0 {
+        return None;
+    }
+    fire_slow(name, n == UNINIT)
+}
+
+#[cold]
+fn fire_slow(name: &str, needs_init: bool) -> Option<FailAction> {
+    if needs_init {
+        init_from_env();
+        if ARMED_COUNT.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+    }
+    let mut map = lock();
+    let armed = map.get_mut(name)?;
+    armed.hits += 1;
+    match armed.fire_at {
+        None => Some(armed.action),
+        Some(n) if armed.hits == n => {
+            let action = armed.action;
+            map.remove(name); // one-shot: replay must not re-trip it
+            ARMED_COUNT.store(map.len(), Ordering::Relaxed);
+            Some(action)
+        }
+        Some(_) => None,
+    }
+}
+
+// ---------------------------------------------------------------- typed helpers
+
+/// `Error`/`Panic` site: returns an injected IO error, or panics.
+/// `Nan`/`Partial` actions are ignored here (wrong site kind).
+pub fn inject_io(name: &str) -> std::io::Result<()> {
+    match fire(name) {
+        Some(FailAction::Error) => Err(std::io::Error::other(format!(
+            "failpoint {name:?} injected IO error"
+        ))),
+        Some(FailAction::Panic) => panic!("failpoint {name:?} injected panic"),
+        _ => Ok(()),
+    }
+}
+
+/// `Nan` site: returns NaN when fired, `value` otherwise.
+#[inline]
+pub fn nan_or(name: &str, value: f64) -> f64 {
+    match fire(name) {
+        Some(FailAction::Nan) => f64::NAN,
+        _ => value,
+    }
+}
+
+/// `Partial` site: byte cap for a torn write, if armed.
+pub fn write_cap(name: &str) -> Option<usize> {
+    match fire(name) {
+        Some(FailAction::Partial(n)) => Some(n),
+        _ => None,
+    }
+}
+
+/// `Panic` site: panics when fired (dispatcher-death injection).
+pub fn panic_point(name: &str) {
+    if let Some(FailAction::Panic) = fire(name) {
+        panic!("failpoint {name:?} injected panic");
+    }
+}
+
+// ---------------------------------------------------------------- RAII arming
+
+/// RAII guard: disarms its failpoint on drop.
+pub struct ScopedArm {
+    name: String,
+}
+
+impl Drop for ScopedArm {
+    fn drop(&mut self) {
+        disarm(&self.name);
+    }
+}
+
+/// Arm `name` for the lifetime of the returned guard (fires every hit).
+#[must_use = "the failpoint disarms when the guard drops"]
+pub fn scoped(name: &str, action: FailAction) -> ScopedArm {
+    arm(name, action, None);
+    ScopedArm {
+        name: name.to_string(),
+    }
+}
+
+/// Arm `name` to fire on the `hit`-th check only (1-based, one-shot).
+#[must_use = "the failpoint disarms when the guard drops"]
+pub fn scoped_at(name: &str, action: FailAction, hit: u64) -> ScopedArm {
+    arm(name, action, Some(hit));
+    ScopedArm {
+        name: name.to_string(),
+    }
+}
+
+/// Serialise failpoint-using tests within one test binary: the registry
+/// is process-global, so concurrent tests would see each other's faults.
+/// Poison-tolerant (a failed test must not wedge the rest).
+pub fn serial_guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_fire_is_none() {
+        let _g = serial_guard();
+        disarm_all();
+        assert_eq!(fire("nothing.armed.here"), None);
+    }
+
+    #[test]
+    fn scoped_arm_fires_and_disarms_on_drop() {
+        let _g = serial_guard();
+        disarm_all();
+        {
+            let _fp = scoped("t.err", FailAction::Error);
+            assert_eq!(fire("t.err"), Some(FailAction::Error));
+            assert_eq!(fire("t.err"), Some(FailAction::Error), "persistent until drop");
+            assert_eq!(fire("t.other"), None, "only the armed name fires");
+        }
+        assert_eq!(fire("t.err"), None, "disarmed by guard drop");
+    }
+
+    #[test]
+    fn one_shot_fires_on_nth_hit_only() {
+        let _g = serial_guard();
+        disarm_all();
+        let _fp = scoped_at("t.nan", FailAction::Nan, 3);
+        assert_eq!(fire("t.nan"), None);
+        assert_eq!(fire("t.nan"), None);
+        assert_eq!(fire("t.nan"), Some(FailAction::Nan), "fires on hit 3");
+        assert_eq!(fire("t.nan"), None, "one-shot: disarmed after firing");
+    }
+
+    #[test]
+    fn typed_helpers_map_actions() {
+        let _g = serial_guard();
+        disarm_all();
+        let _a = scoped("t.io", FailAction::Error);
+        assert!(inject_io("t.io").is_err());
+        let _b = scoped("t.loss", FailAction::Nan);
+        assert!(nan_or("t.loss", 1.0).is_nan());
+        assert_eq!(nan_or("t.unarmed", 1.0), 1.0);
+        let _c = scoped("t.cap", FailAction::Partial(17));
+        assert_eq!(write_cap("t.cap"), Some(17));
+        assert_eq!(write_cap("t.unarmed"), None);
+    }
+
+    #[test]
+    fn spec_grammar_parses_all_forms() {
+        let _g = serial_guard();
+        disarm_all();
+        arm_spec("a=error; b=nan@12 ;c=partial:120;d=panic").unwrap();
+        assert_eq!(fire("a"), Some(FailAction::Error));
+        assert_eq!(fire("c"), Some(FailAction::Partial(120)));
+        assert_eq!(fire("d"), Some(FailAction::Panic));
+        for _ in 0..11 {
+            assert_eq!(fire("b"), None);
+        }
+        assert_eq!(fire("b"), Some(FailAction::Nan));
+        disarm_all();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = serial_guard();
+        disarm_all();
+        assert!(arm_spec("no-equals-sign").is_err());
+        assert!(arm_spec("a=frobnicate").is_err());
+        assert!(arm_spec("a=partial:notanumber").is_err());
+        assert!(arm_spec("a=nan@notanumber").is_err());
+        disarm_all();
+    }
+}

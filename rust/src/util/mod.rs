@@ -1,9 +1,13 @@
 //! Infrastructure substrates: timers, run directories, CSV/JSONL writers,
-//! a micro-benchmark harness (criterion is unavailable offline) and a
-//! mini property-testing harness.
+//! a micro-benchmark harness (criterion is unavailable offline), a
+//! mini property-testing harness, and the fault-tolerance substrate
+//! (failpoints, CRC-32, crash-safe file replacement).
 
 pub mod bench;
+pub mod crc32;
 pub mod csv;
+pub mod durable;
+pub mod failpoint;
 pub mod jsonl;
 pub mod pool;
 pub mod prop;

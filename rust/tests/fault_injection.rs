@@ -1,0 +1,352 @@
+//! Fault-injection integration tests: crash-safe checkpoints and
+//! divergence recovery driven end-to-end through the failpoint
+//! registry (`util::failpoint`).
+//!
+//! Every test here holds `failpoint::serial_guard()` — failpoints are
+//! process-global, so tests that arm them must not interleave. The
+//! tier-1 suite runs with no failpoint armed (the registry's fast path
+//! is a single relaxed atomic load), so these tests are additive: they
+//! cannot perturb any other test binary.
+
+use dmdtrain::config::{Config, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::model::Arch;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::{
+    load_params, load_train_state, save_params, save_train_state, TrainSession, FP_SAVE_PARAMS,
+    FP_SAVE_RESUME,
+};
+use dmdtrain::util;
+use dmdtrain::util::failpoint::{self, FailAction};
+use std::path::PathBuf;
+
+fn runtime() -> Runtime {
+    Runtime::cpu(util::repo_root().join("artifacts")).expect("runtime")
+}
+
+/// Synthetic smooth regression task matching the `test` artifact
+/// (6 inputs → 6 outputs, static batch 16).
+fn synthetic_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, 6, |r, c| {
+            let v: f64 = (0..6)
+                .map(|k| ((k + c + 1) as f64 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.3 * v) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+/// Config with the accelerator kind and the `[recovery]` body as knobs.
+fn fault_config(epochs: usize, accel: &str, recovery: &str) -> TrainConfig {
+    let text = format!(
+        r#"
+[model]
+artifact = "test"
+[data]
+path = "unused"
+[train]
+epochs = {epochs}
+seed = 5
+eval_every = 5
+log_every = 0
+[adam]
+lr = 0.003
+[dmd]
+enabled = true
+m = 5
+s = 8
+[accel]
+kind = "{accel}"
+[recovery]
+{recovery}
+"#
+    );
+    TrainConfig::from_config(&Config::parse(&text).unwrap()).unwrap()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dmdtrain_fault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_params_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.data(), pb.data(), "{what}: tensor {i} differs");
+    }
+}
+
+/// A simulated crash at *any* byte offset of a checkpoint write leaves
+/// the previous checkpoint fully loadable (ISSUE acceptance criterion).
+#[test]
+fn torn_params_save_leaves_previous_checkpoint_loadable_at_any_offset() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let dir = tmp_dir("torn_params");
+    let path = dir.join("ckpt.dmdp");
+
+    let arch = Arch::new(vec![6, 8, 6]).unwrap();
+    let v1 = arch.init_params(&mut Rng::new(1));
+    let v2 = arch.init_params(&mut Rng::new(2));
+    save_params(&v1, &path).unwrap();
+    let file_len = std::fs::read(&path).unwrap().len();
+
+    for off in [0, 1, file_len / 3, file_len / 2, file_len - 1] {
+        let _fp = failpoint::scoped(FP_SAVE_PARAMS, FailAction::Partial(off));
+        let err = save_params(&v2, &path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("partial write"),
+            "unexpected error at offset {off}: {err:#}"
+        );
+        drop(_fp);
+        let loaded = load_params(&path).unwrap();
+        assert_params_eq(&loaded, &v1, &format!("after torn write at {off} bytes"));
+    }
+
+    // once the fault clears, the replacement lands
+    save_params(&v2, &path).unwrap();
+    assert_params_eq(&load_params(&path).unwrap(), &v2, "post-fault save");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Full pipeline: train, checkpoint, keep training, crash mid-save of
+/// both artifacts, then resume from the surviving checkpoint — the
+/// resumed trajectory is bit-identical to an uninterrupted run.
+#[test]
+fn crash_mid_save_then_resume_is_bit_identical() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    // 32 rows at static batch 16 → 2 mini-batches per epoch; m = 3
+    // leaves the snapshot buffers mid-fill at the save point.
+    let ds = synthetic_dataset(32, 8, 12);
+    let mut cfg = fault_config(20, "dmd", "enabled = true");
+    cfg.dmd.as_mut().unwrap().m = 3;
+
+    // A: uninterrupted
+    let full = TrainSession::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+
+    // B: 10 epochs, good save, 5 more epochs, then a crash during the
+    // epoch-15 save of *both* artifacts
+    let dir = tmp_dir("crash_resume");
+    let ckpt = dir.join("ckpt.dmdp");
+    let sidecar = dir.join("ckpt.dmdp.resume");
+    let mut live = TrainSession::new(&rt, cfg.clone()).unwrap();
+    for _ in 0..10 {
+        live.run_epoch(&ds).unwrap();
+    }
+    let saved_params = live.params().to_vec();
+    save_params(live.params(), &ckpt).unwrap();
+    save_train_state(&sidecar, &live.export_state().unwrap()).unwrap();
+    for _ in 0..5 {
+        live.run_epoch(&ds).unwrap();
+    }
+    {
+        let _fp = failpoint::scoped(FP_SAVE_PARAMS, FailAction::Partial(17));
+        assert!(save_params(live.params(), &ckpt).is_err());
+    }
+    {
+        let _fp = failpoint::scoped(FP_SAVE_RESUME, FailAction::Partial(9));
+        assert!(save_train_state(&sidecar, &live.export_state().unwrap()).is_err());
+    }
+    drop(live); // the "crash"
+
+    // the torn writes left the epoch-10 artifacts untouched
+    let params = load_params(&ckpt).unwrap();
+    assert_params_eq(&params, &saved_params, "surviving checkpoint");
+    let st = load_train_state(&sidecar).unwrap();
+    assert_eq!(st.epoch, 10, "surviving sidecar is the epoch-10 state");
+
+    let mut resumed = TrainSession::new(&rt, cfg).unwrap();
+    resumed.restore(params, &st).unwrap();
+    let second_half = resumed.run(&ds).unwrap();
+    assert_eq!(second_half.epochs_run, 10);
+    assert_params_eq(&full.final_params, &second_half.final_params, "resumed run");
+    let tail = &full.history.points[10..];
+    assert_eq!(tail.len(), second_half.history.points.len());
+    for (a, b) in tail.iter().zip(&second_half.history.points) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits(), "epoch {}", a.epoch);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// An injected non-finite loss rolls back to the last good state and
+/// the replay (one-shot failpoint, no jump cooldown) reproduces the
+/// uninjected run bit-for-bit.
+#[test]
+fn injected_nan_loss_recovers_bit_identically() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 21);
+    let cfg = fault_config(12, "dmd", "snapshot_every = 4\njump_cooldown = 0");
+
+    let baseline = TrainSession::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+
+    let _fp = failpoint::scoped_at("train.loss", FailAction::Nan, 7);
+    let faulty = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    drop(_fp);
+
+    assert_eq!(faulty.epochs_run, 12, "recovered run completes all epochs");
+    assert_params_eq(&baseline.final_params, &faulty.final_params, "NaN recovery");
+    // each epoch is recorded exactly once despite the replay
+    assert_eq!(baseline.history.points.len(), faulty.history.points.len());
+    for (a, b) in baseline.history.points.iter().zip(&faulty.history.points) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits(), "epoch {}", a.epoch);
+    }
+    assert_eq!(
+        baseline.dmd_stats.events.len(),
+        faulty.dmd_stats.events.len(),
+        "replayed jumps recorded once"
+    );
+}
+
+/// Recovery works across accelerator kinds and both batching regimes
+/// (full-batch 1 step/epoch; mini-batch 2 steps/epoch).
+#[test]
+fn nan_recovery_across_accelerators_and_batching() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    for accel in ["dmd", "linefit", "none"] {
+        for (rows, hit) in [(16usize, 6u64), (32, 9)] {
+            let ds = synthetic_dataset(rows, 8, 31);
+            let cfg = fault_config(10, accel, "snapshot_every = 3\njump_cooldown = 0");
+            let baseline = TrainSession::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+
+            let _fp = failpoint::scoped_at("train.loss", FailAction::Nan, hit);
+            let faulty = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+            drop(_fp);
+
+            assert_params_eq(
+                &baseline.final_params,
+                &faulty.final_params,
+                &format!("accel={accel} rows={rows}"),
+            );
+        }
+    }
+}
+
+/// A non-finite *gradient* (finite loss) is caught by the grad scan and
+/// recovered the same way.
+#[test]
+fn injected_nan_gradient_recovers_bit_identically() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 41);
+    let cfg = fault_config(8, "dmd", "snapshot_every = 2\njump_cooldown = 0");
+
+    let baseline = TrainSession::new(&rt, cfg.clone()).unwrap().run(&ds).unwrap();
+
+    let _fp = failpoint::scoped_at("train.grad", FailAction::Nan, 5);
+    let faulty = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    drop(_fp);
+
+    assert_eq!(faulty.epochs_run, 8);
+    assert_params_eq(&baseline.final_params, &faulty.final_params, "grad recovery");
+}
+
+/// A failing DMD solve degrades to "no jump for that layer" with the
+/// failure counted in the event — training continues and stays finite.
+#[test]
+fn dmd_solve_failure_degrades_to_no_jump() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 51);
+    let cfg = fault_config(23, "dmd", "enabled = true");
+
+    let _fp = failpoint::scoped("dmd.solve", FailAction::Error);
+    let report = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap();
+    drop(_fp);
+
+    // m = 5, 1 step/epoch → events at steps 5, 10, 15, 20 — the solve
+    // failures must not cancel the schedule, only empty the jumps
+    assert_eq!(report.dmd_stats.events.len(), 4);
+    for e in &report.dmd_stats.events {
+        assert_eq!(e.failed_layers, 2, "both layers degraded");
+        assert_eq!(e.total_rank, 0, "no accepted extrapolation");
+        assert!(
+            (e.rel_train - 1.0).abs() < 1e-9,
+            "a fully-degraded jump must be a no-op: rel {}",
+            e.rel_train
+        );
+    }
+    assert_eq!(report.accel.degraded_layers, 8);
+    assert_eq!(report.accel.accepted_layers, 0);
+    assert!(report.history.final_train().unwrap().is_finite());
+    assert!(report.final_params.iter().all(|p| p.is_finite()));
+}
+
+/// Deterministic divergence (the failpoint re-fires on every replay)
+/// exhausts the bounded retry budget into a diagnostic error carrying
+/// the step, the epoch and the recent loss history.
+#[test]
+fn retry_exhaustion_reports_step_epoch_and_recent_losses() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 61);
+    let cfg = fault_config(5, "none", "max_retries = 2");
+
+    let _fp = failpoint::scoped("train.loss", FailAction::Nan); // persistent
+    let err = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap_err();
+    drop(_fp);
+
+    let msg = format!("{err:#}");
+    assert!(msg.contains("divergence recovery exhausted"), "{msg}");
+    assert!(msg.contains("step 0"), "{msg}");
+    assert!(msg.contains("epoch 0"), "{msg}");
+    assert!(msg.contains("recent losses"), "{msg}");
+}
+
+/// `recovery.enabled = false` restores the legacy fail-fast behavior.
+#[test]
+fn disabled_recovery_keeps_legacy_divergence_error() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let rt = runtime();
+    let ds = synthetic_dataset(16, 8, 71);
+    let cfg = fault_config(5, "none", "enabled = false");
+
+    let _fp = failpoint::scoped("train.loss", FailAction::Nan);
+    let err = TrainSession::new(&rt, cfg).unwrap().run(&ds).unwrap_err();
+    drop(_fp);
+
+    assert!(
+        format!("{err:#}").contains("loss diverged at step"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// The `DMDTRAIN_FAILPOINTS` spec grammar drives the same machinery as
+/// the scoped helpers (`--failpoints` takes the identical spec).
+#[test]
+fn arm_spec_grammar_roundtrip() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    failpoint::arm_spec("a.b=error; c.d=partial:17@2 ; e.f=nan").unwrap();
+    assert!(matches!(failpoint::fire("a.b"), Some(FailAction::Error)));
+    assert!(failpoint::fire("c.d").is_none(), "one-shot waits for hit 2");
+    assert!(matches!(failpoint::fire("c.d"), Some(FailAction::Partial(17))));
+    assert!(failpoint::fire("c.d").is_none(), "one-shot disarms after firing");
+    assert!(failpoint::nan_or("e.f", 1.0).is_nan());
+    assert!(failpoint::arm_spec("nonsense").is_err());
+    assert!(failpoint::arm_spec("x=eat_flaming_death").is_err());
+    failpoint::disarm_all();
+    assert!(failpoint::fire("a.b").is_none());
+}
