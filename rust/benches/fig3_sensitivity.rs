@@ -10,7 +10,7 @@
 
 mod common;
 
-use dmdtrain::config::SweepConfig;
+use dmdtrain::config::{Isolation, SweepConfig};
 use dmdtrain::coordinator::run_sweep;
 use dmdtrain::util;
 
@@ -38,11 +38,17 @@ fn main() -> anyhow::Result<()> {
     } else {
         (vec![2, 6, 10, 14, 20], vec![5, 15, 35, 55, 100], 200, 5)
     };
+    // thread isolation: the bench wants the zero-spawn deterministic
+    // in-process path, not the fault-tolerant supervisor
     let sweep = SweepConfig {
         m_values: m_values.clone(),
         s_values: s_values.clone(),
         epochs,
         workers,
+        timeout_secs: 0,
+        max_retries: 2,
+        backoff_ms: 500,
+        isolation: Isolation::Thread,
         base,
     };
 

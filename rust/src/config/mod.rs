@@ -9,6 +9,6 @@ mod types;
 
 pub use toml::{Config, Value};
 pub use types::{
-    AccelKind, AdamParams, DatagenConfig, DmdParams, Projection, RecoveryPolicy, ServeConfig,
-    SgdParams, SweepConfig, TrainConfig,
+    AccelKind, AdamParams, DatagenConfig, DmdParams, Isolation, Projection, RecoveryPolicy,
+    ServeConfig, SgdParams, SweepConfig, TrainConfig,
 };

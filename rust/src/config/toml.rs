@@ -152,6 +152,60 @@ impl Config {
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.values.keys()
     }
+
+    /// Serialize back to TOML text that [`Config::parse`] reads into an
+    /// equal value map. Keys are grouped by their section prefix (the
+    /// text before the first `.`); bare keys come first. Finite floats
+    /// round-trip exactly (shortest-roundtrip `Display`); non-finite
+    /// floats are not representable in the subset.
+    ///
+    /// This is what lets the sweep coordinator hand its *resolved*
+    /// configuration (file + CLI overrides already applied) to
+    /// `sweep-worker` subprocesses as a plain config file.
+    pub fn to_toml_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut root: Vec<(&str, &Value)> = Vec::new();
+        let mut sections: BTreeMap<&str, Vec<(&str, &Value)>> = BTreeMap::new();
+        for (key, value) in &self.values {
+            match key.split_once('.') {
+                Some((section, rest)) => sections.entry(section).or_default().push((rest, value)),
+                None => root.push((key.as_str(), value)),
+            }
+        }
+        let mut out = String::new();
+        for (key, value) in root {
+            let _ = writeln!(out, "{key} = {}", fmt_value(value));
+        }
+        for (section, entries) in sections {
+            let _ = writeln!(out, "[{section}]");
+            for (key, value) in entries {
+                let _ = writeln!(out, "{key} = {}", fmt_value(value));
+            }
+        }
+        out
+    }
+}
+
+fn fmt_value(v: &Value) -> String {
+    match v {
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            let s = format!("{f}");
+            // integral floats display without a '.', which would reparse
+            // as Int; as_f64 promotes either way but keep the type stable
+            if s.contains(['.', 'e', 'E', 'n', 'i']) {
+                s
+            } else {
+                format!("{s}.0")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        Value::Str(s) => format!("\"{s}\""),
+        Value::List(items) => {
+            let parts: Vec<String> = items.iter().map(fmt_value).collect();
+            format!("[{}]", parts.join(", "))
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -278,6 +332,45 @@ lr = 0.001
     fn hash_inside_string_kept() {
         let c = Config::parse(r##"path = "runs/#1""##).unwrap();
         assert_eq!(c.str_or("path", ""), "runs/#1");
+    }
+
+    #[test]
+    fn to_toml_string_roundtrips() {
+        let text = r#"
+name = "paper-run"
+[model]
+arch = [6, 40, 200, 1000, 2670]
+batch = 800
+[dmd]
+enabled = true
+m = 14
+filter_tol = 1e-10
+relaxation = 1.0
+[adam]
+lr = 0.001
+[data]
+path = "runs/#1/data.dmdt"
+"#;
+        let c = Config::parse(text).unwrap();
+        let round = Config::parse(&c.to_toml_string()).unwrap();
+        assert_eq!(c.values, round.values);
+        // exact float round-trip, including awkward magnitudes
+        let mut c2 = Config::parse("").unwrap();
+        for (i, v) in [1e-10, 0.1 + 0.2, 1.0, -3.25e17, f64::MIN_POSITIVE]
+            .into_iter()
+            .enumerate()
+        {
+            c2.set(&format!("f.v{i}"), Value::Float(v));
+        }
+        let round2 = Config::parse(&c2.to_toml_string()).unwrap();
+        for i in 0..5 {
+            let key = format!("f.v{i}");
+            assert_eq!(
+                round2.f64_or(&key, f64::NAN).to_bits(),
+                c2.f64_or(&key, f64::NAN).to_bits(),
+                "float {key} must round-trip bit-exactly"
+            );
+        }
     }
 
     #[test]

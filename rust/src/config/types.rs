@@ -436,13 +436,58 @@ impl ServeConfig {
     }
 }
 
-/// Sensitivity-sweep configuration (Fig 3): grids over m and s.
+/// Where sweep cells execute (`sweep.isolation`).
+///
+/// `Thread` is the legacy in-process mode: deterministic, zero spawn
+/// overhead, but a panicking or OOM-killed cell takes the whole sweep
+/// down with it. `Process` runs every cell in a supervised
+/// `dmdtrain sweep-worker` subprocess with per-cell timeout, bounded
+/// retries and a durable resume ledger (see `coordinator::supervise`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isolation {
+    Thread,
+    Process,
+}
+
+impl Isolation {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "thread" => Ok(Isolation::Thread),
+            "process" => Ok(Isolation::Process),
+            _ => anyhow::bail!("sweep.isolation must be 'thread' or 'process', got '{s}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Isolation::Thread => "thread",
+            Isolation::Process => "process",
+        }
+    }
+}
+
+/// Sensitivity-sweep configuration (Fig 3): grids over m and s, plus the
+/// fault-tolerance policy for process-isolated cells.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
     pub m_values: Vec<usize>,
     pub s_values: Vec<usize>,
     pub epochs: usize,
     pub workers: usize,
+    /// Per-cell wall-clock timeout in seconds (0 = no timeout). A cell
+    /// past its deadline is killed, reaped and retried. Process
+    /// isolation only.
+    pub timeout_secs: u64,
+    /// Retries per cell after a crashed/timed-out/failed attempt; the
+    /// cell is marked `failed` (never fatal to the sweep) once
+    /// `1 + max_retries` attempts are exhausted. Process isolation only.
+    pub max_retries: usize,
+    /// Backoff before the first retry in milliseconds, doubled per
+    /// further attempt (capped at 60 s).
+    pub backoff_ms: u64,
+    /// Cell execution mode. Defaults to `thread` (the legacy in-process
+    /// behavior); `process` enables supervision + the resume ledger.
+    pub isolation: Isolation,
     pub base: TrainConfig,
 }
 
@@ -461,8 +506,96 @@ impl SweepConfig {
             s_values,
             epochs: c.usize_or("sweep.epochs", 300),
             workers: c.usize_or("sweep.workers", 4),
+            timeout_secs: c.u64_or("sweep.timeout_secs", 0),
+            max_retries: c.usize_or("sweep.max_retries", 2),
+            backoff_ms: c.u64_or("sweep.backoff_ms", 500),
+            isolation: Isolation::parse(&c.str_or("sweep.isolation", "thread"))?,
             base: TrainConfig::from_config(c)?,
         })
+    }
+
+    /// Serialize the *resolved* sweep configuration (config file + CLI
+    /// overrides already folded in) back into a [`Config`] that
+    /// [`SweepConfig::from_config`] parses to an identical value — the
+    /// contract that makes a `sweep-worker` subprocess cell bit-identical
+    /// to the same cell run in-process. Floats round-trip exactly via
+    /// `Config::to_toml_string`'s shortest-roundtrip formatting.
+    pub fn to_worker_config(&self) -> Config {
+        use super::toml::Value;
+        let mut c = Config::default();
+        let b = &self.base;
+        let int = |v: usize| Value::Int(v as i64);
+        c.set("model.artifact", Value::Str(b.artifact.clone()));
+        c.set("data.path", Value::Str(b.dataset.clone()));
+        c.set("train.epochs", int(b.epochs));
+        c.set("train.seed", Value::Int(b.seed as i64));
+        c.set("train.optimizer", Value::Str(b.optimizer.clone()));
+        c.set("train.eval_every", int(b.eval_every));
+        c.set("train.log_every", int(b.log_every));
+        c.set("train.out_dir", Value::Str(b.out_dir.clone()));
+        c.set("train.early_stop_patience", int(b.early_stop_patience));
+        c.set("train.early_stop_min_delta", Value::Float(b.early_stop_min_delta));
+        c.set("train.checkpoint_every", int(b.checkpoint_every));
+        if let Some(p) = &b.metrics_jsonl {
+            c.set("train.metrics_jsonl", Value::Str(p.clone()));
+        }
+        c.set("train.record_weights", Value::Bool(b.record_weights));
+        c.set("train.measure_dmd", Value::Bool(b.measure_dmd));
+        c.set("train.parallel_dmd", Value::Bool(b.parallel_dmd));
+        c.set("adam.lr", Value::Float(b.adam.lr));
+        c.set("adam.beta1", Value::Float(b.adam.beta1));
+        c.set("adam.beta2", Value::Float(b.adam.beta2));
+        c.set("adam.eps", Value::Float(b.adam.eps));
+        c.set("sgd.lr", Value::Float(b.sgd.lr));
+        c.set("sgd.momentum", Value::Float(b.sgd.momentum));
+        let accel = match b.accel {
+            AccelKind::Dmd => "dmd",
+            AccelKind::LineFit => "linefit",
+            AccelKind::None => "none",
+        };
+        c.set("accel.kind", Value::Str(accel.to_string()));
+        match &b.dmd {
+            Some(d) => {
+                c.set("dmd.enabled", Value::Bool(true));
+                c.set("dmd.m", int(d.m));
+                c.set("dmd.s", int(d.s));
+                c.set("dmd.filter_tol", Value::Float(d.filter_tol));
+                let proj = match d.projection {
+                    Projection::Transpose => "transpose",
+                    Projection::Pinv => "pinv",
+                };
+                c.set("dmd.projection", Value::Str(proj.to_string()));
+                // from_config maps <= 0.0 back to None for both options
+                c.set("dmd.clamp_growth", Value::Float(d.clamp_growth.unwrap_or(0.0)));
+                c.set(
+                    "dmd.accept_worse_factor",
+                    Value::Float(d.accept_worse_factor.unwrap_or(0.0)),
+                );
+                c.set("dmd.relaxation", Value::Float(d.relaxation));
+                c.set("dmd.noise_reinject", Value::Bool(d.noise_reinject));
+            }
+            None => c.set("dmd.enabled", Value::Bool(false)),
+        }
+        c.set("recovery.enabled", Value::Bool(b.recovery.enabled));
+        c.set("recovery.max_retries", int(b.recovery.max_retries));
+        c.set("recovery.snapshot_every", int(b.recovery.snapshot_every));
+        c.set("recovery.jump_cooldown", int(b.recovery.jump_cooldown));
+        c.set("recovery.lr_shrink", Value::Float(b.recovery.lr_shrink));
+        c.set(
+            "sweep.m_values",
+            Value::List(self.m_values.iter().map(|&v| int(v)).collect()),
+        );
+        c.set(
+            "sweep.s_values",
+            Value::List(self.s_values.iter().map(|&v| int(v)).collect()),
+        );
+        c.set("sweep.epochs", int(self.epochs));
+        c.set("sweep.workers", int(self.workers));
+        c.set("sweep.timeout_secs", Value::Int(self.timeout_secs as i64));
+        c.set("sweep.max_retries", int(self.max_retries));
+        c.set("sweep.backoff_ms", Value::Int(self.backoff_ms as i64));
+        c.set("sweep.isolation", Value::Str(self.isolation.as_str().to_string()));
+        c
     }
 }
 
@@ -607,6 +740,56 @@ epochs = 50
         assert_eq!(sc.m_values, vec![2, 6, 10]);
         assert_eq!(sc.s_values, vec![5, 25]);
         assert_eq!(sc.epochs, 50);
+    }
+
+    #[test]
+    fn sweep_fault_knobs_defaults_and_overrides() {
+        let sc = SweepConfig::from_config(&Config::parse("[data]\npath = \"x\"").unwrap()).unwrap();
+        assert_eq!(sc.timeout_secs, 0, "no timeout by default");
+        assert_eq!(sc.max_retries, 2);
+        assert_eq!(sc.backoff_ms, 500);
+        assert_eq!(sc.isolation, Isolation::Thread, "legacy mode by default");
+
+        let c = Config::parse(
+            "[data]\npath = \"x\"\n[sweep]\ntimeout_secs = 120\nmax_retries = 5\n\
+             backoff_ms = 50\nisolation = \"process\"",
+        )
+        .unwrap();
+        let sc = SweepConfig::from_config(&c).unwrap();
+        assert_eq!(sc.timeout_secs, 120);
+        assert_eq!(sc.max_retries, 5);
+        assert_eq!(sc.backoff_ms, 50);
+        assert_eq!(sc.isolation, Isolation::Process);
+
+        let bad = Config::parse("[data]\npath = \"x\"\n[sweep]\nisolation = \"vm\"").unwrap();
+        assert!(SweepConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn worker_config_roundtrips_exactly() {
+        // the resolved config must survive serialize → parse → resolve
+        // unchanged, including CLI overrides and awkward floats: this is
+        // the bit-identity contract between coordinator and sweep-worker
+        let mut c = Config::parse(TEXT).unwrap();
+        c.set("adam.lr", super::super::toml::Value::Float(0.1 + 0.2));
+        c.set(
+            "train.metrics_jsonl",
+            super::super::toml::Value::Str("runs/m.jsonl".into()),
+        );
+        c.set("sweep.isolation", super::super::toml::Value::Str("process".into()));
+        let sc = SweepConfig::from_config(&c).unwrap();
+        let text = sc.to_worker_config().to_toml_string();
+        let back = SweepConfig::from_config(&Config::parse(&text).unwrap()).unwrap();
+        assert_eq!(format!("{sc:?}"), format!("{back:?}"));
+
+        // dmd-disabled and None-optional fields round-trip too
+        let c2 = Config::parse("[data]\npath = \"x\"\n[dmd]\nenabled = false").unwrap();
+        let sc2 = SweepConfig::from_config(&c2).unwrap();
+        let text2 = sc2.to_worker_config().to_toml_string();
+        let back2 = SweepConfig::from_config(&Config::parse(&text2).unwrap()).unwrap();
+        assert_eq!(format!("{sc2:?}"), format!("{back2:?}"));
+        assert!(back2.base.dmd.is_none());
+        assert!(back2.base.metrics_jsonl.is_none());
     }
 
     #[test]

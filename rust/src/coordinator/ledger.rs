@@ -1,0 +1,337 @@
+//! The durable sweep run ledger: one CRC-sealed JSON record per line,
+//! rewritten crash-safely through [`atomic_write`] on every append.
+//!
+//! Line 1 is a `"kind":"sweep"` header identifying the grid (m values,
+//! s values, epochs, seed); every later line is a `"kind":"cell"`
+//! outcome record. Each record carries a `crc` field: the CRC-32 of its
+//! own canonical JSON encoding with the `crc` key removed. Because the
+//! encoder is deterministic (object keys sort via `BTreeMap`), sealing
+//! and verification agree byte-for-byte across processes.
+//!
+//! Recovery rules (`open_resume`):
+//! - a torn or CRC-corrupt line is *skipped with a warning*, never
+//!   fatal — a ledger interrupted mid-write loses at most its tail;
+//! - a missing or mismatched header is fatal: resuming a different grid
+//!   against this ledger would silently mix results;
+//! - cells recorded `ok` are replayed (skipped on resume); cells
+//!   recorded `failed` are re-run — a resume is a fresh chance.
+//!
+//! Appends are best-effort by design: a sweep on a full disk degrades to
+//! losing resumability, not results (cells stay in memory and land in
+//! the final CSV either way).
+
+use crate::config::SweepConfig;
+use crate::util::crc32::crc32;
+use crate::util::durable::atomic_write;
+use crate::util::jsonl::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::sweep::SweepCell;
+use super::worker::{cell_json, decode_cell};
+
+/// Failpoint guarding every ledger write (tears the file mid-append).
+pub const LEDGER_FAILPOINT: &str = "sweep.ledger.partial";
+
+/// The grid-identity header (ledger line 1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LedgerHeader {
+    pub m_values: Vec<usize>,
+    pub s_values: Vec<usize>,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl LedgerHeader {
+    pub fn of(sweep: &SweepConfig) -> Self {
+        LedgerHeader {
+            m_values: sweep.m_values.clone(),
+            s_values: sweep.s_values.clone(),
+            epochs: sweep.epochs,
+            seed: sweep.base.seed,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let ints = |vs: &[usize]| Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect());
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str("sweep".to_string()));
+        m.insert("m_values".to_string(), ints(&self.m_values));
+        m.insert("s_values".to_string(), ints(&self.s_values));
+        m.insert("epochs".to_string(), Json::Num(self.epochs as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            j.get("kind").and_then(Json::as_str) == Some("sweep"),
+            "ledger line 1 is not a sweep header"
+        );
+        let ints = |key: &str| -> anyhow::Result<Vec<usize>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .ok_or_else(|| anyhow::anyhow!("ledger header missing '{key}'"))
+        };
+        Ok(LedgerHeader {
+            m_values: ints("m_values")?,
+            s_values: ints("s_values")?,
+            epochs: j
+                .get("epochs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("ledger header missing 'epochs'"))?,
+            seed: j
+                .get("seed")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow::anyhow!("ledger header missing 'seed'"))?,
+        })
+    }
+}
+
+/// Seal a record: insert `crc` = CRC-32 of the canonical encoding with
+/// any existing `crc` removed, and return the sealed line.
+fn seal(record: Json) -> String {
+    let mut map = match record {
+        Json::Obj(m) => m,
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("value".to_string(), other);
+            m
+        }
+    };
+    map.remove("crc");
+    let payload = Json::Obj(map.clone()).encode();
+    map.insert(
+        "crc".to_string(),
+        Json::Str(format!("{:08x}", crc32(payload.as_bytes()))),
+    );
+    Json::Obj(map).encode()
+}
+
+/// Parse + verify one sealed line. `Err` means torn/corrupt.
+fn unseal(line: &str) -> anyhow::Result<Json> {
+    let parsed = parse(line)?;
+    let mut map = match parsed {
+        Json::Obj(m) => m,
+        _ => anyhow::bail!("ledger record is not an object"),
+    };
+    let stored = map
+        .remove("crc")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or_else(|| anyhow::anyhow!("ledger record has no crc"))?;
+    let actual = format!("{:08x}", crc32(Json::Obj(map.clone()).encode().as_bytes()));
+    anyhow::ensure!(stored == actual, "ledger record crc mismatch");
+    Ok(Json::Obj(map))
+}
+
+/// The append-side handle held by a running sweep coordinator.
+///
+/// Every append rewrites the whole file through [`atomic_write`], so the
+/// on-disk ledger is always a complete prefix of outcomes — a SIGKILL
+/// between appends loses nothing, and one *during* an append loses only
+/// that append (the rename never lands).
+pub struct Ledger {
+    path: PathBuf,
+    lines: Vec<String>,
+}
+
+impl Ledger {
+    /// Start a fresh ledger for this sweep. Write failures degrade to a
+    /// warning: the sweep still runs, it just cannot be resumed.
+    pub fn create(path: &Path, header: &LedgerHeader) -> Ledger {
+        let mut ledger = Ledger {
+            path: path.to_path_buf(),
+            lines: vec![seal(header.to_json())],
+        };
+        ledger.write_all();
+        ledger
+    }
+
+    /// Reopen an existing ledger for `--resume`: verify the header
+    /// matches this sweep, keep every intact record, and return the
+    /// cells already decided. Torn/corrupt lines are dropped (warned).
+    pub fn open_resume(path: &Path, header: &LedgerHeader) -> anyhow::Result<(Ledger, Vec<SweepCell>)> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read sweep ledger {}: {e}", path.display()))?;
+        let mut raw_lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = raw_lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("sweep ledger {} is empty", path.display()))?;
+        let on_disk = LedgerHeader::from_json(&unseal(header_line)?)
+            .map_err(|e| anyhow::anyhow!("sweep ledger {}: {e}", path.display()))?;
+        anyhow::ensure!(
+            on_disk == *header,
+            "sweep ledger {} was written by a different sweep (grid/epochs/seed mismatch); \
+             delete it or drop --resume",
+            path.display()
+        );
+        let mut lines = vec![header_line.to_string()];
+        let mut cells = Vec::new();
+        let mut dropped = 0usize;
+        for line in raw_lines {
+            match unseal(line).and_then(|j| decode_cell(&j)) {
+                Ok(cell) => {
+                    lines.push(line.to_string());
+                    cells.push(cell);
+                }
+                Err(_) => dropped += 1,
+            }
+        }
+        if dropped > 0 {
+            eprintln!(
+                "sweep: ignoring {dropped} torn/corrupt ledger record(s) in {} \
+                 (interrupted write; the affected cells will be re-run)",
+                path.display()
+            );
+        }
+        Ok((
+            Ledger {
+                path: path.to_path_buf(),
+                lines,
+            },
+            cells,
+        ))
+    }
+
+    /// Record one cell outcome. Best-effort: failure to persist keeps
+    /// the result in memory (it still reaches the CSV) and is retried
+    /// implicitly on the next append, since every append rewrites the
+    /// whole file.
+    pub fn append_cell(&mut self, cell: &SweepCell) {
+        self.lines.push(seal(cell_json(cell)));
+        self.write_all();
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn write_all(&self) {
+        let mut body = self.lines.join("\n");
+        body.push('\n');
+        if let Err(e) = atomic_write(&self.path, LEDGER_FAILPOINT, body.as_bytes()) {
+            eprintln!(
+                "sweep: warning: could not persist ledger {}: {e} \
+                 (cell results stay in memory and will be recomputed on --resume)",
+                self.path.display()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sweep::CellStatus;
+    use super::*;
+    use crate::util::failpoint::{self, FailAction};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dmdtrain_ledger_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn header() -> LedgerHeader {
+        LedgerHeader {
+            m_values: vec![2, 4],
+            s_values: vec![5],
+            epochs: 10,
+            seed: 42,
+        }
+    }
+
+    fn cell(m: usize, s: usize) -> SweepCell {
+        SweepCell {
+            m,
+            s,
+            mean_rel_train: 0.5,
+            mean_rel_test: f64::NAN, // non-finite must survive the ledger
+            final_train: 1e-3,
+            final_test: 2e-3,
+            events: 3,
+            wall_secs: 0.25,
+            status: CellStatus::Ok,
+            attempts: 1,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn seal_unseal_roundtrip_rejects_corruption() {
+        let line = seal(cell_json(&cell(2, 5)));
+        let back = decode_cell(&unseal(&line).unwrap()).unwrap();
+        assert_eq!((back.m, back.s), (2, 5));
+        assert!(back.mean_rel_test.is_nan(), "null must decode to NaN");
+        // flip one byte inside the payload → CRC must catch it
+        let corrupted = line.replace("\"events\":3", "\"events\":4");
+        assert_ne!(corrupted, line);
+        assert!(unseal(&corrupted).is_err());
+        // a torn tail (half a line) must be rejected, not mis-parsed
+        assert!(unseal(&line[..line.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn create_append_resume() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("resume");
+        let path = d.join("sweep.ledger");
+        let mut ledger = Ledger::create(&path, &header());
+        ledger.append_cell(&cell(2, 5));
+        ledger.append_cell(&cell(4, 5));
+        drop(ledger);
+
+        let (reopened, cells) = Ledger::open_resume(&path, &header()).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!((cells[0].m, cells[1].m), (2, 4));
+        assert_eq!(reopened.lines.len(), 3, "header + 2 records kept");
+
+        // mismatched grid → hard error, not silent mixing
+        let mut other = header();
+        other.epochs = 99;
+        assert!(Ledger::open_resume(&path, &other).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_prior_records_intact() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("torn");
+        let path = d.join("sweep.ledger");
+        let mut ledger = Ledger::create(&path, &header());
+        ledger.append_cell(&cell(2, 5));
+        drop(ledger);
+        // simulate a crash mid-append: half a record at the tail
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        let torn = seal(cell_json(&cell(4, 5)));
+        text.push_str(&torn[..torn.len() / 2]);
+        std::fs::write(&path, &text).unwrap();
+
+        let (_, cells) = Ledger::open_resume(&path, &header()).unwrap();
+        assert_eq!(cells.len(), 1, "torn tail dropped");
+        assert_eq!(cells[0].m, 2, "prior record intact");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn failed_append_degrades_to_warning() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("degrade");
+        let path = d.join("sweep.ledger");
+        let mut ledger = Ledger::create(&path, &header());
+        {
+            let _fp = failpoint::scoped(LEDGER_FAILPOINT, FailAction::Error);
+            ledger.append_cell(&cell(2, 5)); // must not panic or error
+        }
+        // next successful append self-heals: the full history lands
+        ledger.append_cell(&cell(4, 5));
+        let (_, cells) = Ledger::open_resume(&path, &header()).unwrap();
+        assert_eq!(cells.len(), 2, "failed append recovered on next write");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -5,7 +5,21 @@
 //! are distributed over OS worker threads; PJRT client handles are
 //! thread-affine, so each worker builds its own [`Runtime`] and compiles
 //! its own executables (one-time cost per worker, amortized over cells).
+//!
+//! With `sweep.isolation = "process"` the coordinator becomes a
+//! supervisor: each cell runs in a `dmdtrain sweep-worker` subprocess
+//! ([`worker`]) under timeout/retry supervision ([`supervise`]), with
+//! every outcome appended to a crash-safe CRC-sealed ledger ([`ledger`])
+//! that `--resume` replays to skip completed cells bit-identically.
 
+mod ledger;
+mod supervise;
 mod sweep;
+mod worker;
 
-pub use sweep::{run_sweep, SweepCell, SweepResult};
+pub use ledger::{Ledger, LedgerHeader, LEDGER_FAILPOINT};
+pub use supervise::{run_supervised_cell, WorkerSpec};
+pub use sweep::{
+    run_sweep, run_sweep_with, CellStatus, SweepCell, SweepOptions, SweepResult,
+};
+pub use worker::{cell_json, decode_cell, run_worker};

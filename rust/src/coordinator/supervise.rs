@@ -1,0 +1,189 @@
+//! Subprocess supervision for process-isolated sweep cells: spawn a
+//! `dmdtrain sweep-worker`, enforce a wall-clock deadline (kill + reap),
+//! and retry crashed/hung/failed attempts with exponential backoff.
+//!
+//! Failure taxonomy per attempt:
+//! - **Crashed** — nonzero/signal exit (panic is exit code 101, OOM kill
+//!   is a signal); carries the stderr tail for the log;
+//! - **TimedOut** — still running at the deadline; killed and reaped so
+//!   no zombie outlives the sweep;
+//! - **Protocol** — exited 0 but the final stdout line was not a valid
+//!   cell record (treated like a crash: retry).
+//!
+//! After `1 + max_retries` attempts the cell is returned as an explicit
+//! [`SweepCell::failed`] row — the sweep itself never dies on a cell.
+
+use crate::util::failpoint;
+use crate::util::jsonl::parse;
+use std::io::Read;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::sweep::SweepCell;
+use super::worker::decode_cell;
+
+/// Everything needed to spawn one cell attempt.
+pub struct WorkerSpec {
+    /// The dmdtrain binary itself (`current_exe` in production; the
+    /// `CARGO_BIN_EXE_dmdtrain` path in tests).
+    pub exe: PathBuf,
+    /// Resolved sweep config file written by the coordinator.
+    pub config: PathBuf,
+    pub artifact_dir: PathBuf,
+    pub m: usize,
+    pub s: usize,
+    /// Wall-clock deadline per attempt (`None` = unbounded).
+    pub timeout: Option<Duration>,
+}
+
+enum AttemptError {
+    Crashed(String),
+    TimedOut(Duration),
+    Protocol(String),
+}
+
+impl std::fmt::Display for AttemptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AttemptError::Crashed(detail) => write!(f, "worker crashed: {detail}"),
+            AttemptError::TimedOut(d) => write!(f, "worker exceeded {:.1}s timeout", d.as_secs_f64()),
+            AttemptError::Protocol(detail) => write!(f, "worker protocol error: {detail}"),
+        }
+    }
+}
+
+/// Forward coordinator-side fault-injection arming to a child as
+/// `--failpoints` specs. The child does *not* inherit
+/// `DMDTRAIN_FAILPOINTS` (we strip it at spawn — an env-armed
+/// coordinator fault must not replicate into every worker); instead
+/// each armed `sweep.worker.*` point here consumes one hit per spawn,
+/// so `@N` one-shots target the N-th spawned worker, and the per-cell
+/// form `sweep.worker.crash.m{M}s{S}` targets every attempt of one cell.
+fn injected_failpoints(m: usize, s: usize) -> Vec<String> {
+    let mut specs = Vec::new();
+    for base in ["sweep.worker.crash", "sweep.worker.hang"] {
+        let per_cell = format!("{base}.m{m}s{s}");
+        if failpoint::fire(base).is_some() || failpoint::fire(&per_cell).is_some() {
+            specs.push(format!("{base}=panic"));
+        }
+    }
+    specs
+}
+
+/// Drain a child stream on its own thread: letting a pipe fill to the
+/// kernel buffer cap deadlocks a chatty child against our `try_wait`.
+fn drainer<R: Read + Send + 'static>(stream: Option<R>) -> std::thread::JoinHandle<String> {
+    std::thread::spawn(move || {
+        let mut out = String::new();
+        if let Some(mut stream) = stream {
+            let _ = stream.read_to_string(&mut out);
+        }
+        out
+    })
+}
+
+fn wait_with_deadline(child: &mut Child, timeout: Option<Duration>) -> Result<bool, std::io::Error> {
+    let start = Instant::now();
+    loop {
+        if child.try_wait()?.is_some() {
+            return Ok(true);
+        }
+        if let Some(limit) = timeout {
+            if start.elapsed() >= limit {
+                return Ok(false);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+}
+
+fn run_attempt(spec: &WorkerSpec) -> Result<SweepCell, AttemptError> {
+    let mut cmd = Command::new(&spec.exe);
+    cmd.arg("sweep-worker")
+        .arg("--config")
+        .arg(&spec.config)
+        .arg("--artifacts")
+        .arg(&spec.artifact_dir)
+        .arg("--m")
+        .arg(spec.m.to_string())
+        .arg("--s")
+        .arg(spec.s.to_string())
+        .env_remove("DMDTRAIN_FAILPOINTS")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    let specs = injected_failpoints(spec.m, spec.s);
+    if !specs.is_empty() {
+        cmd.arg("--failpoints").arg(specs.join(";"));
+    }
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| AttemptError::Crashed(format!("spawn {}: {e}", spec.exe.display())))?;
+    let stdout = drainer(child.stdout.take());
+    let stderr = drainer(child.stderr.take());
+
+    let exited = wait_with_deadline(&mut child, spec.timeout)
+        .map_err(|e| AttemptError::Crashed(format!("wait: {e}")))?;
+    if !exited {
+        let _ = child.kill();
+        let _ = child.wait(); // reap: no zombies outlive the sweep
+        let _ = stdout.join();
+        let _ = stderr.join();
+        return Err(AttemptError::TimedOut(spec.timeout.unwrap_or_default()));
+    }
+    let status = child
+        .wait()
+        .map_err(|e| AttemptError::Crashed(format!("wait: {e}")))?;
+    let out = stdout.join().unwrap_or_default();
+    let err = stderr.join().unwrap_or_default();
+    if !status.success() {
+        let lines: Vec<&str> = err.lines().collect();
+        let tail = lines[lines.len().saturating_sub(4)..].join(" | ");
+        let code = match status.code() {
+            Some(c) => format!("exit code {c}"),
+            None => "killed by signal".to_string(),
+        };
+        return Err(AttemptError::Crashed(format!("{code}; stderr: {tail}")));
+    }
+    let last = out
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .unwrap_or("");
+    parse(last)
+        .ok()
+        .as_ref()
+        .and_then(|j| decode_cell(j).ok())
+        .ok_or_else(|| AttemptError::Protocol(format!("unparseable result line {last:?}")))
+}
+
+/// Run one cell under supervision: up to `1 + max_retries` attempts with
+/// exponential backoff, degrading to an explicit failed row. Never
+/// errors — graceful degradation is the contract.
+pub fn run_supervised_cell(spec: &WorkerSpec, max_retries: usize, backoff_ms: u64) -> SweepCell {
+    let attempts_max = 1 + max_retries;
+    let mut last_err = String::new();
+    for attempt in 1..=attempts_max {
+        if attempt > 1 && backoff_ms > 0 {
+            // backoff_ms, 2×, 4×, … capped at 60 s
+            let shift = (attempt as u32 - 2).min(10);
+            let delay = Duration::from_millis(backoff_ms << shift).min(Duration::from_secs(60));
+            std::thread::sleep(delay);
+        }
+        match run_attempt(spec) {
+            Ok(mut cell) => {
+                cell.attempts = attempt;
+                return cell;
+            }
+            Err(e) => {
+                last_err = e.to_string();
+                eprintln!(
+                    "sweep: cell m={} s={} attempt {attempt}/{attempts_max} failed: {last_err}",
+                    spec.m, spec.s
+                );
+            }
+        }
+    }
+    SweepCell::failed(spec.m, spec.s, attempts_max, last_err)
+}

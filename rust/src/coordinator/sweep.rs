@@ -1,12 +1,58 @@
 //! The Fig-3 sensitivity sweep: mean relative DMD improvement over an
-//! (m, s) grid, train and test.
+//! (m, s) grid, train and test — now fault-tolerant.
+//!
+//! Two isolation modes (`sweep.isolation`):
+//! - **thread** (default): the legacy deterministic in-process path —
+//!   cells on scoped worker threads, first error aborts the sweep;
+//! - **process**: every cell runs in a supervised `sweep-worker`
+//!   subprocess ([`supervise`](super::supervise)) with per-cell timeout,
+//!   bounded retries, a durable resume ledger
+//!   ([`ledger`](super::ledger)), and graceful degradation — exhausted
+//!   cells become explicit `failed` CSV rows instead of sinking the
+//!   sweep.
+//!
+//! CSV determinism: rows are emitted row-major over m × s regardless of
+//! worker count or isolation, and `wall_secs` is deliberately *not* a
+//! CSV column (it is nondeterministic; it lives in the ledger instead) —
+//! this is what makes a `--resume` CSV bit-identical to an
+//! uninterrupted run.
 
-use crate::config::{SweepConfig, TrainConfig};
+use crate::config::{Isolation, SweepConfig};
 use crate::data::Dataset;
-use crate::runtime::Runtime;
-use crate::trainer::TrainSession;
-use crate::util::csv::CsvWriter;
-use std::path::Path;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::ledger::{Ledger, LedgerHeader};
+use super::supervise::{run_supervised_cell, WorkerSpec};
+use super::worker::run_cell;
+
+/// Terminal outcome of one grid cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellStatus {
+    /// Trained to completion (possibly after retries).
+    Ok,
+    /// Every attempt crashed, hung, or errored; numeric columns are NaN.
+    Failed,
+}
+
+impl CellStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CellStatus::Ok => "ok",
+            CellStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "ok" => Ok(CellStatus::Ok),
+            "failed" => Ok(CellStatus::Failed),
+            _ => anyhow::bail!("unknown cell status '{s}'"),
+        }
+    }
+}
 
 /// One grid cell's result.
 #[derive(Clone, Debug)]
@@ -20,6 +66,34 @@ pub struct SweepCell {
     pub final_test: f64,
     pub events: usize,
     pub wall_secs: f64,
+    pub status: CellStatus,
+    /// Worker attempts consumed (1 = clean first run).
+    pub attempts: usize,
+    /// Last attempt's failure, for `Failed` cells.
+    pub error: Option<String>,
+}
+
+impl SweepCell {
+    /// The graceful-degradation row: retries exhausted, NaN numerics.
+    pub fn failed(m: usize, s: usize, attempts: usize, error: String) -> SweepCell {
+        SweepCell {
+            m,
+            s,
+            mean_rel_train: f64::NAN,
+            mean_rel_test: f64::NAN,
+            final_train: f64::NAN,
+            final_test: f64::NAN,
+            events: 0,
+            wall_secs: f64::NAN,
+            status: CellStatus::Failed,
+            attempts,
+            error: Some(error),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == CellStatus::Ok
+    }
 }
 
 /// Full sweep output.
@@ -30,109 +104,147 @@ pub struct SweepResult {
 
 impl SweepResult {
     pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let mut w = CsvWriter::create(
-            path,
-            &[
-                "m",
-                "s",
-                "mean_rel_train",
-                "mean_rel_test",
-                "final_train",
-                "final_test",
-                "events",
-                "wall_secs",
-            ],
-        )?;
-        for c in &self.cells {
-            w.row(&[
-                c.m as f64,
-                c.s as f64,
-                c.mean_rel_train,
-                c.mean_rel_test,
-                c.final_train,
-                c.final_test,
-                c.events as f64,
-                c.wall_secs,
-            ])?;
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
         }
-        w.flush()
+        let mut out = String::from(
+            "m,s,mean_rel_train,mean_rel_test,final_train,final_test,events,attempts,status,error\n",
+        );
+        for c in &self.cells {
+            let f = |v: f64| format!("{v:.9e}");
+            // commas/newlines in the error would shift columns; the CSV
+            // writer is too simple for quoting, so sanitize instead
+            let error = c
+                .error
+                .clone()
+                .unwrap_or_default()
+                .replace([',', '\n', '\r'], ";");
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{error}\n",
+                c.m,
+                c.s,
+                f(c.mean_rel_train),
+                f(c.mean_rel_test),
+                f(c.final_train),
+                f(c.final_test),
+                c.events,
+                c.attempts,
+                c.status.as_str(),
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
     }
 
-    /// Best (m, s) by mean train relative improvement (min).
+    /// Best (m, s) by mean train relative improvement (min), over
+    /// successfully trained cells only.
     pub fn best(&self) -> Option<&SweepCell> {
         self.cells
             .iter()
-            .filter(|c| c.mean_rel_train.is_finite())
+            .filter(|c| c.is_ok() && c.mean_rel_train.is_finite())
             .min_by(|a, b| a.mean_rel_train.partial_cmp(&b.mean_rel_train).unwrap())
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.cells.iter().filter(|c| !c.is_ok()).count()
     }
 }
 
-/// Run one training cell at (m, s).
-fn run_cell(
-    artifact_dir: &Path,
-    base: &TrainConfig,
-    ds: &Dataset,
-    epochs: usize,
-    m: usize,
-    s: usize,
-) -> anyhow::Result<SweepCell> {
-    let runtime = Runtime::cpu(artifact_dir)?;
-    let mut cfg = base.clone();
-    cfg.epochs = epochs;
-    cfg.log_every = 0;
-    cfg.measure_dmd = true;
-    let dmd = cfg
-        .dmd
-        .as_mut()
-        .ok_or_else(|| anyhow::anyhow!("sweep requires dmd.enabled"))?;
-    dmd.m = m;
-    dmd.s = s;
-    let mut session = TrainSession::new(&runtime, cfg)?;
-    let report = session.run(ds)?;
-    Ok(SweepCell {
-        m,
-        s,
-        mean_rel_train: report.dmd_stats.mean_rel_train(),
-        mean_rel_test: report.dmd_stats.mean_rel_test(),
-        final_train: report.history.final_train().unwrap_or(f64::NAN),
-        final_test: report.history.final_test().unwrap_or(f64::NAN),
-        events: report.dmd_stats.events.len(),
-        wall_secs: report.wall_secs,
-    })
+/// Options for [`run_sweep_with`] beyond the [`SweepConfig`] itself.
+pub struct SweepOptions {
+    /// Per-cell progress lines on stderr.
+    pub progress: bool,
+    /// Directory for the `sweep.ledger` and the resolved worker config
+    /// (process isolation). `None` = no ledger, no resume.
+    pub run_dir: Option<PathBuf>,
+    /// Replay the ledger in `run_dir`, skipping completed cells.
+    pub resume: bool,
+    /// Worker binary override (tests pass `CARGO_BIN_EXE_dmdtrain`);
+    /// defaults to `current_exe()`.
+    pub worker_exe: Option<PathBuf>,
 }
 
-/// Execute the sweep over worker threads. Cell order in the result is
-/// deterministic (row-major over m × s) regardless of worker count.
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            progress: false,
+            run_dir: None,
+            resume: false,
+            worker_exe: None,
+        }
+    }
+}
+
+/// Back-compat wrapper: run with the configured isolation and no
+/// ledger/resume (the bench and library callers).
 pub fn run_sweep(
     artifact_dir: &Path,
     sweep: &SweepConfig,
     ds: &Dataset,
     progress: bool,
 ) -> anyhow::Result<SweepResult> {
+    run_sweep_with(
+        artifact_dir,
+        sweep,
+        ds,
+        &SweepOptions {
+            progress,
+            ..SweepOptions::default()
+        },
+    )
+}
+
+/// Execute the sweep. Cell order in the result is deterministic
+/// (row-major over m × s) regardless of worker count and isolation.
+pub fn run_sweep_with(
+    artifact_dir: &Path,
+    sweep: &SweepConfig,
+    ds: &Dataset,
+    opts: &SweepOptions,
+) -> anyhow::Result<SweepResult> {
     let grid: Vec<(usize, usize)> = sweep
         .m_values
         .iter()
         .flat_map(|&m| sweep.s_values.iter().map(move |&s| (m, s)))
         .collect();
+    match sweep.isolation {
+        Isolation::Thread => {
+            anyhow::ensure!(
+                !opts.resume,
+                "--resume requires isolation = \"process\" (the ledger is written by the \
+                 process-isolated coordinator)"
+            );
+            run_sweep_threads(artifact_dir, sweep, ds, &grid, opts.progress)
+        }
+        Isolation::Process => run_sweep_processes(artifact_dir, sweep, ds, &grid, opts),
+    }
+}
 
+/// Legacy in-process path: deterministic, zero spawn overhead, but the
+/// first failing cell aborts the whole sweep.
+fn run_sweep_threads(
+    artifact_dir: &Path,
+    sweep: &SweepConfig,
+    ds: &Dataset,
+    grid: &[(usize, usize)],
+    progress: bool,
+) -> anyhow::Result<SweepResult> {
     let workers = sweep.workers.max(1).min(grid.len().max(1));
-    let mut cells: Vec<Option<anyhow::Result<SweepCell>>> =
-        (0..grid.len()).map(|_| None).collect();
+    let mut cells: Vec<Option<anyhow::Result<SweepCell>>> = (0..grid.len()).map(|_| None).collect();
     {
-        let slots: Vec<std::sync::Mutex<&mut Option<anyhow::Result<SweepCell>>>> =
-            cells.iter_mut().map(std::sync::Mutex::new).collect();
-        let done = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<Mutex<&mut Option<anyhow::Result<SweepCell>>>> =
+            cells.iter_mut().map(Mutex::new).collect();
+        let done = AtomicUsize::new(0);
         std::thread::scope(|scope| {
             for w in 0..workers {
-                let grid = &grid;
                 let slots = &slots;
                 let done = &done;
                 scope.spawn(move || {
                     for gi in (w..grid.len()).step_by(workers) {
                         let (m, s) = grid[gi];
                         let cell = run_cell(artifact_dir, &sweep.base, ds, sweep.epochs, m, s);
-                        let finished =
-                            done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                        let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                         if progress {
                             eprintln!(
                                 "sweep [{finished}/{}] m={m} s={s} rel_train={}",
@@ -156,24 +268,181 @@ pub fn run_sweep(
     Ok(out)
 }
 
+/// Fault-tolerant path: supervised subprocess per cell, durable ledger,
+/// resume, graceful degradation.
+fn run_sweep_processes(
+    artifact_dir: &Path,
+    sweep: &SweepConfig,
+    ds: &Dataset,
+    grid: &[(usize, usize)],
+    opts: &SweepOptions,
+) -> anyhow::Result<SweepResult> {
+    anyhow::ensure!(
+        sweep.base.dmd.is_some(),
+        "sweep requires dmd.enabled" // fail before spawning anything
+    );
+    anyhow::ensure!(
+        !opts.resume || opts.run_dir.is_some(),
+        "--resume requires a run directory (the CSV --out path provides one)"
+    );
+    let exe = match &opts.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| anyhow::anyhow!("cannot locate own binary for sweep workers: {e}"))?,
+    };
+    // Workers re-load the dataset from the configured path; make sure it
+    // resolves from any CWD and actually loads before fanning out.
+    anyhow::ensure!(
+        !sweep.base.dataset.is_empty(),
+        "process-isolated sweep requires data.path (workers re-load the dataset)"
+    );
+    let _ = ds; // loaded by the caller as an early sanity check
+
+    // Write the fully resolved config where workers can read it: file +
+    // CLI overrides are already folded in, so a worker cell is
+    // bit-identical to the same cell run in-process.
+    let run_dir = match &opts.run_dir {
+        Some(d) => d.clone(),
+        None => std::env::temp_dir().join(format!("dmdtrain_sweep_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&run_dir)?;
+    let config_path = run_dir.join("sweep-worker.toml");
+    crate::util::durable::atomic_write(
+        &config_path,
+        "sweep.config",
+        sweep.to_worker_config().to_toml_string().as_bytes(),
+    )?;
+
+    // Ledger: resume replays completed cells; a fresh run starts one.
+    let header = LedgerHeader::of(sweep);
+    let ledger_path = run_dir.join("sweep.ledger");
+    let mut replayed: HashMap<(usize, usize), SweepCell> = HashMap::new();
+    let ledger = if opts.resume {
+        let (ledger, cells) = Ledger::open_resume(&ledger_path, &header)?;
+        for cell in cells {
+            // failed cells are re-run on resume — only trained results replay
+            if cell.is_ok() {
+                replayed.insert((cell.m, cell.s), cell);
+            }
+        }
+        if opts.progress {
+            eprintln!(
+                "sweep: resumed from {}: {} of {} cells already complete",
+                ledger_path.display(),
+                replayed.len(),
+                grid.len()
+            );
+        }
+        ledger
+    } else {
+        Ledger::create(&ledger_path, &header)
+    };
+    let ledger = Mutex::new(ledger);
+
+    let pending: Vec<usize> = (0..grid.len())
+        .filter(|&gi| !replayed.contains_key(&grid[gi]))
+        .collect();
+    let workers = sweep.workers.max(1).min(pending.len().max(1));
+    let timeout = (sweep.timeout_secs > 0).then(|| std::time::Duration::from_secs(sweep.timeout_secs));
+
+    let mut fresh: Vec<Option<SweepCell>> = (0..grid.len()).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<SweepCell>>> = fresh.iter_mut().map(Mutex::new).collect();
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(replayed.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let pending = &pending;
+                let slots = &slots;
+                let next = &next;
+                let done = &done;
+                let ledger = &ledger;
+                let exe = &exe;
+                let config_path = &config_path;
+                scope.spawn(move || loop {
+                    let pi = next.fetch_add(1, Ordering::Relaxed);
+                    if pi >= pending.len() {
+                        return;
+                    }
+                    let gi = pending[pi];
+                    let (m, s) = grid[gi];
+                    let spec = WorkerSpec {
+                        exe: exe.clone(),
+                        config: config_path.clone(),
+                        artifact_dir: artifact_dir.to_path_buf(),
+                        m,
+                        s,
+                        timeout,
+                    };
+                    let cell = run_supervised_cell(&spec, sweep.max_retries, sweep.backoff_ms);
+                    ledger.lock().unwrap_or_else(|e| e.into_inner()).append_cell(&cell);
+                    // Chaos hook for the CI kill-then-resume job: abort the
+                    // coordinator (≈ SIGKILL) after N durable appends.
+                    if crate::util::failpoint::fire("sweep.coordinator.crash").is_some() {
+                        eprintln!("failpoint \"sweep.coordinator.crash\": aborting coordinator");
+                        std::process::abort();
+                    }
+                    let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                    if opts.progress {
+                        let outcome = match cell.status {
+                            CellStatus::Ok => crate::util::fmt_f64(cell.mean_rel_train),
+                            CellStatus::Failed => format!(
+                                "FAILED after {} attempts: {}",
+                                cell.attempts,
+                                cell.error.as_deref().unwrap_or("unknown")
+                            ),
+                        };
+                        eprintln!(
+                            "sweep [{finished}/{}] m={m} s={s} rel_train={outcome}",
+                            grid.len()
+                        );
+                    }
+                    **slots[gi].lock().unwrap() = Some(cell);
+                });
+            }
+        });
+    }
+
+    let mut out = SweepResult::default();
+    for (gi, slot) in fresh.into_iter().enumerate() {
+        let key = grid[gi];
+        match slot {
+            Some(cell) => out.cells.push(cell),
+            None => out.cells.push(
+                replayed
+                    .remove(&key)
+                    .expect("cell neither run nor replayed"),
+            ),
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn ok_cell(m: usize, s: usize, rel: f64) -> SweepCell {
+        SweepCell {
+            m,
+            s,
+            mean_rel_train: rel,
+            mean_rel_test: rel + 0.05,
+            final_train: 1e-3,
+            final_test: 2e-3,
+            events: 10,
+            wall_secs: 1.0,
+            status: CellStatus::Ok,
+            attempts: 1,
+            error: None,
+        }
+    }
 
     #[test]
     fn sweep_result_best_and_csv() {
         let mut r = SweepResult::default();
         for (m, s, rel) in [(2, 5, 0.9), (14, 55, 0.3), (20, 100, 0.5)] {
-            r.cells.push(SweepCell {
-                m,
-                s,
-                mean_rel_train: rel,
-                mean_rel_test: rel + 0.05,
-                final_train: 1e-3,
-                final_test: 2e-3,
-                events: 10,
-                wall_secs: 1.0,
-            });
+            r.cells.push(ok_cell(m, s, rel));
         }
         let best = r.best().unwrap();
         assert_eq!((best.m, best.s), (14, 55));
@@ -183,7 +452,67 @@ mod tests {
         r.write_csv(&path).unwrap();
         let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
         assert_eq!(header[0], "m");
+        assert_eq!(header[8], "status");
         assert_eq!(rows.len(), 3);
         assert_eq!(rows[1][0], 14.0);
+    }
+
+    #[test]
+    fn failed_cells_report_in_csv_and_skip_best() {
+        let mut r = SweepResult::default();
+        r.cells.push(ok_cell(2, 5, 0.9));
+        r.cells.push(SweepCell::failed(
+            4,
+            5,
+            3,
+            "worker crashed: exit code 101, with a comma".to_string(),
+        ));
+        assert_eq!(r.failed_count(), 1);
+        // the failed cell has the better (NaN-free comparison would pick
+        // it up if not filtered) — best must come from ok cells only
+        assert_eq!(r.best().unwrap().m, 2);
+
+        let dir = std::env::temp_dir().join("dmdtrain_sweep_failed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("grid.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rows");
+        let failed_row: Vec<&str> = lines[2].split(',').collect();
+        assert_eq!(failed_row.len(), 10, "error text must not add columns");
+        assert_eq!(failed_row[8], "failed");
+        assert!(failed_row[9].contains("exit code 101"));
+        // every row has the same arity
+        assert_eq!(lines[0].split(',').count(), 10);
+        assert_eq!(lines[1].split(',').count(), 10);
+    }
+
+    #[test]
+    fn thread_isolation_rejects_resume() {
+        let sweep = SweepConfig::from_config(
+            &crate::config::Config::parse(
+                "[dmd]\nenabled = true\n[model]\nartifact = \"test\"\n[data]\npath = \"x.dmdt\"",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let ds = Dataset::from_raw(
+            crate::tensor::Tensor::zeros(2, 6),
+            crate::tensor::Tensor::zeros(2, 6),
+            crate::tensor::Tensor::zeros(1, 6),
+            crate::tensor::Tensor::zeros(1, 6),
+        );
+        let err = run_sweep_with(
+            Path::new("/nonexistent"),
+            &sweep,
+            &ds,
+            &SweepOptions {
+                resume: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("isolation"), "{err}");
     }
 }

@@ -1,0 +1,162 @@
+//! The `sweep-worker` subprocess: train exactly one (m, s) grid cell and
+//! print the resulting [`SweepCell`] as one JSON line on stdout.
+//!
+//! This is the isolation boundary of the fault-tolerant sweep: a panic,
+//! abort, or OOM kill here costs one cell, not the sweep. The parent
+//! (`coordinator::supervise`) parses the final stdout line; anything
+//! else — a crash, a timeout kill, garbage output — is a failed attempt
+//! that the supervisor retries.
+//!
+//! The wire format is the ledger record format minus the CRC seal: a
+//! `"kind":"cell"` JSON object with non-finite floats encoded as `null`
+//! (hand-rolled JSON cannot round-trip `NaN`).
+
+use crate::cli::Args;
+use crate::config::{SweepConfig, TrainConfig};
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::trainer::TrainSession;
+use crate::util::failpoint;
+use crate::util::jsonl::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::sweep::{CellStatus, SweepCell};
+
+/// Run one training cell at (m, s). Shared by the in-process (thread
+/// isolation) path and the `sweep-worker` subprocess.
+pub(crate) fn run_cell(
+    artifact_dir: &Path,
+    base: &TrainConfig,
+    ds: &Dataset,
+    epochs: usize,
+    m: usize,
+    s: usize,
+) -> anyhow::Result<SweepCell> {
+    let runtime = Runtime::cpu(artifact_dir)?;
+    let mut cfg = base.clone();
+    cfg.epochs = epochs;
+    cfg.log_every = 0;
+    cfg.measure_dmd = true;
+    let dmd = cfg
+        .dmd
+        .as_mut()
+        .ok_or_else(|| anyhow::anyhow!("sweep requires dmd.enabled"))?;
+    dmd.m = m;
+    dmd.s = s;
+    let mut session = TrainSession::new(&runtime, cfg)?;
+    let report = session.run(ds)?;
+    Ok(SweepCell {
+        m,
+        s,
+        mean_rel_train: report.dmd_stats.mean_rel_train(),
+        mean_rel_test: report.dmd_stats.mean_rel_test(),
+        final_train: report.history.final_train().unwrap_or(f64::NAN),
+        final_test: report.history.final_test().unwrap_or(f64::NAN),
+        events: report.dmd_stats.events.len(),
+        wall_secs: report.wall_secs,
+        status: CellStatus::Ok,
+        attempts: 1,
+        error: None,
+    })
+}
+
+/// Encode a float for the wire/ledger: non-finite → `null` (the JSON
+/// encoder would emit unparseable `NaN` otherwise); [`decode_cell`]
+/// turns `null` back into `f64::NAN`.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn decode_num(j: Option<&Json>) -> f64 {
+    j.and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+/// Encode a cell result as the `"kind":"cell"` wire/ledger object.
+pub fn cell_json(c: &SweepCell) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::Str("cell".to_string()));
+    m.insert("m".to_string(), Json::Num(c.m as f64));
+    m.insert("s".to_string(), Json::Num(c.s as f64));
+    m.insert("mean_rel_train".to_string(), num(c.mean_rel_train));
+    m.insert("mean_rel_test".to_string(), num(c.mean_rel_test));
+    m.insert("final_train".to_string(), num(c.final_train));
+    m.insert("final_test".to_string(), num(c.final_test));
+    m.insert("events".to_string(), Json::Num(c.events as f64));
+    m.insert("wall_secs".to_string(), num(c.wall_secs));
+    m.insert("attempts".to_string(), Json::Num(c.attempts as f64));
+    m.insert(
+        "status".to_string(),
+        Json::Str(c.status.as_str().to_string()),
+    );
+    m.insert(
+        "error".to_string(),
+        match &c.error {
+            Some(e) => Json::Str(e.clone()),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(m)
+}
+
+/// Decode a `"kind":"cell"` object back into a [`SweepCell`].
+pub fn decode_cell(j: &Json) -> anyhow::Result<SweepCell> {
+    anyhow::ensure!(
+        j.get("kind").and_then(Json::as_str) == Some("cell"),
+        "not a cell record"
+    );
+    let int = |key: &str| -> anyhow::Result<usize> {
+        j.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("cell record missing '{key}'"))
+    };
+    let status = j
+        .get("status")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("cell record missing 'status'"))?;
+    Ok(SweepCell {
+        m: int("m")?,
+        s: int("s")?,
+        mean_rel_train: decode_num(j.get("mean_rel_train")),
+        mean_rel_test: decode_num(j.get("mean_rel_test")),
+        final_train: decode_num(j.get("final_train")),
+        final_test: decode_num(j.get("final_test")),
+        events: int("events")?,
+        wall_secs: decode_num(j.get("wall_secs")),
+        attempts: int("attempts")?,
+        status: CellStatus::parse(status)?,
+        error: j.get("error").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+/// Entry point of the hidden `dmdtrain sweep-worker` subcommand.
+///
+/// Flags: `--config PATH` (the resolved sweep config written by the
+/// coordinator), `--m N --s N` (the cell), `--artifacts DIR`. On
+/// success prints the cell JSON as the final stdout line; on error the
+/// caller (main) prints to stderr and exits nonzero, which the
+/// supervisor treats as a crashed attempt.
+pub fn run_worker(args: &Args) -> anyhow::Result<()> {
+    let config_path = args.require("config")?;
+    let m = args.usize_or("m", 0)?;
+    let s = args.usize_or("s", 0)?;
+    anyhow::ensure!(m > 0 && s > 0, "sweep-worker requires --m and --s");
+    let artifact_dir = match args.str_opt("artifacts") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => Runtime::default_artifact_dir(),
+    };
+    let cfg = crate::config::Config::load(config_path)?;
+    let sweep = SweepConfig::from_config(&cfg)?;
+    let ds = Dataset::load(&sweep.base.dataset)?;
+    // Fault-injection sites for the chaos suite: a worker that hangs
+    // (killed at the supervisor's timeout) or crashes mid-cell.
+    failpoint::hang_point("sweep.worker.hang");
+    failpoint::panic_point("sweep.worker.crash");
+    let cell = run_cell(&artifact_dir, &sweep.base, &ds, sweep.epochs, m, s)?;
+    println!("{}", cell_json(&cell).encode());
+    Ok(())
+}

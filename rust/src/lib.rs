@@ -108,9 +108,24 @@
 //! with the failure counted in the event, never a fatal error. All of
 //! it is exercised by a fail-point registry ([`util::failpoint`]) —
 //! `DMDTRAIN_FAILPOINTS` / `--failpoints` inject IO errors, torn
-//! writes, NaNs and panics by name; when nothing is armed the hot-path
-//! cost is a single relaxed atomic load (`tests/fault_injection.rs`,
-//! and `tests/workspace_alloc.rs` keeps the step zero-allocation).
+//! writes, NaNs, panics and hangs by name; when nothing is armed the
+//! hot-path cost is a single relaxed atomic load
+//! (`tests/fault_injection.rs`, and `tests/workspace_alloc.rs` keeps
+//! the step zero-allocation).
+//!
+//! The (m, s) sweep extends the same posture across *processes*: with
+//! `sweep.isolation = "process"` the [`coordinator`] supervises one
+//! `sweep-worker` subprocess per grid cell ([`coordinator::supervise`] —
+//! wall-clock timeout with kill + reap, bounded retries with
+//! exponential backoff), appends every outcome to a CRC-sealed
+//! atomic-rewrite ledger ([`coordinator::ledger`]) that `--resume`
+//! replays byte-identically, and degrades retry-exhausted cells to
+//! explicit `failed` CSV rows (`tests/sweep_fault.rs`). The serve loop
+//! self-heals too: a panicked batcher dispatcher respawns with its
+//! queue intact (bounded budget, `dmdtrain_batcher_restarts_total`),
+//! registry reload failures back off exponentially and log once per
+//! streak, and shutdown force-closes tracked connections so slow
+//! clients cannot pin the drain.
 //!
 //! Crate map (see DESIGN.md for the paper-to-module inventory):
 //!
@@ -125,7 +140,7 @@
 //! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`); `TrainWorkspace` zero-alloc hot path |
 //! | [`serve`] | HTTP inference: checkpoint registry, micro-batched predict |
 //! | [`trainer`] | `TrainSession` state machine (`trainer::session`), pluggable accelerators (`trainer::accel`), observers (`trainer::observe`), CRC-trailed resume checkpoints, divergence recovery |
-//! | [`coordinator`] | (m, s) sensitivity sweeps across worker threads |
+//! | [`coordinator`] | (m, s) sweeps: thread or supervised-subprocess cells (`coordinator::supervise`, `coordinator::worker`), durable resume ledger (`coordinator::ledger`) |
 //! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
 //! | [`cli`], [`config`] | hand-rolled argv parser and TOML-subset config |
 //! | [`rng`], [`util`], [`metrics`] | infrastructure substrates: worker pool, CRC-32 (`util::crc32`), durable writes (`util::durable`), fail-point registry (`util::failpoint`) |

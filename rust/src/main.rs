@@ -14,7 +14,7 @@
 
 use dmdtrain::cli::Args;
 use dmdtrain::config::{Config, DatagenConfig, ServeConfig, SweepConfig, TrainConfig, Value};
-use dmdtrain::coordinator::run_sweep;
+use dmdtrain::coordinator::{run_sweep_with, SweepOptions};
 use dmdtrain::data::Dataset;
 use dmdtrain::pde::generate_dataset;
 use dmdtrain::runtime::Runtime;
@@ -39,7 +39,9 @@ USAGE: dmdtrain <subcommand> [--flags]
                             --recovery true|false --recovery-retries N
                             --recovery-snapshot-every N
                             --recovery-cooldown N --recovery-lr-shrink X]
-  sweep    --config <toml> [--workers N --epochs N --out PATH]
+  sweep    --config <toml> [--workers N --epochs N --out PATH
+                            --isolation thread|process --timeout-secs N
+                            --max-retries N --backoff-ms N --resume]
   predict  --checkpoint PATH --dataset PATH [--artifact NAME]
   serve    [--config <toml> --models DIR --host H --port N
             --batch-window-us N --max-batch N --threads N
@@ -48,6 +50,11 @@ USAGE: dmdtrain <subcommand> [--flags]
 
 Fault injection (testing): --failpoints \"name=action[@N];…\" or the
 DMDTRAIN_FAILPOINTS env var — actions: error, nan, panic, partial:BYTES.
+
+With --isolation process, each sweep cell runs in a supervised
+`sweep-worker` subprocess (internal subcommand) with per-cell timeout
+and retries; outcomes land in <out dir>/sweep.ledger, and --resume
+replays it to skip completed cells bit-identically.
 
 Config files: configs/*.toml (see configs/paper.toml).";
 
@@ -73,6 +80,8 @@ fn main() {
         "datagen" => cmd_datagen(&args),
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
+        // hidden: one sweep cell in a supervised subprocess
+        "sweep-worker" => dmdtrain::coordinator::run_worker(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
@@ -127,10 +136,16 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("recovery-retries", "recovery.max_retries"),
         ("recovery-snapshot-every", "recovery.snapshot_every"),
         ("recovery-cooldown", "recovery.jump_cooldown"),
+        ("timeout-secs", "sweep.timeout_secs"),
+        ("max-retries", "sweep.max_retries"),
+        ("backoff-ms", "sweep.backoff_ms"),
     ] {
         if let Some(v) = args.str_opt(flag) {
             cfg.set(key, Value::Int(v.parse()?));
         }
+    }
+    if let Some(v) = args.str_opt("isolation") {
+        cfg.set("sweep.isolation", Value::Str(v.to_string()));
     }
     if let Some(v) = args.str_opt("dmd") {
         cfg.set("dmd.enabled", Value::Bool(v == "true" || v == "1"));
@@ -240,15 +255,46 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let sc = SweepConfig::from_config(&cfg)?;
     let ds = Dataset::load(&sc.base.dataset)?;
     let out = args.str_or("out", "runs/sweep/grid.csv");
+    // `--resume` is boolean-ish: bare (or `--resume true`) resumes. The
+    // flag is not in BOOL_FLAGS because `train --resume PATH` takes a
+    // value, so a bare trailing `--resume` parses as "true" here.
+    let resume = args.has("resume") && args.str_opt("resume") != Some("false");
+    anyhow::ensure!(
+        !resume || sc.isolation == dmdtrain::config::Isolation::Process,
+        "--resume requires isolation = \"process\" (set [sweep] isolation or --isolation)"
+    );
+    // The ledger + resolved worker config live beside the output CSV.
+    let run_dir = std::path::Path::new(&out)
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
     eprintln!(
-        "sweep: {}×{} grid, {} epochs per cell, {} workers",
+        "sweep: {}×{} grid, {} epochs per cell, {} workers, {} isolation{}",
         sc.m_values.len(),
         sc.s_values.len(),
         sc.epochs,
-        sc.workers
+        sc.workers,
+        sc.isolation.as_str(),
+        if resume { " (resuming)" } else { "" }
     );
-    let result = run_sweep(&Runtime::default_artifact_dir(), &sc, &ds, true)?;
+    let opts = SweepOptions {
+        progress: true,
+        run_dir: (sc.isolation == dmdtrain::config::Isolation::Process).then(|| run_dir.clone()),
+        resume,
+        worker_exe: None,
+    };
+    let result = run_sweep_with(&Runtime::default_artifact_dir(), &sc, &ds, &opts)?;
     result.write_csv(&out)?;
+    let failed = result.failed_count();
+    if failed > 0 {
+        eprintln!(
+            "sweep: {failed} of {} cells exhausted their retries; see the 'status' and \
+             'error' CSV columns and {}",
+            result.cells.len(),
+            run_dir.join("sweep.ledger").display()
+        );
+    }
     if let Some(best) = result.best() {
         println!(
             "best cell: m={} s={} mean_rel_train={} (paper: m=14, s=55)",

@@ -156,6 +156,8 @@ pub struct ServeMetrics {
     pub predict_shed: Counter,
     /// Registry reload passes (background poll or `POST /reload`).
     pub registry_reloads: Counter,
+    /// Predict dispatcher respawns after a panic (batcher self-healing).
+    pub batcher_restarts: Counter,
     /// Whole-request predict latency (queue + window + GEMM + split).
     pub predict_latency: Histogram,
     /// Rows per dispatched GEMM — the micro-batching effectiveness.
@@ -178,6 +180,7 @@ impl ServeMetrics {
             predict_batches: Counter::new(),
             predict_shed: Counter::new(),
             registry_reloads: Counter::new(),
+            batcher_restarts: Counter::new(),
             predict_latency: Histogram::latency(),
             batch_size: Histogram::batch_rows(),
         }
@@ -196,7 +199,7 @@ impl ServeMetrics {
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(2048);
-        let counters: [(&str, &str, &Counter); 7] = [
+        let counters: [(&str, &str, &Counter); 8] = [
             ("dmdtrain_http_requests_total", "HTTP requests received", &self.http_requests),
             ("dmdtrain_http_errors_total", "HTTP responses with status >= 400", &self.http_errors),
             ("dmdtrain_predict_requests_total", "predict requests accepted", &self.predict_requests),
@@ -204,6 +207,7 @@ impl ServeMetrics {
             ("dmdtrain_predict_batches_total", "micro-batched GEMM dispatches", &self.predict_batches),
             ("dmdtrain_predict_shed_total", "predict requests shed with 429", &self.predict_shed),
             ("dmdtrain_registry_reloads_total", "model registry reload passes", &self.registry_reloads),
+            ("dmdtrain_batcher_restarts_total", "predict dispatcher respawns after a panic", &self.batcher_restarts),
         ];
         for (name, help, c) in counters {
             let _ = writeln!(out, "# HELP {name} {help}");

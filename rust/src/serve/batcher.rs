@@ -21,6 +21,7 @@ use crate::metrics::serve::ServeMetrics;
 use crate::tensor::Tensor;
 use crate::util::failpoint;
 use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,6 +37,13 @@ const SUBMIT_WAIT: Duration = Duration::from_millis(50);
 
 /// Client back-off hint surfaced as `Retry-After` on a shed response.
 pub const RETRY_AFTER_SECS: u64 = 1;
+
+/// Dispatcher respawns allowed after panics before the batcher goes
+/// permanently down (submits answer `Down`, the router 503s). Bounded so
+/// a deterministic panic (poisoned model state, corrupt job) cannot spin
+/// the respawn loop forever; each respawn increments
+/// `dmdtrain_batcher_restarts_total`.
+pub const MAX_DISPATCHER_RESTARTS: u64 = 3;
 
 /// Why a submit was refused.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,7 +144,36 @@ impl Batcher {
         let (tx, rx) = sync_channel::<Msg>(QUEUE_DEPTH);
         let thread = std::thread::Builder::new()
             .name("dmdtrain-batcher".to_string())
-            .spawn(move || run(rx, cfg, &metrics))
+            .spawn(move || {
+                // Self-healing: a panicked dispatch loop is respawned up
+                // to MAX_DISPATCHER_RESTARTS times. The queue survives a
+                // respawn — `rx` lives here, outside the loop — so jobs
+                // submitted around the panic are still answered. Past the
+                // cap the batcher goes permanently down (submits answer
+                // `Down`, the router 503s).
+                let mut restarts: u64 = 0;
+                loop {
+                    match std::panic::catch_unwind(AssertUnwindSafe(|| run(&rx, cfg, &metrics))) {
+                        Ok(()) => break,
+                        Err(_) if restarts < MAX_DISPATCHER_RESTARTS => {
+                            restarts += 1;
+                            metrics.batcher_restarts.inc();
+                            eprintln!(
+                                "serve: predict dispatcher panicked; respawning \
+                                 ({restarts}/{MAX_DISPATCHER_RESTARTS})"
+                            );
+                        }
+                        Err(_) => {
+                            eprintln!(
+                                "serve: predict dispatcher panicked {} times; \
+                                 restart budget exhausted, batcher is down",
+                                restarts + 1
+                            );
+                            break;
+                        }
+                    }
+                }
+            })
             .expect("spawn batcher thread");
         Batcher {
             tx,
@@ -160,13 +197,15 @@ impl Drop for Batcher {
     }
 }
 
-fn run(rx: Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
+fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
     let max_rows = cfg.max_rows.max(1);
     let mut carry: VecDeque<PredictJob> = VecDeque::new();
     'outer: loop {
-        // failpoint: `serve.batcher.panic` kills the dispatcher thread —
-        // submits then fail with `Down` and the router answers 503
-        // instead of hanging (asserted in tests/fault_injection.rs)
+        // failpoint: `serve.batcher.panic` kills the dispatch loop. The
+        // supervisor in `Batcher::start` respawns it up to
+        // MAX_DISPATCHER_RESTARTS times; a persistent panic burns the
+        // budget and submits then fail with `Down` — the router answers
+        // 503 instead of hanging (asserted in tests/fault_injection.rs)
         failpoint::panic_point("serve.batcher.panic");
         // Head job: oldest carried-over job, else block for the next one.
         let head = match carry.pop_front() {
@@ -439,8 +478,8 @@ mod tests {
                 },
                 Arc::clone(&metrics),
             );
-            // the dispatcher dies on its first loop iteration; wait for
-            // the channel to disconnect (submits before that may be
+            // the persistent panic burns the whole restart budget; wait
+            // for the channel to disconnect (submits before that may be
             // accepted into the dying queue and are never answered)
             let m = model(vec![2, 2], 8);
             let deadline = Instant::now() + Duration::from_secs(10);
@@ -463,6 +502,31 @@ mod tests {
             }
             b
         };
+        drop(batcher);
+        assert_eq!(metrics.batcher_restarts.get(), MAX_DISPATCHER_RESTARTS);
+    }
+
+    #[test]
+    fn dispatcher_restarts_after_transient_panic() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        // Armed before start, so the dispatcher's very first loop
+        // iteration panics exactly once and the failpoint disarms
+        // itself; the supervisor respawns the loop.
+        let _fp = failpoint::scoped_at("serve.batcher.panic", failpoint::FailAction::Panic, 1);
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::ZERO,
+                max_rows: 8,
+            },
+            Arc::clone(&metrics),
+        );
+        let m = model(vec![2, 2], 9);
+        // The queued job is answered by the respawned dispatcher — the
+        // reply is the synchronization point proving the restart landed.
+        let rx = submit(&batcher.handle(), &m, Tensor::zeros(1, 2));
+        assert!(rx.recv().unwrap().is_ok());
+        assert_eq!(metrics.batcher_restarts.get(), 1);
         drop(batcher);
     }
 

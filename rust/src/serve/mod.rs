@@ -40,9 +40,10 @@ pub use router::AppState;
 
 use crate::config::ServeConfig;
 use crate::metrics::serve::ServeMetrics;
+use std::collections::{BTreeSet, HashMap};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -99,6 +100,127 @@ impl Drop for GateGuard {
     }
 }
 
+/// Live-connection registry so shutdown stays bounded. The per-read
+/// idle timeout resets on every byte, so a byte-at-a-time client could
+/// otherwise pin `Gate::wait_idle` indefinitely; `stop()` force-closes
+/// every tracked socket instead, which makes blocked reads and writes
+/// error out immediately.
+struct ConnTracker {
+    next_id: AtomicU64,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+}
+
+impl ConnTracker {
+    fn new() -> ConnTracker {
+        ConnTracker {
+            next_id: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Track a handler's stream via a `try_clone` (the clone shares the
+    /// socket, so shutting it down unblocks the handler's own reads).
+    /// `None` when the clone fails — the handler still runs, just
+    /// without forced-close coverage.
+    fn register(&self, stream: &TcpStream) -> Option<u64> {
+        let dup = stream.try_clone().ok()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.conns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, dup);
+        Some(id)
+    }
+
+    fn deregister(&self, id: u64) {
+        self.conns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&id);
+    }
+
+    /// Force-close every tracked connection.
+    fn shutdown_all(&self) {
+        for s in self.conns.lock().unwrap_or_else(|e| e.into_inner()).values() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Deregister even if the handler panics.
+struct ConnGuard {
+    tracker: Arc<ConnTracker>,
+    id: Option<u64>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        if let Some(id) = self.id {
+            self.tracker.deregister(id);
+        }
+    }
+}
+
+/// Exponential backoff state for the background registry-reload poll,
+/// with once-per-streak failure logging: each distinct `name: error`
+/// pair surfaces the first time it appears in a failure streak, then is
+/// muted until a clean pass resets the streak (so a persistently broken
+/// checkpoint doesn't spam one line per poll).
+struct ReloadBackoff {
+    base: Duration,
+    streak: u32,
+    seen: BTreeSet<String>,
+}
+
+/// What one reload pass decided: how long to wait, what to log.
+struct ReloadPass {
+    /// Wait before the next reload attempt.
+    delay: Duration,
+    /// Error lines to log — first appearance in this streak only.
+    log: Vec<String>,
+    /// True when a failing streak just ended.
+    recovered: bool,
+}
+
+impl ReloadBackoff {
+    fn new(base: Duration) -> ReloadBackoff {
+        ReloadBackoff {
+            base,
+            streak: 0,
+            seen: BTreeSet::new(),
+        }
+    }
+
+    /// Digest one reload pass. Failures stretch the next delay to
+    /// `base × 2^(streak-1)` capped at ×32; a clean pass resets the
+    /// delay, the streak, and the logged-error memory.
+    fn on_pass(&mut self, errors: &[(String, String)]) -> ReloadPass {
+        if errors.is_empty() {
+            let recovered = self.streak > 0;
+            self.streak = 0;
+            self.seen.clear();
+            return ReloadPass {
+                delay: self.base,
+                log: Vec::new(),
+                recovered,
+            };
+        }
+        self.streak += 1;
+        let mut log = Vec::new();
+        for (name, err) in errors {
+            let line = format!("{name}: {err}");
+            if self.seen.insert(line.clone()) {
+                log.push(line);
+            }
+        }
+        ReloadPass {
+            delay: self.base * (1u32 << (self.streak - 1).min(5)),
+            log,
+            recovered: false,
+        }
+    }
+}
+
 /// A running inference server. Dropping (or calling [`Server::shutdown`])
 /// stops accepting, drains in-flight connections, then joins the batcher
 /// and reload threads.
@@ -107,6 +229,7 @@ pub struct Server {
     state: Arc<AppState>,
     shutdown: Arc<AtomicBool>,
     gate: Arc<Gate>,
+    tracker: Arc<ConnTracker>,
     accept_thread: Option<JoinHandle<()>>,
     reload_thread: Option<JoinHandle<()>>,
     /// Dropped last (after connections drain) so every in-flight predict
@@ -142,15 +265,17 @@ impl Server {
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(Gate::new(cfg.threads));
+        let tracker = Arc::new(ConnTracker::new());
 
         let accept_thread = {
             let state = Arc::clone(&state);
             let shutdown = Arc::clone(&shutdown);
             let gate = Arc::clone(&gate);
+            let tracker = Arc::clone(&tracker);
             let handle = batcher.handle();
             std::thread::Builder::new()
                 .name("dmdtrain-accept".to_string())
-                .spawn(move || accept_loop(listener, state, handle, shutdown, gate))
+                .spawn(move || accept_loop(listener, state, handle, shutdown, gate, tracker))
                 .map_err(|e| anyhow::anyhow!("spawn accept thread: {e}"))?
         };
 
@@ -164,16 +289,25 @@ impl Server {
                     .name("dmdtrain-reload".to_string())
                     .spawn(move || {
                         let mut last = std::time::Instant::now();
+                        let mut backoff = ReloadBackoff::new(period);
+                        let mut delay = period;
                         while !shutdown.load(Ordering::Relaxed) {
                             std::thread::sleep(Duration::from_millis(50));
-                            if last.elapsed() < period {
+                            if last.elapsed() < delay {
                                 continue;
                             }
                             last = std::time::Instant::now();
                             let report = registry.reload();
                             metrics.registry_reloads.inc();
-                            for (name, err) in &report.errors {
-                                eprintln!("serve: reload of '{name}' failed: {err}");
+                            let pass = backoff.on_pass(&report.errors);
+                            delay = pass.delay;
+                            for line in &pass.log {
+                                eprintln!(
+                                    "serve: reload failed ({line}); retrying in {delay:?}"
+                                );
+                            }
+                            if pass.recovered {
+                                eprintln!("serve: registry reload recovered");
                             }
                             if report.changed() {
                                 eprintln!(
@@ -195,6 +329,7 @@ impl Server {
             state,
             shutdown,
             gate,
+            tracker,
             accept_thread: Some(accept_thread),
             reload_thread,
             batcher: Some(batcher),
@@ -237,6 +372,9 @@ impl Server {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        // Force-close live connections so a slow client (one byte per
+        // read-timeout window) cannot pin the drain below indefinitely.
+        self.tracker.shutdown_all();
         self.gate.wait_idle();
         self.batcher = None; // joins the dispatcher
         if let Some(t) = self.reload_thread.take() {
@@ -257,6 +395,7 @@ fn accept_loop(
     batcher: BatcherHandle,
     shutdown: Arc<AtomicBool>,
     gate: Arc<Gate>,
+    tracker: Arc<ConnTracker>,
 ) {
     loop {
         let stream = match listener.accept() {
@@ -276,15 +415,21 @@ fn accept_loop(
         }
         gate.enter();
         let guard = GateGuard(Arc::clone(&gate));
+        let conn_guard = ConnGuard {
+            id: tracker.register(&stream),
+            tracker: Arc::clone(&tracker),
+        };
         let state = Arc::clone(&state);
         let batcher = batcher.clone();
         let shutdown = Arc::clone(&shutdown);
         // On spawn failure the closure comes back inside the error and
-        // is dropped, which releases the gate slot via the guard.
+        // is dropped, which releases the gate slot and the connection
+        // registration via the guards.
         let _ = std::thread::Builder::new()
             .name("dmdtrain-conn".to_string())
             .spawn(move || {
                 let _guard = guard;
+                let _conn_guard = conn_guard;
                 handle_connection(stream, &state, &batcher, &shutdown);
             });
     }
@@ -298,6 +443,9 @@ fn handle_connection(
 ) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    // A peer that stops draining its receive buffer must stall a
+    // bounded time, not pin the handler thread forever on write.
+    let _ = stream.set_write_timeout(Some(IDLE_TIMEOUT));
     let reader_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -347,4 +495,65 @@ fn is_transport_error(e: &anyhow::Error) -> bool {
             )
         })
         .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reload_backoff_grows_logs_once_and_resets() {
+        let base = Duration::from_secs(2);
+        let mut b = ReloadBackoff::new(base);
+        let errs = vec![("m".to_string(), "boom".to_string())];
+        let p1 = b.on_pass(&errs);
+        assert_eq!(p1.delay, base);
+        assert_eq!(p1.log, vec!["m: boom".to_string()]);
+        assert!(!p1.recovered);
+        // same failure again: delay doubles, nothing new logged
+        let p2 = b.on_pass(&errs);
+        assert_eq!(p2.delay, base * 2);
+        assert!(p2.log.is_empty());
+        assert_eq!(b.on_pass(&errs).delay, base * 4);
+        // a different failure mid-streak surfaces exactly once
+        let errs2 = vec![
+            ("m".to_string(), "boom".to_string()),
+            ("n".to_string(), "bad magic".to_string()),
+        ];
+        let p4 = b.on_pass(&errs2);
+        assert_eq!(p4.delay, base * 8);
+        assert_eq!(p4.log, vec!["n: bad magic".to_string()]);
+        // delay growth is capped at ×32
+        for _ in 0..10 {
+            assert!(b.on_pass(&errs).delay <= base * 32);
+        }
+        // clean pass: reset + recovery flag
+        let clean = b.on_pass(&[]);
+        assert_eq!(clean.delay, base);
+        assert!(clean.recovered && clean.log.is_empty());
+        // a second clean pass is not "recovered" again
+        assert!(!b.on_pass(&[]).recovered);
+        // after the reset the old failure logs again at base delay
+        let p5 = b.on_pass(&errs);
+        assert_eq!(p5.delay, base);
+        assert_eq!(p5.log, vec!["m: boom".to_string()]);
+    }
+
+    #[test]
+    fn conn_tracker_registers_and_guard_deregisters() {
+        let tracker = Arc::new(ConnTracker::new());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let guard = ConnGuard {
+            id: tracker.register(&stream),
+            tracker: Arc::clone(&tracker),
+        };
+        assert!(guard.id.is_some());
+        assert_eq!(tracker.conns.lock().unwrap().len(), 1);
+        // shutdown_all leaves the entry in place (the guard owns removal)
+        tracker.shutdown_all();
+        assert_eq!(tracker.conns.lock().unwrap().len(), 1);
+        drop(guard);
+        assert_eq!(tracker.conns.lock().unwrap().len(), 0);
+    }
 }

@@ -237,6 +237,18 @@ pub fn panic_point(name: &str) {
     }
 }
 
+/// Hang site: blocks forever when fired with *any* action (a stuck
+/// worker for timeout/kill supervision tests). Never returns once
+/// tripped — the supervising process is expected to kill us.
+pub fn hang_point(name: &str) {
+    if fire(name).is_some() {
+        eprintln!("failpoint {name:?} injected hang");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+}
+
 // ---------------------------------------------------------------- RAII arming
 
 /// RAII guard: disarms its failpoint on drop.

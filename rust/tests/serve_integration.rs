@@ -16,6 +16,9 @@ use std::fmt::Write as _;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn temp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("dmdtrain_serve_it_{tag}"));
@@ -332,4 +335,45 @@ fn scaling_sidecar_served_in_physical_units() {
     let direct = scaling.unscale_outputs(&ys);
     assert_bit_identical(&served, &direct);
     server.shutdown();
+}
+
+#[test]
+fn shutdown_stays_bounded_with_byte_at_a_time_client() {
+    let dir = temp_dir("slowclient");
+    write_model(&dir, "m", vec![2, 3, 1], 17);
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+    let addr = server.addr();
+
+    // Trickle one header byte every 20 ms without ever finishing the
+    // request. Each byte resets the server's per-read idle timeout, so
+    // without forced connection close on stop, shutdown would wait on
+    // this client indefinitely.
+    let stop = Arc::new(AtomicBool::new(false));
+    let trickler = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let _ = s.write_all(b"POST /predict HTTP/1.1\r\nX-Slow: ");
+            while !stop.load(Ordering::Relaxed) {
+                if s.write_all(b"a").is_err() {
+                    break; // server force-closed the socket — expected
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        })
+    };
+    // let the trickler's connection get accepted and registered
+    std::thread::sleep(Duration::from_millis(200));
+
+    let t0 = Instant::now();
+    server.shutdown();
+    let elapsed = t0.elapsed();
+    // Strictly under the 5 s idle timeout: shutdown must not even wait
+    // out one read-timeout window, let alone trickle forever.
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "shutdown pinned by slow client for {elapsed:?}"
+    );
+    stop.store(true, Ordering::Relaxed);
+    trickler.join().unwrap();
 }

@@ -1,0 +1,285 @@
+//! Chaos suite for the fault-tolerant (m, s) sweep coordinator: crashed,
+//! hung and retry-exhausted `sweep-worker` subprocesses, ledger-driven
+//! `--resume`, and process-vs-thread bit-identity.
+//!
+//! Every test holds `failpoint::serial_guard()` — the coordinator itself
+//! consults the process-global failpoint registry per spawn
+//! (`sweep.worker.*` forwarding, `sweep.coordinator.crash`), so even the
+//! tests that arm nothing must not interleave with the ones that do.
+//!
+//! Workers run the real binary (`CARGO_BIN_EXE_dmdtrain`) with
+//! `workers = 1`, which makes the spawn order row-major and
+//! deterministic — the per-spawn failpoint hit counts below rely on it.
+
+use dmdtrain::config::{Config, Isolation, SweepConfig};
+use dmdtrain::coordinator::{run_sweep_with, CellStatus, SweepCell, SweepOptions};
+use dmdtrain::data::Dataset;
+use dmdtrain::rng::Rng;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::util;
+use dmdtrain::util::failpoint::{self, FailAction};
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dmdtrain_sweepfault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn artifact_dir() -> PathBuf {
+    util::repo_root().join("artifacts")
+}
+
+/// Synthetic smooth regression task matching the `test` artifact
+/// (6 inputs → 6 outputs); 16 train rows = 1 step per epoch.
+fn synthetic_dataset(seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, 6, |r, c| {
+            let v: f64 = (0..6)
+                .map(|k| ((k + c + 1) as f64 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.3 * v) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(16, &mut rng);
+    let (x_test, y_test) = gen(8, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+/// Build a run directory with a saved dataset and a tiny sweep config
+/// over `m_values` × {6}. Workers re-load the dataset from disk, so the
+/// config carries the absolute path.
+fn sweep_env(tag: &str, m_values: &str, extra_sweep: &str) -> (PathBuf, SweepConfig, Dataset) {
+    let dir = tmp_dir(tag);
+    let ds = synthetic_dataset(12);
+    let ds_path = dir.join("data.dmdt");
+    ds.save(&ds_path).unwrap();
+    let text = format!(
+        r#"
+[model]
+artifact = "test"
+[data]
+path = "{}"
+[train]
+epochs = 6
+seed = 5
+eval_every = 3
+log_every = 0
+[adam]
+lr = 0.003
+[dmd]
+enabled = true
+m = 3
+s = 5
+[accel]
+kind = "dmd"
+[sweep]
+m_values = {m_values}
+s_values = [6]
+epochs = 6
+workers = 1
+max_retries = 2
+backoff_ms = 1
+isolation = "process"
+{extra_sweep}
+"#,
+        ds_path.display()
+    );
+    let sweep = SweepConfig::from_config(&Config::parse(&text).unwrap()).unwrap();
+    (dir, sweep, ds)
+}
+
+fn opts(run_dir: &Path, resume: bool) -> SweepOptions {
+    SweepOptions {
+        progress: false,
+        run_dir: Some(run_dir.to_path_buf()),
+        resume,
+        worker_exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_dmdtrain"))),
+    }
+}
+
+fn assert_cells_bit_identical(a: &SweepCell, b: &SweepCell, what: &str) {
+    assert_eq!((a.m, a.s), (b.m, b.s), "{what}: cell identity");
+    for (name, va, vb) in [
+        ("mean_rel_train", a.mean_rel_train, b.mean_rel_train),
+        ("mean_rel_test", a.mean_rel_test, b.mean_rel_test),
+        ("final_train", a.final_train, b.final_train),
+        ("final_test", a.final_test, b.final_test),
+    ] {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{what}: {name} {va} vs {vb}");
+    }
+    assert_eq!(a.events, b.events, "{what}: events");
+}
+
+/// Tentpole acceptance: an injected crash, an injected hang, and one
+/// retry-exhausted cell — the sweep still completes, retried cells are
+/// bit-identical to a clean run, and the dead cell degrades to an
+/// explicit `failed` CSV row instead of sinking the sweep.
+#[test]
+fn crash_hang_and_exhaustion_degrade_gracefully() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let (dir, sweep, ds) = sweep_env("chaos", "[3, 4, 5]", "timeout_secs = 2");
+    // Clean reference run first (grid: (3,6) (4,6) (5,6), row-major).
+    let clean_dir = dir.join("clean");
+    let clean = run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&clean_dir, false)).unwrap();
+    assert_eq!(clean.cells.len(), 3);
+    assert!(clean.cells.iter().all(|c| c.is_ok() && c.attempts == 1));
+
+    // Spawn order with workers = 1 (each spawn consumes one hit of the
+    // base `sweep.worker.crash` then `sweep.worker.hang` points):
+    //   spawn 1  (3,6) attempt 1 — crash one-shot @1 fires → panic
+    //   spawn 2  (3,6) attempt 2 — clean
+    //   spawn 3  (4,6) attempt 1 — hang one-shot @3 fires → killed @2s
+    //   spawn 4  (4,6) attempt 2 — clean
+    //   spawns 5–7 (5,6) — per-cell crash (persistent) → exhausted
+    let _crash = failpoint::scoped_at("sweep.worker.crash", FailAction::Panic, 1);
+    let _hang = failpoint::scoped_at("sweep.worker.hang", FailAction::Panic, 3);
+    let _dead = failpoint::scoped("sweep.worker.crash.m5s6", FailAction::Panic);
+    // the 2 s timeout must not also kill healthy cells: training a cell
+    // is far under it, only the hung worker reaches the deadline
+    let chaos_dir = dir.join("chaos");
+    let chaos = run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&chaos_dir, false)).unwrap();
+
+    assert_eq!(chaos.cells.len(), 3, "every cell reports, even the dead one");
+    let crashed = &chaos.cells[0];
+    assert!(crashed.is_ok(), "crash-then-retry cell completes");
+    assert_eq!(crashed.attempts, 2, "one crashed attempt + one clean");
+    assert_cells_bit_identical(crashed, &clean.cells[0], "after crash retry");
+
+    let hung = &chaos.cells[1];
+    assert!(hung.is_ok(), "hang-then-retry cell completes");
+    assert_eq!(hung.attempts, 2, "one killed attempt + one clean");
+    assert_cells_bit_identical(hung, &clean.cells[1], "after hang kill + retry");
+
+    let dead = &chaos.cells[2];
+    assert_eq!(dead.status, CellStatus::Failed);
+    assert_eq!(dead.attempts, 3, "1 + max_retries attempts consumed");
+    let err = dead.error.as_deref().unwrap_or("");
+    assert!(err.contains("exit code 101"), "panic exit recorded: {err}");
+    assert!(dead.mean_rel_train.is_nan(), "failed numerics are NaN");
+
+    assert_eq!(chaos.failed_count(), 1);
+    let best = chaos.best().unwrap();
+    assert!(best.m != 5, "best() must skip the failed cell");
+
+    // the failed row lands in the CSV with status + error columns
+    let csv = dir.join("chaos.csv");
+    chaos.write_csv(&csv).unwrap();
+    let text = std::fs::read_to_string(&csv).unwrap();
+    let failed_line = text.lines().last().unwrap();
+    let cols: Vec<&str> = failed_line.split(',').collect();
+    assert_eq!(cols.len(), 10);
+    assert_eq!(cols[8], "failed");
+    assert!(cols[9].contains("exit code 101"), "{failed_line}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Resume acceptance: the disk state after a SIGKILL mid-sweep is a
+/// ledger holding a prefix of cell records (every append is an atomic
+/// whole-file rename). Rebuilding from exactly that state with `resume`
+/// must produce a CSV byte-identical to the uninterrupted run — and must
+/// *not* re-run the replayed cells.
+#[test]
+fn resume_from_killed_sweep_is_bit_identical() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let (dir, sweep, ds) = sweep_env("resume", "[3, 4, 5]", "");
+    let a_dir = dir.join("a");
+    let full = run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&a_dir, false)).unwrap();
+    let a_csv = dir.join("a.csv");
+    full.write_csv(&a_csv).unwrap();
+
+    // Post-SIGKILL state: header + first cell only (the coordinator died
+    // before appending the rest).
+    let ledger_text = std::fs::read_to_string(a_dir.join("sweep.ledger")).unwrap();
+    let prefix: Vec<&str> = ledger_text.lines().take(2).collect();
+    let b_dir = dir.join("b");
+    std::fs::create_dir_all(&b_dir).unwrap();
+    std::fs::write(b_dir.join("sweep.ledger"), prefix.join("\n") + "\n").unwrap();
+
+    // Tripwire: if resume re-ran the already-recorded (3,6) cell, this
+    // persistent per-cell crash would exhaust it into a failed row and
+    // the CSV comparison below would blow up.
+    let _fp = failpoint::scoped("sweep.worker.crash.m3s6", FailAction::Panic);
+    let resumed = run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&b_dir, true)).unwrap();
+    let b_csv = dir.join("b.csv");
+    resumed.write_csv(&b_csv).unwrap();
+
+    assert_eq!(
+        std::fs::read(&a_csv).unwrap(),
+        std::fs::read(&b_csv).unwrap(),
+        "resumed CSV must be byte-identical to the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A ledger torn mid-append (half a record at the tail) is not fatal:
+/// resume drops the torn record, keeps the intact prefix, re-runs the
+/// lost cell, and still converges to the clean CSV.
+#[test]
+fn torn_ledger_tail_is_ignored_on_resume() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let (dir, sweep, ds) = sweep_env("torn", "[3, 4]", "");
+    let a_dir = dir.join("a");
+    let full = run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&a_dir, false)).unwrap();
+    let a_csv = dir.join("a.csv");
+    full.write_csv(&a_csv).unwrap();
+
+    // Keep header + cell (3,6) intact, then tear cell (4,6) in half.
+    let ledger_text = std::fs::read_to_string(a_dir.join("sweep.ledger")).unwrap();
+    let lines: Vec<&str> = ledger_text.lines().collect();
+    assert_eq!(lines.len(), 3, "header + 2 cell records");
+    let torn = &lines[2][..lines[2].len() / 2];
+    let b_dir = dir.join("b");
+    std::fs::create_dir_all(&b_dir).unwrap();
+    std::fs::write(
+        b_dir.join("sweep.ledger"),
+        format!("{}\n{}\n{torn}", lines[0], lines[1]),
+    )
+    .unwrap();
+
+    let resumed = run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&b_dir, true)).unwrap();
+    let b_csv = dir.join("b.csv");
+    resumed.write_csv(&b_csv).unwrap();
+    assert_eq!(
+        std::fs::read(&a_csv).unwrap(),
+        std::fs::read(&b_csv).unwrap(),
+        "torn tail must cost one re-run, not correctness"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `isolation = "thread"` and `isolation = "process"` agree bit-for-bit
+/// on the same grid: the worker-config round-trip (resolved TOML on
+/// disk → subprocess) loses nothing, and the CSV layout is identical.
+#[test]
+fn process_and_thread_isolation_agree_bit_identically() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let (dir, sweep, ds) = sweep_env("identity", "[3, 5]", "");
+
+    let mut threaded = sweep.clone();
+    threaded.isolation = Isolation::Thread;
+    let by_thread =
+        run_sweep_with(&artifact_dir(), &threaded, &ds, &SweepOptions::default()).unwrap();
+    let by_process =
+        run_sweep_with(&artifact_dir(), &sweep, &ds, &opts(&dir.join("run"), false)).unwrap();
+
+    let t_csv = dir.join("thread.csv");
+    let p_csv = dir.join("process.csv");
+    by_thread.write_csv(&t_csv).unwrap();
+    by_process.write_csv(&p_csv).unwrap();
+    assert_eq!(
+        std::fs::read(&t_csv).unwrap(),
+        std::fs::read(&p_csv).unwrap(),
+        "process isolation must not change any reported number"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
