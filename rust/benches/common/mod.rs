@@ -4,6 +4,7 @@
 
 pub mod pr1;
 pub mod pr2;
+pub mod pr5;
 
 use dmdtrain::config::{Config, DatagenConfig, TrainConfig};
 use dmdtrain::data::Dataset;

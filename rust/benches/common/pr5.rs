@@ -1,0 +1,149 @@
+//! Frozen PR-5 fused training step — the zero-allocation workspace hot
+//! path exactly as it stood when PR 5 landed, **without** the `obs`
+//! span sites PR 8 compiled into `runtime/native.rs`.
+//!
+//! PR 8's only change to the fused path is instrumentation (two span
+//! guards around the forward and backward phases, each a relaxed atomic
+//! load when tracing is disarmed), so this copy — same
+//! `linalg::gemm` kernels, same call order, own preallocated buffers —
+//! is the reference arm of the tracing-overhead gate:
+//! `train_step_obs_overhead_pct` in `BENCH_linalg.json` measures the
+//! live `train_step_into` (spans compiled in, tracer disarmed) against
+//! this span-free body, and CI asserts the overhead stays ≤ 1%. The
+//! bench also asserts the two arms are bit-identical per step.
+//!
+//! Like `pr1.rs` / `pr2.rs`: do not "optimize" or re-sync this file
+//! with later kernel changes that alter the measured path — it is a
+//! measurement baseline, not production code.
+
+use dmdtrain::linalg::gemm;
+use dmdtrain::model::Arch;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::util::pool::WorkerPool;
+
+/// PR-5 `TrainWorkspace` shape, rebuilt locally (the real one keeps its
+/// buffers private): activations, delta ping-pong, gradient tensors and
+/// the shared B-packing scratch, all preallocated once.
+pub struct Pr5Workspace {
+    acts: Vec<Tensor>,
+    dping: Vec<f32>,
+    dpong: Vec<f32>,
+    grads: Vec<Tensor>,
+    pack: Vec<f32>,
+    rows: usize,
+}
+
+impl Pr5Workspace {
+    pub fn new(arch: &Arch, rows: usize) -> Self {
+        let acts = (0..arch.num_layers())
+            .map(|l| Tensor::zeros(rows, arch.layer_shape(l).1))
+            .collect();
+        let grads = arch
+            .param_shapes()
+            .iter()
+            .map(|&(r, c)| Tensor::zeros(r, c))
+            .collect();
+        let wmax = arch.dims[1..].iter().copied().max().unwrap_or(0);
+        Pr5Workspace {
+            acts,
+            dping: vec![0.0; rows * wmax],
+            dpong: vec![0.0; rows * wmax],
+            grads,
+            pack: Vec::new(),
+            rows,
+        }
+    }
+
+    pub fn grads(&self) -> &[Tensor] {
+        &self.grads
+    }
+}
+
+/// The PR-5 fused train step: forward with fused bias+soft-sign into
+/// workspace activations, fused δ_L residual producer, backward with
+/// σ′-masked NT and bias-summing TN dispatches — byte-for-byte the
+/// arithmetic of `NativeExecutable::train_step_into`, minus the span
+/// guards. Returns the batch MSE; gradients land in `ws.grads()`.
+pub fn train_step(
+    pool: Option<&WorkerPool>,
+    arch: &Arch,
+    ws: &mut Pr5Workspace,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Tensor,
+) -> f64 {
+    let layers = arch.num_layers();
+    let rows = x.rows();
+    assert_eq!(rows, ws.rows, "workspace sized for a different batch");
+
+    // ---- forward ----------------------------------------------------
+    for l in 0..layers {
+        let (fi, fo) = arch.layer_shape(l);
+        let w = &params[2 * l];
+        let b = &params[2 * l + 1];
+        let (head, tail) = ws.acts.split_at_mut(l);
+        let input = if l == 0 { x.data() } else { head[l - 1].data() };
+        gemm::gemm_nn_bias_act_scratch(
+            pool,
+            input,
+            rows,
+            fi,
+            w.data(),
+            fo,
+            Some(b.row(0)),
+            l + 1 < layers,
+            &mut ws.pack,
+            tail[0].data_mut(),
+        );
+    }
+    let pred = &ws.acts[layers - 1];
+    let loss = pred.mse(y);
+
+    // ---- δ_L --------------------------------------------------------
+    let n_out = arch.output_dim();
+    let scale = 2.0f32 / pred.len() as f32;
+    gemm::residual_scale(pool, pred.data(), y.data(), scale, &mut ws.dping[..rows * n_out]);
+
+    // ---- backward ---------------------------------------------------
+    let Pr5Workspace {
+        acts,
+        dping,
+        dpong,
+        grads,
+        ..
+    } = ws;
+    let (mut cur, mut nxt) = (dping.as_mut_slice(), dpong.as_mut_slice());
+    for l in (0..layers).rev() {
+        let (fi, fo) = arch.layer_shape(l);
+        let delta = &cur[..rows * fo];
+        {
+            let input = if l == 0 { x.data() } else { acts[l - 1].data() };
+            let (gw_half, gb_half) = grads.split_at_mut(2 * l + 1);
+            gemm::gemm_tn_bias(
+                pool,
+                input,
+                rows,
+                fi,
+                delta,
+                fo,
+                gw_half[2 * l].data_mut(),
+                Some(gb_half[0].data_mut()),
+            );
+        }
+        if l > 0 {
+            let w = &params[2 * l];
+            gemm::gemm_nt_mask(
+                pool,
+                delta,
+                rows,
+                fo,
+                w.data(),
+                fi,
+                acts[l - 1].data(),
+                &mut nxt[..rows * fi],
+            );
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+    }
+    loss
+}

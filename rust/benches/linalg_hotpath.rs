@@ -7,10 +7,12 @@
 //! (`common::pr2`) for the fused zero-allocation workspace path, so the
 //! perf numbers in `BENCH_linalg.json` always compare against fixed
 //! references: `gram_speedup_vs_pr1_scalar`,
-//! `train_step_speedup_vs_pr1_scalar` (targets ≥3× and ≥2×) and
-//! `train_step_fused_speedup_vs_pr2` (CI gate ≥1.15×) are the
-//! acceptance metrics. Bit-identity invariants (parallel vs serial,
-//! streaming vs batch, fused vs PR-2) are asserted on the fly.
+//! `train_step_speedup_vs_pr1_scalar` (targets ≥3× and ≥2×),
+//! `train_step_fused_speedup_vs_pr2` (CI gate ≥1.15×) and
+//! `train_step_obs_overhead_pct` (disarmed span tracing vs the span-free
+//! PR-5 body in `common::pr5`, CI gate ≤1%) are the acceptance metrics.
+//! Bit-identity invariants (parallel vs serial, streaming vs batch,
+//! fused vs PR-2, live vs PR-5) are asserted on the fly.
 
 mod common;
 
@@ -257,6 +259,47 @@ fn main() {
     results.push(ts_pr2);
     results.push(ts_fused);
 
+    // ---- disarmed-tracing overhead vs the frozen PR-5 fused step ---------
+    // PR 8 compiled `obs` span sites into the fused hot path (one
+    // relaxed atomic load per site when the tracer is disarmed).
+    // `common::pr5` freezes the span-free PR-5 body over the same gemm
+    // kernels; both arms run back to back with min-of-N timing and the
+    // CI gate asserts the live path stays within 1%.
+    assert!(
+        !dmdtrain::obs::armed(),
+        "tracing must be disarmed for the overhead gate"
+    );
+    let obs_iters = ts_iters.max(3);
+    let mut pr5_ws = common::pr5::Pr5Workspace::new(&arch, batch);
+    common::pr5::train_step(Some(WorkerPool::global()), &arch, &mut pr5_ws, &params, &x, &y);
+    let ts_pr5 = bench_n("train_step paper b=1000 pr5 nospan", obs_iters, || {
+        common::pr5::train_step(Some(WorkerPool::global()), &arch, &mut pr5_ws, &params, &x, &y)
+    });
+    let ts_live = bench_n("train_step paper b=1000 obs disarmed", obs_iters, || {
+        par_exe.train_step_into(&mut ws, &params, &x, &y).expect("live train_step")
+    });
+    // the span-free frozen body must be bit-identical to the live path
+    {
+        let loss_5 =
+            common::pr5::train_step(Some(WorkerPool::global()), &arch, &mut pr5_ws, &params, &x, &y);
+        let loss_l = par_exe.train_step_into(&mut ws, &params, &x, &y).unwrap();
+        assert_eq!(
+            loss_5.to_bits(),
+            loss_l.to_bits(),
+            "frozen PR-5 loss differs from the live fused path"
+        );
+        for (g5, gl) in pr5_ws.grads().iter().zip(ws.grads()) {
+            assert_eq!(g5.data(), gl.data(), "frozen PR-5 gradients differ from the live path");
+        }
+    }
+    let (ts_pr5_min_s, ts_live_min_s) = (ts_pr5.min_s, ts_live.min_s);
+    let obs_overhead_pct = (ts_live_min_s / ts_pr5_min_s - 1.0) * 100.0;
+    println!(
+        "  → disarmed-tracing overhead: {obs_overhead_pct:+.3}% vs frozen PR-5 span-free step (CI gate ≤ 1%; bit-identical grads)"
+    );
+    results.push(ts_pr5);
+    results.push(ts_live);
+
     // ---- TrainSession indirection overhead at paper scale ----------------
     // The session redesign routes every step through trait objects
     // (Optimizer / Accelerator / Observer). This measures a full
@@ -337,7 +380,7 @@ enabled = false
 
     // ---- perf-trajectory artifact ---------------------------------------
     let json = format!(
-        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_pool_speedup:.3},\n  \"gram_kernel_speedup_vs_pr1\": {gram_kernel_speedup:.3},\n  \"gram_speedup_vs_pr1_scalar\": {gram_speedup_vs_pr1:.3},\n  \"gram_stream_fill_s\": {stream_fill_s:.6e},\n  \"train_step_paper_b1000_pr1_scalar_s\": {ts_pr1_mean_s:.6e},\n  \"train_step_paper_b1000_serial_s\": {ts_ser_mean_s:.6e},\n  \"train_step_paper_b1000_pool_s\": {ts_par_mean_s:.6e},\n  \"train_step_paper_b1000_pr2_pool_s\": {ts_pr2_mean_s:.6e},\n  \"train_step_paper_b1000_fused_s\": {ts_fused_mean_s:.6e},\n  \"train_step_speedup\": {ts_pool_speedup:.3},\n  \"train_step_kernel_speedup_vs_pr1\": {ts_kernel_speedup:.3},\n  \"train_step_speedup_vs_pr1_scalar\": {ts_speedup_vs_pr1:.3},\n  \"train_step_fused_speedup_vs_pr2\": {ts_fused_speedup_vs_pr2:.3},\n  \"train_session_step_s\": {sess_min_s:.6e},\n  \"train_step_raw_adam_s\": {raw_min_s:.6e},\n  \"train_session_step_overhead_vs_raw\": {session_overhead:.4},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"linalg_hotpath\",\n  \"threads\": {threads},\n  \"fast_mode\": {fast},\n  \"gram_speedup\": {gram_pool_speedup:.3},\n  \"gram_kernel_speedup_vs_pr1\": {gram_kernel_speedup:.3},\n  \"gram_speedup_vs_pr1_scalar\": {gram_speedup_vs_pr1:.3},\n  \"gram_stream_fill_s\": {stream_fill_s:.6e},\n  \"train_step_paper_b1000_pr1_scalar_s\": {ts_pr1_mean_s:.6e},\n  \"train_step_paper_b1000_serial_s\": {ts_ser_mean_s:.6e},\n  \"train_step_paper_b1000_pool_s\": {ts_par_mean_s:.6e},\n  \"train_step_paper_b1000_pr2_pool_s\": {ts_pr2_mean_s:.6e},\n  \"train_step_paper_b1000_fused_s\": {ts_fused_mean_s:.6e},\n  \"train_step_speedup\": {ts_pool_speedup:.3},\n  \"train_step_kernel_speedup_vs_pr1\": {ts_kernel_speedup:.3},\n  \"train_step_speedup_vs_pr1_scalar\": {ts_speedup_vs_pr1:.3},\n  \"train_step_fused_speedup_vs_pr2\": {ts_fused_speedup_vs_pr2:.3},\n  \"train_step_paper_b1000_pr5_nospan_s\": {ts_pr5_min_s:.6e},\n  \"train_step_paper_b1000_obs_disarmed_s\": {ts_live_min_s:.6e},\n  \"train_step_obs_overhead_pct\": {obs_overhead_pct:.4},\n  \"train_session_step_s\": {sess_min_s:.6e},\n  \"train_step_raw_adam_s\": {raw_min_s:.6e},\n  \"train_session_step_overhead_vs_raw\": {session_overhead:.4},\n  \"results\": [\n    {}\n  ]\n}}\n",
         results
             .iter()
             .map(json_stat)

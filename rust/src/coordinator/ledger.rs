@@ -253,6 +253,8 @@ mod tests {
             final_test: 2e-3,
             events: 3,
             wall_secs: 0.25,
+            train_secs: 0.15,
+            dmd_secs: 0.05,
             status: CellStatus::Ok,
             attempts: 1,
             error: None,

@@ -99,6 +99,7 @@ fn wait_with_deadline(child: &mut Child, timeout: Option<Duration>) -> Result<bo
 }
 
 fn run_attempt(spec: &WorkerSpec) -> Result<SweepCell, AttemptError> {
+    let _span = crate::obs::span_arg("cell_attempt", (spec.m * 1000 + spec.s) as u64);
     let mut cmd = Command::new(&spec.exe);
     cmd.arg("sweep-worker")
         .arg("--config")
@@ -162,6 +163,7 @@ fn run_attempt(spec: &WorkerSpec) -> Result<SweepCell, AttemptError> {
 /// exponential backoff, degrading to an explicit failed row. Never
 /// errors — graceful degradation is the contract.
 pub fn run_supervised_cell(spec: &WorkerSpec, max_retries: usize, backoff_ms: u64) -> SweepCell {
+    let _span = crate::obs::span_arg("cell_supervise", (spec.m * 1000 + spec.s) as u64);
     let attempts_max = 1 + max_retries;
     let mut last_err = String::new();
     for attempt in 1..=attempts_max {
@@ -169,6 +171,7 @@ pub fn run_supervised_cell(spec: &WorkerSpec, max_retries: usize, backoff_ms: u6
             // backoff_ms, 2×, 4×, … capped at 60 s
             let shift = (attempt as u32 - 2).min(10);
             let delay = Duration::from_millis(backoff_ms << shift).min(Duration::from_secs(60));
+            let _retry = crate::obs::span_arg("cell_retry_backoff", attempt as u64);
             std::thread::sleep(delay);
         }
         match run_attempt(spec) {

@@ -66,6 +66,12 @@ pub struct SweepCell {
     pub final_test: f64,
     pub events: usize,
     pub wall_secs: f64,
+    /// Wall time attributed to backprop + optimizer + batch handling
+    /// (from the worker's profile). NaN for failed / pre-upgrade cells.
+    pub train_secs: f64,
+    /// Wall time attributed to the DMD machinery: snapshot recording,
+    /// solves, weight assignment and measurement. NaN when unavailable.
+    pub dmd_secs: f64,
     pub status: CellStatus,
     /// Worker attempts consumed (1 = clean first run).
     pub attempts: usize,
@@ -85,6 +91,8 @@ impl SweepCell {
             final_test: f64::NAN,
             events: 0,
             wall_secs: f64::NAN,
+            train_secs: f64::NAN,
+            dmd_secs: f64::NAN,
             status: CellStatus::Failed,
             attempts,
             error: Some(error),
@@ -131,6 +139,34 @@ impl SweepResult {
                 c.events,
                 c.attempts,
                 c.status.as_str(),
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Write the per-cell wall-time breakdown as a *sibling* CSV. This
+    /// deliberately lives outside `grid.csv`: wall times are
+    /// nondeterministic, and the resume contract (`--resume` produces a
+    /// byte-identical grid.csv) would break if they were columns there.
+    /// `overhead_secs = wall − train − dmd` (eval, observers, spawn…).
+    pub fn write_timings_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from("m,s,wall_secs,train_secs,dmd_secs,overhead_secs\n");
+        for c in &self.cells {
+            let f = |v: f64| format!("{v:.9e}");
+            let overhead = c.wall_secs - c.train_secs - c.dmd_secs;
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                c.m,
+                c.s,
+                f(c.wall_secs),
+                f(c.train_secs),
+                f(c.dmd_secs),
+                f(overhead),
             ));
         }
         std::fs::write(path, out)?;
@@ -432,6 +468,8 @@ mod tests {
             final_test: 2e-3,
             events: 10,
             wall_secs: 1.0,
+            train_secs: 0.6,
+            dmd_secs: 0.3,
             status: CellStatus::Ok,
             attempts: 1,
             error: None,
@@ -455,6 +493,25 @@ mod tests {
         assert_eq!(header[8], "status");
         assert_eq!(rows.len(), 3);
         assert_eq!(rows[1][0], 14.0);
+    }
+
+    #[test]
+    fn timings_csv_breaks_down_wall_time() {
+        let mut r = SweepResult::default();
+        r.cells.push(ok_cell(2, 5, 0.9));
+        r.cells.push(SweepCell::failed(4, 5, 3, "boom".to_string()));
+        let dir = std::env::temp_dir().join("dmdtrain_sweep_timings_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("timings.csv");
+        r.write_timings_csv(&path).unwrap();
+        let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(
+            header,
+            vec!["m", "s", "wall_secs", "train_secs", "dmd_secs", "overhead_secs"]
+        );
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0][5] - 0.1).abs() < 1e-9, "overhead = wall - train - dmd");
+        assert!(rows[1][2].is_nan(), "failed cells carry NaN timings");
     }
 
     #[test]

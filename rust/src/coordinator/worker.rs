@@ -46,6 +46,17 @@ pub(crate) fn run_cell(
     dmd.s = s;
     let mut session = TrainSession::new(&runtime, cfg)?;
     let report = session.run(ds)?;
+    // Wall-time breakdown from the run's profile: everything the
+    // backprop loop spends vs everything the DMD machinery spends;
+    // the remainder (eval, observers, spawn) is overhead in timings.csv.
+    let phase = |n: &str| report.profile.total(n).as_secs_f64();
+    let train_secs = phase("backprop_exec") + phase("batch_gather") + phase("batch_upload")
+        + phase("optim_update");
+    let dmd_secs = phase("snapshot_record")
+        + phase("dmd_solve")
+        + phase("dmd_assign")
+        + phase("dmd_measure")
+        + phase("linefit_solve");
     Ok(SweepCell {
         m,
         s,
@@ -55,6 +66,8 @@ pub(crate) fn run_cell(
         final_test: report.history.final_test().unwrap_or(f64::NAN),
         events: report.dmd_stats.events.len(),
         wall_secs: report.wall_secs,
+        train_secs,
+        dmd_secs,
         status: CellStatus::Ok,
         attempts: 1,
         error: None,
@@ -88,6 +101,10 @@ pub fn cell_json(c: &SweepCell) -> Json {
     m.insert("final_test".to_string(), num(c.final_test));
     m.insert("events".to_string(), Json::Num(c.events as f64));
     m.insert("wall_secs".to_string(), num(c.wall_secs));
+    // additive keys: ledgers written before the breakdown existed decode
+    // with decode_num's missing→NaN, keeping resume compatible
+    m.insert("train_secs".to_string(), num(c.train_secs));
+    m.insert("dmd_secs".to_string(), num(c.dmd_secs));
     m.insert("attempts".to_string(), Json::Num(c.attempts as f64));
     m.insert(
         "status".to_string(),
@@ -127,6 +144,8 @@ pub fn decode_cell(j: &Json) -> anyhow::Result<SweepCell> {
         final_test: decode_num(j.get("final_test")),
         events: int("events")?,
         wall_secs: decode_num(j.get("wall_secs")),
+        train_secs: decode_num(j.get("train_secs")),
+        dmd_secs: decode_num(j.get("dmd_secs")),
         attempts: int("attempts")?,
         status: CellStatus::parse(status)?,
         error: j.get("error").and_then(Json::as_str).map(str::to_string),

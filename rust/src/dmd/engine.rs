@@ -21,6 +21,14 @@ pub struct DmdOutcome {
     pub eigenvalues: Vec<Cplx>,
     /// ‖w_new − w_last‖₂ — how far the jump moved the layer.
     pub jump_norm: f64,
+    /// POD energy fractions σᵢ²/Σσ² of the retained modes, descending —
+    /// how much of the snapshot variance each kept direction carries.
+    pub energy_fracs: Vec<f64>,
+    /// Relative Frobenius residual of the reduced operator fit,
+    /// ‖Ĉ₊ − Ã Ĉ₋‖_F / ‖Ĉ₊‖_F over the POD coordinates of the lag and
+    /// forward snapshot sets — 0 means the trajectory is exactly linear
+    /// in the retained subspace, ≳1 means the fit explains nothing.
+    pub residual: f64,
 }
 
 /// Paper §3 flop estimate for one layer: `n(3m² + r²)`.
@@ -123,6 +131,44 @@ pub fn dmd_extrapolate_with_gram(
     let vt_cv = v_r.transpose().matmul(&cv); // r × r
     let a_tilde = Mat::from_fn(r, r, |i, j| vt_cv.get(i, j) / (sigma[i] * sigma[j]));
 
+    // --- fit diagnostics (O(r·m²) smalls — observability, not the solve) --
+    // POD energy fractions of the retained directions over the full
+    // spectrum of the lag Gram.
+    let energy_total: f64 = sigma2.iter().map(|&l| l.max(0.0)).sum();
+    let energy_fracs: Vec<f64> = sigma
+        .iter()
+        .map(|&s| if energy_total > 0.0 { s * s / energy_total } else { f64::NAN })
+        .collect();
+    // Reduced-coordinate residual of the operator fit: with the POD
+    // coordinates Ĉ₋ = U_rᵀW₋ = Σ V_rᵀ and Ĉ₊ = U_rᵀW₊ = Σ⁻¹ V_rᵀ C
+    // (both r × (m−1), read off the Gram — no O(n) work), measure
+    // ‖Ĉ₊ − Ã Ĉ₋‖_F / ‖Ĉ₊‖_F.
+    let residual = {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..r {
+            for j in 0..mm {
+                let mut c_plus = 0.0;
+                for k in 0..mm {
+                    c_plus += v_r.get(k, i) * c.get(k, j);
+                }
+                c_plus /= sigma[i];
+                let mut pred = 0.0;
+                for k in 0..r {
+                    pred += a_tilde.get(i, k) * sigma[k] * v_r.get(j, k);
+                }
+                let d = c_plus - pred;
+                num += d * d;
+                den += c_plus * c_plus;
+            }
+        }
+        if den > 0.0 {
+            (num / den).sqrt()
+        } else {
+            f64::NAN
+        }
+    };
+
     // --- Koopman eigendecomposition (eq. 4) ------------------------------
     let e = eig(&a_tilde)?; // Λ (r), Y (r×r complex)
     let mut lambda: Vec<Cplx> = e.values.clone();
@@ -201,6 +247,8 @@ pub fn dmd_extrapolate_with_gram(
         rank: r,
         eigenvalues: lambda,
         jump_norm,
+        energy_fracs,
+        residual,
     })
 }
 
@@ -407,6 +455,22 @@ mod tests {
         assert_eq!(batch.rank, streamed.rank);
         assert_eq!(batch.new_weights, streamed.new_weights);
         assert_eq!(batch.jump_norm.to_bits(), streamed.jump_norm.to_bits());
+    }
+
+    #[test]
+    fn diagnostics_on_exact_linear_dynamics() {
+        // exact rank-1 dynamics: the retained mode carries all the POD
+        // energy and the reduced operator fit is (numerically) exact
+        let n = 12;
+        let a = Mat::from_fn(n, n, |i, j| if i == j { 0.9 } else { 0.0 });
+        let v0: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let cols = linear_snapshots(&a, &v0, 6);
+        let out = dmd_extrapolate(&refs(&cols), &params(), 3).unwrap();
+        assert_eq!(out.energy_fracs.len(), out.rank);
+        let captured: f64 = out.energy_fracs.iter().sum();
+        assert!(captured > 0.999, "rank-1 dynamics capture all energy: {captured}");
+        assert!(out.residual.is_finite());
+        assert!(out.residual < 1e-4, "exact dynamics fit residual: {}", out.residual);
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub fn extrapolate_all_layers(
         let mut cols: Vec<&[f32]> = Vec::new();
         let mut outcomes = Vec::with_capacity(buffers.len());
         for (layer, buf) in buffers.iter().enumerate() {
+            let _span = crate::obs::span_arg("dmd_layer_solve", layer as u64);
             buf.columns_into(&mut cols);
             outcomes.push(LayerOutcome {
                 layer,
@@ -65,6 +66,7 @@ pub fn extrapolate_all_layers(
             .enumerate()
             .map(|(layer, (buf, slot))| {
                 Box::new(move || {
+                    let _span = crate::obs::span_arg("dmd_layer_solve", layer as u64);
                     let cols = buf.columns();
                     *slot = Some(LayerOutcome {
                         layer,

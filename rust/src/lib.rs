@@ -127,6 +127,25 @@
 //! streak, and shutdown force-closes tracked connections so slow
 //! clients cannot pin the drain.
 //!
+//! ## Observability
+//!
+//! One telemetry spine spans training, DMD and serving. [`obs`] is a
+//! zero-dependency span tracer with the failpoint discipline: disarmed,
+//! every span site is a single relaxed atomic load (the fused step stays
+//! zero-allocation — `tests/obs_tracing.rs` pins it with a counting
+//! allocator, and CI gates ≤ 1% `train_step` overhead against a frozen
+//! span-free PR-5 kernel); armed (`train --trace-out`), spans land in
+//! preallocated per-thread rings and drain to Chrome trace-event JSON
+//! for chrome://tracing / Perfetto, summarized offline by
+//! `dmdtrain trace`. [`metrics::core`]'s lock-free Counter/Histogram
+//! primitives back both the serve metrics and the process-global
+//! [`metrics::core::TrainMetrics`] registry rendered on `/metrics`, and
+//! every accepted or rejected DMD jump carries spectral diagnostics
+//! ([`metrics::JumpDiagnostics`] — eigenvalue moduli, spectral gap, POD
+//! energy fractions, reconstruction residual, pre/post-jump losses)
+//! through the observer seam, the JSONL metrics stream and
+//! `dmd_events.csv`.
+//!
 //! Crate map (see DESIGN.md for the paper-to-module inventory):
 //!
 //! | module | role |
@@ -141,9 +160,10 @@
 //! | [`serve`] | HTTP inference: checkpoint registry, micro-batched predict |
 //! | [`trainer`] | `TrainSession` state machine (`trainer::session`), pluggable accelerators (`trainer::accel`), observers (`trainer::observe`), CRC-trailed resume checkpoints, divergence recovery |
 //! | [`coordinator`] | (m, s) sweeps: thread or supervised-subprocess cells (`coordinator::supervise`, `coordinator::worker`), durable resume ledger (`coordinator::ledger`) |
+//! | [`obs`] | zero-allocation span tracer: per-thread rings, Chrome trace-event export (`train --trace-out`, `dmdtrain trace`) |
 //! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
 //! | [`cli`], [`config`] | hand-rolled argv parser and TOML-subset config |
-//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates: worker pool, CRC-32 (`util::crc32`), durable writes (`util::durable`), fail-point registry (`util::failpoint`) |
+//! | [`rng`], [`util`], [`metrics`] | infrastructure substrates: worker pool, CRC-32 (`util::crc32`), durable writes (`util::durable`), fail-point registry (`util::failpoint`); `metrics::core` holds the shared Counter/Histogram primitives and the trainer's Prometheus registry |
 
 // CI runs `cargo clippy -- -D warnings`. The numeric kernels lean on
 // index loops, single-letter math names and long argument lists on
@@ -180,6 +200,7 @@ pub mod dmd;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod pde;
 pub mod rng;

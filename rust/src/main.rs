@@ -6,6 +6,7 @@
 //!   sweep    — Fig-3 (m, s) sensitivity sweep
 //!   predict  — evaluate a checkpoint on a dataset
 //!   serve    — HTTP inference server over a checkpoint model registry
+//!   trace    — summarize a Chrome trace / jump diagnostics from a run
 //!   info     — show artifacts / dataset / architecture details
 
 // Same stylistic-lint posture as the library crate (see lib.rs): CI
@@ -38,7 +39,8 @@ USAGE: dmdtrain <subcommand> [--flags]
                             --early-stop-patience N --checkpoint-every N
                             --recovery true|false --recovery-retries N
                             --recovery-snapshot-every N
-                            --recovery-cooldown N --recovery-lr-shrink X]
+                            --recovery-cooldown N --recovery-lr-shrink X
+                            --trace-out PATH]
   sweep    --config <toml> [--workers N --epochs N --out PATH
                             --isolation thread|process --timeout-secs N
                             --max-retries N --backoff-ms N --resume]
@@ -46,7 +48,14 @@ USAGE: dmdtrain <subcommand> [--flags]
   serve    [--config <toml> --models DIR --host H --port N
             --batch-window-us N --max-batch N --threads N
             --reload-secs N --port-file PATH]
+  trace    [--in trace.json] [--events dmd_events.csv] [--top N]
   info     [--artifacts DIR]
+
+Observability: `train --trace-out trace.json` arms the span tracer for
+the run and writes Chrome trace-event JSON (open in chrome://tracing or
+https://ui.perfetto.dev). `trace --in` summarizes one into a per-span
+wall-time table; `trace --events` prints per-jump DMD diagnostics from
+the dmd_events.csv a train run leaves in its out dir.
 
 Fault injection (testing): --failpoints \"name=action[@N];…\" or the
 DMDTRAIN_FAILPOINTS env var — actions: error, nan, panic, partial:BYTES.
@@ -84,6 +93,7 @@ fn main() {
         "sweep-worker" => dmdtrain::coordinator::run_worker(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             println!("{USAGE}");
@@ -193,6 +203,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         runtime.platform()
     );
     let out_dir = tc.out_dir.clone();
+    // Arm the span tracer for the whole run; drained to Chrome JSON
+    // after training. Without the flag every span site stays on its
+    // one-relaxed-load disarmed path.
+    let trace_out = args.str_opt("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        dmdtrain::obs::arm();
+    }
     let mut session = SessionBuilder::new(&runtime, tc).build()?;
     if let Some(ckpt) = args.str_opt("resume") {
         let params = load_params(ckpt)?;
@@ -214,6 +231,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         }
     }
     let report = session.run(&ds)?;
+    if let Some(path) = &trace_out {
+        dmdtrain::obs::disarm();
+        let (spans, dropped) = dmdtrain::obs::write_chrome_trace(std::path::Path::new(path))?;
+        eprintln!(
+            "trace: {spans} spans → {path}{} (open in chrome://tracing or ui.perfetto.dev)",
+            if dropped > 0 {
+                format!(", {dropped} dropped by ring wraparound")
+            } else {
+                String::new()
+            }
+        );
+    }
 
     std::fs::create_dir_all(&out_dir)?;
     report
@@ -286,6 +315,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
     let result = run_sweep_with(&Runtime::default_artifact_dir(), &sc, &ds, &opts)?;
     result.write_csv(&out)?;
+    // per-cell wall-time breakdown (train vs DMD vs overhead) beside the
+    // grid — a separate file because grid.csv must stay byte-identical
+    // across resumes and wall times are nondeterministic
+    let timings = run_dir.join("timings.csv");
+    result.write_timings_csv(&timings)?;
     let failed = result.failed_count();
     if failed > 0 {
         eprintln!(
@@ -303,7 +337,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             util::fmt_f64(best.mean_rel_train)
         );
     }
-    println!("grid written to {out}");
+    println!(
+        "grid written to {out} (wall-time breakdown in {})",
+        timings.display()
+    );
     Ok(())
 }
 
@@ -374,6 +411,119 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, format!("{}", server.addr()))?;
     }
     server.wait();
+    Ok(())
+}
+
+/// Summarize a Chrome trace JSON (`--in`) into a per-span wall-time
+/// table and/or print per-jump DMD diagnostics from a `dmd_events.csv`
+/// (`--events`). Reads the files a `train --trace-out` run leaves
+/// behind — no live process needed.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use dmdtrain::util::jsonl::Json;
+    let trace_in = args.str_opt("in");
+    let events_in = args.str_opt("events");
+    anyhow::ensure!(
+        trace_in.is_some() || events_in.is_some(),
+        "trace: pass --in trace.json and/or --events dmd_events.csv"
+    );
+    let top = args.usize_or("top", 0)?; // 0 = all
+
+    if let Some(path) = trace_in {
+        let text = std::fs::read_to_string(path)?;
+        let doc = dmdtrain::util::jsonl::parse(&text)?;
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{path}: no traceEvents array (not a Chrome trace)"))?;
+        // name → (count, total µs, max µs)
+        let mut agg: std::collections::BTreeMap<String, (u64, f64, f64)> =
+            std::collections::BTreeMap::new();
+        let mut tids = std::collections::BTreeSet::new();
+        for e in events {
+            if e.get("ph").and_then(Json::as_str) != Some("X") {
+                continue;
+            }
+            let name = e.get("name").and_then(Json::as_str).unwrap_or("?");
+            let dur = e.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+            if let Some(t) = e.get("tid").and_then(Json::as_f64) {
+                tids.insert(t as i64);
+            }
+            let a = agg.entry(name.to_string()).or_insert((0, 0.0, 0.0));
+            a.0 += 1;
+            a.1 += dur;
+            a.2 = a.2.max(dur);
+        }
+        let dropped = doc
+            .get("otherData")
+            .and_then(|o| o.get("dropped_spans"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        let mut rows: Vec<_> = agg.into_iter().collect();
+        rows.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap_or(std::cmp::Ordering::Equal));
+        let shown = if top > 0 { top.min(rows.len()) } else { rows.len() };
+        println!(
+            "{path}: {} spans across {} thread(s), {} name(s){}",
+            rows.iter().map(|r| r.1 .0).sum::<u64>(),
+            tids.len(),
+            rows.len(),
+            if dropped > 0.0 {
+                format!(" ({dropped} dropped by ring wraparound)")
+            } else {
+                String::new()
+            }
+        );
+        println!(
+            "{:<28} {:>10} {:>14} {:>12} {:>12}",
+            "span", "calls", "total (s)", "mean (ms)", "max (ms)"
+        );
+        for (name, (count, total_us, max_us)) in rows.into_iter().take(shown) {
+            println!(
+                "{name:<28} {count:>10} {:>14.4} {:>12.4} {:>12.4}",
+                total_us / 1e6,
+                total_us / 1e3 / count as f64,
+                max_us / 1e3
+            );
+        }
+    }
+
+    if let Some(path) = events_in {
+        let (header, rows) = dmdtrain::util::csv::read_csv(path)?;
+        let col = |name: &str| header.iter().position(|h| h == name);
+        let get = |row: &[f64], idx: Option<usize>| idx.and_then(|i| row.get(i).copied());
+        println!(
+            "\n{path}: {} DMD jump(s)\n{:<7} {:>8} {:>6} {:>9} {:>8} {:>8} {:>8} {:>10} {:>10}",
+            rows.len(),
+            "epoch",
+            "accept",
+            "rank",
+            "rel_train",
+            "|λ|max",
+            "min gap",
+            "energy",
+            "resid max",
+            "loss pre→post"
+        );
+        for row in &rows {
+            let num = |n: &str| get(row, col(n)).unwrap_or(f64::NAN);
+            let accepted = num("accepted");
+            println!(
+                "{:<7} {:>8} {:>6} {:>9} {:>8} {:>8} {:>8} {:>10} {:>10}",
+                num("epoch") as i64,
+                if accepted == 0.0 { "REJECT" } else { "yes" },
+                num("total_rank") as i64,
+                util::fmt_f64(num("rel_train")),
+                util::fmt_f64(num("max_eig_modulus")),
+                util::fmt_f64(num("min_spectral_gap")),
+                util::fmt_f64(num("mean_energy_captured")),
+                util::fmt_f64(num("max_residual")),
+                format!(
+                    "{}→{}",
+                    util::fmt_f64(num("before_train")),
+                    util::fmt_f64(num("after_train"))
+                )
+            );
+        }
+    }
     Ok(())
 }
 

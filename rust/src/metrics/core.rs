@@ -1,0 +1,314 @@
+//! Metrics primitives shared by every subsystem — lock-free [`Counter`]s
+//! and fixed-bucket [`Histogram`]s with Prometheus text exposition —
+//! plus the [`TrainMetrics`] registry the trainer records into.
+//!
+//! The primitives were born in `metrics/serve.rs` for the inference
+//! server; they are generalized here so the training loop, the DMD
+//! accelerators and the sweep coordinator record into the same
+//! substrate (`metrics::serve` re-exports them, so existing paths keep
+//! compiling). Everything is `AtomicU64`-based: recording from the hot
+//! path is a relaxed fetch-add with no locks and no allocation, and
+//! `render_prometheus` reads a consistent-enough snapshot (counters are
+//! monotone, the usual Prometheus scrape semantics apply).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram (Prometheus `histogram` exposition: cumulative
+/// `_bucket{le=…}` counts plus `_sum` / `_count`). The sum is kept in
+/// nanoseconds-as-integer so it stays a single atomic.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Upper bounds (inclusive), ascending; an implicit +Inf bucket
+    /// follows the last bound.
+    bounds: Vec<f64>,
+    /// One count per bound, plus the +Inf overflow bucket at the end.
+    counts: Vec<AtomicU64>,
+    sum_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds,
+            counts,
+            sum_nanos: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Default request-latency buckets: 50 µs … 2.5 s.
+    pub fn latency() -> Histogram {
+        Histogram::with_bounds(vec![
+            50e-6, 100e-6, 250e-6, 500e-6, 1e-3, 2.5e-3, 5e-3, 10e-3, 25e-3, 50e-3, 100e-3,
+            250e-3, 500e-3, 1.0, 2.5,
+        ])
+    }
+
+    /// Batch-size buckets: 1 … 512 rows per dispatched GEMM.
+    pub fn batch_rows() -> Histogram {
+        Histogram::with_bounds(vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0])
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos
+            .fetch_add((v.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Bucket-resolution quantile estimate: the smallest bucket upper
+    /// bound covering fraction `q` of observations (the last finite
+    /// bound when the quantile lands in +Inf). NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // +Inf bucket: report the largest finite bound
+                    *self.bounds.last().unwrap_or(&f64::INFINITY)
+                };
+            }
+        }
+        *self.bounds.last().unwrap_or(&f64::INFINITY)
+    }
+
+    /// Append the Prometheus exposition for this histogram.
+    pub fn render(&self, name: &str, help: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+        }
+        cum += self.counts[self.bounds.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum());
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+/// Append one Prometheus counter exposition block.
+pub fn render_counter(name: &str, help: &str, c: &Counter, out: &mut String) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {}", c.get());
+}
+
+/// Everything the training loop and the DMD accelerators record:
+/// per-phase wall-time histograms plus the jump/recovery/snapshot
+/// counters. One process-wide instance ([`TrainMetrics::global`])
+/// backs the `/metrics` endpoint and the `dmdtrain trace` summary;
+/// recording is lock-free and allocation-free, so it is safe on the
+/// zero-allocation training hot path.
+#[derive(Debug)]
+pub struct TrainMetrics {
+    /// Optimizer steps taken (backprop + update).
+    pub steps: Counter,
+    /// Epochs finished.
+    pub epochs: Counter,
+    /// DMD/line-fit jumps the guard accepted.
+    pub jumps_accepted: Counter,
+    /// Jumps the acceptance guard rolled back wholesale.
+    pub jumps_rejected: Counter,
+    /// Layers that kept their backprop weights inside an otherwise
+    /// applied jump (failed or non-finite per-layer solves).
+    pub jump_layers_degraded: Counter,
+    /// Divergence-recovery rollbacks to last-known-good state.
+    pub recovery_rollbacks: Counter,
+    /// Snapshot columns pushed across all layer buffers.
+    pub snapshot_columns: Counter,
+    /// Full forward+backward step wall time.
+    pub step_seconds: Histogram,
+    /// Optimizer update wall time.
+    pub optim_seconds: Histogram,
+    /// Test-set evaluation wall time.
+    pub eval_seconds: Histogram,
+    /// All-layer DMD/line-fit solve wall time per jump.
+    pub dmd_solve_seconds: Histogram,
+    /// Pre/post-jump loss measurement wall time.
+    pub dmd_measure_seconds: Histogram,
+    /// Snapshot record (copy + streaming Gram row) wall time.
+    pub snapshot_seconds: Histogram,
+}
+
+impl Default for TrainMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainMetrics {
+    pub fn new() -> TrainMetrics {
+        TrainMetrics {
+            steps: Counter::new(),
+            epochs: Counter::new(),
+            jumps_accepted: Counter::new(),
+            jumps_rejected: Counter::new(),
+            jump_layers_degraded: Counter::new(),
+            recovery_rollbacks: Counter::new(),
+            snapshot_columns: Counter::new(),
+            step_seconds: Histogram::latency(),
+            optim_seconds: Histogram::latency(),
+            eval_seconds: Histogram::latency(),
+            dmd_solve_seconds: Histogram::latency(),
+            dmd_measure_seconds: Histogram::latency(),
+            snapshot_seconds: Histogram::latency(),
+        }
+    }
+
+    /// The process-wide registry every `TrainSession` records into.
+    /// Counters are monotone across sessions, matching Prometheus
+    /// semantics when several runs share one process (the sweep's
+    /// thread isolation, the test suite).
+    pub fn global() -> &'static TrainMetrics {
+        static GLOBAL: OnceLock<TrainMetrics> = OnceLock::new();
+        GLOBAL.get_or_init(TrainMetrics::new)
+    }
+
+    /// Prometheus text exposition for the train + DMD families
+    /// (appended to the serve families by `GET /metrics`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counters: [(&str, &str, &Counter); 7] = [
+            ("dmdtrain_train_steps_total", "optimizer steps taken", &self.steps),
+            ("dmdtrain_train_epochs_total", "training epochs finished", &self.epochs),
+            ("dmdtrain_dmd_jumps_accepted_total", "DMD jumps accepted by the guard", &self.jumps_accepted),
+            ("dmdtrain_dmd_jumps_rejected_total", "DMD jumps rolled back by the guard", &self.jumps_rejected),
+            ("dmdtrain_dmd_layers_degraded_total", "layers that kept backprop weights inside a jump", &self.jump_layers_degraded),
+            ("dmdtrain_recovery_rollbacks_total", "divergence-recovery rollbacks", &self.recovery_rollbacks),
+            ("dmdtrain_snapshot_columns_total", "snapshot columns pushed across layer buffers", &self.snapshot_columns),
+        ];
+        for (name, help, c) in counters {
+            render_counter(name, help, c, &mut out);
+        }
+        let histograms: [(&str, &str, &Histogram); 6] = [
+            ("dmdtrain_train_step_seconds", "forward+backward step wall time", &self.step_seconds),
+            ("dmdtrain_optim_update_seconds", "optimizer update wall time", &self.optim_seconds),
+            ("dmdtrain_eval_seconds", "test-set evaluation wall time", &self.eval_seconds),
+            ("dmdtrain_dmd_solve_seconds", "all-layer DMD solve wall time per jump", &self.dmd_solve_seconds),
+            ("dmdtrain_dmd_measure_seconds", "pre/post-jump loss measurement wall time", &self.dmd_measure_seconds),
+            ("dmdtrain_snapshot_record_seconds", "snapshot record (copy + Gram row) wall time", &self.snapshot_seconds),
+        ];
+        for (name, help, h) in histograms {
+            h.render(name, help, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::with_bounds(vec![1.0, 10.0]);
+        h.observe(0.5);
+        h.observe(5.0);
+        h.observe(50.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 55.5).abs() < 1e-6);
+        assert!((h.mean() - 18.5).abs() < 1e-6);
+        // quantiles resolve to bucket upper bounds
+        assert_eq!(h.quantile(0.01), 1.0);
+        assert_eq!(h.quantile(0.5), 10.0);
+        // the +Inf observation reports the largest finite bound
+        assert_eq!(h.quantile(0.99), 10.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_nan() {
+        let h = Histogram::latency();
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn train_metrics_render_has_all_families() {
+        let m = TrainMetrics::new();
+        m.steps.add(3);
+        m.jumps_accepted.inc();
+        m.step_seconds.observe(0.002);
+        let text = m.render_prometheus();
+        assert!(text.contains("dmdtrain_train_steps_total 3"));
+        assert!(text.contains("dmdtrain_dmd_jumps_accepted_total 1"));
+        assert!(text.contains("dmdtrain_dmd_jumps_rejected_total 0"));
+        assert!(text.contains("dmdtrain_recovery_rollbacks_total 0"));
+        assert!(text.contains("# TYPE dmdtrain_train_step_seconds histogram"));
+        assert!(text.contains("dmdtrain_train_step_seconds_count 1"));
+        assert!(text.contains("# TYPE dmdtrain_dmd_solve_seconds histogram"));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let a = TrainMetrics::global() as *const _;
+        let b = TrainMetrics::global() as *const _;
+        assert_eq!(a, b);
+    }
+}

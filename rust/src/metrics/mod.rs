@@ -1,7 +1,10 @@
 //! Training metrics: loss history, DMD-event statistics (the paper's
-//! "mean relative improvement" of Fig 3), and CSV/JSONL export — plus
-//! the serving-side counters and latency histograms ([`serve`]).
+//! "mean relative improvement" of Fig 3) with per-jump spectral
+//! diagnostics, and CSV/JSONL export — plus the shared counter /
+//! histogram primitives and the trainer's Prometheus registry
+//! ([`core`]) and the serving-side metrics ([`serve`]).
 
+pub mod core;
 pub mod serve;
 
 use crate::util::csv::CsvWriter;
@@ -68,9 +71,97 @@ impl LossHistory {
     }
 }
 
+/// Per-layer spectral diagnostics of one DMD solve — the signals a
+/// spectrum-adaptive cadence policy reads (ROADMAP item 4).
+#[derive(Clone, Debug, Default)]
+pub struct LayerDiagnostics {
+    /// Layer index within the architecture.
+    pub layer: usize,
+    /// Retained mode count after the σ-ratio filter.
+    pub rank: usize,
+    /// |λ| of the retained Koopman modes (solver order).
+    pub eig_moduli: Vec<f64>,
+    /// POD energy fractions σᵢ²/Σσ² of the retained modes, descending.
+    pub energy_fracs: Vec<f64>,
+    /// Relative reconstruction residual of the reduced operator fit
+    /// (0 = exactly linear trajectory; NaN when unavailable).
+    pub residual: f64,
+}
+
+impl LayerDiagnostics {
+    /// Gap between the two largest |λ| — a clean gap means the dominant
+    /// mode is well separated (0 when fewer than 2 modes).
+    pub fn spectral_gap(&self) -> f64 {
+        let mut mods = self.eig_moduli.clone();
+        mods.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        if mods.len() < 2 {
+            0.0
+        } else {
+            mods[0] - mods[1]
+        }
+    }
+
+    /// Total POD energy the retained modes carry (≤ 1).
+    pub fn energy_captured(&self) -> f64 {
+        self.energy_fracs.iter().sum()
+    }
+}
+
+/// Per-jump DMD diagnostics carried by every [`DmdEvent`]: the layer
+/// spectra plus the measured pre/post-jump losses (NaN when the event
+/// ran without measurement, i.e. no guard and `measure_dmd = false`).
+#[derive(Clone, Debug, Default)]
+pub struct JumpDiagnostics {
+    pub layers: Vec<LayerDiagnostics>,
+    pub before_train: f64,
+    pub before_test: f64,
+    pub after_train: f64,
+    pub after_test: f64,
+}
+
+impl JumpDiagnostics {
+    pub fn unmeasured() -> Self {
+        JumpDiagnostics {
+            layers: Vec::new(),
+            before_train: f64::NAN,
+            before_test: f64::NAN,
+            after_train: f64::NAN,
+            after_test: f64::NAN,
+        }
+    }
+
+    /// Largest |λ| across all layers (NaN when no spectra recorded).
+    pub fn max_eig_modulus(&self) -> f64 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.eig_moduli.iter().copied())
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Smallest per-layer spectral gap — the adaptive-cadence "back
+    /// off" signal (NaN when no spectra recorded).
+    pub fn min_spectral_gap(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.spectral_gap())
+            .fold(f64::NAN, f64::min)
+    }
+
+    /// Mean retained POD energy across layers (NaN when empty).
+    pub fn mean_energy_captured(&self) -> f64 {
+        mean(self.layers.iter().map(|l| l.energy_captured()))
+    }
+
+    /// Worst (largest) reduced-operator residual across layers.
+    pub fn max_residual(&self) -> f64 {
+        self.layers.iter().map(|l| l.residual).fold(f64::NAN, f64::max)
+    }
+}
+
 /// Per-DMD-event record: the relative error the jump produced
-/// (paper Fig 3 metric: MSE after the DMD process / MSE before).
-#[derive(Clone, Copy, Debug)]
+/// (paper Fig 3 metric: MSE after the DMD process / MSE before), plus
+/// the spectral diagnostics of the solves behind it.
+#[derive(Clone, Debug)]
 pub struct DmdEvent {
     pub epoch: usize,
     pub rel_train: f64,
@@ -82,6 +173,12 @@ pub struct DmdEvent {
     /// Layers whose solve failed or went non-finite this event — those
     /// layers kept their backprop weights (degraded, not fatal).
     pub failed_layers: usize,
+    /// False when the acceptance guard measured a worse train loss and
+    /// rolled the whole jump back.
+    pub accepted: bool,
+    /// Eigenvalue spectra, POD energies, fit residuals and the
+    /// pre/post-jump losses of this event.
+    pub diagnostics: JumpDiagnostics,
 }
 
 /// Aggregates DMD events over a run.
@@ -113,6 +210,8 @@ impl DmdStats {
     }
 
     pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        // diagnostics columns are additive (appended after the original
+        // six) so existing consumers keep parsing by position
         let mut w = CsvWriter::create(
             path,
             &[
@@ -122,6 +221,13 @@ impl DmdStats {
                 "solve_secs",
                 "total_rank",
                 "failed_layers",
+                "accepted",
+                "max_eig_modulus",
+                "min_spectral_gap",
+                "mean_energy_captured",
+                "max_residual",
+                "before_train",
+                "after_train",
             ],
         )?;
         for e in &self.events {
@@ -132,6 +238,13 @@ impl DmdStats {
                 e.solve_secs,
                 e.total_rank as f64,
                 e.failed_layers as f64,
+                if e.accepted { 1.0 } else { 0.0 },
+                e.diagnostics.max_eig_modulus(),
+                e.diagnostics.min_spectral_gap(),
+                e.diagnostics.mean_energy_captured(),
+                e.diagnostics.max_residual(),
+                e.diagnostics.before_train,
+                e.diagnostics.after_train,
             ])?;
         }
         w.flush()
@@ -185,28 +298,63 @@ mod tests {
         assert_eq!(fast.improvement_vs(&slow), Some(100.0));
     }
 
+    fn ev(epoch: usize, rel_train: f64, rel_test: f64, solve_secs: f64) -> DmdEvent {
+        DmdEvent {
+            epoch,
+            rel_train,
+            rel_test,
+            solve_secs,
+            total_rank: 10,
+            failed_layers: 0,
+            accepted: true,
+            diagnostics: JumpDiagnostics::unmeasured(),
+        }
+    }
+
     #[test]
     fn dmd_stats_means_skip_nan() {
         let mut s = DmdStats::new();
-        s.push(DmdEvent {
-            epoch: 14,
-            rel_train: 0.5,
-            rel_test: f64::NAN,
-            solve_secs: 0.1,
-            total_rank: 10,
-            failed_layers: 0,
-        });
-        s.push(DmdEvent {
-            epoch: 28,
-            rel_train: 0.3,
-            rel_test: 0.4,
-            solve_secs: 0.2,
-            total_rank: 12,
-            failed_layers: 1,
-        });
+        s.push(ev(14, 0.5, f64::NAN, 0.1));
+        s.push(ev(28, 0.3, 0.4, 0.2));
         assert!((s.mean_rel_train() - 0.4).abs() < 1e-12);
         assert!((s.mean_rel_test() - 0.4).abs() < 1e-12);
         assert!((s.total_solve_secs() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jump_diagnostics_aggregates() {
+        let d = JumpDiagnostics {
+            layers: vec![
+                LayerDiagnostics {
+                    layer: 0,
+                    rank: 2,
+                    eig_moduli: vec![0.98, 0.70],
+                    energy_fracs: vec![0.9, 0.08],
+                    residual: 0.01,
+                },
+                LayerDiagnostics {
+                    layer: 1,
+                    rank: 1,
+                    eig_moduli: vec![0.95],
+                    energy_fracs: vec![0.99],
+                    residual: 0.20,
+                },
+            ],
+            before_train: 1.0,
+            before_test: 1.1,
+            after_train: 0.5,
+            after_test: 0.6,
+        };
+        assert!((d.max_eig_modulus() - 0.98).abs() < 1e-12);
+        // layer 1 has a single mode → gap 0 is the minimum
+        assert_eq!(d.min_spectral_gap(), 0.0);
+        assert!((d.layers[0].spectral_gap() - 0.28).abs() < 1e-12);
+        assert!((d.mean_energy_captured() - 0.985).abs() < 1e-12);
+        assert!((d.max_residual() - 0.20).abs() < 1e-12);
+        // unmeasured events report NaN aggregates, not garbage
+        let u = JumpDiagnostics::unmeasured();
+        assert!(u.max_eig_modulus().is_nan());
+        assert!(u.mean_energy_captured().is_nan());
     }
 
     #[test]

@@ -1,142 +1,15 @@
-//! Serving metrics: lock-free counters and fixed-bucket latency
-//! histograms with Prometheus text exposition (`GET /metrics`).
+//! Serving metrics: the counters and latency histograms the HTTP
+//! handler threads and the micro-batch dispatcher record, with
+//! Prometheus text exposition (`GET /metrics`).
 //!
-//! Everything here is `AtomicU64`-based so the HTTP handler threads and
-//! the micro-batch dispatcher record without locks; `render_prometheus`
-//! reads a consistent-enough snapshot (counters are monotone, so the
-//! usual Prometheus scrape semantics apply).
+//! The [`Counter`] / [`Histogram`] primitives live in
+//! [`crate::metrics::core`] (shared with the trainer's
+//! [`crate::metrics::core::TrainMetrics`]); they are re-exported here
+//! so serve-side callers keep their historical paths.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+pub use super::core::{Counter, Histogram};
 
-/// Monotone event counter.
-#[derive(Debug, Default)]
-pub struct Counter(AtomicU64);
-
-impl Counter {
-    pub fn new() -> Counter {
-        Counter(AtomicU64::new(0))
-    }
-
-    pub fn inc(&self) {
-        self.0.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
-    }
-
-    pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
-    }
-}
-
-/// Fixed-bucket histogram (Prometheus `histogram` exposition: cumulative
-/// `_bucket{le=…}` counts plus `_sum` / `_count`). The sum is kept in
-/// nanoseconds-as-integer so it stays a single atomic.
-#[derive(Debug)]
-pub struct Histogram {
-    /// Upper bounds (inclusive), ascending; an implicit +Inf bucket
-    /// follows the last bound.
-    bounds: Vec<f64>,
-    /// One count per bound, plus the +Inf overflow bucket at the end.
-    counts: Vec<AtomicU64>,
-    sum_nanos: AtomicU64,
-    count: AtomicU64,
-}
-
-impl Histogram {
-    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
-        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
-        Histogram {
-            bounds,
-            counts,
-            sum_nanos: AtomicU64::new(0),
-            count: AtomicU64::new(0),
-        }
-    }
-
-    /// Default request-latency buckets: 50 µs … 2.5 s.
-    pub fn latency() -> Histogram {
-        Histogram::with_bounds(vec![
-            50e-6, 100e-6, 250e-6, 500e-6, 1e-3, 2.5e-3, 5e-3, 10e-3, 25e-3, 50e-3, 100e-3,
-            250e-3, 500e-3, 1.0, 2.5,
-        ])
-    }
-
-    /// Batch-size buckets: 1 … 512 rows per dispatched GEMM.
-    pub fn batch_rows() -> Histogram {
-        Histogram::with_bounds(vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0])
-    }
-
-    pub fn observe(&self, v: f64) {
-        let idx = self
-            .bounds
-            .iter()
-            .position(|&b| v <= b)
-            .unwrap_or(self.bounds.len());
-        self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_nanos
-            .fetch_add((v.max(0.0) * 1e9) as u64, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn sum(&self) -> f64 {
-        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
-    }
-
-    pub fn mean(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            f64::NAN
-        } else {
-            self.sum() / n as f64
-        }
-    }
-
-    /// Bucket-resolution quantile estimate: the smallest bucket upper
-    /// bound covering fraction `q` of observations (the last finite
-    /// bound when the quantile lands in +Inf). NaN when empty.
-    pub fn quantile(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return f64::NAN;
-        }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
-        let mut cum = 0u64;
-        for (i, c) in self.counts.iter().enumerate() {
-            cum += c.load(Ordering::Relaxed);
-            if cum >= target {
-                return if i < self.bounds.len() {
-                    self.bounds[i]
-                } else {
-                    // +Inf bucket: report the largest finite bound
-                    *self.bounds.last().unwrap_or(&f64::INFINITY)
-                };
-            }
-        }
-        *self.bounds.last().unwrap_or(&f64::INFINITY)
-    }
-
-    /// Append the Prometheus exposition for this histogram.
-    pub fn render(&self, name: &str, help: &str, out: &mut String) {
-        use std::fmt::Write as _;
-        let _ = writeln!(out, "# HELP {name} {help}");
-        let _ = writeln!(out, "# TYPE {name} histogram");
-        let mut cum = 0u64;
-        for (i, b) in self.bounds.iter().enumerate() {
-            cum += self.counts[i].load(Ordering::Relaxed);
-            let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
-        }
-        cum += self.counts[self.bounds.len()].load(Ordering::Relaxed);
-        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
-        let _ = writeln!(out, "{name}_sum {}", self.sum());
-        let _ = writeln!(out, "{name}_count {}", self.count());
-    }
-}
+use super::core::render_counter;
 
 /// All counters and histograms the serve subsystem records.
 #[derive(Debug)]
@@ -197,7 +70,6 @@ impl ServeMetrics {
     }
 
     pub fn render_prometheus(&self) -> String {
-        use std::fmt::Write as _;
         let mut out = String::with_capacity(2048);
         let counters: [(&str, &str, &Counter); 8] = [
             ("dmdtrain_http_requests_total", "HTTP requests received", &self.http_requests),
@@ -210,9 +82,7 @@ impl ServeMetrics {
             ("dmdtrain_batcher_restarts_total", "predict dispatcher respawns after a panic", &self.batcher_restarts),
         ];
         for (name, help, c) in counters {
-            let _ = writeln!(out, "# HELP {name} {help}");
-            let _ = writeln!(out, "# TYPE {name} counter");
-            let _ = writeln!(out, "{name} {}", c.get());
+            render_counter(name, help, c, &mut out);
         }
         self.predict_latency.render(
             "dmdtrain_predict_latency_seconds",
@@ -231,37 +101,6 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn counter_counts() {
-        let c = Counter::new();
-        c.inc();
-        c.add(4);
-        assert_eq!(c.get(), 5);
-    }
-
-    #[test]
-    fn histogram_buckets_and_sum() {
-        let h = Histogram::with_bounds(vec![1.0, 10.0]);
-        h.observe(0.5);
-        h.observe(5.0);
-        h.observe(50.0);
-        assert_eq!(h.count(), 3);
-        assert!((h.sum() - 55.5).abs() < 1e-6);
-        assert!((h.mean() - 18.5).abs() < 1e-6);
-        // quantiles resolve to bucket upper bounds
-        assert_eq!(h.quantile(0.01), 1.0);
-        assert_eq!(h.quantile(0.5), 10.0);
-        // the +Inf observation reports the largest finite bound
-        assert_eq!(h.quantile(0.99), 10.0);
-    }
-
-    #[test]
-    fn empty_histogram_quantile_is_nan() {
-        let h = Histogram::latency();
-        assert!(h.quantile(0.5).is_nan());
-        assert!(h.mean().is_nan());
-    }
 
     #[test]
     fn prometheus_render_shape() {

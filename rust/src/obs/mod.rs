@@ -1,0 +1,479 @@
+//! Crate-wide span tracing: zero-dependency, zero-steady-state-allocation
+//! instrumentation drained to Chrome trace-event JSON.
+//!
+//! # Disarmed fast path
+//!
+//! Like [`crate::util::failpoint`], the tracer is **disarmed by
+//! default** and every instrumented seam pays exactly one relaxed
+//! atomic load when it is: [`span`] reads `ARMED` and returns an inert
+//! guard without touching the clock, TLS, or the heap. This is what
+//! keeps `tests/workspace_alloc.rs` green with tracing compiled into
+//! the training hot path — the counting allocator sees zero
+//! allocations per step, and the added cost per span site is one
+//! `Ordering::Relaxed` load plus a predictable branch.
+//!
+//! # Armed recording
+//!
+//! [`arm`] installs a per-thread ring-buffer capacity and flips the
+//! armed flag. The first span recorded on each thread allocates that
+//! thread's fixed ring once (registered in a global drain list);
+//! afterwards recording a span is a clock read plus an uncontended
+//! mutex lock and an in-place slot write — **no steady-state
+//! allocation even while armed**. When a ring wraps, the oldest spans
+//! are overwritten and counted in [`dropped_spans`], so a long run
+//! keeps the most recent window instead of growing without bound.
+//!
+//! # Draining
+//!
+//! [`drain`] snapshots and clears every thread's ring (sorted by start
+//! time); [`write_chrome_trace`] formats a drained snapshot as Chrome
+//! trace-event JSON — complete `"X"` events with microsecond
+//! timestamps — loadable by `chrome://tracing` and Perfetto, plus one
+//! metadata event per thread. `dmdtrain train --trace-out trace.json`
+//! arms the tracer around the run and writes the file; `dmdtrain
+//! trace` summarizes one back into a per-name wall-time table.
+//!
+//! Span names must be `&'static str` literals: the ring stores the
+//! pointer, never a copy, which is what keeps recording allocation-free.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity (spans) when [`arm`] is called
+/// without an explicit size.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// Armed flag: 0 = disarmed (the hot-path fast case), otherwise the
+/// per-thread ring capacity to install on first touch.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+/// Spans overwritten by ring wraparound since the last [`reset`].
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Monotone id handed to each thread-local ring as its trace `tid`.
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+/// One completed span. `name` is a `&'static str` so recording never
+/// copies; `arg` is a free-form numeric payload (batch rows, layer
+/// index, task count, …) surfaced as `args.v` in the Chrome JSON.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u32,
+    pub arg: u64,
+}
+
+struct Ring {
+    tid: u32,
+    /// Logical ring size. Kept separately from `slots.capacity()`
+    /// because `Vec::with_capacity` only guarantees *at least* the
+    /// request — the wraparound accounting must be exact.
+    cap: usize,
+    slots: Vec<SpanRec>,
+    /// Next write position; wraps modulo capacity once full.
+    head: usize,
+}
+
+impl Ring {
+    fn record(&mut self, rec: SpanRec) {
+        let cap = self.cap;
+        if self.slots.len() < cap {
+            self.slots.push(rec);
+        } else {
+            // wraparound: overwrite the oldest slot and count the drop
+            self.slots[self.head] = rec;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        self.head = (self.head + 1) % cap;
+    }
+
+    /// Spans in chronological order (oldest first), leaving the ring
+    /// intact. Once the ring has wrapped, `head` points at the oldest
+    /// slot, so the order is `[head..] ++ [..head]`.
+    fn snapshot(&self) -> Vec<SpanRec> {
+        if self.slots.len() < self.cap {
+            return self.slots.clone();
+        }
+        let mut out = Vec::with_capacity(self.slots.len());
+        out.extend_from_slice(&self.slots[self.head..]);
+        out.extend_from_slice(&self.slots[..self.head]);
+        out
+    }
+
+    fn clear(&mut self) {
+        self.slots.clear();
+        self.head = 0;
+    }
+}
+
+/// Global list of every thread's ring, for draining from any thread.
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Process-wide trace epoch: all span timestamps are nanoseconds since
+/// the first armed span (or [`arm`] call) in the process.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// Poison-tolerant lock (same discipline as util::failpoint): a panic
+// while holding a ring never disables tracing for the rest of the run.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// This thread's ring, created on first armed span.
+    static LOCAL_RING: std::cell::RefCell<Option<Arc<Mutex<Ring>>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// RAII span guard: inert when the tracer is disarmed at construction
+/// (the only cost was one relaxed load), otherwise records
+/// `(name, t_start, t_end, tid, arg)` into this thread's ring on drop.
+pub struct SpanGuard {
+    /// `u64::MAX` marks an inert (disarmed) guard.
+    start_ns: u64,
+    name: &'static str,
+    arg: u64,
+}
+
+impl SpanGuard {
+    /// Attach/overwrite the numeric payload after construction (e.g.
+    /// a row count known only mid-scope).
+    pub fn set_arg(&mut self, arg: u64) {
+        if self.start_ns != u64::MAX {
+            self.arg = arg;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if self.start_ns == u64::MAX {
+            return;
+        }
+        record_slow(SpanRec {
+            name: self.name,
+            start_ns: self.start_ns,
+            dur_ns: now_ns().saturating_sub(self.start_ns),
+            tid: 0, // filled from the ring below
+            arg: self.arg,
+        });
+    }
+}
+
+/// Open a span. Disarmed cost: one relaxed atomic load, no clock read,
+/// no allocation — safe inside the zero-allocation training hot path.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return SpanGuard {
+            start_ns: u64::MAX,
+            name,
+            arg: 0,
+        };
+    }
+    SpanGuard {
+        start_ns: now_ns(),
+        name,
+        arg: 0,
+    }
+}
+
+/// [`span`] with a numeric payload (rows, layer index, task count, …).
+#[inline]
+pub fn span_arg(name: &'static str, arg: u64) -> SpanGuard {
+    let mut g = span(name);
+    g.set_arg(arg);
+    g
+}
+
+/// True while the tracer is armed.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+#[cold]
+fn record_slow(mut rec: SpanRec) {
+    let cap = ARMED.load(Ordering::Relaxed);
+    if cap == 0 {
+        // disarmed between construction and drop: drop the span
+        return;
+    }
+    // TLS may be gone during thread teardown; losing that span is fine.
+    let _ = LOCAL_RING.try_with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let ring = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                cap: cap.max(2),
+                slots: Vec::with_capacity(cap.max(2)),
+                head: 0,
+            }));
+            lock(registry()).push(Arc::clone(&ring));
+            ring
+        });
+        let mut ring = lock(ring);
+        rec.tid = ring.tid;
+        ring.record(rec);
+    });
+}
+
+/// Arm the tracer with [`DEFAULT_RING_CAPACITY`] spans per thread.
+pub fn arm() {
+    arm_with_capacity(DEFAULT_RING_CAPACITY);
+}
+
+/// Arm with an explicit per-thread ring capacity (minimum 2). Rings
+/// already created keep their original capacity; `arm` before the run
+/// of interest to size them consistently.
+pub fn arm_with_capacity(capacity: usize) {
+    epoch(); // pin t=0 at arm time, not at the first span
+    ARMED.store(capacity.max(2), Ordering::Relaxed);
+}
+
+/// Disarm: span sites return to the one-relaxed-load fast path.
+/// Recorded spans stay resident until [`drain`] or [`reset`].
+pub fn disarm() {
+    ARMED.store(0, Ordering::Relaxed);
+}
+
+/// Spans lost to ring wraparound since the last [`reset`].
+pub fn dropped_spans() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Snapshot and clear every thread's ring. Spans come back sorted by
+/// start time across threads.
+pub fn drain() -> Vec<SpanRec> {
+    let rings = lock(registry());
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        let mut ring = lock(ring);
+        out.extend(ring.snapshot());
+        ring.clear();
+    }
+    out.sort_by_key(|s| s.start_ns);
+    out
+}
+
+/// Disarm, clear every ring and zero the dropped-span counter — the
+/// between-tests / between-runs reset.
+pub fn reset() {
+    disarm();
+    let _ = drain();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Serialize tests that arm the process-global tracer (same pattern as
+/// `failpoint::serial_guard`).
+pub fn serial_guard() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    lock(GUARD.get_or_init(|| Mutex::new(())))
+}
+
+/// Format drained spans as Chrome trace-event JSON (the "JSON array
+/// format"): one complete `"X"` event per span with microsecond
+/// timestamps, preceded by `thread_name` metadata so Perfetto labels
+/// the rows. `dropped` (from [`dropped_spans`]) lands in the trailing
+/// `otherData` block.
+pub fn chrome_trace_json(spans: &[SpanRec], dropped: u64) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(96 * spans.len() + 256);
+    out.push_str("{\"traceEvents\":[");
+    let mut tids: Vec<u32> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let mut first = true;
+    for tid in &tids {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"dmdtrain-{tid}\"}}}}"
+        );
+    }
+    for s in spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        // Chrome wants microseconds; keep sub-µs precision as a decimal.
+        let ts_us = s.start_ns as f64 / 1e3;
+        let dur_us = s.dur_ns as f64 / 1e3;
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{ts_us:.3},\"dur\":{dur_us:.3},\
+             \"pid\":1,\"tid\":{},\"args\":{{\"v\":{}}}}}",
+            escape(s.name),
+            s.tid,
+            s.arg
+        );
+    }
+    let _ = write!(
+        out,
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"producer\":\"dmdtrain\",\
+         \"dropped_spans\":{dropped}}}}}"
+    );
+    out
+}
+
+/// Drain the tracer and write the Chrome trace JSON to `path`.
+pub fn write_chrome_trace(path: &std::path::Path) -> anyhow::Result<(usize, u64)> {
+    let spans = drain();
+    let dropped = dropped_spans();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(&spans, dropped))?;
+    Ok((spans.len(), dropped))
+}
+
+/// Escape a span name for direct embedding in a JSON string literal.
+/// Names are static identifiers in practice; this keeps pathological
+/// ones well-formed anyway.
+fn escape(s: &str) -> String {
+    if s.chars().all(|c| c != '"' && c != '\\' && c >= ' ') {
+        return s.to_string();
+    }
+    let mut out = String::with_capacity(s.len() + 4);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if c < ' ' => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_span_is_inert() {
+        let _g = serial_guard();
+        reset();
+        {
+            let _s = span("noop");
+        }
+        assert!(drain().is_empty(), "disarmed spans must not record");
+        assert_eq!(dropped_spans(), 0);
+    }
+
+    #[test]
+    fn armed_span_records_name_and_duration() {
+        let _g = serial_guard();
+        reset();
+        arm_with_capacity(16);
+        {
+            let mut s = span_arg("unit_test_span", 7);
+            s.set_arg(9);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        disarm();
+        let spans = drain();
+        let rec = spans
+            .iter()
+            .find(|s| s.name == "unit_test_span")
+            .expect("span recorded");
+        assert!(rec.dur_ns >= 500_000, "~1ms sleep: {}ns", rec.dur_ns);
+        assert_eq!(rec.arg, 9);
+        reset();
+    }
+
+    #[test]
+    fn wraparound_drops_oldest_and_counts() {
+        let _g = serial_guard();
+        reset();
+        arm_with_capacity(4);
+        for _ in 0..10 {
+            let _s = span("wrap");
+        }
+        disarm();
+        let spans = drain();
+        let wraps: Vec<_> = spans.iter().filter(|s| s.name == "wrap").collect();
+        assert_eq!(wraps.len(), 4, "ring keeps exactly its capacity");
+        assert!(dropped_spans() >= 6, "drops counted: {}", dropped_spans());
+        // chronological order preserved across the wrap
+        for w in wraps.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+        reset();
+    }
+
+    #[test]
+    fn chrome_json_is_well_formed() {
+        let _g = serial_guard();
+        reset();
+        arm_with_capacity(64);
+        {
+            let _a = span_arg("outer", 2);
+            let _b = span("inner");
+        }
+        disarm();
+        let spans = drain();
+        let json = chrome_trace_json(&spans, dropped_spans());
+        let doc = crate::util::jsonl::parse(&json).expect("valid JSON");
+        let events = doc
+            .get("traceEvents")
+            .and_then(crate::util::jsonl::Json::as_arr)
+            .expect("traceEvents array");
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(crate::util::jsonl::Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        for e in &xs {
+            assert!(e.get("ts").and_then(crate::util::jsonl::Json::as_f64).is_some());
+            assert!(e.get("dur").and_then(crate::util::jsonl::Json::as_f64).is_some());
+            assert!(e.get("name").and_then(crate::util::jsonl::Json::as_str).is_some());
+        }
+        reset();
+    }
+
+    #[test]
+    fn cross_thread_spans_all_drain() {
+        let _g = serial_guard();
+        reset();
+        arm_with_capacity(64);
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let _s = span("worker_span");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        {
+            let _s = span("main_span");
+        }
+        disarm();
+        let spans = drain();
+        assert_eq!(spans.iter().filter(|s| s.name == "worker_span").count(), 3);
+        assert_eq!(spans.iter().filter(|s| s.name == "main_span").count(), 1);
+        reset();
+    }
+}

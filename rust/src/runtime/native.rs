@@ -296,6 +296,9 @@ impl NativeExecutable {
         ws.ensure(arch, rows);
 
         // ---- forward: every activation into the workspace ------------
+        // (span cost when tracing is disarmed: one relaxed atomic load —
+        // the zero-allocation contract of tests/workspace_alloc.rs holds)
+        let _fwd = crate::obs::span("forward");
         for l in 0..layers {
             let (fi, fo) = arch.layer_shape(l);
             let w = &params[2 * l];
@@ -315,11 +318,13 @@ impl NativeExecutable {
                 tail[0].data_mut(),
             );
         }
+        drop(_fwd);
         let pred = &ws.acts[layers - 1];
         let loss = pred.mse(y);
 
         // ---- δ_L = 2 (pred − y) / (batch · n_out): fused residual
         //      producer straight into the ping buffer (linear head) ----
+        let _bwd = crate::obs::span("backward");
         let n_out = arch.output_dim();
         let scale = 2.0f32 / pred.len() as f32;
         gemm::residual_scale(

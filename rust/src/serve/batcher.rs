@@ -215,6 +215,9 @@ fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
                 Ok(Msg::Shutdown) | Err(_) => break 'outer,
             },
         };
+        // span covers the open window plus the coalesced dispatch;
+        // arg carries the final row count of the batch
+        let mut window_span = crate::obs::span("batch_window");
         let mut rows = head.inputs.rows();
         let mut batch = vec![head];
         let deadline = Instant::now() + cfg.window;
@@ -243,7 +246,9 @@ fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
                 }
             }
         }
+        window_span.set_arg(rows as u64);
         dispatch(batch, rows, metrics);
+        drop(window_span);
         if stop {
             // answer everything still queued, one dispatch each
             while let Some(j) = carry.pop_front() {

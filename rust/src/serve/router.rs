@@ -45,7 +45,7 @@ pub fn handle(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Respo
     let resp = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(state),
         ("GET", "/models") => models(state),
-        ("GET", "/metrics") => Response::text(200, state.metrics.render_prometheus()),
+        ("GET", "/metrics") => metrics_page(state),
         ("POST", "/reload") => reload(state),
         ("POST", "/predict") => predict(state, batcher, req),
         ("GET", "/predict") | ("GET", "/reload") => {
@@ -57,6 +57,15 @@ pub fn handle(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Respo
         state.metrics.http_errors.inc();
     }
     resp
+}
+
+/// Prometheus exposition: the serve-side families plus the process-wide
+/// trainer registry — a server embedded in a training process (or one
+/// that trained models in-process) exposes both on one page.
+fn metrics_page(state: &AppState) -> Response {
+    let mut body = state.metrics.render_prometheus();
+    body.push_str(&crate::metrics::core::TrainMetrics::global().render_prometheus());
+    Response::text(200, body)
 }
 
 fn healthz(state: &AppState) -> Response {

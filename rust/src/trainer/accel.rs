@@ -24,7 +24,8 @@
 
 use crate::config::DmdParams;
 use crate::dmd::{extrapolate_all_layers, SnapshotBuffer};
-use crate::metrics::DmdEvent;
+use crate::metrics::core::TrainMetrics;
+use crate::metrics::{DmdEvent, JumpDiagnostics, LayerDiagnostics};
 use crate::model::Arch;
 use crate::optim::WeightExtrapolation;
 use crate::rng::Rng;
@@ -228,7 +229,8 @@ fn record_layers(buffers: &mut [SnapshotBuffer], arch: &Arch, params: &[Tensor],
 /// timing and stats accounting. `solve` performs the surrogate
 /// extrapolation + write-back (and must clear its buffers — the clear
 /// is part of the timed solve, as in the original loop), returning
-/// (written-back layers, total rank, failed layers).
+/// (written-back layers, total rank, failed layers, per-layer spectral
+/// diagnostics).
 ///
 /// Fault tolerance: when measurement is on, a jump whose *after*
 /// training MSE comes back non-finite is rolled back to the pre-jump
@@ -239,11 +241,20 @@ fn run_guarded_jump(
     stats: &mut AccelReport,
     params: &mut Vec<Tensor>,
     ctx: &mut JumpCtx<'_>,
-    solve: impl FnOnce(&mut Vec<Tensor>, &mut Rng, &mut Profile) -> (usize, usize, usize),
+    solve: impl FnOnce(
+        &mut Vec<Tensor>,
+        &mut Rng,
+        &mut Profile,
+    ) -> (usize, usize, usize, Vec<LayerDiagnostics>),
 ) -> anyhow::Result<DmdEvent> {
+    let _jump_span = crate::obs::span("jump");
+    let metrics = TrainMetrics::global();
     let need_measure = ctx.measure_enabled || guard.is_some();
     let (before_tr, before_te) = if need_measure {
-        ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?
+        let t0 = std::time::Instant::now();
+        let r = ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?;
+        metrics.dmd_measure_seconds.observe(t0.elapsed().as_secs_f64());
+        r
     } else {
         (f64::NAN, f64::NAN)
     };
@@ -253,14 +264,19 @@ fn run_guarded_jump(
     // extension)
     let saved = need_measure.then(|| params.clone());
     let t0 = std::time::Instant::now();
-    let (accepted, total_rank, failed) = solve(params, &mut *ctx.rng, &mut *ctx.profile);
+    let (written, total_rank, failed, layers) = solve(params, &mut *ctx.rng, &mut *ctx.profile);
     let solve_secs = t0.elapsed().as_secs_f64();
+    metrics.dmd_solve_seconds.observe(solve_secs);
 
     let (mut rel_train, mut rel_test) = (f64::NAN, f64::NAN);
+    let (mut after_tr, mut after_te) = (f64::NAN, f64::NAN);
     let mut rejected = false;
     if need_measure {
-        let (after_tr, after_te) =
-            ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?;
+        let t1 = std::time::Instant::now();
+        let (a_tr, a_te) = ctx.profile.scope("dmd_measure", || (ctx.measure)(&params[..]))?;
+        metrics.dmd_measure_seconds.observe(t1.elapsed().as_secs_f64());
+        after_tr = a_tr;
+        after_te = a_te;
         rel_train = after_tr / before_tr;
         rel_test = after_te / before_te;
         let guard_rejects = matches!(guard, Some(factor) if !(after_tr <= before_tr * factor));
@@ -272,9 +288,15 @@ fn run_guarded_jump(
         }
     }
     stats.events += 1;
-    stats.accepted_layers += accepted;
+    stats.accepted_layers += written;
     stats.rejected_events += rejected as usize;
     stats.degraded_layers += failed;
+    if rejected {
+        metrics.jumps_rejected.inc();
+    } else {
+        metrics.jumps_accepted.inc();
+    }
+    metrics.jump_layers_degraded.add(failed as u64);
     Ok(DmdEvent {
         epoch: ctx.epoch,
         rel_train,
@@ -282,6 +304,16 @@ fn run_guarded_jump(
         solve_secs,
         total_rank,
         failed_layers: failed,
+        accepted: !rejected,
+        // the *measured* after-losses are kept even on rollback — a
+        // rejected jump's diagnostics show how bad the proposal was
+        diagnostics: JumpDiagnostics {
+            layers,
+            before_train: before_tr,
+            before_test: before_te,
+            after_train: after_tr,
+            after_test: after_te,
+        },
     })
 }
 
@@ -320,9 +352,13 @@ impl Accelerator for DmdAccelerator {
 
     fn observe(&mut self, step: usize, arch: &Arch, params: &[Tensor], profile: &mut Profile) {
         let buffers = &mut self.buffers;
+        let t0 = std::time::Instant::now();
         profile.scope("snapshot_record", || {
             record_layers(buffers, arch, params, step);
         });
+        let metrics = TrainMetrics::global();
+        metrics.snapshot_seconds.observe(t0.elapsed().as_secs_f64());
+        metrics.snapshot_columns.add(arch.num_layers() as u64);
     }
 
     fn ready(&self) -> bool {
@@ -358,6 +394,7 @@ impl Accelerator for DmdAccelerator {
                 let mut accepted = 0usize;
                 let mut total_rank = 0usize;
                 let mut failed = 0usize;
+                let mut diags = Vec::with_capacity(outcomes.len());
                 profile.scope("dmd_assign", || {
                     for out in &outcomes {
                         match &out.result {
@@ -367,6 +404,13 @@ impl Accelerator for DmdAccelerator {
                                 arch.unflatten_layer(params, out.layer, &w);
                                 accepted += 1;
                                 total_rank += o.rank;
+                                diags.push(LayerDiagnostics {
+                                    layer: out.layer,
+                                    rank: o.rank,
+                                    eig_moduli: o.eigenvalues.iter().map(|l| l.abs()).collect(),
+                                    energy_fracs: o.energy_fracs.clone(),
+                                    residual: o.residual,
+                                });
                             }
                             _ => {
                                 // per-layer failure (degenerate
@@ -381,7 +425,7 @@ impl Accelerator for DmdAccelerator {
                 for buf in buffers.iter_mut() {
                     buf.clear();
                 }
-                (accepted, total_rank, failed)
+                (accepted, total_rank, failed, diags)
             },
         )?;
         Ok(Some(ev))
@@ -449,9 +493,13 @@ impl Accelerator for LineFitAccelerator {
 
     fn observe(&mut self, step: usize, arch: &Arch, params: &[Tensor], profile: &mut Profile) {
         let buffers = &mut self.buffers;
+        let t0 = std::time::Instant::now();
         profile.scope("snapshot_record", || {
             record_layers(buffers, arch, params, step);
         });
+        let metrics = TrainMetrics::global();
+        metrics.snapshot_seconds.observe(t0.elapsed().as_secs_f64());
+        metrics.snapshot_columns.add(arch.num_layers() as u64);
     }
 
     fn ready(&self) -> bool {
@@ -499,8 +547,9 @@ impl Accelerator for LineFitAccelerator {
                     buf.clear();
                 }
                 // a line fit retains slope + intercept per weight —
-                // report 2 "modes" per written-back layer
-                (accepted, 2 * accepted, failed)
+                // report 2 "modes" per written-back layer; it has no
+                // spectrum, so the diagnostics carry no layer entries
+                (accepted, 2 * accepted, failed, Vec::new())
             },
         )?;
         Ok(Some(ev))
@@ -629,6 +678,12 @@ mod tests {
         };
         let ev = accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap();
         assert!(ev.is_some(), "full buffer must fire");
+        let ev = ev.unwrap();
+        // spectral diagnostics ride along even when measurement is off
+        assert_eq!(ev.diagnostics.layers.len(), 1);
+        assert!(!ev.diagnostics.layers[0].eig_moduli.is_empty());
+        assert!(ev.diagnostics.before_train.is_nan(), "unmeasured jump");
+        assert!(ev.accepted);
         // ω = 0 ⇒ w ← w_m exactly: parameters unchanged to the bit
         for (p, b) in params.iter().zip(&before) {
             assert_eq!(p.data(), &b[..], "ω=0 jump moved the weights");
@@ -718,6 +773,10 @@ mod tests {
         assert_eq!(calls.get(), 2, "guard must measure before and after");
         assert_eq!(ev.rel_train, 1.0, "rejected events report rel = 1");
         assert_eq!(ev.rel_test, 1.0);
+        assert!(!ev.accepted, "guard rejection must flag the event");
+        // measured losses are preserved so a rejected jump is auditable
+        assert_eq!(ev.diagnostics.before_train, 1.0);
+        assert_eq!(ev.diagnostics.after_train, 10.0);
         for (p, b) in params.iter().zip(&before) {
             assert_eq!(p.data(), &b[..], "guard did not restore the weights");
         }
@@ -746,6 +805,9 @@ mod tests {
         let ev = accel.maybe_jump(&arch, &mut params, &mut ctx).unwrap().unwrap();
         assert_eq!(ev.rel_train, 0.25);
         assert_eq!(ev.rel_test, 0.5);
+        assert!(ev.accepted);
+        assert_eq!(ev.diagnostics.after_train, 0.25);
+        assert!(ev.diagnostics.max_eig_modulus().is_finite());
         let after: Vec<Vec<f32>> = params.iter().map(|p| p.data().to_vec()).collect();
         assert_ne!(before, after, "accepted jump must keep the new weights");
         assert_eq!(accel.report().rejected_events, 0);

@@ -40,8 +40,8 @@ pub use checkpoint::{
     FP_SAVE_RESUME,
 };
 pub use observe::{
-    CheckpointEvery, EarlyStop, EpochEvent, JsonlMetrics, LogObserver, Observer, Signal,
-    StepEvent, WeightTrace,
+    CheckpointEvery, EarlyStop, EpochEvent, JsonlMetrics, JumpDiagnostics, LogObserver, Observer,
+    Signal, StepEvent, WeightTrace,
 };
 pub use session::{
     EpochSummary, SessionBuilder, SessionState, StepOutcome, TrainReport, TrainSession,

@@ -14,8 +14,12 @@
 //! * [`EarlyStop`] — stop after `patience` epochs without the train MSE
 //!   improving by more than `min_delta`.
 //! * [`CheckpointEvery`] — periodic parameter checkpoints every N epochs.
-//! * [`JsonlMetrics`] — stream per-epoch metrics and jump events as
+//! * [`JsonlMetrics`] — stream per-epoch metrics (with per-phase
+//!   wall-time deltas) and jump events (with spectral diagnostics) as
 //!   JSONL for live monitoring (`tail -f`).
+//! * [`JumpDiagnostics`] — collect every jump's [`DmdEvent`] (spectra,
+//!   energies, residuals, pre/post losses) for post-run retrieval, with
+//!   an optional per-jump stderr line.
 //! * [`WeightTrace`] — the Fig-1 per-layer weight recorder, sampling
 //!   the first ≤32 components straight off the (w, b) tensors (no
 //!   per-step `flatten_layer` allocation).
@@ -26,6 +30,8 @@ use crate::metrics::DmdEvent;
 use crate::model::Arch;
 use crate::tensor::Tensor;
 use crate::util::jsonl::{Json, JsonlWriter};
+use crate::util::timer::Profile;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Per-step event payload.
@@ -50,6 +56,9 @@ pub struct EpochEvent<'a> {
     pub params: &'a [Tensor],
     pub arch: &'a Arch,
     pub artifact: &'a str,
+    /// Cumulative phase timings of the session so far (observers diff
+    /// consecutive epochs to get per-epoch phase breakdowns).
+    pub profile: &'a Profile,
 }
 
 /// Epoch verdict: keep going or stop the run (early stopping).
@@ -173,14 +182,24 @@ impl Observer for CheckpointEvery {
 // ---------------------------------------------------------------------
 
 /// Stream per-epoch metrics (and jump events) as JSONL.
+///
+/// Epoch lines carry a `phase_secs` object with this epoch's wall time
+/// per profile phase (the delta of the session's cumulative profile
+/// since the previous epoch line); jump lines carry the spectral
+/// diagnostics. All keys beyond the original set are additive, and
+/// non-finite values serialize as `null` — existing consumers keep
+/// parsing.
 pub struct JsonlMetrics {
     w: JsonlWriter,
+    /// Cumulative (secs, calls) per phase at the previous epoch line.
+    last_phase: BTreeMap<String, (f64, u64)>,
 }
 
 impl JsonlMetrics {
     pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
         Ok(JsonlMetrics {
             w: JsonlWriter::create(path)?,
+            last_phase: BTreeMap::new(),
         })
     }
 }
@@ -195,18 +214,31 @@ fn num_or_null(v: f64) -> Json {
 
 impl Observer for JsonlMetrics {
     fn on_epoch(&mut self, ev: &EpochEvent<'_>) -> anyhow::Result<Signal> {
+        // per-epoch phase breakdown: the delta of the cumulative
+        // profile since the last epoch line
+        let mut phases = BTreeMap::new();
+        for (name, total, calls) in ev.profile.entries() {
+            let secs = total.as_secs_f64();
+            let (last_s, last_c) = self.last_phase.get(name).copied().unwrap_or((0.0, 0));
+            if calls > last_c {
+                phases.insert(name.to_string(), Json::Num((secs - last_s).max(0.0)));
+            }
+            self.last_phase.insert(name.to_string(), (secs, calls));
+        }
         self.w.event(&[
             ("type", Json::Str("epoch".into())),
             ("epoch", Json::Num(ev.epoch as f64)),
             ("train_mse", num_or_null(ev.train_mse)),
             ("test_mse", num_or_null(ev.test_mse)),
             ("dmd", Json::Bool(ev.dmd_fired)),
+            ("phase_secs", Json::Obj(phases)),
         ])?;
         self.w.flush()?;
         Ok(Signal::Continue)
     }
 
     fn on_jump(&mut self, ev: &DmdEvent) {
+        let d = &ev.diagnostics;
         // best-effort: a full disk must not abort training
         let _ = self.w.event(&[
             ("type", Json::Str("jump".into())),
@@ -216,7 +248,70 @@ impl Observer for JsonlMetrics {
             ("solve_secs", Json::Num(ev.solve_secs)),
             ("total_rank", Json::Num(ev.total_rank as f64)),
             ("failed_layers", Json::Num(ev.failed_layers as f64)),
+            ("accepted", Json::Bool(ev.accepted)),
+            ("max_eig_modulus", num_or_null(d.max_eig_modulus())),
+            ("min_spectral_gap", num_or_null(d.min_spectral_gap())),
+            ("mean_energy_captured", num_or_null(d.mean_energy_captured())),
+            ("max_residual", num_or_null(d.max_residual())),
+            ("before_train", num_or_null(d.before_train)),
+            ("after_train", num_or_null(d.after_train)),
+            ("before_test", num_or_null(d.before_test)),
+            ("after_test", num_or_null(d.after_test)),
         ]);
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Collect every jump's full [`DmdEvent`] — spectra, POD energies,
+/// residuals and pre/post-jump losses — for post-run retrieval, with an
+/// optional one-line stderr summary per jump (`dmdtrain train` turns
+/// that on when `measure_dmd` is set; library callers read
+/// [`JumpDiagnostics::events`] back through the observer they
+/// registered).
+#[derive(Default)]
+pub struct JumpDiagnostics {
+    verbose: bool,
+    events: Vec<DmdEvent>,
+}
+
+impl JumpDiagnostics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Also print a per-jump diagnostic line to stderr.
+    pub fn verbose() -> Self {
+        JumpDiagnostics {
+            verbose: true,
+            events: Vec::new(),
+        }
+    }
+
+    /// Every jump observed so far, in firing order.
+    pub fn events(&self) -> &[DmdEvent] {
+        &self.events
+    }
+}
+
+impl Observer for JumpDiagnostics {
+    fn on_jump(&mut self, ev: &DmdEvent) {
+        if self.verbose {
+            let d = &ev.diagnostics;
+            eprintln!(
+                "[jump] epoch {:>5} {} rank {:>3} |λ|max {} gap {} energy {} resid {} \
+                 rel_train {}",
+                ev.epoch,
+                if ev.accepted { "accept" } else { "REJECT" },
+                ev.total_rank,
+                crate::util::fmt_f64(d.max_eig_modulus()),
+                crate::util::fmt_f64(d.min_spectral_gap()),
+                crate::util::fmt_f64(d.mean_energy_captured()),
+                crate::util::fmt_f64(d.max_residual()),
+                crate::util::fmt_f64(ev.rel_train),
+            );
+        }
+        self.events.push(ev.clone());
     }
 }
 
@@ -273,6 +368,11 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
 
+    fn empty_profile() -> &'static Profile {
+        static P: std::sync::OnceLock<Profile> = std::sync::OnceLock::new();
+        P.get_or_init(Profile::new)
+    }
+
     fn epoch_event<'a>(
         epoch: usize,
         train: f64,
@@ -288,6 +388,7 @@ mod tests {
             params,
             arch,
             artifact: "test",
+            profile: empty_profile(),
         }
     }
 
@@ -380,6 +481,31 @@ mod tests {
         assert_eq!(loaded, params);
     }
 
+    fn jump_event() -> DmdEvent {
+        DmdEvent {
+            epoch: 0,
+            rel_train: 0.8,
+            rel_test: f64::NAN,
+            solve_secs: 0.01,
+            total_rank: 4,
+            failed_layers: 0,
+            accepted: true,
+            diagnostics: crate::metrics::JumpDiagnostics {
+                layers: vec![crate::metrics::LayerDiagnostics {
+                    layer: 0,
+                    rank: 4,
+                    eig_moduli: vec![0.97, 0.8],
+                    energy_fracs: vec![0.9, 0.05],
+                    residual: 0.02,
+                }],
+                before_train: 1.0,
+                before_test: f64::NAN,
+                after_train: 0.8,
+                after_test: f64::NAN,
+            },
+        }
+    }
+
     #[test]
     fn jsonl_metrics_stream_parses_back() {
         let dir = std::env::temp_dir().join("dmdtrain_obs_jsonl_test");
@@ -391,14 +517,7 @@ mod tests {
             let mut jm = JsonlMetrics::create(&path).unwrap();
             let ev = epoch_event(0, 0.5, &params, &arch);
             jm.on_epoch(&ev).unwrap();
-            jm.on_jump(&DmdEvent {
-                epoch: 0,
-                rel_train: 0.8,
-                rel_test: f64::NAN,
-                solve_secs: 0.01,
-                total_rank: 4,
-                failed_layers: 0,
-            });
+            jm.on_jump(&jump_event());
         }
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
@@ -411,5 +530,54 @@ mod tests {
         let jump_line = crate::util::jsonl::parse(lines[1]).unwrap();
         assert_eq!(jump_line.get("type").unwrap().as_str(), Some("jump"));
         assert_eq!(jump_line.get("rel_train").unwrap().as_f64(), Some(0.8));
+        // additive diagnostics keys
+        assert_eq!(jump_line.get("accepted"), Some(&Json::Bool(true)));
+        assert_eq!(jump_line.get("max_eig_modulus").unwrap().as_f64(), Some(0.97));
+        assert_eq!(jump_line.get("before_train").unwrap().as_f64(), Some(1.0));
+        // NaN diagnostics keep the null convention
+        assert_eq!(jump_line.get("before_test"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn jsonl_epoch_lines_carry_phase_deltas() {
+        use std::time::Duration;
+        let dir = std::env::temp_dir().join("dmdtrain_obs_jsonl_phase_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics_phase.jsonl");
+        let arch = Arch::new(vec![1, 1]).unwrap();
+        let params = arch.init_params(&mut Rng::new(0));
+        let mut profile = Profile::new();
+        {
+            let mut jm = JsonlMetrics::create(&path).unwrap();
+            profile.add("backprop_exec", Duration::from_millis(100));
+            let mut ev = epoch_event(0, 0.5, &params, &arch);
+            ev.profile = &profile;
+            jm.on_epoch(&ev).unwrap();
+            // epoch 1 adds 50ms more backprop: the delta is 0.05, not 0.15
+            profile.add("backprop_exec", Duration::from_millis(50));
+            let mut ev = epoch_event(1, 0.4, &params, &arch);
+            ev.profile = &profile;
+            jm.on_epoch(&ev).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let first = crate::util::jsonl::parse(lines[0]).unwrap();
+        let d0 = first.get("phase_secs").unwrap().get("backprop_exec").unwrap();
+        assert!((d0.as_f64().unwrap() - 0.1).abs() < 1e-9);
+        let second = crate::util::jsonl::parse(lines[1]).unwrap();
+        let d1 = second.get("phase_secs").unwrap().get("backprop_exec").unwrap();
+        assert!((d1.as_f64().unwrap() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jump_diagnostics_observer_collects_events() {
+        let mut jd = JumpDiagnostics::new();
+        jd.on_jump(&jump_event());
+        jd.on_jump(&jump_event());
+        assert_eq!(jd.events().len(), 2);
+        let d = &jd.events()[0].diagnostics;
+        assert_eq!(d.layers.len(), 1);
+        assert!((d.max_eig_modulus() - 0.97).abs() < 1e-12);
+        assert!((d.layers[0].energy_captured() - 0.95).abs() < 1e-12);
     }
 }

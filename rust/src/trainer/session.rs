@@ -48,6 +48,7 @@ use super::observe::{
 };
 use crate::config::{AccelKind, TrainConfig};
 use crate::data::{Batcher, Dataset};
+use crate::metrics::core::TrainMetrics;
 use crate::metrics::{DmdStats, LossHistory, LossPoint};
 use crate::model::Arch;
 use crate::optim::{self, Optimizer};
@@ -466,6 +467,7 @@ impl TrainSession {
     /// epoch and the recent loss history.
     #[cold]
     fn recover_from_divergence(&mut self, loss: f64) -> anyhow::Result<()> {
+        let _span = crate::obs::span_arg("recovery_rollback", self.step as u64);
         let (step, epoch) = (self.step, self.epoch);
         let pol = self.cfg.recovery;
         anyhow::ensure!(pol.enabled, "loss diverged at step {step}");
@@ -494,6 +496,7 @@ impl TrainSession {
             );
         }
         self.retries_used += 1;
+        TrainMetrics::global().recovery_rollbacks.inc();
         let restored_epoch = st.epoch as usize;
         self.restore(params, &st)?;
         // drop the history/event records of the epochs being replayed so
@@ -517,6 +520,10 @@ impl TrainSession {
         ds: &Dataset,
         pinned: Option<&DeviceBatch<'_>>,
     ) -> anyhow::Result<Option<StepOutcome>> {
+        // span + histogram cost when tracing is disarmed: one relaxed
+        // load and two clock reads — no allocation on the hot path
+        let _step_span = crate::obs::span_arg("train_step", self.step as u64 + 1);
+        let t_step = std::time::Instant::now();
         // --- backprop (fused workspace path: gradients land in the
         //     session-owned TrainWorkspace, zero steady-state alloc) ---
         let loss = if let Some(db) = pinned {
@@ -581,11 +588,18 @@ impl TrainSession {
             let opt = &mut self.optimizer;
             let params = &mut self.params;
             let grads = self.workspace.grads();
+            let t_opt = std::time::Instant::now();
             self.profile.scope("optim_update", || opt.step(params, grads));
+            TrainMetrics::global()
+                .optim_seconds
+                .observe(t_opt.elapsed().as_secs_f64());
         }
         self.step += 1;
         self.epoch_loss += loss;
         self.epoch_batches += 1;
+        let metrics = TrainMetrics::global();
+        metrics.steps.inc();
+        metrics.step_seconds.observe(t_step.elapsed().as_secs_f64());
 
         // --- observers ------------------------------------------------
         {
@@ -632,10 +646,10 @@ impl TrainSession {
                         measure: &mut measure,
                     };
                     if let Some(ev) = accel.maybe_jump(arch, params, &mut ctx)? {
-                        self.dmd_stats.push(ev);
                         for o in &mut self.observers {
                             o.on_jump(&ev);
                         }
+                        self.dmd_stats.push(ev);
                         self.epoch_jumped = true;
                         jumped = true;
                     }
@@ -668,8 +682,14 @@ impl TrainSession {
         let test_mse = if epoch % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
             let exe = &self.predict_exe;
             let params = &self.params;
-            self.profile
-                .scope("test_eval", || exe.mse_all(params, &ds.x_test, &ds.y_test))?
+            let t_eval = std::time::Instant::now();
+            let mse = self
+                .profile
+                .scope("test_eval", || exe.mse_all(params, &ds.x_test, &ds.y_test))?;
+            TrainMetrics::global()
+                .eval_seconds
+                .observe(t_eval.elapsed().as_secs_f64());
+            mse
         } else {
             f64::NAN
         };
@@ -691,6 +711,7 @@ impl TrainSession {
                 params: &self.params,
                 arch: &self.arch,
                 artifact: &self.cfg.artifact,
+                profile: &self.profile,
             };
             for o in &mut self.observers {
                 if o.on_epoch(&ev)? == Signal::Stop {
@@ -698,6 +719,7 @@ impl TrainSession {
                 }
             }
         }
+        TrainMetrics::global().epochs.inc();
         self.epoch += 1;
         if stop {
             self.stopped = true;
@@ -714,6 +736,7 @@ impl TrainSession {
     /// Run one full epoch (continuing a partially-stepped one, if the
     /// caller mixed raw [`TrainSession::step`] calls).
     pub fn run_epoch(&mut self, ds: &Dataset) -> anyhow::Result<EpochSummary> {
+        let _span = crate::obs::span_arg("epoch", self.epoch as u64);
         self.bind(ds)?;
         anyhow::ensure!(
             self.epoch < self.cfg.epochs,

@@ -141,6 +141,8 @@ impl WorkerPool {
             }
             return;
         }
+        // span covers queueing + the blocking join; arg = batch size
+        let _span = crate::obs::span_arg("pool_dispatch", tasks.len() as u64);
         let latch = Arc::new(Latch::new(tasks.len()));
         {
             let mut st = self.queue.state.lock().unwrap();

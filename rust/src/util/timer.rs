@@ -25,7 +25,12 @@ impl Stopwatch {
 /// Used by the trainer to attribute wall time to backprop execution,
 /// literal packing, DMD solves, metric evaluation, etc. (the paper's
 /// 1.41×-overhead analysis, EXPERIMENTS.md §Perf).
-#[derive(Default, Debug)]
+///
+/// [`Profile::scope`] doubles as a tracing span site: the same name and
+/// interval land in [`crate::obs`]'s ring buffers when the tracer is
+/// armed, so the aggregate table and the Chrome timeline come from one
+/// set of instrumentation points (disarmed cost: one relaxed load).
+#[derive(Default, Debug, Clone)]
 pub struct Profile {
     scopes: BTreeMap<String, (Duration, u64)>,
 }
@@ -35,8 +40,11 @@ impl Profile {
         Self::default()
     }
 
-    /// Time a closure under `name`.
-    pub fn scope<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+    /// Time a closure under `name`, also emitting an [`crate::obs`]
+    /// span. `name` is `&'static str` so the span records the pointer
+    /// without copying (every call site passes a literal).
+    pub fn scope<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let _span = crate::obs::span(name);
         let t0 = Instant::now();
         let out = f();
         self.add(name, t0.elapsed());
@@ -59,6 +67,13 @@ impl Profile {
 
     pub fn count(&self, name: &str) -> u64 {
         self.scopes.get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Iterate `(name, total, calls)` over every scope, sorted by name
+    /// (BTreeMap order) — the JSONL phase-timing stream and the sweep
+    /// wall-time breakdown read the profile through this.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, Duration, u64)> {
+        self.scopes.iter().map(|(k, (d, c))| (k.as_str(), *d, *c))
     }
 
     /// Merge another profile into this one (for per-thread profiles).

@@ -1,0 +1,271 @@
+//! Observability-layer integration: the span tracer's zero-allocation
+//! disarmed contract (counting allocator, mirroring workspace_alloc.rs),
+//! armed end-to-end tracing through a pooled DMD training run drained to
+//! well-formed Chrome trace JSON, ring wraparound accounting, and the
+//! Prometheus exposition of the trainer metric families.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use dmdtrain::config::{Config, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::metrics::core::TrainMetrics;
+use dmdtrain::obs;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::TrainSession;
+use dmdtrain::util;
+use dmdtrain::util::jsonl::Json;
+
+struct CountingAlloc;
+
+thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn record_alloc() {
+    let _ = TRACKING.try_with(|t| {
+        if t.get() {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record_alloc();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record_alloc();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record_alloc();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` with this thread's allocation counter armed.
+fn counted<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    ALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    let out = f();
+    TRACKING.with(|t| t.set(false));
+    (out, ALLOCS.with(|c| c.get()))
+}
+
+/// The disarmed contract: a span site costs one relaxed load and zero
+/// heap allocations — the same discipline `tests/workspace_alloc.rs`
+/// enforces on the training step with these spans compiled in.
+#[test]
+fn disarmed_spans_allocate_nothing() {
+    let _g = obs::serial_guard();
+    obs::reset();
+    let ((), allocs) = counted(|| {
+        for i in 0..10_000u64 {
+            let _s = obs::span("hot_site");
+            let _a = obs::span_arg("hot_site_arg", i);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "disarmed span sites allocated {allocs} times over 20k spans"
+    );
+    assert!(obs::drain().is_empty(), "disarmed spans must not record");
+}
+
+/// Armed steady state: after a thread's ring exists, recording more
+/// spans allocates nothing either (slots are overwritten in place).
+#[test]
+fn armed_steady_state_allocates_nothing_after_ring_creation() {
+    let _g = obs::serial_guard();
+    obs::reset();
+    obs::arm_with_capacity(64);
+    {
+        let _warm = obs::span("warm"); // creates + registers this thread's ring
+    }
+    let ((), allocs) = counted(|| {
+        for _ in 0..1_000 {
+            let _s = obs::span("steady");
+        }
+    });
+    obs::reset();
+    assert_eq!(
+        allocs, 0,
+        "armed steady-state recording allocated {allocs} times"
+    );
+}
+
+#[test]
+fn ring_wraparound_keeps_newest_and_counts_drops() {
+    let _g = obs::serial_guard();
+    obs::reset();
+    obs::arm_with_capacity(8);
+    for i in 0..50u64 {
+        let _s = obs::span_arg("wrap", i);
+    }
+    obs::disarm();
+    let spans: Vec<_> = obs::drain()
+        .into_iter()
+        .filter(|s| s.name == "wrap")
+        .collect();
+    assert_eq!(spans.len(), 8, "ring keeps exactly its capacity");
+    assert_eq!(obs::dropped_spans(), 42, "50 spans into 8 slots drop 42");
+    // the survivors are the newest spans, oldest-first
+    let args: Vec<u64> = spans.iter().map(|s| s.arg).collect();
+    assert_eq!(args, (42..50).collect::<Vec<u64>>());
+    obs::reset();
+}
+
+fn synthetic_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, 6, |r, c| {
+            let v: f64 = (0..6)
+                .map(|k| ((k + c + 1) as f64 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.3 * v) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+fn dmd_config(epochs: usize) -> TrainConfig {
+    let text = format!(
+        r#"
+[model]
+artifact = "test"
+[data]
+path = "unused"
+[train]
+epochs = {epochs}
+seed = 3
+eval_every = 5
+log_every = 0
+[adam]
+lr = 0.003
+[dmd]
+enabled = true
+m = 5
+s = 8
+"#
+    );
+    TrainConfig::from_config(&Config::parse(&text).unwrap()).unwrap()
+}
+
+/// End-to-end: arm, run a pooled DMD training session, drain to Chrome
+/// JSON, and check the file parses with the phase spans the acceptance
+/// criteria name (forward / backward / optimizer / dmd-solve / jump).
+#[test]
+fn armed_training_run_produces_well_formed_chrome_trace() {
+    let _g = obs::serial_guard();
+    obs::reset();
+    let rt = Runtime::cpu(util::repo_root().join("artifacts")).expect("runtime");
+    let ds = synthetic_dataset(16, 8, 2);
+    obs::arm();
+    let mut session = TrainSession::new(&rt, dmd_config(23)).unwrap();
+    let report = session.run(&ds).unwrap();
+    obs::disarm();
+
+    let dir = std::env::temp_dir().join("dmdtrain_obs_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    let (span_count, _dropped) = obs::write_chrome_trace(&path).unwrap();
+    assert!(span_count > 0, "armed run recorded no spans");
+    obs::reset();
+
+    // every accepted jump carries spectral diagnostics
+    assert_eq!(report.dmd_stats.events.len(), 4);
+    for e in &report.dmd_stats.events {
+        if e.accepted && e.failed_layers == 0 {
+            assert!(
+                !e.diagnostics.layers.is_empty(),
+                "accepted jump at epoch {} has no layer diagnostics",
+                e.epoch
+            );
+            assert!(e.diagnostics.max_eig_modulus().is_finite());
+        }
+    }
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = dmdtrain::util::jsonl::parse(&text).expect("trace file is valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for expected in [
+        "train_step",
+        "forward",
+        "backward",
+        "optim_update",
+        "dmd_solve",
+        "dmd_layer_solve",
+        "jump",
+        "epoch",
+        "snapshot_record",
+    ] {
+        assert!(
+            names.contains(&expected),
+            "trace missing '{expected}' spans (got: {:?})",
+            {
+                let mut uniq = names.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                uniq
+            }
+        );
+    }
+    // every complete event carries the fields Perfetto needs
+    for e in events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+    {
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        assert!(e.get("tid").and_then(Json::as_f64).is_some());
+    }
+}
+
+/// The trainer's Prometheus families render alongside whatever the run
+/// recorded — the same text the serve `/metrics` endpoint appends.
+#[test]
+fn prometheus_render_includes_train_and_dmd_families() {
+    let m = TrainMetrics::global();
+    m.steps.inc();
+    m.step_seconds.observe(0.001);
+    m.dmd_solve_seconds.observe(0.002);
+    let text = m.render_prometheus();
+    for family in [
+        "# TYPE dmdtrain_train_steps_total counter",
+        "# TYPE dmdtrain_train_epochs_total counter",
+        "# TYPE dmdtrain_dmd_jumps_accepted_total counter",
+        "# TYPE dmdtrain_dmd_jumps_rejected_total counter",
+        "# TYPE dmdtrain_recovery_rollbacks_total counter",
+        "# TYPE dmdtrain_train_step_seconds histogram",
+        "# TYPE dmdtrain_dmd_solve_seconds histogram",
+        "dmdtrain_train_step_seconds_count",
+    ] {
+        assert!(text.contains(family), "missing '{family}' in:\n{text}");
+    }
+}
