@@ -9,13 +9,22 @@
 //! (`trainer::accel::LineFitAccelerator`), all three runs go through the
 //! same `TrainSession` loop and differ *only* in `accel.kind`: exactly
 //! the "swap one component" comparison the API redesign promises.
+//!
+//! A second arm sweeps the DMD-accelerated loop across every registered
+//! workload (ADR regression, transient-flow ROM, Blasius surrogate) —
+//! tiny datagen + short train each — and writes the per-workload wall
+//! times, losses and physical eval metrics to `BENCH_workloads.json`
+//! (uploaded by CI with the other perf artifacts).
 
 mod common;
 
-use dmdtrain::config::AccelKind;
+use dmdtrain::config::{AccelKind, Config, DatagenConfig, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::model::Arch;
 use dmdtrain::runtime::Runtime;
 use dmdtrain::trainer::TrainSession;
 use dmdtrain::util;
+use dmdtrain::workload;
 
 fn main() -> anyhow::Result<()> {
     let cfg = common::config("quickstart");
@@ -74,5 +83,124 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\npaper's expectation: DMD < plain; line fit unreliable (coherence broken)");
+
+    workload_arm(&runtime)?;
+    Ok(())
+}
+
+/// Per-workload DMD arm: tiny datagen + short accelerated train for
+/// every registered workload, physical eval metrics included.
+fn workload_arm(runtime: &Runtime) -> anyhow::Result<()> {
+    let fast = common::fast_mode();
+    let epochs = if fast { 80 } else { 300 };
+    // (workload, artifact sized to its dims, datagen shrunk to bench scale)
+    let arms: Vec<(&str, &str, DatagenConfig)> = vec![
+        (
+            "adr",
+            "quickstart",
+            DatagenConfig {
+                nx: if fast { 32 } else { 48 },
+                ny: if fast { 16 } else { 24 },
+                n_obs: 64,
+                n_samples: if fast { 60 } else { 250 },
+                ..Default::default()
+            },
+        ),
+        (
+            "rom",
+            "rom",
+            DatagenConfig {
+                nx: 64,
+                n_samples: if fast { 120 } else { 400 },
+                ..Default::default()
+            },
+        ),
+        (
+            "blasius",
+            "blasius",
+            DatagenConfig {
+                n_samples: if fast { 16 } else { 48 },
+                n_obs: if fast { 24 } else { 48 },
+                ..Default::default()
+            },
+        ),
+    ];
+
+    println!("\nworkload arm — DMD-accelerated train per workload, {epochs} epochs");
+    println!(
+        "{:<10} {:>10} {:>10} {:>14} {:>14} {:>8}",
+        "workload", "datagen s", "train s", "train MSE", "test MSE", "events"
+    );
+    let mut rows: Vec<String> = Vec::new();
+    for (name, artifact, mut dg) in arms {
+        let w = workload::get(name)?;
+        let ds_path = common::out_dir("bench_workloads").join(format!("{name}.dmdt"));
+        dg.out = ds_path.to_string_lossy().into_owned();
+        let report = w.generate(&dg, 8)?;
+        let ds = Dataset::load(&ds_path)?;
+
+        let toml = format!(
+            r#"
+[workload]
+name = "{name}"
+[model]
+artifact = "{artifact}"
+[data]
+path = "{}"
+[train]
+epochs = {epochs}
+seed = 0
+eval_every = {epochs}
+log_every = 0
+[dmd]
+enabled = true
+m = 8
+s = 30
+"#,
+            ds_path.to_string_lossy()
+        );
+        let cfg = TrainConfig::from_config(&Config::parse(&toml)?)?;
+        let t0 = std::time::Instant::now();
+        let run = TrainSession::new(runtime, cfg)?.run(&ds)?;
+        let train_s = t0.elapsed().as_secs_f64();
+
+        let exe = runtime.load(&format!("predict_{artifact}"))?;
+        let arch = Arch::new(exe.entry().arch.clone())?;
+        let mut predictor = workload::physical_predictor(&arch, &run.final_params, &ds.scaling);
+        let metrics = w.eval(&ds, &mut predictor)?;
+
+        let final_train = run.history.final_train().unwrap();
+        let final_test = run.history.final_test().unwrap();
+        println!(
+            "{name:<10} {:>10.2} {:>10.2} {:>14} {:>14} {:>8}",
+            report.wall_secs,
+            train_s,
+            util::fmt_f64(final_train),
+            util::fmt_f64(final_test),
+            run.accel.events
+        );
+        let metric_json = metrics
+            .iter()
+            .map(|m| format!(r#""{}": {:.6e}"#, m.name, m.value))
+            .collect::<Vec<_>>()
+            .join(", ");
+        rows.push(format!(
+            "{{\"workload\": \"{name}\", \"artifact\": \"{artifact}\", \"n_train\": {}, \
+             \"epochs\": {epochs}, \"events\": {}, \"datagen_wall_s\": {:.4}, \
+             \"train_wall_s\": {train_s:.4}, \"final_train_mse\": {final_train:.6e}, \
+             \"final_test_mse\": {final_test:.6e}, \"metrics\": {{{metric_json}}}}}",
+            ds.n_train(),
+            run.accel.events,
+            report.wall_secs
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"workloads\",\n  \"fast_mode\": {fast},\n  \"epochs\": {epochs},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        rows.join(",\n    ")
+    );
+    let out = util::repo_root().join("BENCH_workloads.json");
+    std::fs::write(&out, json)?;
+    println!("\nperf artifact → {}", out.display());
     Ok(())
 }

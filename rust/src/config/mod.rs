@@ -10,5 +10,5 @@ mod types;
 pub use toml::{Config, Value};
 pub use types::{
     AccelKind, AdamParams, DatagenConfig, DmdParams, Isolation, Projection, RecoveryPolicy,
-    ServeConfig, SgdParams, SweepConfig, TrainConfig,
+    ServeConfig, SgdParams, SweepConfig, TrainConfig, WorkloadSpec,
 };

@@ -63,6 +63,16 @@ impl Value {
             _ => None,
         }
     }
+
+    pub fn as_str_list(&self) -> Option<Vec<String>> {
+        match self {
+            Value::List(items) => items
+                .iter()
+                .map(|v| v.as_str().map(|s| s.to_string()))
+                .collect(),
+            _ => None,
+        }
+    }
 }
 
 /// Parsed config: `section.key → Value` (keys before any section header
@@ -306,6 +316,31 @@ lr = 0.001
         assert_eq!(c.usize_or("dmd.m", 0), 14);
         assert!((c.f64_or("dmd.filter_tol", 0.0) - 1e-10).abs() < 1e-24);
         assert_eq!(c.f64_or("adam.lr", 0.0), 0.001);
+    }
+
+    #[test]
+    fn string_lists_roundtrip() {
+        let c = Config::parse(r#"[sweep]
+workloads = ["adr:test:a.dmdt", "rom:rom:b.dmdt"]
+empty = []
+"#)
+        .unwrap();
+        assert_eq!(
+            c.get("sweep.workloads").unwrap().as_str_list().unwrap(),
+            vec!["adr:test:a.dmdt".to_string(), "rom:rom:b.dmdt".to_string()]
+        );
+        assert_eq!(
+            c.get("sweep.empty").unwrap().as_str_list().unwrap(),
+            Vec::<String>::new()
+        );
+        // mixed-type lists are not string lists
+        let c2 = Config::parse("x = [1, \"a\"]").unwrap();
+        assert!(c2.get("x").unwrap().as_str_list().is_none());
+        let round = Config::parse(&c.to_toml_string()).unwrap();
+        assert_eq!(
+            round.get("sweep.workloads").unwrap(),
+            c.get("sweep.workloads").unwrap()
+        );
     }
 
     #[test]

@@ -247,6 +247,10 @@ impl RecoveryPolicy {
 /// Full training-run configuration (one Algorithm-1 execution).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Workload name (`[workload] name` / `--workload`): which registered
+    /// training scenario this run belongs to (see `crate::workload`).
+    /// Defaults to "adr", the paper's pollutant regression.
+    pub workload: String,
     /// Manifest entry base name ("paper", "quickstart", …) selecting the
     /// AOT artifacts `train_step_<name>` / `predict_<name>`.
     pub artifact: String,
@@ -292,6 +296,7 @@ impl TrainConfig {
         let dmd_enabled = c.bool_or("dmd.enabled", true);
         let metrics_jsonl = c.str_or("train.metrics_jsonl", "");
         Ok(TrainConfig {
+            workload: c.str_or("workload.name", "adr"),
             artifact: c.str_or("model.artifact", "paper"),
             epochs: c.usize_or("train.epochs", 3000),
             seed: c.u64_or("train.seed", 0),
@@ -316,9 +321,14 @@ impl TrainConfig {
     }
 }
 
-/// Pollutant-dispersion data-generation configuration (paper §4/App. 1).
+/// Data-generation configuration. The field inventory is a superset
+/// across workloads: the ADR solver (paper §4/App. 1) reads everything;
+/// the rom/blasius workloads reuse the generic knobs (`n_samples`,
+/// `n_obs`, `train_frac`, `seed`, `out`, `nx`) and ignore the rest.
 #[derive(Clone, Debug)]
 pub struct DatagenConfig {
+    /// Workload that interprets this config (`[workload] name`).
+    pub workload: String,
     /// Structured-grid resolution for the ADR solver.
     pub nx: usize,
     pub ny: usize,
@@ -342,6 +352,7 @@ pub struct DatagenConfig {
 impl Default for DatagenConfig {
     fn default() -> Self {
         DatagenConfig {
+            workload: "adr".into(),
             nx: 96,
             ny: 48,
             n_obs: 2670,
@@ -369,6 +380,7 @@ impl DatagenConfig {
             }
         };
         DatagenConfig {
+            workload: c.str_or("workload.name", &d.workload),
             nx: c.usize_or("pde.nx", d.nx),
             ny: c.usize_or("pde.ny", d.ny),
             n_obs: c.usize_or("data.n_obs", d.n_obs),
@@ -466,10 +478,59 @@ impl Isolation {
     }
 }
 
+/// One workload arm of a multi-workload sweep: which scenario to train,
+/// on which artifact arch, from which dataset file.
+///
+/// TOML form is a colon-joined string — `"rom"`,
+/// `"rom:quickstart"` or `"rom:quickstart:runs/data/rom.dmdt"` — with
+/// omitted parts filled from the workload's registry defaults
+/// ([`crate::workload::Workload::default_artifact`] /
+/// `default_dataset`). [`WorkloadSpec::to_string`] always emits the
+/// fully resolved three-part form, so specs round-trip exactly through
+/// `to_worker_config`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub workload: String,
+    pub artifact: String,
+    pub dataset: String,
+}
+
+impl WorkloadSpec {
+    pub fn parse(s: &str) -> anyhow::Result<WorkloadSpec> {
+        let mut parts = s.splitn(3, ':');
+        let workload = parts.next().unwrap_or("").trim().to_string();
+        anyhow::ensure!(!workload.is_empty(), "empty workload spec '{s}'");
+        let w = crate::workload::get(&workload)?;
+        let pick = |part: Option<&str>, dft: &str| -> String {
+            match part.map(str::trim) {
+                Some(p) if !p.is_empty() => p.to_string(),
+                _ => dft.to_string(),
+            }
+        };
+        let artifact = pick(parts.next(), w.default_artifact());
+        let dataset = pick(parts.next(), w.default_dataset());
+        Ok(WorkloadSpec {
+            workload,
+            artifact,
+            dataset,
+        })
+    }
+}
+
+impl std::fmt::Display for WorkloadSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}", self.workload, self.artifact, self.dataset)
+    }
+}
+
 /// Sensitivity-sweep configuration (Fig 3): grids over m and s, plus the
 /// fault-tolerance policy for process-isolated cells.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
+    /// Explicit workload arms (`sweep.workloads`, a list of
+    /// [`WorkloadSpec`] strings). Empty = legacy single-workload mode:
+    /// the sweep runs `base`'s workload/artifact/dataset alone.
+    pub workloads: Vec<WorkloadSpec>,
     pub m_values: Vec<usize>,
     pub s_values: Vec<usize>,
     pub epochs: usize,
@@ -501,7 +562,15 @@ impl SweepConfig {
             .get("sweep.s_values")
             .and_then(super::toml::Value::as_usize_list)
             .unwrap_or_else(|| (5..=100).step_by(10).collect());
+        let workloads = match c.get("sweep.workloads").and_then(super::toml::Value::as_str_list) {
+            Some(specs) => specs
+                .iter()
+                .map(|s| WorkloadSpec::parse(s))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(SweepConfig {
+            workloads,
             m_values,
             s_values,
             epochs: c.usize_or("sweep.epochs", 300),
@@ -525,6 +594,7 @@ impl SweepConfig {
         let mut c = Config::default();
         let b = &self.base;
         let int = |v: usize| Value::Int(v as i64);
+        c.set("workload.name", Value::Str(b.workload.clone()));
         c.set("model.artifact", Value::Str(b.artifact.clone()));
         c.set("data.path", Value::Str(b.dataset.clone()));
         c.set("train.epochs", int(b.epochs));
@@ -595,7 +665,33 @@ impl SweepConfig {
         c.set("sweep.max_retries", int(self.max_retries));
         c.set("sweep.backoff_ms", Value::Int(self.backoff_ms as i64));
         c.set("sweep.isolation", Value::Str(self.isolation.as_str().to_string()));
+        if !self.workloads.is_empty() {
+            c.set(
+                "sweep.workloads",
+                Value::List(
+                    self.workloads
+                        .iter()
+                        .map(|w| Value::Str(w.to_string()))
+                        .collect(),
+                ),
+            );
+        }
         c
+    }
+
+    /// The workload arms this sweep actually runs: the explicit
+    /// `sweep.workloads` list, or a single arm synthesized from `base`
+    /// when none were given (legacy single-workload sweeps).
+    pub fn effective_workloads(&self) -> Vec<WorkloadSpec> {
+        if self.workloads.is_empty() {
+            vec![WorkloadSpec {
+                workload: self.base.workload.clone(),
+                artifact: self.base.artifact.clone(),
+                dataset: self.base.dataset.clone(),
+            }]
+        } else {
+            self.workloads.clone()
+        }
     }
 }
 
@@ -766,6 +862,58 @@ epochs = 50
     }
 
     #[test]
+    fn workload_specs_parse_and_resolve_defaults() {
+        // full three-part form passes through untouched
+        let full = WorkloadSpec::parse("rom:quickstart:runs/data/r.dmdt").unwrap();
+        assert_eq!(full.workload, "rom");
+        assert_eq!(full.artifact, "quickstart");
+        assert_eq!(full.dataset, "runs/data/r.dmdt");
+        assert_eq!(full.to_string(), "rom:quickstart:runs/data/r.dmdt");
+
+        // omitted parts fill from the registry defaults
+        let short = WorkloadSpec::parse("blasius").unwrap();
+        assert_eq!(short.artifact, "blasius");
+        assert_eq!(short.dataset, "runs/data/blasius.dmdt");
+        let two = WorkloadSpec::parse("adr:test").unwrap();
+        assert_eq!(two.artifact, "test");
+        assert_eq!(two.dataset, "runs/data/pollutant.dmdt");
+
+        // display → parse is the identity on resolved specs
+        assert_eq!(WorkloadSpec::parse(&short.to_string()).unwrap(), short);
+
+        assert!(WorkloadSpec::parse("").is_err());
+        assert!(WorkloadSpec::parse("turbulence").is_err(), "unknown workload");
+    }
+
+    #[test]
+    fn sweep_workloads_parse_and_default_to_base() {
+        let c = Config::parse(
+            "[data]\npath = \"x\"\n[sweep]\n\
+             workloads = [\"adr:test:a.dmdt\", \"rom\", \"blasius:quickstart\"]",
+        )
+        .unwrap();
+        let sc = SweepConfig::from_config(&c).unwrap();
+        assert_eq!(sc.workloads.len(), 3);
+        assert_eq!(sc.workloads[0].dataset, "a.dmdt");
+        assert_eq!(sc.workloads[1].artifact, "rom");
+        assert_eq!(sc.workloads[2].artifact, "quickstart");
+        assert_eq!(sc.effective_workloads(), sc.workloads);
+
+        // no sweep.workloads → one arm synthesized from base
+        let legacy = SweepConfig::from_config(&Config::parse("[data]\npath = \"x\"").unwrap())
+            .unwrap();
+        assert!(legacy.workloads.is_empty());
+        let arms = legacy.effective_workloads();
+        assert_eq!(arms.len(), 1);
+        assert_eq!(arms[0].workload, "adr");
+        assert_eq!(arms[0].artifact, "paper");
+        assert_eq!(arms[0].dataset, "x");
+
+        let bad = Config::parse("[data]\npath = \"x\"\n[sweep]\nworkloads = [\"nope\"]").unwrap();
+        assert!(SweepConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
     fn worker_config_roundtrips_exactly() {
         // the resolved config must survive serialize → parse → resolve
         // unchanged, including CLI overrides and awkward floats: this is
@@ -790,6 +938,23 @@ epochs = 50
         assert_eq!(format!("{sc2:?}"), format!("{back2:?}"));
         assert!(back2.base.dmd.is_none());
         assert!(back2.base.metrics_jsonl.is_none());
+
+        // explicit workload arms and a non-default base workload
+        // round-trip through the worker config too
+        let mut c3 = Config::parse(TEXT).unwrap();
+        c3.set("workload.name", super::super::toml::Value::Str("rom".into()));
+        c3.set(
+            "sweep.workloads",
+            super::super::toml::Value::List(vec![
+                super::super::toml::Value::Str("rom".into()),
+                super::super::toml::Value::Str("blasius:quickstart:b.dmdt".into()),
+            ]),
+        );
+        let sc3 = SweepConfig::from_config(&c3).unwrap();
+        assert_eq!(sc3.base.workload, "rom");
+        let text3 = sc3.to_worker_config().to_toml_string();
+        let back3 = SweepConfig::from_config(&Config::parse(&text3).unwrap()).unwrap();
+        assert_eq!(format!("{sc3:?}"), format!("{back3:?}"));
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! The durable sweep run ledger: one CRC-sealed JSON record per line,
 //! rewritten crash-safely through [`atomic_write`] on every append.
 //!
-//! Line 1 is a `"kind":"sweep"` header identifying the grid (m values,
-//! s values, epochs, seed); every later line is a `"kind":"cell"`
+//! Line 1 is a `"kind":"sweep"` header identifying the grid (workload
+//! arms, m values, s values, epochs, seed); every later line is a `"kind":"cell"`
 //! outcome record. Each record carries a `crc` field: the CRC-32 of its
 //! own canonical JSON encoding with the `crc` key removed. Because the
 //! encoder is deterministic (object keys sort via `BTreeMap`), sealing
@@ -36,6 +36,10 @@ pub const LEDGER_FAILPOINT: &str = "sweep.ledger.partial";
 /// The grid-identity header (ledger line 1).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LedgerHeader {
+    /// Workload arms as resolved `workload:artifact:dataset` spec
+    /// strings. Empty only for pre-workload ledgers, which can only
+    /// have come from a single-arm sweep.
+    pub workloads: Vec<String>,
     pub m_values: Vec<usize>,
     pub s_values: Vec<usize>,
     pub epochs: usize,
@@ -45,6 +49,11 @@ pub struct LedgerHeader {
 impl LedgerHeader {
     pub fn of(sweep: &SweepConfig) -> Self {
         LedgerHeader {
+            workloads: sweep
+                .effective_workloads()
+                .iter()
+                .map(|w| w.to_string())
+                .collect(),
             m_values: sweep.m_values.clone(),
             s_values: sweep.s_values.clone(),
             epochs: sweep.epochs,
@@ -56,6 +65,15 @@ impl LedgerHeader {
         let ints = |vs: &[usize]| Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect());
         let mut m = BTreeMap::new();
         m.insert("kind".to_string(), Json::Str("sweep".to_string()));
+        m.insert(
+            "workloads".to_string(),
+            Json::Arr(
+                self.workloads
+                    .iter()
+                    .map(|w| Json::Str(w.clone()))
+                    .collect(),
+            ),
+        );
         m.insert("m_values".to_string(), ints(&self.m_values));
         m.insert("s_values".to_string(), ints(&self.s_values));
         m.insert("epochs".to_string(), Json::Num(self.epochs as f64));
@@ -75,6 +93,17 @@ impl LedgerHeader {
                 .ok_or_else(|| anyhow::anyhow!("ledger header missing '{key}'"))
         };
         Ok(LedgerHeader {
+            // additive: absent in pre-workload ledgers
+            workloads: j
+                .get("workloads")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default(),
             m_values: ints("m_values")?,
             s_values: ints("s_values")?,
             epochs: j
@@ -159,11 +188,16 @@ impl Ledger {
         let header_line = raw_lines
             .next()
             .ok_or_else(|| anyhow::anyhow!("sweep ledger {} is empty", path.display()))?;
-        let on_disk = LedgerHeader::from_json(&unseal(header_line)?)
+        let mut on_disk = LedgerHeader::from_json(&unseal(header_line)?)
             .map_err(|e| anyhow::anyhow!("sweep ledger {}: {e}", path.display()))?;
+        // a pre-workload ledger carries no arm list; the only sweep
+        // shape it can describe is a single arm, so accept exactly that
+        if on_disk.workloads.is_empty() && header.workloads.len() == 1 {
+            on_disk.workloads = header.workloads.clone();
+        }
         anyhow::ensure!(
             on_disk == *header,
-            "sweep ledger {} was written by a different sweep (grid/epochs/seed mismatch); \
+            "sweep ledger {} was written by a different sweep (arms/grid/epochs/seed mismatch); \
              delete it or drop --resume",
             path.display()
         );
@@ -236,6 +270,7 @@ mod tests {
 
     fn header() -> LedgerHeader {
         LedgerHeader {
+            workloads: vec!["adr:test:x.dmdt".to_string()],
             m_values: vec![2, 4],
             s_values: vec![5],
             epochs: 10,
@@ -245,6 +280,8 @@ mod tests {
 
     fn cell(m: usize, s: usize) -> SweepCell {
         SweepCell {
+            workload: "adr".to_string(),
+            artifact: "test".to_string(),
             m,
             s,
             mean_rel_train: 0.5,
@@ -266,6 +303,7 @@ mod tests {
         let line = seal(cell_json(&cell(2, 5)));
         let back = decode_cell(&unseal(&line).unwrap()).unwrap();
         assert_eq!((back.m, back.s), (2, 5));
+        assert_eq!((back.workload.as_str(), back.artifact.as_str()), ("adr", "test"));
         assert!(back.mean_rel_test.is_nan(), "null must decode to NaN");
         // flip one byte inside the payload → CRC must catch it
         let corrupted = line.replace("\"events\":3", "\"events\":4");
@@ -295,6 +333,30 @@ mod tests {
         let mut other = header();
         other.epochs = 99;
         assert!(Ledger::open_resume(&path, &other).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn pre_workload_ledger_resumes_single_arm_only() {
+        let _g = failpoint::serial_guard();
+        failpoint::disarm_all();
+        let d = tmp_dir("arms");
+        let path = d.join("sweep.ledger");
+        // simulate a ledger written before arms existed: no arm list
+        let legacy = LedgerHeader {
+            workloads: Vec::new(),
+            ..header()
+        };
+        let mut ledger = Ledger::create(&path, &legacy);
+        ledger.append_cell(&cell(2, 5));
+        drop(ledger);
+        // a single-arm sweep adopts it …
+        let (_, cells) = Ledger::open_resume(&path, &header()).unwrap();
+        assert_eq!(cells.len(), 1);
+        // … a multi-arm sweep must refuse it
+        let mut multi = header();
+        multi.workloads.push("rom:rom:runs/data/rom.dmdt".to_string());
+        assert!(Ledger::open_resume(&path, &multi).is_err());
         std::fs::remove_dir_all(&d).unwrap();
     }
 

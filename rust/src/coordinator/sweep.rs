@@ -1,5 +1,12 @@
 //! The Fig-3 sensitivity sweep: mean relative DMD improvement over an
-//! (m, s) grid, train and test — now fault-tolerant.
+//! (m, s) grid, train and test — now fault-tolerant and multi-workload.
+//!
+//! With `[sweep] workloads = ["adr", "rom:quickstart", …]` the grid
+//! fans out over workload arms × m × s: each arm is a
+//! [`WorkloadSpec`] (workload, architecture artifact, dataset path)
+//! and every cell trains that arm's dataset on that arm's arch. With no
+//! arm list the sweep degenerates to the classic single-workload grid
+//! over the base config.
 //!
 //! Two isolation modes (`sweep.isolation`):
 //! - **thread** (default): the legacy deterministic in-process path —
@@ -11,13 +18,13 @@
 //!   cells become explicit `failed` CSV rows instead of sinking the
 //!   sweep.
 //!
-//! CSV determinism: rows are emitted row-major over m × s regardless of
-//! worker count or isolation, and `wall_secs` is deliberately *not* a
+//! CSV determinism: rows are emitted row-major over arms × m × s
+//! regardless of worker count or isolation, and `wall_secs` is deliberately *not* a
 //! CSV column (it is nondeterministic; it lives in the ledger instead) —
 //! this is what makes a `--resume` CSV bit-identical to an
 //! uninterrupted run.
 
-use crate::config::{Isolation, SweepConfig};
+use crate::config::{Isolation, SweepConfig, TrainConfig, WorkloadSpec};
 use crate::data::Dataset;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -57,6 +64,11 @@ impl CellStatus {
 /// One grid cell's result.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
+    /// Workload arm this cell trained ("adr" for single-workload sweeps
+    /// and pre-workload ledgers).
+    pub workload: String,
+    /// Architecture artifact the arm trained on.
+    pub artifact: String,
     pub m: usize,
     pub s: usize,
     /// Mean over DMD events of (MSE after)/(MSE before) — Fig 3's metric.
@@ -81,8 +93,12 @@ pub struct SweepCell {
 
 impl SweepCell {
     /// The graceful-degradation row: retries exhausted, NaN numerics.
+    /// The coordinator stamps `workload`/`artifact` from the arm spec
+    /// after the fact (the supervisor does not know which arm it ran).
     pub fn failed(m: usize, s: usize, attempts: usize, error: String) -> SweepCell {
         SweepCell {
+            workload: String::new(),
+            artifact: String::new(),
             m,
             s,
             mean_rel_train: f64::NAN,
@@ -117,7 +133,7 @@ impl SweepResult {
             std::fs::create_dir_all(parent)?;
         }
         let mut out = String::from(
-            "m,s,mean_rel_train,mean_rel_test,final_train,final_test,events,attempts,status,error\n",
+            "workload,m,s,mean_rel_train,mean_rel_test,final_train,final_test,events,attempts,status,error\n",
         );
         for c in &self.cells {
             let f = |v: f64| format!("{v:.9e}");
@@ -129,7 +145,8 @@ impl SweepResult {
                 .unwrap_or_default()
                 .replace([',', '\n', '\r'], ";");
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{error}\n",
+                "{},{},{},{},{},{},{},{},{},{},{error}\n",
+                c.workload,
                 c.m,
                 c.s,
                 f(c.mean_rel_train),
@@ -155,12 +172,13 @@ impl SweepResult {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let mut out = String::from("m,s,wall_secs,train_secs,dmd_secs,overhead_secs\n");
+        let mut out = String::from("workload,m,s,wall_secs,train_secs,dmd_secs,overhead_secs\n");
         for c in &self.cells {
             let f = |v: f64| format!("{v:.9e}");
             let overhead = c.wall_secs - c.train_secs - c.dmd_secs;
             out.push_str(&format!(
-                "{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{}\n",
+                c.workload,
                 c.m,
                 c.s,
                 f(c.wall_secs),
@@ -232,17 +250,23 @@ pub fn run_sweep(
 }
 
 /// Execute the sweep. Cell order in the result is deterministic
-/// (row-major over m × s) regardless of worker count and isolation.
+/// (row-major over workload arms × m × s, arms outermost) regardless of
+/// worker count and isolation.
 pub fn run_sweep_with(
     artifact_dir: &Path,
     sweep: &SweepConfig,
     ds: &Dataset,
     opts: &SweepOptions,
 ) -> anyhow::Result<SweepResult> {
-    let grid: Vec<(usize, usize)> = sweep
-        .m_values
-        .iter()
-        .flat_map(|&m| sweep.s_values.iter().map(move |&s| (m, s)))
+    let specs = sweep.effective_workloads();
+    // grid entries are (arm index, m, s), arms outermost
+    let grid: Vec<(usize, usize, usize)> = (0..specs.len())
+        .flat_map(|wi| {
+            sweep
+                .m_values
+                .iter()
+                .flat_map(move |&m| sweep.s_values.iter().map(move |&s| (wi, m, s)))
+        })
         .collect();
     match sweep.isolation {
         Isolation::Thread => {
@@ -251,10 +275,20 @@ pub fn run_sweep_with(
                 "--resume requires isolation = \"process\" (the ledger is written by the \
                  process-isolated coordinator)"
             );
-            run_sweep_threads(artifact_dir, sweep, ds, &grid, opts.progress)
+            run_sweep_threads(artifact_dir, sweep, &specs, ds, &grid, opts.progress)
         }
-        Isolation::Process => run_sweep_processes(artifact_dir, sweep, ds, &grid, opts),
+        Isolation::Process => run_sweep_processes(artifact_dir, sweep, &specs, ds, &grid, opts),
     }
+}
+
+/// The per-arm training config: the base with the arm's workload,
+/// architecture artifact and dataset path folded in.
+fn arm_config(base: &TrainConfig, spec: &WorkloadSpec) -> TrainConfig {
+    let mut b = base.clone();
+    b.workload = spec.workload.clone();
+    b.artifact = spec.artifact.clone();
+    b.dataset = spec.dataset.clone();
+    b
 }
 
 /// Legacy in-process path: deterministic, zero spawn overhead, but the
@@ -262,29 +296,47 @@ pub fn run_sweep_with(
 fn run_sweep_threads(
     artifact_dir: &Path,
     sweep: &SweepConfig,
+    specs: &[WorkloadSpec],
     ds: &Dataset,
-    grid: &[(usize, usize)],
+    grid: &[(usize, usize, usize)],
     progress: bool,
 ) -> anyhow::Result<SweepResult> {
+    // Resolve each arm's config + dataset up front. The caller already
+    // loaded the base dataset; arms pointing elsewhere load from disk
+    // once here, not per cell.
+    let bases: Vec<TrainConfig> = specs.iter().map(|sp| arm_config(&sweep.base, sp)).collect();
+    let mut loaded: Vec<Option<Dataset>> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        loaded.push(if spec.dataset == sweep.base.dataset {
+            None
+        } else {
+            Some(Dataset::load(&spec.dataset)?)
+        });
+    }
     let workers = sweep.workers.max(1).min(grid.len().max(1));
     let mut cells: Vec<Option<anyhow::Result<SweepCell>>> = (0..grid.len()).map(|_| None).collect();
     {
         let slots: Vec<Mutex<&mut Option<anyhow::Result<SweepCell>>>> =
             cells.iter_mut().map(Mutex::new).collect();
         let done = AtomicUsize::new(0);
+        let bases = &bases;
+        let loaded = &loaded;
         std::thread::scope(|scope| {
             for w in 0..workers {
                 let slots = &slots;
                 let done = &done;
                 scope.spawn(move || {
                     for gi in (w..grid.len()).step_by(workers) {
-                        let (m, s) = grid[gi];
-                        let cell = run_cell(artifact_dir, &sweep.base, ds, sweep.epochs, m, s);
+                        let (wi, m, s) = grid[gi];
+                        let arm_ds = loaded[wi].as_ref().unwrap_or(ds);
+                        let cell =
+                            run_cell(artifact_dir, &bases[wi], arm_ds, sweep.epochs, m, s);
                         let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                         if progress {
                             eprintln!(
-                                "sweep [{finished}/{}] m={m} s={s} rel_train={}",
+                                "sweep [{finished}/{}] workload={} m={m} s={s} rel_train={}",
                                 grid.len(),
+                                bases[wi].workload,
                                 cell.as_ref()
                                     .map(|c| crate::util::fmt_f64(c.mean_rel_train))
                                     .unwrap_or_else(|e| format!("ERR {e}")),
@@ -309,8 +361,9 @@ fn run_sweep_threads(
 fn run_sweep_processes(
     artifact_dir: &Path,
     sweep: &SweepConfig,
+    specs: &[WorkloadSpec],
     ds: &Dataset,
-    grid: &[(usize, usize)],
+    grid: &[(usize, usize, usize)],
     opts: &SweepOptions,
 ) -> anyhow::Result<SweepResult> {
     anyhow::ensure!(
@@ -332,33 +385,85 @@ fn run_sweep_processes(
         !sweep.base.dataset.is_empty(),
         "process-isolated sweep requires data.path (workers re-load the dataset)"
     );
+    for spec in specs {
+        anyhow::ensure!(
+            !spec.dataset.is_empty(),
+            "sweep arm '{}' has no dataset path (workers re-load the dataset)",
+            spec.workload
+        );
+    }
+    // Replay keys are (workload, artifact, m, s); two arms sharing both
+    // names would be indistinguishable in the ledger.
+    for i in 0..specs.len() {
+        for j in i + 1..specs.len() {
+            anyhow::ensure!(
+                (specs[i].workload.as_str(), specs[i].artifact.as_str())
+                    != (specs[j].workload.as_str(), specs[j].artifact.as_str()),
+                "sweep arms '{}' and '{}' share a workload and artifact; give them \
+                 distinct artifacts so resume can tell their cells apart",
+                specs[i],
+                specs[j]
+            );
+        }
+    }
     let _ = ds; // loaded by the caller as an early sanity check
 
-    // Write the fully resolved config where workers can read it: file +
-    // CLI overrides are already folded in, so a worker cell is
-    // bit-identical to the same cell run in-process.
+    // Write one fully resolved config per arm where workers can read
+    // them: file + CLI overrides and the arm's workload/artifact/dataset
+    // are already folded in, so a worker cell is bit-identical to the
+    // same cell run in-process. Single-arm sweeps keep the historical
+    // `sweep-worker.toml` name.
     let run_dir = match &opts.run_dir {
         Some(d) => d.clone(),
         None => std::env::temp_dir().join(format!("dmdtrain_sweep_{}", std::process::id())),
     };
     std::fs::create_dir_all(&run_dir)?;
-    let config_path = run_dir.join("sweep-worker.toml");
-    crate::util::durable::atomic_write(
-        &config_path,
-        "sweep.config",
-        sweep.to_worker_config().to_toml_string().as_bytes(),
-    )?;
+    let mut config_paths: Vec<PathBuf> = Vec::with_capacity(specs.len());
+    for (wi, spec) in specs.iter().enumerate() {
+        let mut arm = sweep.clone();
+        arm.base = arm_config(&sweep.base, spec);
+        // the worker runs exactly one arm; dropping the arm list keeps
+        // its config in the classic single-workload shape
+        arm.workloads = Vec::new();
+        let name = if specs.len() == 1 {
+            "sweep-worker.toml".to_string()
+        } else {
+            format!("sweep-worker-{wi}.toml")
+        };
+        let config_path = run_dir.join(name);
+        crate::util::durable::atomic_write(
+            &config_path,
+            "sweep.config",
+            arm.to_worker_config().to_toml_string().as_bytes(),
+        )?;
+        config_paths.push(config_path);
+    }
 
     // Ledger: resume replays completed cells; a fresh run starts one.
+    // Cells are keyed by (workload, artifact, m, s) so arms sharing an
+    // (m, s) grid never collide.
+    let key_of = |gi: usize| -> (String, String, usize, usize) {
+        let (wi, m, s) = grid[gi];
+        (specs[wi].workload.clone(), specs[wi].artifact.clone(), m, s)
+    };
     let header = LedgerHeader::of(sweep);
     let ledger_path = run_dir.join("sweep.ledger");
-    let mut replayed: HashMap<(usize, usize), SweepCell> = HashMap::new();
+    let mut replayed: HashMap<(String, String, usize, usize), SweepCell> = HashMap::new();
     let ledger = if opts.resume {
         let (ledger, cells) = Ledger::open_resume(&ledger_path, &header)?;
-        for cell in cells {
+        for mut cell in cells {
             // failed cells are re-run on resume — only trained results replay
             if cell.is_ok() {
-                replayed.insert((cell.m, cell.s), cell);
+                // pre-workload ledgers carry untagged cells; they can
+                // only have come from a single-arm sweep
+                if cell.workload.is_empty() && specs.len() == 1 {
+                    cell.workload = specs[0].workload.clone();
+                    cell.artifact = specs[0].artifact.clone();
+                }
+                replayed.insert(
+                    (cell.workload.clone(), cell.artifact.clone(), cell.m, cell.s),
+                    cell,
+                );
             }
         }
         if opts.progress {
@@ -376,7 +481,7 @@ fn run_sweep_processes(
     let ledger = Mutex::new(ledger);
 
     let pending: Vec<usize> = (0..grid.len())
-        .filter(|&gi| !replayed.contains_key(&grid[gi]))
+        .filter(|&gi| !replayed.contains_key(&key_of(gi)))
         .collect();
     let workers = sweep.workers.max(1).min(pending.len().max(1));
     let timeout = (sweep.timeout_secs > 0).then(|| std::time::Duration::from_secs(sweep.timeout_secs));
@@ -394,23 +499,27 @@ fn run_sweep_processes(
                 let done = &done;
                 let ledger = &ledger;
                 let exe = &exe;
-                let config_path = &config_path;
+                let config_paths = &config_paths;
                 scope.spawn(move || loop {
                     let pi = next.fetch_add(1, Ordering::Relaxed);
                     if pi >= pending.len() {
                         return;
                     }
                     let gi = pending[pi];
-                    let (m, s) = grid[gi];
+                    let (wi, m, s) = grid[gi];
                     let spec = WorkerSpec {
                         exe: exe.clone(),
-                        config: config_path.clone(),
+                        config: config_paths[wi].clone(),
                         artifact_dir: artifact_dir.to_path_buf(),
                         m,
                         s,
                         timeout,
                     };
-                    let cell = run_supervised_cell(&spec, sweep.max_retries, sweep.backoff_ms);
+                    let mut cell = run_supervised_cell(&spec, sweep.max_retries, sweep.backoff_ms);
+                    // Stamp the arm onto the cell before it hits the
+                    // ledger — a failed cell never names its arm itself.
+                    cell.workload = specs[wi].workload.clone();
+                    cell.artifact = specs[wi].artifact.clone();
                     ledger.lock().unwrap_or_else(|e| e.into_inner()).append_cell(&cell);
                     // Chaos hook for the CI kill-then-resume job: abort the
                     // coordinator (≈ SIGKILL) after N durable appends.
@@ -429,8 +538,9 @@ fn run_sweep_processes(
                             ),
                         };
                         eprintln!(
-                            "sweep [{finished}/{}] m={m} s={s} rel_train={outcome}",
-                            grid.len()
+                            "sweep [{finished}/{}] workload={} m={m} s={s} rel_train={outcome}",
+                            grid.len(),
+                            cell.workload
                         );
                     }
                     **slots[gi].lock().unwrap() = Some(cell);
@@ -441,12 +551,11 @@ fn run_sweep_processes(
 
     let mut out = SweepResult::default();
     for (gi, slot) in fresh.into_iter().enumerate() {
-        let key = grid[gi];
         match slot {
             Some(cell) => out.cells.push(cell),
             None => out.cells.push(
                 replayed
-                    .remove(&key)
+                    .remove(&key_of(gi))
                     .expect("cell neither run nor replayed"),
             ),
         }
@@ -460,6 +569,8 @@ mod tests {
 
     fn ok_cell(m: usize, s: usize, rel: f64) -> SweepCell {
         SweepCell {
+            workload: "adr".to_string(),
+            artifact: "paper".to_string(),
             m,
             s,
             mean_rel_train: rel,
@@ -489,10 +600,13 @@ mod tests {
         let path = dir.join("grid.csv");
         r.write_csv(&path).unwrap();
         let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
-        assert_eq!(header[0], "m");
-        assert_eq!(header[8], "status");
+        assert_eq!(header[0], "workload");
+        assert_eq!(header[1], "m");
+        assert_eq!(header[9], "status");
         assert_eq!(rows.len(), 3);
-        assert_eq!(rows[1][0], 14.0);
+        assert_eq!(rows[1][1], 14.0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().nth(2).unwrap().starts_with("adr,14,55,"));
     }
 
     #[test]
@@ -507,11 +621,11 @@ mod tests {
         let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
         assert_eq!(
             header,
-            vec!["m", "s", "wall_secs", "train_secs", "dmd_secs", "overhead_secs"]
+            vec!["workload", "m", "s", "wall_secs", "train_secs", "dmd_secs", "overhead_secs"]
         );
         assert_eq!(rows.len(), 2);
-        assert!((rows[0][5] - 0.1).abs() < 1e-9, "overhead = wall - train - dmd");
-        assert!(rows[1][2].is_nan(), "failed cells carry NaN timings");
+        assert!((rows[0][6] - 0.1).abs() < 1e-9, "overhead = wall - train - dmd");
+        assert!(rows[1][3].is_nan(), "failed cells carry NaN timings");
     }
 
     #[test]
@@ -537,12 +651,12 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 3, "header + 2 rows");
         let failed_row: Vec<&str> = lines[2].split(',').collect();
-        assert_eq!(failed_row.len(), 10, "error text must not add columns");
-        assert_eq!(failed_row[8], "failed");
-        assert!(failed_row[9].contains("exit code 101"));
+        assert_eq!(failed_row.len(), 11, "error text must not add columns");
+        assert_eq!(failed_row[9], "failed");
+        assert!(failed_row[10].contains("exit code 101"));
         // every row has the same arity
-        assert_eq!(lines[0].split(',').count(), 10);
-        assert_eq!(lines[1].split(',').count(), 10);
+        assert_eq!(lines[0].split(',').count(), 11);
+        assert_eq!(lines[1].split(',').count(), 11);
     }
 
     #[test]

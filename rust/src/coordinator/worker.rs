@@ -58,6 +58,8 @@ pub(crate) fn run_cell(
         + phase("dmd_measure")
         + phase("linefit_solve");
     Ok(SweepCell {
+        workload: base.workload.clone(),
+        artifact: base.artifact.clone(),
         m,
         s,
         mean_rel_train: report.dmd_stats.mean_rel_train(),
@@ -93,6 +95,10 @@ fn decode_num(j: Option<&Json>) -> f64 {
 pub fn cell_json(c: &SweepCell) -> Json {
     let mut m = BTreeMap::new();
     m.insert("kind".to_string(), Json::Str("cell".to_string()));
+    // additive keys: pre-workload ledgers decode with missing→"" and
+    // the coordinator re-tags them from its (single) arm spec
+    m.insert("workload".to_string(), Json::Str(c.workload.clone()));
+    m.insert("artifact".to_string(), Json::Str(c.artifact.clone()));
     m.insert("m".to_string(), Json::Num(c.m as f64));
     m.insert("s".to_string(), Json::Num(c.s as f64));
     m.insert("mean_rel_train".to_string(), num(c.mean_rel_train));
@@ -135,7 +141,15 @@ pub fn decode_cell(j: &Json) -> anyhow::Result<SweepCell> {
         .get("status")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow::anyhow!("cell record missing 'status'"))?;
+    let str_or_empty = |key: &str| -> String {
+        j.get(key)
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string()
+    };
     Ok(SweepCell {
+        workload: str_or_empty("workload"),
+        artifact: str_or_empty("artifact"),
         m: int("m")?,
         s: int("s")?,
         mean_rel_train: decode_num(j.get("mean_rel_train")),

@@ -1,9 +1,10 @@
 //! On-disk dataset format + epoch batching.
 //!
-//! Binary layout (little endian), magic `DMDT`, version 1:
+//! Binary layout (little endian), magic `DMDT`, version 2:
 //!
 //! ```text
 //! [4]  magic "DMDT"        [u32] version
+//! [u32] workload name length  [.. bytes] workload name (UTF-8)
 //! [u32] n_train  [u32] n_test  [u32] n_in  [u32] n_out
 //! [n_in × 2 f32] input scaling (lo, hi pairs)
 //! [2 f32]        output scaling (lo, hi)
@@ -11,20 +12,27 @@
 //! [n_train·n_out f32] y_train
 //! [n_test·n_in f32]   x_test
 //! [n_test·n_out f32]  y_test
+//! [u32] CRC-32 of every preceding byte
 //! ```
+//!
+//! Version-1 files (no workload name, no CRC trailer) still load and are
+//! tagged `workload = "adr"` — the only workload that existed when they
+//! were written. Truncated or corrupt version-2 files are rejected at the
+//! CRC check instead of parsing into garbage tensors.
 //!
 //! Stored data is already scaled; [`Scaling`] is kept for inverse maps.
 
 use super::scaling::Scaling;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
-use std::io::{Read, Write};
+use crate::util::crc32::crc32;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"DMDT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A train/test regression dataset (scaled).
+/// A train/test regression dataset (scaled), tagged with the name of the
+/// workload that generated it.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub x_train: Tensor,
@@ -32,11 +40,48 @@ pub struct Dataset {
     pub x_test: Tensor,
     pub y_test: Tensor,
     pub scaling: Scaling,
+    /// Name of the generating workload ("adr", "rom", "blasius", …).
+    pub workload: String,
+}
+
+/// Forward-only parse cursor over the in-memory file image.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    end: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.end,
+            "dataset truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.end - self.pos
+        );
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, count: usize) -> anyhow::Result<Vec<f32>> {
+        let b = self.take(count * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
 }
 
 impl Dataset {
     /// Assemble from *raw* (unscaled) data: fits scaling on the train
-    /// split, applies it to both splits.
+    /// split, applies it to both splits. Tagged `workload = "adr"` (the
+    /// historical default); other generators re-tag via
+    /// [`Dataset::with_workload`].
     pub fn from_raw(
         x_train: Tensor,
         y_train: Tensor,
@@ -50,7 +95,14 @@ impl Dataset {
             x_test: scaling.scale_inputs(&x_test),
             y_test: scaling.scale_outputs(&y_test),
             scaling,
+            workload: "adr".to_string(),
         }
+    }
+
+    /// Re-tag the dataset with its generating workload's name.
+    pub fn with_workload(mut self, name: &str) -> Dataset {
+        self.workload = name.to_string();
+        self
     }
 
     pub fn n_train(&self) -> usize {
@@ -73,79 +125,103 @@ impl Dataset {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        f.write_all(MAGIC)?;
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.workload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(self.workload.as_bytes());
         for v in [
-            VERSION,
             self.n_train() as u32,
             self.n_test() as u32,
             self.n_in() as u32,
             self.n_out() as u32,
         ] {
-            f.write_all(&v.to_le_bytes())?;
+            buf.extend_from_slice(&v.to_le_bytes());
         }
         for &(lo, hi) in &self.scaling.in_ranges {
-            f.write_all(&lo.to_le_bytes())?;
-            f.write_all(&hi.to_le_bytes())?;
+            buf.extend_from_slice(&lo.to_le_bytes());
+            buf.extend_from_slice(&hi.to_le_bytes());
         }
-        f.write_all(&self.scaling.out_range.0.to_le_bytes())?;
-        f.write_all(&self.scaling.out_range.1.to_le_bytes())?;
+        buf.extend_from_slice(&self.scaling.out_range.0.to_le_bytes());
+        buf.extend_from_slice(&self.scaling.out_range.1.to_le_bytes());
         for t in [&self.x_train, &self.y_train, &self.x_test, &self.y_test] {
             for &v in t.data() {
-                f.write_all(&v.to_le_bytes())?;
+                buf.extend_from_slice(&v.to_le_bytes());
             }
         }
-        f.flush()?;
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &buf)?;
         Ok(())
     }
 
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Dataset> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(&path).map_err(|e| {
-            anyhow::anyhow!("dataset {}: {e}", path.as_ref().display())
-        })?);
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not a DMDT dataset");
-        let mut u32buf = [0u8; 4];
-        let mut read_u32 = |f: &mut dyn Read| -> anyhow::Result<u32> {
-            f.read_exact(&mut u32buf)?;
-            Ok(u32::from_le_bytes(u32buf))
-        };
-        let version = read_u32(&mut f)?;
-        anyhow::ensure!(version == VERSION, "unsupported dataset version {version}");
-        let n_train = read_u32(&mut f)? as usize;
-        let n_test = read_u32(&mut f)? as usize;
-        let n_in = read_u32(&mut f)? as usize;
-        let n_out = read_u32(&mut f)? as usize;
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("dataset {}: {e}", path.as_ref().display()))?;
+        Dataset::decode(&bytes)
+            .map_err(|e| anyhow::anyhow!("dataset {}: {e}", path.as_ref().display()))
+    }
 
-        let read_f32s = |f: &mut dyn Read, count: usize| -> anyhow::Result<Vec<f32>> {
-            let mut bytes = vec![0u8; count * 4];
-            f.read_exact(&mut bytes)?;
-            Ok(bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect())
+    fn decode(bytes: &[u8]) -> anyhow::Result<Dataset> {
+        let mut cur = Cursor {
+            bytes,
+            pos: 0,
+            end: bytes.len(),
         };
-        let ranges_flat = read_f32s(&mut f, n_in * 2)?;
+        anyhow::ensure!(cur.take(4)? == MAGIC, "not a DMDT dataset");
+        let version = cur.u32()?;
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "unsupported dataset version {version}"
+        );
+        let workload = if version >= 2 {
+            // the trailer seals everything before it — verify first so a
+            // truncated or bit-flipped file fails here with one clear
+            // error instead of deep in tensor parsing
+            anyhow::ensure!(bytes.len() >= 12 + 4, "dataset truncated: no CRC trailer");
+            cur.end = bytes.len() - 4;
+            let t = &bytes[cur.end..];
+            let stored = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
+            let actual = crc32(&bytes[..cur.end]);
+            anyhow::ensure!(
+                stored == actual,
+                "dataset CRC mismatch (stored {stored:08x}, computed {actual:08x}) — \
+                 file is corrupt or truncated"
+            );
+            let name_len = cur.u32()? as usize;
+            std::str::from_utf8(cur.take(name_len)?)
+                .map_err(|_| anyhow::anyhow!("dataset workload name is not UTF-8"))?
+                .to_string()
+        } else {
+            // v1 predates workload plurality: everything was ADR
+            "adr".to_string()
+        };
+        let n_train = cur.u32()? as usize;
+        let n_test = cur.u32()? as usize;
+        let n_in = cur.u32()? as usize;
+        let n_out = cur.u32()? as usize;
+
+        let ranges_flat = cur.f32s(n_in * 2)?;
         let in_ranges: Vec<(f32, f32)> = ranges_flat
             .chunks_exact(2)
             .map(|c| (c[0], c[1]))
             .collect();
-        let out_flat = read_f32s(&mut f, 2)?;
+        let out_flat = cur.f32s(2)?;
         let scaling = Scaling {
             in_ranges,
             out_range: (out_flat[0], out_flat[1]),
         };
-        let x_train = Tensor::from_vec(n_train, n_in, read_f32s(&mut f, n_train * n_in)?);
-        let y_train = Tensor::from_vec(n_train, n_out, read_f32s(&mut f, n_train * n_out)?);
-        let x_test = Tensor::from_vec(n_test, n_in, read_f32s(&mut f, n_test * n_in)?);
-        let y_test = Tensor::from_vec(n_test, n_out, read_f32s(&mut f, n_test * n_out)?);
+        let x_train = Tensor::from_vec(n_train, n_in, cur.f32s(n_train * n_in)?);
+        let y_train = Tensor::from_vec(n_train, n_out, cur.f32s(n_train * n_out)?);
+        let x_test = Tensor::from_vec(n_test, n_in, cur.f32s(n_test * n_in)?);
+        let y_test = Tensor::from_vec(n_test, n_out, cur.f32s(n_test * n_out)?);
         Ok(Dataset {
             x_train,
             y_train,
             x_test,
             y_test,
             scaling,
+            workload,
         })
     }
 }
@@ -243,6 +319,34 @@ mod tests {
         Dataset::from_raw(x_train, y_train, x_test, y_test)
     }
 
+    /// Hand-encode `d` in the legacy version-1 layout (no workload name,
+    /// no CRC trailer) — the exact bytes pre-PR-9 builds wrote.
+    fn encode_v1(d: &Dataset) -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        for v in [
+            1u32,
+            d.n_train() as u32,
+            d.n_test() as u32,
+            d.n_in() as u32,
+            d.n_out() as u32,
+        ] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for &(lo, hi) in &d.scaling.in_ranges {
+            buf.extend_from_slice(&lo.to_le_bytes());
+            buf.extend_from_slice(&hi.to_le_bytes());
+        }
+        buf.extend_from_slice(&d.scaling.out_range.0.to_le_bytes());
+        buf.extend_from_slice(&d.scaling.out_range.1.to_le_bytes());
+        for t in [&d.x_train, &d.y_train, &d.x_test, &d.y_test] {
+            for &v in t.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        buf
+    }
+
     #[test]
     fn from_raw_scales_train_into_unit_box() {
         let d = tiny_dataset();
@@ -256,7 +360,7 @@ mod tests {
 
     #[test]
     fn save_load_roundtrip() {
-        let d = tiny_dataset();
+        let d = tiny_dataset().with_workload("rom");
         let dir = std::env::temp_dir().join("dmdtrain_ds_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("tiny.dmdt");
@@ -265,6 +369,21 @@ mod tests {
         assert_eq!(loaded.x_train, d.x_train);
         assert_eq!(loaded.y_train, d.y_train);
         assert_eq!(loaded.x_test, d.x_test);
+        assert_eq!(loaded.y_test, d.y_test);
+        assert_eq!(loaded.scaling, d.scaling);
+        assert_eq!(loaded.workload, "rom");
+    }
+
+    #[test]
+    fn legacy_v1_bytes_load_as_adr() {
+        let d = tiny_dataset();
+        let dir = std::env::temp_dir().join("dmdtrain_ds_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.dmdt");
+        std::fs::write(&path, encode_v1(&d)).unwrap();
+        let loaded = Dataset::load(&path).unwrap();
+        assert_eq!(loaded.workload, "adr");
+        assert_eq!(loaded.x_train, d.x_train);
         assert_eq!(loaded.y_test, d.y_test);
         assert_eq!(loaded.scaling, d.scaling);
     }
@@ -276,6 +395,41 @@ mod tests {
         let path = dir.join("bad.dmdt");
         std::fs::write(&path, b"NOPEnope").unwrap();
         assert!(Dataset::load(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_v2_rejected_with_crc_error() {
+        let d = tiny_dataset();
+        let dir = std::env::temp_dir().join("dmdtrain_ds_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full = dir.join("full.dmdt");
+        d.save(&full).unwrap();
+        let bytes = std::fs::read(&full).unwrap();
+        // chop mid-tensor: the CRC trailer becomes tensor bytes and the
+        // checksum can no longer match
+        let cut = dir.join("cut.dmdt");
+        std::fs::write(&cut, &bytes[..bytes.len() - 21]).unwrap();
+        let err = Dataset::load(&cut).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "unexpected error: {err}");
+        // chop into the header: too short to even carry a trailer
+        let stub = dir.join("stub.dmdt");
+        std::fs::write(&stub, &bytes[..10]).unwrap();
+        assert!(Dataset::load(&stub).is_err());
+    }
+
+    #[test]
+    fn corrupt_v2_rejected_with_crc_error() {
+        let d = tiny_dataset().with_workload("blasius");
+        let dir = std::env::temp_dir().join("dmdtrain_ds_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flip.dmdt");
+        d.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Dataset::load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "unexpected error: {err}");
     }
 
     #[test]

@@ -73,6 +73,17 @@ impl Scaling {
         let (lo, hi) = self.out_range;
         Tensor::from_fn(y.rows(), y.cols(), |r, c| inv(y.get(r, c), lo, hi))
     }
+
+    /// Inverse of [`Scaling::scale_inputs`]: map scaled features back to
+    /// physical units (workload eval metrics report against the physical
+    /// reference solution).
+    pub fn unscale_inputs(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.in_ranges.len());
+        Tensor::from_fn(x.rows(), x.cols(), |r, c| {
+            let (lo, hi) = self.in_ranges[c];
+            inv(x.get(r, c), lo, hi)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +112,17 @@ mod tests {
         let ys = s.scale_outputs(&y);
         let back = s.unscale_outputs(&ys);
         for (a, b) in back.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn input_roundtrip() {
+        let x = Tensor::from_vec(3, 2, vec![1.0, -10.0, 3.0, 0.0, 2.0, 10.0]);
+        let y = Tensor::from_vec(3, 1, vec![0.0, 5.0, 10.0]);
+        let s = Scaling::fit(&x, &y);
+        let back = s.unscale_inputs(&s.scale_inputs(&x));
+        for (a, b) in back.data().iter().zip(x.data()) {
             assert!((a - b).abs() < 1e-5);
         }
     }

@@ -162,6 +162,7 @@
 //! | [`coordinator`] | (m, s) sweeps: thread or supervised-subprocess cells (`coordinator::supervise`, `coordinator::worker`), durable resume ledger (`coordinator::ledger`) |
 //! | [`obs`] | zero-allocation span tracer: per-thread rings, Chrome trace-event export (`train --trace-out`, `dmdtrain trace`) |
 //! | [`pde`] | Blasius boundary layer + advection-diffusion-reaction |
+//! | [`workload`] | pluggable training scenarios behind one trait: ADR (default), Burgers POD ROM, Blasius surrogate — name-keyed registry driving datagen, eval, sweeps and serving |
 //! | [`cli`], [`config`] | hand-rolled argv parser and TOML-subset config |
 //! | [`rng`], [`util`], [`metrics`] | infrastructure substrates: worker pool, CRC-32 (`util::crc32`), durable writes (`util::durable`), fail-point registry (`util::failpoint`); `metrics::core` holds the shared Counter/Histogram primitives and the trainer's Prometheus registry |
 
@@ -209,3 +210,4 @@ pub mod serve;
 pub mod tensor;
 pub mod trainer;
 pub mod util;
+pub mod workload;

@@ -17,7 +17,6 @@ use dmdtrain::cli::Args;
 use dmdtrain::config::{Config, DatagenConfig, ServeConfig, SweepConfig, TrainConfig, Value};
 use dmdtrain::coordinator::{run_sweep_with, SweepOptions};
 use dmdtrain::data::Dataset;
-use dmdtrain::pde::generate_dataset;
 use dmdtrain::runtime::Runtime;
 use dmdtrain::trainer::{
     load_params, load_train_state, save_params, save_train_state, SessionBuilder,
@@ -29,8 +28,10 @@ dmdtrain — DMD-accelerated neural-network training (Tano et al. 2020)
 
 USAGE: dmdtrain <subcommand> [--flags]
 
-  datagen  --config <toml> [--samples N --obs N --out path --workers N]
-  train    --config <toml> [--dmd true|false --m N --s N --epochs N
+  datagen  --config <toml> [--workload adr|rom|blasius
+                            --samples N --obs N --out path --workers N]
+  train    --config <toml> [--workload adr|rom|blasius
+                            --dmd true|false --m N --s N --epochs N
                             --artifact NAME --dataset PATH --seed N
                             --optimizer adam|sgd|sgd_momentum
                             --accel dmd|linefit|none
@@ -41,7 +42,8 @@ USAGE: dmdtrain <subcommand> [--flags]
                             --recovery-snapshot-every N
                             --recovery-cooldown N --recovery-lr-shrink X
                             --trace-out PATH]
-  sweep    --config <toml> [--workers N --epochs N --out PATH
+  sweep    --config <toml> [--workload adr|rom|blasius
+                            --workers N --epochs N --out PATH
                             --isolation thread|process --timeout-secs N
                             --max-retries N --backoff-ms N --resume]
   predict  --checkpoint PATH --dataset PATH [--artifact NAME]
@@ -59,6 +61,14 @@ the dmd_events.csv a train run leaves in its out dir.
 
 Fault injection (testing): --failpoints \"name=action[@N];…\" or the
 DMDTRAIN_FAILPOINTS env var — actions: error, nan, panic, partial:BYTES.
+
+Workloads: --workload (or `[workload] name`) selects the training
+scenario — \"adr\" (pollutant ADR regression, the default), \"rom\"
+(Burgers POD coefficient advancement) or \"blasius\" (boundary-layer
+similarity profiles). It drives datagen, picks default artifact and
+dataset paths, and tags datasets + checkpoint sidecars. A sweep can fan
+several out at once via `[sweep] workloads = [\"adr\", \"rom:quickstart\",
+…]` (each entry \"workload[:artifact[:dataset]]\").
 
 With --isolation process, each sweep cell runs in a supervised
 `sweep-worker` subprocess (internal subcommand) with per-cell timeout
@@ -118,6 +128,7 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     };
     // CLI overrides (flat flag → config key)
     for (flag, key) in [
+        ("workload", "workload.name"),
         ("dataset", "data.path"),
         ("artifact", "model.artifact"),
         ("out-dir", "train.out_dir"),
@@ -169,18 +180,37 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     if let Some(v) = args.str_opt("lr") {
         cfg.set("adam.lr", Value::Float(v.parse()?));
     }
+    // A named workload supplies its registry defaults for whatever the
+    // config and flags left unset, so `--workload rom` alone selects a
+    // matching artifact arch and dataset path.
+    let wname = cfg.str_or("workload.name", "");
+    if !wname.is_empty() {
+        let w = dmdtrain::workload::get(&wname)?;
+        if cfg.get("model.artifact").is_none() {
+            cfg.set("model.artifact", Value::Str(w.default_artifact().to_string()));
+        }
+        if cfg.get("data.path").is_none() {
+            cfg.set("data.path", Value::Str(w.default_dataset().to_string()));
+        }
+    }
     Ok(cfg)
 }
 
 fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let dg = DatagenConfig::from_config(&cfg);
+    let w = dmdtrain::workload::get(&dg.workload)?;
     let workers = args.usize_or("workers", num_threads())?;
+    let (n_in, n_out) = w.dims(&dg);
     eprintln!(
-        "datagen: {} samples on {}×{} grid, {} observation points → {}",
-        dg.n_samples, dg.nx, dg.ny, dg.n_obs, dg.out
+        "datagen[{}]: {} samples, {} → {} features → {}",
+        w.name(),
+        dg.n_samples,
+        n_in,
+        n_out,
+        dg.out
     );
-    let report = generate_dataset(&dg, workers)?;
+    let report = w.generate(&dg, workers)?;
     println!(
         "wrote {} train + {} test rows × {} outputs in {:.1}s (mean Picard iters {:.1})",
         report.n_train, report.n_test, report.n_obs, report.wall_secs, report.mean_picard_iters
@@ -191,10 +221,18 @@ fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let tc = TrainConfig::from_config(&cfg)?;
+    let workload_name = tc.workload.clone();
     let ds = Dataset::load(&tc.dataset)?;
+    if ds.workload != workload_name {
+        eprintln!(
+            "note: dataset {} is tagged workload '{}' but the run is configured for '{}'",
+            tc.dataset, ds.workload, workload_name
+        );
+    }
     let runtime = Runtime::cpu(Runtime::default_artifact_dir())?;
     eprintln!(
-        "train: artifact={} optimizer={} accel={:?} dmd={:?} epochs={} platform={}",
+        "train: workload={} artifact={} optimizer={} accel={:?} dmd={:?} epochs={} platform={}",
+        workload_name,
         tc.artifact,
         tc.optimizer,
         tc.accel,
@@ -258,10 +296,29 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // snapshot buffers — `train --resume <path>` continues
         // bit-identically from here.
         save_train_state(format!("{path}.resume"), &session.export_state()?)?;
-        // Sidecar with arch + dataset scaling: `dmdtrain serve` picks it
-        // up so the model answers in physical units.
+        // Sidecar with arch + dataset scaling + workload: `dmdtrain
+        // serve` picks it up so the model answers in physical units and
+        // `GET /models` can attribute it to its scenario.
         let arch = dmdtrain::serve::registry::infer_arch(&report.final_params)?;
-        dmdtrain::serve::registry::write_sidecar(path, &arch, Some(&ds.scaling))?;
+        dmdtrain::serve::registry::write_sidecar(
+            path,
+            &arch,
+            Some(&ds.scaling),
+            Some(&ds.workload),
+        )?;
+    }
+    // Workload-specific test metrics, computed in physical units against
+    // the scenario's reference solution (ADR: held-out field rows; rom:
+    // autonomous rollout; blasius: the exact ODE solve).
+    {
+        let w = dmdtrain::workload::get(&workload_name)?;
+        let dims = dmdtrain::serve::registry::infer_arch(&report.final_params)?;
+        let arch = dmdtrain::model::Arch::new(dims)?;
+        let mut predict =
+            dmdtrain::workload::physical_predictor(&arch, &report.final_params, &ds.scaling);
+        for m in w.eval(&ds, &mut predict)? {
+            println!("eval[{}] {} = {}", w.name(), m.name, util::fmt_f64(m.value));
+        }
     }
     println!(
         "final train MSE {}  test MSE {}  ({} epochs in {:.1}s{}, {} {} events, mean rel {} train / {} test)",
@@ -298,8 +355,15 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         .filter(|p| !p.as_os_str().is_empty())
         .map(|p| p.to_path_buf())
         .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let arms = sc.effective_workloads();
     eprintln!(
-        "sweep: {}×{} grid, {} epochs per cell, {} workers, {} isolation{}",
+        "sweep: {} workload arm{} ({}) × {}×{} grid, {} epochs per cell, {} workers, {} isolation{}",
+        arms.len(),
+        if arms.len() == 1 { "" } else { "s" },
+        arms.iter()
+            .map(|a| a.workload.as_str())
+            .collect::<Vec<_>>()
+            .join(", "),
         sc.m_values.len(),
         sc.s_values.len(),
         sc.epochs,
@@ -331,7 +395,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(best) = result.best() {
         println!(
-            "best cell: m={} s={} mean_rel_train={} (paper: m=14, s=55)",
+            "best cell: workload={} m={} s={} mean_rel_train={} (paper: m=14, s=55)",
+            best.workload,
             best.m,
             best.s,
             util::fmt_f64(best.mean_rel_train)

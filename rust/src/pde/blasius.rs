@@ -231,6 +231,44 @@ mod tests {
     }
 
     #[test]
+    fn property_profiles_well_posed_across_wall_box() {
+        // Property sweep over the well-posed wall-parameter box used by
+        // the blasius workload (f0 ∈ [-1.5, 1.5], f'(0) ∈ [-0.9, 0.9]):
+        // every profile must honor its wall values, stay monotone in η
+        // (zero pressure gradient admits no overshoot) and recover the
+        // freestream. The classical corner pins the known constant.
+        for i in 0..5 {
+            for j in 0..5 {
+                let f0 = -1.5 + 3.0 * i as f64 / 4.0;
+                let fp0 = -0.9 + 1.8 * j as f64 / 4.0;
+                let sol = solve_blasius(f0, fp0)
+                    .unwrap_or_else(|e| panic!("f0={f0}, fp0={fp0}: {e}"));
+                assert!(
+                    (sol.fp[0] - fp0).abs() < 1e-12,
+                    "wall slip not honored at f0={f0}, fp0={fp0}"
+                );
+                assert!(
+                    (sol.f[0] - f0).abs() < 1e-12,
+                    "wall blowing not honored at f0={f0}, fp0={fp0}"
+                );
+                for w in sol.fp.windows(2) {
+                    assert!(
+                        w[1] >= w[0] - 1e-7,
+                        "f' not monotone at f0={f0}, fp0={fp0}"
+                    );
+                }
+                assert!(
+                    (sol.fp_at(sol.eta_max) - 1.0).abs() < 2e-3,
+                    "freestream missed at f0={f0}, fp0={fp0}"
+                );
+            }
+        }
+        // classical corner: f''(0) ≈ 0.33206 in this normalization
+        let classical = solve_blasius(0.0, 0.0).unwrap();
+        assert!((classical.fpp0 - 0.33206).abs() < 1e-4);
+    }
+
+    #[test]
     fn f_at_interpolates_linearly_beyond_table() {
         let sol = solve_blasius(0.0, 0.0).unwrap();
         let f10 = sol.f_at(10.0);

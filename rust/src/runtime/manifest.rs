@@ -90,13 +90,17 @@ impl Manifest {
         let mut add = |e: ManifestEntry| {
             entries.insert(e.name.clone(), e);
         };
-        let models: [(&str, &[usize], usize); 4] = [
+        let models: [(&str, &[usize], usize); 6] = [
             // ("test" keeps its historical static batch so the trainer
             // integration tests exercise the static-batch path)
             ("test", &[6, 8, 6], 16),
             ("quickstart", &[6, 16, 32, 64], 0),
             ("sweep", &[6, 40, 200, 267], 0),
             ("paper", &[6, 40, 200, 1000, 2670], 0),
+            // default archs for the non-ADR workloads (workload::{rom,
+            // blasius} — widths must match Workload::dims)
+            ("rom", &[8, 32, 32, 8], 0),
+            ("blasius", &[3, 32, 32, 1], 0),
         ];
         for (base, arch, batch) in models {
             add(ManifestEntry::native_model(
@@ -266,6 +270,10 @@ mod tests {
             "predict_sweep",
             "train_step_paper",
             "predict_paper",
+            "train_step_rom",
+            "predict_rom",
+            "train_step_blasius",
+            "predict_blasius",
             "gram_l2",
             "gram_l3",
         ] {

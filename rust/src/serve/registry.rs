@@ -7,9 +7,12 @@
 //! model. The architecture is inferred from the checkpoint's
 //! (weight, bias) tensor chain; an optional `<name>.json` sidecar can
 //! pin the expected arch (`{"arch": [6, 8, 6]}` — load fails loudly on
-//! mismatch, the corrupt-artifact guard) and attach the dataset scaling
+//! mismatch, the corrupt-artifact guard), attach the dataset scaling
 //! (`{"scaling": {"in": [[lo, hi], …], "out": [lo, hi]}}`) so the
-//! server answers in physical units.
+//! server answers in physical units, and tag the workload the
+//! checkpoint was trained on (`{"workload": "adr"}`) so one model
+//! directory can serve checkpoints from different workloads side by
+//! side, each with its own scaling.
 //!
 //! Reload semantics: a model whose file changed (mtime or size) is
 //! re-loaded into a *new* `Arc` — in-flight requests keep the version
@@ -37,6 +40,9 @@ pub struct ServedModel {
     pub exe: Executable,
     /// Physical-units scaling; `None` serves the network's own space.
     pub scaling: Option<Scaling>,
+    /// Workload the checkpoint was trained on (sidecar `"workload"`
+    /// key); `None` for pre-workload sidecars and bare checkpoints.
+    pub workload: Option<String>,
 }
 
 impl ServedModel {
@@ -65,6 +71,7 @@ impl ServedModel {
             params,
             exe,
             scaling,
+            workload: None,
         })
     }
 
@@ -327,6 +334,7 @@ fn load_model(name: &str, path: &Path) -> anyhow::Result<ServedModel> {
     let params = load_params(path)?;
     let inferred = infer_arch(&params)?;
     let mut scaling = None;
+    let mut workload = None;
     let sidecar = path.with_extension("json");
     if sidecar.exists() {
         let text = std::fs::read_to_string(&sidecar)
@@ -345,8 +353,11 @@ fn load_model(name: &str, path: &Path) -> anyhow::Result<ServedModel> {
         if let Some(s) = doc.get("scaling") {
             scaling = Some(parse_scaling(s)?);
         }
+        workload = doc.get("workload").and_then(Json::as_str).map(str::to_string);
     }
-    ServedModel::from_params(name, params, scaling)
+    let mut model = ServedModel::from_params(name, params, scaling)?;
+    model.workload = workload;
+    Ok(model)
 }
 
 /// Write the `<checkpoint>.json` sidecar next to a checkpoint so the
@@ -360,9 +371,13 @@ pub fn write_sidecar(
     checkpoint_path: impl AsRef<Path>,
     arch: &[usize],
     scaling: Option<&Scaling>,
+    workload: Option<&str>,
 ) -> anyhow::Result<()> {
     use std::fmt::Write as _;
     let mut body = format!("{{\"arch\": {arch:?}");
+    if let Some(w) = workload {
+        let _ = write!(body, ", \"workload\": \"{w}\"");
+    }
     if let Some(s) = scaling {
         body.push_str(", \"scaling\": {\"in\": [");
         for (i, &(lo, hi)) in s.in_ranges.iter().enumerate() {
@@ -603,7 +618,7 @@ mod tests {
             in_ranges: vec![(0.1, 19.7), (-0.25, 0.25), (1.0e-3, 2.5)],
             out_range: (0.0, 123.456),
         };
-        write_sidecar(dir.join("m.dmdp"), &[3, 5, 2], Some(&scaling)).unwrap();
+        write_sidecar(dir.join("m.dmdp"), &[3, 5, 2], Some(&scaling), Some("rom")).unwrap();
         let (reg, report) = ModelRegistry::open(&dir);
         assert!(report.errors.is_empty(), "{:?}", report.errors);
         let model = reg.get("m").unwrap();
@@ -611,6 +626,17 @@ mod tests {
         // exact f32 bounds survive the JSON round-trip
         assert_eq!(loaded.in_ranges, scaling.in_ranges);
         assert_eq!(loaded.out_range, scaling.out_range);
+        assert_eq!(model.workload.as_deref(), Some("rom"));
+    }
+
+    #[test]
+    fn sidecar_without_workload_loads_as_untagged() {
+        let dir = temp_dir("no_workload");
+        write_model(&dir, "m", vec![3, 4, 2], 2);
+        std::fs::write(dir.join("m.json"), "{\"arch\": [3, 4, 2]}\n").unwrap();
+        let (reg, report) = ModelRegistry::open(&dir);
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(reg.get("m").unwrap().workload, None);
     }
 
     #[test]

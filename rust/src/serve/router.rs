@@ -2,7 +2,7 @@
 //!
 //! Routes:
 //! * `GET /healthz`  — liveness + loaded-model count
-//! * `GET /models`   — registry listing (name, arch, params, scaling)
+//! * `GET /models`   — registry listing (name, arch, params, scaling, workload)
 //! * `GET /metrics`  — Prometheus text exposition
 //! * `POST /reload`  — rescan the model directory now
 //! * `POST /predict` — JSON predict, coalesced by the micro-batcher
@@ -91,6 +91,12 @@ fn models(state: &AppState) -> Response {
             m.param_count(),
             m.scaling.is_some()
         );
+        // additive: only checkpoints with a workload-tagged sidecar
+        // carry the key, so pre-workload clients see unchanged rows
+        if let Some(w) = &m.workload {
+            body.pop();
+            let _ = write!(body, ",\"workload\":{}}}", Json::Str(w.clone()).encode());
+        }
     }
     body.push_str("]}");
     Response::json(200, body)

@@ -1,0 +1,63 @@
+//! The default workload: the paper's pollutant advection-diffusion-
+//! reaction regression (§4), wrapped behind the [`Workload`] trait.
+//!
+//! `generate` delegates verbatim to [`crate::pde::generate_dataset`] —
+//! same RNG construction, same solve order, same split — so datasets and
+//! training trajectories through the trait are bit-identical to the
+//! pre-workload pipeline (`tests/workload_equivalence.rs` pins this).
+
+use super::{rel_l2, EvalMetric, Predictor, Workload};
+use crate::config::DatagenConfig;
+use crate::data::Dataset;
+use crate::pde::DatagenReport;
+
+pub struct AdrWorkload;
+
+impl Workload for AdrWorkload {
+    fn name(&self) -> &'static str {
+        "adr"
+    }
+
+    fn description(&self) -> &'static str {
+        "steady pollutant ADR concentration regression (paper §4)"
+    }
+
+    fn default_artifact(&self) -> &'static str {
+        "paper"
+    }
+
+    fn default_dataset(&self) -> &'static str {
+        "runs/data/pollutant.dmdt"
+    }
+
+    fn dims(&self, cfg: &DatagenConfig) -> (usize, usize) {
+        // six physical parameters → the observed c₃ field
+        (6, cfg.n_obs)
+    }
+
+    fn generate(&self, cfg: &DatagenConfig, workers: usize) -> anyhow::Result<DatagenReport> {
+        crate::pde::generate_dataset(cfg, workers)
+    }
+
+    fn eval(&self, ds: &Dataset, predict: &mut Predictor) -> anyhow::Result<Vec<EvalMetric>> {
+        let x_phys = ds.scaling.unscale_inputs(&ds.x_test);
+        let y_truth = ds.scaling.unscale_outputs(&ds.y_test);
+        let y_pred = predict(&x_phys)?;
+        let rel = rel_l2(&y_pred, &y_truth);
+        let mut mse = 0.0f64;
+        for (&p, &t) in y_pred.data().iter().zip(y_truth.data()) {
+            mse += (p as f64 - t as f64).powi(2);
+        }
+        mse /= y_pred.data().len().max(1) as f64;
+        Ok(vec![
+            EvalMetric {
+                name: "test_rel_l2",
+                value: rel,
+            },
+            EvalMetric {
+                name: "test_mse_phys",
+                value: mse,
+            },
+        ])
+    }
+}

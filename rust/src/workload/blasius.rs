@@ -1,0 +1,248 @@
+//! Blasius boundary-layer surrogate workload: learn the similarity
+//! velocity profile f′(η) as a function of the wall parameters.
+//!
+//! Inputs are (f(0), f′(0), η) — blowing/suction strength, slip ratio
+//! and the similarity coordinate — and the target is f′(η) from the
+//! shooting solve in [`crate::pde::solve_blasius`] (paper eq. 7). The
+//! wall-parameter box is Latin-hypercube sampled inside the well-posed
+//! clamp range, each profile is tabulated on a uniform η grid, and the
+//! train/test split is **by profile** (whole profiles held out), so the
+//! test metric measures generalisation to unseen wall conditions rather
+//! than interpolation along a seen profile. Eval recomputes the exact
+//! ODE solution as the reference.
+
+use super::{rel_l2, EvalMetric, Predictor, Workload};
+use crate::config::DatagenConfig;
+use crate::data::{latin_hypercube, Dataset};
+use crate::pde::{solve_blasius, BlasiusSolution, DatagenReport};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Well-posed blowing/suction range for f(0) (strong blowing beyond
+/// this detaches the shooting solve).
+pub const BLOW_RANGE: (f64, f64) = (-1.5, 1.5);
+
+/// Well-posed slip-ratio range for f′(0).
+pub const SLIP_RANGE: (f64, f64) = (-0.9, 0.9);
+
+/// η grid upper edge — matches the solver's table.
+const ETA_MAX: f64 = 9.0;
+
+pub struct BlasiusWorkload;
+
+impl Workload for BlasiusWorkload {
+    fn name(&self) -> &'static str {
+        "blasius"
+    }
+
+    fn description(&self) -> &'static str {
+        "Blasius similarity-profile surrogate over the slip/blowing wall box (paper eq. 7)"
+    }
+
+    fn default_artifact(&self) -> &'static str {
+        "blasius"
+    }
+
+    fn default_dataset(&self) -> &'static str {
+        "runs/data/blasius.dmdt"
+    }
+
+    fn dims(&self, _cfg: &DatagenConfig) -> (usize, usize) {
+        // (f(0), f'(0), η) → f'(η)
+        (3, 1)
+    }
+
+    fn generate(&self, cfg: &DatagenConfig, workers: usize) -> anyhow::Result<DatagenReport> {
+        let t0 = std::time::Instant::now();
+        anyhow::ensure!(cfg.n_samples >= 4, "blasius workload needs >= 4 profiles");
+        anyhow::ensure!(
+            cfg.n_obs >= 2,
+            "blasius workload needs >= 2 eta points per profile"
+        );
+        let mut rng = Rng::new(cfg.seed);
+        let profiles = latin_hypercube(cfg.n_samples, &[BLOW_RANGE, SLIP_RANGE], &mut rng);
+        let n_eta = cfg.n_obs;
+        let eta = |j: usize| j as f64 / (n_eta as f64 - 1.0) * ETA_MAX;
+
+        // parallel shooting solves, static round-robin like the ADR
+        // datagen — deterministic and independent of worker count
+        let workers = workers.max(1).min(cfg.n_samples);
+        let mut rows: Vec<Option<Vec<f32>>> = vec![None; cfg.n_samples];
+        let errors = std::sync::Mutex::new(Vec::<String>::new());
+        {
+            let slots: Vec<std::sync::Mutex<&mut Option<Vec<f32>>>> =
+                rows.iter_mut().map(std::sync::Mutex::new).collect();
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let profiles = &profiles;
+                    let slots = &slots;
+                    let errors = &errors;
+                    scope.spawn(move || {
+                        for idx in (w..profiles.len()).step_by(workers) {
+                            match solve_blasius(profiles[idx][0], profiles[idx][1]) {
+                                Ok(sol) => {
+                                    let row: Vec<f32> =
+                                        (0..n_eta).map(|j| sol.fp_at(eta(j)) as f32).collect();
+                                    **slots[idx].lock().unwrap() = Some(row);
+                                }
+                                Err(e) => errors
+                                    .lock()
+                                    .unwrap()
+                                    .push(format!("profile {idx}: {e}")),
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        let errs = errors.into_inner().unwrap();
+        anyhow::ensure!(errs.is_empty(), "blasius failures: {}", errs.join("; "));
+
+        // split by profile so test profiles are entirely unseen
+        let mut split_rng = Rng::new(cfg.seed ^ 0x5117_5117);
+        let perm = split_rng.permutation(cfg.n_samples);
+        let n_train_p = ((cfg.n_samples as f64) * cfg.train_frac).round() as usize;
+        let n_test_p = cfg.n_samples - n_train_p;
+        anyhow::ensure!(n_train_p > 0 && n_test_p > 0, "degenerate split");
+        let gather = |idx: &[usize]| -> (Tensor, Tensor) {
+            let x = Tensor::from_fn(idx.len() * n_eta, 3, |r, c| {
+                let p = idx[r / n_eta];
+                match c {
+                    0 => profiles[p][0] as f32,
+                    1 => profiles[p][1] as f32,
+                    _ => eta(r % n_eta) as f32,
+                }
+            });
+            let y = Tensor::from_fn(idx.len() * n_eta, 1, |r, _| {
+                rows[idx[r / n_eta]].as_ref().expect("missing row")[r % n_eta]
+            });
+            (x, y)
+        };
+        let (x_train, y_train) = gather(&perm[..n_train_p]);
+        let (x_test, y_test) = gather(&perm[n_train_p..]);
+
+        let ds = Dataset::from_raw(x_train, y_train, x_test, y_test).with_workload("blasius");
+        ds.save(&cfg.out)?;
+        Ok(DatagenReport {
+            n_train: n_train_p * n_eta,
+            n_test: n_test_p * n_eta,
+            n_obs: n_eta,
+            mean_picard_iters: 0.0,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn eval(&self, ds: &Dataset, predict: &mut Predictor) -> anyhow::Result<Vec<EvalMetric>> {
+        use std::collections::HashMap;
+        let x_phys = ds.scaling.unscale_inputs(&ds.x_test);
+        let y_pred = predict(&x_phys)?;
+        anyhow::ensure!(y_pred.shape() == (x_phys.rows(), 1), "predictor shape");
+
+        // the exact ODE solution is the reference (not the stored f32
+        // targets): one shooting solve per unique wall-parameter pair
+        let mut cache: HashMap<(u64, u64), BlasiusSolution> = HashMap::new();
+        let mut truth = Tensor::zeros(x_phys.rows(), 1);
+        for r in 0..x_phys.rows() {
+            let f0 = x_phys.get(r, 0) as f64;
+            let fp0 = x_phys.get(r, 1) as f64;
+            let key = (f0.to_bits(), fp0.to_bits());
+            if !cache.contains_key(&key) {
+                cache.insert(key, solve_blasius(f0, fp0)?);
+            }
+            let sol = &cache[&key];
+            truth.set(r, 0, sol.fp_at(x_phys.get(r, 2) as f64) as f32);
+        }
+
+        let mut mae = 0.0f64;
+        let mut max_err = 0.0f64;
+        for (&p, &t) in y_pred.data().iter().zip(truth.data()) {
+            let e = (p as f64 - t as f64).abs();
+            mae += e;
+            max_err = max_err.max(e);
+        }
+        mae /= y_pred.data().len().max(1) as f64;
+        Ok(vec![
+            EvalMetric {
+                name: "mae_fp",
+                value: mae,
+            },
+            EvalMetric {
+                name: "max_err_fp",
+                value: max_err,
+            },
+            EvalMetric {
+                name: "test_rel_l2",
+                value: rel_l2(&y_pred, &truth),
+            },
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dir: &std::path::Path, name: &str, seed: u64) -> DatagenConfig {
+        DatagenConfig {
+            n_samples: 8,
+            n_obs: 16,
+            train_frac: 0.75,
+            seed,
+            out: dir.join(name).to_str().unwrap().to_string(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_split_by_profile() {
+        let dir = std::env::temp_dir().join("dmdtrain_blasius_gen");
+        std::fs::create_dir_all(&dir).unwrap();
+        let report = BlasiusWorkload.generate(&cfg(&dir, "a.dmdt", 7), 1).unwrap();
+        assert_eq!(report.n_train, 6 * 16);
+        assert_eq!(report.n_test, 2 * 16);
+        BlasiusWorkload.generate(&cfg(&dir, "b.dmdt", 7), 4).unwrap();
+        let a = std::fs::read(dir.join("a.dmdt")).unwrap();
+        let b = std::fs::read(dir.join("b.dmdt")).unwrap();
+        assert_eq!(a, b, "blasius datagen must not depend on worker count");
+
+        let ds = Dataset::load(dir.join("a.dmdt")).unwrap();
+        assert_eq!(ds.workload, "blasius");
+        assert_eq!(ds.n_in(), 3);
+        assert_eq!(ds.n_out(), 1);
+        // split is by profile: every (f0, fp0) pair in test is absent
+        // from train
+        let x_tr = ds.scaling.unscale_inputs(&ds.x_train);
+        let x_te = ds.scaling.unscale_inputs(&ds.x_test);
+        let pair = |t: &Tensor, r: usize| (t.get(r, 0).to_bits(), t.get(r, 1).to_bits());
+        let train_pairs: std::collections::HashSet<_> =
+            (0..x_tr.rows()).map(|r| pair(&x_tr, r)).collect();
+        for r in 0..x_te.rows() {
+            assert!(
+                !train_pairs.contains(&pair(&x_te, r)),
+                "test profile leaked into train"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_solver_scores_near_zero() {
+        // feeding the ODE solution back through eval must score ≈ 0 —
+        // the reference and the predictor agree up to f32 rounding
+        let dir = std::env::temp_dir().join("dmdtrain_blasius_eval");
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = cfg(&dir, "e.dmdt", 3);
+        BlasiusWorkload.generate(&c, 2).unwrap();
+        let ds = Dataset::load(&c.out).unwrap();
+        let mut oracle = |x: &Tensor| -> anyhow::Result<Tensor> {
+            let mut out = Tensor::zeros(x.rows(), 1);
+            for r in 0..x.rows() {
+                let sol = solve_blasius(x.get(r, 0) as f64, x.get(r, 1) as f64)?;
+                out.set(r, 0, sol.fp_at(x.get(r, 2) as f64) as f32);
+            }
+            Ok(out)
+        };
+        let metrics = BlasiusWorkload.eval(&ds, &mut oracle).unwrap();
+        let mae = metrics.iter().find(|m| m.name == "mae_fp").unwrap();
+        assert!(mae.value < 1e-6, "mae_fp = {}", mae.value);
+    }
+}

@@ -1,0 +1,187 @@
+//! Pluggable workloads: the *problem* half of a training run, behind one
+//! trait (ROADMAP item 5).
+//!
+//! A [`Workload`] owns everything scenario-specific — data generation,
+//! input/output dimensionality, physical scaling conventions and the
+//! evaluation metrics that make sense for that problem — so the trainer,
+//! sweep coordinator and serve registry stay scenario-agnostic. Configs
+//! select one by name (`[workload] name = "…"` / `--workload`); datasets
+//! carry the generating workload's name in their header
+//! ([`crate::data::Dataset`] v2) and checkpoints propagate it through the
+//! registry sidecar so served models stay attributable.
+//!
+//! Implementations:
+//! * [`adr::AdrWorkload`] (`"adr"`, the default) — the paper's pollutant
+//!   ADR regression, delegating verbatim to [`crate::pde::generate_dataset`]
+//!   so the refactor is bit-identical to the seed pipeline (locked by
+//!   `tests/workload_equivalence.rs`);
+//! * [`rom::RomWorkload`] (`"rom"`) — a transient-flow reduced-order
+//!   model in the spirit of San, Maulik & Ahmed (arxiv 1802.09474): POD
+//!   coefficients of a 1-D viscous Burgers transient, net advances the
+//!   coefficient vector one snapshot interval, eval = rollout error;
+//! * [`blasius::BlasiusWorkload`] (`"blasius"`) — the similarity-profile
+//!   surrogate over the slip/blowing wall-parameter box of
+//!   [`crate::pde::solve_blasius`].
+
+pub mod adr;
+pub mod blasius;
+pub mod rom;
+
+pub use adr::AdrWorkload;
+pub use blasius::BlasiusWorkload;
+pub use rom::RomWorkload;
+
+use crate::config::DatagenConfig;
+use crate::data::{Dataset, Scaling};
+use crate::model::Arch;
+use crate::pde::DatagenReport;
+use crate::tensor::Tensor;
+
+/// One named evaluation number, in the workload's physical units.
+#[derive(Clone, Debug)]
+pub struct EvalMetric {
+    pub name: &'static str,
+    pub value: f64,
+}
+
+/// A physical-units predictor: rows of physical inputs → rows of
+/// physical outputs. [`physical_predictor`] builds one from a trained
+/// net + the dataset's scaling; eval metrics never see scaled values.
+pub type Predictor<'a> = dyn FnMut(&Tensor) -> anyhow::Result<Tensor> + 'a;
+
+/// One training scenario: datagen, dimensionality and evaluation.
+pub trait Workload: Sync {
+    /// Registry key ("adr", "rom", "blasius").
+    fn name(&self) -> &'static str;
+
+    /// One-line human description (CLI listings).
+    fn description(&self) -> &'static str;
+
+    /// Builtin-manifest artifact whose arch matches this workload's
+    /// dims — the default when the config names no `model.artifact`.
+    fn default_artifact(&self) -> &'static str;
+
+    /// Default dataset path for this workload (`data.path` fallback).
+    fn default_dataset(&self) -> &'static str;
+
+    /// (n_in, n_out) of the dataset `generate` would produce under `cfg`.
+    fn dims(&self, cfg: &DatagenConfig) -> (usize, usize);
+
+    /// Generate the dataset and write it to `cfg.out`, tagged with this
+    /// workload's name. Deterministic in `cfg.seed` and independent of
+    /// `workers`.
+    fn generate(&self, cfg: &DatagenConfig, workers: usize) -> anyhow::Result<DatagenReport>;
+
+    /// Workload-specific test metrics for a trained model, computed in
+    /// physical units against the reference solution where one exists.
+    fn eval(&self, ds: &Dataset, predict: &mut Predictor) -> anyhow::Result<Vec<EvalMetric>>;
+}
+
+static ADR: AdrWorkload = AdrWorkload;
+static ROM: RomWorkload = RomWorkload;
+static BLASIUS: BlasiusWorkload = BlasiusWorkload;
+
+/// Every registered workload, in listing order.
+pub fn all() -> [&'static dyn Workload; 3] {
+    [&ADR, &ROM, &BLASIUS]
+}
+
+/// Registered workload names, in listing order.
+pub fn names() -> Vec<&'static str> {
+    all().iter().map(|w| w.name()).collect()
+}
+
+/// Look a workload up by name.
+pub fn get(name: &str) -> anyhow::Result<&'static dyn Workload> {
+    all()
+        .into_iter()
+        .find(|w| w.name() == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown workload '{name}' (available: {})",
+                names().join(", ")
+            )
+        })
+}
+
+/// Wrap a trained net and its dataset scaling into the physical-units
+/// predictor [`Workload::eval`] consumes: scale inputs, run the forward
+/// oracle, unscale outputs.
+pub fn physical_predictor<'a>(
+    arch: &'a Arch,
+    params: &'a [Tensor],
+    scaling: &'a Scaling,
+) -> impl FnMut(&Tensor) -> anyhow::Result<Tensor> + 'a {
+    move |x_phys: &Tensor| {
+        let xs = scaling.scale_inputs(x_phys);
+        let ys = crate::model::forward(arch, params, &xs);
+        Ok(scaling.unscale_outputs(&ys))
+    }
+}
+
+/// Relative Frobenius error ‖pred − truth‖ / ‖truth‖ (physical units).
+pub(crate) fn rel_l2(pred: &Tensor, truth: &Tensor) -> f64 {
+    assert_eq!(pred.shape(), truth.shape());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&p, &t) in pred.data().iter().zip(truth.data()) {
+        num += (p as f64 - t as f64).powi(2);
+        den += (t as f64).powi(2);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        assert_eq!(names(), vec!["adr", "rom", "blasius"]);
+        for name in names() {
+            let w = get(name).unwrap();
+            assert_eq!(w.name(), name);
+            assert!(!w.description().is_empty());
+            assert!(!w.default_artifact().is_empty());
+            assert!(w.default_dataset().ends_with(".dmdt"));
+        }
+        let err = get("pollutant").unwrap_err().to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("adr, rom, blasius"), "{err}");
+    }
+
+    #[test]
+    fn dims_match_default_artifacts() {
+        // every workload's default artifact must exist in the builtin
+        // manifest with matching input/output widths — the contract that
+        // lets `--workload NAME` train without naming an arch
+        let manifest = crate::runtime::Manifest::builtin();
+        let cfg = DatagenConfig::default();
+        for w in all() {
+            let entry = manifest
+                .get(&format!("train_step_{}", w.default_artifact()))
+                .unwrap_or_else(|| panic!("no builtin artifact for {}", w.name()));
+            let (n_in, n_out) = w.dims(&cfg);
+            assert_eq!(
+                entry.arch.first().copied(),
+                Some(n_in),
+                "{}: input width",
+                w.name()
+            );
+            assert_eq!(
+                entry.arch.last().copied(),
+                Some(n_out),
+                "{}: output width",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn rel_l2_basics() {
+        let a = Tensor::from_vec(1, 2, vec![3.0, 4.0]);
+        let z = Tensor::from_vec(1, 2, vec![0.0, 0.0]);
+        assert!((rel_l2(&z, &a) - 1.0).abs() < 1e-12);
+        assert_eq!(rel_l2(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Transient-flow ROM workload (San, Maulik & Ahmed, arxiv 1802.09474
+//! style): learn the discrete-time map of POD coefficients of a 1-D
+//! viscous Burgers transient.
+//!
+//! Pipeline: integrate `u_t + u u_x = ν u_xx` (Dirichlet walls, seeded
+//! two-mode initial condition) to a uniform snapshot sequence; project
+//! the mean-subtracted snapshots onto the leading [`ROM_MODES`] POD
+//! modes via the spatial correlation eigenproblem
+//! ([`crate::linalg::jacobi::eig_sym`], the same machinery as the DMD
+//! low-cost SVD); each dataset row maps the coefficient vector a(tₖ) to
+//! a(tₖ₊₁). The split is **time-ordered** (first `train_frac` of the
+//! trajectory trains, the tail tests), so eval can roll the surrogate
+//! out over the unseen horizon — the metric that matters for a ROM,
+//! and genuinely different training dynamics for the weight-space DMD
+//! accelerator than the steady ADR regression.
+
+use super::{rel_l2, EvalMetric, Predictor, Workload};
+use crate::config::DatagenConfig;
+use crate::data::Dataset;
+use crate::linalg::jacobi::eig_sym;
+use crate::pde::DatagenReport;
+use crate::rng::Rng;
+use crate::tensor::{Mat, Tensor};
+
+/// Retained POD modes — the net's input *and* output width (matches the
+/// builtin `rom` artifact arch).
+pub const ROM_MODES: usize = 8;
+
+/// Kinematic viscosity of the transient.
+const NU: f64 = 0.01;
+
+/// Simulated horizon.
+const T_END: f64 = 2.0;
+
+pub struct RomWorkload;
+
+/// Integrate Burgers on `nx` interior points of [0, 1] (u = 0 walls)
+/// and return `n_snap` uniformly spaced snapshots, the first at t = 0.
+/// First-order upwind convection + central diffusion, explicit Euler
+/// with a stability-limited substep that lands exactly on snapshot
+/// times — serial f64, so the trajectory is bit-deterministic.
+fn burgers_snapshots(nx: usize, u0: &[f64], n_snap: usize) -> Mat {
+    let dx = 1.0 / (nx as f64 + 1.0);
+    let u_max = u0.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-9);
+    let dt_stable = 0.4 * (dx * dx / (2.0 * NU)).min(dx / u_max);
+    let dt_snap = T_END / (n_snap as f64 - 1.0);
+    let substeps = (dt_snap / dt_stable).ceil().max(1.0) as usize;
+    let dt = dt_snap / substeps as f64;
+
+    let mut u = u0.to_vec();
+    let mut next = vec![0.0f64; nx];
+    let mut snaps = Mat::zeros(nx, n_snap);
+    for (j, &v) in u.iter().enumerate() {
+        snaps.set(j, 0, v);
+    }
+    for k in 1..n_snap {
+        for _ in 0..substeps {
+            for j in 0..nx {
+                let ul = if j > 0 { u[j - 1] } else { 0.0 };
+                let ur = if j + 1 < nx { u[j + 1] } else { 0.0 };
+                let conv = if u[j] >= 0.0 {
+                    u[j] * (u[j] - ul) / dx
+                } else {
+                    u[j] * (ur - u[j]) / dx
+                };
+                let diff = NU * (ur - 2.0 * u[j] + ul) / (dx * dx);
+                next[j] = u[j] + dt * (diff - conv);
+            }
+            std::mem::swap(&mut u, &mut next);
+        }
+        for (j, &v) in u.iter().enumerate() {
+            snaps.set(j, k, v);
+        }
+    }
+    snaps
+}
+
+/// POD by the spatial correlation eigenproblem: modes are the leading
+/// eigenvectors of `C = A Aᵀ / n_snap` (A = mean-subtracted snapshots,
+/// nx × n_snap; nx ≪ n_snap here so this is the cheap side of the
+/// method of snapshots). Returns (mean, modes nx × r, energy fraction).
+fn pod_modes(snaps: &Mat, r: usize) -> (Vec<f64>, Mat, f64) {
+    let (nx, n_snap) = snaps.shape();
+    let mut mean = vec![0.0f64; nx];
+    for j in 0..nx {
+        for k in 0..n_snap {
+            mean[j] += snaps.get(j, k);
+        }
+        mean[j] /= n_snap as f64;
+    }
+    let a = Mat::from_fn(nx, n_snap, |j, k| snaps.get(j, k) - mean[j]);
+    let mut c = a.matmul(&a.transpose());
+    c.scale(1.0 / n_snap as f64);
+    let (eigs, vecs) = eig_sym(&c);
+    let total: f64 = eigs.iter().map(|&l| l.max(0.0)).sum();
+    let captured: f64 = eigs.iter().take(r).map(|&l| l.max(0.0)).sum();
+    let modes = Mat::from_fn(nx, r, |j, i| vecs.get(j, i));
+    (mean, modes, captured / total.max(1e-300))
+}
+
+/// Project one snapshot column onto the modes: aᵢ = φᵢᵀ (u − ū).
+fn project(snaps: &Mat, k: usize, mean: &[f64], modes: &Mat) -> Vec<f64> {
+    let (nx, r) = modes.shape();
+    let mut a = vec![0.0f64; r];
+    for i in 0..r {
+        for j in 0..nx {
+            a[i] += modes.get(j, i) * (snaps.get(j, k) - mean[j]);
+        }
+    }
+    a
+}
+
+impl Workload for RomWorkload {
+    fn name(&self) -> &'static str {
+        "rom"
+    }
+
+    fn description(&self) -> &'static str {
+        "POD-coefficient time advancement of a viscous Burgers transient (arxiv 1802.09474)"
+    }
+
+    fn default_artifact(&self) -> &'static str {
+        "rom"
+    }
+
+    fn default_dataset(&self) -> &'static str {
+        "runs/data/rom.dmdt"
+    }
+
+    fn dims(&self, _cfg: &DatagenConfig) -> (usize, usize) {
+        (ROM_MODES, ROM_MODES)
+    }
+
+    fn generate(&self, cfg: &DatagenConfig, _workers: usize) -> anyhow::Result<DatagenReport> {
+        let t0 = std::time::Instant::now();
+        let nx = cfg.nx;
+        anyhow::ensure!(
+            nx >= ROM_MODES,
+            "rom workload needs pde.nx >= {ROM_MODES} grid points, got {nx}"
+        );
+        anyhow::ensure!(cfg.n_samples >= 4, "rom workload needs >= 4 snapshot pairs");
+        // seeded two-mode initial condition: the seed perturbs the mode
+        // amplitudes, so different seeds give different trajectories
+        let mut rng = Rng::new(cfg.seed);
+        let a1 = rng.uniform_in(0.8, 1.2);
+        let a2 = rng.uniform_in(0.2, 0.4);
+        let dx = 1.0 / (nx as f64 + 1.0);
+        let u0: Vec<f64> = (0..nx)
+            .map(|j| {
+                let x = (j as f64 + 1.0) * dx;
+                a1 * (std::f64::consts::PI * x).sin()
+                    + a2 * (2.0 * std::f64::consts::PI * x).sin()
+            })
+            .collect();
+
+        let n_snap = cfg.n_samples + 1; // n_samples (a(tₖ), a(tₖ₊₁)) pairs
+        let snaps = burgers_snapshots(nx, &u0, n_snap);
+        let (mean, modes, energy) = pod_modes(&snaps, ROM_MODES);
+        anyhow::ensure!(
+            energy > 0.9,
+            "POD basis captures only {:.1}% of the snapshot energy — raise ROM_MODES or nx",
+            energy * 100.0
+        );
+        let coeffs: Vec<Vec<f64>> = (0..n_snap)
+            .map(|k| project(&snaps, k, &mean, &modes))
+            .collect();
+
+        // time-ordered split: train on the head of the trajectory, test
+        // on the tail the rollout eval extrapolates into
+        let n_pairs = cfg.n_samples;
+        let n_train = ((n_pairs as f64) * cfg.train_frac).round() as usize;
+        let n_test = n_pairs - n_train;
+        anyhow::ensure!(n_train > 0 && n_test > 0, "degenerate split");
+        let rows = |from: usize, count: usize| -> (Tensor, Tensor) {
+            let x = Tensor::from_fn(count, ROM_MODES, |r, c| coeffs[from + r][c] as f32);
+            let y = Tensor::from_fn(count, ROM_MODES, |r, c| coeffs[from + r + 1][c] as f32);
+            (x, y)
+        };
+        let (x_train, y_train) = rows(0, n_train);
+        let (x_test, y_test) = rows(n_train, n_test);
+
+        let ds = Dataset::from_raw(x_train, y_train, x_test, y_test).with_workload("rom");
+        ds.save(&cfg.out)?;
+        Ok(DatagenReport {
+            n_train,
+            n_test,
+            n_obs: ROM_MODES,
+            mean_picard_iters: 0.0,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn eval(&self, ds: &Dataset, predict: &mut Predictor) -> anyhow::Result<Vec<EvalMetric>> {
+        let x_phys = ds.scaling.unscale_inputs(&ds.x_test);
+        let y_truth = ds.scaling.unscale_outputs(&ds.y_test);
+        // teacher-forced one-step error over the test tail
+        let one_step = rel_l2(&predict(&x_phys)?, &y_truth);
+
+        // autonomous rollout from the first test state: feed predictions
+        // back in and measure drift over the whole unseen horizon
+        let horizon = ds.n_test();
+        let mut state = Tensor::from_fn(1, ds.n_in(), |_, c| x_phys.get(0, c));
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for k in 0..horizon {
+            state = predict(&state)?;
+            for c in 0..ds.n_out() {
+                let p = state.get(0, c) as f64;
+                let t = y_truth.get(k, c) as f64;
+                num += (p - t).powi(2);
+                den += t.powi(2);
+            }
+        }
+        let rollout = (num / den.max(1e-300)).sqrt();
+        Ok(vec![
+            EvalMetric {
+                name: "one_step_rel_l2",
+                value: one_step,
+            },
+            EvalMetric {
+                name: "rollout_rel_l2",
+                value: rollout,
+            },
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burgers_decays_and_stays_finite() {
+        let nx = 32;
+        let dx = 1.0 / (nx as f64 + 1.0);
+        let u0: Vec<f64> = (0..nx)
+            .map(|j| (std::f64::consts::PI * (j as f64 + 1.0) * dx).sin())
+            .collect();
+        let snaps = burgers_snapshots(nx, &u0, 50);
+        assert!(snaps.is_finite());
+        let energy = |k: usize| -> f64 { (0..nx).map(|j| snaps.get(j, k).powi(2)).sum() };
+        // viscous decay: energy strictly drops over the horizon
+        assert!(energy(49) < 0.8 * energy(0));
+        assert!(energy(49) > 0.0);
+    }
+
+    #[test]
+    fn pod_basis_is_orthonormal_and_captures_energy() {
+        let nx = 24;
+        let dx = 1.0 / (nx as f64 + 1.0);
+        let u0: Vec<f64> = (0..nx)
+            .map(|j| {
+                let x = (j as f64 + 1.0) * dx;
+                (std::f64::consts::PI * x).sin() + 0.3 * (2.0 * std::f64::consts::PI * x).sin()
+            })
+            .collect();
+        let snaps = burgers_snapshots(nx, &u0, 40);
+        let (_, modes, energy) = pod_modes(&snaps, 4);
+        assert!(energy > 0.99, "4 modes capture {energy}");
+        for i in 0..4 {
+            for l in i..4 {
+                let dot: f64 = (0..nx).map(|j| modes.get(j, i) * modes.get(j, l)).sum();
+                let want = if i == l { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-9, "modes {i},{l}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_tagged() {
+        let dir = std::env::temp_dir().join("dmdtrain_rom_gen");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = |name: &str| DatagenConfig {
+            nx: 32,
+            n_samples: 24,
+            train_frac: 0.75,
+            seed: 9,
+            out: dir.join(name).to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        let report = RomWorkload.generate(&cfg("a.dmdt"), 1).unwrap();
+        assert_eq!(report.n_train, 18);
+        assert_eq!(report.n_test, 6);
+        RomWorkload.generate(&cfg("b.dmdt"), 4).unwrap();
+        let a = std::fs::read(dir.join("a.dmdt")).unwrap();
+        let b = std::fs::read(dir.join("b.dmdt")).unwrap();
+        assert_eq!(a, b, "rom datagen must not depend on worker count");
+
+        let ds = Dataset::load(dir.join("a.dmdt")).unwrap();
+        assert_eq!(ds.workload, "rom");
+        assert_eq!(ds.n_in(), ROM_MODES);
+        assert_eq!(ds.n_out(), ROM_MODES);
+        // consecutive pairs chain: y_train row k == x_train row k+1
+        for k in 0..ds.n_train() - 1 {
+            assert_eq!(ds.scaling.unscale_outputs(&ds.y_train).row(k).len(), ROM_MODES);
+        }
+        // a different seed produces a different trajectory
+        let mut c2 = cfg("c.dmdt");
+        c2.seed = 10;
+        RomWorkload.generate(&c2, 1).unwrap();
+        let c = std::fs::read(dir.join("c.dmdt")).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn exact_map_scores_near_zero_rollout_error() {
+        // feeding the true coefficient map back through eval must give
+        // ~zero one-step and rollout error (sanity for the metric)
+        let dir = std::env::temp_dir().join("dmdtrain_rom_eval");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = DatagenConfig {
+            nx: 32,
+            n_samples: 20,
+            train_frac: 0.5,
+            seed: 3,
+            out: dir.join("e.dmdt").to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        RomWorkload.generate(&cfg, 1).unwrap();
+        let ds = Dataset::load(dir.join("e.dmdt")).unwrap();
+        let x_phys = ds.scaling.unscale_inputs(&ds.x_test);
+        let y_phys = ds.scaling.unscale_outputs(&ds.y_test);
+        // oracle: look the state up in the test split (rollout feeds
+        // predictions back, which match truth to f32 precision here)
+        let mut oracle = |x: &Tensor| -> anyhow::Result<Tensor> {
+            let mut out = Tensor::zeros(x.rows(), y_phys.cols());
+            for r in 0..x.rows() {
+                let k = (0..x_phys.rows())
+                    .min_by(|&i, &j| {
+                        let d = |idx: usize| -> f64 {
+                            (0..x.cols())
+                                .map(|c| (x.get(r, c) as f64 - x_phys.get(idx, c) as f64).powi(2))
+                                .sum()
+                        };
+                        d(i).partial_cmp(&d(j)).unwrap()
+                    })
+                    .unwrap();
+                for c in 0..out.cols() {
+                    out.set(r, c, y_phys.get(k, c));
+                }
+            }
+            Ok(out)
+        };
+        let metrics = RomWorkload.eval(&ds, &mut oracle).unwrap();
+        assert_eq!(metrics.len(), 2);
+        for m in &metrics {
+            assert!(m.value < 1e-2, "{}: {}", m.name, m.value);
+        }
+    }
+}

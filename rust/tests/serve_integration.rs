@@ -337,6 +337,75 @@ fn scaling_sidecar_served_in_physical_units() {
     server.shutdown();
 }
 
+/// One registry, two workloads: checkpoints trained on different
+/// scenarios (rom-shaped and blasius-shaped, distinct archs and
+/// scalings) serve side by side. `GET /models` attributes each to its
+/// workload, and `/predict` answers in each one's own physical units.
+#[test]
+fn two_workloads_served_side_by_side() {
+    let dir = temp_dir("two_workloads");
+    let rom_params = write_model(&dir, "rom_net", vec![8, 6, 8], 21);
+    let bl_params = write_model(&dir, "blasius_net", vec![3, 5, 1], 22);
+    std::fs::write(
+        dir.join("rom_net.json"),
+        r#"{"arch": [8, 6, 8], "workload": "rom", "scaling": {"in": [[-2, 2], [-2, 2], [-2, 2], [-2, 2], [-2, 2], [-2, 2], [-2, 2], [-2, 2]], "out": [-2, 2]}}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("blasius_net.json"),
+        r#"{"arch": [3, 5, 1], "workload": "blasius", "scaling": {"in": [[-1.5, 1.5], [-0.9, 0.9], [0, 9]], "out": [0, 1.5]}}"#,
+    )
+    .unwrap();
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+    let addr = server.addr();
+
+    let (status, body) = request(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"name\":\"rom_net\""), "{body}");
+    assert!(body.contains("\"workload\":\"rom\""), "{body}");
+    assert!(body.contains("\"workload\":\"blasius\""), "{body}");
+
+    // each model answers through its own scaling
+    let rom_row: Vec<f32> = vec![0.5, -1.0, 0.25, 1.5, -0.75, 0.0, 2.0, -2.0];
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/predict",
+        &predict_body(Some("rom_net"), &[&rom_row]),
+    );
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+    let rom_scaling = dmdtrain::data::Scaling {
+        in_ranges: vec![(-2.0, 2.0); 8],
+        out_range: (-2.0, 2.0),
+    };
+    let x = Tensor::from_vec(1, 8, rom_row);
+    let ys = direct_exe(&[8, 6, 8])
+        .predict_all(&rom_params, &rom_scaling.scale_inputs(&x))
+        .unwrap();
+    assert_bit_identical(&served, &rom_scaling.unscale_outputs(&ys));
+
+    let bl_row: Vec<f32> = vec![0.3, -0.45, 4.5];
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/predict",
+        &predict_body(Some("blasius_net"), &[&bl_row]),
+    );
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+    let bl_scaling = dmdtrain::data::Scaling {
+        in_ranges: vec![(-1.5, 1.5), (-0.9, 0.9), (0.0, 9.0)],
+        out_range: (0.0, 1.5),
+    };
+    let x = Tensor::from_vec(1, 3, bl_row);
+    let ys = direct_exe(&[3, 5, 1])
+        .predict_all(&bl_params, &bl_scaling.scale_inputs(&x))
+        .unwrap();
+    assert_bit_identical(&served, &bl_scaling.unscale_outputs(&ys));
+    server.shutdown();
+}
+
 #[test]
 fn shutdown_stays_bounded_with_byte_at_a_time_client() {
     let dir = temp_dir("slowclient");

@@ -174,9 +174,10 @@ fn crash_hang_and_exhaustion_degrade_gracefully() {
     let text = std::fs::read_to_string(&csv).unwrap();
     let failed_line = text.lines().last().unwrap();
     let cols: Vec<&str> = failed_line.split(',').collect();
-    assert_eq!(cols.len(), 10);
-    assert_eq!(cols[8], "failed");
-    assert!(cols[9].contains("exit code 101"), "{failed_line}");
+    assert_eq!(cols.len(), 11);
+    assert_eq!(cols[0], "adr", "failed cells still name their arm");
+    assert_eq!(cols[9], "failed");
+    assert!(cols[10].contains("exit code 101"), "{failed_line}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -252,6 +253,97 @@ fn torn_ledger_tail_is_ignored_on_resume() {
         std::fs::read(&a_csv).unwrap(),
         std::fs::read(&b_csv).unwrap(),
         "torn tail must cost one re-run, not correctness"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Synthetic 8 → 8 regression task matching the `rom` artifact, tagged
+/// with the rom workload (the sweep trains it; no ROM semantics needed).
+fn synthetic_rom_dataset(seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 8, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, 8, |r, c| {
+            (x.get(r, c) as f64 * 0.5 + 0.05 * (c as f64)).sin() as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(16, &mut rng);
+    let (x_test, y_test) = gen(8, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test).with_workload("rom")
+}
+
+/// Workload arms fan out across worker processes: a two-arm sweep
+/// (adr on the `test` arch × rom on the `rom` arch) yields one row per
+/// arm × m × s grouped by arm in spec order, writes one resolved worker
+/// config per arm, and a resume against the complete ledger replays
+/// every cell without spawning a single worker.
+#[test]
+fn workload_arms_fan_out_and_replay() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let dir = tmp_dir("arms");
+    let adr_path = dir.join("adr.dmdt");
+    let adr_ds = synthetic_dataset(12);
+    adr_ds.save(&adr_path).unwrap();
+    let rom_path = dir.join("rom.dmdt");
+    synthetic_rom_dataset(13).save(&rom_path).unwrap();
+    let text = format!(
+        r#"
+[model]
+artifact = "test"
+[data]
+path = "{}"
+[train]
+epochs = 6
+seed = 5
+eval_every = 3
+log_every = 0
+[adam]
+lr = 0.003
+[dmd]
+enabled = true
+m = 3
+s = 5
+[accel]
+kind = "dmd"
+[sweep]
+m_values = [3, 4]
+s_values = [6]
+epochs = 6
+workers = 1
+max_retries = 2
+backoff_ms = 1
+isolation = "process"
+workloads = ["adr:test:{}", "rom:rom:{}"]
+"#,
+        adr_path.display(),
+        adr_path.display(),
+        rom_path.display()
+    );
+    let sweep = SweepConfig::from_config(&Config::parse(&text).unwrap()).unwrap();
+    let a_dir = dir.join("a");
+    let full = run_sweep_with(&artifact_dir(), &sweep, &adr_ds, &opts(&a_dir, false)).unwrap();
+    assert_eq!(full.cells.len(), 4, "2 arms × 2 m values × 1 s value");
+    let arms: Vec<&str> = full.cells.iter().map(|c| c.workload.as_str()).collect();
+    assert_eq!(arms, ["adr", "adr", "rom", "rom"], "arms outermost, spec order");
+    assert!(full.cells.iter().all(|c| c.is_ok()), "all cells trained");
+    assert!(a_dir.join("sweep-worker-0.toml").exists());
+    assert!(a_dir.join("sweep-worker-1.toml").exists());
+    let a_csv = dir.join("a.csv");
+    full.write_csv(&a_csv).unwrap();
+
+    // Resume with every cell already recorded: replay must satisfy the
+    // whole grid. The persistent crash point would exhaust any cell the
+    // coordinator wrongly re-ran, breaking the byte-identity below.
+    let _fp = failpoint::scoped("sweep.worker.crash", FailAction::Panic);
+    let resumed = run_sweep_with(&artifact_dir(), &sweep, &adr_ds, &opts(&a_dir, true)).unwrap();
+    let b_csv = dir.join("b.csv");
+    resumed.write_csv(&b_csv).unwrap();
+    assert_eq!(
+        std::fs::read(&a_csv).unwrap(),
+        std::fs::read(&b_csv).unwrap(),
+        "replayed multi-arm CSV must be byte-identical"
     );
     std::fs::remove_dir_all(&dir).unwrap();
 }

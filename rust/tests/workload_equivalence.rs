@@ -1,0 +1,180 @@
+//! The workload-subsystem acceptance gate: routing the paper's ADR
+//! scenario through the [`dmdtrain::workload::Workload`] trait must be
+//! bit-identical to the seed pipeline it wraps.
+//!
+//! Three pins:
+//! 1. datagen — `workload::get("adr").generate(...)` writes the *same
+//!    bytes* as the direct `pde::generate_dataset` call it delegates to;
+//! 2. training — a config that selects the workload explicitly
+//!    (`[workload] name = "adr"`) produces the identical loss history,
+//!    DMD jump schedule and final parameters as the pre-workload config
+//!    shape with no `[workload]` section;
+//! 3. legacy data — version-1 dataset bytes (no workload tag, no CRC)
+//!    re-encoded from a real datagen output still load, are tagged
+//!    `adr`, and carry tensors equal to the version-2 file.
+//!
+//! If any of these drift, the refactor stopped being a refactor.
+
+use dmdtrain::config::{Config, DatagenConfig, TrainConfig};
+use dmdtrain::data::Dataset;
+use dmdtrain::pde;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::Runtime;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::TrainSession;
+use dmdtrain::util;
+use dmdtrain::workload;
+
+fn datagen_cfg(out: &std::path::Path) -> DatagenConfig {
+    DatagenConfig {
+        nx: 32,
+        ny: 16,
+        n_obs: 40,
+        n_samples: 12,
+        train_frac: 0.75,
+        seed: 7,
+        out: out.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adr_datagen_through_trait_is_bit_identical() {
+    let dir = std::env::temp_dir().join("dmdtrain_wkeq_datagen");
+    std::fs::create_dir_all(&dir).unwrap();
+    let direct = dir.join("direct.dmdt");
+    let traited = dir.join("trait.dmdt");
+
+    pde::generate_dataset(&datagen_cfg(&direct), 2).unwrap();
+    let adr = workload::get("adr").unwrap();
+    adr.generate(&datagen_cfg(&traited), 2).unwrap();
+
+    let a = std::fs::read(&direct).unwrap();
+    let b = std::fs::read(&traited).unwrap();
+    assert_eq!(a, b, "trait-path datagen drifted from the seed pipeline");
+
+    let ds = Dataset::load(&traited).unwrap();
+    assert_eq!(ds.workload, "adr");
+    let (n_in, n_out) = adr.dims(&datagen_cfg(&traited));
+    assert_eq!((ds.n_in(), ds.n_out()), (n_in, n_out));
+}
+
+/// Synthetic 6→6 regression data for the `test` artifact.
+fn synthetic_dataset(seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| {
+        let x = Tensor::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+        let y = Tensor::from_fn(n, 6, |r, c| {
+            let v: f64 = (0..6)
+                .map(|k| ((((k + c) % 5) + 1) as f64 * x.get(r, k) as f64).sin())
+                .sum();
+            (0.25 * v) as f32
+        });
+        (x, y)
+    };
+    let (x_train, y_train) = gen(24, &mut rng);
+    let (x_test, y_test) = gen(8, &mut rng);
+    Dataset::from_raw(x_train, y_train, x_test, y_test)
+}
+
+#[test]
+fn workload_selected_config_trains_bit_identical() {
+    // identical [model]/[train]/[dmd] settings; one config additionally
+    // names the workload the way post-PR-9 configs do
+    let plain = r#"
+[model]
+artifact = "test"
+[data]
+path = "unused"
+[train]
+epochs = 18
+seed = 9
+eval_every = 3
+log_every = 0
+[dmd]
+enabled = true
+m = 4
+s = 6
+"#;
+    let tagged = format!("[workload]\nname = \"adr\"\n{plain}");
+
+    let cfg_plain = TrainConfig::from_config(&Config::parse(plain).unwrap()).unwrap();
+    let cfg_tagged = TrainConfig::from_config(&Config::parse(&tagged).unwrap()).unwrap();
+    assert_eq!(cfg_plain.workload, "adr"); // the historical default
+    assert_eq!(cfg_tagged.workload, "adr");
+
+    let rt = Runtime::cpu(util::repo_root().join("artifacts")).unwrap();
+    let ds = synthetic_dataset(41);
+    let old = TrainSession::new(&rt, cfg_plain).unwrap().run(&ds).unwrap();
+    let new = TrainSession::new(&rt, cfg_tagged).unwrap().run(&ds).unwrap();
+
+    assert_eq!(old.history.points.len(), new.history.points.len());
+    for (a, b) in old.history.points.iter().zip(&new.history.points) {
+        assert_eq!(
+            a.train_mse.to_bits(),
+            b.train_mse.to_bits(),
+            "train MSE diverged at epoch {}",
+            a.epoch
+        );
+        assert_eq!(
+            a.test_mse.to_bits(),
+            b.test_mse.to_bits(),
+            "test MSE diverged at epoch {}",
+            a.epoch
+        );
+        assert_eq!(a.dmd_event, b.dmd_event, "jump schedule diverged at epoch {}", a.epoch);
+    }
+    assert_eq!(old.dmd_stats.events.len(), new.dmd_stats.events.len());
+    assert!(!old.dmd_stats.events.is_empty(), "test never exercised a jump");
+    for (i, (a, b)) in old.final_params.iter().zip(&new.final_params).enumerate() {
+        assert_eq!(a.data(), b.data(), "final params diverged in tensor {i}");
+    }
+}
+
+/// Re-encode `d` in the legacy version-1 layout (no workload name, no
+/// CRC trailer) — the exact bytes pre-workload builds wrote.
+fn encode_v1(d: &Dataset) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(b"DMDT");
+    for v in [
+        1u32,
+        d.n_train() as u32,
+        d.n_test() as u32,
+        d.n_in() as u32,
+        d.n_out() as u32,
+    ] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for &(lo, hi) in &d.scaling.in_ranges {
+        buf.extend_from_slice(&lo.to_le_bytes());
+        buf.extend_from_slice(&hi.to_le_bytes());
+    }
+    buf.extend_from_slice(&d.scaling.out_range.0.to_le_bytes());
+    buf.extend_from_slice(&d.scaling.out_range.1.to_le_bytes());
+    for t in [&d.x_train, &d.y_train, &d.x_test, &d.y_test] {
+        for &v in t.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    buf
+}
+
+#[test]
+fn legacy_v1_datagen_output_loads_as_adr() {
+    let dir = std::env::temp_dir().join("dmdtrain_wkeq_v1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v2_path = dir.join("v2.dmdt");
+    pde::generate_dataset(&datagen_cfg(&v2_path), 2).unwrap();
+    let v2 = Dataset::load(&v2_path).unwrap();
+
+    let v1_path = dir.join("v1.dmdt");
+    std::fs::write(&v1_path, encode_v1(&v2)).unwrap();
+    let v1 = Dataset::load(&v1_path).unwrap();
+
+    assert_eq!(v1.workload, "adr");
+    assert_eq!(v1.x_train, v2.x_train);
+    assert_eq!(v1.y_train, v2.y_train);
+    assert_eq!(v1.x_test, v2.x_test);
+    assert_eq!(v1.y_test, v2.y_test);
+    assert_eq!(v1.scaling, v2.scaling);
+}
