@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         max_batch_rows: 256,
         threads: 64,
         reload_secs: 0,
+        ..ServeConfig::default()
     };
     let server = Server::start(&cfg)?;
     let addr = server.addr();

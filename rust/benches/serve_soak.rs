@@ -1,0 +1,450 @@
+//! Open-loop chaos soak for the inference server's overload machinery.
+//!
+//! Phase 1 measures the *sustainable* rate with a small closed loop,
+//! then phase 2 offers 4× that rate open-loop (paced lanes, one fresh
+//! connection per request for clean per-request accounting) while a
+//! chaos thread periodically arms the `serve.predict.panic` and
+//! `serve.queue.stall` failpoints. Mid-soak the server is gracefully
+//! drained while the lanes keep offering load.
+//!
+//! Every request attempt is classified; the soak passes only when
+//! * every 200 is bit-identical to a direct `Executable::predict`,
+//! * every non-200 is an *explicit* shed (429, 503 deadline, 500
+//!   injected panic, 404 quarantine) — nothing unexplained,
+//! * zero requests are dropped after the request was written (the
+//!   drain answered all in-flight work before force-close),
+//! * new connections after the drain are refused outright,
+//! * p99 latency of the 200s stays bounded.
+//!
+//! Results land in `BENCH_serve_soak.json` (uploaded by the CI
+//! `serve-soak` job, which re-asserts the classification from the
+//! artifact). `DMDTRAIN_BENCH_FAST=1` shrinks the phases for smoke runs.
+
+mod common;
+
+use dmdtrain::config::ServeConfig;
+use dmdtrain::model::Arch;
+use dmdtrain::rng::Rng;
+use dmdtrain::runtime::{Executable, ManifestEntry, NativeExecutable};
+use dmdtrain::serve::http::read_response;
+use dmdtrain::serve::Server;
+use dmdtrain::tensor::Tensor;
+use dmdtrain::trainer::save_params;
+use dmdtrain::util;
+use dmdtrain::util::failpoint::{self, FailAction};
+use std::fmt::Write as _;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ARCH: [usize; 4] = [6, 40, 200, 267];
+const ROWS_PER_REQUEST: usize = 8;
+const LANES: usize = 32;
+/// Per-request deadline carried in `X-Deadline-Ms`: bounds how long an
+/// accepted request can wait out the overload before it is shed.
+const DEADLINE_MS: u64 = 250;
+/// Hard cap on the offered rate, so the soak cannot exhaust client-side
+/// ephemeral ports on a fast machine (logged when it binds).
+const MAX_TARGET_RPS: f64 = 1_600.0;
+
+/// Per-lane tally of how every request attempt ended.
+#[derive(Default)]
+struct LaneStats {
+    ok: u64,
+    shed_429: u64,
+    shed_deadline_503: u64,
+    other_503: u64,
+    failed_500: u64,
+    quarantined_404: u64,
+    refused_after_drain: u64,
+    connect_error_pre_drain: u64,
+    /// Request fully written, then the connection died without a
+    /// response — a lost in-flight request. Must stay zero.
+    dropped_after_write: u64,
+    other: u64,
+    ok_latencies: Vec<f64>,
+}
+
+impl LaneStats {
+    fn merge(&mut self, o: LaneStats) {
+        self.ok += o.ok;
+        self.shed_429 += o.shed_429;
+        self.shed_deadline_503 += o.shed_deadline_503;
+        self.other_503 += o.other_503;
+        self.failed_500 += o.failed_500;
+        self.quarantined_404 += o.quarantined_404;
+        self.refused_after_drain += o.refused_after_drain;
+        self.connect_error_pre_drain += o.connect_error_pre_drain;
+        self.dropped_after_write += o.dropped_after_write;
+        self.other += o.other;
+        self.ok_latencies.extend(o.ok_latencies);
+    }
+
+    fn attempts(&self) -> u64 {
+        self.ok
+            + self.shed_429
+            + self.shed_deadline_503
+            + self.other_503
+            + self.failed_500
+            + self.quarantined_404
+            + self.refused_after_drain
+            + self.connect_error_pre_drain
+            + self.dropped_after_write
+            + self.other
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = common::fast_mode();
+    let measure_dur = if fast {
+        Duration::from_millis(400)
+    } else {
+        Duration::from_secs(1)
+    };
+    let soak_dur = if fast {
+        Duration::from_secs(3)
+    } else {
+        Duration::from_secs(6)
+    };
+
+    // --- model + server ---------------------------------------------------
+    let model_dir = common::out_dir("serve_soak/models");
+    let arch = Arch::new(ARCH.to_vec())?;
+    let params = arch.init_params(&mut Rng::new(42));
+    save_params(&params, model_dir.join("soak.dmdp"))?;
+
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        model_dir: model_dir.to_string_lossy().into_owned(),
+        batch_window_us: 1_000,
+        max_batch_rows: 256,
+        threads: 64,
+        reload_secs: 0,
+        max_queue_jobs: 64,
+        submit_wait_ms: 2,
+        per_model_inflight: 80,
+        drain_timeout_ms: 10_000,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(&cfg)?;
+    let addr = server.addr();
+    let metrics = server.metrics();
+
+    // one fixed request, expected output precomputed for bit-checking
+    let x = Tensor::from_fn(ROWS_PER_REQUEST, ARCH[0], |r, c| {
+        ((r * 17 + c * 5) % 23) as f32 * 0.08 - 0.8
+    });
+    let exe = Executable::Native(NativeExecutable::new(ManifestEntry::native_model(
+        "predict", "direct", &ARCH, 0,
+    ))?);
+    let expected = Arc::new(exe.predict_all(&params, &x)?);
+    let wire = Arc::new(build_wire(&x));
+
+    // --- phase 1: sustainable rate (closed loop, no chaos) ----------------
+    let t0 = Instant::now();
+    let closers: Vec<_> = (0..2)
+        .map(|_| {
+            let wire = Arc::clone(&wire);
+            let expected = Arc::clone(&expected);
+            let end = t0 + measure_dur;
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                while Instant::now() < end {
+                    let (status, resp) = one_request(addr, &wire).expect("closed-loop request");
+                    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+                    verify(&resp, &expected);
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+    let mut completed = 0u64;
+    for h in closers {
+        completed += h.join().expect("closed lane");
+    }
+    let sustainable_rps = completed as f64 / t0.elapsed().as_secs_f64();
+    let target_rps = (4.0 * sustainable_rps).clamp(200.0, MAX_TARGET_RPS);
+    let cap_note = if 4.0 * sustainable_rps > MAX_TARGET_RPS {
+        " [rate cap bound]"
+    } else {
+        ""
+    };
+    println!(
+        "serve_soak: sustainable {sustainable_rps:.0} req/s closed-loop → offering \
+         {target_rps:.0} req/s open-loop ({LANES} lanes){cap_note}"
+    );
+
+    // --- phase 2: 4× open-loop soak with chaos + mid-soak drain -----------
+    let soak_t0 = Instant::now();
+    let end = soak_t0 + soak_dur;
+    let gate_open = Arc::new(AtomicBool::new(true));
+    let drained = Arc::new(AtomicBool::new(false));
+    let interval = Duration::from_secs_f64(LANES as f64 / target_rps);
+
+    let chaos = std::thread::spawn(move || {
+        // periodic one-shot predict panics and ~120 ms queue stalls
+        while Instant::now() < end {
+            failpoint::arm("serve.predict.panic", FailAction::Panic, Some(1));
+            std::thread::sleep(Duration::from_millis(300));
+            if Instant::now() >= end {
+                break;
+            }
+            failpoint::arm("serve.queue.stall", FailAction::Error, None);
+            std::thread::sleep(Duration::from_millis(120));
+            failpoint::disarm("serve.queue.stall");
+            std::thread::sleep(Duration::from_millis(200));
+        }
+        failpoint::disarm_all();
+    });
+
+    let lanes: Vec<_> = (0..LANES)
+        .map(|_| {
+            let wire = Arc::clone(&wire);
+            let expected = Arc::clone(&expected);
+            let gate_open = Arc::clone(&gate_open);
+            let drained = Arc::clone(&drained);
+            std::thread::spawn(move || {
+                lane(addr, &wire, &expected, interval, end, &gate_open, &drained)
+            })
+        })
+        .collect();
+
+    // drain at 60% of the soak: pause new sends, give the accept backlog
+    // a beat to clear (in-flight requests keep going), then stop
+    let drain_at = soak_t0 + soak_dur.mul_f64(0.6);
+    std::thread::sleep(drain_at.saturating_duration_since(Instant::now()));
+    gate_open.store(false, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(60));
+    drained.store(true, Ordering::SeqCst);
+    let t_drain = Instant::now();
+    server.shutdown();
+    let drain_secs = t_drain.elapsed().as_secs_f64();
+    gate_open.store(true, Ordering::SeqCst); // post-drain sends: refused
+
+    // the listener is gone — probe from here too, so the post-drain
+    // refusal check cannot be starved by a slow drain eating the tail
+    let mut probe_refused = 0u64;
+    for _ in 0..5 {
+        if one_request(addr, &wire).is_err() {
+            probe_refused += 1;
+        }
+    }
+
+    let mut stats = LaneStats::default();
+    for h in lanes {
+        stats.merge(h.join().expect("lane thread"));
+    }
+    stats.refused_after_drain += probe_refused;
+    chaos.join().expect("chaos thread");
+    let soak_wall = soak_t0.elapsed().as_secs_f64();
+    let offered_rps = stats.attempts() as f64 / soak_wall;
+
+    stats.ok_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| -> f64 {
+        let l = &stats.ok_latencies;
+        l[((l.len() as f64 - 1.0) * q).round() as usize]
+    };
+    assert!(stats.ok > 0, "no request survived the soak");
+    let (p50_ms, p99_ms) = (pick(0.50) * 1e3, pick(0.99) * 1e3);
+
+    println!(
+        "soak: {} attempts in {soak_wall:.2}s ({offered_rps:.0} offered/s) — \
+         ok {} | 429 {} | 503 deadline {} | 503 other {} | 500 {} | 404 quarantine {} | \
+         refused post-drain {} | dropped in-flight {}",
+        stats.attempts(),
+        stats.ok,
+        stats.shed_429,
+        stats.shed_deadline_503,
+        stats.other_503,
+        stats.failed_500,
+        stats.quarantined_404,
+        stats.refused_after_drain,
+        stats.dropped_after_write
+    );
+    println!("drain: {drain_secs:.3}s | p50 {p50_ms:.2} ms, p99 {p99_ms:.2} ms over the 200s");
+
+    // --- acceptance -------------------------------------------------------
+    assert_eq!(stats.dropped_after_write, 0, "lost in-flight responses across the drain");
+    assert_eq!(stats.other, 0, "responses outside the shed classification");
+    assert_eq!(stats.connect_error_pre_drain, 0, "connect failures while serving");
+    assert!(stats.refused_after_drain > 0, "post-drain connects were not refused");
+    assert!(
+        stats.shed_429 + stats.shed_deadline_503 > 0,
+        "4x overload with stalls shed nothing"
+    );
+    assert!(p99_ms < 5_000.0, "p99 of served responses unbounded: {p99_ms:.1} ms");
+
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, r#"  "bench": "serve_soak","#);
+    let _ = writeln!(json, r#"  "arch": {ARCH:?},"#);
+    let _ = writeln!(json, r#"  "rows_per_request": {ROWS_PER_REQUEST},"#);
+    let _ = writeln!(json, r#"  "deadline_ms": {DEADLINE_MS},"#);
+    let _ = writeln!(json, r#"  "sustainable_rps": {sustainable_rps:.2},"#);
+    let _ = writeln!(json, r#"  "target_rps": {target_rps:.2},"#);
+    let _ = writeln!(json, r#"  "offered_rps": {offered_rps:.2},"#);
+    let _ = writeln!(json, r#"  "soak_secs": {soak_wall:.3},"#);
+    let _ = writeln!(json, r#"  "drain_secs": {drain_secs:.3},"#);
+    let _ = writeln!(json, r#"  "p50_ms": {p50_ms:.4},"#);
+    let _ = writeln!(json, r#"  "p99_ms": {p99_ms:.4},"#);
+    let _ = writeln!(json, "  \"counts\": {{");
+    let _ = writeln!(json, r#"    "ok": {},"#, stats.ok);
+    let _ = writeln!(json, r#"    "shed_429": {},"#, stats.shed_429);
+    let _ = writeln!(json, r#"    "shed_deadline_503": {},"#, stats.shed_deadline_503);
+    let _ = writeln!(json, r#"    "other_503": {},"#, stats.other_503);
+    let _ = writeln!(json, r#"    "failed_500": {},"#, stats.failed_500);
+    let _ = writeln!(json, r#"    "quarantined_404": {},"#, stats.quarantined_404);
+    let _ = writeln!(json, r#"    "refused_after_drain": {},"#, stats.refused_after_drain);
+    let _ = writeln!(json, r#"    "connect_error_pre_drain": {},"#, stats.connect_error_pre_drain);
+    let _ = writeln!(json, r#"    "dropped_after_write": {},"#, stats.dropped_after_write);
+    let _ = writeln!(json, r#"    "other": {}"#, stats.other);
+    let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"server\": {{");
+    let _ = writeln!(json, r#"    "deadline_shed": {},"#, metrics.deadline_shed.get());
+    let _ = writeln!(json, r#"    "queue_shed": {},"#, metrics.predict_shed.get());
+    let _ = writeln!(json, r#"    "budget_shed": {},"#, metrics.budget_shed.get());
+    let _ = writeln!(json, r#"    "predict_panics": {},"#, metrics.predict_panics.get());
+    let _ = writeln!(json, r#"    "breaker_opens": {},"#, metrics.breaker_opens.get());
+    let _ = writeln!(json, r#"    "brownouts": {},"#, metrics.batcher_brownouts.get());
+    let _ = writeln!(json, r#"    "batcher_restarts": {}"#, metrics.batcher_restarts.get());
+    let _ = writeln!(json, "  }}");
+    json.push('}');
+    let out = util::repo_root().join("BENCH_serve_soak.json");
+    std::fs::write(&out, &json).expect("write BENCH_serve_soak.json");
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Serialize the fixed predict request (deadline header, no keep-alive).
+fn build_wire(x: &Tensor) -> String {
+    let mut body = String::from("{\"inputs\":[");
+    for r in 0..x.rows() {
+        if r > 0 {
+            body.push(',');
+        }
+        body.push('[');
+        for (c, &v) in x.row(r).iter().enumerate() {
+            if c > 0 {
+                body.push(',');
+            }
+            let _ = write!(body, "{}", v as f64);
+        }
+        body.push(']');
+    }
+    body.push_str("]}");
+    format!(
+        "POST /predict HTTP/1.1\r\nHost: s\r\nContent-Length: {}\r\n\
+         X-Deadline-Ms: {DEADLINE_MS}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// One request over a fresh connection; `Err` distinguishes the stage:
+/// `Err(false)` = connect/write failed, `Err(true)` = written but no
+/// response came back.
+fn one_request(addr: SocketAddr, wire: &str) -> Result<(u16, Vec<u8>), bool> {
+    let mut stream = TcpStream::connect(addr).map_err(|_| false)?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    stream.write_all(wire.as_bytes()).map_err(|_| false)?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader).map_err(|_| true)
+}
+
+/// One open-loop lane: fires on its own schedule (catching up after a
+/// slow response rather than skipping — open-loop semantics), pauses
+/// while the drain gate is closed, and classifies every attempt.
+fn lane(
+    addr: SocketAddr,
+    wire: &str,
+    expected: &Tensor,
+    interval: Duration,
+    end: Instant,
+    gate_open: &AtomicBool,
+    drained: &AtomicBool,
+) -> LaneStats {
+    let mut stats = LaneStats::default();
+    let mut next = Instant::now();
+    loop {
+        let now = Instant::now();
+        if now >= end {
+            break;
+        }
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        if !gate_open.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(5));
+            next = Instant::now();
+            continue;
+        }
+        let t0 = Instant::now();
+        match one_request(addr, wire) {
+            Ok((200, resp)) => {
+                verify(&resp, expected);
+                stats.ok_latencies.push(t0.elapsed().as_secs_f64());
+                stats.ok += 1;
+            }
+            Ok((429, _)) => stats.shed_429 += 1,
+            Ok((503, resp)) => {
+                if String::from_utf8_lossy(&resp).contains("deadline exceeded") {
+                    stats.shed_deadline_503 += 1;
+                } else {
+                    stats.other_503 += 1;
+                }
+            }
+            Ok((500, resp)) => {
+                if String::from_utf8_lossy(&resp).contains("predict failed") {
+                    stats.failed_500 += 1;
+                } else {
+                    stats.other += 1;
+                }
+            }
+            Ok((404, resp)) => {
+                if String::from_utf8_lossy(&resp).contains("quarantined") {
+                    stats.quarantined_404 += 1;
+                } else {
+                    stats.other += 1;
+                }
+            }
+            Ok((_, _)) => stats.other += 1,
+            Err(true) => stats.dropped_after_write += 1,
+            Err(false) => {
+                if drained.load(Ordering::SeqCst) {
+                    stats.refused_after_drain += 1;
+                } else {
+                    stats.connect_error_pre_drain += 1;
+                }
+            }
+        }
+        next += interval;
+    }
+    stats
+}
+
+/// Bit-exact check of a 200 body against the direct predict.
+fn verify(resp: &[u8], expected: &Tensor) {
+    let text = std::str::from_utf8(resp).expect("utf8");
+    let doc = dmdtrain::util::jsonl::parse(text).expect("json");
+    let rows = doc
+        .get("outputs")
+        .and_then(dmdtrain::util::jsonl::Json::as_arr)
+        .expect("outputs");
+    assert_eq!(rows.len(), expected.rows());
+    for (r, row) in rows.iter().enumerate() {
+        let row = row.as_arr().expect("row");
+        assert_eq!(row.len(), expected.cols());
+        for (c, v) in row.iter().enumerate() {
+            let got = v.as_f64().expect("number") as f32;
+            let want = expected.get(r, c);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "output ({r},{c}): served {got} vs direct {want}"
+            );
+        }
+    }
+}

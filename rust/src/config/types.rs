@@ -415,6 +415,24 @@ pub struct ServeConfig {
     /// Background registry-rescan period in seconds (0 = disabled;
     /// `POST /reload` always works).
     pub reload_secs: u64,
+    /// Server-side predict deadline in milliseconds (0 = none). The
+    /// `X-Deadline-Ms` request header always applies; when both are set
+    /// the tighter budget wins.
+    pub request_timeout_ms: u64,
+    /// Predict queue bound — submits past this wait `submit_wait_ms`,
+    /// then shed with 429.
+    pub max_queue_jobs: usize,
+    /// Per-model in-flight request cap (0 = unlimited); the 429 guard
+    /// against one hot model starving the registry.
+    pub per_model_inflight: usize,
+    /// Bounded submit wait on a full queue, in milliseconds.
+    pub submit_wait_ms: u64,
+    /// How long a graceful stop waits for in-flight handlers to finish
+    /// before force-closing their connections.
+    pub drain_timeout_ms: u64,
+    /// Close keep-alive connections idle longer than this; also bounds
+    /// how long shutdown waits for a dozing client.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -427,6 +445,12 @@ impl Default for ServeConfig {
             max_batch_rows: 256,
             threads: 64,
             reload_secs: 2,
+            request_timeout_ms: 0,
+            max_queue_jobs: 1024,
+            per_model_inflight: 0,
+            submit_wait_ms: 50,
+            drain_timeout_ms: 5_000,
+            idle_timeout_ms: 5_000,
         }
     }
 }
@@ -444,6 +468,12 @@ impl ServeConfig {
             max_batch_rows: c.usize_or("serve.max_batch_rows", d.max_batch_rows).max(1),
             threads: c.usize_or("serve.threads", d.threads).max(1),
             reload_secs: c.u64_or("serve.reload_secs", d.reload_secs),
+            request_timeout_ms: c.u64_or("serve.request_timeout_ms", d.request_timeout_ms),
+            max_queue_jobs: c.usize_or("serve.max_queue_jobs", d.max_queue_jobs).max(1),
+            per_model_inflight: c.usize_or("serve.per_model_inflight", d.per_model_inflight),
+            submit_wait_ms: c.u64_or("serve.submit_wait_ms", d.submit_wait_ms),
+            drain_timeout_ms: c.u64_or("serve.drain_timeout_ms", d.drain_timeout_ms),
+            idle_timeout_ms: c.u64_or("serve.idle_timeout_ms", d.idle_timeout_ms).max(1),
         })
     }
 }
@@ -985,10 +1015,19 @@ epochs = 50
         assert_eq!(sc.batch_window_us, 1_000);
         assert_eq!(sc.max_batch_rows, 256);
         assert_eq!(sc.reload_secs, 2);
+        // robustness knobs default to the pre-knob behavior
+        assert_eq!(sc.request_timeout_ms, 0, "no server-side deadline");
+        assert_eq!(sc.max_queue_jobs, 1024);
+        assert_eq!(sc.per_model_inflight, 0, "budgets off");
+        assert_eq!(sc.submit_wait_ms, 50, "historical SUBMIT_WAIT");
+        assert_eq!(sc.drain_timeout_ms, 5_000);
+        assert_eq!(sc.idle_timeout_ms, 5_000, "historical IDLE_TIMEOUT");
 
         let c = Config::parse(
             "[serve]\nport = 9000\nmodel_dir = \"runs/ci/models\"\n\
-             batch_window_us = 500\nmax_batch_rows = 0\nthreads = 8\nreload_secs = 0",
+             batch_window_us = 500\nmax_batch_rows = 0\nthreads = 8\nreload_secs = 0\n\
+             request_timeout_ms = 250\nmax_queue_jobs = 0\nper_model_inflight = 4\n\
+             submit_wait_ms = 5\ndrain_timeout_ms = 1000\nidle_timeout_ms = 300",
         )
         .unwrap();
         let sc = ServeConfig::from_config(&c).unwrap();
@@ -998,6 +1037,12 @@ epochs = 50
         assert_eq!(sc.max_batch_rows, 1, "row cap clamps to >= 1");
         assert_eq!(sc.threads, 8);
         assert_eq!(sc.reload_secs, 0);
+        assert_eq!(sc.request_timeout_ms, 250);
+        assert_eq!(sc.max_queue_jobs, 1, "queue bound clamps to >= 1");
+        assert_eq!(sc.per_model_inflight, 4);
+        assert_eq!(sc.submit_wait_ms, 5);
+        assert_eq!(sc.drain_timeout_ms, 1000);
+        assert_eq!(sc.idle_timeout_ms, 300);
 
         let bad = Config::parse("[serve]\nport = 70000").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());

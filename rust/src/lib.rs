@@ -90,7 +90,16 @@
 //! order is independent of the other rows in a batch and JSON floats
 //! use shortest-roundtrip formatting, so served predictions are
 //! bit-identical to direct `Executable::predict` calls no matter how
-//! requests get coalesced (`tests/serve_integration.rs`).
+//! requests get coalesced (`tests/serve_integration.rs`). Overload is
+//! handled explicitly ([`serve::admission`]): request deadlines
+//! (`serve.request_timeout_ms` / `X-Deadline-Ms`) shed expired jobs
+//! before their GEMM, a bounded queue plus per-model in-flight budgets
+//! shed with computed `Retry-After`s, a brownout shrinks the batch
+//! window under pressure, a circuit breaker ([`serve::breaker`])
+//! quarantines models that repeatedly panic or fail to reload, and
+//! `GET /readyz` reports ready / degraded / draining while
+//! `Server::stop` drains in-flight work before force-closing
+//! (`benches/serve_soak.rs` chaos-soaks the whole machinery).
 //!
 //! ## Fault tolerance
 //!
@@ -158,6 +167,8 @@
 //! | [`data`] | Latin-hypercube sampling, dataset format, scaling |
 //! | [`runtime`] | backend dispatch: native CPU (default) / PJRT (`pjrt`); `TrainWorkspace` zero-alloc hot path |
 //! | [`serve`] | HTTP inference: checkpoint registry, micro-batched predict |
+//! | [`serve::admission`] | overload control: deadline budgets, per-model in-flight caps, brownout, queue drain-rate `Retry-After` |
+//! | [`serve::breaker`] | per-model circuit breaker: strike counting, cooldown quarantine, half-open readmission |
 //! | [`trainer`] | `TrainSession` state machine (`trainer::session`), pluggable accelerators (`trainer::accel`), observers (`trainer::observe`), CRC-trailed resume checkpoints, divergence recovery |
 //! | [`coordinator`] | (m, s) sweeps: thread or supervised-subprocess cells (`coordinator::supervise`, `coordinator::worker`), durable resume ledger (`coordinator::ledger`) |
 //! | [`obs`] | zero-allocation span tracer: per-thread rings, Chrome trace-event export (`train --trace-out`, `dmdtrain trace`) |

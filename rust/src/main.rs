@@ -49,7 +49,9 @@ USAGE: dmdtrain <subcommand> [--flags]
   predict  --checkpoint PATH --dataset PATH [--artifact NAME]
   serve    [--config <toml> --models DIR --host H --port N
             --batch-window-us N --max-batch N --threads N
-            --reload-secs N --port-file PATH]
+            --reload-secs N --port-file PATH
+            --request-timeout-ms N --max-queue N --per-model-inflight N
+            --submit-wait-ms N --drain-timeout-ms N --idle-timeout-ms N]
   trace    [--in trace.json] [--events dmd_events.csv] [--top N]
   info     [--artifacts DIR]
 
@@ -443,6 +445,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     sc.max_batch_rows = args.usize_or("max-batch", sc.max_batch_rows)?.max(1);
     sc.threads = args.usize_or("threads", sc.threads)?.max(1);
     sc.reload_secs = args.usize_or("reload-secs", sc.reload_secs as usize)? as u64;
+    sc.request_timeout_ms =
+        args.usize_or("request-timeout-ms", sc.request_timeout_ms as usize)? as u64;
+    sc.max_queue_jobs = args.usize_or("max-queue", sc.max_queue_jobs)?.max(1);
+    sc.per_model_inflight = args.usize_or("per-model-inflight", sc.per_model_inflight)?;
+    sc.submit_wait_ms = args.usize_or("submit-wait-ms", sc.submit_wait_ms as usize)? as u64;
+    sc.drain_timeout_ms = args.usize_or("drain-timeout-ms", sc.drain_timeout_ms as usize)? as u64;
+    sc.idle_timeout_ms = args
+        .usize_or("idle-timeout-ms", sc.idle_timeout_ms as usize)?
+        .max(1) as u64;
 
     let server = dmdtrain::serve::Server::start(&sc)?;
     eprintln!(

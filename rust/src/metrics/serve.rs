@@ -27,6 +27,22 @@ pub struct ServeMetrics {
     /// Predict requests shed with 429 (bounded-wait submit gave up on a
     /// full queue).
     pub predict_shed: Counter,
+    /// Predict jobs shed with 503 because their deadline expired while
+    /// queued (shed before the GEMM).
+    pub deadline_shed: Counter,
+    /// Predict requests shed with 429 at the per-model concurrency
+    /// budget.
+    pub budget_shed: Counter,
+    /// Predict dispatches that panicked (caught per dispatch; each
+    /// counts a strike on the model's circuit breaker).
+    pub predict_panics: Counter,
+    /// Circuit-breaker open transitions (a model entered quarantine).
+    pub breaker_opens: Counter,
+    /// Predict requests refused because the model's breaker is open.
+    pub breaker_rejects: Counter,
+    /// Brownout entries (sustained queue pressure shrank the batch
+    /// window).
+    pub batcher_brownouts: Counter,
     /// Registry reload passes (background poll or `POST /reload`).
     pub registry_reloads: Counter,
     /// Predict dispatcher respawns after a panic (batcher self-healing).
@@ -35,6 +51,8 @@ pub struct ServeMetrics {
     pub predict_latency: Histogram,
     /// Rows per dispatched GEMM — the micro-batching effectiveness.
     pub batch_size: Histogram,
+    /// Time a predict job spent queued before dispatch or shed.
+    pub queue_wait: Histogram,
 }
 
 impl Default for ServeMetrics {
@@ -52,10 +70,17 @@ impl ServeMetrics {
             predict_rows: Counter::new(),
             predict_batches: Counter::new(),
             predict_shed: Counter::new(),
+            deadline_shed: Counter::new(),
+            budget_shed: Counter::new(),
+            predict_panics: Counter::new(),
+            breaker_opens: Counter::new(),
+            breaker_rejects: Counter::new(),
+            batcher_brownouts: Counter::new(),
             registry_reloads: Counter::new(),
             batcher_restarts: Counter::new(),
             predict_latency: Histogram::latency(),
             batch_size: Histogram::batch_rows(),
+            queue_wait: Histogram::latency(),
         }
     }
 
@@ -71,13 +96,19 @@ impl ServeMetrics {
 
     pub fn render_prometheus(&self) -> String {
         let mut out = String::with_capacity(2048);
-        let counters: [(&str, &str, &Counter); 8] = [
+        let counters: [(&str, &str, &Counter); 14] = [
             ("dmdtrain_http_requests_total", "HTTP requests received", &self.http_requests),
             ("dmdtrain_http_errors_total", "HTTP responses with status >= 400", &self.http_errors),
             ("dmdtrain_predict_requests_total", "predict requests accepted", &self.predict_requests),
             ("dmdtrain_predict_rows_total", "input rows across predict requests", &self.predict_rows),
             ("dmdtrain_predict_batches_total", "micro-batched GEMM dispatches", &self.predict_batches),
             ("dmdtrain_predict_shed_total", "predict requests shed with 429", &self.predict_shed),
+            ("dmdtrain_predict_deadline_shed_total", "predict jobs shed before the GEMM on an expired deadline", &self.deadline_shed),
+            ("dmdtrain_predict_budget_shed_total", "predict requests shed at the per-model concurrency budget", &self.budget_shed),
+            ("dmdtrain_predict_panics_total", "predict dispatches that panicked (caught, breaker strike)", &self.predict_panics),
+            ("dmdtrain_breaker_opens_total", "circuit-breaker open transitions", &self.breaker_opens),
+            ("dmdtrain_breaker_rejects_total", "predict requests refused by an open circuit breaker", &self.breaker_rejects),
+            ("dmdtrain_batcher_brownouts_total", "brownout entries (batch window shrunk under pressure)", &self.batcher_brownouts),
             ("dmdtrain_registry_reloads_total", "model registry reload passes", &self.registry_reloads),
             ("dmdtrain_batcher_restarts_total", "predict dispatcher respawns after a panic", &self.batcher_restarts),
         ];
@@ -92,6 +123,11 @@ impl ServeMetrics {
         self.batch_size.render(
             "dmdtrain_predict_batch_rows",
             "rows per micro-batched GEMM dispatch",
+            &mut out,
+        );
+        self.queue_wait.render(
+            "dmdtrain_predict_queue_wait_seconds",
+            "time a predict job spent queued before dispatch or shed",
             &mut out,
         );
         out

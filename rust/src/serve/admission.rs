@@ -1,0 +1,252 @@
+//! Admission-control primitives for the serve stack: live queue
+//! pressure (depth + EWMA drain rate) feeding a computed `Retry-After`
+//! hint, and per-model in-flight budgets so one hot model cannot starve
+//! every other entry in the registry.
+//!
+//! Everything here is lock-free or a single short-held mutex — these
+//! types sit on the request path in front of the batcher queue, so they
+//! must never block behind the GEMM.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Floor of the computed `Retry-After` hint.
+pub const RETRY_AFTER_MIN_SECS: u64 = 1;
+
+/// Ceiling of the computed `Retry-After` hint — beyond this the queue
+/// estimate is noise and clients should just poll.
+pub const RETRY_AFTER_MAX_SECS: u64 = 30;
+
+/// `Retry-After` from observed queue state: the time to drain the
+/// current backlog at the current drain rate, clamped to
+/// [[`RETRY_AFTER_MIN_SECS`], [`RETRY_AFTER_MAX_SECS`]]. A backlog with
+/// no measurable drain (wedged or freshly started dispatcher) pins the
+/// hint at the ceiling.
+pub fn retry_after_secs(queue_depth: usize, drain_rate_per_sec: f64) -> u64 {
+    if queue_depth == 0 {
+        return RETRY_AFTER_MIN_SECS;
+    }
+    if !(drain_rate_per_sec > 0.0) {
+        return RETRY_AFTER_MAX_SECS;
+    }
+    let secs = (queue_depth as f64 / drain_rate_per_sec).ceil() as u64;
+    secs.clamp(RETRY_AFTER_MIN_SECS, RETRY_AFTER_MAX_SECS)
+}
+
+/// Shared view of the predict queue: depth, jobs drained, and a
+/// drain-rate EWMA the dispatcher refreshes. Request threads read it to
+/// compute `Retry-After` and `/readyz` reads the brownout flag.
+#[derive(Debug, Default)]
+pub struct QueuePressure {
+    depth: AtomicUsize,
+    drained: AtomicU64,
+    /// EWMA drain rate in jobs/sec × 1000 (fixed-point so it fits an
+    /// atomic without a lock).
+    rate_milli: AtomicU64,
+    brownout: AtomicBool,
+}
+
+impl QueuePressure {
+    pub fn new() -> QueuePressure {
+        QueuePressure::default()
+    }
+
+    /// A job was accepted into the queue.
+    pub fn enqueued(&self) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job left the queue answered (result, shed, or shutdown reply).
+    pub fn job_done(&self) {
+        // saturating: a dispatcher crash can drop jobs without a
+        // matching `enqueued` bookkeeping path ever running again
+        let _ = self
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                Some(d.saturating_sub(1))
+            });
+        self.drained.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Total jobs ever drained (monotonic; the dispatcher differentiates
+    /// it to refresh the rate EWMA).
+    pub fn drained(&self) -> u64 {
+        self.drained.load(Ordering::Relaxed)
+    }
+
+    /// Smoothed drain rate in jobs/sec (0.0 until the first refresh).
+    pub fn drain_rate(&self) -> f64 {
+        self.rate_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    pub fn set_drain_rate(&self, per_sec: f64) {
+        let milli = if per_sec.is_finite() && per_sec > 0.0 {
+            (per_sec * 1000.0).round() as u64
+        } else {
+            0
+        };
+        self.rate_milli.store(milli, Ordering::Relaxed);
+    }
+
+    pub fn in_brownout(&self) -> bool {
+        self.brownout.load(Ordering::Relaxed)
+    }
+
+    pub fn set_brownout(&self, on: bool) {
+        self.brownout.store(on, Ordering::Relaxed);
+    }
+
+    /// The computed client back-off hint for a shed response.
+    pub fn retry_after_hint(&self) -> u64 {
+        retry_after_secs(self.depth(), self.drain_rate())
+    }
+}
+
+/// Per-model in-flight request budget (`serve.per_model_inflight`;
+/// 0 = unlimited). Acquired by the router before submit and released by
+/// the [`InflightGuard`] after the reply lands, so a model's slot count
+/// covers its whole queue + GEMM residency.
+#[derive(Debug)]
+pub struct InflightBudget {
+    cap: usize,
+    counts: Mutex<HashMap<String, usize>>,
+}
+
+impl InflightBudget {
+    pub fn new(cap: usize) -> Arc<InflightBudget> {
+        Arc::new(InflightBudget {
+            cap,
+            counts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Take a slot for `model`, or `None` when the model is at its cap
+    /// (the router answers 429). A cap of 0 disables budgeting and
+    /// hands out unguarded slots for free.
+    pub fn try_acquire(self: &Arc<Self>, model: &str) -> Option<InflightGuard> {
+        if self.cap == 0 {
+            return Some(InflightGuard {
+                budget: None,
+                name: String::new(),
+            });
+        }
+        let mut counts = self.counts.lock().unwrap_or_else(|e| e.into_inner());
+        let n = counts.entry(model.to_string()).or_insert(0);
+        if *n >= self.cap {
+            return None;
+        }
+        *n += 1;
+        Some(InflightGuard {
+            budget: Some(Arc::clone(self)),
+            name: model.to_string(),
+        })
+    }
+
+    /// Current in-flight count for a model (tests / introspection).
+    pub fn inflight(&self, model: &str) -> usize {
+        self.counts
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(model)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+/// RAII slot from [`InflightBudget::try_acquire`]; carried inside the
+/// `PredictJob` so the slot is held until the reply is sent (or the job
+/// is shed), whichever thread that happens on.
+#[derive(Debug)]
+pub struct InflightGuard {
+    budget: Option<Arc<InflightBudget>>,
+    name: String,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let Some(budget) = self.budget.take() else {
+            return;
+        };
+        let mut counts = budget.counts.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(n) = counts.get_mut(&self.name) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                counts.remove(&self.name);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_after_is_depth_over_rate_clamped() {
+        // empty queue: immediate retry
+        assert_eq!(retry_after_secs(0, 100.0), RETRY_AFTER_MIN_SECS);
+        // 100 queued at 50/s → 2 s
+        assert_eq!(retry_after_secs(100, 50.0), 2);
+        // exact division still rounds up from fractional seconds
+        assert_eq!(retry_after_secs(75, 50.0), 2);
+        // sub-second drain clamps to the floor
+        assert_eq!(retry_after_secs(3, 1000.0), RETRY_AFTER_MIN_SECS);
+        // huge backlog clamps to the ceiling
+        assert_eq!(retry_after_secs(10_000, 10.0), RETRY_AFTER_MAX_SECS);
+        // backlog with no measured drain (wedged dispatcher): ceiling
+        assert_eq!(retry_after_secs(5, 0.0), RETRY_AFTER_MAX_SECS);
+        assert_eq!(retry_after_secs(5, -1.0), RETRY_AFTER_MAX_SECS);
+        assert_eq!(retry_after_secs(5, f64::NAN), RETRY_AFTER_MAX_SECS);
+    }
+
+    #[test]
+    fn pressure_tracks_depth_rate_and_hint() {
+        let p = QueuePressure::new();
+        assert_eq!(p.depth(), 0);
+        assert_eq!(p.retry_after_hint(), RETRY_AFTER_MIN_SECS);
+        for _ in 0..6 {
+            p.enqueued();
+        }
+        // backlog, no rate yet → ceiling
+        assert_eq!(p.retry_after_hint(), RETRY_AFTER_MAX_SECS);
+        p.set_drain_rate(2.0);
+        assert_eq!(p.retry_after_hint(), 3); // ceil(6 / 2)
+        p.job_done();
+        p.job_done();
+        assert_eq!(p.depth(), 4);
+        assert_eq!(p.drained(), 2);
+        assert_eq!(p.retry_after_hint(), 2); // ceil(4 / 2)
+        // job_done never underflows even if bookkeeping desyncs
+        for _ in 0..10 {
+            p.job_done();
+        }
+        assert_eq!(p.depth(), 0);
+    }
+
+    #[test]
+    fn budget_caps_per_model_and_releases_on_drop() {
+        let b = InflightBudget::new(2);
+        let g1 = b.try_acquire("hot").unwrap();
+        let _g2 = b.try_acquire("hot").unwrap();
+        assert!(b.try_acquire("hot").is_none(), "third slot refused");
+        // a different model is unaffected by the hot model's cap
+        let _other = b.try_acquire("cold").unwrap();
+        assert_eq!(b.inflight("hot"), 2);
+        drop(g1);
+        assert_eq!(b.inflight("hot"), 1);
+        assert!(b.try_acquire("hot").is_some(), "slot freed by drop");
+    }
+
+    #[test]
+    fn zero_cap_disables_budgeting() {
+        let b = InflightBudget::new(0);
+        let guards: Vec<_> = (0..100).map(|_| b.try_acquire("m").unwrap()).collect();
+        assert_eq!(b.inflight("m"), 0, "unlimited mode keeps no counts");
+        drop(guards);
+    }
+}

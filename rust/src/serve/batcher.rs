@@ -10,12 +10,24 @@
 //! per-request reply channels. Jobs for a *different* model arriving
 //! inside the window are carried over and dispatched next round.
 //!
+//! Overload behavior: jobs carry an optional deadline and are shed with
+//! [`PredictFail::Deadline`] the moment they expire — when popped as
+//! head, when received inside the window, and in a final sweep right
+//! before the GEMM — so an overloaded dispatcher never spends kernel
+//! time on an answer nobody is waiting for. Sustained pressure (queue
+//! ≥ 3/4 full) enters a brownout that shrinks the batch window by
+//! [`BROWNOUT_WINDOW_DIV`] until the queue drains below 1/4. Predict
+//! panics are caught per dispatch and counted against the model's
+//! [`CircuitBreaker`] instead of killing the dispatcher.
+//!
 //! Determinism: the native predict GEMM accumulates every output element
 //! in a fixed per-row order independent of the other rows in the batch
 //! (see `linalg::gemm`), and scaling is elementwise — so a micro-batched
 //! response is bit-identical to the same request served alone, whatever
 //! the coalescing, thread count, or batch composition.
 
+use super::admission::{InflightGuard, QueuePressure};
+use super::breaker::CircuitBreaker;
 use super::registry::ServedModel;
 use crate::metrics::serve::ServeMetrics;
 use crate::tensor::Tensor;
@@ -27,22 +39,34 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Queue depth before submits start waiting (backpressure).
-const QUEUE_DEPTH: usize = 1024;
+/// Default queue depth before submits start waiting (backpressure);
+/// `serve.max_queue_jobs` overrides it.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
 
-/// Longest a submit waits on a full queue before shedding the request.
-/// Bounded so a wedged dispatcher turns into load shedding (HTTP 429 at
-/// the router), never an indefinitely blocked connection thread.
-const SUBMIT_WAIT: Duration = Duration::from_millis(50);
+/// Default bounded submit wait on a full queue (`serve.submit_wait_ms`
+/// overrides it). Bounded so a wedged dispatcher turns into load
+/// shedding (HTTP 429 at the router), never an indefinitely blocked
+/// connection thread.
+pub const DEFAULT_SUBMIT_WAIT: Duration = Duration::from_millis(50);
 
-/// Client back-off hint surfaced as `Retry-After` on a shed response.
-pub const RETRY_AFTER_SECS: u64 = 1;
+/// Window divisor while the dispatcher is in brownout: a shorter window
+/// trades batching efficiency for queue drain when under sustained
+/// pressure.
+pub const BROWNOUT_WINDOW_DIV: u32 = 4;
+
+/// How long the `serve.queue.stall` failpoint wedges the dispatcher per
+/// loop iteration while armed.
+const STALL_PAUSE: Duration = Duration::from_millis(25);
+
+/// Dispatcher drain-rate EWMA refresh cadence.
+const RATE_REFRESH: Duration = Duration::from_millis(200);
 
 /// Dispatcher respawns allowed after panics before the batcher goes
 /// permanently down (submits answer `Down`, the router 503s). Bounded so
 /// a deterministic panic (poisoned model state, corrupt job) cannot spin
 /// the respawn loop forever; each respawn increments
-/// `dmdtrain_batcher_restarts_total`.
+/// `dmdtrain_batcher_restarts_total`. Predict panics are caught per
+/// dispatch and do *not* consume this budget.
 pub const MAX_DISPATCHER_RESTARTS: u64 = 3;
 
 /// Why a submit was refused.
@@ -66,13 +90,76 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Why an accepted job came back without a prediction.
+#[derive(Clone, Debug)]
+pub enum PredictFail {
+    /// The deadline expired while the job was queued — shed before the
+    /// GEMM (the router answers 503 + `deadline exceeded`).
+    Deadline { waited: Duration },
+    /// The predict call panicked (500; counts a breaker strike).
+    Panicked,
+    /// The predict call returned an error (500; counts a breaker
+    /// strike).
+    Failed(String),
+}
+
+impl std::fmt::Display for PredictFail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictFail::Deadline { waited } => {
+                write!(f, "deadline exceeded after {} ms in queue", waited.as_millis())
+            }
+            PredictFail::Panicked => write!(f, "predict panicked"),
+            PredictFail::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
 /// One predict request in flight.
 pub struct PredictJob {
     pub model: Arc<ServedModel>,
     /// (rows, n_in) input tensor — shape pre-validated by the router.
     pub inputs: Tensor,
-    /// Receives the (rows, n_out) result.
-    pub reply: SyncSender<anyhow::Result<Tensor>>,
+    /// Receives the (rows, n_out) result or the shed/failure reason.
+    pub reply: SyncSender<Result<Tensor, PredictFail>>,
+    /// When the job entered the queue (feeds the queue-wait histogram).
+    pub enqueued: Instant,
+    /// Shed the job unanswered-by-GEMM once this passes (request
+    /// timeout / `X-Deadline-Ms`).
+    pub deadline: Option<Instant>,
+    /// Per-model concurrency slot, released when the job is answered.
+    pub budget: Option<InflightGuard>,
+}
+
+impl PredictJob {
+    pub fn new(
+        model: Arc<ServedModel>,
+        inputs: Tensor,
+        reply: SyncSender<Result<Tensor, PredictFail>>,
+    ) -> PredictJob {
+        PredictJob {
+            model,
+            inputs,
+            reply,
+            enqueued: Instant::now(),
+            deadline: None,
+            budget: None,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> PredictJob {
+        self.deadline = deadline;
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Option<InflightGuard>) -> PredictJob {
+        self.budget = budget;
+        self
+    }
+
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
 }
 
 enum Msg {
@@ -87,6 +174,23 @@ pub struct BatcherConfig {
     pub window: Duration,
     /// Row cap per dispatched GEMM.
     pub max_rows: usize,
+    /// Queue bound (`serve.max_queue_jobs`): submits past this start
+    /// the bounded wait, then shed with 429.
+    pub max_queue: usize,
+    /// Longest a submit waits on a full queue before shedding
+    /// (`serve.submit_wait_ms`).
+    pub submit_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            window: Duration::from_millis(1),
+            max_rows: 256,
+            max_queue: DEFAULT_QUEUE_DEPTH,
+            submit_wait: DEFAULT_SUBMIT_WAIT,
+        }
+    }
 }
 
 /// Handle used by request threads to submit jobs. Each connection
@@ -94,30 +198,37 @@ pub struct BatcherConfig {
 /// reference across threads.
 pub struct BatcherHandle {
     tx: SyncSender<Msg>,
+    submit_wait: Duration,
+    pressure: Arc<QueuePressure>,
 }
 
 impl Clone for BatcherHandle {
     fn clone(&self) -> Self {
         BatcherHandle {
             tx: self.tx.clone(),
+            submit_wait: self.submit_wait,
+            pressure: Arc::clone(&self.pressure),
         }
     }
 }
 
 impl BatcherHandle {
-    /// Enqueue a job. Waits at most [`SUBMIT_WAIT`] when the queue is
-    /// full, then sheds with [`SubmitError::Overloaded`] — submit never
-    /// blocks a connection thread indefinitely.
+    /// Enqueue a job. Waits at most the configured submit wait when the
+    /// queue is full, then sheds with [`SubmitError::Overloaded`] —
+    /// submit never blocks a connection thread indefinitely.
     pub fn submit(&self, job: PredictJob) -> Result<(), SubmitError> {
         // failpoint: `serve.batcher.full` simulates a saturated queue
         if failpoint::fire("serve.batcher.full").is_some() {
             return Err(SubmitError::Overloaded);
         }
         let mut msg = Msg::Job(job);
-        let deadline = Instant::now() + SUBMIT_WAIT;
+        let deadline = Instant::now() + self.submit_wait;
         loop {
             match self.tx.try_send(msg) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    self.pressure.enqueued();
+                    return Ok(());
+                }
                 Err(TrySendError::Disconnected(_)) => return Err(SubmitError::Down),
                 Err(TrySendError::Full(m)) => {
                     if Instant::now() >= deadline {
@@ -129,6 +240,17 @@ impl BatcherHandle {
             }
         }
     }
+
+    /// Live queue state (depth, drain rate, brownout flag).
+    pub fn pressure(&self) -> &Arc<QueuePressure> {
+        &self.pressure
+    }
+
+    /// `Retry-After` hint computed from observed queue depth and drain
+    /// rate (clamped to [1, 30] s).
+    pub fn retry_after_hint(&self) -> u64 {
+        self.pressure.retry_after_hint()
+    }
 }
 
 /// The dispatcher thread plus its submit side. Dropping the `Batcher`
@@ -136,47 +258,61 @@ impl BatcherHandle {
 /// still answered).
 pub struct Batcher {
     tx: SyncSender<Msg>,
+    pressure: Arc<QueuePressure>,
+    submit_wait: Duration,
     thread: Option<JoinHandle<()>>,
 }
 
 impl Batcher {
-    pub fn start(cfg: BatcherConfig, metrics: Arc<ServeMetrics>) -> Batcher {
-        let (tx, rx) = sync_channel::<Msg>(QUEUE_DEPTH);
-        let thread = std::thread::Builder::new()
-            .name("dmdtrain-batcher".to_string())
-            .spawn(move || {
-                // Self-healing: a panicked dispatch loop is respawned up
-                // to MAX_DISPATCHER_RESTARTS times. The queue survives a
-                // respawn — `rx` lives here, outside the loop — so jobs
-                // submitted around the panic are still answered. Past the
-                // cap the batcher goes permanently down (submits answer
-                // `Down`, the router 503s).
-                let mut restarts: u64 = 0;
-                loop {
-                    match std::panic::catch_unwind(AssertUnwindSafe(|| run(&rx, cfg, &metrics))) {
-                        Ok(()) => break,
-                        Err(_) if restarts < MAX_DISPATCHER_RESTARTS => {
-                            restarts += 1;
-                            metrics.batcher_restarts.inc();
-                            eprintln!(
-                                "serve: predict dispatcher panicked; respawning \
-                                 ({restarts}/{MAX_DISPATCHER_RESTARTS})"
-                            );
-                        }
-                        Err(_) => {
-                            eprintln!(
-                                "serve: predict dispatcher panicked {} times; \
-                                 restart budget exhausted, batcher is down",
-                                restarts + 1
-                            );
-                            break;
+    pub fn start(
+        cfg: BatcherConfig,
+        metrics: Arc<ServeMetrics>,
+        breaker: Arc<CircuitBreaker>,
+    ) -> Batcher {
+        let (tx, rx) = sync_channel::<Msg>(cfg.max_queue.max(1));
+        let pressure = Arc::new(QueuePressure::new());
+        let thread = {
+            let pressure = Arc::clone(&pressure);
+            std::thread::Builder::new()
+                .name("dmdtrain-batcher".to_string())
+                .spawn(move || {
+                    // Self-healing: a panicked dispatch loop is respawned up
+                    // to MAX_DISPATCHER_RESTARTS times. The queue survives a
+                    // respawn — `rx` lives here, outside the loop — so jobs
+                    // submitted around the panic are still answered. Past the
+                    // cap the batcher goes permanently down (submits answer
+                    // `Down`, the router 503s).
+                    let mut restarts: u64 = 0;
+                    loop {
+                        match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            run(&rx, cfg, &metrics, &pressure, &breaker)
+                        })) {
+                            Ok(()) => break,
+                            Err(_) if restarts < MAX_DISPATCHER_RESTARTS => {
+                                restarts += 1;
+                                metrics.batcher_restarts.inc();
+                                eprintln!(
+                                    "serve: predict dispatcher panicked; respawning \
+                                     ({restarts}/{MAX_DISPATCHER_RESTARTS})"
+                                );
+                            }
+                            Err(_) => {
+                                eprintln!(
+                                    "serve: predict dispatcher panicked {} times; \
+                                     restart budget exhausted, batcher is down",
+                                    restarts + 1
+                                );
+                                break;
+                            }
                         }
                     }
-                }
-            })
-            .expect("spawn batcher thread");
+                })
+                .expect("spawn batcher thread")
+        };
         Batcher {
             tx,
+            pressure,
+            submit_wait: cfg.submit_wait,
             thread: Some(thread),
         }
     }
@@ -184,6 +320,8 @@ impl Batcher {
     pub fn handle(&self) -> BatcherHandle {
         BatcherHandle {
             tx: self.tx.clone(),
+            submit_wait: self.submit_wait,
+            pressure: Arc::clone(&self.pressure),
         }
     }
 }
@@ -197,9 +335,77 @@ impl Drop for Batcher {
     }
 }
 
-fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
+/// Brownout hysteresis: enter when the queue is ≥ 3/4 full, leave when
+/// it drains to ≤ 1/4. The wide gap keeps the window from flapping at
+/// one threshold under steady load.
+struct Brownout {
+    on: bool,
+    max_queue: usize,
+}
+
+impl Brownout {
+    fn new(max_queue: usize) -> Brownout {
+        Brownout {
+            on: false,
+            max_queue: max_queue.max(1),
+        }
+    }
+
+    /// Digest one depth observation; `Some(entered)` on a transition.
+    fn observe(&mut self, depth: usize) -> Option<bool> {
+        if !self.on && depth * 4 >= self.max_queue * 3 {
+            self.on = true;
+            Some(true)
+        } else if self.on && depth * 4 <= self.max_queue {
+            self.on = false;
+            Some(false)
+        } else {
+            None
+        }
+    }
+}
+
+/// Dispatcher-side drain-rate EWMA refresh (smooths the
+/// depth-over-rate `Retry-After` estimate).
+struct RateTracker {
+    last: Instant,
+    drained_then: u64,
+}
+
+impl RateTracker {
+    fn new(pressure: &QueuePressure) -> RateTracker {
+        RateTracker {
+            last: Instant::now(),
+            drained_then: pressure.drained(),
+        }
+    }
+
+    fn tick(&mut self, pressure: &QueuePressure) {
+        let dt = self.last.elapsed();
+        if dt < RATE_REFRESH {
+            return;
+        }
+        let drained = pressure.drained();
+        let inst = (drained - self.drained_then) as f64 / dt.as_secs_f64();
+        let prev = pressure.drain_rate();
+        let ewma = if prev > 0.0 { 0.7 * prev + 0.3 * inst } else { inst };
+        pressure.set_drain_rate(ewma);
+        self.last = Instant::now();
+        self.drained_then = drained;
+    }
+}
+
+fn run(
+    rx: &Receiver<Msg>,
+    cfg: BatcherConfig,
+    metrics: &ServeMetrics,
+    pressure: &QueuePressure,
+    breaker: &CircuitBreaker,
+) {
     let max_rows = cfg.max_rows.max(1);
     let mut carry: VecDeque<PredictJob> = VecDeque::new();
+    let mut brownout = Brownout::new(cfg.max_queue);
+    let mut rate = RateTracker::new(pressure);
     'outer: loop {
         // failpoint: `serve.batcher.panic` kills the dispatch loop. The
         // supervisor in `Batcher::start` respawns it up to
@@ -207,20 +413,55 @@ fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
         // budget and submits then fail with `Down` — the router answers
         // 503 instead of hanging (asserted in tests/fault_injection.rs)
         failpoint::panic_point("serve.batcher.panic");
-        // Head job: oldest carried-over job, else block for the next one.
-        let head = match carry.pop_front() {
-            Some(j) => j,
-            None => match rx.recv() {
-                Ok(Msg::Job(j)) => j,
-                Ok(Msg::Shutdown) | Err(_) => break 'outer,
-            },
+        // failpoint: `serve.queue.stall` wedges the dispatcher for a
+        // beat per loop iteration, so armed persistently the queue
+        // backs up and deadlines expire (chaos soak / fault tests)
+        if failpoint::fire("serve.queue.stall").is_some() {
+            std::thread::sleep(STALL_PAUSE);
+        }
+        // Head job: oldest carried-over job, else block for the next
+        // one. Jobs already past their deadline are shed right here —
+        // no window, no GEMM.
+        let head = loop {
+            let job = match carry.pop_front() {
+                Some(j) => j,
+                None => match rx.recv() {
+                    Ok(Msg::Job(j)) => j,
+                    Ok(Msg::Shutdown) | Err(_) => break 'outer,
+                },
+            };
+            if job.expired() {
+                shed_expired(job, metrics, pressure);
+                continue;
+            }
+            break job;
+        };
+        let window = match brownout.observe(pressure.depth()) {
+            Some(true) => {
+                pressure.set_brownout(true);
+                metrics.batcher_brownouts.inc();
+                eprintln!(
+                    "serve: predict queue at {}/{} — brownout, batch window shrunk \
+                     /{BROWNOUT_WINDOW_DIV}",
+                    pressure.depth(),
+                    cfg.max_queue
+                );
+                cfg.window / BROWNOUT_WINDOW_DIV
+            }
+            Some(false) => {
+                pressure.set_brownout(false);
+                eprintln!("serve: predict queue drained — brownout over");
+                cfg.window
+            }
+            None if brownout.on => cfg.window / BROWNOUT_WINDOW_DIV,
+            None => cfg.window,
         };
         // span covers the open window plus the coalesced dispatch;
         // arg carries the final row count of the batch
         let mut window_span = crate::obs::span("batch_window");
         let mut rows = head.inputs.rows();
         let mut batch = vec![head];
-        let deadline = Instant::now() + cfg.window;
+        let deadline = Instant::now() + window;
         let mut stop = false;
         while rows < max_rows {
             let now = Instant::now();
@@ -229,6 +470,10 @@ fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Job(j)) => {
+                    if j.expired() {
+                        shed_expired(j, metrics, pressure);
+                        continue;
+                    }
                     let same_model = Arc::ptr_eq(&j.model, &batch[0].model);
                     if same_model && rows + j.inputs.rows() <= max_rows {
                         rows += j.inputs.rows();
@@ -247,59 +492,122 @@ fn run(rx: &Receiver<Msg>, cfg: BatcherConfig, metrics: &ServeMetrics) {
             }
         }
         window_span.set_arg(rows as u64);
-        dispatch(batch, rows, metrics);
+        dispatch(batch, metrics, pressure, breaker);
+        rate.tick(pressure);
         drop(window_span);
         if stop {
             // answer everything still queued, one dispatch each
             while let Some(j) = carry.pop_front() {
-                let rows = j.inputs.rows();
-                dispatch(vec![j], rows, metrics);
+                dispatch(vec![j], metrics, pressure, breaker);
             }
             break 'outer;
         }
     }
 }
 
-/// Run one coalesced GEMM and fan the output rows back out.
-fn dispatch(batch: Vec<PredictJob>, rows: usize, metrics: &ServeMetrics) {
-    metrics.predict_batches.inc();
-    metrics.batch_size.observe(rows as f64);
+/// Answer an expired job (503 at the router) and record its queue wait.
+fn shed_expired(job: PredictJob, metrics: &ServeMetrics, pressure: &QueuePressure) {
+    let waited = job.enqueued.elapsed();
+    metrics.queue_wait.observe(waited.as_secs_f64());
+    metrics.deadline_shed.inc();
+    let _ = job.reply.send(Err(PredictFail::Deadline { waited }));
+    pressure.job_done();
+}
 
-    if batch.len() == 1 {
-        let job = batch.into_iter().next().unwrap();
-        let result = job.model.predict(&job.inputs);
-        let _ = job.reply.send(result);
+/// `model.predict` behind `catch_unwind`: a poisoned model (or the
+/// `serve.predict.panic` failpoint) becomes a per-model breaker strike
+/// instead of killing the dispatcher and burning a respawn.
+fn predict_guarded(model: &ServedModel, x: &Tensor) -> Result<Tensor, PredictFail> {
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        // failpoint: `serve.predict.panic` — a predict dying inside the
+        // kernel; caught here and charged to the model's breaker
+        failpoint::panic_point("serve.predict.panic");
+        model.predict(x)
+    }));
+    match result {
+        Ok(Ok(y)) => Ok(y),
+        Ok(Err(e)) => Err(PredictFail::Failed(format!("{e:#}"))),
+        Err(_) => Err(PredictFail::Panicked),
+    }
+}
+
+/// Run one coalesced GEMM and fan the output rows back out.
+fn dispatch(
+    batch: Vec<PredictJob>,
+    metrics: &ServeMetrics,
+    pressure: &QueuePressure,
+    breaker: &CircuitBreaker,
+) {
+    // Final deadline sweep: the batch window may have outlasted a job's
+    // budget — shed it now, before the GEMM spends anything on it.
+    let mut live = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.expired() {
+            shed_expired(job, metrics, pressure);
+        } else {
+            live.push(job);
+        }
+    }
+    if live.is_empty() {
         return;
     }
-
-    let model = Arc::clone(&batch[0].model);
-    let n_in = model.n_in();
-    let mut x = Tensor::zeros(rows, n_in);
-    let mut off = 0;
-    for job in &batch {
-        let r = job.inputs.rows();
-        x.data_mut()[off * n_in..(off + r) * n_in].copy_from_slice(job.inputs.data());
-        off += r;
+    let rows: usize = live.iter().map(|j| j.inputs.rows()).sum();
+    metrics.predict_batches.inc();
+    metrics.batch_size.observe(rows as f64);
+    for job in &live {
+        metrics.queue_wait.observe(job.enqueued.elapsed().as_secs_f64());
     }
-    match model.predict(&x) {
+
+    let model = Arc::clone(&live[0].model);
+    let result = if live.len() == 1 {
+        predict_guarded(&model, &live[0].inputs)
+    } else {
+        let n_in = model.n_in();
+        let mut x = Tensor::zeros(rows, n_in);
+        let mut off = 0;
+        for job in &live {
+            let r = job.inputs.rows();
+            x.data_mut()[off * n_in..(off + r) * n_in].copy_from_slice(job.inputs.data());
+            off += r;
+        }
+        predict_guarded(&model, &x)
+    };
+
+    match result {
         Ok(y) => {
+            breaker.record_success(&model.name);
+            if live.len() == 1 {
+                let job = live.into_iter().next().unwrap();
+                let _ = job.reply.send(Ok(y));
+                pressure.job_done();
+                return;
+            }
             let n_out = y.cols();
             let mut off = 0;
-            for job in batch {
+            for job in live {
                 let r = job.inputs.rows();
                 let mut out = Tensor::zeros(r, n_out);
                 out.data_mut()
                     .copy_from_slice(&y.data()[off * n_out..(off + r) * n_out]);
                 off += r;
                 let _ = job.reply.send(Ok(out));
+                pressure.job_done();
             }
         }
-        Err(e) => {
-            let msg = e.to_string();
-            for job in batch {
-                let _ = job
-                    .reply
-                    .send(Err(anyhow::anyhow!("batched predict failed: {msg}")));
+        Err(fail) => {
+            if matches!(fail, PredictFail::Panicked) {
+                metrics.predict_panics.inc();
+            }
+            if breaker.record_failure(&model.name) {
+                metrics.breaker_opens.inc();
+                eprintln!(
+                    "serve: circuit breaker opened for model '{}' ({fail})",
+                    model.name
+                );
+            }
+            for job in live {
+                let _ = job.reply.send(Err(fail.clone()));
+                pressure.job_done();
             }
         }
     }
@@ -317,32 +625,38 @@ mod tests {
         Arc::new(ServedModel::from_params("t", params, None).unwrap())
     }
 
+    fn start(window: Duration, max_rows: usize, metrics: &Arc<ServeMetrics>) -> Batcher {
+        Batcher::start(
+            BatcherConfig {
+                window,
+                max_rows,
+                ..BatcherConfig::default()
+            },
+            Arc::clone(metrics),
+            Arc::new(CircuitBreaker::new()),
+        )
+    }
+
     fn submit(
         handle: &BatcherHandle,
         model: &Arc<ServedModel>,
         x: Tensor,
-    ) -> Receiver<anyhow::Result<Tensor>> {
+    ) -> Receiver<Result<Tensor, PredictFail>> {
         let (tx, rx) = sync_channel(1);
         handle
-            .submit(PredictJob {
-                model: Arc::clone(model),
-                inputs: x,
-                reply: tx,
-            })
+            .submit(PredictJob::new(Arc::clone(model), x, tx))
             .unwrap();
         rx
     }
 
     #[test]
     fn zero_window_serves_single_requests() {
+        // every test that spawns a Batcher holds the guard: the dispatch
+        // loop checks process-global failpoints, so a concurrently
+        // running armed test would otherwise leak its fault in here
+        let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::start(
-            BatcherConfig {
-                window: Duration::ZERO,
-                max_rows: 64,
-            },
-            Arc::clone(&metrics),
-        );
+        let batcher = start(Duration::ZERO, 64, &metrics);
         let m = model(vec![3, 5, 2], 1);
         let x = Tensor::from_fn(1, 3, |_, c| c as f32 * 0.25);
         let expected = m.predict(&x).unwrap();
@@ -355,14 +669,9 @@ mod tests {
 
     #[test]
     fn window_coalesces_and_splits_bit_identically() {
+        let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::start(
-            BatcherConfig {
-                window: Duration::from_millis(200),
-                max_rows: 64,
-            },
-            Arc::clone(&metrics),
-        );
+        let batcher = start(Duration::from_millis(200), 64, &metrics);
         let m = model(vec![4, 6, 3], 2);
         let handle = batcher.handle();
         // Three jobs submitted well inside one 200 ms window.
@@ -387,14 +696,9 @@ mod tests {
 
     #[test]
     fn max_rows_caps_a_batch() {
+        let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::start(
-            BatcherConfig {
-                window: Duration::from_millis(100),
-                max_rows: 2,
-            },
-            Arc::clone(&metrics),
-        );
+        let batcher = start(Duration::from_millis(100), 2, &metrics);
         let m = model(vec![2, 3, 1], 3);
         let handle = batcher.handle();
         let rxs: Vec<_> = (0..4)
@@ -418,14 +722,9 @@ mod tests {
 
     #[test]
     fn different_models_never_share_a_gemm() {
+        let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::start(
-            BatcherConfig {
-                window: Duration::from_millis(100),
-                max_rows: 64,
-            },
-            Arc::clone(&metrics),
-        );
+        let batcher = start(Duration::from_millis(100), 64, &metrics);
         let m1 = model(vec![3, 4, 2], 4);
         let m2 = model(vec![3, 4, 2], 5); // same shape, different weights
         let x = Tensor::from_fn(1, 3, |_, c| c as f32 * 0.3);
@@ -441,27 +740,121 @@ mod tests {
     }
 
     #[test]
-    fn full_queue_failpoint_sheds_with_overloaded() {
+    fn expired_job_is_shed_before_the_gemm() {
         let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
+        let batcher = start(Duration::ZERO, 8, &metrics);
+        let m = model(vec![2, 2], 11);
+        let (tx, rx) = sync_channel(1);
+        let job = PredictJob::new(Arc::clone(&m), Tensor::zeros(1, 2), tx)
+            .with_deadline(Some(Instant::now()));
+        batcher.handle().submit(job).unwrap();
+        match rx.recv().unwrap() {
+            Err(PredictFail::Deadline { .. }) => {}
+            other => panic!("expected deadline shed, got {other:?}"),
+        }
+        // a job with headroom still gets served
+        let (tx, rx) = sync_channel(1);
+        let job = PredictJob::new(Arc::clone(&m), Tensor::zeros(1, 2), tx)
+            .with_deadline(Some(Instant::now() + Duration::from_secs(30)));
+        batcher.handle().submit(job).unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        drop(batcher);
+        assert_eq!(metrics.deadline_shed.get(), 1);
+        assert_eq!(
+            metrics.predict_batches.get(),
+            1,
+            "the expired job must never reach a GEMM"
+        );
+        assert_eq!(metrics.queue_wait.count(), 2, "both jobs record queue wait");
+    }
+
+    #[test]
+    fn predict_panic_is_caught_and_strikes_the_breaker() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        let breaker = Arc::new(CircuitBreaker::with(1, Duration::from_secs(60)));
         let batcher = Batcher::start(
             BatcherConfig {
                 window: Duration::ZERO,
                 max_rows: 8,
+                ..BatcherConfig::default()
             },
             Arc::clone(&metrics),
+            Arc::clone(&breaker),
         );
+        let m = model(vec![2, 2], 12);
+        let handle = batcher.handle();
+        {
+            let _fp =
+                failpoint::scoped_at("serve.predict.panic", failpoint::FailAction::Panic, 1);
+            let rx = submit(&handle, &m, Tensor::zeros(1, 2));
+            match rx.recv().unwrap() {
+                Err(PredictFail::Panicked) => {}
+                other => panic!("expected panicked reply, got {other:?}"),
+            }
+        }
+        // the dispatcher survived (no respawn burned) and keeps serving
+        let rx = submit(&handle, &m, Tensor::zeros(1, 2));
+        assert!(rx.recv().unwrap().is_ok());
+        drop(batcher);
+        assert_eq!(metrics.batcher_restarts.get(), 0);
+        assert_eq!(metrics.predict_panics.get(), 1);
+        assert_eq!(metrics.breaker_opens.get(), 1, "threshold-1 breaker opened");
+    }
+
+    #[test]
+    fn queue_stall_failpoint_backs_up_the_queue() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        // armed before start, so the dispatcher's first loop iteration
+        // stalls before it can pop the job
+        let _fp = failpoint::scoped("serve.queue.stall", failpoint::FailAction::Error);
+        let batcher = start(Duration::ZERO, 8, &metrics);
+        let m = model(vec![2, 2], 13);
+        let handle = batcher.handle();
+        // a 1 ms deadline cannot survive the 25 ms stall — the job is
+        // shed before the GEMM instead of served late
+        let (tx, rx) = sync_channel(1);
+        let job = PredictJob::new(Arc::clone(&m), Tensor::zeros(1, 2), tx)
+            .with_deadline(Some(Instant::now() + Duration::from_millis(1)));
+        handle.submit(job).unwrap();
+        match rx.recv().unwrap() {
+            Err(PredictFail::Deadline { waited }) => {
+                assert!(waited >= Duration::from_millis(1));
+            }
+            other => panic!("expected deadline shed under stall, got {other:?}"),
+        }
+        assert_eq!(metrics.predict_batches.get(), 0);
+    }
+
+    #[test]
+    fn brownout_enters_at_three_quarters_and_exits_at_one_quarter() {
+        let mut b = Brownout::new(16);
+        assert_eq!(b.observe(0), None);
+        assert_eq!(b.observe(11), None, "below 3/4 stays out");
+        assert_eq!(b.observe(12), Some(true), "3/4 full enters");
+        assert_eq!(b.observe(13), None, "already in");
+        assert_eq!(b.observe(5), None, "above 1/4 stays in (hysteresis)");
+        assert_eq!(b.observe(4), Some(false), "1/4 exits");
+        assert_eq!(b.observe(4), None);
+        // degenerate bound never divides by zero
+        let mut tiny = Brownout::new(0);
+        assert_eq!(tiny.observe(1), Some(true));
+    }
+
+    #[test]
+    fn full_queue_failpoint_sheds_with_overloaded() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = start(Duration::ZERO, 8, &metrics);
         let m = model(vec![2, 2], 7);
         let handle = batcher.handle();
         {
             let _fp = failpoint::scoped("serve.batcher.full", failpoint::FailAction::Error);
             let (tx, _rx) = sync_channel(1);
             let err = handle
-                .submit(PredictJob {
-                    model: Arc::clone(&m),
-                    inputs: Tensor::zeros(1, 2),
-                    reply: tx,
-                })
+                .submit(PredictJob::new(Arc::clone(&m), Tensor::zeros(1, 2), tx))
                 .unwrap_err();
             assert_eq!(err, SubmitError::Overloaded);
         }
@@ -471,18 +864,49 @@ mod tests {
     }
 
     #[test]
+    fn zero_submit_wait_sheds_immediately_on_a_full_queue() {
+        let _serial = failpoint::serial_guard();
+        let metrics = Arc::new(ServeMetrics::new());
+        // a stalled queue of depth 1 with no dispatcher drain: fill it,
+        // then a zero-wait submit must shed without sleeping
+        let _fp = failpoint::scoped("serve.queue.stall", failpoint::FailAction::Error);
+        let batcher = Batcher::start(
+            BatcherConfig {
+                window: Duration::ZERO,
+                max_rows: 8,
+                max_queue: 1,
+                submit_wait: Duration::ZERO,
+            },
+            Arc::clone(&metrics),
+            Arc::new(CircuitBreaker::new()),
+        );
+        let m = model(vec![2, 2], 14);
+        let handle = batcher.handle();
+        // saturate: with the dispatcher stalling, at least one of a
+        // burst of zero-wait submits must observe a full queue
+        let mut shed = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            let (tx, rx) = sync_channel(1);
+            match handle.submit(PredictJob::new(Arc::clone(&m), Tensor::zeros(1, 2), tx)) {
+                Ok(()) => rxs.push(rx),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected submit error {e:?}"),
+            }
+        }
+        assert!(shed > 0, "zero-wait submit never shed on a full queue");
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok(), "accepted jobs are answered");
+        }
+    }
+
+    #[test]
     fn panicked_dispatcher_turns_submits_into_down() {
         let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
         let batcher = {
             let _fp = failpoint::scoped("serve.batcher.panic", failpoint::FailAction::Panic);
-            let b = Batcher::start(
-                BatcherConfig {
-                    window: Duration::ZERO,
-                    max_rows: 8,
-                },
-                Arc::clone(&metrics),
-            );
+            let b = start(Duration::ZERO, 8, &metrics);
             // the persistent panic burns the whole restart budget; wait
             // for the channel to disconnect (submits before that may be
             // accepted into the dying queue and are never answered)
@@ -490,11 +914,10 @@ mod tests {
             let deadline = Instant::now() + Duration::from_secs(10);
             loop {
                 let (tx, _rx) = sync_channel(1);
-                match b.handle().submit(PredictJob {
-                    model: Arc::clone(&m),
-                    inputs: Tensor::zeros(1, 2),
-                    reply: tx,
-                }) {
+                match b
+                    .handle()
+                    .submit(PredictJob::new(Arc::clone(&m), Tensor::zeros(1, 2), tx))
+                {
                     Err(SubmitError::Down) => break,
                     _ => {
                         assert!(
@@ -519,13 +942,7 @@ mod tests {
         // iteration panics exactly once and the failpoint disarms
         // itself; the supervisor respawns the loop.
         let _fp = failpoint::scoped_at("serve.batcher.panic", failpoint::FailAction::Panic, 1);
-        let batcher = Batcher::start(
-            BatcherConfig {
-                window: Duration::ZERO,
-                max_rows: 8,
-            },
-            Arc::clone(&metrics),
-        );
+        let batcher = start(Duration::ZERO, 8, &metrics);
         let m = model(vec![2, 2], 9);
         // The queued job is answered by the respawned dispatcher — the
         // reply is the synchronization point proving the restart landed.
@@ -537,14 +954,9 @@ mod tests {
 
     #[test]
     fn shutdown_answers_queued_jobs() {
+        let _serial = failpoint::serial_guard();
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::start(
-            BatcherConfig {
-                window: Duration::from_millis(50),
-                max_rows: 8,
-            },
-            Arc::clone(&metrics),
-        );
+        let batcher = start(Duration::from_millis(50), 8, &metrics);
         let m = model(vec![2, 2], 6);
         let rx = submit(&batcher.handle(), &m, Tensor::zeros(1, 2));
         drop(batcher); // join — the queued job must still be answered

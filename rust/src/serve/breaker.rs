@@ -1,0 +1,221 @@
+//! Per-model circuit breaker: a model that keeps panicking in predict
+//! or failing to reload is quarantined so it stops burning dispatcher
+//! time (and stops taking the respawn budget down with it), while every
+//! other model in the registry keeps serving.
+//!
+//! Classic three-state machine, tracked independently per model name:
+//!
+//! * **Closed** — healthy; failures accumulate strikes, any success
+//!   clears them.
+//! * **Open** — quarantined after [`BREAKER_THRESHOLD`] consecutive
+//!   strikes; predicts are refused (404 + reason) until the cooldown
+//!   elapses.
+//! * **Half-open** — after the cooldown exactly one probe request is
+//!   admitted; success closes the breaker, failure re-opens it for
+//!   another full cooldown.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Consecutive failures (predict panic, predict error, reload error)
+/// before a model's breaker opens.
+pub const BREAKER_THRESHOLD: u32 = 3;
+
+/// How long an open breaker refuses traffic before admitting one
+/// half-open probe.
+pub const BREAKER_COOLDOWN: Duration = Duration::from_secs(5);
+
+/// What the breaker says about admitting a request for a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Closed (or half-open probe slot granted) — serve it.
+    Allow,
+    /// Open — refuse with the remaining cooldown as the back-off hint.
+    Quarantined { retry_in: Duration },
+}
+
+#[derive(Clone, Copy, Debug)]
+enum State {
+    Closed { strikes: u32 },
+    Open { until: Instant },
+    /// One probe is in flight; further requests stay refused until it
+    /// resolves (success → Closed, failure → Open).
+    HalfOpen,
+}
+
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    states: Mutex<HashMap<String, State>>,
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CircuitBreaker {
+    pub fn new() -> CircuitBreaker {
+        CircuitBreaker::with(BREAKER_THRESHOLD, BREAKER_COOLDOWN)
+    }
+
+    /// Custom threshold/cooldown (tests shrink the cooldown to keep the
+    /// half-open path fast).
+    pub fn with(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            states: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Admission decision for one request. An expired open breaker
+    /// transitions to half-open here and admits the caller as the probe.
+    pub fn check(&self, model: &str) -> Admission {
+        let mut states = self.states.lock().unwrap_or_else(|e| e.into_inner());
+        match states.get(model).copied() {
+            None | Some(State::Closed { .. }) => Admission::Allow,
+            Some(State::Open { until }) => {
+                let now = Instant::now();
+                if now >= until {
+                    states.insert(model.to_string(), State::HalfOpen);
+                    Admission::Allow
+                } else {
+                    Admission::Quarantined {
+                        retry_in: until - now,
+                    }
+                }
+            }
+            // probe already in flight — don't stampede a sick model
+            Some(State::HalfOpen) => Admission::Quarantined {
+                retry_in: self.cooldown,
+            },
+        }
+    }
+
+    /// A predict (or reload) succeeded: clear strikes / close a
+    /// half-open breaker.
+    pub fn record_success(&self, model: &str) {
+        self.states
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(model);
+    }
+
+    /// A predict panicked/errored or a reload failed. Returns `true`
+    /// when this strike opened (or re-opened) the breaker — callers
+    /// count that edge in `dmdtrain_breaker_opens_total`.
+    pub fn record_failure(&self, model: &str) -> bool {
+        let mut states = self.states.lock().unwrap_or_else(|e| e.into_inner());
+        let state = states
+            .entry(model.to_string())
+            .or_insert(State::Closed { strikes: 0 });
+        match *state {
+            State::Closed { strikes } => {
+                let strikes = strikes + 1;
+                if strikes >= self.threshold {
+                    *state = State::Open {
+                        until: Instant::now() + self.cooldown,
+                    };
+                    true
+                } else {
+                    *state = State::Closed { strikes };
+                    false
+                }
+            }
+            // failed probe: straight back to a full cooldown
+            State::HalfOpen => {
+                *state = State::Open {
+                    until: Instant::now() + self.cooldown,
+                };
+                true
+            }
+            // already open (e.g. reload failures while quarantined) —
+            // keep the existing deadline so retries stay predictable
+            State::Open { .. } => false,
+        }
+    }
+
+    /// Names with an open or half-open breaker (for `/readyz` detail).
+    pub fn quarantined(&self) -> Vec<String> {
+        let states = self.states.lock().unwrap_or_else(|e| e.into_inner());
+        let mut names: Vec<String> = states
+            .iter()
+            .filter(|(_, s)| !matches!(s, State::Closed { .. }))
+            .map(|(n, _)| n.clone())
+            .collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opens_after_threshold_consecutive_failures() {
+        let b = CircuitBreaker::with(3, Duration::from_secs(60));
+        assert_eq!(b.check("m"), Admission::Allow);
+        assert!(!b.record_failure("m"));
+        assert!(!b.record_failure("m"));
+        assert_eq!(b.check("m"), Admission::Allow, "below threshold");
+        assert!(b.record_failure("m"), "third strike opens");
+        match b.check("m") {
+            Admission::Quarantined { retry_in } => assert!(retry_in <= Duration::from_secs(60)),
+            Admission::Allow => panic!("open breaker admitted a request"),
+        }
+        assert_eq!(b.quarantined(), vec!["m".to_string()]);
+        // other models are untouched
+        assert_eq!(b.check("other"), Admission::Allow);
+    }
+
+    #[test]
+    fn success_resets_the_strike_count() {
+        let b = CircuitBreaker::with(3, Duration::from_secs(60));
+        b.record_failure("m");
+        b.record_failure("m");
+        b.record_success("m");
+        b.record_failure("m");
+        b.record_failure("m");
+        assert_eq!(b.check("m"), Admission::Allow, "streak was broken");
+    }
+
+    #[test]
+    fn half_open_admits_one_probe_then_closes_on_success() {
+        let b = CircuitBreaker::with(1, Duration::from_millis(20));
+        assert!(b.record_failure("m"));
+        assert!(matches!(b.check("m"), Admission::Quarantined { .. }));
+        std::thread::sleep(Duration::from_millis(30));
+        // cooldown elapsed: first check is the probe, second is refused
+        assert_eq!(b.check("m"), Admission::Allow);
+        assert!(matches!(b.check("m"), Admission::Quarantined { .. }));
+        b.record_success("m");
+        assert_eq!(b.check("m"), Admission::Allow);
+        assert!(b.quarantined().is_empty());
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_a_full_cooldown() {
+        let b = CircuitBreaker::with(1, Duration::from_millis(20));
+        assert!(b.record_failure("m"));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(b.check("m"), Admission::Allow, "probe admitted");
+        assert!(b.record_failure("m"), "failed probe re-opens");
+        assert!(matches!(b.check("m"), Admission::Quarantined { .. }));
+    }
+
+    #[test]
+    fn failures_while_open_do_not_extend_the_deadline() {
+        let b = CircuitBreaker::with(1, Duration::from_millis(30));
+        assert!(b.record_failure("m"));
+        // reload failures keep arriving while quarantined
+        assert!(!b.record_failure("m"));
+        assert!(!b.record_failure("m"));
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(b.check("m"), Admission::Allow, "original deadline held");
+    }
+}

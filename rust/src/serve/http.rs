@@ -39,6 +39,9 @@ pub struct Request {
     /// Whether the client asked to keep the connection open
     /// (HTTP/1.1 default, overridable via `Connection:`).
     pub keep_alive: bool,
+    /// Per-request latency budget from the `X-Deadline-Ms` header —
+    /// the server sheds the request (503) once this expires in queue.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Read one request off the stream. `Ok(None)` means the peer closed
@@ -61,6 +64,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> anyhow::Result<Option<Request
 
     let mut content_length = 0usize;
     let mut keep_alive = version != "HTTP/1.0";
+    let mut deadline_ms = None;
     let mut terminated = false;
     for _ in 0..MAX_HEADERS {
         let h = read_line_limited(reader, MAX_HEADER_LINE)?
@@ -86,6 +90,14 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> anyhow::Result<Option<Request
                         keep_alive = true;
                     }
                 }
+                "x-deadline-ms" => {
+                    // loud on garbage: a client that tried to set a
+                    // budget should not silently get no budget
+                    deadline_ms = Some(
+                        v.parse()
+                            .map_err(|_| anyhow::anyhow!("bad X-Deadline-Ms {v:?}"))?,
+                    );
+                }
                 _ => {}
             }
         }
@@ -102,6 +114,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> anyhow::Result<Option<Request
         path,
         body,
         keep_alive,
+        deadline_ms,
     }))
 }
 
@@ -235,6 +248,21 @@ mod tests {
         assert_eq!(req.path, "/healthz");
         assert!(req.body.is_empty());
         assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.deadline_ms, None, "no header, no budget");
+    }
+
+    #[test]
+    fn deadline_header_parses_and_rejects_garbage() {
+        let raw = b"GET /healthz HTTP/1.1\r\nX-Deadline-Ms: 250\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.deadline_ms, Some(250));
+        // case-insensitive like every other header
+        let raw = b"GET /healthz HTTP/1.1\r\nx-deadline-ms: 9\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.deadline_ms, Some(9));
+        // a client that tried to set a budget must not silently lose it
+        let raw = b"GET /healthz HTTP/1.1\r\nX-Deadline-Ms: soon\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
     }
 
     #[test]

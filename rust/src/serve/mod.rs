@@ -11,10 +11,26 @@
 //! * [`batcher::Batcher`] — coalesces concurrent predict requests
 //!   inside a configurable window into one GEMM on the shared
 //!   [`crate::util::pool::WorkerPool`];
-//! * [`router`] — `/predict`, `/models`, `/healthz`, `/metrics`
-//!   (Prometheus counters + latency histograms from
+//! * [`router`] — `/predict`, `/models`, `/healthz`, `/readyz`,
+//!   `/metrics` (Prometheus counters + latency histograms from
 //!   [`crate::metrics::serve`]);
-//! * [`http`] — the minimal HTTP/1.1 request/response codec.
+//! * [`http`] — the minimal HTTP/1.1 request/response codec;
+//! * [`admission`] — queue pressure (computed `Retry-After`) and
+//!   per-model in-flight budgets;
+//! * [`breaker`] — per-model circuit breaker quarantining checkpoints
+//!   that keep panicking or failing to reload.
+//!
+//! ## Overload & lifecycle
+//!
+//! Requests carry an optional deadline (`serve.request_timeout_ms`
+//! and/or `X-Deadline-Ms`); expired jobs are shed before the GEMM with
+//! 503. The queue is bounded (`serve.max_queue_jobs`) with a bounded
+//! submit wait (`serve.submit_wait_ms`) — saturation sheds with 429 and
+//! a `Retry-After` computed from queue depth over drain rate. A
+//! graceful stop first *drains*: the listener closes, `/readyz` flips
+//! to `draining`, keep-alive is downgraded, and in-flight work gets
+//! `serve.drain_timeout_ms` to finish before connections are
+//! force-closed.
 //!
 //! ## Threading & determinism
 //!
@@ -29,12 +45,16 @@
 //! `Executable::predict` directly on the same checkpoint, regardless of
 //! batch coalescing, thread count, or concurrent traffic.
 
+pub mod admission;
 pub mod batcher;
+pub mod breaker;
 pub mod http;
 pub mod registry;
 pub mod router;
 
-pub use batcher::{Batcher, BatcherConfig, BatcherHandle};
+pub use admission::{InflightBudget, QueuePressure};
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle, PredictFail};
+pub use breaker::{Admission, CircuitBreaker};
 pub use registry::{ModelRegistry, ReloadReport, ServedModel};
 pub use router::AppState;
 
@@ -43,14 +63,28 @@ use crate::metrics::serve::ServeMetrics;
 use std::collections::{BTreeSet, HashMap};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Close keep-alive connections idle longer than this; also bounds how
-/// long shutdown waits for an idle client.
-const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Charge reload failures to each model's circuit breaker (and clear
+/// strikes for models that loaded cleanly). Scan-level errors carry the
+/// `<scan>` pseudo-name and strike nothing.
+fn note_reload_outcome(breaker: &CircuitBreaker, metrics: &ServeMetrics, report: &ReloadReport) {
+    for name in &report.loaded {
+        breaker.record_success(name);
+    }
+    for (name, err) in &report.errors {
+        if name == "<scan>" {
+            continue;
+        }
+        if breaker.record_failure(name) {
+            metrics.breaker_opens.inc();
+            eprintln!("serve: circuit breaker opened for model '{name}' (reload: {err})");
+        }
+    }
+}
 
 /// Counting gate: caps concurrent connection handlers and lets shutdown
 /// wait for all of them to finish.
@@ -88,6 +122,25 @@ impl Gate {
         while *n > 0 {
             n = self.cv.wait(n).unwrap();
         }
+    }
+
+    /// Wait for all handlers to finish, giving up after `timeout`.
+    /// Returns `true` when the gate went idle (clean drain).
+    fn wait_idle_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut n = self.count.lock().unwrap();
+        while *n > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            n = self.cv.wait_timeout(n, deadline - now).unwrap().0;
+        }
+        true
+    }
+
+    fn active(&self) -> usize {
+        *self.count.lock().unwrap()
     }
 }
 
@@ -222,14 +275,17 @@ impl ReloadBackoff {
 }
 
 /// A running inference server. Dropping (or calling [`Server::shutdown`])
-/// stops accepting, drains in-flight connections, then joins the batcher
-/// and reload threads.
+/// stops accepting, flips `/readyz` to `draining`, gives in-flight
+/// handlers `serve.drain_timeout_ms` to finish, then force-closes
+/// stragglers and joins the batcher and reload threads.
 pub struct Server {
     addr: SocketAddr,
     state: Arc<AppState>,
     shutdown: Arc<AtomicBool>,
     gate: Arc<Gate>,
     tracker: Arc<ConnTracker>,
+    drain_timeout: Duration,
+    stopped: bool,
     accept_thread: Option<JoinHandle<()>>,
     reload_thread: Option<JoinHandle<()>>,
     /// Dropped last (after connections drain) so every in-flight predict
@@ -247,17 +303,27 @@ impl Server {
         }
         let registry = Arc::new(registry);
         let metrics = Arc::new(ServeMetrics::new());
+        let breaker = Arc::new(CircuitBreaker::new());
         let batcher = Batcher::start(
             BatcherConfig {
                 window: Duration::from_micros(cfg.batch_window_us),
                 max_rows: cfg.max_batch_rows,
+                max_queue: cfg.max_queue_jobs.max(1),
+                submit_wait: Duration::from_millis(cfg.submit_wait_ms),
             },
             Arc::clone(&metrics),
+            Arc::clone(&breaker),
         );
         let state = Arc::new(AppState {
             registry: Arc::clone(&registry),
             metrics,
             started: std::time::Instant::now(),
+            draining: Arc::new(AtomicBool::new(false)),
+            reload_streak: Arc::new(AtomicU32::new(0)),
+            breaker,
+            budget: InflightBudget::new(cfg.per_model_inflight),
+            request_timeout: (cfg.request_timeout_ms > 0)
+                .then(|| Duration::from_millis(cfg.request_timeout_ms)),
         });
 
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
@@ -267,6 +333,7 @@ impl Server {
         let gate = Arc::new(Gate::new(cfg.threads));
         let tracker = Arc::new(ConnTracker::new());
 
+        let idle_timeout = Duration::from_millis(cfg.idle_timeout_ms.max(1));
         let accept_thread = {
             let state = Arc::clone(&state);
             let shutdown = Arc::clone(&shutdown);
@@ -275,7 +342,9 @@ impl Server {
             let handle = batcher.handle();
             std::thread::Builder::new()
                 .name("dmdtrain-accept".to_string())
-                .spawn(move || accept_loop(listener, state, handle, shutdown, gate, tracker))
+                .spawn(move || {
+                    accept_loop(listener, state, handle, shutdown, gate, tracker, idle_timeout)
+                })
                 .map_err(|e| anyhow::anyhow!("spawn accept thread: {e}"))?
         };
 
@@ -283,6 +352,8 @@ impl Server {
             let registry = Arc::clone(&registry);
             let metrics = Arc::clone(&state.metrics);
             let shutdown = Arc::clone(&shutdown);
+            let breaker = Arc::clone(&state.breaker);
+            let reload_streak = Arc::clone(&state.reload_streak);
             let period = Duration::from_secs(cfg.reload_secs);
             Some(
                 std::thread::Builder::new()
@@ -299,8 +370,12 @@ impl Server {
                             last = std::time::Instant::now();
                             let report = registry.reload();
                             metrics.registry_reloads.inc();
+                            note_reload_outcome(&breaker, &metrics, &report);
                             let pass = backoff.on_pass(&report.errors);
                             delay = pass.delay;
+                            // surfaces in /readyz as `degraded` while a
+                            // failure streak is alive
+                            reload_streak.store(backoff.streak, Ordering::Relaxed);
                             for line in &pass.log {
                                 eprintln!(
                                     "serve: reload failed ({line}); retrying in {delay:?}"
@@ -330,6 +405,8 @@ impl Server {
             shutdown,
             gate,
             tracker,
+            drain_timeout: Duration::from_millis(cfg.drain_timeout_ms),
+            stopped: false,
             accept_thread: Some(accept_thread),
             reload_thread,
             batcher: Some(batcher),
@@ -364,19 +441,35 @@ impl Server {
     }
 
     fn stop(&mut self) {
-        if self.shutdown.swap(true, Ordering::Relaxed) {
+        if std::mem::replace(&mut self.stopped, true) {
             return;
         }
-        // unblock accept() with a dummy connection
+        // Phase 1 — drain. Flip /readyz to `draining` (load balancers
+        // pull the instance), close the listener (new connects are
+        // refused), downgrade keep-alive so handlers exit after their
+        // current request, and give in-flight work a bounded grace
+        // period to finish.
+        self.state.draining.store(true, Ordering::Relaxed);
+        // unblock accept() with a dummy connection; the accept loop
+        // exits and drops the listener
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        // Force-close live connections so a slow client (one byte per
-        // read-timeout window) cannot pin the drain below indefinitely.
+        if !self.gate.wait_idle_timeout(self.drain_timeout) {
+            eprintln!(
+                "serve: drain timed out after {:?} with {} handler(s) live; force-closing",
+                self.drain_timeout,
+                self.gate.active()
+            );
+        }
+        // Phase 2 — force-close. Stragglers (slow clients, dozing
+        // keep-alive sockets) are cut so a byte-at-a-time peer cannot
+        // pin shutdown indefinitely.
+        self.shutdown.store(true, Ordering::Relaxed);
         self.tracker.shutdown_all();
         self.gate.wait_idle();
-        self.batcher = None; // joins the dispatcher
+        self.batcher = None; // joins the dispatcher (answers queued jobs)
         if let Some(t) = self.reload_thread.take() {
             let _ = t.join();
         }
@@ -396,12 +489,17 @@ fn accept_loop(
     shutdown: Arc<AtomicBool>,
     gate: Arc<Gate>,
     tracker: Arc<ConnTracker>,
+    idle_timeout: Duration,
 ) {
+    let stopping =
+        |state: &AppState, shutdown: &AtomicBool| -> bool {
+            shutdown.load(Ordering::Relaxed) || state.draining.load(Ordering::Relaxed)
+        };
     loop {
         let stream = match listener.accept() {
             Ok((s, _)) => s,
             Err(_) => {
-                if shutdown.load(Ordering::Relaxed) {
+                if stopping(&state, &shutdown) {
                     break;
                 }
                 // transient accept failure (e.g. EMFILE) — back off
@@ -410,7 +508,7 @@ fn accept_loop(
                 continue;
             }
         };
-        if shutdown.load(Ordering::Relaxed) {
+        if stopping(&state, &shutdown) {
             break; // the wake-up connection from stop()
         }
         gate.enter();
@@ -430,7 +528,7 @@ fn accept_loop(
             .spawn(move || {
                 let _guard = guard;
                 let _conn_guard = conn_guard;
-                handle_connection(stream, &state, &batcher, &shutdown);
+                handle_connection(stream, &state, &batcher, &shutdown, idle_timeout);
             });
     }
 }
@@ -440,12 +538,13 @@ fn handle_connection(
     state: &AppState,
     batcher: &BatcherHandle,
     shutdown: &AtomicBool,
+    idle_timeout: Duration,
 ) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(idle_timeout));
     // A peer that stops draining its receive buffer must stall a
     // bounded time, not pin the handler thread forever on write.
-    let _ = stream.set_write_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(idle_timeout));
     let reader_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -467,7 +566,12 @@ fn handle_connection(
                 break;
             }
         };
-        let keep_alive = req.keep_alive && !shutdown.load(Ordering::Relaxed);
+        // draining downgrades keep-alive: the current request is served
+        // (with `Connection: close`), then the handler exits and frees
+        // its gate slot for the drain to observe
+        let keep_alive = req.keep_alive
+            && !shutdown.load(Ordering::Relaxed)
+            && !state.draining.load(Ordering::Relaxed);
         let resp = router::handle(state, batcher, &req);
         if resp.write_to(&mut writer, keep_alive).is_err() {
             break;

@@ -1,11 +1,22 @@
 //! Request routing for the inference server.
 //!
 //! Routes:
-//! * `GET /healthz`  — liveness + loaded-model count
+//! * `GET /healthz`  — liveness + loaded-model count (always 200 while
+//!   the process serves)
+//! * `GET /readyz`   — readiness state machine: `ready`, `degraded`
+//!   (reload backoff streak, batcher restarts, brownout, or quarantined
+//!   models — still 200), or `draining` (503; graceful stop underway)
 //! * `GET /models`   — registry listing (name, arch, params, scaling, workload)
 //! * `GET /metrics`  — Prometheus text exposition
 //! * `POST /reload`  — rescan the model directory now
 //! * `POST /predict` — JSON predict, coalesced by the micro-batcher
+//!
+//! Shed classification: **429** means *the server* refused to queue the
+//! request (full queue after the bounded submit wait, or the model's
+//! per-model concurrency budget) — retry after the computed
+//! `Retry-After`. **503** means an accepted request could not be
+//! answered (deadline expired in queue, dispatcher down/draining).
+//! **404 + reason** means the model's circuit breaker is open.
 //!
 //! `POST /predict` body: `{"model": "name", "inputs": [[…], …]}` —
 //! `inputs` is a list of rows (or one flat row), `model` may be omitted
@@ -18,25 +29,42 @@
 //! `Executable::predict` directly on the same checkpoint (the standing
 //! invariant in `tests/serve_integration.rs`).
 
-use super::batcher::{BatcherHandle, PredictJob, SubmitError, RETRY_AFTER_SECS};
+use super::admission::InflightBudget;
+use super::batcher::{BatcherHandle, PredictFail, PredictJob, SubmitError};
+use super::breaker::{Admission, CircuitBreaker};
 use super::http::{Request, Response};
 use super::registry::{ModelRegistry, ServedModel};
 use crate::metrics::serve::ServeMetrics;
 use crate::tensor::Tensor;
 use crate::util::jsonl::{parse, Json};
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Rows per single request (the batcher caps per-GEMM rows separately).
-const MAX_REQUEST_ROWS: usize = 65_536;
+pub const MAX_REQUEST_ROWS: usize = 65_536;
 
 /// Shared server state handed to every connection thread.
 pub struct AppState {
     pub registry: Arc<ModelRegistry>,
     pub metrics: Arc<ServeMetrics>,
     pub started: Instant,
+    /// Graceful stop underway: `/readyz` answers `draining` (503) and
+    /// keep-alive is downgraded so handlers exit after their current
+    /// request.
+    pub draining: Arc<AtomicBool>,
+    /// Current background reload-failure streak (0 = healthy); nonzero
+    /// degrades `/readyz`.
+    pub reload_streak: Arc<AtomicU32>,
+    /// Per-model quarantine after repeated predict/reload failures.
+    pub breaker: Arc<CircuitBreaker>,
+    /// Per-model in-flight caps (`serve.per_model_inflight`).
+    pub budget: Arc<InflightBudget>,
+    /// Server-side predict deadline (`serve.request_timeout_ms`);
+    /// `None` = header-only deadlines.
+    pub request_timeout: Option<Duration>,
 }
 
 /// Dispatch one request; never panics — all failures map to 4xx/5xx.
@@ -44,6 +72,7 @@ pub fn handle(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Respo
     state.metrics.http_requests.inc();
     let resp = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(state),
+        ("GET", "/readyz") => readyz(state, batcher),
         ("GET", "/models") => models(state),
         ("GET", "/metrics") => metrics_page(state),
         ("POST", "/reload") => reload(state),
@@ -77,6 +106,50 @@ fn healthz(state: &AppState) -> Response {
     Response::json(200, body)
 }
 
+/// Readiness state machine. `draining` is 503 so load balancers pull
+/// the instance; `degraded` stays 200 (still serving, but something is
+/// limping) with the reasons listed.
+fn readyz(state: &AppState, batcher: &BatcherHandle) -> Response {
+    let pressure = batcher.pressure();
+    if state.draining.load(Ordering::Relaxed) {
+        return Response::json(
+            503,
+            format!(
+                "{{\"state\":\"draining\",\"queue_depth\":{}}}",
+                pressure.depth()
+            ),
+        );
+    }
+    let mut reasons: Vec<String> = Vec::new();
+    let streak = state.reload_streak.load(Ordering::Relaxed);
+    if streak > 0 {
+        reasons.push(format!("reload_backoff_streak={streak}"));
+    }
+    let restarts = state.metrics.batcher_restarts.get();
+    if restarts > 0 {
+        reasons.push(format!("batcher_restarts={restarts}"));
+    }
+    if pressure.in_brownout() {
+        reasons.push("brownout".to_string());
+    }
+    let quarantined = state.breaker.quarantined();
+    if !quarantined.is_empty() {
+        reasons.push(format!("quarantined_models={}", quarantined.len()));
+    }
+    let ready_state = if reasons.is_empty() { "ready" } else { "degraded" };
+    let reasons_json: Vec<String> = reasons
+        .into_iter()
+        .map(|r| Json::Str(r).encode())
+        .collect();
+    let body = format!(
+        "{{\"state\":\"{ready_state}\",\"reasons\":[{}],\"models\":{},\"queue_depth\":{}}}",
+        reasons_json.join(","),
+        state.registry.len(),
+        pressure.depth()
+    );
+    Response::json(200, body)
+}
+
 fn models(state: &AppState) -> Response {
     let mut body = String::from("{\"models\":[");
     for (i, m) in state.registry.list().iter().enumerate() {
@@ -105,6 +178,7 @@ fn models(state: &AppState) -> Response {
 fn reload(state: &AppState) -> Response {
     let report = state.registry.reload();
     state.metrics.registry_reloads.inc();
+    super::note_reload_outcome(&state.breaker, &state.metrics, &report);
     let names = |v: &[String]| -> String {
         let quoted: Vec<String> = v.iter().map(|s| Json::Str(s.clone()).encode()).collect();
         format!("[{}]", quoted.join(","))
@@ -135,23 +209,62 @@ fn predict(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Response
         Ok(ok) => ok,
         Err(resp) => return resp,
     };
+
+    // circuit breaker: a quarantined model is refused outright so a
+    // sick checkpoint cannot keep eating dispatcher time
+    if let Admission::Quarantined { retry_in } = state.breaker.check(&model.name) {
+        state.metrics.breaker_rejects.inc();
+        let secs = retry_in.as_secs().max(1);
+        return Response::error(
+            404,
+            &format!(
+                "model '{}' is quarantined after repeated failures; retry in ~{secs}s",
+                model.name
+            ),
+        )
+        .with_retry_after(secs);
+    }
+
+    // per-model concurrency budget: one hot model saturating its slots
+    // sheds its own traffic instead of starving every other model
+    let budget = match state.budget.try_acquire(&model.name) {
+        Some(g) => g,
+        None => {
+            state.metrics.budget_shed.inc();
+            return Response::error(
+                429,
+                &format!("model '{}' is at its concurrency budget, retry later", model.name),
+            )
+            .with_retry_after(batcher.retry_after_hint());
+        }
+    };
+
     state.metrics.predict_requests.inc();
     state.metrics.predict_rows.add(x.rows() as u64);
 
-    let (reply_tx, reply_rx) = sync_channel(1);
-    let job = PredictJob {
-        model: Arc::clone(&model),
-        inputs: x,
-        reply: reply_tx,
+    // effective deadline: the tighter of the server budget and the
+    // client's X-Deadline-Ms header
+    let timeout = match (state.request_timeout, req.deadline_ms) {
+        (Some(s), Some(h)) => Some(s.min(Duration::from_millis(h))),
+        (Some(s), None) => Some(s),
+        (None, Some(h)) => Some(Duration::from_millis(h)),
+        (None, None) => None,
     };
+    let deadline = timeout.map(|t| t0 + t);
+
+    let (reply_tx, reply_rx) = sync_channel(1);
+    let job = PredictJob::new(Arc::clone(&model), x, reply_tx)
+        .with_deadline(deadline)
+        .with_budget(Some(budget));
     match batcher.submit(job) {
         Ok(()) => {}
         Err(SubmitError::Overloaded) => {
             // load shed: bounded-wait submit gave up on a full queue —
-            // tell the client to back off instead of queueing forever
+            // tell the client to back off instead of queueing forever;
+            // the hint is computed from queue depth over drain rate
             state.metrics.predict_shed.inc();
             return Response::error(429, "predict queue is full, retry later")
-                .with_retry_after(RETRY_AFTER_SECS);
+                .with_retry_after(batcher.retry_after_hint());
         }
         Err(SubmitError::Down) => {
             return Response::error(503, "predict dispatcher is down");
@@ -163,7 +276,18 @@ fn predict(state: &AppState, batcher: &BatcherHandle, req: &Request) -> Response
     };
     let y = match result {
         Ok(y) => y,
-        Err(e) => return Response::error(500, &format!("predict failed: {e:#}")),
+        Err(fail @ PredictFail::Deadline { .. }) => {
+            return Response::error(503, &fail.to_string());
+        }
+        Err(PredictFail::Panicked) => {
+            return Response::error(
+                500,
+                &format!("predict failed: model '{}' panicked", model.name),
+            );
+        }
+        Err(PredictFail::Failed(msg)) => {
+            return Response::error(500, &format!("predict failed: {msg}"));
+        }
     };
     state.metrics.predict_latency.observe(t0.elapsed().as_secs_f64());
 

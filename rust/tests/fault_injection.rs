@@ -8,11 +8,13 @@
 //! is a single relaxed atomic load), so these tests are additive: they
 //! cannot perturb any other test binary.
 
-use dmdtrain::config::{Config, TrainConfig};
+use dmdtrain::config::{Config, ServeConfig, TrainConfig};
 use dmdtrain::data::Dataset;
 use dmdtrain::model::Arch;
 use dmdtrain::rng::Rng;
 use dmdtrain::runtime::Runtime;
+use dmdtrain::serve::http::read_response;
+use dmdtrain::serve::Server;
 use dmdtrain::tensor::Tensor;
 use dmdtrain::trainer::{
     load_params, load_train_state, save_params, save_train_state, TrainSession, FP_SAVE_PARAMS,
@@ -20,6 +22,8 @@ use dmdtrain::trainer::{
 };
 use dmdtrain::util;
 use dmdtrain::util::failpoint::{self, FailAction};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 
 fn runtime() -> Runtime {
@@ -331,6 +335,118 @@ fn disabled_recovery_keeps_legacy_divergence_error() {
         format!("{err:#}").contains("loss diverged at step"),
         "unexpected error: {err:#}"
     );
+}
+
+// ------------------------------------------------------------- serving faults
+
+/// Model dir with one checkpoint `m` (4 → 6 → 2) for the serve tests.
+fn serve_dir(tag: &str) -> PathBuf {
+    let dir = tmp_dir(tag);
+    let arch = Arch::new(vec![4, 6, 2]).unwrap();
+    let params = arch.init_params(&mut Rng::new(77));
+    save_params(&params, dir.join("m.dmdp")).unwrap();
+    dir
+}
+
+fn serve_cfg(dir: &std::path::Path, batch_window_us: u64) -> ServeConfig {
+    ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        model_dir: dir.to_string_lossy().into_owned(),
+        batch_window_us,
+        max_batch_rows: 64,
+        threads: 16,
+        reload_secs: 0,
+        ..ServeConfig::default()
+    }
+}
+
+/// One `POST /predict` over a fresh connection, with extra raw headers.
+fn serve_request(addr: SocketAddr, extra_headers: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let wire = format!(
+        "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         {extra_headers}Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(wire.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, resp) = read_response(&mut reader).expect("response");
+    (status, String::from_utf8(resp).expect("utf8 body"))
+}
+
+const PREDICT_BODY: &str = r#"{"model":"m","inputs":[[0.1,0.2,0.3,0.4]]}"#;
+
+/// Repeated injected predict panics are caught per dispatch (the
+/// dispatcher survives, no respawn burned) and trip the model's circuit
+/// breaker into quarantine: three 500s, then 404 with a retry hint.
+#[test]
+fn predict_panics_trip_the_circuit_breaker() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let dir = serve_dir("predict_panic");
+    let server = Server::start(&serve_cfg(&dir, 500)).unwrap();
+    let addr = server.addr();
+
+    let fp = failpoint::scoped("serve.predict.panic", FailAction::Panic);
+    for i in 0..3 {
+        let (status, resp) = serve_request(addr, "", PREDICT_BODY);
+        assert_eq!(status, 500, "strike {i}: {resp}");
+        assert!(resp.contains("panicked"), "strike {i}: {resp}");
+    }
+    drop(fp);
+
+    // three strikes: the breaker is open, the model refused outright
+    let (status, resp) = serve_request(addr, "", PREDICT_BODY);
+    assert_eq!(status, 404, "{resp}");
+    assert!(resp.contains("quarantined"), "{resp}");
+
+    let m = server.metrics();
+    assert_eq!(m.predict_panics.get(), 3);
+    assert_eq!(m.breaker_opens.get(), 1);
+    assert_eq!(m.breaker_rejects.get(), 1);
+    assert_eq!(m.batcher_restarts.get(), 0, "panics are caught per dispatch");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A stalled dispatcher (injected) makes queued jobs outlive their
+/// `X-Deadline-Ms` budget: they are shed with 503 `deadline exceeded`
+/// *before* the GEMM, never served late.
+#[test]
+fn queue_stall_sheds_expired_deadlines_before_the_gemm() {
+    let _g = failpoint::serial_guard();
+    failpoint::disarm_all();
+    let dir = serve_dir("queue_stall");
+    // armed before start so the dispatcher stalls from its first loop
+    // iteration; window 0 means one job per dispatch, so a concurrent
+    // burst queues up behind the 25 ms stalls and expires
+    let fp = failpoint::scoped("serve.queue.stall", FailAction::Error);
+    let server = Server::start(&serve_cfg(&dir, 0)).unwrap();
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            std::thread::spawn(move || serve_request(addr, "X-Deadline-Ms: 5\r\n", PREDICT_BODY))
+        })
+        .collect();
+    let mut shed = 0u64;
+    for h in handles {
+        let (status, resp) = h.join().unwrap();
+        match status {
+            200 => {}
+            503 => {
+                assert!(resp.contains("deadline exceeded"), "{resp}");
+                shed += 1;
+            }
+            other => panic!("unexpected status {other}: {resp}"),
+        }
+    }
+    drop(fp);
+    assert!(shed >= 1, "no job outlived its deadline through the stall");
+    assert_eq!(server.metrics().deadline_shed.get(), shed);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 /// The `DMDTRAIN_FAILPOINTS` spec grammar drives the same machinery as

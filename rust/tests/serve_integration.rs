@@ -8,6 +8,7 @@ use dmdtrain::model::Arch;
 use dmdtrain::rng::Rng;
 use dmdtrain::runtime::{Executable, ManifestEntry, NativeExecutable};
 use dmdtrain::serve::http::read_response;
+use dmdtrain::serve::router::MAX_REQUEST_ROWS;
 use dmdtrain::serve::Server;
 use dmdtrain::tensor::Tensor;
 use dmdtrain::trainer::save_params;
@@ -44,6 +45,10 @@ fn serve_cfg(dir: &Path) -> ServeConfig {
         max_batch_rows: 64,
         threads: 16,
         reload_secs: 0,
+        // short drain so the slow-client shutdown test stays well under
+        // its wall-clock bound
+        drain_timeout_ms: 500,
+        ..ServeConfig::default()
     }
 }
 
@@ -404,6 +409,159 @@ fn two_workloads_served_side_by_side() {
         .unwrap();
     assert_bit_identical(&served, &bl_scaling.unscale_outputs(&ys));
     server.shutdown();
+}
+
+#[test]
+fn keep_alive_connection_is_closed_after_idle_timeout() {
+    let dir = temp_dir("idle");
+    write_model(&dir, "m", vec![2, 3, 1], 19);
+    let mut cfg = serve_cfg(&dir);
+    cfg.idle_timeout_ms = 300;
+    let server = Server::start(&cfg).unwrap();
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n")
+        .unwrap();
+    let (status, _) = read_response(&mut reader).unwrap();
+    assert_eq!(status, 200);
+
+    // go idle: the server must close the connection on its own within
+    // the idle timeout (plus slack), with no help from the client
+    let t0 = Instant::now();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = [0u8; 1];
+    match std::io::Read::read(&mut stream, &mut buf) {
+        Ok(0) => {} // clean server-side FIN
+        Ok(n) => panic!("unexpected {n} byte(s) from an idle connection"),
+        Err(e) => panic!("expected clean close, got {e}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "idle close took {:?}",
+        t0.elapsed()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn oversized_row_count_is_rejected_with_the_cap_in_the_body() {
+    let dir = temp_dir("toomanyrows");
+    write_model(&dir, "m", vec![2, 3, 1], 23);
+    let server = Server::start(&serve_cfg(&dir)).unwrap();
+
+    let rows = MAX_REQUEST_ROWS + 1;
+    let mut body = String::with_capacity(rows * 6 + 32);
+    body.push_str("{\"model\":\"m\",\"inputs\":[");
+    for i in 0..rows {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str("[0,0]");
+    }
+    body.push_str("]}");
+    let (status, resp) = request(server.addr(), "POST", "/predict", &body);
+    assert_eq!(status, 400, "{resp}");
+    let doc = parse(&resp).expect("error body is JSON");
+    let msg = doc.get("error").and_then(Json::as_str).expect("error key");
+    assert!(msg.contains(&format!("{rows} rows")), "{msg}");
+    assert!(msg.contains(&MAX_REQUEST_ROWS.to_string()), "{msg}");
+    server.shutdown();
+}
+
+#[test]
+fn readyz_reports_ready_then_degraded_on_reload_failures() {
+    let dir = temp_dir("readyz");
+    write_model(&dir, "good", vec![2, 3, 1], 29);
+    let mut cfg = serve_cfg(&dir);
+    cfg.reload_secs = 1;
+    let server = Server::start(&cfg).unwrap();
+    let addr = server.addr();
+
+    let (status, body) = request(addr, "GET", "/readyz", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"state\":\"ready\""), "{body}");
+    assert!(body.contains("\"reasons\":[]"), "{body}");
+
+    // a corrupt checkpoint makes the background reload fail, which
+    // surfaces as `degraded` with the backoff streak among the reasons
+    std::fs::write(dir.join("bad.dmdp"), b"not a checkpoint").unwrap();
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = request(addr, "GET", "/readyz", "");
+        assert_eq!(status, 200, "{body}");
+        if body.contains("\"state\":\"degraded\"") {
+            assert!(body.contains("reload_backoff_streak="), "{body}");
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "readyz never degraded: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    server.shutdown();
+}
+
+/// Mid-stop drain semantics: a predict in flight when `shutdown` begins
+/// completes bit-correct, `/readyz` flips to `draining` (503) on an
+/// existing keep-alive connection, and new connects are refused.
+#[test]
+fn drain_completes_in_flight_work_and_refuses_new_connections() {
+    let dir = temp_dir("drain");
+    let params = write_model(&dir, "m", vec![4, 6, 2], 31);
+    let mut cfg = serve_cfg(&dir);
+    cfg.batch_window_us = 400_000; // park the in-flight job in the window
+    cfg.drain_timeout_ms = 5_000;
+    let server = Server::start(&cfg).unwrap();
+    let addr = server.addr();
+
+    // keep-alive connection opened before the stop begins
+    let mut ka = TcpStream::connect(addr).unwrap();
+    let mut ka_reader = BufReader::new(ka.try_clone().unwrap());
+
+    let row: Vec<f32> = vec![0.5, -1.5, 0.25, 2.0];
+    let in_flight = {
+        let row = row.clone();
+        std::thread::spawn(move || {
+            request(addr, "POST", "/predict", &predict_body(Some("m"), &[&row]))
+        })
+    };
+    // let the predict reach the batcher window before stopping
+    std::thread::sleep(Duration::from_millis(100));
+    let stopper = std::thread::spawn(move || server.shutdown());
+    std::thread::sleep(Duration::from_millis(100));
+
+    // the pre-existing keep-alive connection is served one last answer
+    ka.write_all(b"GET /readyz HTTP/1.1\r\nHost: t\r\n\r\n")
+        .unwrap();
+    let (status, resp) = read_response(&mut ka_reader).unwrap();
+    let resp = String::from_utf8_lossy(&resp).into_owned();
+    assert_eq!(status, 503, "{resp}");
+    assert!(resp.contains("\"state\":\"draining\""), "{resp}");
+
+    // new connections are refused once the listener is down (poll
+    // briefly — the stop's wake-up connect races with us)
+    let t0 = Instant::now();
+    while TcpStream::connect(addr).is_ok() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "listener never closed"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // the in-flight predict was answered, bit-identical as ever
+    let (status, body) = in_flight.join().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let served = parse_outputs(&body);
+    let x = Tensor::from_vec(1, 4, row);
+    let direct = direct_exe(&[4, 6, 2]).predict_all(&params, &x).unwrap();
+    assert_bit_identical(&served, &direct);
+    stopper.join().unwrap();
 }
 
 #[test]
